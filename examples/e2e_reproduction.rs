@@ -1,0 +1,147 @@
+//! End-to-end reproduction driver (the EXPERIMENTS.md headline run).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!   1. pretrain the dense Llama-mini on synth-c4 (full-model AOT train
+//!      step; cached across runs),
+//!   2. calibrate (WANDA norms + angular distances, paper Table 4),
+//!   3. CURing-compress k layers (DEIM-CUR on WANDA importance),
+//!   4. evaluate the Figure-4 suite before/after,
+//!   5. heal with layer-wise knowledge distillation (ΔU only),
+//!   6. re-evaluate and also run a few full-model KD steps,
+//! and writes a JSON record under runs/records/.
+//!
+//! Usage: cargo run --release --example e2e_reproduction [-- --layers 3
+//!        --heal-steps 120 --rank 16]
+
+use anyhow::Result;
+use curing::compress::{CompressOptions, LayerStrategy};
+use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
+use curing::data::{Corpus, CorpusKind, SEED_HEAL};
+use curing::heal::{heal_layers, HealOptions, StepMode, SwitchedRunner};
+use curing::pipeline::LayerPlan;
+use curing::tensor::TensorStore;
+use curing::util::cli::Args;
+use curing::util::stats::mib;
+use curing::util::{Json, JsonObj};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let k = args.usize_opt("layers", 3);
+    let heal_steps = args.usize_opt("heal-steps", 120);
+    let rank = args.usize_opt("rank", 16);
+    let pre_steps = args.usize_opt("pretrain-steps", default_pretrain_steps());
+
+    let ctx = Ctx::new()?;
+    let pipe = ctx.pipeline("tiny")?;
+    let mut record = JsonObj::new();
+
+    println!("== CURing end-to-end reproduction (tiny Llama-mini, k={k}, r_max={rank}) ==\n");
+
+    // 1. Pretrain (cached).
+    println!("[1/6] pretraining dense model ({pre_steps} steps, cached)...");
+    let dense = ctx.load_or_pretrain("tiny", pre_steps)?;
+    println!(
+        "      {} params, {:.1} MiB f32",
+        dense.total_params(),
+        mib(dense.total_bytes() as f64)
+    );
+
+    // 2. Calibrate.
+    println!("[2/6] calibrating on 128 synth-c4 examples...");
+    let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+    println!("      angular distances (paper Table 4 analog), ascending:");
+    let mut order = pipe.cfg.middle_layers();
+    order.sort_by(|&a, &b| calib.angular[a].partial_cmp(&calib.angular[b]).unwrap());
+    for &l in &order {
+        println!("        layer {:>2}: {:.4}", l, calib.angular[l]);
+    }
+    record.insert(
+        "angular",
+        Json::Arr(calib.angular.iter().map(|&x| Json::Num(x)).collect()),
+    );
+
+    // 3. Baseline evaluation.
+    let sizes = EvalSizes::default();
+    println!("[3/6] evaluating the original model...");
+    let dense_plan = LayerPlan::all_dense(&pipe.cfg);
+    let base = ctx.eval_suite(&pipe, &dense, &dense_plan, &sizes)?;
+    println!("      dense:    {}", base.row());
+
+    // 4. Compress.
+    println!("[4/6] CURing-compressing {k} layers (WANDA+DEIM, r_max={rank})...");
+    let opts = CompressOptions { r_max: rank, ..Default::default() };
+    let (mut student, plan, report) =
+        ctx.compress_k(&pipe, &dense, &calib, k, LayerStrategy::Angular, &opts)?;
+    println!(
+        "      layers {:?} in {:.2}s, saved {:.2} MiB ({:.1}% of model)",
+        report.layers,
+        report.seconds_total,
+        mib(report.bytes_saved() as f64),
+        100.0 * report.bytes_saved() as f64 / dense.total_bytes() as f64
+    );
+    let cured = ctx.eval_suite(&pipe, &student, &plan, &sizes)?;
+    println!("      cured:    {}", cured.row());
+
+    // 5. Heal (layer-wise KD on ΔU).
+    println!("[5/6] healing: layer-wise KD for {heal_steps} steps (ΔU only)...");
+    let mut corpus = Corpus::new(CorpusKind::SynthC4, SEED_HEAL);
+    let mut opt = TensorStore::new();
+    let hopts = HealOptions { steps: heal_steps, ..Default::default() };
+    let hist = heal_layers(
+        &pipe, &dense, &mut student, &mut opt, &ctx.vocab, &mut corpus, &hopts, 0,
+    )?;
+    let mut curve = Vec::new();
+    for p in &hist {
+        if p.step % 20 == 0 || p.step + 1 == hist.len() {
+            println!("        step {:>4}: layer-MSE {:.6}", p.step, p.loss);
+        }
+        curve.push(Json::Num(p.loss));
+    }
+    record.insert("heal_curve", Json::Arr(curve));
+    let healed = ctx.eval_suite(&pipe, &student, &plan, &sizes)?;
+    println!("      healed:   {}", healed.row());
+
+    // 6. A few full-model KD steps (0.9*KD + 0.1*CE) to exercise the
+    // switched training path end to end.
+    println!("[6/6] full-model KD (switched artifact, 5 steps)...");
+    let runner = SwitchedRunner::new("tiny", "du", StepMode::Heal);
+    let mut adapters = TensorStore::new();
+    let mut fullopt = TensorStore::new();
+    for step in 0..5 {
+        let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
+        let tokens = curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
+        let targets = curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
+        let loss = runner.step(
+            &pipe, &dense, &mut student, &mut adapters, &mut fullopt, &tokens, &targets,
+            None, 1e-4, step + 1,
+        )?;
+        println!("        step {step}: loss {loss:.4}");
+    }
+    let final_suite = ctx.eval_suite(&pipe, &student, &plan, &sizes)?;
+    println!("      final:    {}", final_suite.row());
+
+    // Record + summary.
+    let suite_json = |s: &curing::coordinator::Suite| {
+        let mut o = JsonObj::new();
+        o.insert("c4_ppl", Json::Num(s.c4_ppl));
+        o.insert("wiki_ppl", Json::Num(s.wiki_ppl));
+        o.insert("boolq", Json::Num(s.boolq_acc));
+        o.insert("mmlu", Json::Num(s.mmlu_acc));
+        Json::Obj(o)
+    };
+    record.insert("dense", suite_json(&base));
+    record.insert("cured", suite_json(&cured));
+    record.insert("healed", suite_json(&healed));
+    record.insert("final", suite_json(&final_suite));
+    record.insert("k", Json::Num(k as f64));
+    record.insert("rank", Json::Num(rank as f64));
+    record.insert("bytes_saved", Json::Num(report.bytes_saved() as f64));
+    record.insert("compress_seconds", Json::Num(report.seconds_total));
+    let path = ctx.write_record("e2e_reproduction", &Json::Obj(record))?;
+    println!("\nrecord written to {}", path.display());
+
+    println!("\n== summary (paper Fig. 4 shape: compress hurts, healing recovers) ==");
+    println!("  dense  c4_ppl {:.2} | cured {:.2} | healed {:.2}", base.c4_ppl, cured.c4_ppl, healed.c4_ppl);
+    println!("  dense  wiki   {:.2} | cured {:.2} | healed {:.2}", base.wiki_ppl, cured.wiki_ppl, healed.wiki_ppl);
+    Ok(())
+}

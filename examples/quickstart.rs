@@ -1,0 +1,53 @@
+//! Quickstart: compress a model with CURing in ~40 lines.
+//!
+//! Loads (or trains) the dense Llama-mini, compresses 3 layers with
+//! DEIM-CUR over WANDA importance, and compares perplexity before/after —
+//! the minimal end-to-end use of the public API.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use curing::compress::{CompressOptions, LayerStrategy};
+use curing::coordinator::{default_pretrain_steps, Ctx};
+use curing::data::{Corpus, CorpusKind, SEED_EVAL};
+use curing::eval::perplexity;
+use curing::pipeline::LayerPlan;
+use curing::util::stats::mib;
+
+fn main() -> Result<()> {
+    // The coordinator context: PJRT runtime + vocab + run directory.
+    let ctx = Ctx::new()?;
+    let pipe = ctx.pipeline("tiny")?;
+
+    // The "original" model (pretrained on synth-c4; cached on disk).
+    let dense = ctx.load_or_pretrain("tiny", default_pretrain_steps())?;
+
+    // Calibrate: WANDA activation norms + per-layer angular distances.
+    let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+
+    // Compress the 3 most redundant layers (smallest angular distance).
+    let (student, plan, report) = ctx.compress_k(
+        &pipe,
+        &dense,
+        &calib,
+        3,
+        LayerStrategy::Angular,
+        &CompressOptions::default(),
+    )?;
+    println!(
+        "compressed layers {:?} in {:.2}s — saved {:.2} MiB",
+        report.layers,
+        report.seconds_total,
+        mib(report.bytes_saved() as f64)
+    );
+
+    // Perplexity before/after on held-out synth-c4.
+    let mut eval_a = Corpus::new(CorpusKind::SynthC4, SEED_EVAL);
+    let mut eval_b = Corpus::new(CorpusKind::SynthC4, SEED_EVAL);
+    let dense_plan = LayerPlan::all_dense(&pipe.cfg);
+    let ppl_dense = perplexity(&pipe, &dense, &dense_plan, &ctx.vocab, &mut eval_a, 4)?;
+    let ppl_cured = perplexity(&pipe, &student, &plan, &ctx.vocab, &mut eval_b, 4)?;
+    println!("perplexity: dense {ppl_dense:.2} -> cured {ppl_cured:.2}");
+    println!("(run `cargo run --release --example e2e_reproduction` for healing)");
+    Ok(())
+}

@@ -1,0 +1,605 @@
+"""AOT lowering driver: every artifact the Rust coordinator executes.
+
+Emits HLO **text** (NOT ``.serialize()``): the image's xla_extension 0.5.1
+rejects jax>=0.5 protos with 64-bit instruction ids; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a (signature, function) pair. The signature is an ordered
+list of named specs; ``artifacts/manifest.json`` records names, shapes,
+dtypes and output layout so the Rust side marshals generically. Run via
+``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, COMBOS
+
+F32, I32 = "f32", "i32"
+
+
+class Sig:
+    """Ordered named input signature for one artifact."""
+
+    def __init__(self):
+        self.entries = []  # (name, shape tuple, dtype str)
+
+    def add(self, name, shape, dtype=F32):
+        self.entries.append((name, tuple(int(x) for x in shape), dtype))
+        return self
+
+    def specs(self):
+        return [
+            jax.ShapeDtypeStruct(s, jnp.int32 if d == I32 else jnp.float32)
+            for (_, s, d) in self.entries
+        ]
+
+    def index(self):
+        return {n: i for i, (n, _, _) in enumerate(self.entries)}
+
+
+# ------------------------------------------------------- signature builders
+
+
+def add_dense_layer(sig, cfg, pre):
+    d, di = cfg.d_model, cfg.d_inter
+    sig.add(f"{pre}.ln1", (d,))
+    sig.add(f"{pre}.w_q", (d, d))
+    sig.add(f"{pre}.w_k", (d, d))
+    sig.add(f"{pre}.w_v", (d, d))
+    sig.add(f"{pre}.w_o", (d, d))
+    sig.add(f"{pre}.ln2", (d,))
+    sig.add(f"{pre}.w_gate", (d, di))
+    sig.add(f"{pre}.w_up", (d, di))
+    sig.add(f"{pre}.w_down", (di, d))
+
+
+def add_cured_layer(sig, cfg, pre, rank, combo, split_u=False):
+    """Cured layer: targeted weights replaced by (c, u[, du], r)."""
+    d, di = cfg.d_model, cfg.d_inter
+    targets = COMBOS[combo]
+    dims = {"q": (d, d), "k": (d, d), "gate": (d, di)}
+
+    sig.add(f"{pre}.ln1", (d,))
+    for name in ("q", "k"):
+        m, n = dims[name]
+        if name in targets:
+            sig.add(f"{pre}.c_{name}", (m, rank))
+            sig.add(f"{pre}.u_{name}", (rank, rank))
+            if split_u:
+                sig.add(f"{pre}.du_{name}", (rank, rank))
+            sig.add(f"{pre}.r_{name}", (rank, n))
+        else:
+            sig.add(f"{pre}.w_{name}", (m, n))
+    sig.add(f"{pre}.w_v", (d, d))
+    sig.add(f"{pre}.w_o", (d, d))
+    sig.add(f"{pre}.ln2", (d,))
+    if "gate" in targets:
+        sig.add(f"{pre}.c_gate", (d, rank))
+        sig.add(f"{pre}.u_gate", (rank, rank))
+        if split_u:
+            sig.add(f"{pre}.du_gate", (rank, rank))
+        sig.add(f"{pre}.r_gate", (rank, di))
+    else:
+        sig.add(f"{pre}.w_gate", (d, di))
+    sig.add(f"{pre}.w_up", (d, di))
+    sig.add(f"{pre}.w_down", (di, d))
+
+
+def add_switched_layer(sig, cfg, pre, rank, adapter=None):
+    """Middle layer of a full-model artifact: dense + CUR + optional
+    adapter parameters, runtime-blended by the switch vector."""
+    d, di = cfg.d_model, cfg.d_inter
+    dims = {"q": (d, d), "k": (d, d), "gate": (d, di)}
+    sig.add(f"{pre}.ln1", (d,))
+    order = ["q", "k", "v", "o"]
+    for name in order:
+        m, n = (d, d)
+        sig.add(f"{pre}.w_{name}", (m, n))
+        if name in ("q", "k"):
+            sig.add(f"{pre}.c_{name}", (d, rank))
+            sig.add(f"{pre}.u_{name}", (rank, rank))
+            sig.add(f"{pre}.du_{name}", (rank, rank))
+            sig.add(f"{pre}.r_{name}", (rank, d))
+    sig.add(f"{pre}.ln2", (d,))
+    sig.add(f"{pre}.w_gate", (d, di))
+    sig.add(f"{pre}.c_gate", (d, rank))
+    sig.add(f"{pre}.u_gate", (rank, rank))
+    sig.add(f"{pre}.du_gate", (rank, rank))
+    sig.add(f"{pre}.r_gate", (rank, di))
+    sig.add(f"{pre}.w_up", (d, di))
+    sig.add(f"{pre}.w_down", (di, d))
+    for name in ("q", "k", "gate"):
+        m, n = dims[name]
+        if adapter == "lora":
+            rl = cfg.lora_rank
+            sig.add(f"{pre}.lora_a_{name}", (m, rl))
+            sig.add(f"{pre}.lora_b_{name}", (rl, n))
+        elif adapter == "mora":
+            rm = cfg.mora_rank
+            sig.add(f"{pre}.mora_m_{name}", (rm, rm))
+        elif adapter == "curlora":
+            rc = cfg.default_rank
+            sig.add(f"{pre}.cl_c_{name}", (m, rc))
+            sig.add(f"{pre}.cl_u_{name}", (rc, rc))
+            sig.add(f"{pre}.cl_r_{name}", (rc, n))
+
+
+def layer_dict(args, idx, pre):
+    """Split flat args back into one layer's param dict (keys stripped)."""
+    p = {}
+    plen = len(pre) + 1
+    for name, i in idx.items():
+        if name.startswith(pre + "."):
+            p[name[plen:]] = args[i]
+    return p
+
+
+# ------------------------------------------------------- artifact builders
+
+
+def art_embed(cfg):
+    sig = Sig()
+    sig.add("tokens", (cfg.batch, cfg.seq), I32)
+    sig.add("emb", (cfg.vocab, cfg.d_model))
+
+    def fn(tokens, emb):
+        return (M.embed(tokens, emb),)
+
+    return sig, fn, ["x"]
+
+
+def art_layer_dense(cfg):
+    sig = Sig()
+    sig.add("x", (cfg.batch, cfg.seq, cfg.d_model))
+    add_dense_layer(sig, cfg, "L")
+    idx = sig.index()
+
+    def fn(*args):
+        p = layer_dict(args, idx, "L")
+        return (M.block(args[0], p, cfg, use_pallas=True),)
+
+    return sig, fn, ["y"]
+
+
+def art_layer_calib(cfg):
+    sig = Sig()
+    sig.add("x", (cfg.batch, cfg.seq, cfg.d_model))
+    add_dense_layer(sig, cfg, "L")
+    idx = sig.index()
+
+    def fn(*args):
+        p = layer_dict(args, idx, "L")
+        y, a_ss, f_ss, attn_in, ffn_in = M.block_calib(args[0], p, cfg)
+        return (y, a_ss, f_ss, attn_in, ffn_in)
+
+    return sig, fn, ["y", "attn_sumsq", "ffn_sumsq", "attn_in", "ffn_in"]
+
+
+def art_layer_cured(cfg, rank, combo):
+    sig = Sig()
+    sig.add("x", (cfg.batch, cfg.seq, cfg.d_model))
+    add_cured_layer(sig, cfg, "L", rank, combo)
+    idx = sig.index()
+
+    def fn(*args):
+        p = layer_dict(args, idx, "L")
+        return (M.block(args[0], p, cfg, use_pallas=True),)
+
+    return sig, fn, ["y"]
+
+
+def art_head_nll(cfg):
+    sig = Sig()
+    sig.add("x", (cfg.batch, cfg.seq, cfg.d_model))
+    sig.add("ln_f", (cfg.d_model,))
+    sig.add("emb", (cfg.vocab, cfg.d_model))
+    sig.add("targets", (cfg.batch, cfg.seq), I32)
+
+    def fn(x, ln_f, emb, targets):
+        return (M.head_nll(x, ln_f, emb, targets),)
+
+    return sig, fn, ["nll"]
+
+
+def art_head_logits(cfg):
+    sig = Sig()
+    sig.add("x", (cfg.batch, cfg.seq, cfg.d_model))
+    sig.add("ln_f", (cfg.d_model,))
+    sig.add("emb", (cfg.vocab, cfg.d_model))
+
+    def fn(x, ln_f, emb):
+        return (M.head_logits(x, ln_f, emb),)
+
+    return sig, fn, ["logits"]
+
+
+def full_param_names(cfg):
+    names = ["emb", "ln_f"]
+    return names
+
+
+def art_train_step_dense(cfg):
+    """Full-model LM pretraining step: CE loss + inline AdamW.
+
+    Creates the 'original model' that every experiment compresses.
+    """
+    sig = Sig()
+    sig.add("tokens", (cfg.batch, cfg.seq), I32)
+    sig.add("targets", (cfg.batch, cfg.seq), I32)
+    sig.add("lr", ())
+    sig.add("t", ())
+    pstart = len(sig.entries)
+    sig.add("emb", (cfg.vocab, cfg.d_model))
+    for l in range(cfg.n_layers):
+        add_dense_layer(sig, cfg, f"L{l}")
+    sig.add("ln_f", (cfg.d_model,))
+    pend = len(sig.entries)
+    pnames = [n for (n, _, _) in sig.entries[pstart:pend]]
+    for n, s, _ in list(sig.entries[pstart:pend]):
+        sig.add(f"m.{n}", s)
+    for n, s, _ in list(sig.entries[pstart:pend]):
+        sig.add(f"v.{n}", s)
+    idx = sig.index()
+
+    def params_of(args):
+        params = {"emb": args[idx["emb"]], "ln_f": args[idx["ln_f"]]}
+        for l in range(cfg.n_layers):
+            params[f"layer{l}"] = layer_dict(args, idx, f"L{l}")
+        return params
+
+    def fn(*args):
+        tokens, targets = args[idx["tokens"]], args[idx["targets"]]
+        lr, t = args[idx["lr"]], args[idx["t"]]
+        flat = {n: args[idx[n]] for n in pnames}
+        ms = {n: args[idx[f"m.{n}"]] for n in pnames}
+        vs = {n: args[idx[f"v.{n}"]] for n in pnames}
+
+        def loss_fn(flat_params):
+            params = {"emb": flat_params["emb"], "ln_f": flat_params["ln_f"]}
+            for l in range(cfg.n_layers):
+                params[f"layer{l}"] = {
+                    k[len(f"L{l}."):]: v
+                    for k, v in flat_params.items()
+                    if k.startswith(f"L{l}.")
+                }
+            logits = M.model_dense_logits(tokens, params, cfg, use_pallas=False)
+            return M.ce_loss(logits, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)(flat)
+        new_p, new_m, new_v = M.sgd_like_tree_adamw(flat, grads, ms, vs, lr, t, 0.01)
+        out = [loss]
+        out += [new_p[n] for n in pnames]
+        out += [new_m[n] for n in pnames]
+        out += [new_v[n] for n in pnames]
+        return tuple(out)
+
+    outs = ["loss"] + pnames + [f"m.{n}" for n in pnames] + [f"v.{n}" for n in pnames]
+    return sig, fn, outs
+
+
+def art_layer_heal_step(cfg, rank):
+    """Per-layer KD healing (paper §4.5): MSE between the teacher's layer
+    output and the cured layer's output; AdamW on dU^Q, dU^K, dU^Gate
+    only. Also returns the student's (pre-update) output so the Rust
+    driver can propagate the *student's* running hidden state to the next
+    layer — drift-correcting layer-wise distillation: each cured layer
+    learns to map the student state back onto the teacher trajectory."""
+    sig = Sig()
+    sig.add("x", (cfg.batch, cfg.seq, cfg.d_model))
+    sig.add("y_teacher", (cfg.batch, cfg.seq, cfg.d_model))
+    sig.add("lr", ())
+    sig.add("t", ())
+    add_cured_layer(sig, cfg, "L", rank, "all", split_u=True)
+    tr = ["du_q", "du_k", "du_gate"]
+    for n in tr:
+        sig.add(f"m.{n}", (rank, rank))
+    for n in tr:
+        sig.add(f"v.{n}", (rank, rank))
+    idx = sig.index()
+
+    def fn(*args):
+        x, y_t = args[idx["x"]], args[idx["y_teacher"]]
+        lr, t = args[idx["lr"]], args[idx["t"]]
+        p = layer_dict(args, idx, "L")
+        dus = {n: p[n] for n in tr}
+        frozen = {k: v for k, v in p.items() if k not in tr}
+        ms = {n: args[idx[f"m.{n}"]] for n in tr}
+        vs = {n: args[idx[f"v.{n}"]] for n in tr}
+
+        def loss_fn(dus):
+            y = M.block(x, {**frozen, **dus}, cfg, use_pallas=True)
+            diff = y - y_t
+            return jnp.mean(diff * diff), y
+
+        (loss, y), grads = jax.value_and_grad(loss_fn, has_aux=True)(dus)
+        new_p, new_m, new_v = M.sgd_like_tree_adamw(dus, grads, ms, vs, lr, t, 0.0)
+        out = [loss, y]
+        out += [new_p[n] for n in tr]
+        out += [new_m[n] for n in tr]
+        out += [new_v[n] for n in tr]
+        return tuple(out)
+
+    outs = ["loss", "y_student"] + tr + [f"m.{n}" for n in tr] + [f"v.{n}" for n in tr]
+    return sig, fn, outs
+
+
+def switched_sig(cfg, rank, adapter=None):
+    """Common input block for full-model switched artifacts."""
+    sig = Sig()
+    sig.add("tokens", (cfg.batch, cfg.seq), I32)
+    sig.add("targets", (cfg.batch, cfg.seq), I32)
+    sig.add("switches", (cfg.n_layers,))
+    sig.add("emb", (cfg.vocab, cfg.d_model))
+    mids = set(M.middle_layers(cfg))
+    for l in range(cfg.n_layers):
+        if l in mids:
+            add_switched_layer(sig, cfg, f"L{l}", rank, adapter)
+        else:
+            add_dense_layer(sig, cfg, f"L{l}")
+    sig.add("ln_f", (cfg.d_model,))
+    return sig
+
+
+def trainable_names(cfg, adapter):
+    """Flat names of the trainable set for a given adapter kind."""
+    mids = M.middle_layers(cfg)
+    names = []
+    for l in mids:
+        for w in ("q", "k", "gate"):
+            if adapter == "du":
+                names.append(f"L{l}.du_{w}")
+            elif adapter == "lora":
+                names.append(f"L{l}.lora_a_{w}")
+                names.append(f"L{l}.lora_b_{w}")
+            elif adapter == "mora":
+                names.append(f"L{l}.mora_m_{w}")
+            elif adapter == "curlora":
+                names.append(f"L{l}.cl_u_{w}")
+    return names
+
+
+def switched_params_of(args, idx, cfg):
+    params = {"emb": args[idx["emb"]], "ln_f": args[idx["ln_f"]]}
+    for l in range(cfg.n_layers):
+        params[f"layer{l}"] = layer_dict(args, idx, f"L{l}")
+    return params
+
+
+def dense_view(params, cfg):
+    """Strip CUR/adapter entries so the same args act as the teacher."""
+    dense_keys = {"ln1", "w_q", "w_k", "w_v", "w_o", "ln2", "w_gate", "w_up", "w_down"}
+    out = {"emb": params["emb"], "ln_f": params["ln_f"]}
+    for l in range(cfg.n_layers):
+        out[f"layer{l}"] = {
+            k: v for k, v in params[f"layer{l}"].items() if k in dense_keys
+        }
+    return out
+
+
+def make_switched_step(cfg, rank, adapter, mode):
+    """Full-model training step; mode 'heal' (0.9*KD + 0.1*CE, teacher
+    computed in-graph from the dense weights) or 'task' (masked CE)."""
+    adapter_in_sig = None if adapter in ("du",) else adapter
+    sig = switched_sig(cfg, rank, adapter_in_sig)
+    if mode == "task":
+        sig.add("loss_mask", (cfg.batch, cfg.seq))
+    sig.add("lr", ())
+    sig.add("t", ())
+    tr = trainable_names(cfg, adapter)
+    shape_of = {n: s for (n, s, _) in sig.entries}
+    for n in tr:
+        sig.add(f"m.{n}", shape_of[n])
+    for n in tr:
+        sig.add(f"v.{n}", shape_of[n])
+    idx = sig.index()
+
+    def fn(*args):
+        tokens, targets = args[idx["tokens"]], args[idx["targets"]]
+        switches = args[idx["switches"]]
+        lr, t = args[idx["lr"]], args[idx["t"]]
+        ms = {n: args[idx[f"m.{n}"]] for n in tr}
+        vs = {n: args[idx[f"v.{n}"]] for n in tr}
+        base = switched_params_of(args, idx, cfg)
+        trainables = {}
+        for n in tr:
+            l = int(n[1 : n.index(".")])
+            key = n.split(".", 1)[1]
+            trainables[n] = base[f"layer{l}"].pop(key)
+
+        def loss_fn(trainables):
+            params = {k: (dict(v) if isinstance(v, dict) else v) for k, v in base.items()}
+            for n, val in trainables.items():
+                l = int(n[1 : n.index(".")])
+                key = n.split(".", 1)[1]
+                params[f"layer{l}"][key] = val
+            logits = M.model_switched_logits(tokens, params, switches, cfg, use_pallas=False)
+            if mode == "heal":
+                teacher = M.model_dense_logits(tokens, dense_view(params, cfg), cfg, use_pallas=False)
+                teacher = jax.lax.stop_gradient(teacher)
+                return 0.1 * M.ce_loss(logits, targets) + 0.9 * M.kd_loss(logits, teacher, 10.0)
+            mask = args[idx["loss_mask"]]
+            return M.ce_loss(logits, targets, weights=mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(trainables)
+        new_p, new_m, new_v = M.sgd_like_tree_adamw(trainables, grads, ms, vs, lr, t, 0.0)
+        out = [loss]
+        out += [new_p[n] for n in tr]
+        out += [new_m[n] for n in tr]
+        out += [new_v[n] for n in tr]
+        return tuple(out)
+
+    outs = ["loss"] + tr + [f"m.{n}" for n in tr] + [f"v.{n}" for n in tr]
+    return sig, fn, outs
+
+
+def art_model_logits_switched(cfg, rank, adapter):
+    """Forward-only switched model WITH adapter parameters, returning
+    logits — the evaluation path for PEFT-adapted models (Figs. 5-7):
+    task accuracy and shifted-corpus perplexity are computed from these
+    logits by the Rust coordinator."""
+    adapter_in_sig = None if adapter in (None, "du") else adapter
+    sig = switched_sig(cfg, rank, adapter_in_sig)
+    idx = sig.index()
+
+    def fn(*args):
+        tokens = args[idx["tokens"]]
+        switches = args[idx["switches"]]
+        params = switched_params_of(args, idx, cfg)
+        logits = M.model_switched_logits(tokens, params, switches, cfg, use_pallas=True)
+        return (logits,)
+
+    return sig, fn, ["logits"]
+
+
+def art_model_nll_switched(cfg, rank):
+    """Forward-only switched model returning per-token NLL — used to
+    cross-check the Rust per-layer pipeline against a monolithic program,
+    and for fast full-model perplexity probes during PEFT runs."""
+    sig = switched_sig(cfg, rank, None)
+    idx = sig.index()
+
+    def fn(*args):
+        tokens, targets = args[idx["tokens"]], args[idx["targets"]]
+        switches = args[idx["switches"]]
+        params = switched_params_of(args, idx, cfg)
+        logits = M.model_switched_logits(tokens, params, switches, cfg, use_pallas=True)
+        return (M.nll_from_logits(logits, targets),)
+
+    return sig, fn, ["nll"]
+
+
+# ----------------------------------------------------------------- driver
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifact_table(cfg):
+    arts = {}
+    arts[f"{cfg.name}_embed_fwd"] = art_embed(cfg)
+    arts[f"{cfg.name}_layer_fwd_dense"] = art_layer_dense(cfg)
+    arts[f"{cfg.name}_layer_fwd_calib"] = art_layer_calib(cfg)
+    arts[f"{cfg.name}_head_nll"] = art_head_nll(cfg)
+    arts[f"{cfg.name}_head_logits"] = art_head_logits(cfg)
+    for r in cfg.ranks:
+        for combo in COMBOS:
+            arts[f"{cfg.name}_layer_fwd_cured_r{r}_c{combo}"] = art_layer_cured(cfg, r, combo)
+        arts[f"{cfg.name}_layer_heal_step_r{r}"] = art_layer_heal_step(cfg, r)
+    if cfg.full_model_artifacts:
+        arts[f"{cfg.name}_train_step_dense"] = art_train_step_dense(cfg)
+        arts[f"{cfg.name}_model_nll_switched"] = art_model_nll_switched(cfg, cfg.default_rank)
+        for adapter in ("du", "lora", "mora"):
+            arts[f"{cfg.name}_heal_full_{adapter}"] = make_switched_step(
+                cfg, cfg.default_rank, adapter, "heal"
+            )
+        for adapter in ("du", "lora", "mora", "curlora"):
+            arts[f"{cfg.name}_task_step_{adapter}"] = make_switched_step(
+                cfg, cfg.default_rank, adapter, "task"
+            )
+            arts[f"{cfg.name}_model_logits_switched_{adapter}"] = art_model_logits_switched(
+                cfg, cfg.default_rank, adapter
+            )
+    return arts
+
+
+def source_fingerprint():
+    """Hash of the compile package sources; stored in the manifest so
+    `make artifacts` can skip rebuilds when nothing changed."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(pkg)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,base")
+    ap.add_argument("--only", default=None, help="comma-sep artifact name filter")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"fingerprint": source_fingerprint(), "configs": {}, "artifacts": {}}
+    mpath = os.path.join(args.out, "manifest.json")
+    if os.path.exists(mpath) and args.only is None:
+        with open(mpath) as f:
+            try:
+                old = json.load(f)
+            except ValueError:
+                old = {}
+        if old.get("fingerprint") == manifest["fingerprint"]:
+            print("artifacts up to date (fingerprint match); skipping")
+            return
+
+    for cname in args.configs.split(","):
+        cfg = CONFIGS[cname]
+        manifest["configs"][cname] = {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_inter": cfg.d_inter,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+            "ranks": list(cfg.ranks),
+            "default_rank": cfg.default_rank,
+            "lora_rank": cfg.lora_rank,
+            "mora_rank": cfg.mora_rank,
+            "rope_theta": cfg.rope_theta,
+            "total_params": cfg.total_params(),
+        }
+        arts = build_artifact_table(cfg)
+        for name, (sig, fn, out_names) in arts.items():
+            if args.only and name not in args.only.split(","):
+                continue
+            fname = f"{name}.hlo.txt"
+            print(f"lowering {name} ({len(sig.entries)} inputs) ...", flush=True)
+            # keep_unused=True: the manifest promises every declared input
+            # is a real HLO parameter (jit would otherwise prune inputs an
+            # artifact ignores — e.g. `targets` in logits-only programs —
+            # and PJRT would reject the coordinator's buffer count).
+            lowered = jax.jit(fn, keep_unused=True).lower(*sig.specs())
+            text = to_hlo_text(lowered)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            # Output shapes from the lowered signature.
+            out_avals = lowered.out_info
+            out_meta = []
+            leaves = jax.tree_util.tree_leaves(out_avals)
+            for oname, aval in zip(out_names, leaves):
+                dt = I32 if str(aval.dtype).startswith("int") else F32
+                out_meta.append({"name": oname, "shape": list(aval.shape), "dtype": dt})
+            manifest["artifacts"][name] = {
+                "config": cname,
+                "file": fname,
+                "inputs": [
+                    {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in sig.entries
+                ],
+                "outputs": out_meta,
+            }
+
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model configuration registry shared by L2 lowering and (via
+``artifacts/manifest.json``) the Rust coordinator.
+
+``tiny`` is the experiment workhorse (single-CPU-core budget); ``base`` is
+a ~90M-parameter configuration proving the stack composes at scale (smoke
+runs only — see DESIGN.md §2 substitutions).
+"""
+
+import dataclasses
+
+__all__ = ["ModelConfig", "CONFIGS", "TINY", "BASE", "COMBOS"]
+
+# Weight-combination ablation of paper Appendix C.1. Keys are the artifact
+# suffixes; values are the subset of {"q", "k", "gate"} that gets cured.
+COMBOS = {
+    "all": ("q", "k", "gate"),
+    "gate": ("gate",),
+    "qk": ("q", "k"),
+    "qg": ("q", "gate"),
+    "kg": ("k", "gate"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A Llama-mini configuration (RMSNorm + RoPE MHA + SiLU-gated FFN)."""
+
+    name: str
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 8
+    n_heads: int = 8
+    d_inter: int = 704
+    seq: int = 64
+    batch: int = 8
+    rope_theta: float = 10000.0
+    # CUR ranks to emit cured/heal artifacts for. Paper uses r_max in
+    # {128, 256, 512} on d=4096 (ratios 1/32, 1/16, 1/8); these mirror the
+    # ratios at this width. The middle entry is the default.
+    ranks: tuple = (8, 16, 32)
+    default_rank: int = 16
+    # Adapter sizing for the PEFT comparisons (Figs 5-7); see DESIGN.md.
+    lora_rank: int = 1
+    # Emit full-model (training/healing/task) artifacts? Heavy; tiny only.
+    full_model_artifacts: bool = True
+
+    @property
+    def d_k(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def mora_rank(self):
+        # MoRA uses a square matrix sized to the dU budget: rm = default
+        # rank (dU is r x r, so the budgets match exactly by construction).
+        return self.default_rank
+
+    def params_per_layer(self):
+        d, di = self.d_model, self.d_inter
+        return 4 * d * d + 3 * d * di + 2 * d
+
+    def total_params(self):
+        return self.vocab * self.d_model + self.n_layers * self.params_per_layer() + self.d_model
+
+
+TINY = ModelConfig(name="tiny")
+
+BASE = ModelConfig(
+    name="base",
+    vocab=2048,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    d_inter=2112,
+    seq=128,
+    batch=4,
+    ranks=(32, 64),
+    default_rank=64,
+    full_model_artifacts=False,
+)
+
+CONFIGS = {c.name: c for c in (TINY, BASE)}

@@ -1,0 +1,23 @@
+"""L1 — Pallas kernels for CURing's compute hot-spots.
+
+All kernels lower with ``interpret=True`` (CPU PJRT cannot run Mosaic
+custom-calls; interpret lowering inlines plain HLO at trace time). Each
+kernel has a pure-jnp oracle in :mod:`ref` that pytest/hypothesis compare
+against, and custom_vjp wrappers use the oracle math for backward.
+"""
+
+from .cur_linear import cur_linear, cur_linear_pallas, DEFAULT_BLOCK_T
+from .rmsnorm import rmsnorm, rmsnorm_pallas
+from .wanda import wanda_score, col_sumsq
+from . import ref
+
+__all__ = [
+    "cur_linear",
+    "cur_linear_pallas",
+    "rmsnorm",
+    "rmsnorm_pallas",
+    "wanda_score",
+    "col_sumsq",
+    "ref",
+    "DEFAULT_BLOCK_T",
+]

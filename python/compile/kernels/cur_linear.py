@@ -1,0 +1,99 @@
+"""Pallas kernel for the CURed linear layer — the paper's compute hot-spot.
+
+The deployed CURing model never holds the dense ``m x n`` weight; every
+compressed projection is the chain ``Y = ((X @ C) @ U) @ R`` with
+``rank << min(m, n)``. This module implements that chain as a tiled Pallas
+kernel and wraps it in ``jax.custom_vjp`` (forward = Pallas, backward =
+pure jnp from ``ref.py``'s math) so the very same kernel sits inside both
+inference and healing/fine-tuning artifacts.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks token tiles
+(``bt`` rows of X); C, U and the row panel of R stay resident in VMEM
+across the token axis, and all three contractions feed the MXU. The rank
+is a power of two (paper Eq. 2), keeping MXU tiles full. ``interpret=True``
+everywhere: the CPU PJRT plugin cannot execute Mosaic custom-calls, and
+interpret-mode lowering inlines the kernel as plain HLO at trace time
+(zero runtime interpretation cost after AOT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cur_linear", "cur_linear_pallas", "DEFAULT_BLOCK_T"]
+
+# Token-tile height. 64 keeps the (bt, m) input tile and the (bt, n) output
+# tile comfortably inside VMEM for every config in configs.py while still
+# filling an MXU pass; it also divides every batch*seq we emit.
+DEFAULT_BLOCK_T = 64
+
+
+def _cur_linear_kernel(x_ref, c_ref, u_ref, r_ref, o_ref):
+    """One token tile: ``o = ((x @ C) @ U) @ R`` with rank-sized temps.
+
+    The two intermediates are ``(bt, r)`` — tiny, register/VMEM resident.
+    """
+    xc = jnp.dot(x_ref[...], c_ref[...], preferred_element_type=jnp.float32)
+    xcu = jnp.dot(xc, u_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(xcu, r_ref[...], preferred_element_type=jnp.float32)
+
+
+def cur_linear_pallas(x, c, u, r, *, block_t=DEFAULT_BLOCK_T):
+    """Raw Pallas forward (no vjp). ``x: (t, m)``, returns ``(t, n)``.
+
+    The grid is 1-D over token tiles; C/U/R use ``None`` block axes so
+    Pallas keeps them whole in VMEM for every grid step.
+    """
+    t, m = x.shape
+    rank = c.shape[1]
+    n = r.shape[1]
+    bt = min(block_t, t)
+    if t % bt != 0:
+        # Fall back to a single-program kernel for ragged token counts
+        # (only hit by tests; AOT shapes are always multiples of bt).
+        bt = t
+    grid = (t // bt,)
+    return pl.pallas_call(
+        _cur_linear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, rank), lambda i: (0, 0)),
+            pl.BlockSpec((rank, rank), lambda i: (0, 0)),
+            pl.BlockSpec((rank, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=True,
+    )(x, c, u, r)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def cur_linear(x, c, u, r):
+    """CURed linear with custom vjp: forward = Pallas, backward = jnp.
+
+    Gradients flow to all four operands; the healing artifacts simply
+    freeze C/R/U0 and apply updates to dU only.
+    """
+    return cur_linear_pallas(x, c, u, r)
+
+
+def _fwd(x, c, u, r):
+    return cur_linear_pallas(x, c, u, r), (x, c, u, r)
+
+
+def _bwd(res, gy):
+    x, c, u, r = res
+    # Chain-rule through Y = X C U R, computed in rank-sized pieces.
+    xc = x @ c                    # (t, rank)
+    gyr = gy @ r.T                # (t, rank)
+    gx = (gyr @ u.T) @ c.T        # (t, m)
+    gc = x.T @ (gyr @ u.T)        # (m, rank)
+    gu = xc.T @ gyr               # (rank, rank)
+    gr = (xc @ u).T @ gy          # (rank, n)
+    return gx, gc, gu, gr
+
+
+cur_linear.defvjp(_fwd, _bwd)

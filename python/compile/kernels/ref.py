@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these references to float tolerance.
+They are also used as the backward-pass implementations inside
+``jax.custom_vjp`` wrappers, so training artifacts differentiate through
+mathematically-identical jnp code while the forward pass runs the kernel.
+"""
+
+import jax.numpy as jnp
+
+__all__ = [
+    "cur_linear_ref",
+    "wanda_score_ref",
+    "rmsnorm_ref",
+    "col_sumsq_ref",
+    "silu_gate_ref",
+]
+
+
+def cur_linear_ref(x, c, u, r):
+    """Reference CUR-factorized linear: ``Y = ((X @ C) @ U) @ R``.
+
+    Never materializes the implied dense ``m x n`` product — the whole
+    point of CURing is that this chain is the deployed compute path.
+
+    Args:
+      x: ``(t, m)`` input activations (tokens flattened over batch*seq).
+      c: ``(m, r)`` selected columns of the original weight.
+      u: ``(r, r)`` linking matrix (``U0 + dU`` after healing).
+      r: ``(r, n)`` selected rows of the original weight.
+
+    Returns:
+      ``(t, n)`` output activations.
+    """
+    return ((x @ c) @ u) @ r
+
+
+def wanda_score_ref(w, xnorm):
+    """Reference WANDA importance: ``S[i, j] = |W[i, j]| * xnorm[i]``.
+
+    ``w`` is stored input-major ``(m_in, n_out)`` (the model computes
+    ``x @ w``), so the activation norm of input feature ``i`` scales row
+    ``i``. This is the information matrix S of paper Fig. 2a.
+    """
+    return jnp.abs(w) * xnorm[:, None]
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """Reference RMSNorm: ``y = x * rsqrt(mean(x^2) + eps) * w``."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(ms + eps)) * w
+
+
+def col_sumsq_ref(x):
+    """Per-input-feature sum of squares over all tokens: ``(m,)``.
+
+    Accumulated across calibration batches by the Rust coordinator and
+    square-rooted there to form the WANDA ``xnorm`` vector.
+    """
+    return jnp.sum(x * x, axis=0)
+
+
+def silu_gate_ref(g, up):
+    """Reference SiLU-gated product used by the Llama FFN: ``silu(g) * up``."""
+    return g * jnp.reciprocal(1.0 + jnp.exp(-g)) * up

@@ -1,0 +1,62 @@
+"""Fused RMSNorm Pallas kernel (pre-attention / pre-FFN norm in Llama).
+
+Forward = Pallas tile over token rows; backward = jnp math via custom_vjp
+so training artifacts can differentiate through it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["rmsnorm", "rmsnorm_pallas"]
+
+EPS = 1e-5
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + EPS) * w_ref[...][None, :]
+
+
+def rmsnorm_pallas(x, w, *, block_t=64):
+    """``x: (t, d)``, ``w: (d,)`` -> ``(t, d)``."""
+    t, d = x.shape
+    bt = min(block_t, t)
+    if t % bt != 0:
+        bt = t
+    return pl.pallas_call(
+        _rmsnorm_kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def rmsnorm(x, w):
+    """RMSNorm with Pallas forward and jnp backward."""
+    return rmsnorm_pallas(x, w)
+
+
+def _fwd(x, w):
+    return rmsnorm_pallas(x, w), (x, w)
+
+
+def _ref(x, w):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + EPS) * w
+
+
+def _bwd(res, gy):
+    x, w = res
+    _, vjp = jax.vjp(_ref, x, w)
+    return vjp(gy)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

@@ -1,0 +1,63 @@
+"""Pallas kernels for the WANDA importance statistics (paper §4.2, Fig 2a).
+
+Two kernels:
+
+* ``wanda_score`` — the information matrix ``S = |W| * xnorm[:, None]``
+  combining weight magnitude with calibration activation norms. The Rust
+  coordinator runs the SVD+DEIM selection on S; this kernel is exported as
+  its own artifact so the scoring of large weights happens on-device.
+* ``col_sumsq`` — per-input-feature sum of squares of an activation batch,
+  the quantity accumulated during calibration (the coordinator adds across
+  batches and takes the square root at the end).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["wanda_score", "col_sumsq"]
+
+
+def _score_kernel(w_ref, xn_ref, s_ref):
+    s_ref[...] = jnp.abs(w_ref[...]) * xn_ref[...][:, None]
+
+
+def wanda_score(w, xnorm, *, block_m=128):
+    """``S[i, j] = |W[i, j]| * xnorm[i]`` with a 1-D grid over input rows.
+
+    ``w: (m, n)`` input-major, ``xnorm: (m,)``.
+    """
+    m, n = w.shape
+    bm = min(block_m, m)
+    if m % bm != 0:
+        bm = m
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(w, xnorm)
+
+
+def _sumsq_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.sum(x * x, axis=0)
+
+
+def col_sumsq(x):
+    """Sum over tokens of ``x**2`` per feature; single-program kernel.
+
+    ``x: (t, m)`` -> ``(m,)``. The calibration batch is small (tokens of
+    one forward pass), so one program holding the tile in VMEM suffices.
+    """
+    t, m = x.shape
+    return pl.pallas_call(
+        _sumsq_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(x)

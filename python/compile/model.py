@@ -1,0 +1,292 @@
+"""L2 — the Llama-mini model family in JAX, calling the L1 Pallas kernels.
+
+Everything here is *build-time only*: :mod:`compile.aot` lowers the
+functions below to HLO text artifacts that the Rust coordinator loads via
+PJRT. Parameters are passed as flat dicts keyed by canonical names (the
+manifest fixes the positional order; see aot.py).
+
+Architecture (faithful Llama block, paper Fig. 3):
+  x -> RMSNorm -> MHA(RoPE, causal) -> +x -> RMSNorm -> SiLU-gated FFN -> +x
+
+A *cured* block replaces ``W^Q``/``W^K``/``W^Gate`` (per combo) with the
+CUR chain evaluated by :func:`kernels.cur_linear`. Full-model training
+artifacts use a per-layer *switch* input to select dense vs CUR paths at
+runtime, so a single static HLO serves every "compress k layers" choice
+the coordinator makes (DESIGN.md §3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import COMBOS
+
+# ----------------------------------------------------------------- helpers
+
+
+def flat(x):
+    """(b, s, d) -> (b*s, d)."""
+    b, s, d = x.shape
+    return x.reshape(b * s, d)
+
+
+def unflat(x2, b, s):
+    t, d = x2.shape
+    return x2.reshape(b, s, d)
+
+
+def rmsnorm3(x, w, use_pallas):
+    """RMSNorm over the last axis of a (b, s, d) tensor."""
+    b, s, _ = x.shape
+    if use_pallas:
+        return unflat(kernels.rmsnorm(flat(x), w), b, s)
+    return unflat(kernels.ref.rmsnorm_ref(flat(x), w), b, s)
+
+
+def linear3(x, w):
+    """Dense projection of a (b, s, d_in) tensor by (d_in, d_out)."""
+    return jnp.einsum("bsd,de->bse", x, w)
+
+
+def cur_linear3(x, c, u, r, use_pallas):
+    """CURed projection of a (b, s, m) tensor via the L1 kernel."""
+    b, s, _ = x.shape
+    fn = kernels.cur_linear if use_pallas else kernels.ref.cur_linear_ref
+    return unflat(fn(flat(x), c, u, r), b, s)
+
+
+# -------------------------------------------------------------------- RoPE
+
+
+def rope_tables(seq, d_k, theta):
+    """Static cos/sin tables, shape (seq, d_k/2) each."""
+    half = d_k // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(pos), jnp.sin(pos)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate pairs. x: (b, s, h, d_k); tables broadcast over b, h."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+# --------------------------------------------------------------- attention
+
+
+def mha(x, q, k, v, wo, cfg):
+    """Causal multi-head attention given projected q/k/v, (b, s, d) each."""
+    b, s, d = x.shape
+    h, dk = cfg.n_heads, cfg.d_k
+    q = apply_rope(q.reshape(b, s, h, dk), *rope_tables(s, dk, cfg.rope_theta))
+    k = apply_rope(k.reshape(b, s, h, dk), *rope_tables(s, dk, cfg.rope_theta))
+    v = v.reshape(b, s, h, dk)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(dk))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)  # P_head of the paper
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, d)
+    return linear3(out, wo)
+
+
+# ------------------------------------------------------------------ blocks
+
+
+def proj(x, p, name, use_pallas):
+    """Project by weight ``name`` — CUR chain if the cured triple is
+    present in ``p``, dense otherwise. Adapters (lora/mora/curlora) add
+    their contribution on top when present."""
+    if f"c_{name}" in p:
+        u = p[f"u_{name}"]
+        if f"du_{name}" in p:
+            u = u + p[f"du_{name}"]
+        y = cur_linear3(x, p[f"c_{name}"], u, p[f"r_{name}"], use_pallas)
+    else:
+        y = linear3(x, p[f"w_{name}"])
+    y = y + adapter_delta(x, p, name)
+    return y
+
+
+def adapter_delta(x, p, name):
+    """Sum of any PEFT adapter contributions attached to weight ``name``."""
+    delta = 0.0
+    if f"lora_a_{name}" in p:
+        a, bb = p[f"lora_a_{name}"], p[f"lora_b_{name}"]
+        scale = 16.0 / a.shape[1]  # paper App. B: LoRA alpha = 16
+        delta = delta + linear3(linear3(x, a), bb) * scale
+    if f"mora_m_{name}" in p:
+        # MoRA (Jiang et al. 2024), grouped comp/decomp variant: compress
+        # the input by summing rm-sized groups, multiply by the square
+        # matrix M, expand by tiling. Output dim comes from the dense
+        # weight, which is always present in switched blocks.
+        m = p[f"mora_m_{name}"]
+        rm = m.shape[0]
+        b, s, d = x.shape
+        xc = x.reshape(b, s, d // rm, rm).sum(axis=2)  # comp
+        z = jnp.einsum("bsr,rt->bst", xc, m)
+        n_out = p[f"w_{name}"].shape[1]
+        delta = delta + jnp.tile(z, (1, 1, n_out // rm))  # decomp
+    if f"cl_c_{name}" in p:
+        delta = delta + cur_linear3(
+            x, p[f"cl_c_{name}"], p[f"cl_u_{name}"], p[f"cl_r_{name}"], False
+        )
+    return delta
+
+
+def block(x, p, cfg, use_pallas=True):
+    """One transformer block; p holds dense and/or cured entries."""
+    h = rmsnorm3(x, p["ln1"], use_pallas)
+    q = proj(h, p, "q", use_pallas)
+    k = proj(h, p, "k", use_pallas)
+    v = linear3(h, p["w_v"])
+    x = x + mha(h, q, k, v, p["w_o"], cfg)
+    h2 = rmsnorm3(x, p["ln2"], use_pallas)
+    g = proj(h2, p, "gate", use_pallas)
+    up = linear3(h2, p["w_up"])
+    ffn = linear3(jax.nn.silu(g) * up, p["w_down"])
+    return x + ffn
+
+
+def block_switched(x, p, switch, cfg, use_pallas=True):
+    """Block whose q/k/gate each compute BOTH dense and CUR paths, blended
+    by the runtime ``switch`` scalar (0 = dense, 1 = cured). Gradients of
+    the unselected path are zeroed by the multiply, so one artifact serves
+    every layer-mask the coordinator picks."""
+
+    def sw_proj(h, name):
+        dense = linear3(h, p[f"w_{name}"])
+        u = p[f"u_{name}"] + p[f"du_{name}"]
+        cur = cur_linear3(h, p[f"c_{name}"], u, p[f"r_{name}"], use_pallas)
+        return switch * cur + (1.0 - switch) * dense + adapter_delta(h, p, name)
+
+    h = rmsnorm3(x, p["ln1"], use_pallas)
+    q = sw_proj(h, "q")
+    k = sw_proj(h, "k")
+    v = linear3(h, p["w_v"])
+    x = x + mha(h, q, k, v, p["w_o"], cfg)
+    h2 = rmsnorm3(x, p["ln2"], use_pallas)
+    g = sw_proj(h2, "gate")
+    up = linear3(h2, p["w_up"])
+    ffn = linear3(jax.nn.silu(g) * up, p["w_down"])
+    return x + ffn
+
+
+def block_calib(x, p, cfg):
+    """Dense block that additionally emits the WANDA activation statistics
+    (per-feature sum-of-squares of the attention input, feeding W^Q/W^K
+    selection, and of the FFN input, feeding W^Gate) plus the raw
+    projection inputs themselves (for the Table 6 activation-norm
+    analysis)."""
+    h = rmsnorm3(x, p["ln1"], True)
+    attn_ss = kernels.col_sumsq(flat(h))
+    q = linear3(h, p["w_q"])
+    k = linear3(h, p["w_k"])
+    v = linear3(h, p["w_v"])
+    x = x + mha(h, q, k, v, p["w_o"], cfg)
+    h2 = rmsnorm3(x, p["ln2"], True)
+    ffn_ss = kernels.col_sumsq(flat(h2))
+    g = linear3(h2, p["w_gate"])
+    up = linear3(h2, p["w_up"])
+    ffn = linear3(jax.nn.silu(g) * up, p["w_down"])
+    return x + ffn, attn_ss, ffn_ss, h, h2
+
+
+# ------------------------------------------------------------- embed/head
+
+
+def embed(tokens, emb):
+    return emb[tokens]
+
+
+def head_logits(x, ln_f, emb, use_pallas=True):
+    h = rmsnorm3(x, ln_f, use_pallas)
+    return jnp.einsum("bsd,vd->bsv", h, emb)  # tied head
+
+
+def nll_from_logits(logits, targets):
+    """Per-token negative log-likelihood, (b, s)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - tgt
+
+
+def head_nll(x, ln_f, emb, targets, use_pallas=True):
+    return nll_from_logits(head_logits(x, ln_f, emb, use_pallas), targets)
+
+
+# ------------------------------------------------------------ full models
+
+
+def middle_layers(cfg):
+    """Layers eligible for curing: all but first and last (paper §4.1)."""
+    return list(range(1, cfg.n_layers - 1))
+
+
+def model_dense_logits(tokens, params, cfg, use_pallas=True):
+    x = embed(tokens, params["emb"])
+    for l in range(cfg.n_layers):
+        x = block(x, params[f"layer{l}"], cfg, use_pallas)
+    return head_logits(x, params["ln_f"], params["emb"], use_pallas)
+
+
+def model_switched_logits(tokens, params, switches, cfg, use_pallas=True):
+    """Switched model: first/last layers dense, middle layers blended by
+    ``switches[l]``; adapters apply wherever present in the layer dict."""
+    x = embed(tokens, params["emb"])
+    mids = set(middle_layers(cfg))
+    for l in range(cfg.n_layers):
+        p = params[f"layer{l}"]
+        if l in mids:
+            x = block_switched(x, p, switches[l], cfg, use_pallas)
+        else:
+            x = block(x, p, cfg, use_pallas)
+    return head_logits(x, params["ln_f"], params["emb"], use_pallas)
+
+
+# ------------------------------------------------------------------ losses
+
+
+def ce_loss(logits, targets, weights=None):
+    nll = nll_from_logits(logits, targets)
+    if weights is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def kd_loss(student_logits, teacher_logits, temperature):
+    """Soft-label KL distillation with temperature scaling (paper App. B:
+    T = 10), scaled by T^2 as usual so gradients are T-invariant."""
+    t = temperature
+    pt = jax.nn.softmax(teacher_logits / t, axis=-1)
+    ls = jax.nn.log_softmax(student_logits / t, axis=-1)
+    lt = jax.nn.log_softmax(teacher_logits / t, axis=-1)
+    return jnp.mean(jnp.sum(pt * (lt - ls), axis=-1)) * (t * t)
+
+
+# ----------------------------------------------------------------- adamw
+
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adamw_update(p, g, m, v, lr, t, weight_decay):
+    """One AdamW step (Loshchilov & Hutter); ``t`` is the 1-based step."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1**t)
+    vhat = v / (1.0 - ADAM_B2**t)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + weight_decay * p)
+    return p, m, v
+
+
+def sgd_like_tree_adamw(params, grads, ms, vs, lr, t, weight_decay):
+    """Apply AdamW across parallel dicts (same key sets)."""
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        new_p[k], new_m[k], new_v[k] = adamw_update(
+            params[k], grads[k], ms[k], vs[k], lr, t, weight_decay
+        )
+    return new_p, new_m, new_v

@@ -1,0 +1,172 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/ranks; explicit cases pin the AOT shapes used by
+the artifacts. All comparisons are against the pure-jnp oracles in
+``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    cur_linear,
+    cur_linear_pallas,
+    rmsnorm,
+    rmsnorm_pallas,
+    wanda_score,
+    col_sumsq,
+)
+from compile.kernels.ref import (
+    cur_linear_ref,
+    wanda_score_ref,
+    rmsnorm_ref,
+    col_sumsq_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def rand(r, *shape):
+    return jnp.asarray(r.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------- cur_linear
+
+@pytest.mark.parametrize(
+    "t,m,rank,n",
+    [
+        (64, 256, 16, 256),    # tiny attention Q/K at default rank
+        (128, 256, 16, 704),   # tiny gate projection
+        (512, 256, 32, 256),   # full batch*seq, rank ablation upper
+        (64, 256, 8, 704),     # rank ablation lower
+        (7, 33, 4, 19),        # ragged fallback path
+    ],
+)
+def test_cur_linear_matches_ref(t, m, rank, n):
+    r_ = rng(t * 1000 + n)
+    x, c, u, rr = rand(r_, t, m), rand(r_, m, rank), rand(r_, rank, rank), rand(r_, rank, n)
+    got = cur_linear_pallas(x, c, u, rr)
+    want = cur_linear_ref(x, c, u, rr)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 96),
+    m=st.integers(1, 80),
+    rank=st.integers(1, 24),
+    n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cur_linear_hypothesis(t, m, rank, n, seed):
+    r_ = rng(seed)
+    x, c, u, rr = rand(r_, t, m), rand(r_, m, rank), rand(r_, rank, rank), rand(r_, rank, n)
+    got = cur_linear_pallas(x, c, u, rr)
+    want = cur_linear_ref(x, c, u, rr)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_cur_linear_vjp_matches_jnp_grads():
+    """custom_vjp grads == autodiff of the reference chain."""
+    r_ = rng(7)
+    x, c, u, rr = rand(r_, 32, 40), rand(r_, 40, 8), rand(r_, 8, 8), rand(r_, 8, 24)
+
+    def loss_kernel(x, c, u, rr):
+        return jnp.sum(cur_linear(x, c, u, rr) ** 2)
+
+    def loss_ref(x, c, u, rr):
+        return jnp.sum(cur_linear_ref(x, c, u, rr) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2, 3))(x, c, u, rr)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(x, c, u, rr)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_cur_linear_exact_when_full_rank_identity():
+    """With C = I-columns covering all of W and U = C^+ W R^+, CUR at full
+    rank reconstructs W exactly -> kernel output equals dense x @ w."""
+    r_ = rng(3)
+    m = n = 16
+    w = rand(r_, m, n)
+    c = w  # all columns
+    rr = w  # all rows
+    u = jnp.asarray(np.linalg.pinv(np.asarray(c)) @ np.asarray(w) @ np.linalg.pinv(np.asarray(rr)))
+    x = rand(r_, 8, m)
+    got = cur_linear_pallas(x, c, u, rr)
+    np.testing.assert_allclose(got, x @ w, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------------- rmsnorm
+
+@pytest.mark.parametrize("t,d", [(64, 256), (512, 256), (5, 33)])
+def test_rmsnorm_matches_ref(t, d):
+    r_ = rng(t + d)
+    x, w = rand(r_, t, d), rand(r_, d)
+    np.testing.assert_allclose(
+        rmsnorm_pallas(x, w), rmsnorm_ref(x, w), rtol=2e-4, atol=2e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(t=st.integers(1, 80), d=st.integers(1, 96), seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_hypothesis(t, d, seed):
+    r_ = rng(seed)
+    x, w = rand(r_, t, d), rand(r_, d)
+    np.testing.assert_allclose(
+        rmsnorm_pallas(x, w), rmsnorm_ref(x, w), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_rmsnorm_grad_matches_ref():
+    r_ = rng(11)
+    x, w = rand(r_, 16, 32), rand(r_, 32)
+    gk = jax.grad(lambda x, w: jnp.sum(rmsnorm(x, w) ** 2), argnums=(0, 1))(x, w)
+    gr = jax.grad(lambda x, w: jnp.sum(rmsnorm_ref(x, w) ** 2), argnums=(0, 1))(x, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------- wanda
+
+@pytest.mark.parametrize("m,n", [(256, 256), (256, 704), (33, 17)])
+def test_wanda_score_matches_ref(m, n):
+    r_ = rng(m + n)
+    w, xn = rand(r_, m, n), jnp.abs(rand(r_, m)) + 0.01
+    np.testing.assert_allclose(
+        wanda_score(w, xn), wanda_score_ref(w, xn), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 128), n=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_wanda_score_hypothesis(m, n, seed):
+    r_ = rng(seed)
+    w, xn = rand(r_, m, n), jnp.abs(rand(r_, m))
+    np.testing.assert_allclose(
+        wanda_score(w, xn), wanda_score_ref(w, xn), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_wanda_score_nonnegative_and_zero_preserving():
+    r_ = rng(5)
+    w, xn = rand(r_, 32, 32), jnp.abs(rand(r_, 32))
+    s = np.asarray(wanda_score(w, xn))
+    assert (s >= 0).all()
+    w0 = w.at[3].set(0.0)
+    s0 = np.asarray(wanda_score(w0, xn))
+    assert np.all(s0[3] == 0)
+
+
+@pytest.mark.parametrize("t,m", [(64, 256), (512, 704), (3, 5)])
+def test_col_sumsq_matches_ref(t, m):
+    r_ = rng(t * 7 + m)
+    x = rand(r_, t, m)
+    np.testing.assert_allclose(col_sumsq(x), col_sumsq_ref(x), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,221 @@
+"""L2 model invariants: shapes, causality, CUR-exactness, losses, AdamW."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(name="test", vocab=64, d_model=32, n_layers=4, n_heads=4,
+                  d_inter=64, seq=16, batch=2, ranks=(4,), default_rank=4)
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def dense_layer_params(r, cfg, scale=0.05):
+    d, di = cfg.d_model, cfg.d_inter
+    def t(*shape):
+        return jnp.asarray(r.standard_normal(shape, dtype=np.float32) * scale)
+    return {
+        "ln1": jnp.ones(d), "ln2": jnp.ones(d),
+        "w_q": t(d, d), "w_k": t(d, d), "w_v": t(d, d), "w_o": t(d, d),
+        "w_gate": t(d, di), "w_up": t(d, di), "w_down": t(di, d),
+    }
+
+
+def full_params(r, cfg):
+    p = {"emb": jnp.asarray(r.standard_normal((cfg.vocab, cfg.d_model), dtype=np.float32) * 0.1),
+         "ln_f": jnp.ones(cfg.d_model)}
+    for l in range(cfg.n_layers):
+        p[f"layer{l}"] = dense_layer_params(r, cfg)
+    return p
+
+
+def tokens(r, cfg):
+    return jnp.asarray(r.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), dtype=jnp.int32)
+
+
+# ------------------------------------------------------------------ shapes
+
+def test_model_dense_logits_shape():
+    r = rng(1)
+    params = full_params(r, CFG)
+    logits = M.model_dense_logits(tokens(r, CFG), params, CFG, use_pallas=False)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_block_preserves_shape_and_is_residual():
+    r = rng(2)
+    p = dense_layer_params(r, CFG, scale=0.0)  # zero weights
+    x = jnp.asarray(r.standard_normal((CFG.batch, CFG.seq, CFG.d_model), dtype=np.float32))
+    y = M.block(x, p, CFG, use_pallas=False)
+    # With all-zero projections, the block is the identity (pure residual).
+    np.testing.assert_allclose(y, x, rtol=1e-6)
+
+
+# --------------------------------------------------------------- causality
+
+def test_causal_masking():
+    """Changing a future token must not change past NLL."""
+    r = rng(3)
+    params = full_params(r, CFG)
+    toks = tokens(r, CFG)
+    tgts = tokens(r, CFG)
+    logits_a = M.model_dense_logits(toks, params, CFG, use_pallas=False)
+    toks_b = toks.at[:, -1].set((toks[:, -1] + 1) % CFG.vocab)
+    logits_b = M.model_dense_logits(toks_b, params, CFG, use_pallas=False)
+    nll_a = M.nll_from_logits(logits_a, tgts)
+    nll_b = M.nll_from_logits(logits_b, tgts)
+    np.testing.assert_allclose(nll_a[:, :-1], nll_b[:, :-1], rtol=1e-5, atol=1e-6)
+    # And the last position does change (the model is not degenerate).
+    assert not np.allclose(nll_a[:, -1], nll_b[:, -1])
+
+
+# ----------------------------------------------------------- CUR exactness
+
+def test_cured_block_exact_at_full_rank():
+    """CUR with C/R = all columns/rows and U = C^+ W R^+ reconstructs the
+    dense block bit-near-exactly (the paper's lossless limit)."""
+    r = rng(4)
+    p = dense_layer_params(r, CFG)
+    x = jnp.asarray(r.standard_normal((CFG.batch, CFG.seq, CFG.d_model), dtype=np.float32))
+    y_dense = M.block(x, p, CFG, use_pallas=False)
+    pc = dict(p)
+    for name in ("q", "k", "gate"):
+        w = np.asarray(p[f"w_{name}"])
+        u = np.linalg.pinv(w) @ w @ np.linalg.pinv(w)
+        del pc[f"w_{name}"]
+        pc[f"c_{name}"] = jnp.asarray(w)
+        pc[f"u_{name}"] = jnp.asarray(u.astype(np.float32))
+        pc[f"r_{name}"] = jnp.asarray(w)
+    y_cur = M.block(x, pc, CFG, use_pallas=False)
+    np.testing.assert_allclose(y_cur, y_dense, rtol=2e-3, atol=2e-3)
+
+
+def test_switched_block_blends():
+    """switch=0 -> dense path; switch=1 -> CUR path."""
+    r = rng(5)
+    p = dense_layer_params(r, CFG)
+    rk = 4
+    def t(*shape):
+        return jnp.asarray(r.standard_normal(shape, dtype=np.float32) * 0.05)
+    for name, n_out in [("q", CFG.d_model), ("k", CFG.d_model), ("gate", CFG.d_inter)]:
+        p[f"c_{name}"] = t(CFG.d_model, rk)
+        p[f"u_{name}"] = t(rk, rk)
+        p[f"du_{name}"] = jnp.zeros((rk, rk))
+        p[f"r_{name}"] = t(rk, n_out)
+    x = jnp.asarray(r.standard_normal((CFG.batch, CFG.seq, CFG.d_model), dtype=np.float32))
+    y0 = M.block_switched(x, p, 0.0, CFG, use_pallas=False)
+    y_dense = M.block(x, {k: v for k, v in p.items()
+                          if not k.startswith(("c_", "u_", "du_", "r_"))}, CFG, use_pallas=False)
+    np.testing.assert_allclose(y0, y_dense, rtol=1e-5, atol=1e-6)
+    y1 = M.block_switched(x, p, 1.0, CFG, use_pallas=False)
+    pc = dict(p)
+    for name in ("q", "k", "gate"):
+        del pc[f"w_{name}"]
+    y_cur = M.block(x, pc, CFG, use_pallas=False)
+    np.testing.assert_allclose(y1, y_cur, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ losses
+
+def test_kd_loss_zero_when_identical():
+    r = rng(6)
+    logits = jnp.asarray(r.standard_normal((2, 4, 8), dtype=np.float32))
+    assert abs(float(M.kd_loss(logits, logits, 10.0))) < 1e-5
+
+
+def test_kd_loss_positive_when_different():
+    r = rng(7)
+    a = jnp.asarray(r.standard_normal((2, 4, 8), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal((2, 4, 8), dtype=np.float32))
+    assert float(M.kd_loss(a, b, 10.0)) > 0
+
+
+def test_ce_loss_weighted_mask():
+    r = rng(8)
+    logits = jnp.asarray(r.standard_normal((1, 4, 8), dtype=np.float32))
+    targets = jnp.asarray([[1, 2, 3, 4]], dtype=jnp.int32)
+    w = jnp.asarray([[0.0, 0.0, 1.0, 0.0]])
+    masked = float(M.ce_loss(logits, targets, w))
+    nll = M.nll_from_logits(logits, targets)
+    assert abs(masked - float(nll[0, 2])) < 1e-5
+
+
+# ------------------------------------------------------------------- adamw
+
+def test_adamw_converges_quadratic():
+    p = jnp.asarray(5.0)
+    m = jnp.asarray(0.0)
+    v = jnp.asarray(0.0)
+    for t in range(1, 300):
+        g = 2.0 * p  # d/dp p^2
+        p, m, v = M.adamw_update(p, g, m, v, 0.05, float(t), 0.0)
+    assert abs(float(p)) < 0.1
+
+
+def test_adamw_weight_decay_shrinks_params():
+    p = jnp.asarray(1.0)
+    m = jnp.asarray(0.0)
+    v = jnp.asarray(0.0)
+    p2, _, _ = M.adamw_update(p, jnp.asarray(0.0), m, v, 0.1, 1.0, 0.5)
+    assert float(p2) < 1.0
+
+
+# ---------------------------------------------------------------- adapters
+
+def test_mora_adapter_shapes_and_zero_init_inert():
+    r = rng(9)
+    p = dense_layer_params(r, CFG)
+    rm = 4
+    p["mora_m_q"] = jnp.zeros((rm, rm))
+    x = jnp.asarray(r.standard_normal((CFG.batch, CFG.seq, CFG.d_model), dtype=np.float32))
+    with_adapter = M.proj(x, p, "q", use_pallas=False)
+    del p["mora_m_q"]
+    without = M.proj(x, p, "q", use_pallas=False)
+    np.testing.assert_allclose(with_adapter, without, rtol=1e-6)
+
+
+def test_lora_adapter_contributes_when_nonzero():
+    r = rng(10)
+    p = dense_layer_params(r, CFG)
+    p["lora_a_q"] = jnp.asarray(r.standard_normal((CFG.d_model, 2), dtype=np.float32))
+    p["lora_b_q"] = jnp.asarray(r.standard_normal((2, CFG.d_model), dtype=np.float32))
+    x = jnp.asarray(r.standard_normal((CFG.batch, CFG.seq, CFG.d_model), dtype=np.float32))
+    with_adapter = M.proj(x, p, "q", use_pallas=False)
+    del p["lora_a_q"], p["lora_b_q"]
+    without = M.proj(x, p, "q", use_pallas=False)
+    assert not np.allclose(with_adapter, without)
+
+
+# -------------------------------------------------------------------- rope
+
+def test_rope_preserves_norm():
+    r = rng(11)
+    cos, sin = M.rope_tables(CFG.seq, CFG.d_k, CFG.rope_theta)
+    x = jnp.asarray(
+        r.standard_normal((1, CFG.seq, CFG.n_heads, CFG.d_k), dtype=np.float32)
+    )
+    y = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-4,
+    )
+
+
+def test_rope_position_zero_is_identity():
+    r = rng(12)
+    cos, sin = M.rope_tables(CFG.seq, CFG.d_k, CFG.rope_theta)
+    x = jnp.asarray(
+        r.standard_normal((1, CFG.seq, CFG.n_heads, CFG.d_k), dtype=np.float32)
+    )
+    y = M.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(y)[0, 0], np.asarray(x)[0, 0], rtol=1e-5)

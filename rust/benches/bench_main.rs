@@ -1,0 +1,685 @@
+//! Benchmark + experiment harness: regenerates every table and figure of
+//! the paper's evaluation (see DESIGN.md §4 for the index), plus micro-
+//! benchmarks of the hot paths.
+//!
+//! Usage:
+//!   cargo bench                 # everything (moderate sizes)
+//!   cargo bench -- t1 f4        # subset
+//!   CURING_BENCH_FAST=1 cargo bench   # smoke sizes
+//!
+//! Shapes (who wins, scaling direction, crossovers) are the reproduction
+//! target — absolute numbers differ from the paper's H100/8B setup by
+//! design (see DESIGN.md §2).
+
+use anyhow::Result;
+use curing::calib::Calibration;
+use curing::compress::{CompressOptions, LayerStrategy};
+use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
+use curing::cur;
+use curing::data::{self, Corpus, CorpusKind, TrainItem};
+use curing::eval;
+use curing::heal::{heal_layers, HealOptions, StepMode, SwitchedRunner};
+use curing::linalg::{jacobi_svd, rand_svd, Mat};
+use curing::model::ModelConfig;
+use curing::peft::{init_adapters, trainable_params, Adapter};
+use curing::pipeline::{LayerKind, LayerPlan, Pipeline};
+use curing::tensor::{Tensor, TensorStore};
+use curing::util::bench::Bencher;
+use curing::util::stats::mib;
+use curing::util::Rng;
+use curing::wanda::Selector;
+
+fn fast() -> bool {
+    std::env::var("CURING_BENCH_FAST").as_deref() == Ok("1")
+}
+
+fn main() -> Result<()> {
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-') && a != "bench")
+        .collect();
+    let all = ["micro", "t1", "t2", "t3", "f4", "f5", "f6", "f7", "f10", "t4", "t5", "t6"];
+    let selected: Vec<&str> = if filters.is_empty() {
+        all.to_vec()
+    } else {
+        all.iter().copied().filter(|n| filters.iter().any(|f| f == n)).collect()
+    };
+    let ctx = Ctx::new()?;
+    let pipe = ctx.pipeline("tiny")?;
+    let dense = ctx.load_or_pretrain("tiny", default_pretrain_steps())?;
+    let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+    for name in selected {
+        println!("\n════════ bench {name} ════════");
+        let t0 = std::time::Instant::now();
+        match name {
+            "micro" => micro(&ctx, &pipe, &dense)?,
+            "t1" => t1(&ctx, &pipe, &dense, &calib)?,
+            "t2" => t2(&ctx, &pipe, &dense, &calib)?,
+            "t3" => t3(&ctx, &pipe, &dense, &calib)?,
+            "f4" => f4(&ctx, &pipe, &dense, &calib)?,
+            "f5" => f5(&ctx, &pipe, &dense, &calib)?,
+            "f6" => f6(&ctx, &pipe, &dense, &calib)?,
+            "f7" => f7(&ctx, &pipe, &dense, &calib)?,
+            "f10" => f10(&ctx, &pipe, &dense)?,
+            "t4" => t4(&ctx, &pipe, &dense, &calib)?,
+            "t5" => t5(&ctx, &pipe, &dense, &calib)?,
+            "t6" => t6(&ctx, &pipe, &dense, &calib)?,
+            _ => unreachable!(),
+        }
+        println!("──── {name} done in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- micro
+
+/// Hot-path micro-benchmarks (decomposition math + runtime calls).
+fn micro(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
+    let mut rng = Rng::new(1, 0);
+    let b = if fast() { Bencher::quick() } else { Bencher::default() };
+    let w_attn = Mat::random_normal(256, 256, &mut rng);
+    let w_gate = Mat::random_normal(256, 704, &mut rng);
+    let xnorm: Vec<f64> = (0..256).map(|_| rng.f64() + 0.1).collect();
+
+    println!("{}", b.run("jacobi_svd 256x256 (exact)", || jacobi_svd(&w_attn)).row());
+    let mut r2 = Rng::new(2, 0);
+    println!(
+        "{}",
+        b.run("rand_svd 256x704 k=16 (selection path)", || rand_svd(&w_gate, 16, 8, 2, &mut r2))
+            .row()
+    );
+    let mut r3 = Rng::new(3, 0);
+    println!(
+        "{}",
+        b.run("cur_decompose 256x704 r=16 (full)", || {
+            cur::cur_decompose(&w_gate, &w_gate, 16, &mut r3).unwrap()
+        })
+        .row()
+    );
+    let mut r4 = Rng::new(4, 0);
+    println!(
+        "{}",
+        b.run("wanda+deim select 256x256 r=16", || {
+            curing::wanda::select_indices(Selector::Curing, &w_attn, &xnorm, 16, &mut r4).unwrap()
+        })
+        .row()
+    );
+    println!("{}", b.run("matmul 256x256 * 256x256", || w_attn.matmul(&w_attn)).row());
+
+    // Runtime latency: one dense vs one cured layer call.
+    let cfg = &pipe.cfg;
+    let mut rng5 = Rng::new(5, 0);
+    let x = Tensor::from_f32(
+        &[cfg.batch, cfg.seq, cfg.d_model],
+        rng5.normal_vec(cfg.batch * cfg.seq * cfg.d_model, 1.0),
+    );
+    println!(
+        "{}",
+        b.run("pjrt layer_fwd_dense (b8 s64 d256)", || {
+            pipe.layer_forward(dense, 1, &LayerKind::Dense, &x).unwrap()
+        })
+        .row()
+    );
+    // A cured store for layer 1.
+    let calib = Calibration {
+        attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+        ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+        angular: vec![0.0; cfg.n_layers],
+        n_examples: 1,
+    };
+    let mut student = dense.clone();
+    curing::compress::cure_layers(&mut student, cfg, &calib, &[1], &CompressOptions::default())?;
+    let kind = LayerKind::Cured { rank: 16, combo: "all".into() };
+    println!(
+        "{}",
+        b.run("pjrt layer_fwd_cured r16 (b8 s64 d256)", || {
+            pipe.layer_forward(&student, 1, &kind, &x).unwrap()
+        })
+        .row()
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------------- t1
+
+/// Table 1: compression time (s) and size reduction vs #compressed layers.
+fn t1(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let cfg = &pipe.cfg;
+    let max_k = cfg.middle_layers().len();
+    let ks: Vec<usize> = (1..=max_k).collect();
+    println!("Table 1 analog — tiny model, r_max=16, combo=all (paper: linear scaling)");
+    println!("{:<4} {:>10} {:>12} {:>10}", "k", "time (s)", "saved (MiB)", "saved (%)");
+    let mut rng = Rng::new(0, 0);
+    for &k in &ks {
+        let layers =
+            curing::compress::select_layers(cfg, calib, k, LayerStrategy::Angular, &mut rng)?;
+        let mut student = dense.clone();
+        let rep = curing::compress::cure_layers(
+            &mut student,
+            cfg,
+            calib,
+            &layers,
+            &CompressOptions::default(),
+        )?;
+        println!(
+            "{:<4} {:>10.3} {:>12.2} {:>10.2}",
+            k,
+            rep.seconds_total,
+            mib(rep.bytes_saved() as f64),
+            100.0 * rep.bytes_saved() as f64 / dense.total_bytes() as f64
+        );
+    }
+    // Analytic size accounting for the base (~90M) config at its ranks
+    // (paper reports GiB; shape = linear in k, ~2x params at 2x rank).
+    if let Ok(base) = ModelConfig::from_manifest(&pipe.rt.manifest, "base") {
+        println!(
+            "\nbase (~{}M params) analytic saved-bytes per layer:",
+            base.total_params / 1_000_000
+        );
+        for r in &base.ranks {
+            println!(
+                "  r_max={:<4} {:>10.2} MiB/layer",
+                r,
+                mib(base.bytes_saved_per_layer("all", *r)? as f64)
+            );
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- t2
+
+/// Table 2 + Figure 8: weight-combination ablation.
+fn t2(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let k = 3;
+    let sizes = eval_sizes();
+    println!("Table 2 / Fig 8 analog — combos at k={k}, r_max=16");
+    println!(
+        "{:<6} {:>10} {:>12} {:>9} {:>9} {:>7} {:>7}",
+        "combo", "time (s)", "saved (MiB)", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
+    );
+    for combo in ["all", "gate", "qk", "qg", "kg"] {
+        let opts = CompressOptions { combo: combo.into(), ..Default::default() };
+        let (student, plan, rep) =
+            ctx.compress_k(pipe, dense, calib, k, LayerStrategy::Angular, &opts)?;
+        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
+        println!(
+            "{:<6} {:>10.3} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
+            combo,
+            rep.seconds_total,
+            mib(rep.bytes_saved() as f64),
+            suite.c4_ppl,
+            suite.wiki_ppl,
+            suite.boolq_acc,
+            suite.mmlu_acc
+        );
+    }
+    println!("expected shape: 'all' saves most; 'qk' smallest saving, best metrics");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- t3
+
+/// Table 3 + Figure 9: r_max ablation (paper {128,256,512} ↔ ours {8,16,32}).
+fn t3(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let k = 3;
+    let sizes = eval_sizes();
+    println!("Table 3 / Fig 9 analog — rank sweep at k={k}");
+    println!(
+        "{:<6} {:>10} {:>12} {:>9} {:>9} {:>7} {:>7}",
+        "r_max", "time (s)", "saved (MiB)", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
+    );
+    for r in pipe.cfg.ranks.clone() {
+        let opts = CompressOptions { r_max: r, ..Default::default() };
+        let (student, plan, rep) =
+            ctx.compress_k(pipe, dense, calib, k, LayerStrategy::Angular, &opts)?;
+        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
+        println!(
+            "{:<6} {:>10.3} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
+            r,
+            rep.seconds_total,
+            mib(rep.bytes_saved() as f64),
+            suite.c4_ppl,
+            suite.wiki_ppl,
+            suite.boolq_acc,
+            suite.mmlu_acc
+        );
+    }
+    println!("expected shape: larger rank → slower + less saving + better metrics");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- f4
+
+/// Figure 4: metrics vs #compressed layers, with healing at one point.
+fn f4(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let sizes = eval_sizes();
+    let max_k = if fast() { 2 } else { pipe.cfg.middle_layers().len() };
+    let heal_k = 3.min(max_k);
+    let heal_steps = if fast() { 10 } else { 80 };
+    println!("Fig 4 analog — metric degradation vs k, + healing at k={heal_k}");
+    println!("{:<10} {:>9} {:>9} {:>7} {:>7}", "model", "c4_ppl", "wiki_ppl", "boolq", "mmlu");
+    let base = ctx.eval_suite(pipe, dense, &LayerPlan::all_dense(&pipe.cfg), &sizes)?;
+    println!(
+        "{:<10} {:>9.2} {:>9.2} {:>7.3} {:>7.3} (random: boolq 0.5, mmlu 0.25)",
+        "dense", base.c4_ppl, base.wiki_ppl, base.boolq_acc, base.mmlu_acc
+    );
+    for k in 1..=max_k {
+        let (student, plan, _) = ctx.compress_k(
+            pipe,
+            dense,
+            calib,
+            k,
+            LayerStrategy::Angular,
+            &CompressOptions::default(),
+        )?;
+        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
+        println!(
+            "{:<10} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
+            format!("cured k={k}"),
+            suite.c4_ppl,
+            suite.wiki_ppl,
+            suite.boolq_acc,
+            suite.mmlu_acc
+        );
+    }
+    // Healing point.
+    let (mut student, plan, _) = ctx.compress_k(
+        pipe,
+        dense,
+        calib,
+        heal_k,
+        LayerStrategy::Angular,
+        &CompressOptions::default(),
+    )?;
+    let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_HEAL);
+    let mut opt = TensorStore::new();
+    heal_layers(
+        pipe,
+        dense,
+        &mut student,
+        &mut opt,
+        &ctx.vocab,
+        &mut corpus,
+        &HealOptions { steps: heal_steps, ..Default::default() },
+        0,
+    )?;
+    let healed = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
+    println!(
+        "{:<10} {:>9.2} {:>9.2} {:>7.3} {:>7.3}  <- healing recovers",
+        format!("healed k={heal_k}"),
+        healed.c4_ppl,
+        healed.wiki_ppl,
+        healed.boolq_acc,
+        healed.mmlu_acc
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------------- f5
+
+/// Figure 5: healing curves — ΔU vs LoRA vs MoRA at equal budgets.
+fn f5(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let steps = if fast() { 6 } else { 30 };
+    let eval_every = if fast() { 3 } else { 10 };
+    let k = 3;
+    println!("Fig 5 analog — full-model healing (0.9 KD + 0.1 CE), k={k}, {steps} steps");
+    for adapter in [Adapter::Du, Adapter::Lora, Adapter::Mora] {
+        let (mut student, _plan, _) = ctx.compress_k(
+            pipe,
+            dense,
+            calib,
+            k,
+            LayerStrategy::Angular,
+            &CompressOptions::default(),
+        )?;
+        let mut rng = Rng::new(11, 0);
+        let mut adapters = init_adapters(adapter, &pipe.cfg, dense, calib, &mut rng)?;
+        let mut opt = TensorStore::new();
+        let runner = SwitchedRunner::new("tiny", adapter.tag(), StepMode::Heal);
+        let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_HEAL);
+        println!(
+            "  {} (trainable ≈ {} params):",
+            adapter.label(),
+            trainable_params(adapter, &pipe.cfg)
+        );
+        for step in 0..steps {
+            let lr = curing::heal::cosine_lr(step, steps, 3e-4, steps / 5);
+            let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
+            let tokens = Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
+            let targets = Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
+            let loss = runner.step(
+                pipe,
+                dense,
+                &mut student,
+                &mut adapters,
+                &mut opt,
+                &tokens,
+                &targets,
+                None,
+                lr,
+                step + 1,
+            )?;
+            if step % eval_every == 0 || step + 1 == steps {
+                let mut wiki = Corpus::new(CorpusKind::SynthWiki, data::SEED_EVAL);
+                let ppl = eval::perplexity_switched(
+                    pipe,
+                    dense,
+                    &student,
+                    &adapters,
+                    adapter.tag(),
+                    &ctx.vocab,
+                    &mut wiki,
+                    2,
+                )?;
+                println!("    step {step:>3}: loss {loss:.4}  wiki_ppl {ppl:.2}");
+            }
+        }
+    }
+    println!("expected shape: all recover; ΔU between LoRA and MoRA on wiki ppl (paper §5.2)");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- f6
+
+/// Figure 6: MRPC fine-tuning vs WikiText forgetting (4 methods).
+fn f6(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let steps = if fast() { 6 } else { 30 };
+    let eval_every = if fast() { 3 } else { 10 };
+    let k = 3;
+    let cfg = &pipe.cfg;
+    // Fixed MRPC train/eval splits.
+    let mut rng = Rng::new(77, 0);
+    let train: Vec<TrainItem> =
+        (0..64).map(|_| data::mrpc_item(&ctx.vocab, &mut rng, cfg.seq).1).collect();
+    let eval_items: Vec<_> =
+        (0..32).map(|_| data::mrpc_item(&ctx.vocab, &mut rng, cfg.seq).0).collect();
+    println!("Fig 6 analog — fine-tune on synth-mrpc, watch synth-wiki ppl (forgetting)");
+    for adapter in Adapter::ALL {
+        let (mut student, _plan, _) = ctx.compress_k(
+            pipe,
+            dense,
+            calib,
+            k,
+            LayerStrategy::Angular,
+            &CompressOptions::default(),
+        )?;
+        let mut arng = Rng::new(12, 0);
+        let mut adapters = init_adapters(adapter, cfg, dense, calib, &mut arng)?;
+        let mut opt = TensorStore::new();
+        let runner = SwitchedRunner::new("tiny", adapter.tag(), StepMode::Task);
+        println!("  {}:", adapter.label());
+        for step in 0..steps {
+            let lr = curing::heal::cosine_lr(step, steps, 3e-4, steps / 5);
+            let (tokens, targets, mask) =
+                eval::pack_train(&train, step * cfg.batch, cfg.batch, cfg.seq);
+            let loss = runner.step(
+                pipe,
+                dense,
+                &mut student,
+                &mut adapters,
+                &mut opt,
+                &tokens,
+                &targets,
+                Some(&mask),
+                lr,
+                step + 1,
+            )?;
+            if step % eval_every == 0 || step + 1 == steps {
+                let acc = eval::choice_accuracy_switched(
+                    pipe,
+                    dense,
+                    &student,
+                    &adapters,
+                    adapter.tag(),
+                    &eval_items,
+                )?;
+                let mut wiki = Corpus::new(CorpusKind::SynthWiki, data::SEED_EVAL);
+                let ppl = eval::perplexity_switched(
+                    pipe,
+                    dense,
+                    &student,
+                    &adapters,
+                    adapter.tag(),
+                    &ctx.vocab,
+                    &mut wiki,
+                    2,
+                )?;
+                println!(
+                    "    step {step:>3}: task-loss {loss:.4}  mrpc-acc {acc:.3}  wiki_ppl {ppl:.2}"
+                );
+            }
+        }
+    }
+    println!("expected shape: lora/mora adapt fastest but drift most on wiki;");
+    println!("curlora barely learns but barely forgets; ΔU sits between (paper Fig 6)");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- f7
+
+/// Figure 7: UUID→UUID memorization (loss + char accuracy).
+fn f7(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let steps = if fast() { 6 } else { 30 };
+    let eval_every = if fast() { 3 } else { 10 };
+    let cfg = &pipe.cfg;
+    let n_pairs = if fast() { 32 } else { 128 };
+    let pairs = data::uuid_pairs(n_pairs, 2024);
+    let items: Vec<TrainItem> =
+        pairs.iter().map(|(a, b)| data::uuid_item(&ctx.vocab, a, b, cfg.seq)).collect();
+    println!("Fig 7 analog — UUID→UUID mapping ({n_pairs} pairs, paper App. B format)");
+    for adapter in [Adapter::Du, Adapter::Lora, Adapter::Mora] {
+        let (mut student, _plan, _) = ctx.compress_k(
+            pipe,
+            dense,
+            calib,
+            3,
+            LayerStrategy::Angular,
+            &CompressOptions::default(),
+        )?;
+        let mut arng = Rng::new(13, 0);
+        let mut adapters = init_adapters(adapter, cfg, dense, calib, &mut arng)?;
+        let mut opt = TensorStore::new();
+        let runner = SwitchedRunner::new("tiny", adapter.tag(), StepMode::Task);
+        println!("  {}:", adapter.label());
+        for step in 0..steps {
+            let lr = curing::heal::cosine_lr(step, steps, 1e-3, steps / 5);
+            let (tokens, targets, mask) =
+                eval::pack_train(&items, step * cfg.batch, cfg.batch, cfg.seq);
+            let loss = runner.step(
+                pipe,
+                dense,
+                &mut student,
+                &mut adapters,
+                &mut opt,
+                &tokens,
+                &targets,
+                Some(&mask),
+                lr,
+                step + 1,
+            )?;
+            if step % eval_every == 0 || step + 1 == steps {
+                // Char accuracy on a fixed batch of training pairs
+                // (memorization task: train accuracy is the metric).
+                let (tokens_e, targets_e, mask_e) =
+                    eval::pack_train(&items, 0, cfg.batch, cfg.seq);
+                let logits = eval::switched_logits(
+                    pipe,
+                    dense,
+                    &student,
+                    &adapters,
+                    adapter.tag(),
+                    &tokens_e,
+                )?;
+                let acc =
+                    eval::char_accuracy_host(&logits, targets_e.i32s()?, mask_e.f32s()?)?;
+                println!("    step {step:>3}: loss {loss:.4}  char-acc {acc:.3}");
+            }
+        }
+    }
+    println!("expected shape: MoRA > LoRA ≥ ΔU in convergence speed (paper Fig 7)");
+    Ok(())
+}
+
+// ------------------------------------------------------------------ f10
+
+/// Figure 10: calibration-set size ablation.
+fn f10(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
+    let sizes_cfg = eval_sizes();
+    let calib_sizes: &[usize] = if fast() { &[16, 32] } else { &[32, 128, 512] };
+    println!("Fig 10 analog — calibration size ablation (paper: 128 ≈ 1024)");
+    println!(
+        "{:<8} {:>12} {:>9} {:>9} {:>7} {:>7}",
+        "examples", "calib (s)", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
+    );
+    for &n in calib_sizes {
+        let t0 = std::time::Instant::now();
+        let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_CALIB);
+        let calib = curing::calib::calibrate(pipe, dense, &ctx.vocab, &mut corpus, n)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let (student, plan, _) = ctx.compress_k(
+            pipe,
+            dense,
+            &calib,
+            3,
+            LayerStrategy::Angular,
+            &CompressOptions::default(),
+        )?;
+        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes_cfg)?;
+        println!(
+            "{:<8} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
+            n, secs, suite.c4_ppl, suite.wiki_ppl, suite.boolq_acc, suite.mmlu_acc
+        );
+    }
+    println!("expected shape: metrics ~flat with size; calibration time linear");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- t4
+
+/// Table 4 + Figure 11: angular distances + layer-selection strategies.
+fn t4(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let sizes = eval_sizes();
+    println!("Table 4 analog — per-layer angular distances (ascending):");
+    let mut order = pipe.cfg.middle_layers();
+    order.sort_by(|&a, &b| calib.angular[a].partial_cmp(&calib.angular[b]).unwrap());
+    for &l in &order {
+        print!("  L{l}:{:.4}", calib.angular[l]);
+    }
+    println!("\n\nFig 11 analog — selection strategy vs metrics at k=3:");
+    println!("{:<9} {:>9} {:>9} {:>7} {:>7}", "strategy", "c4_ppl", "wiki_ppl", "boolq", "mmlu");
+    for strat in [LayerStrategy::Angular, LayerStrategy::LastN, LayerStrategy::Random] {
+        let (student, plan, rep) =
+            ctx.compress_k(pipe, dense, calib, 3, strat, &CompressOptions::default())?;
+        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
+        println!(
+            "{:<9} {:>9.2} {:>9.2} {:>7.3} {:>7.3}   layers {:?}",
+            strat.label(),
+            suite.c4_ppl,
+            suite.wiki_ppl,
+            suite.boolq_acc,
+            suite.mmlu_acc,
+            rep.layers
+        );
+    }
+    println!("expected shape: angular ≥ last-n > random (paper App. D.1)");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- t5
+
+/// Table 5 + Figure 12: row/column selector ablation.
+fn t5(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let sizes = eval_sizes();
+    let k = 3;
+    println!("Table 5 / Fig 12 analog — selector ablation at k={k}:");
+    println!(
+        "{:<8} {:>12} {:>12} {:>9} {:>9} {:>7} {:>7}",
+        "selector", "Σ‖CUR‖_F", "Σ‖W−CUR‖_F", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
+    );
+    for sel in Selector::ALL {
+        let opts = CompressOptions { selector: sel, ..Default::default() };
+        let (student, plan, rep) =
+            ctx.compress_k(pipe, dense, calib, k, LayerStrategy::Angular, &opts)?;
+        let cur_fro: f64 = rep.weights.iter().map(|w| w.cur_fro).sum();
+        let diff: f64 = rep.weights.iter().map(|w| w.diff_fro).sum();
+        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
+        println!(
+            "{:<8} {:>12.2} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
+            sel.label(),
+            cur_fro,
+            diff,
+            suite.c4_ppl,
+            suite.wiki_ppl,
+            suite.boolq_acc,
+            suite.mmlu_acc
+        );
+    }
+    println!("expected shape: CURing smallest ‖W−CUR‖_F; Random worst metrics");
+    Ok(())
+}
+
+// ------------------------------------------------------------------- t6
+
+/// Table 6: per-weight activation norms, teacher vs student vs healed.
+fn t6(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
+    let k = 3;
+    let (mut student, _plan, _) = ctx.compress_k(
+        pipe,
+        dense,
+        calib,
+        k,
+        LayerStrategy::Angular,
+        &CompressOptions::default(),
+    )?;
+    // One calibration batch provides the projection inputs X.
+    let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_EVAL);
+    let (toks, _) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
+    let tokens = Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
+    let fwd = pipe.forward_calib(dense, &tokens)?;
+    let cured = curing::compress::cured_layers_of(&student);
+
+    let table = |label: &str, student: &TensorStore| -> Result<()> {
+        println!("  {label}:");
+        println!(
+            "    {:<6} {:>5} {:>12} {:>12} {:>12}",
+            "layer", "proj", "‖XW‖ teach", "‖XCUR‖ stud", "‖W−CUR‖_F"
+        );
+        for &l in &cured {
+            for row in eval::activation_rows(dense, student, l, &fwd.attn_in[l], &fwd.ffn_in[l])? {
+                println!(
+                    "    {:<6} {:>5} {:>12.2} {:>12.2} {:>12.2}",
+                    row.layer, row.proj, row.teacher_norm, row.student_norm, row.weight_diff
+                );
+            }
+        }
+        Ok(())
+    };
+    println!("Table 6 analog — activation Frobenius norms (teacher vs student):");
+    table("cured (no healing)", &student)?;
+    // Heal and re-measure: differences must shrink (paper's claim).
+    let heal_steps = if fast() { 10 } else { 60 };
+    let mut hcorpus = Corpus::new(CorpusKind::SynthC4, data::SEED_HEAL);
+    let mut opt = TensorStore::new();
+    heal_layers(
+        pipe,
+        dense,
+        &mut student,
+        &mut opt,
+        &ctx.vocab,
+        &mut hcorpus,
+        &HealOptions { steps: heal_steps, ..Default::default() },
+        0,
+    )?;
+    table(&format!("healed ({heal_steps} steps)"), &student)?;
+    println!("expected shape: healed ‖W−CUR‖_F shrinks; student norms approach teacher");
+    Ok(())
+}
+
+fn eval_sizes() -> EvalSizes {
+    if fast() {
+        EvalSizes { ppl_batches: 1, boolq_items: 8, mmlu_items: 8 }
+    } else {
+        EvalSizes::default()
+    }
+}

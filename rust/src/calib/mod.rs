@@ -1,0 +1,184 @@
+//! Calibration (paper §4.1–4.2): one pass over calibration data collects
+//! *both* signals CURing needs, exactly as the paper does concurrently:
+//!
+//! * WANDA activation norms — per-layer ℓ2 norms of each input feature of
+//!   the attention input (for W^Q/W^K) and FFN input (for W^Gate);
+//! * angular distances — `d(h_{n-1}, h_n) = arccos(·)/π` between
+//!   consecutive layers' last-token hidden states, averaged over examples.
+
+use crate::data::{Corpus, Vocab};
+use crate::pipeline::Pipeline;
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::{Json, JsonObj};
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Per layer: sqrt of accumulated Σx² per attention-input feature.
+    pub attn_norms: Vec<Vec<f64>>,
+    /// Per layer: same for the FFN input.
+    pub ffn_norms: Vec<Vec<f64>>,
+    /// `angular[l]` = mean angular distance between layer l's output and
+    /// its input representation (layer l-1's output; l=0 compares to the
+    /// embedding output).
+    pub angular: Vec<f64>,
+    pub n_examples: usize,
+}
+
+impl Calibration {
+    /// WANDA xnorm vector for a projection of layer `l`.
+    pub fn xnorm(&self, l: usize, proj: &str) -> &[f64] {
+        match proj {
+            "q" | "k" => &self.attn_norms[l],
+            "gate" => &self.ffn_norms[l],
+            other => panic!("no calibration norms for projection {other}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let vecf = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        let mut o = JsonObj::new();
+        o.insert("n_examples", Json::Num(self.n_examples as f64));
+        o.insert("angular", vecf(&self.angular));
+        o.insert("attn_norms", Json::Arr(self.attn_norms.iter().map(|v| vecf(v)).collect()));
+        o.insert("ffn_norms", Json::Arr(self.ffn_norms.iter().map(|v| vecf(v)).collect()));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Calibration> {
+        let vecf = |j: &Json| -> Vec<f64> {
+            j.as_arr().unwrap_or(&[]).iter().filter_map(|x| x.as_f64()).collect()
+        };
+        let mat = |j: Option<&Json>| -> Vec<Vec<f64>> {
+            j.and_then(|x| x.as_arr()).unwrap_or(&[]).iter().map(vecf).collect()
+        };
+        Ok(Calibration {
+            n_examples: j.at(&["n_examples"]).and_then(|x| x.as_usize()).unwrap_or(0),
+            angular: j.at(&["angular"]).map(vecf).unwrap_or_default(),
+            attn_norms: mat(j.at(&["attn_norms"])),
+            ffn_norms: mat(j.at(&["ffn_norms"])),
+        })
+    }
+}
+
+/// Angular distance between two vectors: `(1/π) arccos(cos_sim)`.
+pub fn angular_distance(a: &[f32], b: &[f32]) -> f64 {
+    let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    let denom = (na.sqrt() * nb.sqrt()).max(1e-30);
+    let cos = (dot / denom).clamp(-1.0, 1.0);
+    cos.acos() / std::f64::consts::PI
+}
+
+/// Extract the last-token hidden state of each batch row: (b, s, d) -> b vectors.
+fn last_token_rows(t: &Tensor) -> Result<Vec<&[f32]>> {
+    let (b, s, d) = (t.shape[0], t.shape[1], t.shape[2]);
+    let data = t.f32s()?;
+    Ok((0..b).map(|i| &data[(i * s + s - 1) * d..(i * s + s) * d]).collect())
+}
+
+/// Run calibration over `n_examples` sequences drawn from `corpus`
+/// (paper default: 128 C4 examples, batched).
+pub fn calibrate(
+    pipe: &Pipeline,
+    store: &TensorStore,
+    vocab: &Vocab,
+    corpus: &mut Corpus,
+    n_examples: usize,
+) -> Result<Calibration> {
+    let cfg = &pipe.cfg;
+    let (b, s, d) = (cfg.batch, cfg.seq, cfg.d_model);
+    let n_batches = n_examples.div_ceil(b).max(1);
+    let mut attn_acc = vec![vec![0.0f64; d]; cfg.n_layers];
+    let mut ffn_acc = vec![vec![0.0f64; d]; cfg.n_layers];
+    let mut ang_acc = vec![0.0f64; cfg.n_layers];
+    let mut count = 0usize;
+    for _ in 0..n_batches {
+        let (toks, _) = corpus.batch(vocab, b, s);
+        let tokens = Tensor::from_i32(&[b, s], toks);
+        let fwd = pipe.forward_calib(store, &tokens)?;
+        for l in 0..cfg.n_layers {
+            for (acc, &x) in attn_acc[l].iter_mut().zip(fwd.attn_sumsq[l].f32s()?) {
+                *acc += x as f64;
+            }
+            for (acc, &x) in ffn_acc[l].iter_mut().zip(fwd.ffn_sumsq[l].f32s()?) {
+                *acc += x as f64;
+            }
+            let prev = if l == 0 { &fwd.embed_out } else { &fwd.layer_outputs[l - 1] };
+            let prev_rows = last_token_rows(prev)?;
+            let cur_rows = last_token_rows(&fwd.layer_outputs[l])?;
+            for (pa, pb) in prev_rows.iter().zip(&cur_rows) {
+                ang_acc[l] += angular_distance(pa, pb);
+            }
+        }
+        count += b;
+    }
+    Ok(Calibration {
+        attn_norms: attn_acc
+            .into_iter()
+            .map(|v| v.into_iter().map(|x| x.sqrt()).collect())
+            .collect(),
+        ffn_norms: ffn_acc
+            .into_iter()
+            .map(|v| v.into_iter().map(|x| x.sqrt()).collect())
+            .collect(),
+        angular: ang_acc.into_iter().map(|x| x / count as f64).collect(),
+        n_examples: count,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn angular_distance_basics() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!((angular_distance(&a, &a) - 0.0).abs() < 1e-7);
+        assert!((angular_distance(&a, &b) - 0.5).abs() < 1e-7);
+        let c = [-1.0f32, 0.0];
+        assert!((angular_distance(&a, &c) - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn angular_distance_scale_invariant() {
+        let a = [0.3f32, -1.2, 2.0];
+        let b = [1.0f32, 0.4, -0.5];
+        let scaled: Vec<f32> = b.iter().map(|x| x * 7.5).collect();
+        assert!((angular_distance(&a, &b) - angular_distance(&a, &scaled)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn calibration_json_roundtrip() {
+        let c = Calibration {
+            attn_norms: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+            ffn_norms: vec![vec![0.5, 0.25], vec![0.1, 0.2]],
+            angular: vec![0.1, 0.2],
+            n_examples: 128,
+        };
+        let j = c.to_json();
+        let c2 = Calibration::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c2.n_examples, 128);
+        assert_eq!(c2.angular, c.angular);
+        assert_eq!(c2.attn_norms, c.attn_norms);
+        assert_eq!(c2.ffn_norms, c.ffn_norms);
+    }
+
+    #[test]
+    fn xnorm_routing() {
+        let c = Calibration {
+            attn_norms: vec![vec![1.0]],
+            ffn_norms: vec![vec![2.0]],
+            angular: vec![0.0],
+            n_examples: 1,
+        };
+        assert_eq!(c.xnorm(0, "q")[0], 1.0);
+        assert_eq!(c.xnorm(0, "k")[0], 1.0);
+        assert_eq!(c.xnorm(0, "gate")[0], 2.0);
+    }
+}

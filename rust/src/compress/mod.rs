@@ -1,0 +1,303 @@
+//! The CURing compression pipeline (paper §4): layer selection + per-
+//! weight DEIM-CUR factorization, producing a cured tensor store and the
+//! Table 1/2/5 accounting.
+
+use crate::calib::Calibration;
+use crate::cur::rank_rule;
+use crate::linalg::Mat;
+use crate::model::{combo_targets, ModelConfig};
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::Rng;
+use crate::wanda::{cur_with_selector, Selector};
+use anyhow::{ensure, Result};
+use std::time::Instant;
+
+/// Layer-selection strategy (paper §4.1 + Appendix D.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerStrategy {
+    /// Smallest angular distance first (CURing's choice).
+    Angular,
+    /// Last N eligible layers (the Appendix D.1 baseline).
+    LastN,
+    /// Uniform random eligible layers.
+    Random,
+}
+
+impl LayerStrategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerStrategy::Angular => "angular",
+            LayerStrategy::LastN => "last-n",
+            LayerStrategy::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<LayerStrategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "angular" => LayerStrategy::Angular,
+            "last-n" | "lastn" | "last" => LayerStrategy::LastN,
+            "random" => LayerStrategy::Random,
+            other => anyhow::bail!("unknown layer strategy '{other}'"),
+        })
+    }
+}
+
+/// Pick `k` layers to compress among the eligible middle layers.
+pub fn select_layers(
+    cfg: &ModelConfig,
+    calib: &Calibration,
+    k: usize,
+    strategy: LayerStrategy,
+    rng: &mut Rng,
+) -> Result<Vec<usize>> {
+    let eligible = cfg.middle_layers();
+    ensure!(k <= eligible.len(), "k={k} exceeds {} eligible layers", eligible.len());
+    let mut chosen = match strategy {
+        LayerStrategy::Angular => {
+            let mut order = eligible.clone();
+            order.sort_by(|&a, &b| calib.angular[a].partial_cmp(&calib.angular[b]).unwrap());
+            order.truncate(k);
+            order
+        }
+        LayerStrategy::LastN => {
+            let mut order = eligible.clone();
+            order.reverse();
+            order.truncate(k);
+            order
+        }
+        LayerStrategy::Random => {
+            let picks = rng.sample_distinct(eligible.len(), k);
+            picks.into_iter().map(|i| eligible[i]).collect()
+        }
+    };
+    chosen.sort_unstable();
+    Ok(chosen)
+}
+
+/// Per-weight compression record (feeds Tables 1, 2, 5).
+#[derive(Debug, Clone)]
+pub struct WeightReport {
+    pub layer: usize,
+    pub proj: String,
+    pub rank: usize,
+    pub w_fro: f64,
+    pub cur_fro: f64,
+    pub diff_fro: f64,
+    pub sigma_next: f64,
+    pub params_dense: usize,
+    pub params_cur: usize,
+    pub seconds: f64,
+}
+
+/// Whole-run compression report.
+#[derive(Debug, Clone, Default)]
+pub struct CompressReport {
+    pub layers: Vec<usize>,
+    pub weights: Vec<WeightReport>,
+    pub seconds_total: f64,
+}
+
+impl CompressReport {
+    pub fn bytes_saved(&self) -> usize {
+        self.weights
+            .iter()
+            .map(|w| (w.params_dense.saturating_sub(w.params_cur)) * 4)
+            .sum()
+    }
+
+    /// Σ‖W − CUR‖_F per layer (Table 5 rows).
+    pub fn layer_diff_fro(&self, layer: usize) -> f64 {
+        self.weights.iter().filter(|w| w.layer == layer).map(|w| w.diff_fro).sum()
+    }
+
+    pub fn layer_cur_fro(&self, layer: usize) -> f64 {
+        self.weights.iter().filter(|w| w.layer == layer).map(|w| w.cur_fro).sum()
+    }
+
+    pub fn layer_w_fro(&self, layer: usize) -> f64 {
+        self.weights.iter().filter(|w| w.layer == layer).map(|w| w.w_fro).sum()
+    }
+}
+
+/// Options for one compression run.
+#[derive(Debug, Clone)]
+pub struct CompressOptions {
+    pub combo: String,
+    pub r_max: usize,
+    pub selector: Selector,
+    pub seed: u64,
+}
+
+impl Default for CompressOptions {
+    fn default() -> Self {
+        CompressOptions { combo: "all".into(), r_max: 16, selector: Selector::Curing, seed: 0 }
+    }
+}
+
+/// Compress `layers` of the dense model in `store` (in place): replaces
+/// `L{l}.w_{p}` with `L{l}.{c,u,du,r}_{p}` for each targeted projection.
+/// `du` starts at zero — healing updates it (paper §4.5).
+pub fn cure_layers(
+    store: &mut TensorStore,
+    cfg: &ModelConfig,
+    calib: &Calibration,
+    layers: &[usize],
+    opts: &CompressOptions,
+) -> Result<CompressReport> {
+    let t_total = Instant::now();
+    let mut rng = Rng::new(opts.seed, 0xC0DE);
+    let mut report = CompressReport { layers: layers.to_vec(), ..Default::default() };
+    let targets = combo_targets(&opts.combo)?;
+    for &l in layers {
+        ensure!(
+            l > 0 && l + 1 < cfg.n_layers,
+            "layer {l} not eligible (first/last are preserved, paper §4.1)"
+        );
+        for proj in targets {
+            let t0 = Instant::now();
+            let name = format!("L{l}.w_{proj}");
+            let w_t = store.get(&name)?;
+            let w = Mat::from_tensor(w_t)?;
+            let (m, n) = (w.rows, w.cols);
+            let rank = rank_rule(m, n, opts.r_max);
+            let xnorm = calib.xnorm(l, proj);
+            let f = cur_with_selector(opts.selector, &w, xnorm, rank, &mut rng)?;
+            let rec = f.reconstruct();
+            let diff = w.sub(&rec);
+            report.weights.push(WeightReport {
+                layer: l,
+                proj: proj.to_string(),
+                rank,
+                w_fro: w.fro_norm(),
+                cur_fro: rec.fro_norm(),
+                diff_fro: diff.fro_norm(),
+                sigma_next: f.sigma_next,
+                params_dense: m * n,
+                params_cur: f.param_count(),
+                seconds: t0.elapsed().as_secs_f64(),
+            });
+            store.remove(&name);
+            store.insert(format!("L{l}.c_{proj}"), f.c.to_tensor());
+            store.insert(format!("L{l}.u_{proj}"), f.u.to_tensor());
+            store.insert(format!("L{l}.du_{proj}"), Tensor::zeros(&[rank, rank]));
+            store.insert(format!("L{l}.r_{proj}"), f.r.to_tensor());
+        }
+    }
+    report.seconds_total = t_total.elapsed().as_secs_f64();
+    store.meta.insert("cured_layers".into(), join_usize(layers));
+    store.meta.insert("combo".into(), opts.combo.clone());
+    store.meta.insert("r_max".into(), opts.r_max.to_string());
+    store.meta.insert("selector".into(), opts.selector.label().to_string());
+    Ok(report)
+}
+
+/// Read back the cured-layer list persisted in store metadata.
+pub fn cured_layers_of(store: &TensorStore) -> Vec<usize> {
+    store
+        .meta
+        .get("cured_layers")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_default()
+}
+
+fn join_usize(xs: &[usize]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_cfg() -> ModelConfig {
+        let j = crate::util::Json::parse(
+            r#"{"configs":{"t":{"vocab":64,"d_model":16,"n_layers":6,"n_heads":2,
+            "d_inter":32,"seq":8,"batch":2,"ranks":[4],"default_rank":4,
+            "lora_rank":1,"mora_rank":4,"total_params":0}}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_manifest(&j, "t").unwrap()
+    }
+
+    fn fake_calib(cfg: &ModelConfig, angular: Vec<f64>) -> Calibration {
+        Calibration {
+            attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+            ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+            angular,
+            n_examples: 4,
+        }
+    }
+
+    #[test]
+    fn angular_selection_prefers_small_distance() {
+        let cfg = fake_cfg();
+        // Middle layers are 1..=4; give layer 3 the smallest distance.
+        let calib = fake_calib(&cfg, vec![0.9, 0.5, 0.4, 0.1, 0.3, 0.9]);
+        let mut rng = Rng::new(0, 0);
+        let sel = select_layers(&cfg, &calib, 2, LayerStrategy::Angular, &mut rng).unwrap();
+        assert_eq!(sel, vec![3, 4]);
+    }
+
+    #[test]
+    fn lastn_and_random_eligible_only() {
+        let cfg = fake_cfg();
+        let calib = fake_calib(&cfg, vec![0.0; 6]);
+        let mut rng = Rng::new(0, 0);
+        let last = select_layers(&cfg, &calib, 3, LayerStrategy::LastN, &mut rng).unwrap();
+        assert_eq!(last, vec![2, 3, 4]);
+        for _ in 0..20 {
+            let r = select_layers(&cfg, &calib, 2, LayerStrategy::Random, &mut rng).unwrap();
+            assert!(r.iter().all(|&l| (1..=4).contains(&l)), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn cure_layers_swaps_params_and_saves_bytes() {
+        let cfg = fake_cfg();
+        let calib = fake_calib(&cfg, vec![0.0; 6]);
+        let mut rng = Rng::new(7, 0);
+        let mut store = cfg.init_dense(&mut rng);
+        let before = store.total_params();
+        let opts = CompressOptions { r_max: 4, ..Default::default() };
+        let rep = cure_layers(&mut store, &cfg, &calib, &[2, 3], &opts).unwrap();
+        assert!(store.total_params() < before);
+        assert!(rep.bytes_saved() > 0);
+        assert!(!store.contains("L2.w_q"));
+        assert!(store.contains("L2.c_q"));
+        assert!(store.contains("L2.du_gate"));
+        assert!(store.contains("L1.w_q"), "uncompressed layer untouched");
+        assert_eq!(cured_layers_of(&store), vec![2, 3]);
+        // 2 layers x 3 projections.
+        assert_eq!(rep.weights.len(), 6);
+        // Approximation is nontrivial but bounded.
+        for w in &rep.weights {
+            assert!(w.diff_fro > 0.0 && w.diff_fro < w.w_fro);
+        }
+    }
+
+    #[test]
+    fn first_last_layers_rejected() {
+        let cfg = fake_cfg();
+        let calib = fake_calib(&cfg, vec![0.0; 6]);
+        let mut rng = Rng::new(8, 0);
+        let mut store = cfg.init_dense(&mut rng);
+        let opts = CompressOptions { r_max: 4, ..Default::default() };
+        assert!(cure_layers(&mut store, &cfg, &calib, &[0], &opts).is_err());
+        assert!(cure_layers(&mut store, &cfg, &calib, &[5], &opts).is_err());
+    }
+
+    #[test]
+    fn selector_changes_approximation_quality() {
+        // Run CURing vs Random on the same store; CURing should win on
+        // total reconstruction error (paper Table 5).
+        let cfg = fake_cfg();
+        let calib = fake_calib(&cfg, vec![0.0; 6]);
+        let total = |sel: Selector| {
+            let mut rng = Rng::new(9, 0);
+            let mut store = cfg.init_dense(&mut rng);
+            let opts = CompressOptions { r_max: 4, selector: sel, ..Default::default() };
+            let rep = cure_layers(&mut store, &cfg, &calib, &[1, 2, 3, 4], &opts).unwrap();
+            rep.weights.iter().map(|w| w.diff_fro).sum::<f64>()
+        };
+        assert!(total(Selector::Curing) <= total(Selector::Random) * 1.02);
+    }
+}

@@ -1,0 +1,263 @@
+//! Experiment coordinator: the high-level building blocks every example,
+//! bench and CLI command composes — pretraining the "original" model,
+//! cached calibration, compression, healing, and the four-metric
+//! evaluation suite of paper Figure 4.
+
+use crate::calib::{calibrate, Calibration};
+use crate::compress::{cure_layers, select_layers, CompressOptions, CompressReport, LayerStrategy};
+use crate::data::{self, Corpus, CorpusKind, Vocab};
+use crate::heal::cosine_lr;
+use crate::pipeline::{LayerPlan, Pipeline};
+use crate::runtime::{Bindings, Runtime};
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::{Json, Rng};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Shared context: runtime + vocabulary + a run directory for stores.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub vocab: Vocab,
+    pub root: PathBuf,
+}
+
+/// The four-metric evaluation of paper Figure 4.
+#[derive(Debug, Clone, Default)]
+pub struct Suite {
+    pub c4_ppl: f64,
+    pub wiki_ppl: f64,
+    pub boolq_acc: f64,
+    pub mmlu_acc: f64,
+}
+
+impl Suite {
+    pub fn row(&self) -> String {
+        format!(
+            "c4_ppl {:>8.2}  wiki_ppl {:>8.2}  boolq {:>6.3}  mmlu {:>6.3}",
+            self.c4_ppl, self.wiki_ppl, self.boolq_acc, self.mmlu_acc
+        )
+    }
+}
+
+/// Evaluation workload sizes (kept small — every extra batch is a full
+/// pipeline pass on one CPU core; bump for final numbers).
+#[derive(Debug, Clone)]
+pub struct EvalSizes {
+    pub ppl_batches: usize,
+    pub boolq_items: usize,
+    pub mmlu_items: usize,
+}
+
+impl Default for EvalSizes {
+    fn default() -> Self {
+        EvalSizes { ppl_batches: 4, boolq_items: 32, mmlu_items: 32 }
+    }
+}
+
+impl Ctx {
+    pub fn new() -> Result<Ctx> {
+        let root = std::env::var("CURING_RUNDIR").unwrap_or_else(|_| "runs".to_string());
+        let ctx =
+            Ctx { rt: Runtime::open_default()?, vocab: Vocab::build(), root: PathBuf::from(root) };
+        std::fs::create_dir_all(&ctx.root)?;
+        Ok(ctx)
+    }
+
+    pub fn pipeline(&self, config: &str) -> Result<Pipeline<'_>> {
+        Pipeline::new(&self.rt, config)
+    }
+
+    fn store_dir(&self, name: &str) -> PathBuf {
+        self.root.join("stores").join(name)
+    }
+
+    /// Pretrain a dense model with the full-model AOT train step; returns
+    /// the weight store and the loss curve.
+    pub fn pretrain(
+        &self,
+        config: &str,
+        steps: usize,
+        base_lr: f64,
+        seed: u64,
+        log: &mut dyn FnMut(usize, f64),
+    ) -> Result<(TensorStore, Vec<f64>)> {
+        let pipe = self.pipeline(config)?;
+        let cfg = &pipe.cfg;
+        let mut rng = Rng::new(seed, 0x7261_494e); // "traiN"
+        let mut store = cfg.init_dense(&mut rng);
+        let mut opt = TensorStore::new();
+        let names = cfg.dense_param_names();
+        for n in &names {
+            let shape = store.get(n)?.shape.clone();
+            opt.insert(format!("m.{n}"), Tensor::zeros(&shape));
+            opt.insert(format!("v.{n}"), Tensor::zeros(&shape));
+        }
+        let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_PRETRAIN);
+        let art = format!("{}_train_step_dense", cfg.name);
+        let mut losses = Vec::with_capacity(steps);
+        let warmup = (steps / 10).max(1);
+        for step in 0..steps {
+            let lr = cosine_lr(step, steps, base_lr, warmup);
+            // 30% task-format sequences: the eval suite's QA/choice
+            // formats must appear in pretraining (DESIGN.md §2).
+            let (toks, tgts) = corpus.batch_mixed(&self.vocab, cfg.batch, cfg.seq, 0.3);
+            let tokens = Tensor::from_i32(&[cfg.batch, cfg.seq], toks);
+            let targets = Tensor::from_i32(&[cfg.batch, cfg.seq], tgts);
+            let mut b = Bindings::new().bind("tokens", &tokens).bind("targets", &targets);
+            b.bind_owned("lr", Tensor::scalar_f32(lr as f32));
+            b.bind_owned("t", Tensor::scalar_f32((step + 1) as f32));
+            for n in &names {
+                b.bind_mut(n.clone(), store.get(n)?);
+                b.bind_mut(format!("m.{n}"), opt.get(&format!("m.{n}"))?);
+                b.bind_mut(format!("v.{n}"), opt.get(&format!("v.{n}"))?);
+            }
+            let mut out = self.rt.execute(&art, &b)?;
+            let loss = out["loss"].f32s()?[0] as f64;
+            losses.push(loss);
+            for n in &names {
+                store.insert(n.clone(), out.remove(n).context("missing param out")?);
+                opt.insert(format!("m.{n}"), out.remove(&format!("m.{n}")).context("m out")?);
+                opt.insert(format!("v.{n}"), out.remove(&format!("v.{n}")).context("v out")?);
+            }
+            log(step, loss);
+        }
+        store.meta.insert("pretrain_steps".into(), steps.to_string());
+        Ok((store, losses))
+    }
+
+    /// Load the cached pretrained model or train it now (one-time cost,
+    /// shared by every experiment).
+    pub fn load_or_pretrain(&self, config: &str, steps: usize) -> Result<TensorStore> {
+        let dir = self.store_dir(&format!("{config}_dense_{steps}"));
+        if dir.join("index.json").exists() {
+            return TensorStore::load(&dir);
+        }
+        eprintln!("[coordinator] pretraining {config} for {steps} steps (cached afterwards)...");
+        let mut last = 0.0;
+        let (store, losses) = self.pretrain(config, steps, 1e-3, 42, &mut |s, l| {
+            last = l;
+            if s % 50 == 0 {
+                eprintln!("  pretrain step {s}: loss {l:.4}");
+            }
+        })?;
+        eprintln!("  final loss {last:.4}");
+        store.save(&dir)?;
+        let curve = Json::Arr(losses.iter().map(|&l| Json::Num(l)).collect());
+        std::fs::write(dir.join("loss_curve.json"), curve.to_string())?;
+        Ok(store)
+    }
+
+    /// Calibration with on-disk cache (paper default 128 examples).
+    pub fn calibrate_cached(
+        &self,
+        pipe: &Pipeline,
+        store: &TensorStore,
+        n_examples: usize,
+    ) -> Result<Calibration> {
+        let key = format!(
+            "{}_calib_{}_{}.json",
+            pipe.cfg.name,
+            n_examples,
+            store.meta.get("pretrain_steps").cloned().unwrap_or_default()
+        );
+        let path = self.root.join(key);
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Ok(j) = Json::parse(&text) {
+                return Calibration::from_json(&j);
+            }
+        }
+        let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_CALIB);
+        let calib = calibrate(pipe, store, &self.vocab, &mut corpus, n_examples)?;
+        std::fs::write(&path, calib.to_json().to_string_pretty())?;
+        Ok(calib)
+    }
+
+    /// Compress `k` layers: returns the cured store + plan + report.
+    pub fn compress_k(
+        &self,
+        pipe: &Pipeline,
+        dense: &TensorStore,
+        calib: &Calibration,
+        k: usize,
+        strategy: LayerStrategy,
+        opts: &CompressOptions,
+    ) -> Result<(TensorStore, LayerPlan, CompressReport)> {
+        let mut rng = Rng::new(opts.seed, 0x5E1E); // layer-selection stream
+        let layers = select_layers(&pipe.cfg, calib, k, strategy, &mut rng)?;
+        let mut student = dense.clone();
+        let report = cure_layers(&mut student, &pipe.cfg, calib, &layers, opts)?;
+        let plan = LayerPlan::with_cured(&pipe.cfg, &layers, report_rank(&report), &opts.combo);
+        Ok((student, plan, report))
+    }
+
+    /// Figure 4 evaluation suite over both corpora and both tasks.
+    pub fn eval_suite(
+        &self,
+        pipe: &Pipeline,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        sizes: &EvalSizes,
+    ) -> Result<Suite> {
+        let mut c4 = Corpus::new(CorpusKind::SynthC4, data::SEED_EVAL);
+        let mut wiki = Corpus::new(CorpusKind::SynthWiki, data::SEED_EVAL);
+        let mut rng = Rng::new(data::SEED_EVAL, 0xE7A1);
+        let boolq: Vec<_> = (0..sizes.boolq_items)
+            .map(|_| data::boolq_item(&self.vocab, &mut rng, pipe.cfg.seq))
+            .collect();
+        let mmlu: Vec<_> = (0..sizes.mmlu_items)
+            .map(|_| data::mmlu_item(&self.vocab, &mut rng, pipe.cfg.seq))
+            .collect();
+        Ok(Suite {
+            c4_ppl: crate::eval::perplexity(pipe, store, plan, &self.vocab, &mut c4, sizes.ppl_batches)?,
+            wiki_ppl: crate::eval::perplexity(pipe, store, plan, &self.vocab, &mut wiki, sizes.ppl_batches)?,
+            boolq_acc: crate::eval::choice_accuracy(pipe, store, plan, &boolq)?,
+            mmlu_acc: crate::eval::choice_accuracy(pipe, store, plan, &mmlu)?,
+        })
+    }
+
+    /// Persist a JSON experiment record under the run dir.
+    pub fn write_record(&self, name: &str, j: &Json) -> Result<PathBuf> {
+        let dir = self.root.join("records");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, j.to_string_pretty())?;
+        Ok(path)
+    }
+}
+
+fn report_rank(report: &CompressReport) -> usize {
+    report.weights.first().map(|w| w.rank).unwrap_or(16)
+}
+
+/// The default pretraining length used by all experiments (one-time,
+/// cached). Override with CURING_PRETRAIN_STEPS.
+pub fn default_pretrain_steps() -> usize {
+    std::env::var("CURING_PRETRAIN_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400)
+}
+
+/// Resolve an artifacts+runs context rooted at the repo (examples/benches
+/// run from the workspace root).
+pub fn open_ctx() -> Result<Ctx> {
+    Ctx::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_steps_env_override() {
+        // No env set in tests: default.
+        assert!(default_pretrain_steps() >= 1);
+    }
+
+    #[test]
+    fn suite_row_formats() {
+        let s = Suite { c4_ppl: 12.3, wiki_ppl: 45.6, boolq_acc: 0.75, mmlu_acc: 0.25 };
+        let r = s.row();
+        assert!(r.contains("12.30") && r.contains("0.750"));
+    }
+}

@@ -1,0 +1,364 @@
+//! DEIM-CUR decomposition — the paper's core algorithm (§3, §4.2).
+//!
+//! Pipeline per weight matrix:
+//!   1. an importance matrix `S` (WANDA: `|W| ⊙ activation norms`, or an
+//!      ablation variant from [`crate::wanda`]) is factorized by a
+//!      truncated SVD `S ≈ P Σ Q^T`;
+//!   2. DEIM picks exactly `r` row indices from `P` and `r` column
+//!      indices from `Q` (Sorensen & Embree 2016);
+//!   3. `C = W[:, q]`, `R = W[p, :]` are *actual* columns/rows of `W`,
+//!      and `U = C^+ W R^+` (Frobenius-optimal link, Stewart 1999).
+//!
+//! Also implements the paper's Eq. 2 rank rule and the Theorem 3.1 error
+//! constants `η_p = ‖(P[p,:])^{-1}‖₂`, `η_q = ‖(Q[:,q])^{-1}‖₂`.
+
+use crate::linalg::{jacobi_svd, lu_solve, pinv, rand_svd, Mat, Svd};
+use crate::util::Rng;
+use anyhow::{ensure, Result};
+
+/// Paper Eq. 2: the largest power of two below the parameter break-even
+/// point `(sqrt(m² + 6mn + n²) − (m + n)) / 2`, clamped by `r_max`.
+/// Powers of two keep MXU/accelerator tiles full.
+pub fn rank_rule(m: usize, n: usize, r_max: usize) -> usize {
+    let (mf, nf) = (m as f64, n as f64);
+    let breakeven = ((mf * mf + 6.0 * mf * nf + nf * nf).sqrt() - (mf + nf)) / 2.0;
+    if breakeven < 1.0 {
+        return 1.min(r_max);
+    }
+    let pow = breakeven.log2().floor() as u32;
+    let r = 1usize << pow;
+    r.min(r_max)
+}
+
+/// DEIM index selection from a matrix of leading singular vectors
+/// (rows = candidates, cols = vectors, importance-ordered).
+///
+/// Greedy interpolation: pick the largest entry of the first vector, then
+/// for each next vector subtract the interpolation through the already-
+/// picked rows and pick the largest residual. Returns exactly
+/// `v.cols` distinct indices.
+pub fn deim(v: &Mat) -> Result<Vec<usize>> {
+    let (n, r) = (v.rows, v.cols);
+    ensure!(r >= 1 && r <= n, "deim: need 1 <= r <= n (r={r}, n={n})");
+    let mut picked: Vec<usize> = Vec::with_capacity(r);
+    // First index: argmax |v[:, 0]|.
+    let c0 = v.col(0);
+    picked.push(argmax_abs(&c0));
+    for j in 1..r {
+        // Solve V[p, :j] c = v[p, j].
+        let mut a = Mat::zeros(j, j);
+        let mut b = vec![0.0; j];
+        for (ii, &pi) in picked.iter().enumerate() {
+            for jj in 0..j {
+                a[(ii, jj)] = v[(pi, jj)];
+            }
+            b[ii] = v[(pi, j)];
+        }
+        let c = lu_solve(&a, &b)?;
+        // Residual: v[:, j] - V[:, :j] c.
+        let mut res = v.col(j);
+        for (i, r_i) in res.iter_mut().enumerate() {
+            for (jj, &cj) in c.iter().enumerate() {
+                *r_i -= v[(i, jj)] * cj;
+            }
+        }
+        // Zero already-picked entries (they are exactly interpolated, but
+        // guard against float noise re-picking them).
+        for &pi in &picked {
+            res[pi] = 0.0;
+        }
+        picked.push(argmax_abs(&res));
+    }
+    Ok(picked)
+}
+
+fn argmax_abs(xs: &[f64]) -> usize {
+    let mut best = 0;
+    let mut bv = -1.0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.abs() > bv {
+            bv = x.abs();
+            best = i;
+        }
+    }
+    best
+}
+
+/// The CUR factors of one weight matrix, plus provenance.
+#[derive(Debug, Clone)]
+pub struct CurFactors {
+    pub c: Mat,            // m x r (columns of W)
+    pub u: Mat,            // r x r
+    pub r: Mat,            // r x n (rows of W)
+    pub row_idx: Vec<usize>, // p
+    pub col_idx: Vec<usize>, // q
+    /// σ_{r+1} of the *importance* matrix (first neglected singular
+    /// value), as estimated by the truncated SVD.
+    pub sigma_next: f64,
+}
+
+impl CurFactors {
+    /// Reconstruct the dense approximation `C U R` (tests/analysis only —
+    /// the deployed path never materializes this).
+    pub fn reconstruct(&self) -> Mat {
+        self.c.matmul(&self.u).matmul(&self.r)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.rows
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.c.rows * self.c.cols + self.u.rows * self.u.cols + self.r.rows * self.r.cols
+    }
+}
+
+/// Build CUR factors of `w` from explicit row/column indices:
+/// `C = W[:, q]`, `R = W[p, :]`, `U = C^+ W R^+`.
+pub fn cur_from_indices(w: &Mat, rows: &[usize], cols: &[usize]) -> CurFactors {
+    let c = w.select_cols(cols);
+    let r = w.select_rows(rows);
+    let u = pinv(&c).matmul(w).matmul(&pinv(&r));
+    CurFactors {
+        c,
+        u,
+        r,
+        row_idx: rows.to_vec(),
+        col_idx: cols.to_vec(),
+        sigma_next: f64::NAN,
+    }
+}
+
+/// Full DEIM-CUR of `w` guided by an `importance` matrix of the same
+/// shape (pass `w.abs()`-like scores, e.g. WANDA). `rank` must satisfy
+/// `rank <= min(m, n)`.
+pub fn cur_decompose(
+    w: &Mat,
+    importance: &Mat,
+    rank: usize,
+    rng: &mut Rng,
+) -> Result<CurFactors> {
+    ensure!(
+        importance.rows == w.rows && importance.cols == w.cols,
+        "importance shape mismatch"
+    );
+    let min_dim = w.rows.min(w.cols);
+    ensure!(rank >= 1 && rank <= min_dim, "rank {rank} out of range (min dim {min_dim})");
+    // Truncated SVD of the importance matrix. Ask for one extra value to
+    // report sigma_{r+1}.
+    let want = (rank + 1).min(min_dim);
+    let svd = svd_for_selection(importance, want, rng);
+    let p_vecs = take_cols(&svd.u, rank);
+    let q_vecs = take_cols(&svd.v, rank);
+    let rows = deim(&p_vecs)?;
+    let cols = deim(&q_vecs)?;
+    let mut factors = cur_from_indices(w, &rows, &cols);
+    factors.sigma_next = if svd.s.len() > rank { svd.s[rank] } else { 0.0 };
+    Ok(factors)
+}
+
+/// Exact SVD for small problems, randomized for large ones.
+fn svd_for_selection(s: &Mat, k: usize, rng: &mut Rng) -> Svd {
+    let min_dim = s.rows.min(s.cols);
+    if min_dim <= 96 {
+        jacobi_svd(s)
+    } else {
+        rand_svd(s, k, 8, 2, rng)
+    }
+}
+
+fn take_cols(m: &Mat, k: usize) -> Mat {
+    let idx: Vec<usize> = (0..k).collect();
+    m.select_cols(&idx)
+}
+
+/// Theorem 3.1 error constants for DEIM selections:
+/// `η_p = ‖(P[p, :])^{-1}‖₂ = 1/σ_min(P[p, :])` and likewise for q.
+pub fn deim_error_constants(p_vecs: &Mat, rows: &[usize], q_vecs: &Mat, cols: &[usize]) -> (f64, f64) {
+    let pp = p_vecs.select_rows(rows);
+    let qq = q_vecs.select_rows(cols); // Q[:, q] rows of V matrix = entries V[q, :]
+    let eta = |m: &Mat| -> f64 {
+        let svd = jacobi_svd(m);
+        let smin = svd.s.last().copied().unwrap_or(0.0);
+        if smin <= 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / smin
+        }
+    };
+    (eta(&pp), eta(&qq))
+}
+
+/// Approximation error report for one factorization.
+#[derive(Debug, Clone)]
+pub struct CurError {
+    pub fro: f64,
+    pub spectral: f64,
+    pub w_fro: f64,
+    pub cur_fro: f64,
+}
+
+pub fn approx_error(w: &Mat, f: &CurFactors, rng: &mut Rng) -> CurError {
+    let rec = f.reconstruct();
+    let diff = w.sub(&rec);
+    CurError {
+        fro: diff.fro_norm(),
+        spectral: diff.spectral_norm(rng),
+        w_fro: w.fro_norm(),
+        cur_fro: rec.fro_norm(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_rule_paper_values() {
+        // Llama3.1-8B W^Q: 4096x4096 -> breakeven 1696 -> 1024, clamped 256.
+        assert_eq!(rank_rule(4096, 4096, 256), 256);
+        assert_eq!(rank_rule(4096, 4096, 4096), 1024);
+        // tiny attention 256x256 -> 64; gate 256x704 -> 128.
+        assert_eq!(rank_rule(256, 256, 256), 64);
+        assert_eq!(rank_rule(256, 704, 256), 128);
+        // r_max clamps.
+        assert_eq!(rank_rule(256, 256, 16), 16);
+    }
+
+    #[test]
+    fn rank_rule_always_break_even() {
+        // The CUR parameter count must beat dense whenever the rule fires.
+        let mut rng = Rng::new(0, 0);
+        for _ in 0..200 {
+            let m = 8 + rng.below(600);
+            let n = 8 + rng.below(600);
+            let r = rank_rule(m, n, usize::MAX);
+            if r >= 1 {
+                assert!(
+                    m * r + r * r + r * n <= m * n,
+                    "rank rule violates break-even: m={m} n={n} r={r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn deim_distinct_in_range() {
+        let mut rng = Rng::new(1, 0);
+        for _ in 0..20 {
+            let n = 10 + rng.below(80);
+            let r = 1 + rng.below(9.min(n - 1));
+            let a = Mat::random_normal(n, r, &mut rng);
+            let idx = deim(&a).unwrap();
+            assert_eq!(idx.len(), r);
+            let mut s = idx.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), r, "duplicate deim indices");
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn deim_picks_obvious_rows() {
+        // Identity-like singular vectors: DEIM must pick the peaks.
+        let mut v = Mat::zeros(6, 2);
+        v[(3, 0)] = 1.0;
+        v[(1, 1)] = 1.0;
+        let idx = deim(&v).unwrap();
+        assert_eq!(idx, vec![3, 1]);
+    }
+
+    #[test]
+    fn cur_exact_on_low_rank() {
+        // If rank(W) = r, DEIM-CUR at rank r is exact.
+        let mut rng = Rng::new(2, 0);
+        let b = Mat::random_normal(40, 4, &mut rng);
+        let c = Mat::random_normal(4, 30, &mut rng);
+        let w = b.matmul(&c);
+        let f = cur_decompose(&w, &w, 4, &mut rng).unwrap();
+        let err = f.reconstruct().sub(&w).fro_norm();
+        assert!(err < 1e-8 * w.fro_norm(), "err={err}");
+    }
+
+    #[test]
+    fn cur_error_bound_theorem() {
+        // ||W - CUR||_2 <= (eta_p + eta_q) sigma_{r+1}, selection on W itself.
+        let mut rng = Rng::new(3, 0);
+        for trial in 0..5 {
+            let w = Mat::random_normal(30, 24, &mut rng);
+            let r = 6;
+            let svd = jacobi_svd(&w);
+            let p_vecs = take_cols(&svd.u, r);
+            let q_vecs = take_cols(&svd.v, r);
+            let rows = deim(&p_vecs).unwrap();
+            let cols = deim(&q_vecs).unwrap();
+            let f = cur_from_indices(&w, &rows, &cols);
+            let (eta_p, eta_q) = deim_error_constants(&p_vecs, &rows, &q_vecs, &cols);
+            let err2 = w.sub(&f.reconstruct()).spectral_norm(&mut rng);
+            let bound = (eta_p + eta_q) * svd.s[r];
+            assert!(
+                err2 <= bound * 1.0001,
+                "trial {trial}: spectral err {err2} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn cur_uses_actual_rows_cols() {
+        // Interpretability claim: C and R are verbatim slices of W.
+        let mut rng = Rng::new(4, 0);
+        let w = Mat::random_normal(20, 16, &mut rng);
+        let f = cur_decompose(&w, &w, 5, &mut rng).unwrap();
+        for (jj, &j) in f.col_idx.iter().enumerate() {
+            for i in 0..w.rows {
+                assert_eq!(f.c[(i, jj)], w[(i, j)]);
+            }
+        }
+        for (ii, &i) in f.row_idx.iter().enumerate() {
+            for j in 0..w.cols {
+                assert_eq!(f.r[(ii, j)], w[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn cur_nonnegativity_preserved() {
+        // If W >= 0, C and R are >= 0 (paper §3.2: property preservation).
+        let mut rng = Rng::new(5, 0);
+        let mut w = Mat::random_normal(24, 18, &mut rng);
+        for x in &mut w.data {
+            *x = x.abs();
+        }
+        let f = cur_decompose(&w, &w, 4, &mut rng).unwrap();
+        assert!(f.c.data.iter().all(|&x| x >= 0.0));
+        assert!(f.r.data.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn u_is_frobenius_optimal() {
+        // U = C^+ W R^+ minimizes ||W - C U R||_F over U: perturbing U
+        // must not reduce the error.
+        let mut rng = Rng::new(6, 0);
+        let w = Mat::random_normal(18, 14, &mut rng);
+        let f = cur_decompose(&w, &w, 5, &mut rng).unwrap();
+        let base = w.sub(&f.reconstruct()).fro_norm();
+        for _ in 0..10 {
+            let mut fu = f.clone();
+            let i = rng.below(5);
+            let j = rng.below(5);
+            fu.u[(i, j)] += 0.01;
+            let perturbed = w.sub(&fu.reconstruct()).fro_norm();
+            assert!(perturbed >= base - 1e-9, "perturbed {perturbed} < base {base}");
+        }
+    }
+
+    #[test]
+    fn param_count_matches_rank_formula() {
+        let mut rng = Rng::new(7, 0);
+        let w = Mat::random_normal(50, 30, &mut rng);
+        let f = cur_decompose(&w, &w, 8, &mut rng).unwrap();
+        assert_eq!(f.param_count(), 50 * 8 + 8 * 8 + 8 * 30);
+        assert_eq!(f.rank(), 8);
+    }
+}

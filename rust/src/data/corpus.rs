@@ -1,0 +1,224 @@
+//! Synthetic corpora standing in for C4 (calibration/healing) and
+//! WikiText2 (distribution-shifted eval) — see DESIGN.md §2.
+//!
+//! Sentences come from topic-conditioned templates filled from the word
+//! banks; the two corpora differ in topic mixture and template register,
+//! which is exactly the property the experiments need: a model pretrained
+//! on `synth-c4` sees `synth-wiki` as a shifted (higher-perplexity)
+//! distribution, so healing-on-c4 vs forgetting-on-wiki dynamics mirror
+//! the paper's C4/WikiText2 split.
+
+use super::vocab::{Vocab, BOS, TOPICS};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusKind {
+    /// Diverse informal mixture — the paper's C4 stand-in.
+    SynthC4,
+    /// Formal register, skewed topics — the WikiText2 stand-in.
+    SynthWiki,
+}
+
+impl CorpusKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CorpusKind::SynthC4 => "synth-c4",
+            CorpusKind::SynthWiki => "synth-wiki",
+        }
+    }
+
+    /// Topic mixture weights (index-aligned with `vocab::TOPICS`).
+    fn topic_weights(&self) -> [f32; 6] {
+        match self {
+            // c4: everything, slightly tilted to tech/cooking/sports chatter.
+            CorpusKind::SynthC4 => [1.0, 1.4, 1.4, 1.5, 1.0, 0.7],
+            // wiki: encyclopedic — history/science/nature heavy.
+            CorpusKind::SynthWiki => [1.6, 0.4, 0.3, 0.7, 1.4, 1.9],
+        }
+    }
+}
+
+/// Sentence templates. `N`/`V`/`A` draw from the current topic bank;
+/// lowercase literals are function words.
+const CASUAL_TEMPLATES: &[&[&str]] = &[
+    &["the", "N", "V", "the", "A", "N", "."],
+    &["a", "A", "N", "V", "with", "a", "N", "."],
+    &["this", "N", "is", "very", "A", "and", "it", "V", "often", "."],
+    &["some", "N", "V", "before", "the", "N", "."],
+    &["the", "A", "N", "never", "V", "but", "the", "N", "V", "."],
+    &["many", "N", "V", "during", "the", "A", "N", "."],
+    &["it", "is", "the", "N", "that", "V", "the", "N", "."],
+];
+
+const FORMAL_TEMPLATES: &[&[&str]] = &[
+    &["the", "N", "of", "the", "A", "N", "V", "within", "the", "N", "."],
+    &["moreover", ",", "the", "A", "N", "V", "against", "the", "N", "."],
+    &["the", "N", ",", "which", "V", "during", "this", "era", ",", "is", "A", "."],
+    &["therefore", "the", "N", "V", ";", "the", "N", "is", "A", "."],
+    &["between", "the", "N", "and", "the", "N", ",", "the", "A", "N", "V", "."],
+];
+
+/// Deterministic streaming corpus generator.
+pub struct Corpus {
+    pub kind: CorpusKind,
+    rng: Rng,
+}
+
+impl Corpus {
+    /// `seed` selects the split: use distinct seeds for calibration,
+    /// healing and eval so they never overlap (paper §5 requires this).
+    pub fn new(kind: CorpusKind, seed: u64) -> Corpus {
+        let stream = match kind {
+            CorpusKind::SynthC4 => 0xc4,
+            CorpusKind::SynthWiki => 0x111,
+        };
+        Corpus { kind, rng: Rng::new(seed, stream) }
+    }
+
+    /// One sentence as a word string.
+    pub fn sentence(&mut self) -> String {
+        let weights = self.kind.topic_weights();
+        let t = self.rng.choice_weighted(&weights);
+        let (_, nouns, verbs, adjs) = TOPICS[t];
+        let templates = match self.kind {
+            CorpusKind::SynthC4 => CASUAL_TEMPLATES,
+            CorpusKind::SynthWiki => FORMAL_TEMPLATES,
+        };
+        let tpl = templates[self.rng.below(templates.len())];
+        let mut out = Vec::with_capacity(tpl.len());
+        for &slot in tpl {
+            let w = match slot {
+                "N" => nouns[self.rng.below(nouns.len())],
+                "V" => verbs[self.rng.below(verbs.len())],
+                "A" => adjs[self.rng.below(adjs.len())],
+                lit => lit,
+            };
+            out.push(w);
+        }
+        out.join(" ")
+    }
+
+    /// A full token sequence of exactly `seq` tokens: `<bos>` + sentences.
+    pub fn sequence(&mut self, vocab: &Vocab, seq: usize) -> Vec<i32> {
+        let mut toks = vec![BOS];
+        while toks.len() < seq {
+            toks.extend(vocab.encode(&self.sentence()));
+        }
+        toks.truncate(seq);
+        toks
+    }
+
+    /// A batch of `(tokens, targets)` pairs, each `seq` long; targets are
+    /// tokens shifted left by one (next-token prediction).
+    pub fn batch(&mut self, vocab: &Vocab, batch: usize, seq: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let s = self.sequence(vocab, seq + 1);
+            tokens.extend_from_slice(&s[..seq]);
+            targets.extend_from_slice(&s[1..seq + 1]);
+        }
+        (tokens, targets)
+    }
+
+    /// Pretraining batch: a mixture of corpus text and task-format
+    /// sequences (QA / multiple-choice / paraphrase templates) so the
+    /// model learns the answer formats the evaluation suite probes —
+    /// mirroring how web corpora expose real LLMs to QA text.
+    pub fn batch_mixed(
+        &mut self,
+        vocab: &Vocab,
+        batch: usize,
+        seq: usize,
+        task_fraction: f32,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let s = if self.rng.f32() < task_fraction {
+                let mut s = super::tasks::task_sequence(vocab, &mut self.rng, seq + 1);
+                debug_assert_eq!(s.len(), seq + 1);
+                s.truncate(seq + 1);
+                s
+            } else {
+                self.sequence(vocab, seq + 1)
+            };
+            tokens.extend_from_slice(&s[..seq]);
+            targets.extend_from_slice(&s[1..seq + 1]);
+        }
+        (tokens, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::UNK;
+
+    #[test]
+    fn sentences_fully_in_vocab() {
+        let v = Vocab::build();
+        for kind in [CorpusKind::SynthC4, CorpusKind::SynthWiki] {
+            let mut c = Corpus::new(kind, 7);
+            for _ in 0..50 {
+                let s = c.sentence();
+                let ids = v.encode(&s);
+                assert!(!ids.contains(&UNK), "OOV in: {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_exact_length_and_bos() {
+        let v = Vocab::build();
+        let mut c = Corpus::new(CorpusKind::SynthC4, 1);
+        let s = c.sequence(&v, 64);
+        assert_eq!(s.len(), 64);
+        assert_eq!(s[0], BOS);
+    }
+
+    #[test]
+    fn batch_targets_are_shifted() {
+        let v = Vocab::build();
+        let mut c = Corpus::new(CorpusKind::SynthC4, 2);
+        let (toks, tgts) = c.batch(&v, 4, 32);
+        assert_eq!(toks.len(), 4 * 32);
+        for b in 0..4 {
+            for i in 0..31 {
+                assert_eq!(toks[b * 32 + i + 1], tgts[b * 32 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn corpora_are_distributionally_different() {
+        // Unigram distributions of the two corpora must differ noticeably.
+        let v = Vocab::build();
+        let count = |kind| {
+            let mut c = Corpus::new(kind, 3);
+            let mut hist = vec![0f64; v.len()];
+            for _ in 0..200 {
+                for id in v.encode(&c.sentence()) {
+                    hist[id as usize] += 1.0;
+                }
+            }
+            let total: f64 = hist.iter().sum();
+            hist.iter().map(|x| x / total).collect::<Vec<_>>()
+        };
+        let a = count(CorpusKind::SynthC4);
+        let b = count(CorpusKind::SynthWiki);
+        let l1: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(l1 > 0.3, "corpora too similar: L1={l1}");
+    }
+
+    #[test]
+    fn seeds_give_disjoint_streams() {
+        let v = Vocab::build();
+        let mut a = Corpus::new(CorpusKind::SynthC4, 1);
+        let mut b = Corpus::new(CorpusKind::SynthC4, 2);
+        let sa: Vec<String> = (0..10).map(|_| a.sentence()).collect();
+        let sb: Vec<String> = (0..10).map(|_| b.sentence()).collect();
+        assert_ne!(sa, sb);
+        let _ = v;
+    }
+}

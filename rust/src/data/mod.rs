@@ -1,0 +1,17 @@
+//! Data substrate: vocabulary/tokenizer, synthetic corpora (C4/WikiText2
+//! stand-ins) and the evaluation/fine-tuning tasks.
+
+pub mod corpus;
+pub mod tasks;
+pub mod vocab;
+
+pub use corpus::{Corpus, CorpusKind};
+pub use tasks::{boolq_item, mmlu_item, mrpc_item, uuid_item, uuid_pairs, ChoiceItem, TrainItem};
+pub use vocab::Vocab;
+
+/// Canonical split seeds (paper: calibration, healing and eval data must
+/// not overlap).
+pub const SEED_CALIB: u64 = 1001;
+pub const SEED_HEAL: u64 = 2002;
+pub const SEED_EVAL: u64 = 3003;
+pub const SEED_PRETRAIN: u64 = 4004;

@@ -1,0 +1,281 @@
+//! Synthetic evaluation/fine-tuning tasks mirroring the paper's suite:
+//!
+//! * `boolq`  — yes/no questions about generated facts (BoolQ stand-in,
+//!   random baseline 0.5);
+//! * `mmlu`   — 4-choice questions answered by a letter (MMLU stand-in,
+//!   random baseline 0.25);
+//! * `mrpc`   — paraphrase detection pairs for the Fig. 6 forgetting
+//!   experiment;
+//! * `uuid`   — the paper's exact UUID→UUID memorization task (Fig. 7,
+//!   App. B prompt format), char-level.
+//!
+//! Every task instance is a token sequence plus the index of the answer
+//! position(s), so choice scoring = comparing forced-answer NLL.
+
+use super::vocab::{Vocab, BOS, TOPICS};
+use crate::util::Rng;
+
+/// A scored-choice task instance: context is teacher-forced; each choice
+/// is a candidate continuation starting at `answer_pos`.
+#[derive(Debug, Clone)]
+pub struct ChoiceItem {
+    /// Full token sequence including the *gold* answer filled in.
+    pub tokens: Vec<i32>,
+    /// Position of the answer token (targets index).
+    pub answer_pos: usize,
+    /// Candidate answer token ids; `gold` indexes into this.
+    pub choices: Vec<i32>,
+    pub gold: usize,
+}
+
+/// A fine-tuning instance: sequence + per-position loss mask over the
+/// answer span.
+#[derive(Debug, Clone)]
+pub struct TrainItem {
+    pub tokens: Vec<i32>,
+    /// Mask aligned with *targets* (tokens shifted by one).
+    pub loss_mask: Vec<f32>,
+}
+
+/// BoolQ-like: state a fact, ask about it; half the questions negate the
+/// attribute. "the atom is stable . question : is the atom stable ?
+/// answer : yes"
+pub fn boolq_item(vocab: &Vocab, rng: &mut Rng, seq: usize) -> ChoiceItem {
+    let (_, nouns, _, adjs) = TOPICS[rng.below(TOPICS.len())];
+    let noun = nouns[rng.below(nouns.len())];
+    let adj_true = adjs[rng.below(adjs.len())];
+    let mut adj_asked = adj_true;
+    let is_yes = rng.below(2) == 0;
+    if !is_yes {
+        // Ask about a different attribute.
+        loop {
+            let a = adjs[rng.below(adjs.len())];
+            if a != adj_true {
+                adj_asked = a;
+                break;
+            }
+        }
+    }
+    let answer = if is_yes { "yes" } else { "no" };
+    let text = format!(
+        "the {noun} is {adj_true} . question : is the {noun} {adj_asked} ? answer : {answer}"
+    );
+    let mut tokens = vec![BOS];
+    tokens.extend(vocab.encode(&text));
+    let answer_pos = tokens.len() - 2; // target index of the answer token
+    pad_or_trim(&mut tokens, seq);
+    let choices = vec![vocab.id("yes"), vocab.id("no")];
+    ChoiceItem { tokens, answer_pos, choices, gold: if is_yes { 0 } else { 1 } }
+}
+
+/// MMLU-like 4-choice: "question : which N V ? ( a ) N ( b ) N ( c ) N
+/// ( d ) N answer : b".
+pub fn mmlu_item(vocab: &Vocab, rng: &mut Rng, seq: usize) -> ChoiceItem {
+    let (_, nouns, verbs, adjs) = TOPICS[rng.below(TOPICS.len())];
+    let verb = verbs[rng.below(verbs.len())];
+    let adj = adjs[rng.below(adjs.len())];
+    // Four distinct option nouns; the "correct" one is the one stated in
+    // the context sentence.
+    let opts = rng.sample_distinct(nouns.len(), 4.min(nouns.len()));
+    let gold = rng.below(4);
+    let letters = ["a", "b", "c", "d"];
+    let mut text = format!("the {} {} and is {} . question : which {} ", nouns[opts[gold]], verb, adj, verb);
+    text.push('?');
+    for (i, &o) in opts.iter().enumerate() {
+        text.push_str(&format!(" ( {} ) {}", letters[i], nouns[o]));
+    }
+    text.push_str(&format!(" answer : {}", letters[gold]));
+    let mut tokens = vec![BOS];
+    tokens.extend(vocab.encode(&text));
+    let answer_pos = tokens.len() - 2;
+    pad_or_trim(&mut tokens, seq);
+    let choices = letters.iter().map(|l| vocab.id(l)).collect();
+    ChoiceItem { tokens, answer_pos, choices, gold }
+}
+
+/// MRPC-like paraphrase pair for fine-tuning + accuracy eval. Positive
+/// pairs restate the same (noun, adj) with a different template; negative
+/// pairs change the attribute or subject.
+pub fn mrpc_item(vocab: &Vocab, rng: &mut Rng, seq: usize) -> (ChoiceItem, TrainItem) {
+    let (_, nouns, _, adjs) = TOPICS[rng.below(TOPICS.len())];
+    let noun = nouns[rng.below(nouns.len())];
+    let adj = adjs[rng.below(adjs.len())];
+    let positive = rng.below(2) == 0;
+    let (noun2, adj2) = if positive {
+        (noun, adj)
+    } else if rng.below(2) == 0 {
+        (nouns[rng.below(nouns.len())], adj)
+    } else {
+        (noun, adjs[rng.below(adjs.len())])
+    };
+    // A "negative" that accidentally sampled identical words is positive.
+    let actually_pos = noun2 == noun && adj2 == adj;
+    let answer = if actually_pos { "yes" } else { "no" };
+    let text = format!(
+        "first : the {noun} is {adj} . second : this {noun2} is very {adj2} . paraphrase : {answer}"
+    );
+    let mut tokens = vec![BOS];
+    tokens.extend(vocab.encode(&text));
+    let answer_pos = tokens.len() - 2;
+    pad_or_trim(&mut tokens, seq);
+    let choices = vec![vocab.id("yes"), vocab.id("no")];
+    let item = ChoiceItem {
+        tokens: tokens.clone(),
+        answer_pos,
+        choices,
+        gold: if actually_pos { 0 } else { 1 },
+    };
+    let mut mask = vec![0.0f32; seq];
+    if answer_pos < seq {
+        mask[answer_pos] = 1.0;
+    }
+    (item, TrainItem { tokens, loss_mask: mask })
+}
+
+/// One random UUID string (hex 8-4-4-4-12) from our RNG.
+pub fn uuid_string(rng: &mut Rng) -> String {
+    const HEXC: &[u8] = b"0123456789abcdef";
+    let mut s = String::with_capacity(36);
+    for (i, group) in [8usize, 4, 4, 4, 12].iter().enumerate() {
+        if i > 0 {
+            s.push('-');
+        }
+        for _ in 0..*group {
+            s.push(HEXC[rng.below(16)] as char);
+        }
+    }
+    s
+}
+
+/// The paper's UUID→UUID pair task (App. B):
+/// "given this uuid : <in> the corresponding uuid is : <out>", char-level
+/// for the UUIDs. Loss mask covers the output UUID chars.
+pub fn uuid_item(vocab: &Vocab, input: &str, output: &str, seq: usize) -> TrainItem {
+    let mut tokens = vec![BOS];
+    tokens.extend(vocab.encode("given this uuid :"));
+    tokens.extend(vocab.encode_chars(input));
+    tokens.extend(vocab.encode("the corresponding uuid is :"));
+    let out_start = tokens.len();
+    tokens.extend(vocab.encode_chars(output));
+    let out_end = tokens.len();
+    let mut mask = vec![0.0f32; seq];
+    // Mask on targets: predicting token at position i+1 from position i.
+    for i in out_start..out_end {
+        if i >= 1 && i - 1 < seq {
+            mask[i - 1] = 1.0;
+        }
+    }
+    pad_or_trim(&mut tokens, seq);
+    TrainItem { tokens, loss_mask: mask }
+}
+
+/// The fixed 1,024-pair UUID mapping (paper uses 1,024 pairs).
+pub fn uuid_pairs(n: usize, seed: u64) -> Vec<(String, String)> {
+    let mut rng = Rng::new(seed, 0x7575_6964); // "uuid" stream tag
+    (0..n).map(|_| (uuid_string(&mut rng), uuid_string(&mut rng))).collect()
+}
+
+/// A seq-length token stream of concatenated task-format items (boolq /
+/// mmlu / mrpc), used to mix instruction formats into *pretraining* so
+/// the forced-choice evaluations are meaningful (the paper's base models
+/// saw QA formats in their corpora; our synthetic C4 must too).
+pub fn task_sequence(vocab: &Vocab, rng: &mut Rng, seq: usize) -> Vec<i32> {
+    let mut toks = vec![super::vocab::BOS];
+    while toks.len() < seq {
+        let kind = rng.below(3);
+        let item_toks = match kind {
+            0 => boolq_item(vocab, rng, seq).tokens,
+            1 => mmlu_item(vocab, rng, seq).tokens,
+            _ => mrpc_item(vocab, rng, seq).0.tokens,
+        };
+        // Strip bos + padding before splicing.
+        let end = item_toks
+            .iter()
+            .rposition(|&t| t != super::vocab::PAD)
+            .map(|i| i + 1)
+            .unwrap_or(item_toks.len());
+        toks.extend_from_slice(&item_toks[1..end]);
+    }
+    toks.truncate(seq);
+    toks
+}
+
+fn pad_or_trim(tokens: &mut Vec<i32>, seq: usize) {
+    tokens.truncate(seq);
+    while tokens.len() < seq {
+        tokens.push(super::vocab::PAD);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::vocab::UNK;
+
+    #[test]
+    fn boolq_wellformed() {
+        let v = Vocab::build();
+        let mut rng = Rng::new(1, 0);
+        for _ in 0..50 {
+            let it = boolq_item(&v, &mut rng, 64);
+            assert_eq!(it.tokens.len(), 64);
+            assert!(!it.tokens.contains(&UNK));
+            assert_eq!(it.choices.len(), 2);
+            // Gold answer token actually sits at answer_pos + 1.
+            assert_eq!(it.tokens[it.answer_pos + 1], it.choices[it.gold]);
+        }
+    }
+
+    #[test]
+    fn mmlu_wellformed() {
+        let v = Vocab::build();
+        let mut rng = Rng::new(2, 0);
+        for _ in 0..50 {
+            let it = mmlu_item(&v, &mut rng, 64);
+            assert_eq!(it.choices.len(), 4);
+            assert!(it.gold < 4);
+            assert_eq!(it.tokens[it.answer_pos + 1], it.choices[it.gold]);
+            assert!(!it.tokens.contains(&UNK));
+        }
+    }
+
+    #[test]
+    fn mrpc_label_consistency() {
+        let v = Vocab::build();
+        let mut rng = Rng::new(3, 0);
+        let (mut yes, mut no) = (0, 0);
+        for _ in 0..100 {
+            let (item, train) = mrpc_item(&v, &mut rng, 64);
+            assert_eq!(item.tokens, train.tokens);
+            assert_eq!(train.loss_mask.iter().filter(|&&m| m > 0.0).count(), 1);
+            if item.gold == 0 {
+                yes += 1;
+            } else {
+                no += 1;
+            }
+        }
+        assert!(yes > 20 && no > 20, "labels unbalanced: {yes}/{no}");
+    }
+
+    #[test]
+    fn uuid_format_and_mask() {
+        let v = Vocab::build();
+        let mut rng = Rng::new(4, 0);
+        let u = uuid_string(&mut rng);
+        assert_eq!(u.len(), 36);
+        assert_eq!(u.matches('-').count(), 4);
+        let pairs = uuid_pairs(8, 42);
+        assert_eq!(pairs.len(), 8);
+        let item = uuid_item(&v, &pairs[0].0, &pairs[0].1, 128);
+        assert_eq!(item.tokens.len(), 128);
+        assert!(!item.tokens.contains(&UNK));
+        // 36 masked target positions (the output uuid chars).
+        assert_eq!(item.loss_mask.iter().filter(|&&m| m > 0.0).count(), 36);
+    }
+
+    #[test]
+    fn uuid_pairs_deterministic() {
+        assert_eq!(uuid_pairs(4, 9), uuid_pairs(4, 9));
+        assert_ne!(uuid_pairs(4, 9), uuid_pairs(4, 10));
+    }
+}

@@ -1,0 +1,203 @@
+//! Vocabulary + word-level tokenizer for the synthetic corpora.
+//!
+//! The vocabulary is fixed and deterministic (it must fit the AOT model's
+//! embedding table exactly): special tokens, punctuation, answer/choice
+//! words, hex characters for the UUID task, and a topical word bank used
+//! by the corpus generators.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const UNK: i32 = 3;
+
+/// Topic word banks: (topic name, nouns, verbs, adjectives).
+pub const TOPICS: &[(&str, &[&str], &[&str], &[&str])] = &[
+    (
+        "science",
+        &["atom", "cell", "energy", "photon", "theory", "experiment", "molecule", "gene",
+          "neuron", "galaxy", "enzyme", "electron", "fossil", "orbit", "quantum", "vaccine"],
+        &["reacts", "evolves", "decays", "absorbs", "emits", "mutates", "accelerates", "binds"],
+        &["stable", "radioactive", "organic", "microscopic", "massive", "charged", "ancient"],
+    ),
+    (
+        "sports",
+        &["team", "player", "match", "goal", "season", "coach", "league", "stadium",
+          "record", "tournament", "defense", "striker", "referee", "trophy"],
+        &["wins", "scores", "defends", "trains", "competes", "loses", "celebrates", "passes"],
+        &["fast", "strong", "undefeated", "young", "veteran", "injured", "brilliant"],
+    ),
+    (
+        "cooking",
+        &["recipe", "sauce", "oven", "flavor", "bread", "butter", "garlic", "spice",
+          "kitchen", "dough", "dish", "onion", "pepper", "flour"],
+        &["simmers", "bakes", "melts", "rises", "burns", "blends", "tastes", "cools"],
+        &["fresh", "spicy", "sweet", "crispy", "tender", "bitter", "golden"],
+    ),
+    (
+        "tech",
+        &["server", "network", "compiler", "kernel", "algorithm", "database", "protocol",
+          "cache", "processor", "software", "cluster", "packet", "thread", "memory"],
+        &["computes", "crashes", "scales", "compiles", "encrypts", "routes", "executes", "syncs"],
+        &["distributed", "parallel", "secure", "efficient", "legacy", "virtual", "fault-tolerant"],
+    ),
+    (
+        "nature",
+        &["forest", "river", "mountain", "storm", "ocean", "valley", "glacier", "desert",
+          "meadow", "island", "canyon", "volcano", "reef", "tundra"],
+        &["flows", "erodes", "erupts", "freezes", "blooms", "migrates", "drifts", "grows"],
+        &["vast", "remote", "frozen", "tropical", "arid", "lush", "deep"],
+    ),
+    (
+        "history",
+        &["empire", "treaty", "dynasty", "revolution", "kingdom", "archive", "monument",
+          "senate", "frontier", "colony", "manuscript", "fortress", "republic", "era"],
+        &["collapses", "expands", "declares", "conquers", "reforms", "endures", "signs", "falls"],
+        &["medieval", "ancient", "colonial", "imperial", "feudal", "modern", "forgotten"],
+    ),
+];
+
+pub const FUNCTION_WORDS: &[&str] = &[
+    "the", "a", "an", "of", "in", "on", "and", "or", "but", "with", "by", "for", "to",
+    "is", "are", "was", "were", "has", "have", "had", "will", "can", "must", "may",
+    "this", "that", "these", "those", "it", "its", "as", "at", "from", "into", "over",
+    "under", "between", "after", "before", "while", "when", "where", "which", "who",
+    "not", "no", "very", "more", "most", "some", "many", "few", "each", "every", "both",
+    "often", "rarely", "always", "never", "usually", "then", "thus", "therefore",
+    "however", "moreover", "because", "although", "during", "within", "against",
+];
+
+pub const PUNCT: &[&str] = &[".", ",", "?", ":", ";", "(", ")", "-"];
+
+pub const ANSWER_WORDS: &[&str] =
+    &["yes", "no", "true", "false", "question", "answer", "paraphrase", "sentence",
+      "choice", "correct", "given", "corresponding", "uuid", "same", "different",
+      "means", "compare", "first", "second", "passage", "color", "size", "number"];
+
+pub const HEX: &[&str] = &["0", "1", "2", "3", "4", "5", "6", "7", "8", "9",
+                           "a", "b", "c", "d", "e", "f"];
+
+/// The fixed tokenizer. Token ids are stable across runs (vocabulary is
+/// built in deterministic order) and must stay below the model's vocab.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: HashMap<String, i32>,
+}
+
+impl Vocab {
+    pub fn build() -> Vocab {
+        let mut words: Vec<String> =
+            vec!["<pad>".into(), "<bos>".into(), "<eos>".into(), "<unk>".into()];
+        let push = |w: &str, words: &mut Vec<String>| {
+            if !words.iter().any(|x| x == w) {
+                words.push(w.to_string());
+            }
+        };
+        for p in PUNCT {
+            push(p, &mut words);
+        }
+        for w in ANSWER_WORDS {
+            push(w, &mut words);
+        }
+        for h in HEX {
+            push(h, &mut words);
+        }
+        for w in FUNCTION_WORDS {
+            push(w, &mut words);
+        }
+        for (_, nouns, verbs, adjs) in TOPICS {
+            for w in nouns.iter().chain(verbs.iter()).chain(adjs.iter()) {
+                push(w, &mut words);
+            }
+        }
+        let index =
+            words.iter().enumerate().map(|(i, w)| (w.clone(), i as i32)).collect();
+        Vocab { words, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn id(&self, word: &str) -> i32 {
+        *self.index.get(word).unwrap_or(&UNK)
+    }
+
+    pub fn word(&self, id: i32) -> &str {
+        self.words.get(id as usize).map(|s| s.as_str()).unwrap_or("<unk>")
+    }
+
+    /// Tokenize whitespace-separated text (words must be pre-normalized;
+    /// the generators only emit in-vocabulary words).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter().map(|&i| self.word(i)).collect::<Vec<_>>().join(" ")
+    }
+
+    /// Encode a UUID string character-by-character (hex digits + '-').
+    pub fn encode_chars(&self, s: &str) -> Vec<i32> {
+        s.chars().map(|c| self.id(&c.to_string())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_model_embedding() {
+        let v = Vocab::build();
+        assert!(v.len() <= 512, "vocab {} exceeds tiny model embedding", v.len());
+        assert!(v.len() >= 250, "vocab suspiciously small: {}", v.len());
+    }
+
+    #[test]
+    fn specials_are_fixed() {
+        let v = Vocab::build();
+        assert_eq!(v.id("<pad>"), PAD);
+        assert_eq!(v.id("<bos>"), BOS);
+        assert_eq!(v.id("<eos>"), EOS);
+        assert_eq!(v.id("<unk>"), UNK);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let v = Vocab::build();
+        let text = "the atom reacts with the molecule .";
+        let ids = v.encode(text);
+        assert!(ids.iter().all(|&i| i != UNK));
+        assert_eq!(v.decode(&ids), text);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = Vocab::build();
+        assert_eq!(v.encode("zzzunknownzzz"), vec![UNK]);
+    }
+
+    #[test]
+    fn uuid_chars_in_vocab() {
+        let v = Vocab::build();
+        let ids = v.encode_chars("3f2a-9b");
+        assert!(ids.iter().all(|&i| i != UNK));
+        assert_eq!(ids.len(), 7);
+    }
+
+    #[test]
+    fn deterministic_ids() {
+        let a = Vocab::build();
+        let b = Vocab::build();
+        for w in ["atom", "yes", "the", "f", "."] {
+            assert_eq!(a.id(w), b.id(w));
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! Evaluation: perplexity, forced-choice accuracy, char-level accuracy,
+//! and the Table 6 activation-norm analysis.
+//!
+//! Two forward paths:
+//! * the per-layer [`Pipeline`] (dense or ΔU-cured models);
+//! * the switched full-model logits artifacts for PEFT-adapted models
+//!   (`model_logits_switched_{du,lora,mora,curlora}`).
+
+use crate::data::ChoiceItem;
+use crate::data::{Corpus, Vocab};
+use crate::linalg::Mat;
+use crate::pipeline::{LayerPlan, Pipeline};
+use crate::runtime::Bindings;
+use crate::tensor::{Tensor, TensorStore};
+use anyhow::{ensure, Context, Result};
+
+/// Mean per-token NLL over `n_batches` from `corpus`; ppl = exp(nll).
+pub fn perplexity(
+    pipe: &Pipeline,
+    store: &TensorStore,
+    plan: &LayerPlan,
+    vocab: &Vocab,
+    corpus: &mut Corpus,
+    n_batches: usize,
+) -> Result<f64> {
+    let cfg = &pipe.cfg;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..n_batches {
+        let (toks, tgts) = corpus.batch(vocab, cfg.batch, cfg.seq);
+        let tokens = Tensor::from_i32(&[cfg.batch, cfg.seq], toks);
+        let targets = Tensor::from_i32(&[cfg.batch, cfg.seq], tgts);
+        let nll = pipe.nll(store, plan, &tokens, &targets)?;
+        for &x in nll.f32s()? {
+            total += x as f64;
+            count += 1;
+        }
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Pack choice items into model batches; returns padded token tensors and
+/// the originating item index of each row.
+fn pack_items(items: &[ChoiceItem], batch: usize, seq: usize) -> Vec<(Tensor, Vec<usize>)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < items.len() {
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut idx = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let j = (i + b).min(items.len() - 1); // pad with last item
+            toks.extend_from_slice(&items[j].tokens);
+            idx.push(j);
+        }
+        out.push((Tensor::from_i32(&[batch, seq], toks), idx));
+        i += batch;
+    }
+    out
+}
+
+/// Score one packed batch of logits against the items' choices.
+fn score_batch(
+    logits: &Tensor,
+    items: &[ChoiceItem],
+    idx: &[usize],
+    seen: &mut vec::BitSet,
+    correct: &mut usize,
+    total: &mut usize,
+) -> Result<()> {
+    let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+    let data = logits.f32s()?;
+    for (row, &item_i) in idx.iter().enumerate().take(b) {
+        if seen.contains(item_i) {
+            continue;
+        }
+        seen.insert(item_i);
+        let item = &items[item_i];
+        ensure!(item.answer_pos < s, "answer position beyond sequence");
+        let base = (row * s + item.answer_pos) * v;
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (ci, &tok) in item.choices.iter().enumerate() {
+            let val = data[base + tok as usize];
+            if val > best_v {
+                best_v = val;
+                best = ci;
+            }
+        }
+        if best == item.gold {
+            *correct += 1;
+        }
+        *total += 1;
+    }
+    Ok(())
+}
+
+mod vec {
+    /// Tiny bitset (items seen) — avoids double counting padded rows.
+    pub struct BitSet(Vec<bool>);
+
+    impl BitSet {
+        pub fn new(n: usize) -> BitSet {
+            BitSet(vec![false; n])
+        }
+
+        pub fn contains(&self, i: usize) -> bool {
+            self.0[i]
+        }
+
+        pub fn insert(&mut self, i: usize) {
+            self.0[i] = true;
+        }
+    }
+}
+
+/// Forced-choice accuracy via the per-layer pipeline.
+pub fn choice_accuracy(
+    pipe: &Pipeline,
+    store: &TensorStore,
+    plan: &LayerPlan,
+    items: &[ChoiceItem],
+) -> Result<f64> {
+    let cfg = &pipe.cfg;
+    let mut seen = vec::BitSet::new(items.len());
+    let (mut correct, mut total) = (0usize, 0usize);
+    for (tokens, idx) in pack_items(items, cfg.batch, cfg.seq) {
+        let logits = pipe.logits(store, plan, &tokens)?;
+        score_batch(&logits, items, &idx, &mut seen, &mut correct, &mut total)?;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Logits from a switched full-model artifact with adapters — see
+/// [`crate::heal::SwitchedRunner`] for the parameter-resolution scheme.
+pub fn switched_logits(
+    pipe: &Pipeline,
+    teacher: &TensorStore,
+    student: &TensorStore,
+    adapters: &TensorStore,
+    adapter_tag: &str,
+    tokens: &Tensor,
+) -> Result<Tensor> {
+    let art = format!("{}_model_logits_switched_{}", pipe.cfg.name, adapter_tag);
+    let spec = pipe.rt.spec(&art)?;
+    let switches = crate::heal::SwitchedRunner::switches(&pipe.cfg, student);
+    // The lowered signature includes unused `targets`; bind zeros.
+    let dummy_targets =
+        Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], vec![0; pipe.cfg.batch * pipe.cfg.seq]);
+    let mut b = Bindings::new().bind("tokens", tokens).bind("switches", &switches);
+    b.bind_mut("targets", &dummy_targets);
+    for io in &spec.inputs {
+        if b.get(&io.name).is_some() {
+            continue;
+        }
+        let name = &io.name;
+        let suffix = name.split('.').next_back().unwrap_or("");
+        let t = if suffix.starts_with("lora_") || suffix.starts_with("mora_") || suffix.starts_with("cl_")
+        {
+            adapters.get(name).ok().cloned().unwrap_or_else(|| Tensor::zeros(&io.shape))
+        } else if suffix.starts_with("c_")
+            || suffix.starts_with("u_")
+            || suffix.starts_with("du_")
+            || suffix.starts_with("r_")
+        {
+            student.get(name).ok().cloned().unwrap_or_else(|| Tensor::zeros(&io.shape))
+        } else {
+            teacher.get(name)?.clone()
+        };
+        b.bind_owned(name.clone(), t);
+    }
+    let mut out = pipe.rt.execute(&art, &b)?;
+    out.remove("logits").context("logits missing")
+}
+
+/// Host-side mean NLL from logits + targets (used for adapted models).
+pub fn nll_from_logits_host(logits: &Tensor, targets: &[i32], mask: Option<&[f32]>) -> Result<f64> {
+    let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+    ensure!(targets.len() == b * s, "targets length mismatch");
+    let data = logits.f32s()?;
+    let mut total = 0.0f64;
+    let mut wsum = 0.0f64;
+    for i in 0..b * s {
+        let w = mask.map(|m| m[i] as f64).unwrap_or(1.0);
+        if w == 0.0 {
+            continue;
+        }
+        let row = &data[i * v..(i + 1) * v];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let logz = maxv
+            + row.iter().map(|&x| ((x as f64) - maxv).exp()).sum::<f64>().ln();
+        let nll = logz - row[targets[i] as usize] as f64;
+        total += w * nll;
+        wsum += w;
+    }
+    Ok(total / wsum.max(1.0))
+}
+
+/// Char-level accuracy on masked positions (UUID task, Fig. 7): argmax
+/// prediction vs target where mask > 0, teacher-forced.
+pub fn char_accuracy_host(logits: &Tensor, targets: &[i32], mask: &[f32]) -> Result<f64> {
+    let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
+    ensure!(targets.len() == b * s && mask.len() == b * s);
+    let data = logits.f32s()?;
+    let (mut correct, mut total) = (0usize, 0usize);
+    for i in 0..b * s {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let row = &data[i * v..(i + 1) * v];
+        let mut am = 0usize;
+        let mut best = f32::NEG_INFINITY;
+        for (j, &x) in row.iter().enumerate() {
+            if x > best {
+                best = x;
+                am = j;
+            }
+        }
+        if am as i32 == targets[i] {
+            correct += 1;
+        }
+        total += 1;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Perplexity of an adapted (switched) model over a corpus.
+pub fn perplexity_switched(
+    pipe: &Pipeline,
+    teacher: &TensorStore,
+    student: &TensorStore,
+    adapters: &TensorStore,
+    adapter_tag: &str,
+    vocab: &Vocab,
+    corpus: &mut Corpus,
+    n_batches: usize,
+) -> Result<f64> {
+    let cfg = &pipe.cfg;
+    let mut acc = 0.0;
+    for _ in 0..n_batches {
+        let (toks, tgts) = corpus.batch(vocab, cfg.batch, cfg.seq);
+        let tokens = Tensor::from_i32(&[cfg.batch, cfg.seq], toks);
+        let logits = switched_logits(pipe, teacher, student, adapters, adapter_tag, &tokens)?;
+        acc += nll_from_logits_host(&logits, &tgts, None)?;
+    }
+    Ok((acc / n_batches as f64).exp())
+}
+
+/// Forced-choice accuracy via a switched (adapter-aware) model.
+pub fn choice_accuracy_switched(
+    pipe: &Pipeline,
+    teacher: &TensorStore,
+    student: &TensorStore,
+    adapters: &TensorStore,
+    adapter_tag: &str,
+    items: &[ChoiceItem],
+) -> Result<f64> {
+    let cfg = &pipe.cfg;
+    let mut seen = vec::BitSet::new(items.len());
+    let (mut correct, mut total) = (0usize, 0usize);
+    for (tokens, idx) in pack_items(items, cfg.batch, cfg.seq) {
+        let logits = switched_logits(pipe, teacher, student, adapters, adapter_tag, &tokens)?;
+        score_batch(&logits, items, &idx, &mut seen, &mut correct, &mut total)?;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Pack fine-tuning items into one model batch: (tokens, targets, mask).
+/// Targets are the tokens shifted left by one; the mask is the items'
+/// answer-span mask (aligned with targets). Items are cycled if fewer
+/// than the batch size.
+pub fn pack_train(
+    items: &[crate::data::TrainItem],
+    start: usize,
+    batch: usize,
+    seq: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let mut toks = Vec::with_capacity(batch * seq);
+    let mut tgts = Vec::with_capacity(batch * seq);
+    let mut mask = Vec::with_capacity(batch * seq);
+    for b in 0..batch {
+        let it = &items[(start + b) % items.len()];
+        toks.extend_from_slice(&it.tokens);
+        // Next-token targets within the fixed window.
+        tgts.extend_from_slice(&it.tokens[1..]);
+        tgts.push(crate::data::vocab::PAD);
+        mask.extend_from_slice(&it.loss_mask);
+    }
+    (
+        Tensor::from_i32(&[batch, seq], toks),
+        Tensor::from_i32(&[batch, seq], tgts),
+        Tensor::from_f32(&[batch, seq], mask),
+    )
+}
+
+/// Table 6 row: activation Frobenius norms of one projection.
+#[derive(Debug, Clone)]
+pub struct ActivationRow {
+    pub layer: usize,
+    pub proj: String,
+    /// ‖X W‖_F under the teacher (dense) weights.
+    pub teacher_norm: f64,
+    /// ‖((X C) U) R‖_F under the student factors (U = U0 + dU).
+    pub student_norm: f64,
+    /// ‖W − C U R‖_F.
+    pub weight_diff: f64,
+}
+
+/// Compute Table 6 activation norms for the cured projections of `layer`.
+/// `x_attn`/`x_ffn` are the raw projection inputs from a calibration
+/// forward (`CalibForward::attn_in` / `ffn_in`).
+pub fn activation_rows(
+    teacher: &TensorStore,
+    student: &TensorStore,
+    layer: usize,
+    x_attn: &Tensor,
+    x_ffn: &Tensor,
+) -> Result<Vec<ActivationRow>> {
+    let mut rows = Vec::new();
+    for proj in ["q", "k", "gate"] {
+        let wname = format!("L{layer}.w_{proj}");
+        let w = Mat::from_tensor(teacher.get(&wname)?)?;
+        let x3 = if proj == "gate" { x_ffn } else { x_attn };
+        let x = flatten_to_mat(x3)?;
+        let teacher_norm = x.matmul(&w).fro_norm();
+        let (student_norm, weight_diff) = if student.contains(&format!("L{layer}.c_{proj}")) {
+            let c = Mat::from_tensor(student.get(&format!("L{layer}.c_{proj}"))?)?;
+            let u0 = Mat::from_tensor(student.get(&format!("L{layer}.u_{proj}"))?)?;
+            let du = Mat::from_tensor(student.get(&format!("L{layer}.du_{proj}"))?)?;
+            let r = Mat::from_tensor(student.get(&format!("L{layer}.r_{proj}"))?)?;
+            let mut u = u0.clone();
+            for (a, b) in u.data.iter_mut().zip(&du.data) {
+                *a += b;
+            }
+            let sn = x.matmul(&c).matmul(&u).matmul(&r).fro_norm();
+            let wd = w.sub(&c.matmul(&u).matmul(&r)).fro_norm();
+            (sn, wd)
+        } else {
+            // Uncompressed weight: student == teacher (paper Table 6 shows
+            // zero diff for untouched layers).
+            (teacher_norm, 0.0)
+        };
+        rows.push(ActivationRow {
+            layer,
+            proj: proj.to_string(),
+            teacher_norm,
+            student_norm,
+            weight_diff,
+        });
+    }
+    Ok(rows)
+}
+
+fn flatten_to_mat(t: &Tensor) -> Result<Mat> {
+    ensure!(t.shape.len() == 3, "expected (b, s, d)");
+    let flat = Tensor::from_f32(&[t.shape[0] * t.shape[1], t.shape[2]], t.f32s()?.to_vec());
+    Mat::from_tensor(&flat)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_host_matches_manual() {
+        // 1x1x3 logits; uniform => nll = ln 3.
+        let logits = Tensor::from_f32(&[1, 1, 3], vec![0.0, 0.0, 0.0]);
+        let nll = nll_from_logits_host(&logits, &[1], None).unwrap();
+        assert!((nll - 3.0f64.ln()).abs() < 1e-6);
+        // Peaked logits on the target => near-zero nll.
+        let logits = Tensor::from_f32(&[1, 1, 3], vec![0.0, 20.0, 0.0]);
+        let nll = nll_from_logits_host(&logits, &[1], None).unwrap();
+        assert!(nll < 1e-6);
+    }
+
+    #[test]
+    fn nll_host_mask_selects_positions() {
+        let logits = Tensor::from_f32(&[1, 2, 2], vec![10.0, 0.0, 0.0, 10.0]);
+        // Position 0 predicts 0 (nll~0), position 1 predicts 1 (nll~0 for
+        // target 1; large for target 0).
+        let full = nll_from_logits_host(&logits, &[0, 0], None).unwrap();
+        let masked = nll_from_logits_host(&logits, &[0, 0], Some(&[1.0, 0.0])).unwrap();
+        assert!(masked < full);
+    }
+
+    #[test]
+    fn char_accuracy_counts_masked_only() {
+        let logits = Tensor::from_f32(&[1, 2, 2], vec![5.0, 0.0, 0.0, 5.0]);
+        // Predictions: [0, 1]. Targets [0, 0]: pos0 right, pos1 wrong.
+        let acc = char_accuracy_host(&logits, &[0, 0], &[1.0, 1.0]).unwrap();
+        assert!((acc - 0.5).abs() < 1e-9);
+        let acc = char_accuracy_host(&logits, &[0, 0], &[1.0, 0.0]).unwrap();
+        assert!((acc - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pack_items_covers_all_and_pads() {
+        let items: Vec<ChoiceItem> = (0..5)
+            .map(|i| ChoiceItem {
+                tokens: vec![i as i32; 8],
+                answer_pos: 3,
+                choices: vec![0, 1],
+                gold: 0,
+            })
+            .collect();
+        let packs = pack_items(&items, 4, 8);
+        assert_eq!(packs.len(), 2);
+        let all: Vec<usize> = packs.iter().flat_map(|(_, idx)| idx.clone()).collect();
+        for i in 0..5 {
+            assert!(all.contains(&i));
+        }
+    }
+}

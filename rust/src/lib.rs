@@ -1,0 +1,35 @@
+//! # CURing — compression via CUR decomposition
+//!
+//! A three-layer reproduction of *"CURing Large Models: Compression via
+//! CUR Decomposition"* (Park & Moon, ICML 2025):
+//!
+//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`)
+//!   for the CURed linear chain, RMSNorm and WANDA statistics.
+//! * **L2** — a JAX Llama-mini model family AOT-lowered to HLO text
+//!   (`python/compile/`, emitted into `artifacts/`).
+//! * **L3** — this crate: the coordinator that owns weights, data,
+//!   calibration, DEIM-CUR compression, healing, PEFT comparisons,
+//!   evaluation and serving, executing the AOT artifacts via PJRT.
+//!
+//! Python never runs on the request path; after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! Start at [`coordinator`] for the end-to-end pipeline, or [`cur`] for
+//! the core decomposition math.
+
+pub mod calib;
+pub mod compress;
+pub mod coordinator;
+pub mod cur;
+pub mod data;
+pub mod eval;
+pub mod heal;
+pub mod linalg;
+pub mod model;
+pub mod peft;
+pub mod pipeline;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+pub mod wanda;

@@ -1,0 +1,291 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK in the vendor set).
+//!
+//! `Mat` is a row-major f64 matrix; decomposition math runs in f64 even
+//! though model weights are f32, to keep DEIM/pseudoinverse numerics well
+//! clear of selection noise. Provides blocked matmul, Householder QR,
+//! one-sided Jacobi SVD (exact, small matrices), randomized truncated SVD
+//! (large matrices, used for WANDA+DEIM selection), LU solve, and the
+//! Moore-Penrose pseudoinverse.
+
+mod qr;
+mod solve;
+mod svd;
+
+pub use qr::householder_qr;
+pub use solve::{lu_solve, lu_solve_mat, pinv, pinv_rcond};
+pub use svd::{jacobi_svd, rand_svd, Svd};
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Row-major dense f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Mat {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn random_normal(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: (0..rows * cols).map(|_| rng.normal() as f64).collect() }
+    }
+
+    /// Convert from an f32 host tensor (must be rank 2).
+    pub fn from_tensor(t: &Tensor) -> anyhow::Result<Mat> {
+        anyhow::ensure!(t.shape.len() == 2, "expected rank-2 tensor, got {:?}", t.shape);
+        let d = t.f32s()?;
+        Ok(Mat {
+            rows: t.shape[0],
+            cols: t.shape[1],
+            data: d.iter().map(|&x| x as f64).collect(),
+        })
+    }
+
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_f32(
+            &[self.rows, self.cols],
+            self.data.iter().map(|&x| x as f32).collect(),
+        )
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// `self @ other`, blocked over k for cache friendliness.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        // i-k-j loop order: streams both `other` rows and `out` rows.
+        for i in 0..m {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for kk in 0..k {
+                let a = a_row[kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn dim mismatch");
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let a_row = self.row(kk);
+            let b_row = other.row(kk);
+            for i in 0..m {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Spectral norm (largest singular value) via power iteration —
+    /// cheap and accurate enough for error-bound reporting.
+    pub fn spectral_norm(&self, rng: &mut Rng) -> f64 {
+        let mut v: Vec<f64> = (0..self.cols).map(|_| rng.normal() as f64).collect();
+        let mut norm = 0.0;
+        for _ in 0..60 {
+            // w = A v
+            let mut w = vec![0.0; self.rows];
+            for i in 0..self.rows {
+                w[i] = self.row(i).iter().zip(&v).map(|(a, b)| a * b).sum();
+            }
+            // v = A^T w
+            let mut v2 = vec![0.0; self.cols];
+            for i in 0..self.rows {
+                let wi = w[i];
+                for (j, a) in self.row(i).iter().enumerate() {
+                    v2[j] += a * wi;
+                }
+            }
+            let n2 = v2.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if n2 == 0.0 {
+                return 0.0;
+            }
+            for x in &mut v2 {
+                *x /= n2;
+            }
+            v = v2;
+            norm = n2.sqrt();
+        }
+        norm
+    }
+
+    /// Select columns by index into a new matrix (CUR's C extraction).
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            for (jj, &j) in idx.iter().enumerate() {
+                out[(i, jj)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Select rows by index (CUR's R extraction).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (ii, &i) in idx.iter().enumerate() {
+            out.row_mut(ii).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_tn_equals_explicit_transpose() {
+        let mut rng = Rng::new(1, 0);
+        let a = Mat::random_normal(7, 5, &mut rng);
+        let b = Mat::random_normal(7, 4, &mut rng);
+        let got = a.matmul_tn(&b);
+        let want = a.transpose().matmul(&b);
+        assert!(got.sub(&want).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0], vec![7.0, 8.0, 9.0]]);
+        let c = a.select_cols(&[2, 0]);
+        assert_eq!(c.data, vec![3.0, 1.0, 6.0, 4.0, 9.0, 7.0]);
+        let r = a.select_rows(&[1]);
+        assert_eq!(r.data, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn spectral_norm_diag() {
+        let mut rng = Rng::new(2, 0);
+        let mut a = Mat::zeros(4, 4);
+        for (i, s) in [3.0, 1.0, 0.5, 0.1].iter().enumerate() {
+            a[(i, i)] = *s;
+        }
+        let n = a.spectral_norm(&mut rng);
+        assert!((n - 3.0).abs() < 1e-6, "n={n}");
+    }
+
+    #[test]
+    fn eye_identity() {
+        let mut rng = Rng::new(3, 0);
+        let a = Mat::random_normal(5, 5, &mut rng);
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).sub(&a).fro_norm() < 1e-12);
+        assert!(i.matmul(&a).sub(&a).fro_norm() < 1e-12);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = Mat::from_tensor(&t).unwrap();
+        assert_eq!(m.to_tensor(), t);
+    }
+}

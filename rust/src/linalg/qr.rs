@@ -1,0 +1,114 @@
+//! Householder QR for tall matrices (m >= n): A = Q R with thin Q.
+//!
+//! Used by the randomized SVD's range finder and by tests; numerically
+//! stable (no Gram-Schmidt drift).
+
+use super::Mat;
+
+/// Thin QR of an m x n matrix with m >= n. Returns (Q: m x n, R: n x n).
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "householder_qr expects tall matrix, got {m}x{n}");
+    let mut r = a.clone();
+    // Householder vectors stored per column.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the reflector for column k below the diagonal.
+        let mut x: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = -x[0].signum() * x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if alpha == 0.0 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        x[0] -= alpha;
+        let vnorm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if vnorm < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        for v in &mut x {
+            *v /= vnorm;
+        }
+        // Apply I - 2 v v^T to the trailing block of R.
+        for j in k..n {
+            let dot: f64 = (k..m).map(|i| x[i - k] * r[(i, j)]).sum();
+            for i in k..m {
+                r[(i, j)] -= 2.0 * x[i - k] * dot;
+            }
+        }
+        vs.push(x);
+    }
+    // Accumulate thin Q by applying reflectors (in reverse) to I's first
+    // n columns.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q[(j, j)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        if v.iter().all(|&x| x == 0.0) {
+            continue;
+        }
+        for j in 0..n {
+            let dot: f64 = (k..m).map(|i| v[i - k] * q[(i, j)]).sum();
+            for i in k..m {
+                q[(i, j)] -= 2.0 * v[i - k] * dot;
+            }
+        }
+    }
+    // Zero strictly-lower part of R, return top n x n block.
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    (q, rr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn check_qr(m: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed, 0);
+        let a = Mat::random_normal(m, n, &mut rng);
+        let (q, r) = householder_qr(&a);
+        // Reconstruction.
+        assert!(q.matmul(&r).sub(&a).fro_norm() < 1e-10 * a.fro_norm().max(1.0));
+        // Orthonormal columns.
+        let qtq = q.matmul_tn(&q);
+        assert!(qtq.sub(&Mat::eye(n)).fro_norm() < 1e-10);
+        // R upper triangular.
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_shapes() {
+        check_qr(8, 8, 1);
+        check_qr(20, 5, 2);
+        check_qr(64, 32, 3);
+        check_qr(5, 1, 4);
+    }
+
+    #[test]
+    fn qr_rank_deficient() {
+        // Duplicate columns: QR must still reconstruct.
+        let mut rng = Rng::new(9, 0);
+        let a1 = Mat::random_normal(10, 2, &mut rng);
+        let mut a = Mat::zeros(10, 4);
+        for i in 0..10 {
+            a[(i, 0)] = a1[(i, 0)];
+            a[(i, 1)] = a1[(i, 1)];
+            a[(i, 2)] = a1[(i, 0)];
+            a[(i, 3)] = a1[(i, 1)] * 2.0;
+        }
+        let (q, r) = householder_qr(&a);
+        assert!(q.matmul(&r).sub(&a).fro_norm() < 1e-9);
+    }
+}

@@ -1,0 +1,185 @@
+//! Linear solves and the Moore-Penrose pseudoinverse.
+//!
+//! LU with partial pivoting powers the DEIM interpolation solves (tiny
+//! r x r systems); the pseudoinverse (via exact Jacobi SVD — CUR factors
+//! always have a small dimension) computes the paper's `U = C^+ W R^+`.
+
+use super::{jacobi_svd, Mat};
+use anyhow::{bail, Result};
+
+/// Solve `A x = b` for square A via LU with partial pivoting.
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let x = lu_solve_mat(a, &Mat { rows: b.len(), cols: 1, data: b.to_vec() })?;
+    Ok(x.data)
+}
+
+/// Solve `A X = B` for square A (B may have many columns).
+pub fn lu_solve_mat(a: &Mat, b: &Mat) -> Result<Mat> {
+    let n = a.rows;
+    if a.cols != n || b.rows != n {
+        bail!("lu_solve: dim mismatch ({}x{} vs {}x{})", a.rows, a.cols, b.rows, b.cols);
+    }
+    let mut lu = a.clone();
+    let mut x = b.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // Pivot.
+        let mut pmax = k;
+        for i in (k + 1)..n {
+            if lu[(i, k)].abs() > lu[(pmax, k)].abs() {
+                pmax = i;
+            }
+        }
+        if lu[(pmax, k)].abs() < 1e-300 {
+            bail!("lu_solve: singular matrix at pivot {k}");
+        }
+        if pmax != k {
+            for j in 0..n {
+                let t = lu[(k, j)];
+                lu[(k, j)] = lu[(pmax, j)];
+                lu[(pmax, j)] = t;
+            }
+            for j in 0..x.cols {
+                let t = x[(k, j)];
+                x[(k, j)] = x[(pmax, j)];
+                x[(pmax, j)] = t;
+            }
+            perm.swap(k, pmax);
+        }
+        // Eliminate.
+        let piv = lu[(k, k)];
+        for i in (k + 1)..n {
+            let f = lu[(i, k)] / piv;
+            lu[(i, k)] = f;
+            for j in (k + 1)..n {
+                let v = lu[(k, j)];
+                lu[(i, j)] -= f * v;
+            }
+            for j in 0..x.cols {
+                let v = x[(k, j)];
+                x[(i, j)] -= f * v;
+            }
+        }
+    }
+    // Back substitution.
+    for j in 0..x.cols {
+        for i in (0..n).rev() {
+            let mut s = x[(i, j)];
+            for k in (i + 1)..n {
+                s -= lu[(i, k)] * x[(k, j)];
+            }
+            x[(i, j)] = s / lu[(i, i)];
+        }
+    }
+    Ok(x)
+}
+
+/// Moore-Penrose pseudoinverse via exact SVD with relative cutoff.
+///
+/// `pinv(A) = V diag(1/s) U^T` over singular values above
+/// `rcond * s_max`. CUR's C (m x r) and R (r x n) have r <= a few dozen,
+/// so the Jacobi SVD here is exact and fast.
+///
+/// The default `rcond = 1e-6` matters: CUR factors are slices of *f32*
+/// weights, so a rank-deficient selection (true rank < r) carries noise
+/// singular values around `1e-7 * smax`. Inverting those puts ~1e7
+/// entries into `U = C^+ W R^+` — exact in f64, catastrophic once U is
+/// stored back to f32 (observed: 34% reconstruction error). Clamping at
+/// 1e-6 keeps U representable while leaving genuine full-rank spectra
+/// untouched.
+pub fn pinv(a: &Mat) -> Mat {
+    pinv_rcond(a, 1e-6)
+}
+
+/// Pseudoinverse with an explicit relative cutoff.
+pub fn pinv_rcond(a: &Mat, rcond: f64) -> Mat {
+    let svd = jacobi_svd(a);
+    let smax = svd.s.first().copied().unwrap_or(0.0);
+    let k = svd.s.len();
+    // V * diag(1/s) * U^T computed without forming diag.
+    let mut vs = svd.v.clone(); // n x k
+    for j in 0..k {
+        let inv = if svd.s[j] > rcond * smax && svd.s[j] > 0.0 { 1.0 / svd.s[j] } else { 0.0 };
+        for i in 0..vs.rows {
+            vs[(i, j)] *= inv;
+        }
+    }
+    vs.matmul(&svd.u.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn lu_solve_known() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let x = lu_solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_solve_random_roundtrip() {
+        let mut rng = Rng::new(5, 0);
+        for n in [1usize, 3, 10, 40] {
+            let a = Mat::random_normal(n, n, &mut rng);
+            let xs = Mat::random_normal(n, 3, &mut rng);
+            let b = a.matmul(&xs);
+            let got = lu_solve_mat(&a, &b).unwrap();
+            assert!(got.sub(&xs).fro_norm() < 1e-8 * xs.fro_norm().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn lu_singular_detected() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(lu_solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn pinv_identities() {
+        let mut rng = Rng::new(6, 0);
+        for (m, n) in [(12, 4), (4, 12), (8, 8)] {
+            let a = Mat::random_normal(m, n, &mut rng);
+            let p = pinv(&a);
+            assert_eq!((p.rows, p.cols), (n, m));
+            // A A+ A = A
+            let apa = a.matmul(&p).matmul(&a);
+            assert!(apa.sub(&a).fro_norm() < 1e-9 * a.fro_norm());
+            // A+ A A+ = A+
+            let pap = p.matmul(&a).matmul(&p);
+            assert!(pap.sub(&p).fro_norm() < 1e-9 * p.fro_norm());
+        }
+    }
+
+    #[test]
+    fn pinv_rank_deficient() {
+        let mut rng = Rng::new(8, 0);
+        let b = Mat::random_normal(10, 2, &mut rng);
+        let c = Mat::random_normal(2, 6, &mut rng);
+        let a = b.matmul(&c);
+        let p = pinv(&a);
+        let apa = a.matmul(&p).matmul(&a);
+        assert!(apa.sub(&a).fro_norm() < 1e-8 * a.fro_norm());
+    }
+
+    #[test]
+    fn pinv_f32_noise_regression() {
+        // Regression for the U-explosion bug: a rank-8 matrix stored as
+        // f32 then pinv'd over 32 columns must NOT invert the f32-noise
+        // singular values. The resulting pinv norm stays modest.
+        let mut rng = Rng::new(20, 0);
+        let b = Mat::random_normal(64, 8, &mut rng);
+        let c = Mat::random_normal(8, 32, &mut rng);
+        let exact = b.matmul(&c);
+        // f32 roundtrip injects ~1e-7 relative noise.
+        let noisy = Mat::from_tensor(&exact.to_tensor()).unwrap();
+        let p = pinv(&noisy);
+        let pmax = p.data.iter().cloned().fold(0.0f64, |m, x| m.max(x.abs()));
+        assert!(pmax < 1e3, "pinv inverted f32 noise: max entry {pmax}");
+        let apa = noisy.matmul(&p).matmul(&noisy);
+        assert!(apa.sub(&noisy).fro_norm() < 1e-4 * noisy.fro_norm());
+    }
+}

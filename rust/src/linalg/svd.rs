@@ -1,0 +1,230 @@
+//! Singular value decompositions.
+//!
+//! * `jacobi_svd` — exact one-sided Jacobi SVD; robust for matrices whose
+//!   smaller dimension is at most a few hundred (every CUR factor and every
+//!   small/medium weight in this repo).
+//! * `rand_svd` — randomized truncated SVD (Halko-Martinsson-Tropp) used
+//!   for the DEIM selection on full weight matrices, where only the top-r
+//!   singular vectors are needed.
+
+use super::{householder_qr, Mat};
+use crate::util::Rng;
+
+/// SVD result: `a ≈ u * diag(s) * v^T`, singular values descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Mat, // m x k
+    pub s: Vec<f64>, // k
+    pub v: Mat, // n x k
+}
+
+/// Exact one-sided Jacobi SVD.
+///
+/// Rotates column pairs of a working copy until all pairs are orthogonal;
+/// the column norms become singular values, normalized columns the left
+/// vectors, and the accumulated rotations the right vectors. We always
+/// orthogonalize over the *smaller* dimension by transposing when needed.
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    if a.rows < a.cols {
+        // A = U S V^T  <=>  A^T = V S U^T.
+        let t = jacobi_svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    let (m, n) = (a.rows, a.cols);
+    // Column-major working copy for fast column ops.
+    let mut w: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut v = Mat::eye(n);
+    let tol = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    app += w[p][i] * w[p][i];
+                    aqq += w[q][i] * w[q][i];
+                    apq += w[p][i] * w[q][i];
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[p][i];
+                    let wq = w[q][i];
+                    w[p][i] = c * wp - s * wq;
+                    w[q][i] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-300 {
+            break;
+        }
+    }
+    // Extract singular values and sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = w.iter().map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    let mut u = Mat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vv = Mat::zeros(n, n);
+    for (jj, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s.push(nj);
+        for i in 0..m {
+            u[(i, jj)] = if nj > 1e-300 { w[j][i] / nj } else { 0.0 };
+        }
+        for i in 0..n {
+            vv[(i, jj)] = v[(i, j)];
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+/// Randomized truncated SVD: top-k factors of a large matrix.
+///
+/// Oversampling + `power_iters` subspace iterations per HMT; accuracy is
+/// ample for DEIM index selection and σ_{r+1} reporting.
+pub fn rand_svd(a: &Mat, k: usize, oversample: usize, power_iters: usize, rng: &mut Rng) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let kk = (k + oversample).min(n).min(m);
+    // Range finder: Y = A Ω.
+    let omega = Mat::random_normal(n, kk, rng);
+    let mut y = a.matmul(&omega);
+    let (mut q, _) = householder_qr(&y);
+    for _ in 0..power_iters {
+        // Subspace iteration with re-orthogonalization.
+        let z = a.matmul_tn(&q); // A^T Q : n x kk
+        let (qz, _) = householder_qr(&z);
+        y = a.matmul(&qz);
+        let (q2, _) = householder_qr(&y);
+        q = q2;
+    }
+    // B = Q^T A (kk x n); small exact SVD.
+    let b = q.matmul_tn(a);
+    let sb = jacobi_svd(&b);
+    // U = Q * U_b, truncate to k.
+    let u_full = q.matmul(&sb.u);
+    let k = k.min(sb.s.len());
+    let mut u = Mat::zeros(m, k);
+    let mut v = Mat::zeros(n, k);
+    for i in 0..m {
+        for j in 0..k {
+            u[(i, j)] = u_full[(i, j)];
+        }
+    }
+    for i in 0..n {
+        for j in 0..k {
+            v[(i, j)] = sb.v[(i, j)];
+        }
+    }
+    Svd { u, s: sb.s[..k].to_vec(), v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reconstruct(svd: &Svd) -> Mat {
+        let k = svd.s.len();
+        let mut us = svd.u.clone();
+        for i in 0..us.rows {
+            for j in 0..k {
+                us[(i, j)] *= svd.s[j];
+            }
+        }
+        us.matmul(&svd.v.transpose())
+    }
+
+    #[test]
+    fn jacobi_reconstructs_random() {
+        for (m, n, seed) in [(8, 8, 1u64), (20, 6, 2), (6, 20, 3), (64, 32, 4)] {
+            let mut rng = Rng::new(seed, 0);
+            let a = Mat::random_normal(m, n, &mut rng);
+            let svd = jacobi_svd(&a);
+            assert!(
+                reconstruct(&svd).sub(&a).fro_norm() < 1e-9 * a.fro_norm(),
+                "reconstruction failed {m}x{n}"
+            );
+            // Orthonormality.
+            let k = svd.s.len();
+            assert!(svd.u.matmul_tn(&svd.u).sub(&Mat::eye(k)).fro_norm() < 1e-9);
+            assert!(svd.v.matmul_tn(&svd.v).sub(&Mat::eye(k)).fro_norm() < 1e-9);
+            // Descending.
+            for i in 1..k {
+                assert!(svd.s[i] <= svd.s[i - 1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_known_singular_values() {
+        // diag(5, 3, 1) embedded in 5x3.
+        let mut a = Mat::zeros(5, 3);
+        a[(0, 0)] = 5.0;
+        a[(1, 1)] = 3.0;
+        a[(2, 2)] = 1.0;
+        let svd = jacobi_svd(&a);
+        assert!((svd.s[0] - 5.0).abs() < 1e-12);
+        assert!((svd.s[1] - 3.0).abs() < 1e-12);
+        assert!((svd.s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_rank_deficient() {
+        let mut rng = Rng::new(7, 0);
+        let b = Mat::random_normal(10, 2, &mut rng);
+        let c = Mat::random_normal(2, 8, &mut rng);
+        let a = b.matmul(&c); // rank 2
+        let svd = jacobi_svd(&a);
+        assert!(svd.s[2] < 1e-10 * svd.s[0]);
+        assert!(reconstruct(&svd).sub(&a).fro_norm() < 1e-9 * a.fro_norm());
+    }
+
+    #[test]
+    fn rand_svd_matches_exact_leading() {
+        let mut rng = Rng::new(11, 0);
+        // Build a matrix with a known fast-decaying spectrum.
+        let u = {
+            let g = Mat::random_normal(60, 60, &mut rng);
+            householder_qr(&g).0
+        };
+        let v = {
+            let g = Mat::random_normal(40, 40, &mut rng);
+            householder_qr(&g).0
+        };
+        let mut a = Mat::zeros(60, 40);
+        let spec: Vec<f64> = (0..40).map(|i| 2.0f64.powi(-(i as i32))).collect();
+        for i in 0..60 {
+            for j in 0..40 {
+                let mut x = 0.0;
+                for (k, s) in spec.iter().enumerate().take(40) {
+                    x += u[(i, k)] * s * v[(j, k)];
+                }
+                a[(i, j)] = x;
+            }
+        }
+        let ex = jacobi_svd(&a);
+        let rs = rand_svd(&a, 8, 8, 2, &mut rng);
+        for i in 0..8 {
+            assert!(
+                (rs.s[i] - ex.s[i]).abs() < 1e-6 * ex.s[0],
+                "sigma_{i}: {} vs {}",
+                rs.s[i],
+                ex.s[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! `curing` — CLI for the CURing compression system.
+//!
+//! Commands (see `curing help`):
+//!   pretrain   train the dense "original" model (cached)
+//!   calibrate  run WANDA/angular-distance calibration
+//!   compress   CURing-compress k layers and evaluate
+//!   heal       layer-wise KD healing of a cured model
+//!   eval       evaluate a stored model on the Figure-4 suite
+//!   serve      run the batching eval server demo
+//!   info       artifact/manifest inventory
+
+use anyhow::{bail, Result};
+use curing::compress::{CompressOptions, LayerStrategy};
+use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
+use curing::data::{Corpus, CorpusKind, SEED_HEAL};
+use curing::heal::{heal_layers, HealOptions};
+use curing::pipeline::LayerPlan;
+use curing::serve::{spawn_clients, BatchingServer};
+use curing::tensor::TensorStore;
+use curing::util::cli::Args;
+use curing::util::stats::mib;
+use curing::wanda::Selector;
+use std::time::Duration;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+    match cmd.as_str() {
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        "info" => info(args),
+        "pretrain" => pretrain(args),
+        "calibrate" => calibrate(args),
+        "compress" => compress(args),
+        "heal" => heal(args),
+        "eval" => eval(args),
+        "generate" => generate(args),
+        "serve" => serve(args),
+        other => bail!("unknown command '{other}' (try `curing help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "curing — LLM compression via DEIM-CUR decomposition (ICML 2025 reproduction)
+
+USAGE: curing <command> [--flags]
+
+COMMANDS
+  info                         list artifacts and configs
+  pretrain  --config tiny --steps N          train + cache the dense model
+  calibrate --config tiny --examples 128     WANDA + angular distances
+  compress  --config tiny --layers K [--rank 16] [--combo all]
+            [--selector curing] [--strategy angular] [--eval]
+  heal      --config tiny --layers K --steps N [--rank 16]
+  eval      --config tiny [--layers K]       Figure-4 metric suite
+  generate  --prompt \"the atom\" [--layers K] [--tokens 24]  greedy decode
+  serve     --config tiny [--clients 4] [--requests 32]
+
+ENV  CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
+     CURING_PRETRAIN_STEPS (default 300)"
+    );
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    println!("artifacts:");
+    for name in ctx.rt.artifact_names() {
+        let spec = ctx.rt.spec(&name)?;
+        println!("  {:<44} {:>3} in / {:>3} out", name, spec.inputs.len(), spec.outputs.len());
+    }
+    Ok(())
+}
+
+fn pretrain(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let steps = args.usize_opt("steps", default_pretrain_steps());
+    check_unknown(args)?;
+    let store = ctx.load_or_pretrain(&config, steps)?;
+    println!(
+        "dense model ready: {} params ({:.1} MiB f32)",
+        store.total_params(),
+        mib(store.total_bytes() as f64)
+    );
+    Ok(())
+}
+
+fn calibrate(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let examples = args.usize_opt("examples", 128);
+    let steps = args.usize_opt("steps", default_pretrain_steps());
+    check_unknown(args)?;
+    let store = ctx.load_or_pretrain(&config, steps)?;
+    let pipe = ctx.pipeline(&config)?;
+    let calib = ctx.calibrate_cached(&pipe, &store, examples)?;
+    println!("angular distances (layer: d(h_l-1, h_l)), ascending:");
+    let mut order: Vec<usize> = pipe.cfg.middle_layers();
+    order.sort_by(|&a, &b| calib.angular[a].partial_cmp(&calib.angular[b]).unwrap());
+    for l in order {
+        println!("  layer {:>2}: {:.4}", l, calib.angular[l]);
+    }
+    Ok(())
+}
+
+fn parse_opts(args: &Args) -> Result<CompressOptions> {
+    Ok(CompressOptions {
+        combo: args.str_opt("combo", "all"),
+        r_max: args.usize_opt("rank", 16),
+        selector: Selector::parse(&args.str_opt("selector", "curing"))?,
+        seed: args.usize_opt("seed", 0) as u64,
+    })
+}
+
+fn compress(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let k = args.usize_opt("layers", 3);
+    let steps = args.usize_opt("steps", default_pretrain_steps());
+    let strategy = LayerStrategy::parse(&args.str_opt("strategy", "angular"))?;
+    let opts = parse_opts(args)?;
+    let do_eval = args.bool_flag("eval");
+    check_unknown(args)?;
+    let dense = ctx.load_or_pretrain(&config, steps)?;
+    let pipe = ctx.pipeline(&config)?;
+    let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+    let (student, plan, report) = ctx.compress_k(&pipe, &dense, &calib, k, strategy, &opts)?;
+    println!(
+        "compressed layers {:?} in {:.2}s, saved {:.2} MiB",
+        report.layers,
+        report.seconds_total,
+        mib(report.bytes_saved() as f64)
+    );
+    let dir = std::path::Path::new(&std::env::var("CURING_RUNDIR").unwrap_or("runs".into()))
+        .join("stores")
+        .join(format!("{config}_cured_k{k}"));
+    student.save(&dir)?;
+    println!("cured store saved to {}", dir.display());
+    if do_eval {
+        let suite = ctx.eval_suite(&pipe, &student, &plan, &EvalSizes::default())?;
+        println!("cured:  {}", suite.row());
+        let dense_plan = LayerPlan::all_dense(&pipe.cfg);
+        let suite0 = ctx.eval_suite(&pipe, &dense, &dense_plan, &EvalSizes::default())?;
+        println!("dense:  {}", suite0.row());
+    }
+    Ok(())
+}
+
+fn heal(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let k = args.usize_opt("layers", 3);
+    let heal_steps = args.usize_opt("steps", 200);
+    let pre_steps = args.usize_opt("pretrain-steps", default_pretrain_steps());
+    let base_lr = args.f64_opt("lr", 3e-4);
+    let opts = parse_opts(args)?;
+    check_unknown(args)?;
+    let dense = ctx.load_or_pretrain(&config, pre_steps)?;
+    let pipe = ctx.pipeline(&config)?;
+    let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+    let (mut student, plan, _) =
+        ctx.compress_k(&pipe, &dense, &calib, k, LayerStrategy::Angular, &opts)?;
+    let mut corpus = Corpus::new(CorpusKind::SynthC4, SEED_HEAL);
+    let mut opt = TensorStore::new();
+    let hopts = HealOptions { steps: heal_steps, base_lr, ..Default::default() };
+    let hist = heal_layers(
+        &pipe, &dense, &mut student, &mut opt, &ctx.vocab, &mut corpus, &hopts, 0,
+    )?;
+    for p in hist.iter().step_by((heal_steps / 10).max(1)) {
+        println!("  heal step {:>4}: layer-MSE {:.6} (lr {:.2e})", p.step, p.loss, p.lr);
+    }
+    let suite = ctx.eval_suite(&pipe, &student, &plan, &EvalSizes::default())?;
+    println!("healed: {}", suite.row());
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let k = args.usize_opt("layers", 0);
+    let steps = args.usize_opt("steps", default_pretrain_steps());
+    let opts = parse_opts(args)?;
+    check_unknown(args)?;
+    let dense = ctx.load_or_pretrain(&config, steps)?;
+    let pipe = ctx.pipeline(&config)?;
+    if k == 0 {
+        let suite =
+            ctx.eval_suite(&pipe, &dense, &LayerPlan::all_dense(&pipe.cfg), &EvalSizes::default())?;
+        println!("dense:  {}", suite.row());
+    } else {
+        let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+        let (student, plan, _) =
+            ctx.compress_k(&pipe, &dense, &calib, k, LayerStrategy::Angular, &opts)?;
+        let suite = ctx.eval_suite(&pipe, &student, &plan, &EvalSizes::default())?;
+        println!("cured(k={k}): {}", suite.row());
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let prompt = args.str_opt("prompt", "the atom");
+    let n_new = args.usize_opt("tokens", 24);
+    let k = args.usize_opt("layers", 0);
+    let steps = args.usize_opt("steps", default_pretrain_steps());
+    let opts = parse_opts(args)?;
+    check_unknown(args)?;
+    let dense = ctx.load_or_pretrain(&config, steps)?;
+    let pipe = ctx.pipeline(&config)?;
+    let mut ids = vec![curing::data::vocab::BOS];
+    ids.extend(ctx.vocab.encode(&prompt));
+    let (store, plan) = if k == 0 {
+        (dense.clone(), LayerPlan::all_dense(&pipe.cfg))
+    } else {
+        let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+        let (s, p, _) =
+            ctx.compress_k(&pipe, &dense, &calib, k, LayerStrategy::Angular, &opts)?;
+        (s, p)
+    };
+    let out = pipe.generate_greedy(&store, &plan, &[ids], n_new)?;
+    println!("{} {}", prompt, ctx.vocab.decode(&out[0]));
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let clients = args.usize_opt("clients", 4);
+    let per_client = args.usize_opt("requests", 8);
+    let steps = args.usize_opt("steps", default_pretrain_steps());
+    check_unknown(args)?;
+    let dense = ctx.load_or_pretrain(&config, steps)?;
+    let pipe = ctx.pipeline(&config)?;
+    let (rx, _resps) = spawn_clients(
+        &ctx.vocab,
+        CorpusKind::SynthC4,
+        pipe.cfg.seq,
+        clients,
+        per_client,
+        5,
+    );
+    let server = BatchingServer {
+        pipe: &pipe,
+        store: &dense,
+        plan: LayerPlan::all_dense(&pipe.cfg),
+        max_wait: Duration::from_millis(30),
+    };
+    let stats = server.run(rx, clients * per_client)?;
+    println!(
+        "served {} reqs in {:.2}s | {:.1} seq/s | occupancy {:.1}/{} | p50 {:.0}ms p95 {:.0}ms",
+        stats.served,
+        stats.wall_s,
+        stats.throughput_seq_per_s,
+        stats.mean_batch_occupancy,
+        pipe.cfg.batch,
+        stats.p50_latency_ms,
+        stats.p95_latency_ms
+    );
+    Ok(())
+}
+
+fn check_unknown(args: &Args) -> Result<()> {
+    let unknown = args.unknown_flags();
+    if !unknown.is_empty() {
+        bail!("unknown flags: {unknown:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Model configuration, parameter naming, initialization and size
+//! accounting for the Llama-mini family.
+//!
+//! The configuration is parsed from `artifacts/manifest.json` (written by
+//! the Python AOT step), so Rust and JAX can never disagree about shapes.
+//! Parameter names follow the canonical scheme the artifacts use:
+//! `emb`, `ln_f`, `L{l}.ln1`, `L{l}.w_q`, ..., `L{l}.c_q`, `L{l}.u_q`,
+//! `L{l}.du_q`, `L{l}.r_q`, ...
+
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::{Json, Rng};
+use anyhow::{anyhow, Result};
+
+/// Weight-combination ablation of paper Appendix C.1.
+pub const COMBOS: &[(&str, &[&str])] = &[
+    ("all", &["q", "k", "gate"]),
+    ("gate", &["gate"]),
+    ("qk", &["q", "k"]),
+    ("qg", &["q", "gate"]),
+    ("kg", &["k", "gate"]),
+];
+
+pub fn combo_targets(combo: &str) -> Result<&'static [&'static str]> {
+    COMBOS
+        .iter()
+        .find(|(name, _)| *name == combo)
+        .map(|(_, t)| *t)
+        .ok_or_else(|| anyhow!("unknown combo '{combo}'"))
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_inter: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub ranks: Vec<usize>,
+    pub default_rank: usize,
+    pub lora_rank: usize,
+    pub mora_rank: usize,
+    pub total_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_manifest(manifest: &Json, name: &str) -> Result<ModelConfig> {
+        let c = manifest
+            .at(&["configs", name])
+            .ok_or_else(|| anyhow!("config '{name}' not in manifest"))?;
+        let get = |k: &str| -> Result<usize> {
+            c.at(&[k]).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_inter: get("d_inter")?,
+            seq: get("seq")?,
+            batch: get("batch")?,
+            ranks: c
+                .at(&["ranks"])
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            default_rank: get("default_rank")?,
+            lora_rank: get("lora_rank")?,
+            mora_rank: get("mora_rank")?,
+            total_params: get("total_params")?,
+        })
+    }
+
+    /// Layers eligible for curing: all but first and last (paper §4.1).
+    pub fn middle_layers(&self) -> Vec<usize> {
+        (1..self.n_layers - 1).collect()
+    }
+
+    /// Dense weight dims of one projection: (m_in, n_out).
+    pub fn weight_dims(&self, proj: &str) -> (usize, usize) {
+        match proj {
+            "q" | "k" | "v" | "o" => (self.d_model, self.d_model),
+            "gate" | "up" => (self.d_model, self.d_inter),
+            "down" => (self.d_inter, self.d_model),
+            other => panic!("unknown projection {other}"),
+        }
+    }
+
+    /// Paper Eq. 2: rank rule — largest power of two under the parameter
+    /// break-even point, clamped by r_max.
+    pub fn rank_rule(&self, m: usize, n: usize, r_max: usize) -> usize {
+        crate::cur::rank_rule(m, n, r_max)
+    }
+
+    /// Dense parameter count of one layer.
+    pub fn params_per_layer(&self) -> usize {
+        4 * self.d_model * self.d_model + 3 * self.d_model * self.d_inter + 2 * self.d_model
+    }
+
+    /// Parameters of a CUR factorization of projection `proj` at `rank`.
+    pub fn cur_params(&self, proj: &str, rank: usize) -> usize {
+        let (m, n) = self.weight_dims(proj);
+        m * rank + rank * rank + rank * n
+    }
+
+    /// Bytes saved (f32) by curing one layer with `combo` at `rank`.
+    pub fn bytes_saved_per_layer(&self, combo: &str, rank: usize) -> Result<usize> {
+        let mut saved = 0usize;
+        for proj in combo_targets(combo)? {
+            let (m, n) = self.weight_dims(proj);
+            let dense = m * n;
+            let cur = self.cur_params(proj, rank);
+            saved += dense.saturating_sub(cur) * 4;
+        }
+        Ok(saved)
+    }
+
+    pub fn dense_layer_param_names(&self, l: usize) -> Vec<String> {
+        ["ln1", "w_q", "w_k", "w_v", "w_o", "ln2", "w_gate", "w_up", "w_down"]
+            .iter()
+            .map(|s| format!("L{l}.{s}"))
+            .collect()
+    }
+
+    /// All dense model parameter names in artifact (manifest) order.
+    pub fn dense_param_names(&self) -> Vec<String> {
+        let mut names = vec!["emb".to_string()];
+        for l in 0..self.n_layers {
+            names.extend(self.dense_layer_param_names(l));
+        }
+        names.push("ln_f".to_string());
+        names
+    }
+
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        let (d, di, v) = (self.d_model, self.d_inter, self.vocab);
+        let suffix = name.split('.').next_back().unwrap();
+        match suffix {
+            "emb" => vec![v, d],
+            "ln_f" | "ln1" | "ln2" => {
+                if name == "emb" {
+                    vec![v, d]
+                } else if name == "ln_f" {
+                    vec![d]
+                } else {
+                    vec![d]
+                }
+            }
+            "w_q" | "w_k" | "w_v" | "w_o" => vec![d, d],
+            "w_gate" | "w_up" => vec![d, di],
+            "w_down" => vec![di, d],
+            other => panic!("no static shape for param {other}"),
+        }
+    }
+
+    /// Initialize a dense model (GPT-2-style scaled normal init).
+    pub fn init_dense(&self, rng: &mut Rng) -> TensorStore {
+        let mut store = TensorStore::new();
+        let std = 0.02f32;
+        let resid_std = std / (2.0 * self.n_layers as f32).sqrt();
+        let (d, di, v) = (self.d_model, self.d_inter, self.vocab);
+        store.insert("emb", Tensor::from_f32(&[v, d], rng.normal_vec(v * d, std)));
+        for l in 0..self.n_layers {
+            store.insert(format!("L{l}.ln1"), Tensor::from_f32(&[d], vec![1.0; d]));
+            store.insert(format!("L{l}.ln2"), Tensor::from_f32(&[d], vec![1.0; d]));
+            for w in ["w_q", "w_k", "w_v"] {
+                store.insert(format!("L{l}.{w}"), Tensor::from_f32(&[d, d], rng.normal_vec(d * d, std)));
+            }
+            // Residual-write projections get the depth-scaled init.
+            store.insert(format!("L{l}.w_o"), Tensor::from_f32(&[d, d], rng.normal_vec(d * d, resid_std)));
+            store.insert(format!("L{l}.w_gate"), Tensor::from_f32(&[d, di], rng.normal_vec(d * di, std)));
+            store.insert(format!("L{l}.w_up"), Tensor::from_f32(&[d, di], rng.normal_vec(d * di, std)));
+            store.insert(format!("L{l}.w_down"), Tensor::from_f32(&[di, d], rng.normal_vec(di * d, resid_std)));
+        }
+        store.insert("ln_f", Tensor::from_f32(&[d], vec![1.0; d]));
+        store.meta.insert("config".into(), self.name.clone());
+        store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_manifest() -> Json {
+        Json::parse(
+            r#"{"configs": {"tiny": {"vocab":512,"d_model":256,"n_layers":8,
+            "n_heads":8,"d_inter":704,"seq":64,"batch":8,"ranks":[8,16,32],
+            "default_rank":16,"lora_rank":1,"mora_rank":16,
+            "total_params":6600000}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_config() {
+        let cfg = ModelConfig::from_manifest(&tiny_manifest(), "tiny").unwrap();
+        assert_eq!(cfg.d_model, 256);
+        assert_eq!(cfg.middle_layers(), vec![1, 2, 3, 4, 5, 6]);
+        assert_eq!(cfg.ranks, vec![8, 16, 32]);
+    }
+
+    #[test]
+    fn init_has_all_dense_params() {
+        let cfg = ModelConfig::from_manifest(&tiny_manifest(), "tiny").unwrap();
+        let mut rng = Rng::new(0, 0);
+        let store = cfg.init_dense(&mut rng);
+        for name in cfg.dense_param_names() {
+            assert!(store.contains(&name), "missing {name}");
+        }
+        // Param count matches the analytic formula.
+        let expect = cfg.vocab * cfg.d_model
+            + cfg.n_layers * cfg.params_per_layer()
+            + cfg.d_model;
+        assert_eq!(store.total_params(), expect);
+    }
+
+    #[test]
+    fn bytes_saved_positive_and_ordered() {
+        let cfg = ModelConfig::from_manifest(&tiny_manifest(), "tiny").unwrap();
+        let all = cfg.bytes_saved_per_layer("all", 16).unwrap();
+        let gate = cfg.bytes_saved_per_layer("gate", 16).unwrap();
+        let qk = cfg.bytes_saved_per_layer("qk", 16).unwrap();
+        assert!(all > gate && gate > qk, "all={all} gate={gate} qk={qk}");
+        // Larger rank saves less.
+        let all32 = cfg.bytes_saved_per_layer("all", 32).unwrap();
+        assert!(all32 < all);
+    }
+
+    #[test]
+    fn combo_lookup() {
+        assert!(combo_targets("all").is_ok());
+        assert!(combo_targets("nope").is_err());
+    }
+}

@@ -1,0 +1,227 @@
+//! PEFT adapters and the paper's comparison experiments (§6.2, Figs 5–7):
+//! CURing's ΔU update vs LoRA, MoRA and CURLoRA under equal trainable-
+//! parameter budgets.
+//!
+//! Adapter parameters live in their own [`TensorStore`]; the switched
+//! full-model artifacts blend them on top of the (possibly cured) base
+//! model. Initialization follows each method's paper: LoRA A~N(0,σ),
+//! B=0; MoRA M=0; CURLoRA C/R sampled by *inverted* WANDA importance
+//! with U=0.
+
+use crate::calib::Calibration;
+use crate::linalg::Mat;
+use crate::model::ModelConfig;
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::Rng;
+use crate::wanda::select_inverted;
+use anyhow::{bail, Result};
+
+/// Adapter family for the comparison experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Adapter {
+    /// CURing's own ΔU update (the healing parameterization).
+    Du,
+    Lora,
+    Mora,
+    CurLora,
+}
+
+impl Adapter {
+    pub const ALL: [Adapter; 4] = [Adapter::Du, Adapter::Lora, Adapter::Mora, Adapter::CurLora];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Adapter::Du => "curing-du",
+            Adapter::Lora => "lora",
+            Adapter::Mora => "mora",
+            Adapter::CurLora => "curlora",
+        }
+    }
+
+    /// Artifact-name suffix.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Adapter::Du => "du",
+            Adapter::Lora => "lora",
+            Adapter::Mora => "mora",
+            Adapter::CurLora => "curlora",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Adapter> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "du" | "curing" | "curing-du" => Adapter::Du,
+            "lora" => Adapter::Lora,
+            "mora" => Adapter::Mora,
+            "curlora" => Adapter::CurLora,
+            other => bail!("unknown adapter '{other}'"),
+        })
+    }
+}
+
+/// Trainable-parameter count per adapter (for the equal-budget tables).
+pub fn trainable_params(adapter: Adapter, cfg: &ModelConfig) -> usize {
+    let mids = cfg.middle_layers().len();
+    let r = cfg.default_rank;
+    let per_layer = match adapter {
+        Adapter::Du | Adapter::CurLora => 3 * r * r,
+        Adapter::Mora => 3 * cfg.mora_rank * cfg.mora_rank,
+        Adapter::Lora => {
+            let rl = cfg.lora_rank;
+            let (dq, _) = cfg.weight_dims("q");
+            let (dg_in, dg_out) = cfg.weight_dims("gate");
+            rl * (dq + dq) * 2 + rl * (dg_in + dg_out)
+        }
+    };
+    mids * per_layer
+}
+
+/// Initialize an adapter store for the middle layers.
+///
+/// * `Du` returns an empty store — ΔU tensors already live in the cured
+///   student store (created at compression time).
+/// * `CurLora` needs the *dense* teacher weights plus calibration norms to
+///   do its inverted-importance sampling.
+pub fn init_adapters(
+    adapter: Adapter,
+    cfg: &ModelConfig,
+    teacher: &TensorStore,
+    calib: &Calibration,
+    rng: &mut Rng,
+) -> Result<TensorStore> {
+    let mut store = TensorStore::new();
+    store.meta.insert("adapter".into(), adapter.label().into());
+    let mids = cfg.middle_layers();
+    match adapter {
+        Adapter::Du => {}
+        Adapter::Lora => {
+            let rl = cfg.lora_rank;
+            for &l in &mids {
+                for proj in ["q", "k", "gate"] {
+                    let (m, n) = cfg.weight_dims(proj);
+                    store.insert(
+                        format!("L{l}.lora_a_{proj}"),
+                        Tensor::from_f32(&[m, rl], rng.normal_vec(m * rl, 0.02)),
+                    );
+                    store.insert(format!("L{l}.lora_b_{proj}"), Tensor::zeros(&[rl, n]));
+                }
+            }
+        }
+        Adapter::Mora => {
+            let rm = cfg.mora_rank;
+            for &l in &mids {
+                for proj in ["q", "k", "gate"] {
+                    store.insert(format!("L{l}.mora_m_{proj}"), Tensor::zeros(&[rm, rm]));
+                }
+            }
+        }
+        Adapter::CurLora => {
+            let rc = cfg.default_rank;
+            for &l in &mids {
+                for proj in ["q", "k", "gate"] {
+                    let w = Mat::from_tensor(teacher.get(&format!("L{l}.w_{proj}"))?)?;
+                    let xnorm = calib.xnorm(l, proj);
+                    let (rows, cols) = select_inverted(&w, xnorm, rc);
+                    store.insert(format!("L{l}.cl_c_{proj}"), w.select_cols(&cols).to_tensor());
+                    store.insert(format!("L{l}.cl_u_{proj}"), Tensor::zeros(&[rc, rc]));
+                    store.insert(format!("L{l}.cl_r_{proj}"), w.select_rows(&rows).to_tensor());
+                }
+            }
+        }
+    }
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Json;
+
+    fn cfg() -> ModelConfig {
+        let j = Json::parse(
+            r#"{"configs":{"t":{"vocab":64,"d_model":16,"n_layers":4,"n_heads":2,
+            "d_inter":32,"seq":8,"batch":2,"ranks":[4],"default_rank":4,
+            "lora_rank":1,"mora_rank":4,"total_params":0}}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_manifest(&j, "t").unwrap()
+    }
+
+    fn calib(cfg: &ModelConfig) -> Calibration {
+        Calibration {
+            attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+            ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+            angular: vec![0.0; cfg.n_layers],
+            n_examples: 1,
+        }
+    }
+
+    #[test]
+    fn budgets_are_comparable() {
+        let c = cfg();
+        let du = trainable_params(Adapter::Du, &c);
+        let mora = trainable_params(Adapter::Mora, &c);
+        let curlora = trainable_params(Adapter::CurLora, &c);
+        // du == mora == curlora by construction.
+        assert_eq!(du, mora);
+        assert_eq!(du, curlora);
+        // LoRA at its minimum rank is within a small factor.
+        let lora = trainable_params(Adapter::Lora, &c);
+        assert!(lora < du * 4, "lora={lora} du={du}");
+    }
+
+    #[test]
+    fn lora_init_shapes() {
+        let c = cfg();
+        let mut rng = Rng::new(1, 0);
+        let teacher = c.init_dense(&mut rng);
+        let s = init_adapters(Adapter::Lora, &c, &teacher, &calib(&c), &mut rng).unwrap();
+        let a = s.get("L1.lora_a_q").unwrap();
+        assert_eq!(a.shape, vec![16, 1]);
+        let b = s.get("L1.lora_b_gate").unwrap();
+        assert_eq!(b.shape, vec![1, 32]);
+        // B starts at zero (LoRA's delta is initially inert).
+        assert!(b.f32s().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn curlora_uses_real_weight_slices() {
+        let c = cfg();
+        let mut rng = Rng::new(2, 0);
+        let teacher = c.init_dense(&mut rng);
+        let s = init_adapters(Adapter::CurLora, &c, &teacher, &calib(&c), &mut rng).unwrap();
+        let cl_c = s.get("L1.cl_c_q").unwrap();
+        assert_eq!(cl_c.shape, vec![16, 4]);
+        // U starts at zero → adapter contributes nothing initially.
+        let u = s.get("L1.cl_u_q").unwrap();
+        assert!(u.f32s().unwrap().iter().all(|&x| x == 0.0));
+        // Every column of cl_c is an actual column of the dense weight.
+        let w = Mat::from_tensor(teacher.get("L1.w_q").unwrap()).unwrap();
+        let cm = Mat::from_tensor(cl_c).unwrap();
+        for j in 0..4 {
+            let col = cm.col(j);
+            let found = (0..w.cols).any(|wc| {
+                let wcol = w.col(wc);
+                wcol.iter().zip(&col).all(|(a, b)| (a - b).abs() < 1e-6)
+            });
+            assert!(found, "cl_c column {j} not a column of W");
+        }
+    }
+
+    #[test]
+    fn du_adapter_is_empty_store() {
+        let c = cfg();
+        let mut rng = Rng::new(3, 0);
+        let teacher = c.init_dense(&mut rng);
+        let s = init_adapters(Adapter::Du, &c, &teacher, &calib(&c), &mut rng).unwrap();
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn adapter_parse() {
+        for a in Adapter::ALL {
+            assert_eq!(Adapter::parse(a.tag()).unwrap(), a);
+        }
+        assert!(Adapter::parse("nah").is_err());
+    }
+}

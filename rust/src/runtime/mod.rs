@@ -1,0 +1,307 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`). The manifest written by
+//! `python/compile/aot.py` drives generic marshalling: artifacts declare
+//! named, shaped inputs/outputs, and callers bind tensors by name — the
+//! runtime validates shapes/dtypes and fixes positional order.
+//!
+//! Interchange is HLO **text**: xla_extension 0.5.1 rejects jax>=0.5
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids (see /opt/xla-example/README.md).
+
+use crate::tensor::{Data, DType, Tensor};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// One named input/output slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Parsed manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub config: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// A compiled artifact plus its spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Json,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative PJRT execute count (perf accounting).
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let mpath = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("missing {} — run `make artifacts`", mpath.display()))?;
+        let manifest = Json::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Default artifacts location: `$CURING_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("CURING_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::new(Path::new(&dir))
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .at(&["artifacts"])
+            .and_then(|a| a.as_obj())
+            .map(|o| o.iter().map(|(k, _)| k.to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<ArtifactSpec> {
+        let a = self
+            .manifest
+            .at(&["artifacts", name])
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+            a.at(&[key])
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+                .iter()
+                .map(|e| {
+                    Ok(IoSpec {
+                        name: e
+                            .at(&["name"])
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("io missing name"))?
+                            .to_string(),
+                        shape: e
+                            .at(&["shape"])
+                            .and_then(|v| v.as_arr())
+                            .ok_or_else(|| anyhow!("io missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().unwrap())
+                            .collect(),
+                        dtype: DType::from_tag(
+                            e.at(&["dtype"]).and_then(|v| v.as_str()).unwrap_or("f32"),
+                        )?,
+                    })
+                })
+                .collect()
+        };
+        Ok(ArtifactSpec {
+            name: name.to_string(),
+            file: a
+                .at(&["file"])
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string(),
+            config: a.at(&["config"]).and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            inputs: parse_io("inputs")?,
+            outputs: parse_io("outputs")?,
+        })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.spec(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse hlo {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exec = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute by name with named bindings; returns outputs keyed by the
+    /// manifest's output names.
+    pub fn execute(&self, name: &str, bindings: &Bindings) -> Result<HashMap<String, Tensor>> {
+        let exe = self.load(name)?;
+        self.execute_loaded(&exe, bindings)
+    }
+
+    pub fn execute_loaded(
+        &self,
+        exe: &Executable,
+        bindings: &Bindings,
+    ) -> Result<HashMap<String, Tensor>> {
+        let lits = self.marshal_inputs(&exe.spec, bindings)?;
+        let outs = exe
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", exe.spec.name))?;
+        self.exec_count.set(self.exec_count.get() + 1);
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", exe.spec.name))?;
+        let pieces = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", exe.spec.name))?;
+        if pieces.len() != exe.spec.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                exe.spec.name,
+                pieces.len(),
+                exe.spec.outputs.len()
+            );
+        }
+        let mut out = HashMap::new();
+        for (io, lit) in exe.spec.outputs.iter().zip(pieces) {
+            out.insert(io.name.clone(), literal_to_tensor(&lit, io)?);
+        }
+        Ok(out)
+    }
+
+    fn marshal_inputs(&self, spec: &ArtifactSpec, bindings: &Bindings) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(spec.inputs.len());
+        for io in &spec.inputs {
+            let t = bindings
+                .get(&io.name)
+                .ok_or_else(|| anyhow!("artifact {}: missing input '{}'", spec.name, io.name))?;
+            if t.shape != io.shape {
+                bail!(
+                    "artifact {}: input '{}' shape {:?} != expected {:?}",
+                    spec.name,
+                    io.name,
+                    t.shape,
+                    io.shape
+                );
+            }
+            if t.dtype() != io.dtype {
+                bail!(
+                    "artifact {}: input '{}' dtype {:?} != expected {:?}",
+                    spec.name,
+                    io.name,
+                    t.dtype(),
+                    io.dtype
+                );
+            }
+            lits.push(tensor_to_literal(t)?);
+        }
+        Ok(lits)
+    }
+}
+
+/// Named tensor bindings for one call. Entries can borrow long-lived
+/// tensors (weights in a store) or own temporaries (merged U = U0 + dU,
+/// scalars) — no copies happen until literal marshalling.
+#[derive(Default)]
+pub struct Bindings<'a> {
+    map: HashMap<String, BindRef<'a>>,
+}
+
+enum BindRef<'a> {
+    Borrowed(&'a Tensor),
+    Owned(Tensor),
+}
+
+impl<'a> Bindings<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Chainable borrow-binding.
+    pub fn bind(mut self, name: impl Into<String>, t: &'a Tensor) -> Self {
+        self.map.insert(name.into(), BindRef::Borrowed(t));
+        self
+    }
+
+    pub fn bind_mut(&mut self, name: impl Into<String>, t: &'a Tensor) {
+        self.map.insert(name.into(), BindRef::Borrowed(t));
+    }
+
+    /// Bind an owned scalar/temporary (stored inside the bindings).
+    pub fn bind_owned(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), BindRef::Owned(t));
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name).map(|b| match b {
+            BindRef::Borrowed(t) => *t,
+            BindRef::Owned(t) => t,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // Single-copy path: build the literal directly from raw host bytes.
+    // (The obvious `Literal::vec1(..).reshape(..)` costs two extra full
+    // copies per argument — measured 1.32x end-to-end on the pretrain
+    // step, see EXPERIMENTS.md §Perf.)
+    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
+        Data::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+        Data::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
+        .map_err(|e| anyhow!("create literal: {e:?}"))
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // Safety: f32 slices are always validly viewable as bytes (alignment
+    // shrinks, length scales by 4).
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn literal_to_tensor(lit: &xla::Literal, io: &IoSpec) -> Result<Tensor> {
+    match io.dtype {
+        DType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?;
+            Ok(Tensor::from_f32(&io.shape, v))
+        }
+        DType::I32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("literal to i32 vec: {e:?}"))?;
+            Ok(Tensor::from_i32(&io.shape, v))
+        }
+    }
+}

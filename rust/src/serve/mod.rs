@@ -1,0 +1,181 @@
+//! Threaded batching evaluation server.
+//!
+//! A vLLM-router-style front for the compressed/original model variants:
+//! client threads submit single-sequence scoring requests; the server
+//! (which owns the PJRT runtime — the `xla` handles are not `Send`, so
+//! the server runs on the *calling* thread and clients are spawned)
+//! groups them into model-batch-sized PJRT calls with a wait-time cap,
+//! and reports latency/throughput/occupancy statistics.
+
+use crate::data::{Corpus, CorpusKind, Vocab};
+use crate::pipeline::{LayerPlan, Pipeline};
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::stats::percentile;
+use anyhow::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// One scoring request: a full sequence (tokens + next-token targets).
+pub struct Request {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub enqueued: Instant,
+    pub respond: Sender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub mean_nll: f64,
+    pub latency_ms: f64,
+}
+
+/// Server-side metrics over one run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub served: usize,
+    pub batches: usize,
+    pub mean_batch_occupancy: f64,
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub throughput_seq_per_s: f64,
+    pub wall_s: f64,
+}
+
+pub struct BatchingServer<'p> {
+    pub pipe: &'p Pipeline<'p>,
+    pub store: &'p TensorStore,
+    pub plan: LayerPlan,
+    /// Max time to wait for a full batch before flushing a partial one.
+    pub max_wait: Duration,
+}
+
+impl<'p> BatchingServer<'p> {
+    /// Serve until `n_expected` requests have been answered (or the
+    /// channel closes). Runs on the calling thread.
+    pub fn run(&self, rx: Receiver<Request>, n_expected: usize) -> Result<ServeStats> {
+        let cfg = &self.pipe.cfg;
+        let (b, s) = (cfg.batch, cfg.seq);
+        let mut latencies = Vec::new();
+        let mut stats = ServeStats::default();
+        let t0 = Instant::now();
+        let mut pending: Vec<Request> = Vec::new();
+        while stats.served < n_expected {
+            // Fill a batch (bounded wait).
+            let deadline = Instant::now() + self.max_wait;
+            while pending.len() < b {
+                let now = Instant::now();
+                if now >= deadline && !pending.is_empty() {
+                    break;
+                }
+                let timeout = deadline.saturating_duration_since(now).max(Duration::from_millis(1));
+                match rx.recv_timeout(timeout) {
+                    Ok(req) => pending.push(req),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        if !pending.is_empty() {
+                            break;
+                        }
+                        if stats.served >= n_expected {
+                            break;
+                        }
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            if pending.is_empty() {
+                break;
+            }
+            let occupancy = pending.len().min(b);
+            // Pad a partial batch by repeating the first request.
+            let mut toks = Vec::with_capacity(b * s);
+            let mut tgts = Vec::with_capacity(b * s);
+            for i in 0..b {
+                let r = &pending[i.min(pending.len() - 1)];
+                toks.extend_from_slice(&r.tokens);
+                tgts.extend_from_slice(&r.targets);
+            }
+            let tokens = Tensor::from_i32(&[b, s], toks);
+            let targets = Tensor::from_i32(&[b, s], tgts);
+            let nll = self.pipe.nll(self.store, &self.plan, &tokens, &targets)?;
+            let nll_data = nll.f32s()?;
+            for (i, req) in pending.drain(..).take(occupancy).enumerate() {
+                let row = &nll_data[i * s..(i + 1) * s];
+                let mean = row.iter().map(|&x| x as f64).sum::<f64>() / s as f64;
+                let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+                latencies.push(latency_ms);
+                let _ = req.respond.send(Response { mean_nll: mean, latency_ms });
+                stats.served += 1;
+            }
+            stats.batches += 1;
+            stats.mean_batch_occupancy += occupancy as f64;
+        }
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        if stats.batches > 0 {
+            stats.mean_batch_occupancy /= stats.batches as f64;
+        }
+        stats.p50_latency_ms = percentile(&latencies, 50.0);
+        stats.p95_latency_ms = percentile(&latencies, 95.0);
+        stats.throughput_seq_per_s = stats.served as f64 / stats.wall_s.max(1e-9);
+        Ok(stats)
+    }
+}
+
+/// Spawn `n_clients` threads each submitting `per_client` corpus-drawn
+/// requests with `think_ms` spacing; returns the request receiver plus
+/// the response receivers (client threads detach and exit on their own).
+pub fn spawn_clients(
+    vocab: &Vocab,
+    kind: CorpusKind,
+    seq: usize,
+    n_clients: usize,
+    per_client: usize,
+    think_ms: u64,
+) -> (Receiver<Request>, Vec<Receiver<Response>>) {
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for c in 0..n_clients {
+        let (rtx, rrx) = channel::<Response>();
+        resp_rxs.push(rrx);
+        let tx = tx.clone();
+        let vocab = vocab.clone();
+        std::thread::spawn(move || {
+            let mut corpus = Corpus::new(kind, 9000 + c as u64);
+            for _ in 0..per_client {
+                let s = corpus.sequence(&vocab, seq + 1);
+                let req = Request {
+                    tokens: s[..seq].to_vec(),
+                    targets: s[1..seq + 1].to_vec(),
+                    enqueued: Instant::now(),
+                    respond: rtx.clone(),
+                };
+                if tx.send(req).is_err() {
+                    return;
+                }
+                if think_ms > 0 {
+                    std::thread::sleep(Duration::from_millis(think_ms));
+                }
+            }
+        });
+    }
+    (rx, resp_rxs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_threads_produce_requests() {
+        let vocab = Vocab::build();
+        let (rx, _resp) = spawn_clients(&vocab, CorpusKind::SynthC4, 16, 2, 3, 0);
+        let mut n = 0;
+        while let Ok(req) = rx.recv_timeout(Duration::from_secs(5)) {
+            assert_eq!(req.tokens.len(), 16);
+            assert_eq!(req.targets.len(), 16);
+            n += 1;
+            if n == 6 {
+                break;
+            }
+        }
+        assert_eq!(n, 6);
+    }
+}

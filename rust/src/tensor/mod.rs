@@ -1,0 +1,320 @@
+//! Host-side tensors and the on-disk tensor store.
+//!
+//! `Tensor` is the host currency of the coordinator: row-major f32 or i32
+//! data plus a shape. The store persists named tensors (model weights,
+//! optimizer state, CUR factors) as one little-endian binary blob per
+//! tensor plus a JSON index — Python never touches these files; weights
+//! are born and live on the Rust side.
+
+use crate::util::{Json, JsonObj};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn from_tag(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype tag {other}"),
+        }
+    }
+}
+
+/// Row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; shape.iter().product()]) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor { shape: vec![], data: Data::F32(vec![x]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Frobenius norm (f32 tensors).
+    pub fn fro_norm(&self) -> f64 {
+        match &self.data {
+            Data::F32(v) => v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt(),
+            Data::I32(v) => v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt(),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len() * 4);
+        match &self.data {
+            Data::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    fn from_bytes(shape: Vec<usize>, dtype: DType, bytes: &[u8]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * 4 {
+            bail!("expected {} bytes for shape {:?}, got {}", n * 4, shape, bytes.len());
+        }
+        let t = match dtype {
+            DType::F32 => {
+                let v: Vec<f32> =
+                    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+                Tensor { shape, data: Data::F32(v) }
+            }
+            DType::I32 => {
+                let v: Vec<i32> =
+                    bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+                Tensor { shape, data: Data::I32(v) }
+            }
+        };
+        Ok(t)
+    }
+}
+
+/// A named collection of tensors, persistable to a directory.
+#[derive(Debug, Clone, Default)]
+pub struct TensorStore {
+    tensors: BTreeMap<String, Tensor>,
+    /// Free-form metadata persisted alongside (config name, step, notes).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl TensorStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("tensor '{name}' not in store"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.tensors.get_mut(name).ok_or_else(|| anyhow!("tensor '{name}' not in store"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.tensors.remove(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total parameter count of f32 tensors (the "model size" number).
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Persist to `dir/index.json` + `dir/<mangled>.bin`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut index = JsonObj::new();
+        let mut meta = JsonObj::new();
+        for (k, v) in &self.meta {
+            meta.insert(k.clone(), Json::Str(v.clone()));
+        }
+        index.insert("meta", Json::Obj(meta));
+        let mut entries = JsonObj::new();
+        for (name, t) in &self.tensors {
+            let file = format!("{}.bin", mangle(name));
+            std::fs::File::create(dir.join(&file))?.write_all(&t.to_bytes())?;
+            let mut e = JsonObj::new();
+            e.insert("file", Json::Str(file));
+            e.insert("dtype", Json::Str(t.dtype().tag().to_string()));
+            e.insert(
+                "shape",
+                Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+            entries.insert(name.clone(), Json::Obj(e));
+        }
+        index.insert("tensors", Json::Obj(entries));
+        std::fs::write(dir.join("index.json"), Json::Obj(index).to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<TensorStore> {
+        let text = std::fs::read_to_string(dir.join("index.json"))
+            .with_context(|| format!("no tensor store at {}", dir.display()))?;
+        let idx = Json::parse(&text)?;
+        let mut store = TensorStore::new();
+        if let Some(meta) = idx.at(&["meta"]).and_then(|m| m.as_obj()) {
+            for (k, v) in meta.iter() {
+                if let Some(s) = v.as_str() {
+                    store.meta.insert(k.to_string(), s.to_string());
+                }
+            }
+        }
+        let entries = idx
+            .at(&["tensors"])
+            .and_then(|t| t.as_obj())
+            .ok_or_else(|| anyhow!("index.json missing 'tensors'"))?;
+        for (name, e) in entries.iter() {
+            let file = e.at(&["file"]).and_then(|f| f.as_str()).unwrap();
+            let dtype = DType::from_tag(e.at(&["dtype"]).and_then(|d| d.as_str()).unwrap())?;
+            let shape: Vec<usize> = e
+                .at(&["shape"])
+                .and_then(|s| s.as_arr())
+                .unwrap()
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect();
+            let mut bytes = Vec::new();
+            std::fs::File::open(dir.join(file))?.read_to_end(&mut bytes)?;
+            store.insert(name, Tensor::from_bytes(shape, dtype, &bytes)?);
+        }
+        Ok(store)
+    }
+}
+
+/// Filesystem-safe name mangling ('.' is common in param names).
+fn mangle(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' }).collect()
+}
+
+/// Resolve a store path under the run directory.
+pub fn store_path(root: &Path, name: &str) -> PathBuf {
+    root.join("stores").join(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_store() {
+        let dir = std::env::temp_dir().join(format!("curing_store_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = TensorStore::new();
+        s.insert("L0.w_q", Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        s.insert("tokens", Tensor::from_i32(&[4], vec![1, 2, 3, 4]));
+        s.meta.insert("config".into(), "tiny".into());
+        s.save(&dir).unwrap();
+        let s2 = TensorStore::load(&dir).unwrap();
+        assert_eq!(s2.get("L0.w_q").unwrap(), s.get("L0.w_q").unwrap());
+        assert_eq!(s2.get("tokens").unwrap(), s.get("tokens").unwrap());
+        assert_eq!(s2.meta.get("config").map(|s| s.as_str()), Some("tiny"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fro_norm() {
+        let t = Tensor::from_f32(&[2, 2], vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((t.fro_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_mismatch_panics() {
+        let r = std::panic::catch_unwind(|| Tensor::from_f32(&[2, 2], vec![1.0]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn byte_roundtrip_preserves_bits() {
+        let t = Tensor::from_f32(&[3], vec![f32::MIN_POSITIVE, -0.0, 1e30]);
+        let b = t.to_bytes();
+        let t2 = Tensor::from_bytes(vec![3], DType::F32, &b).unwrap();
+        assert_eq!(t, t2);
+    }
+}

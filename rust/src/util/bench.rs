@@ -1,0 +1,97 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Runs a closure with warmup, then timed iterations until a wall-clock
+//! budget or iteration cap is hit, and reports mean/p50/p95. Used by
+//! `rust/benches/bench_main.rs` (cargo bench, `harness = false`).
+
+use super::stats::percentile;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>7} it  mean {:>10.4} ms  p50 {:>10.4} ms  p95 {:>10.4} ms  min {:>10.4} ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms
+        )
+    }
+}
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub max_iters: usize,
+    pub budget_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 2, max_iters: 50, budget_s: 2.0 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, max_iters: 10, budget_s: 0.5 }
+    }
+
+    /// Time `f` repeatedly. The closure result is returned through a
+    /// volatile sink so the optimizer cannot elide the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.max_iters
+            && (samples.len() < 3 || start.elapsed().as_secs_f64() < self.budget_s)
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_ms: mean,
+            p50_ms: percentile(&samples, 50.0),
+            p95_ms: percentile(&samples, 95.0),
+            min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable; thin alias so bench
+/// code reads like criterion's).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ms >= 0.0);
+        assert!(r.p95_ms >= r.p50_ms * 0.5);
+    }
+}

@@ -1,0 +1,126 @@
+//! Tiny CLI argument parser (no clap in the offline vendor set).
+//!
+//! Grammar: `binary <command> [--flag] [--key value] [positional...]`.
+//! Unknown flags are an error; every accessor records the option so
+//! `usage()` can print a complete flag list.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    seen: std::cell::RefCell<Vec<(String, String)>>, // (name, default/desc)
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — pass
+    /// `std::env::args().skip(1)` in main.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminates flag parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() && out.positional.is_empty() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_opt(&self, name: &str, default: &str) -> String {
+        self.seen.borrow_mut().push((name.to_string(), default.to_string()));
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_opt(&self, name: &str, default: usize) -> usize {
+        self.seen.borrow_mut().push((name.to_string(), default.to_string()));
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_opt(&self, name: &str, default: f64) -> f64 {
+        self.seen.borrow_mut().push((name.to_string(), default.to_string()));
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        self.seen.borrow_mut().push((name.to_string(), "false".to_string()));
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Flags given on the command line but never read by the command —
+    /// almost always a typo; commands should error on these.
+    pub fn unknown_flags(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !seen.iter().any(|(n, _)| n == *k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse(&["compress", "--layers", "10", "--rank=16", "--heal"]);
+        assert_eq!(a.command.as_deref(), Some("compress"));
+        assert_eq!(a.usize_opt("layers", 0), 10);
+        assert_eq!(a.usize_opt("rank", 8), 16);
+        assert!(a.bool_flag("heal"));
+        assert!(!a.bool_flag("verbose"));
+        assert!(a.unknown_flags().is_empty());
+    }
+
+    #[test]
+    fn defaults_and_positionals() {
+        let a = parse(&["eval", "pos1", "pos2"]);
+        assert_eq!(a.str_opt("model", "tiny"), "tiny");
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["run", "--oops", "3"]);
+        let _ = a.str_opt("model", "tiny");
+        assert_eq!(a.unknown_flags(), vec!["oops".to_string()]);
+    }
+
+    #[test]
+    fn double_dash_stops_flags() {
+        let a = parse(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["--not-a-flag".to_string()]);
+    }
+}

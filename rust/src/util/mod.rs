@@ -1,0 +1,13 @@
+//! Infrastructure substrates: JSON, RNG, CLI, stats, bench harness.
+//!
+//! The offline vendor set has no serde/clap/rand/criterion, so these are
+//! first-class modules of the library (and tested like everything else).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use json::{Json, JsonObj};
+pub use rng::Rng;

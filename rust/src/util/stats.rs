@@ -1,0 +1,138 @@
+//! Small statistics + timing helpers shared by eval, benches and serving
+//! metrics.
+
+use std::time::Instant;
+
+/// Online mean/min/max/std accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a copied, sorted sample (fine at our sample sizes).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Simple scope timer: `let _t = Timer::new("phase");` prints on drop if
+/// CURING_TIMING=1; or use `elapsed_ms` manually.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Self {
+        Timer { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if std::env::var("CURING_TIMING").as_deref() == Ok("1") {
+            eprintln!("[timing] {}: {:.1} ms", self.label, self.elapsed_ms());
+        }
+    }
+}
+
+/// GiB formatting used by the Table 1 / Table 2 reproductions.
+pub fn gib(bytes: f64) -> f64 {
+    bytes / (1024.0 * 1024.0 * 1024.0)
+}
+
+pub fn mib(bytes: f64) -> f64 {
+    bytes / (1024.0 * 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_moments() {
+        let mut a = Accum::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            a.add(x);
+        }
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - 2.5).abs() < 1e-12);
+        assert!((a.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 4.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+    }
+
+    #[test]
+    fn gib_mib() {
+        assert!((gib(1024.0 * 1024.0 * 1024.0) - 1.0).abs() < 1e-12);
+        assert!((mib(1024.0 * 1024.0) - 1.0).abs() < 1e-12);
+    }
+}
