@@ -102,22 +102,34 @@ fn main() -> Result<()> {
     println!("      healed:   {}", healed.row());
 
     // 6. A few full-model KD steps (0.9*KD + 0.1*CE) to exercise the
-    // switched training path end to end.
-    println!("[6/6] full-model KD (switched artifact, 5 steps)...");
-    let runner = SwitchedRunner::new("tiny", "du", StepMode::Heal);
-    let mut adapters = TensorStore::new();
-    let mut fullopt = TensorStore::new();
-    for step in 0..5 {
-        let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
-        let tokens = curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
-        let targets = curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
-        let loss = runner.step(
-            &pipe, &dense, &mut student, &mut adapters, &mut fullopt, &tokens, &targets,
-            None, 1e-4, step + 1,
-        )?;
-        println!("        step {step}: loss {loss:.4}");
-    }
-    let final_suite = ctx.eval_suite(&pipe, &student, &plan, &sizes)?;
+    // switched training path end to end. The switched graphs are AOT
+    // artifacts, so this leg needs the pjrt backend.
+    let final_suite = if ctx.rt.supports_artifacts() {
+        println!("[6/6] full-model KD (switched artifact, 5 steps)...");
+        let runner = SwitchedRunner::new("tiny", "du", StepMode::Heal);
+        let mut adapters = TensorStore::new();
+        let mut fullopt = TensorStore::new();
+        for step in 0..5 {
+            let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
+            let tokens =
+                curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
+            let targets =
+                curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
+            let loss = runner.step(
+                &pipe, &dense, &mut student, &mut adapters, &mut fullopt, &tokens, &targets,
+                None, 1e-4, step + 1,
+            )?;
+            println!("        step {step}: loss {loss:.4}");
+        }
+        ctx.eval_suite(&pipe, &student, &plan, &sizes)?
+    } else {
+        println!(
+            "[6/6] skipping full-model switched KD (needs --features pjrt + `make artifacts`; \
+             backend: {})",
+            ctx.rt.backend_name()
+        );
+        healed.clone()
+    };
     println!("      final:    {}", final_suite.row());
 
     // Record + summary.

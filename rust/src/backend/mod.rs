@@ -1,0 +1,199 @@
+//! Pluggable execution backends.
+//!
+//! The coordinator composes per-layer model operations (embed, dense or
+//! CURed transformer layers, calibration taps, the LM head, train/heal
+//! optimizer steps). A [`Backend`] supplies those operations:
+//!
+//! * [`native`] — pure-Rust CPU reference implementation. Executes the
+//!   Llama-mini math directly against host tensors with blocked,
+//!   multithreaded matmuls. Always available; needs no artifacts.
+//! * `pjrt` (behind the `pjrt` feature) — the AOT artifact executor on
+//!   top of the `xla` PJRT crate: loads HLO-text artifacts emitted by the
+//!   Python build step and dispatches each operation to its compiled
+//!   executable. The accelerator path when `make artifacts` has run.
+//!
+//! Everything above the backend (pipeline, compression, healing drivers,
+//! evaluation, serving) is backend-agnostic: it hands the backend plain
+//! tensors plus a [`LayerParams`] view of the weights and gets tensors
+//! back.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use crate::model::ModelConfig;
+use crate::runtime::{ArtifactSpec, Bindings};
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::Json;
+use anyhow::{bail, Result};
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+/// One projection's weights: a dense matrix or a CUR factor chain. `u` is
+/// the *merged* link matrix `U = U₀ + ΔU` (owned when merged host-side —
+/// it is r×r, negligible).
+pub enum Proj<'a> {
+    Dense(&'a Tensor),
+    Cured { c: &'a Tensor, u: Cow<'a, Tensor>, r: &'a Tensor },
+}
+
+impl Proj<'_> {
+    pub fn is_cured(&self) -> bool {
+        matches!(self, Proj::Cured { .. })
+    }
+
+    /// CUR rank, if cured.
+    pub fn rank(&self) -> Option<usize> {
+        match self {
+            Proj::Dense(_) => None,
+            Proj::Cured { u, .. } => u.shape.first().copied(),
+        }
+    }
+}
+
+/// One transformer layer's parameters, as the backend consumes them.
+/// Only q/k/gate are curable (paper §4.1); the rest are always dense.
+pub struct LayerParams<'a> {
+    pub ln1: &'a Tensor,
+    pub ln2: &'a Tensor,
+    pub q: Proj<'a>,
+    pub k: Proj<'a>,
+    pub v: &'a Tensor,
+    pub o: &'a Tensor,
+    pub gate: Proj<'a>,
+    pub up: &'a Tensor,
+    pub down: &'a Tensor,
+}
+
+/// Output of one calibration layer forward (WANDA taps, paper §4.2).
+pub struct CalibOut {
+    /// Layer output, (b, s, d).
+    pub y: Tensor,
+    /// Σx² per attention-input feature, (d,).
+    pub attn_sumsq: Tensor,
+    /// Σx² per FFN-input feature, (d,).
+    pub ffn_sumsq: Tensor,
+    /// Raw attention input (post-ln1), (b, s, d).
+    pub attn_in: Tensor,
+    /// Raw FFN input (post-ln2), (b, s, d).
+    pub ffn_in: Tensor,
+}
+
+/// Output of one layer-wise KD healing step.
+pub struct HealOut {
+    /// Mean squared error against the teacher layer output.
+    pub loss: f64,
+    /// The student layer's output (propagated to the next layer).
+    pub y_student: Tensor,
+}
+
+/// A model-execution backend. All tensors are host [`Tensor`]s; the
+/// backend owns marshalling to whatever representation it executes.
+pub trait Backend {
+    /// Short identifier ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Model-configuration manifest (`{"configs": {...}, ...}`).
+    fn manifest(&self) -> &Json;
+
+    /// Cumulative executed-operation count (perf accounting).
+    fn exec_count(&self) -> u64;
+
+    /// Token embedding: (b, s) i32 tokens × (vocab, d) table → (b, s, d).
+    fn embed(&self, cfg: &ModelConfig, emb: &Tensor, tokens: &Tensor) -> Result<Tensor>;
+
+    /// One transformer layer forward: (b, s, d) → (b, s, d).
+    fn layer_forward(&self, cfg: &ModelConfig, p: &LayerParams, x: &Tensor) -> Result<Tensor>;
+
+    /// Layer forward with calibration taps (dense layers only in practice).
+    fn layer_forward_calib(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<CalibOut>;
+
+    /// Final-norm + tied-embedding head: (b, s, d) → (b, s, vocab) logits.
+    fn head_logits(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+    ) -> Result<Tensor>;
+
+    /// Per-token negative log-likelihood: (b, s, d) × targets → (b, s).
+    fn head_nll(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+        targets: &Tensor,
+    ) -> Result<Tensor>;
+
+    /// One Adam step of dense-model pretraining (cross-entropy loss).
+    /// Updates parameters in `store` and moments (`m.*`/`v.*`) in `opt`
+    /// in place; returns the batch loss. `t` is the 1-based step for
+    /// Adam bias correction.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &self,
+        cfg: &ModelConfig,
+        store: &mut TensorStore,
+        opt: &mut TensorStore,
+        tokens: &Tensor,
+        targets: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64>;
+
+    /// One layer-wise KD healing step on layer `layer` (paper §4.5):
+    /// Adam on the ΔU factors of the layer's cured projections against
+    /// the MSE to `y_teacher`. Updates `L{layer}.du_*` in `student` and
+    /// `heal.L{layer}.{m,v}.du_*` moments in `opt` in place.
+    #[allow(clippy::too_many_arguments)]
+    fn heal_step(
+        &self,
+        cfg: &ModelConfig,
+        student: &mut TensorStore,
+        opt: &mut TensorStore,
+        layer: usize,
+        x: &Tensor,
+        y_teacher: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<HealOut>;
+
+    /// Whether this backend can execute arbitrary named AOT artifacts
+    /// (the switched full-model train/eval graphs used by the PEFT
+    /// comparison experiments).
+    fn supports_artifacts(&self) -> bool {
+        false
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    fn artifact_spec(&self, name: &str) -> Result<ArtifactSpec> {
+        bail!(
+            "backend '{}' cannot introspect AOT artifact '{name}' \
+             (build with --features pjrt and run `make artifacts`)",
+            self.name()
+        )
+    }
+
+    fn execute_artifact(
+        &self,
+        name: &str,
+        bindings: &Bindings,
+    ) -> Result<HashMap<String, Tensor>> {
+        let _ = bindings;
+        bail!(
+            "backend '{}' cannot execute AOT artifact '{name}' \
+             (build with --features pjrt and run `make artifacts`)",
+            self.name()
+        )
+    }
+}

@@ -1,0 +1,286 @@
+//! Forward passes of the native backend: the Llama-mini transformer
+//! layer (RMSNorm → RoPE causal attention → RMSNorm → SwiGLU FFN, both
+//! with residuals), dense or CUR-factored q/k/gate chains, and the tied
+//! LM head. Every forward caches the intermediates the backward pass
+//! (train/heal steps) consumes — at coordinator scale the caches are a
+//! few MiB and recomputation would dominate the step cost.
+
+use super::math::{
+    add_inplace, matmul_nn, matmul_nt, rmsnorm_fwd, rope_apply, rope_table, silu,
+};
+use crate::backend::{LayerParams, Proj};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+
+/// Problem dimensions of one layer call.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct Dims {
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    pub di: usize,
+    pub nh: usize,
+    pub dh: usize,
+}
+
+pub(super) fn want<'a>(t: &'a Tensor, shape: &[usize], what: &str) -> Result<&'a [f32]> {
+    ensure!(
+        t.shape.as_slice() == shape,
+        "{what}: expected shape {shape:?}, got {:?}",
+        t.shape
+    );
+    t.f32s()
+}
+
+/// (in_dim, out_dim) of a projection, with full shape validation.
+pub(super) fn proj_dims(p: &Proj, what: &str) -> Result<(usize, usize)> {
+    match p {
+        Proj::Dense(w) => {
+            ensure!(w.shape.len() == 2, "{what}: dense weight must be rank 2");
+            Ok((w.shape[0], w.shape[1]))
+        }
+        Proj::Cured { c, u, r } => {
+            ensure!(
+                c.shape.len() == 2 && u.shape.len() == 2 && r.shape.len() == 2,
+                "{what}: CUR factors must be rank 2"
+            );
+            let rank = c.shape[1];
+            ensure!(
+                u.shape == [rank, rank] && r.shape[0] == rank,
+                "{what}: inconsistent CUR ranks (C {:?}, U {:?}, R {:?})",
+                c.shape,
+                u.shape,
+                r.shape
+            );
+            Ok((c.shape[0], r.shape[1]))
+        }
+    }
+}
+
+/// Cached intermediates of a cured projection chain.
+pub(super) struct ProjCache {
+    /// h·C, (rows × r).
+    pub hc: Vec<f32>,
+    /// (h·C)·U, (rows × r).
+    pub hcu: Vec<f32>,
+}
+
+/// Projection forward: returns the output plus the chain cache when cured.
+pub(super) fn proj_forward(
+    h: &[f32],
+    rows: usize,
+    p: &Proj,
+    what: &str,
+) -> Result<(Vec<f32>, Option<ProjCache>)> {
+    let (m, n) = proj_dims(p, what)?;
+    ensure!(h.len() == rows * m, "{what}: input is not rows×{m}");
+    match p {
+        Proj::Dense(w) => Ok((matmul_nn(h, w.f32s()?, rows, m, n), None)),
+        Proj::Cured { c, u, r } => {
+            let rank = c.shape[1];
+            let hc = matmul_nn(h, c.f32s()?, rows, m, rank);
+            let hcu = matmul_nn(&hc, u.f32s()?, rows, rank, rank);
+            let out = matmul_nn(&hcu, r.f32s()?, rows, rank, n);
+            Ok((out, Some(ProjCache { hc, hcu })))
+        }
+    }
+}
+
+/// Everything one layer forward produces, kept for the backward pass.
+pub(super) struct LayerCache {
+    pub dims: Dims,
+    /// Post-ln1 attention input, (bs × d).
+    pub h1: Vec<f32>,
+    pub inv1: Vec<f32>,
+    /// q/k post-RoPE, v; all (bs × d).
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Causal softmax probabilities, (b·nh·s·s).
+    pub probs: Vec<f32>,
+    /// Concatenated head outputs before the o-projection, (bs × d).
+    pub att: Vec<f32>,
+    /// Post-attention residual stream, (bs × d).
+    pub x2: Vec<f32>,
+    pub inv2: Vec<f32>,
+    /// Post-ln2 FFN input, (bs × d).
+    pub h2: Vec<f32>,
+    /// Gate pre-activation (bs × di), up branch, silu(g)⊙up.
+    pub g: Vec<f32>,
+    pub up: Vec<f32>,
+    pub act: Vec<f32>,
+    /// Layer output, (bs × d).
+    pub y: Vec<f32>,
+    pub qc: Option<ProjCache>,
+    pub kc: Option<ProjCache>,
+    pub gc: Option<ProjCache>,
+}
+
+pub(super) fn layer_dims(
+    n_heads: usize,
+    p: &LayerParams,
+    b: usize,
+    s: usize,
+    d: usize,
+) -> Result<Dims> {
+    ensure!(n_heads > 0 && d % n_heads == 0, "d_model {d} not divisible by {n_heads} heads");
+    let dh = d / n_heads;
+    ensure!(dh % 2 == 0, "head dim {dh} must be even for RoPE");
+    let (qi, qo) = proj_dims(&p.q, "w_q")?;
+    let (ki, ko) = proj_dims(&p.k, "w_k")?;
+    ensure!(qi == d && qo == d && ki == d && ko == d, "q/k projections must be {d}×{d}");
+    let (gi, di) = proj_dims(&p.gate, "w_gate")?;
+    ensure!(gi == d, "gate projection input dim {gi} != {d}");
+    ensure!(p.up.shape == [d, di], "w_up must be {d}×{di}, got {:?}", p.up.shape);
+    ensure!(p.down.shape == [di, d], "w_down must be {di}×{d}, got {:?}", p.down.shape);
+    Ok(Dims { b, s, d, di, nh: n_heads, dh })
+}
+
+/// Causal multi-head attention forward; returns (softmax probs, concat
+/// head outputs). Single-threaded: at coordinator scale the projections
+/// around it dominate.
+pub(super) fn attention_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dims: Dims,
+) -> (Vec<f32>, Vec<f32>) {
+    let Dims { b, s, d, nh, dh, .. } = dims;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut probs = vec![0.0f32; b * nh * s * s];
+    let mut att = vec![0.0f32; b * s * d];
+    for bi in 0..b {
+        for h in 0..nh {
+            let pbase = (bi * nh + h) * s * s;
+            for si in 0..s {
+                let qoff = (bi * s + si) * d + h * dh;
+                let qrow = &q[qoff..qoff + dh];
+                let prow = &mut probs[pbase + si * s..pbase + (si + 1) * s];
+                let mut maxv = f32::NEG_INFINITY;
+                for sj in 0..=si {
+                    let koff = (bi * s + sj) * d + h * dh;
+                    let krow = &k[koff..koff + dh];
+                    let mut dot = 0.0f32;
+                    for (a, b2) in qrow.iter().zip(krow) {
+                        dot += a * b2;
+                    }
+                    let sc = dot * scale;
+                    prow[sj] = sc;
+                    if sc > maxv {
+                        maxv = sc;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for p in prow.iter_mut().take(si + 1) {
+                    *p = (*p - maxv).exp();
+                    sum += *p;
+                }
+                let isum = 1.0 / sum;
+                for sj in 0..=si {
+                    prow[sj] *= isum;
+                    let voff = (bi * s + sj) * d + h * dh;
+                    let vrow = &v[voff..voff + dh];
+                    let aoff = (bi * s + si) * d + h * dh;
+                    let pval = prow[sj];
+                    for (jj, &vv) in vrow.iter().enumerate() {
+                        att[aoff + jj] += pval * vv;
+                    }
+                }
+            }
+        }
+    }
+    (probs, att)
+}
+
+/// Full layer forward with caches. `x` is the flat (bs × d) input.
+pub(super) fn layer_forward_cached(
+    dims: Dims,
+    p: &LayerParams,
+    x: &[f32],
+) -> Result<LayerCache> {
+    let Dims { b, s, d, di, nh, dh } = dims;
+    let bs = b * s;
+    ensure!(x.len() == bs * d, "layer input length mismatch");
+    let ln1 = want(p.ln1, &[d], "ln1")?;
+    let ln2 = want(p.ln2, &[d], "ln2")?;
+    let wv = want(p.v, &[d, d], "w_v")?;
+    let wo = want(p.o, &[d, d], "w_o")?;
+    let wup = want(p.up, &[d, di], "w_up")?;
+    let wdown = want(p.down, &[di, d], "w_down")?;
+
+    let (h1, inv1) = rmsnorm_fwd(x, ln1, bs, d);
+    let (mut q, qc) = proj_forward(&h1, bs, &p.q, "w_q")?;
+    let (mut k, kc) = proj_forward(&h1, bs, &p.k, "w_k")?;
+    let v = matmul_nn(&h1, wv, bs, d, d);
+    let (cos, sin) = rope_table(s, dh / 2);
+    rope_apply(&mut q, b, s, nh, dh, &cos, &sin, 1.0);
+    rope_apply(&mut k, b, s, nh, dh, &cos, &sin, 1.0);
+    let (probs, att) = attention_fwd(&q, &k, &v, dims);
+    let mut x2 = matmul_nn(&att, wo, bs, d, d);
+    add_inplace(&mut x2, x);
+
+    let (h2, inv2) = rmsnorm_fwd(&x2, ln2, bs, d);
+    let (g, gc) = proj_forward(&h2, bs, &p.gate, "w_gate")?;
+    let up = matmul_nn(&h2, wup, bs, d, di);
+    let mut act = vec![0.0f32; bs * di];
+    for i in 0..bs * di {
+        act[i] = silu(g[i]) * up[i];
+    }
+    let mut y = matmul_nn(&act, wdown, bs, di, d);
+    add_inplace(&mut y, &x2);
+
+    Ok(LayerCache {
+        dims,
+        h1,
+        inv1,
+        q,
+        k,
+        v,
+        probs,
+        att,
+        x2,
+        inv2,
+        h2,
+        g,
+        up,
+        act,
+        y,
+        qc,
+        kc,
+        gc,
+    })
+}
+
+/// Head forward: final RMSNorm then tied-embedding logits. Returns
+/// (logits (rows × vocab), xf (rows × d), per-row inverse RMS).
+pub(super) fn head_forward(
+    x: &[f32],
+    ln_f: &[f32],
+    emb: &[f32],
+    rows: usize,
+    d: usize,
+    vocab: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (xf, inv) = rmsnorm_fwd(x, ln_f, rows, d);
+    let logits = matmul_nt(&xf, emb, rows, d, vocab);
+    (logits, xf, inv)
+}
+
+/// Per-row negative log-likelihood from logits.
+pub(super) fn nll_rows(logits: &[f32], targets: &[i32], rows: usize, vocab: usize) -> Result<Vec<f32>> {
+    ensure!(targets.len() == rows, "targets length mismatch");
+    let mut out = vec![0.0f32; rows];
+    for r in 0..rows {
+        let t = targets[r];
+        ensure!(
+            (0..vocab as i32).contains(&t),
+            "target token {t} out of vocab range 0..{vocab}"
+        );
+        let row = &logits[r * vocab..(r + 1) * vocab];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let logz =
+            maxv as f64 + row.iter().map(|&x| ((x - maxv) as f64).exp()).sum::<f64>().ln();
+        out[r] = (logz - row[t as usize] as f64) as f32;
+    }
+    Ok(out)
+}

@@ -1,0 +1,386 @@
+//! f32 compute kernels for the native CPU backend.
+//!
+//! The hot paths are the three matmul flavors (NN, N·Bᵀ, Aᵀ·B), blocked
+//! row-wise and fanned out over `std::thread::scope` workers; everything
+//! else (RMSNorm, RoPE, SiLU) is memory-bound and stays single-threaded.
+//! Thread count comes from `CURING_THREADS` or the machine's available
+//! parallelism; small problems stay on the calling thread.
+
+use std::sync::OnceLock;
+
+/// Below this many multiply-adds a matmul is not worth fanning out.
+const PAR_MIN_FLOPS: usize = 1 << 17;
+
+fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("CURING_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Split `out` (m rows × n cols) into per-thread row chunks and run
+/// `f(first_row, chunk)` on each; falls back to one call in place when
+/// the problem is small.
+fn par_row_chunks<F>(out: &mut [f32], m: usize, n: usize, flops: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let threads = if flops < PAR_MIN_FLOPS { 1 } else { num_threads().min(m) };
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk_rows = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, chunk) in out.chunks_mut(chunk_rows * n).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(t * chunk_rows, chunk));
+        }
+    });
+}
+
+/// C (m×n) = A (m×k) · B (k×n), all row-major.
+pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_nn: A size");
+    assert_eq!(b.len(), k * n, "matmul_nn: B size");
+    let mut out = vec![0.0f32; m * n];
+    par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
+        for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+            let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
+            for (kk, &av) in a_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let b_row = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// C (m×n) = A (m×k) · Bᵀ where B is (n×k) row-major: rows of C are dot
+/// products of A rows with B rows (never materializes the transpose).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "matmul_nt: A size");
+    assert_eq!(b.len(), n * k, "matmul_nt: B size");
+    let mut out = vec![0.0f32; m * n];
+    par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
+        for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+            let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let b_row = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in a_row.iter().zip(b_row) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+
+/// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major (the
+/// gradient-accumulation shape: dW = Xᵀ·dY).
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), k * m, "matmul_tn: A size");
+    assert_eq!(b.len(), k * n, "matmul_tn: B size");
+    let mut out = vec![0.0f32; m * n];
+    par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
+        let rows = chunk.len() / n;
+        for kk in 0..k {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            let a_row = &a[kk * m..(kk + 1) * m];
+            for ri in 0..rows {
+                let av = a_row[lo + ri];
+                if av == 0.0 {
+                    continue;
+                }
+                let out_row = &mut chunk[ri * n..(ri + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+pub fn add_inplace(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+pub const RMS_EPS: f32 = 1e-5;
+
+/// RMSNorm over the last dim: y = x / sqrt(mean(x²)+ε) ⊙ w. Returns the
+/// normalized output and the per-row inverse RMS (cached for backward).
+pub fn rmsnorm_fwd(x: &[f32], w: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), d);
+    let mut y = vec![0.0f32; rows * d];
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let s = 1.0 / (ms + RMS_EPS).sqrt();
+        inv[r] = s;
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * s * w[j];
+        }
+    }
+    (y, inv)
+}
+
+/// RMSNorm backward: given dL/dy, the forward input `x`, the scale `w`
+/// and the cached per-row inverse RMS, returns (dL/dx, dL/dw).
+pub fn rmsnorm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    w: &[f32],
+    inv: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dw = vec![0.0f32; d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let s = inv[r];
+        // dn = dy ⊙ w; dx = s·dn − x · s³ · (dn·x)/d
+        let mut dot = 0.0f32;
+        for j in 0..d {
+            dot += dyr[j] * w[j] * xr[j];
+            dw[j] += dyr[j] * xr[j] * s;
+        }
+        let c = s * s * s * dot / d as f32;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            dxr[j] = s * dyr[j] * w[j] - xr[j] * c;
+        }
+    }
+    (dx, dw)
+}
+
+/// Precompute the RoPE rotation table for `s` positions × `half` pairs
+/// (Llama convention, base 10000): returns (cos, sin), each s×half.
+pub fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut cos = vec![0.0f32; s * half];
+    let mut sin = vec![0.0f32; s * half];
+    let freqs: Vec<f64> = (0..half)
+        .map(|i| (10000.0f64).powf(-(2.0 * i as f64) / (2.0 * half as f64)))
+        .collect();
+    for pos in 0..s {
+        for (i, &freq) in freqs.iter().enumerate() {
+            let angle = pos as f64 * freq;
+            cos[pos * half + i] = angle.cos() as f32;
+            sin[pos * half + i] = angle.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place to a (b·s, nh·dh) q/k buffer. `sign` = 1.0 rotates
+/// forward; −1.0 applies the inverse rotation (the backward pass).
+pub fn rope_apply(
+    x: &mut [f32],
+    b: usize,
+    s: usize,
+    nh: usize,
+    dh: usize,
+    cos: &[f32],
+    sin: &[f32],
+    sign: f32,
+) {
+    let d = nh * dh;
+    let half = dh / 2;
+    debug_assert_eq!(x.len(), b * s * d);
+    for row in 0..b * s {
+        let pos = row % s;
+        let xr = &mut x[row * d..(row + 1) * d];
+        for h in 0..nh {
+            for i in 0..half {
+                let c = cos[pos * half + i];
+                let sn = sin[pos * half + i] * sign;
+                let j0 = h * dh + 2 * i;
+                let (x0, x1) = (xr[j0], xr[j0 + 1]);
+                xr[j0] = x0 * c - x1 * sn;
+                xr[j0 + 1] = x0 * sn + x1 * c;
+            }
+        }
+    }
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d(silu)/dx = σ(x)·(1 + x·(1 − σ(x))).
+pub fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        rng.normal_vec(n, 1.0)
+    }
+
+    fn to_mat(v: &[f32], r: usize, c: usize) -> Mat {
+        Mat { rows: r, cols: c, data: v.iter().map(|&x| x as f64).collect() }
+    }
+
+    fn close(a: &[f32], m: &Mat, tol: f32) {
+        assert_eq!(a.len(), m.data.len());
+        for (x, y) in a.iter().zip(&m.data) {
+            assert!((x - *y as f32).abs() < tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_flavors_match_reference() {
+        let mut rng = Rng::new(1, 0);
+        let (m, k, n) = (13, 17, 11);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bt = rand_vec(&mut rng, n * k);
+        let at = rand_vec(&mut rng, k * m);
+        close(
+            &matmul_nn(&a, &b, m, k, n),
+            &to_mat(&a, m, k).matmul(&to_mat(&b, k, n)),
+            1e-4,
+        );
+        close(
+            &matmul_nt(&a, &bt, m, k, n),
+            &to_mat(&a, m, k).matmul(&to_mat(&bt, n, k).transpose()),
+            1e-4,
+        );
+        close(
+            &matmul_tn(&at, &b, k, m, n),
+            &to_mat(&at, k, m).transpose().matmul(&to_mat(&b, k, n)),
+            1e-4,
+        );
+    }
+
+    #[test]
+    fn matmul_parallel_path_matches_serial() {
+        // Big enough to cross PAR_MIN_FLOPS with a row count that does
+        // not divide evenly across workers.
+        let mut rng = Rng::new(2, 0);
+        let (m, k, n) = (67, 64, 96);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let got = matmul_nn(&a, &b, m, k, n);
+        let want = to_mat(&a, m, k).matmul(&to_mat(&b, k, n));
+        close(&got, &want, 1e-3);
+    }
+
+    #[test]
+    fn rmsnorm_forward_unit_scale() {
+        let x = vec![3.0f32, -4.0];
+        let w = vec![1.0f32, 1.0];
+        let (y, inv) = rmsnorm_fwd(&x, &w, 1, 2);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = 12.5f32.sqrt();
+        assert!((y[0] - 3.0 / rms).abs() < 1e-4);
+        assert!((y[1] + 4.0 / rms).abs() < 1e-4);
+        assert!((inv[0] - 1.0 / rms).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_backward_matches_finite_difference() {
+        let mut rng = Rng::new(3, 0);
+        let (rows, d) = (2, 5);
+        let x = rand_vec(&mut rng, rows * d);
+        let w: Vec<f32> = (0..d).map(|i| 0.5 + 0.2 * i as f32).collect();
+        // Scalar loss: L = Σ c_i y_i with fixed random c.
+        let c = rand_vec(&mut rng, rows * d);
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = rmsnorm_fwd(x, &w, rows, d);
+            y.iter().zip(&c).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let (_, inv) = rmsnorm_fwd(&x, &w, rows, d);
+        let (dx, dw) = rmsnorm_bwd(&c, &x, &w, &inv, rows, d);
+        let eps = 1e-3f32;
+        for i in [0usize, 3, 7, 9] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+            assert!(
+                (num - dx[i] as f64).abs() < 1e-2 * (1.0 + num.abs()),
+                "dx[{i}]: analytic {} vs numeric {num}",
+                dx[i]
+            );
+        }
+        // dw via finite differences on one weight.
+        let lw = |w2: &[f32]| -> f64 {
+            let (y, _) = rmsnorm_fwd(&x, w2, rows, d);
+            y.iter().zip(&c).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let mut wp = w.clone();
+        wp[2] += eps;
+        let mut wm = w.clone();
+        wm[2] -= eps;
+        let num = (lw(&wp) - lw(&wm)) / (2.0 * eps as f64);
+        assert!((num - dw[2] as f64).abs() < 1e-2 * (1.0 + num.abs()));
+    }
+
+    #[test]
+    fn rope_roundtrips_and_preserves_norm() {
+        let (b, s, nh, dh) = (1, 4, 2, 6);
+        let mut rng = Rng::new(4, 0);
+        let x0 = rand_vec(&mut rng, b * s * nh * dh);
+        let (cos, sin) = rope_table(s, dh / 2);
+        let mut x = x0.clone();
+        rope_apply(&mut x, b, s, nh, dh, &cos, &sin, 1.0);
+        // Norm is preserved (rotations are orthogonal).
+        let n0: f32 = x0.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-3 * n0);
+        // Position 0 is unrotated.
+        let d = nh * dh;
+        assert_eq!(&x[..d], &x0[..d]);
+        // Inverse rotation restores the input.
+        rope_apply(&mut x, b, s, nh, dh, &cos, &sin, -1.0);
+        for (a, b_) in x.iter().zip(&x0) {
+            assert!((a - b_).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn silu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let eps = 1e-3;
+            let num = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((num - silu_grad(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,558 @@
+//! The pure-Rust CPU backend.
+//!
+//! Executes the full per-layer operation set (embed, RMSNorm, RoPE causal
+//! attention, SwiGLU FFN, dense and CURed linear chains, calibration Σx²
+//! taps, the tied LM head) plus the train and layer-heal optimizer steps
+//! directly against host tensors — no artifacts, no Python, no external
+//! runtime. Hot-path matmuls are blocked and multithreaded
+//! ([`math`]); set `CURING_THREADS` to pin the worker count.
+//!
+//! This backend defines the reference semantics of the model family; the
+//! `pjrt` artifact backend must agree with it.
+
+mod forward;
+mod math;
+mod train;
+
+use crate::backend::{Backend, CalibOut, HealOut, LayerParams};
+use crate::model::ModelConfig;
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::Json;
+use anyhow::{ensure, Result};
+use std::cell::Cell;
+
+/// Built-in model-family manifest: the native backend needs no artifacts
+/// directory, so the configurations ship with the binary. `tiny` mirrors
+/// the AOT build's headline config; `mini` is a fast-test size.
+const NATIVE_MANIFEST: &str = r#"{
+  "backend": "native",
+  "configs": {
+    "tiny": {"vocab": 512, "d_model": 256, "n_layers": 8, "n_heads": 8,
+             "d_inter": 704, "seq": 64, "batch": 8, "ranks": [8, 16, 32],
+             "default_rank": 16, "lora_rank": 1, "mora_rank": 16,
+             "total_params": 6557952},
+    "mini": {"vocab": 384, "d_model": 32, "n_layers": 4, "n_heads": 4,
+             "d_inter": 64, "seq": 32, "batch": 2, "ranks": [4, 8],
+             "default_rank": 8, "lora_rank": 1, "mora_rank": 8,
+             "total_params": 53536}
+  }
+}"#;
+
+pub struct NativeBackend {
+    manifest: Json,
+    execs: Cell<u64>,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend {
+            manifest: Json::parse(NATIVE_MANIFEST).expect("builtin manifest parses"),
+            execs: Cell::new(0),
+        }
+    }
+
+    fn tick(&self) {
+        self.execs.set(self.execs.get() + 1);
+    }
+
+    fn xdims(x: &Tensor) -> Result<(usize, usize, usize)> {
+        ensure!(x.shape.len() == 3, "expected (b, s, d) input, got {:?}", x.shape);
+        Ok((x.shape[0], x.shape[1], x.shape[2]))
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Json {
+        &self.manifest
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.execs.get()
+    }
+
+    fn embed(&self, _cfg: &ModelConfig, emb: &Tensor, tokens: &Tensor) -> Result<Tensor> {
+        self.tick();
+        ensure!(tokens.shape.len() == 2, "tokens must be (b, s), got {:?}", tokens.shape);
+        ensure!(emb.shape.len() == 2, "emb must be (vocab, d), got {:?}", emb.shape);
+        let (b, s) = (tokens.shape[0], tokens.shape[1]);
+        let (vocab, d) = (emb.shape[0], emb.shape[1]);
+        let toks = tokens.i32s()?;
+        let e = emb.f32s()?;
+        let mut out = vec![0.0f32; b * s * d];
+        for (r, &tk) in toks.iter().enumerate() {
+            ensure!((0..vocab as i32).contains(&tk), "token {tk} out of vocab 0..{vocab}");
+            out[r * d..(r + 1) * d].copy_from_slice(&e[tk as usize * d..(tk as usize + 1) * d]);
+        }
+        Ok(Tensor::from_f32(&[b, s, d], out))
+    }
+
+    fn layer_forward(&self, cfg: &ModelConfig, p: &LayerParams, x: &Tensor) -> Result<Tensor> {
+        self.tick();
+        let (b, s, d) = Self::xdims(x)?;
+        let dims = forward::layer_dims(cfg.n_heads, p, b, s, d)?;
+        let cache = forward::layer_forward_cached(dims, p, x.f32s()?)?;
+        Ok(Tensor::from_f32(&x.shape, cache.y))
+    }
+
+    fn layer_forward_calib(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<CalibOut> {
+        self.tick();
+        let (b, s, d) = Self::xdims(x)?;
+        let dims = forward::layer_dims(cfg.n_heads, p, b, s, d)?;
+        let cache = forward::layer_forward_cached(dims, p, x.f32s()?)?;
+        let colwise_sumsq = |m: &[f32]| -> Tensor {
+            let mut acc = vec![0.0f32; d];
+            for row in m.chunks_exact(d) {
+                for (a, &v) in acc.iter_mut().zip(row) {
+                    *a += v * v;
+                }
+            }
+            Tensor::from_f32(&[d], acc)
+        };
+        Ok(CalibOut {
+            attn_sumsq: colwise_sumsq(&cache.h1),
+            ffn_sumsq: colwise_sumsq(&cache.h2),
+            attn_in: Tensor::from_f32(&x.shape, cache.h1),
+            ffn_in: Tensor::from_f32(&x.shape, cache.h2),
+            y: Tensor::from_f32(&x.shape, cache.y),
+        })
+    }
+
+    fn head_logits(
+        &self,
+        _cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+    ) -> Result<Tensor> {
+        self.tick();
+        let (b, s, d) = Self::xdims(x)?;
+        ensure!(emb.shape.len() == 2 && emb.shape[1] == d, "emb must be (vocab, {d})");
+        let vocab = emb.shape[0];
+        let lnf = forward::want(ln_f, &[d], "ln_f")?;
+        let (logits, _, _) = forward::head_forward(x.f32s()?, lnf, emb.f32s()?, b * s, d, vocab);
+        Ok(Tensor::from_f32(&[b, s, vocab], logits))
+    }
+
+    fn head_nll(
+        &self,
+        _cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+        targets: &Tensor,
+    ) -> Result<Tensor> {
+        self.tick();
+        let (b, s, d) = Self::xdims(x)?;
+        ensure!(emb.shape.len() == 2 && emb.shape[1] == d, "emb must be (vocab, {d})");
+        ensure!(targets.shape == [b, s], "targets must be ({b}, {s})");
+        let vocab = emb.shape[0];
+        let lnf = forward::want(ln_f, &[d], "ln_f")?;
+        let (logits, _, _) = forward::head_forward(x.f32s()?, lnf, emb.f32s()?, b * s, d, vocab);
+        let nll = forward::nll_rows(&logits, targets.i32s()?, b * s, vocab)?;
+        Ok(Tensor::from_f32(&[b, s], nll))
+    }
+
+    fn train_step(
+        &self,
+        cfg: &ModelConfig,
+        store: &mut TensorStore,
+        opt: &mut TensorStore,
+        tokens: &Tensor,
+        targets: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        self.tick();
+        train::train_step_impl(cfg, store, opt, tokens, targets, lr, t)
+    }
+
+    fn heal_step(
+        &self,
+        cfg: &ModelConfig,
+        student: &mut TensorStore,
+        opt: &mut TensorStore,
+        layer: usize,
+        x: &Tensor,
+        y_teacher: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<HealOut> {
+        self.tick();
+        train::heal_step_impl(cfg, student, opt, layer, x, y_teacher, lr, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Proj;
+    use crate::util::Rng;
+    use std::borrow::Cow;
+
+    fn test_cfg(json: &str, name: &str) -> ModelConfig {
+        ModelConfig::from_manifest(&Json::parse(json).unwrap(), name).unwrap()
+    }
+
+    fn small_cfg() -> ModelConfig {
+        test_cfg(
+            r#"{"configs":{"t":{"vocab":32,"d_model":16,"n_layers":2,"n_heads":2,
+            "d_inter":24,"seq":8,"batch":2,"ranks":[4],"default_rank":4,
+            "lora_rank":1,"mora_rank":4,"total_params":0}}}"#,
+            "t",
+        )
+    }
+
+    fn rand_t(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
+        Tensor::from_f32(shape, rng.normal_vec(shape.iter().product(), std))
+    }
+
+    /// Dense LayerParams over owned tensors (tests only).
+    struct OwnedLayer {
+        ln1: Tensor,
+        ln2: Tensor,
+        wq: Tensor,
+        wk: Tensor,
+        wv: Tensor,
+        wo: Tensor,
+        wgate: Tensor,
+        wup: Tensor,
+        wdown: Tensor,
+    }
+
+    impl OwnedLayer {
+        fn random(rng: &mut Rng, d: usize, di: usize, std: f32) -> OwnedLayer {
+            OwnedLayer {
+                ln1: Tensor::from_f32(&[d], vec![1.0; d]),
+                ln2: Tensor::from_f32(&[d], vec![1.0; d]),
+                wq: rand_t(rng, &[d, d], std),
+                wk: rand_t(rng, &[d, d], std),
+                wv: rand_t(rng, &[d, d], std),
+                wo: rand_t(rng, &[d, d], std),
+                wgate: rand_t(rng, &[d, di], std),
+                wup: rand_t(rng, &[d, di], std),
+                wdown: rand_t(rng, &[di, d], std),
+            }
+        }
+
+        fn params(&self) -> LayerParams<'_> {
+            LayerParams {
+                ln1: &self.ln1,
+                ln2: &self.ln2,
+                q: Proj::Dense(&self.wq),
+                k: Proj::Dense(&self.wk),
+                gate: Proj::Dense(&self.wgate),
+                v: &self.wv,
+                o: &self.wo,
+                up: &self.wup,
+                down: &self.wdown,
+            }
+        }
+    }
+
+    #[test]
+    fn embed_gathers_rows() {
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let mut rng = Rng::new(1, 0);
+        let emb = rand_t(&mut rng, &[cfg.vocab, cfg.d_model], 1.0);
+        let tokens = Tensor::from_i32(&[1, 3], vec![5, 0, 31]);
+        let x = be.embed(&cfg, &emb, &tokens).unwrap();
+        assert_eq!(x.shape, vec![1, 3, cfg.d_model]);
+        let e = emb.f32s().unwrap();
+        let xs = x.f32s().unwrap();
+        let d = cfg.d_model;
+        assert_eq!(&xs[..d], &e[5 * d..6 * d]);
+        assert_eq!(&xs[d..2 * d], &e[..d]);
+        // Out-of-vocab token is an error, not UB.
+        let bad = Tensor::from_i32(&[1, 1], vec![32]);
+        assert!(be.embed(&cfg, &emb, &bad).is_err());
+    }
+
+    #[test]
+    fn layer_forward_is_finite_and_causal() {
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let (d, di) = (cfg.d_model, cfg.d_inter);
+        let mut rng = Rng::new(2, 0);
+        let layer = OwnedLayer::random(&mut rng, d, di, 0.2);
+        let x = rand_t(&mut rng, &[1, 4, d], 1.0);
+        let y = be.layer_forward(&cfg, &layer.params(), &x).unwrap();
+        assert_eq!(y.shape, x.shape);
+        assert!(y.f32s().unwrap().iter().all(|v| v.is_finite()));
+        // Causality: changing a later token must not affect earlier outputs.
+        let mut x2 = x.clone();
+        {
+            let xs = x2.f32s_mut().unwrap();
+            for j in 0..d {
+                xs[3 * d + j] += 1.0;
+            }
+        }
+        let y2 = be.layer_forward(&cfg, &layer.params(), &x2).unwrap();
+        let (a, b) = (y.f32s().unwrap(), y2.f32s().unwrap());
+        for i in 0..3 * d {
+            assert!((a[i] - b[i]).abs() < 1e-6, "position {} leaked", i / d);
+        }
+        assert!((0..d).any(|j| (a[3 * d + j] - b[3 * d + j]).abs() > 1e-4));
+    }
+
+    #[test]
+    fn cured_chain_matches_equivalent_dense() {
+        // A cured projection with C·U·R == W must produce the same layer
+        // output as the dense weight.
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let (d, di) = (cfg.d_model, cfg.d_inter);
+        let mut rng = Rng::new(3, 0);
+        let mut layer = OwnedLayer::random(&mut rng, d, di, 0.2);
+        let r = 4usize;
+        let c = rand_t(&mut rng, &[d, r], 0.4);
+        let u = rand_t(&mut rng, &[r, r], 0.4);
+        let rr = rand_t(&mut rng, &[r, d], 0.4);
+        // Dense equivalent W = C·U·R.
+        let cu = math::matmul_nn(c.f32s().unwrap(), u.f32s().unwrap(), d, r, r);
+        let w = math::matmul_nn(&cu, rr.f32s().unwrap(), d, r, d);
+        layer.wq = Tensor::from_f32(&[d, d], w);
+        let x = rand_t(&mut rng, &[2, 4, d], 1.0);
+        let y_dense = be.layer_forward(&cfg, &layer.params(), &x).unwrap();
+        let mut p = layer.params();
+        p.q = Proj::Cured { c: &c, u: Cow::Borrowed(&u), r: &rr };
+        let y_cur = be.layer_forward(&cfg, &p, &x).unwrap();
+        let (a, b) = (y_dense.f32s().unwrap(), y_cur.f32s().unwrap());
+        for (x1, x2) in a.iter().zip(b) {
+            assert!((x1 - x2).abs() < 1e-3, "{x1} vs {x2}");
+        }
+    }
+
+    #[test]
+    fn calib_taps_are_consistent() {
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let mut rng = Rng::new(4, 0);
+        let layer = OwnedLayer::random(&mut rng, cfg.d_model, cfg.d_inter, 0.2);
+        let x = rand_t(&mut rng, &[2, 5, cfg.d_model], 1.0);
+        let y = be.layer_forward(&cfg, &layer.params(), &x).unwrap();
+        let calib = be.layer_forward_calib(&cfg, &layer.params(), &x).unwrap();
+        assert_eq!(calib.y, y, "calib forward must match the plain forward");
+        // Σx² taps must equal the column-wise sum of squares of the taps'
+        // own raw inputs.
+        let d = cfg.d_model;
+        for (sumsq, raw) in [(&calib.attn_sumsq, &calib.attn_in), (&calib.ffn_sumsq, &calib.ffn_in)]
+        {
+            assert_eq!(sumsq.shape, vec![d]);
+            assert_eq!(raw.shape, x.shape);
+            let rawf = raw.f32s().unwrap();
+            for j in 0..d {
+                let want: f32 = rawf.chunks_exact(d).map(|row| row[j] * row[j]).sum();
+                let got = sumsq.f32s().unwrap()[j];
+                assert!((want - got).abs() < 1e-3 * (1.0 + want.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn head_nll_matches_logits_softmax() {
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let (d, v) = (cfg.d_model, cfg.vocab);
+        let mut rng = Rng::new(5, 0);
+        let emb = rand_t(&mut rng, &[v, d], 0.5);
+        let ln_f = Tensor::from_f32(&[d], vec![1.0; d]);
+        let x = rand_t(&mut rng, &[1, 3, d], 1.0);
+        let targets = Tensor::from_i32(&[1, 3], vec![7, 0, 31]);
+        let logits = be.head_logits(&cfg, &x, &ln_f, &emb).unwrap();
+        let nll = be.head_nll(&cfg, &x, &ln_f, &emb, &targets).unwrap();
+        assert_eq!(logits.shape, vec![1, 3, v]);
+        assert_eq!(nll.shape, vec![1, 3]);
+        let lf = logits.f32s().unwrap();
+        let tg = targets.i32s().unwrap();
+        for r in 0..3 {
+            let row = &lf[r * v..(r + 1) * v];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let logz = maxv as f64
+                + row.iter().map(|&z| ((z - maxv) as f64).exp()).sum::<f64>().ln();
+            let want = logz - row[tg[r] as usize] as f64;
+            let got = nll.f32s().unwrap()[r] as f64;
+            assert!((want - got).abs() < 1e-4, "{want} vs {got}");
+        }
+        // Out-of-range target errors gracefully.
+        let bad = Tensor::from_i32(&[1, 3], vec![7, 0, 32]);
+        assert!(be.head_nll(&cfg, &x, &ln_f, &emb, &bad).is_err());
+    }
+
+    #[test]
+    fn dense_layer_gradients_match_finite_difference() {
+        // Scalar probe loss L = Σ c ⊙ layer(x): checks backprop through
+        // attention, RoPE, both RMSNorms and the SwiGLU FFN.
+        let cfg = small_cfg();
+        let (d, di, nh) = (cfg.d_model, cfg.d_inter, cfg.n_heads);
+        let (b, s) = (1usize, 4usize);
+        let mut rng = Rng::new(6, 0);
+        let layer = OwnedLayer::random(&mut rng, d, di, 0.3);
+        let x = rng.normal_vec(b * s * d, 1.0);
+        let c = rng.normal_vec(b * s * d, 1.0);
+        let loss_of = |layer: &OwnedLayer, x: &[f32]| -> f64 {
+            let p = layer.params();
+            let dims = forward::layer_dims(nh, &p, b, s, d).unwrap();
+            let cache = forward::layer_forward_cached(dims, &p, x).unwrap();
+            cache.y.iter().zip(&c).map(|(&a, &w)| (a as f64) * (w as f64)).sum()
+        };
+        // Analytic grads.
+        let p = layer.params();
+        let dims = forward::layer_dims(nh, &p, b, s, d).unwrap();
+        let cache = forward::layer_forward_cached(dims, &p, &x).unwrap();
+        let g = train::layer_backward(&p, &x, &cache, &c).unwrap();
+        drop(p);
+        let eps = 3e-3f32;
+        let check = |name: &str, analytic: f32, numeric: f64| {
+            assert!(
+                (numeric - analytic as f64).abs() < 0.05 * (1.0 + numeric.abs()),
+                "{name}: analytic {analytic} vs numeric {numeric}"
+            );
+        };
+        // dx
+        for &i in &[0usize, 17, 40, 63] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let num = (loss_of(&layer, &xp) - loss_of(&layer, &xm)) / (2.0 * eps as f64);
+            check("dx", g.dx[i], num);
+        }
+        // A few weight entries per matrix.
+        let probe = |field: fn(&mut OwnedLayer) -> &mut Tensor,
+                     grad: &[f32],
+                     idx: usize,
+                     name: &str| {
+            let mut lp = OwnedLayer {
+                ln1: layer.ln1.clone(),
+                ln2: layer.ln2.clone(),
+                wq: layer.wq.clone(),
+                wk: layer.wk.clone(),
+                wv: layer.wv.clone(),
+                wo: layer.wo.clone(),
+                wgate: layer.wgate.clone(),
+                wup: layer.wup.clone(),
+                wdown: layer.wdown.clone(),
+            };
+            field(&mut lp).f32s_mut().unwrap()[idx] += eps;
+            let up = loss_of(&lp, &x);
+            field(&mut lp).f32s_mut().unwrap()[idx] -= 2.0 * eps;
+            let down = loss_of(&lp, &x);
+            let num = (up - down) / (2.0 * eps as f64);
+            check(name, grad[idx], num);
+        };
+        let gq = match &g.q {
+            train::ProjGrad::Dense(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let gk = match &g.k {
+            train::ProjGrad::Dense(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        let gg = match &g.gate {
+            train::ProjGrad::Dense(v) => v.clone(),
+            _ => unreachable!(),
+        };
+        probe(|l| &mut l.wq, &gq, 5, "dWq");
+        probe(|l| &mut l.wk, &gk, 33, "dWk");
+        probe(|l| &mut l.wv, &g.v, 70, "dWv");
+        probe(|l| &mut l.wo, &g.o, 128, "dWo");
+        probe(|l| &mut l.wgate, &gg, 11, "dWgate");
+        probe(|l| &mut l.wup, &g.up, 200, "dWup");
+        probe(|l| &mut l.wdown, &g.down, 90, "dWdown");
+        probe(|l| &mut l.ln1, &g.ln1, 3, "dln1");
+        probe(|l| &mut l.ln2, &g.ln2, 9, "dln2");
+    }
+
+    #[test]
+    fn cured_du_gradient_matches_finite_difference() {
+        let cfg = small_cfg();
+        let (d, di, nh) = (cfg.d_model, cfg.d_inter, cfg.n_heads);
+        let (b, s) = (1usize, 4usize);
+        let mut rng = Rng::new(7, 0);
+        let layer = OwnedLayer::random(&mut rng, d, di, 0.3);
+        let r = 4usize;
+        let c_q = rand_t(&mut rng, &[d, r], 0.4);
+        let u_q = rand_t(&mut rng, &[r, r], 0.4);
+        let r_q = rand_t(&mut rng, &[r, d], 0.4);
+        let x = rng.normal_vec(b * s * d, 1.0);
+        let yt = rng.normal_vec(b * s * d, 1.0);
+        let loss_of = |u: &Tensor| -> f64 {
+            let mut p = layer.params();
+            p.q = Proj::Cured { c: &c_q, u: Cow::Borrowed(u), r: &r_q };
+            let (loss, _, _) = train::heal_grads(nh, &p, b, s, d, &x, &yt).unwrap();
+            loss
+        };
+        let mut p = layer.params();
+        p.q = Proj::Cured { c: &c_q, u: Cow::Borrowed(&u_q), r: &r_q };
+        let (_, _, dus) = train::heal_grads(nh, &p, b, s, d, &x, &yt).unwrap();
+        drop(p);
+        assert_eq!(dus.len(), 1);
+        assert_eq!(dus[0].0, "q");
+        let du = &dus[0].1;
+        let eps = 1e-2f32;
+        for &i in &[0usize, 5, 10, 15] {
+            let mut up = u_q.clone();
+            up.f32s_mut().unwrap()[i] += eps;
+            let mut dn = u_q.clone();
+            dn.f32s_mut().unwrap()[i] -= eps;
+            let num = (loss_of(&up) - loss_of(&dn)) / (2.0 * eps as f64);
+            assert!(
+                (num - du[i] as f64).abs() < 0.05 * (1.0 + num.abs()) + 1e-4,
+                "dU[{i}]: analytic {} vs numeric {num}",
+                du[i]
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_memorizes_a_fixed_batch() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(8, 0);
+        let mut store = cfg.init_dense(&mut rng);
+        let mut opt = TensorStore::new();
+        let be = NativeBackend::new();
+        let (b, s) = (cfg.batch, cfg.seq);
+        let toks: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let mut tgts = toks[1..].to_vec();
+        tgts.push(0);
+        let tokens = Tensor::from_i32(&[b, s], toks);
+        let targets = Tensor::from_i32(&[b, s], tgts);
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..30 {
+            let loss = be
+                .train_step(&cfg, &mut store, &mut opt, &tokens, &targets, 3e-3, (step + 1) as f32)
+                .unwrap();
+            assert!(loss.is_finite(), "step {step} loss {loss}");
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(
+            last < first * 0.7,
+            "training on a fixed batch must reduce loss: first {first} last {last}"
+        );
+        // Optimizer state exists for every parameter.
+        for n in cfg.dense_param_names() {
+            assert!(opt.contains(&format!("m.{n}")), "missing m.{n}");
+            assert!(opt.contains(&format!("v.{n}")), "missing v.{n}");
+        }
+    }
+}

@@ -1,0 +1,480 @@
+//! Backward passes and optimizer steps of the native backend.
+//!
+//! Analytic gradients through the full transformer layer (RMSNorm, RoPE,
+//! causal softmax attention, SwiGLU FFN, dense and CURed projection
+//! chains) drive two steps:
+//!
+//! * [`train_step_impl`] — dense-model pretraining: cross-entropy over
+//!   the tied head, backprop through every layer, Adam on all params.
+//! * [`heal_step_impl`] — layer-wise KD healing (paper §4.5): MSE to the
+//!   teacher layer output, gradients restricted to the ΔU factors of the
+//!   layer's cured projections, Adam on ΔU only.
+
+use super::forward::{
+    head_forward, layer_dims, layer_forward_cached, want, Dims, LayerCache, ProjCache,
+};
+use super::math::{
+    add_inplace, matmul_nn, matmul_nt, matmul_tn, rmsnorm_bwd, rope_apply, rope_table,
+    silu, silu_grad,
+};
+use crate::backend::{HealOut, LayerParams, Proj};
+use crate::model::ModelConfig;
+use crate::tensor::{Tensor, TensorStore};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::borrow::Cow;
+use std::collections::HashMap;
+
+/// Gradient of one projection: the dense weight's, or ΔU's (= U's) when
+/// cured (C and R are frozen actual rows/columns of W).
+pub(super) enum ProjGrad {
+    Dense(Vec<f32>),
+    CuredU(Vec<f32>),
+}
+
+pub(super) struct LayerGrads {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub q: ProjGrad,
+    pub k: ProjGrad,
+    pub v: Vec<f32>,
+    pub o: Vec<f32>,
+    pub gate: ProjGrad,
+    pub up: Vec<f32>,
+    pub down: Vec<f32>,
+    pub dx: Vec<f32>,
+}
+
+/// Backward through a projection: returns (weight grad, input grad).
+fn proj_backward(
+    h: &[f32],
+    rows: usize,
+    dout: &[f32],
+    p: &Proj,
+    cache: Option<&ProjCache>,
+) -> Result<(ProjGrad, Vec<f32>)> {
+    match p {
+        Proj::Dense(w) => {
+            let (m, n) = (w.shape[0], w.shape[1]);
+            let wf = w.f32s()?;
+            let dw = matmul_tn(h, dout, rows, m, n);
+            let dh = matmul_nt(dout, wf, rows, n, m);
+            Ok((ProjGrad::Dense(dw), dh))
+        }
+        Proj::Cured { c, u, r } => {
+            let cache = cache.ok_or_else(|| anyhow!("missing CUR chain cache"))?;
+            let (m, rank) = (c.shape[0], c.shape[1]);
+            let n = r.shape[1];
+            // out = ((h·C)·U)·R with hc = h·C, hcu = hc·U cached.
+            let dhcu = matmul_nt(dout, r.f32s()?, rows, n, rank);
+            let du = matmul_tn(&cache.hc, &dhcu, rows, rank, rank);
+            let dhc = matmul_nt(&dhcu, u.f32s()?, rows, rank, rank);
+            let dh = matmul_nt(&dhc, c.f32s()?, rows, rank, m);
+            Ok((ProjGrad::CuredU(du), dh))
+        }
+    }
+}
+
+/// Backward through causal multi-head attention (+ inverse RoPE), from
+/// the gradient of the concatenated head outputs to (dq, dk, dv) at the
+/// projection outputs (pre-RoPE for q/k).
+fn attention_bwd(
+    datt: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    dims: Dims,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let Dims { b, s, d, nh, dh, .. } = dims;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = vec![0.0f32; b * s * d];
+    let mut dk = vec![0.0f32; b * s * d];
+    let mut dv = vec![0.0f32; b * s * d];
+    let mut dp_row = vec![0.0f32; s];
+    for bi in 0..b {
+        for h in 0..nh {
+            let pbase = (bi * nh + h) * s * s;
+            for si in 0..s {
+                let aoff = (bi * s + si) * d + h * dh;
+                let dout = &datt[aoff..aoff + dh];
+                let prow = &probs[pbase + si * s..pbase + (si + 1) * s];
+                // dP and dV; the softmax-jacobian dot term in one sweep.
+                let mut dot_sum = 0.0f32;
+                for sj in 0..=si {
+                    let voff = (bi * s + sj) * d + h * dh;
+                    let mut dp = 0.0f32;
+                    for jj in 0..dh {
+                        dp += dout[jj] * v[voff + jj];
+                        dv[voff + jj] += prow[sj] * dout[jj];
+                    }
+                    dp_row[sj] = dp;
+                    dot_sum += dp * prow[sj];
+                }
+                // dS = P ⊙ (dP − Σ dP·P); dQ += dS·K·scale; dK += dS·Q·scale.
+                for sj in 0..=si {
+                    let dsv = prow[sj] * (dp_row[sj] - dot_sum) * scale;
+                    if dsv == 0.0 {
+                        continue;
+                    }
+                    let koff = (bi * s + sj) * d + h * dh;
+                    for jj in 0..dh {
+                        dq[aoff + jj] += dsv * k[koff + jj];
+                        dk[koff + jj] += dsv * q[aoff + jj];
+                    }
+                }
+            }
+        }
+    }
+    let (cos, sin) = rope_table(s, dh / 2);
+    rope_apply(&mut dq, b, s, nh, dh, &cos, &sin, -1.0);
+    rope_apply(&mut dk, b, s, nh, dh, &cos, &sin, -1.0);
+    (dq, dk, dv)
+}
+
+/// Full layer backward: from dL/dy to every parameter gradient plus
+/// dL/dx. `x` is the layer's forward input (flat bs×d).
+pub(super) fn layer_backward(
+    p: &LayerParams,
+    x: &[f32],
+    cache: &LayerCache,
+    dy: &[f32],
+) -> Result<LayerGrads> {
+    let Dims { b, s, d, di, .. } = cache.dims;
+    let bs = b * s;
+    ensure!(dy.len() == bs * d && x.len() == bs * d, "layer_backward size mismatch");
+    let ln1 = p.ln1.f32s()?;
+    let ln2 = p.ln2.f32s()?;
+    let wv = p.v.f32s()?;
+    let wo = p.o.f32s()?;
+    let wup = p.up.f32s()?;
+    let wdown = p.down.f32s()?;
+
+    // FFN: y = x2 + (silu(g) ⊙ up)·Wdown.
+    let dact = matmul_nt(dy, wdown, bs, d, di);
+    let ddown = matmul_tn(&cache.act, dy, bs, di, d);
+    let mut dg = vec![0.0f32; bs * di];
+    let mut dup = vec![0.0f32; bs * di];
+    for i in 0..bs * di {
+        dg[i] = dact[i] * cache.up[i] * silu_grad(cache.g[i]);
+        dup[i] = dact[i] * silu(cache.g[i]);
+    }
+    let (gate_grad, mut dh2) = proj_backward(&cache.h2, bs, &dg, &p.gate, cache.gc.as_ref())?;
+    let dup_w = matmul_tn(&cache.h2, &dup, bs, d, di);
+    add_inplace(&mut dh2, &matmul_nt(&dup, wup, bs, di, d));
+    let (mut dx2, dln2) = rmsnorm_bwd(&dh2, &cache.x2, ln2, &cache.inv2, bs, d);
+    add_inplace(&mut dx2, dy); // residual: y = x2 + ffn
+
+    // Attention: x2 = x + att·Wo.
+    let datt = matmul_nt(&dx2, wo, bs, d, d);
+    let do_w = matmul_tn(&cache.att, &dx2, bs, d, d);
+    let (dq, dk, dv) = attention_bwd(&datt, &cache.q, &cache.k, &cache.v, &cache.probs, cache.dims);
+    let (q_grad, mut dh1) = proj_backward(&cache.h1, bs, &dq, &p.q, cache.qc.as_ref())?;
+    let (k_grad, dh1_k) = proj_backward(&cache.h1, bs, &dk, &p.k, cache.kc.as_ref())?;
+    add_inplace(&mut dh1, &dh1_k);
+    let dv_w = matmul_tn(&cache.h1, &dv, bs, d, d);
+    add_inplace(&mut dh1, &matmul_nt(&dv, wv, bs, d, d));
+    let (mut dx, dln1) = rmsnorm_bwd(&dh1, x, ln1, &cache.inv1, bs, d);
+    add_inplace(&mut dx, &dx2); // residual: x2 = x + attn
+
+    Ok(LayerGrads {
+        ln1: dln1,
+        ln2: dln2,
+        q: q_grad,
+        k: k_grad,
+        v: dv_w,
+        o: do_w,
+        gate: gate_grad,
+        up: dup_w,
+        down: ddown,
+        dx,
+    })
+}
+
+fn adam_kernel(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, t: f32) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let bc1 = 1.0 - B1.powf(t);
+    let bc2 = 1.0 - B2.powf(t);
+    for i in 0..p.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        p[i] -= lr * mh / (vh.sqrt() + EPS);
+    }
+}
+
+/// Adam-update `store[name]` from `g`, with moments in `opt` under
+/// `{mkey}`/`{vkey}` (zero-initialized on first touch).
+fn adam_update(
+    store: &mut TensorStore,
+    opt: &mut TensorStore,
+    name: &str,
+    mkey: String,
+    vkey: String,
+    g: &[f32],
+    lr: f32,
+    t: f32,
+) -> Result<()> {
+    let shape = store.get(name)?.shape.clone();
+    ensure!(
+        shape.iter().product::<usize>() == g.len(),
+        "gradient size mismatch for '{name}'"
+    );
+    let mut m_t = opt.remove(&mkey).unwrap_or_else(|| Tensor::zeros(&shape));
+    let mut v_t = opt.remove(&vkey).unwrap_or_else(|| Tensor::zeros(&shape));
+    adam_kernel(
+        store.get_mut(name)?.f32s_mut()?,
+        g,
+        m_t.f32s_mut()?,
+        v_t.f32s_mut()?,
+        lr,
+        t,
+    );
+    opt.insert(mkey, m_t);
+    opt.insert(vkey, v_t);
+    Ok(())
+}
+
+fn dense_layer_params(store: &TensorStore, l: usize) -> Result<LayerParams<'_>> {
+    Ok(LayerParams {
+        ln1: store.get(&format!("L{l}.ln1"))?,
+        ln2: store.get(&format!("L{l}.ln2"))?,
+        q: Proj::Dense(store.get(&format!("L{l}.w_q"))?),
+        k: Proj::Dense(store.get(&format!("L{l}.w_k"))?),
+        gate: Proj::Dense(store.get(&format!("L{l}.w_gate"))?),
+        v: store.get(&format!("L{l}.w_v"))?,
+        o: store.get(&format!("L{l}.w_o"))?,
+        up: store.get(&format!("L{l}.w_up"))?,
+        down: store.get(&format!("L{l}.w_down"))?,
+    })
+}
+
+/// One projection from a (possibly cured) student store: cured iff its C
+/// factor is present; `U = U₀ + ΔU` merged host-side.
+fn student_proj<'a>(store: &'a TensorStore, l: usize, name: &str) -> Result<Proj<'a>> {
+    if store.contains(&format!("L{l}.c_{name}")) {
+        let mut u = store.get(&format!("L{l}.u_{name}"))?.clone();
+        if let Ok(du) = store.get(&format!("L{l}.du_{name}")) {
+            let us = u.f32s_mut()?;
+            for (a, b) in us.iter_mut().zip(du.f32s()?) {
+                *a += *b;
+            }
+        }
+        Ok(Proj::Cured {
+            c: store.get(&format!("L{l}.c_{name}"))?,
+            u: Cow::Owned(u),
+            r: store.get(&format!("L{l}.r_{name}"))?,
+        })
+    } else {
+        Ok(Proj::Dense(store.get(&format!("L{l}.w_{name}"))?))
+    }
+}
+
+/// Layer params from a (possibly cured) student store.
+pub(super) fn student_layer_params(store: &TensorStore, l: usize) -> Result<LayerParams<'_>> {
+    Ok(LayerParams {
+        ln1: store.get(&format!("L{l}.ln1"))?,
+        ln2: store.get(&format!("L{l}.ln2"))?,
+        q: student_proj(store, l, "q")?,
+        k: student_proj(store, l, "k")?,
+        gate: student_proj(store, l, "gate")?,
+        v: store.get(&format!("L{l}.w_v"))?,
+        o: store.get(&format!("L{l}.w_o"))?,
+        up: store.get(&format!("L{l}.w_up"))?,
+        down: store.get(&format!("L{l}.w_down"))?,
+    })
+}
+
+/// One Adam pretraining step on the dense model. Cross-entropy over all
+/// positions, mean-reduced; returns the batch loss.
+pub(super) fn train_step_impl(
+    cfg: &ModelConfig,
+    store: &mut TensorStore,
+    opt: &mut TensorStore,
+    tokens: &Tensor,
+    targets: &Tensor,
+    lr: f32,
+    t: f32,
+) -> Result<f64> {
+    ensure!(tokens.shape.len() == 2, "tokens must be (b, s)");
+    ensure!(targets.shape == tokens.shape, "targets shape mismatch");
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let bs = b * s;
+    let (d, nl) = (cfg.d_model, cfg.n_layers);
+    let toks = tokens.i32s()?;
+    let tgts = targets.i32s()?;
+
+    // Forward with caches. Gradients are accumulated by parameter name,
+    // Adam runs after every borrow of the store is released.
+    let mut grads: HashMap<String, Vec<f32>> = HashMap::new();
+    let loss = {
+        let emb_t = store.get("emb")?;
+        ensure!(
+            emb_t.shape.len() == 2 && emb_t.shape[1] == d,
+            "emb must be (vocab, {d}), got {:?}",
+            emb_t.shape
+        );
+        let vocab = emb_t.shape[0];
+        let emb = emb_t.f32s()?;
+        let mut x0 = vec![0.0f32; bs * d];
+        for (r, &tk) in toks.iter().enumerate() {
+            ensure!((0..vocab as i32).contains(&tk), "token {tk} out of vocab 0..{vocab}");
+            x0[r * d..(r + 1) * d].copy_from_slice(&emb[tk as usize * d..(tk as usize + 1) * d]);
+        }
+        // Layer l's input is x0 for l=0, else the previous cache's `y`
+        // (no clones — the caches already hold every activation needed).
+        let mut caches: Vec<LayerCache> = Vec::with_capacity(nl);
+        for l in 0..nl {
+            let p = dense_layer_params(store, l)?;
+            let dims = layer_dims(cfg.n_heads, &p, b, s, d)?;
+            let x_in: &[f32] = if l == 0 { &x0 } else { &caches[l - 1].y };
+            let cache = layer_forward_cached(dims, &p, x_in)?;
+            caches.push(cache);
+        }
+        let x_final: &[f32] = if nl == 0 { &x0 } else { &caches[nl - 1].y };
+        let ln_f = want(store.get("ln_f")?, &[d], "ln_f")?;
+        let (logits, xf, invf) = head_forward(x_final, ln_f, emb, bs, d, vocab);
+
+        // Cross-entropy + dlogits.
+        let mut dlogits = vec![0.0f32; bs * vocab];
+        let mut loss_sum = 0.0f64;
+        let inv_bs = 1.0 / bs as f32;
+        for r in 0..bs {
+            let tk = tgts[r];
+            ensure!((0..vocab as i32).contains(&tk), "target {tk} out of vocab 0..{vocab}");
+            let row = &logits[r * vocab..(r + 1) * vocab];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sum: f64 = row.iter().map(|&z| ((z - maxv) as f64).exp()).sum();
+            loss_sum += maxv as f64 + sum.ln() - row[tk as usize] as f64;
+            let drow = &mut dlogits[r * vocab..(r + 1) * vocab];
+            for j in 0..vocab {
+                let p_j = (((row[j] - maxv) as f64).exp() / sum) as f32;
+                drow[j] = (p_j - if j == tk as usize { 1.0 } else { 0.0 }) * inv_bs;
+            }
+        }
+        let loss = loss_sum / bs as f64;
+
+        // Head backward (tied embedding: head grad + gather grad add up).
+        let mut demb = matmul_tn(&dlogits, &xf, bs, vocab, d);
+        let dxf = matmul_nn(&dlogits, emb, bs, vocab, d);
+        let (mut dx, dlnf) = rmsnorm_bwd(&dxf, x_final, ln_f, &invf, bs, d);
+        grads.insert("ln_f".to_string(), dlnf);
+
+        for l in (0..nl).rev() {
+            let p = dense_layer_params(store, l)?;
+            let x_in: &[f32] = if l == 0 { &x0 } else { &caches[l - 1].y };
+            let g = layer_backward(&p, x_in, &caches[l], &dx)?;
+            dx = g.dx;
+            let dense = |pg: ProjGrad| -> Result<Vec<f32>> {
+                match pg {
+                    ProjGrad::Dense(gw) => Ok(gw),
+                    ProjGrad::CuredU(_) => bail!("train_step requires a dense store"),
+                }
+            };
+            grads.insert(format!("L{l}.ln1"), g.ln1);
+            grads.insert(format!("L{l}.ln2"), g.ln2);
+            grads.insert(format!("L{l}.w_q"), dense(g.q)?);
+            grads.insert(format!("L{l}.w_k"), dense(g.k)?);
+            grads.insert(format!("L{l}.w_gate"), dense(g.gate)?);
+            grads.insert(format!("L{l}.w_v"), g.v);
+            grads.insert(format!("L{l}.w_o"), g.o);
+            grads.insert(format!("L{l}.w_up"), g.up);
+            grads.insert(format!("L{l}.w_down"), g.down);
+        }
+        // Embedding gather backward.
+        for (r, &tk) in toks.iter().enumerate() {
+            let base = tk as usize * d;
+            for j in 0..d {
+                demb[base + j] += dx[r * d + j];
+            }
+        }
+        grads.insert("emb".to_string(), demb);
+        loss
+    };
+
+    for name in cfg.dense_param_names() {
+        let g = grads
+            .remove(&name)
+            .ok_or_else(|| anyhow!("missing gradient for parameter '{name}'"))?;
+        adam_update(store, opt, &name, format!("m.{name}"), format!("v.{name}"), &g, lr, t)?;
+    }
+    Ok(loss)
+}
+
+/// Heal loss + ΔU gradients of one layer (shared by the step and tests):
+/// returns (MSE loss, student layer output, per-projection ΔU grads).
+pub(super) fn heal_grads(
+    n_heads: usize,
+    p: &LayerParams,
+    b: usize,
+    s: usize,
+    d: usize,
+    x: &[f32],
+    y_teacher: &[f32],
+) -> Result<(f64, Vec<f32>, Vec<(&'static str, Vec<f32>)>)> {
+    let dims = layer_dims(n_heads, p, b, s, d)?;
+    let cache = layer_forward_cached(dims, p, x)?;
+    let n = cache.y.len();
+    ensure!(y_teacher.len() == n, "teacher output size mismatch");
+    let mut dy = vec![0.0f32; n];
+    let mut loss = 0.0f64;
+    let inv_n = 1.0 / n as f32;
+    for i in 0..n {
+        let diff = cache.y[i] - y_teacher[i];
+        loss += (diff as f64) * (diff as f64);
+        dy[i] = 2.0 * diff * inv_n;
+    }
+    loss /= n as f64;
+    let g = layer_backward(p, x, &cache, &dy)?;
+    let mut dus: Vec<(&'static str, Vec<f32>)> = Vec::new();
+    for (name, pg) in [("q", g.q), ("k", g.k), ("gate", g.gate)] {
+        if let ProjGrad::CuredU(du) = pg {
+            dus.push((name, du));
+        }
+    }
+    Ok((loss, cache.y, dus))
+}
+
+/// One layer-wise KD healing step (Adam on ΔU of layer `layer`).
+pub(super) fn heal_step_impl(
+    cfg: &ModelConfig,
+    student: &mut TensorStore,
+    opt: &mut TensorStore,
+    layer: usize,
+    x: &Tensor,
+    y_teacher: &Tensor,
+    lr: f32,
+    t: f32,
+) -> Result<HealOut> {
+    ensure!(x.shape.len() == 3, "heal input must be (b, s, d)");
+    let (b, s, d) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (loss, y_vec, dus) = {
+        let p = student_layer_params(student, layer)?;
+        ensure!(
+            p.q.is_cured() || p.k.is_cured() || p.gate.is_cured(),
+            "layer {layer} has no cured projections to heal"
+        );
+        heal_grads(cfg.n_heads, &p, b, s, d, x.f32s()?, y_teacher.f32s()?)?
+    };
+    for (proj, gdu) in dus {
+        let name = format!("L{layer}.du_{proj}");
+        if !student.contains(&name) {
+            // ΔU is created at compression time; a store without it is
+            // malformed rather than silently skippable.
+            bail!("student store missing '{name}'");
+        }
+        adam_update(
+            student,
+            opt,
+            &name,
+            format!("heal.L{layer}.m.du_{proj}"),
+            format!("heal.L{layer}.v.du_{proj}"),
+            &gdu,
+            lr,
+            t,
+        )?;
+    }
+    Ok(HealOut { loss, y_student: Tensor::from_f32(&x.shape, y_vec) })
+}

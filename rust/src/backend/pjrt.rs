@@ -1,0 +1,450 @@
+//! PJRT artifact backend (feature `pjrt`): loads AOT HLO-text artifacts
+//! and executes them via the `xla` crate.
+//!
+//! Wraps `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`. The manifest written by `python/compile/aot.py`
+//! drives generic marshalling: artifacts declare named, shaped
+//! inputs/outputs, and callers bind tensors by name — the backend
+//! validates shapes/dtypes and fixes positional order.
+//!
+//! Interchange is HLO **text**: xla_extension 0.5.1 rejects jax>=0.5
+//! serialized protos (64-bit instruction ids); the text parser reassigns
+//! ids.
+//!
+//! The typed [`Backend`] operations map one-to-one onto the artifact
+//! naming scheme (`{config}_embed_fwd`, `{config}_layer_fwd_dense`,
+//! `{config}_layer_fwd_cured_r{rank}_c{combo}`, …); the generic
+//! `execute_artifact` passthrough additionally serves the switched
+//! full-model graphs of the PEFT comparisons.
+
+use crate::backend::{Backend, CalibOut, HealOut, LayerParams, Proj};
+use crate::model::ModelConfig;
+use crate::runtime::{spec_from_manifest, ArtifactSpec, Bindings};
+use crate::tensor::{Data, DType, Tensor, TensorStore};
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled artifact plus its spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT backend: client + manifest + executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    execs: Cell<u64>,
+}
+
+impl PjrtBackend {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let mpath = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("missing {} — run `make artifacts`", mpath.display()))?;
+        let manifest = Json::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtBackend {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            execs: Cell::new(0),
+        })
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Load + compile an artifact (cached).
+    fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = spec_from_manifest(&self.manifest, name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse hlo {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exec = Rc::new(Executable { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    fn execute(&self, name: &str, bindings: &Bindings) -> Result<HashMap<String, Tensor>> {
+        let exe = self.load(name)?;
+        let lits = self.marshal_inputs(&exe.spec, bindings)?;
+        let outs = exe
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", exe.spec.name))?;
+        self.execs.set(self.execs.get() + 1);
+        let result = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", exe.spec.name))?;
+        let pieces = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", exe.spec.name))?;
+        if pieces.len() != exe.spec.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                exe.spec.name,
+                pieces.len(),
+                exe.spec.outputs.len()
+            );
+        }
+        let mut out = HashMap::new();
+        for (io, lit) in exe.spec.outputs.iter().zip(pieces) {
+            let t = match io.dtype {
+                DType::F32 => {
+                    let v =
+                        lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?;
+                    Tensor::from_f32(&io.shape, v)
+                }
+                DType::I32 => {
+                    let v =
+                        lit.to_vec::<i32>().map_err(|e| anyhow!("literal to i32 vec: {e:?}"))?;
+                    Tensor::from_i32(&io.shape, v)
+                }
+            };
+            out.insert(io.name.clone(), t);
+        }
+        Ok(out)
+    }
+
+    fn marshal_inputs(&self, spec: &ArtifactSpec, bindings: &Bindings) -> Result<Vec<xla::Literal>> {
+        let mut lits = Vec::with_capacity(spec.inputs.len());
+        for io in &spec.inputs {
+            let t = bindings
+                .get(&io.name)
+                .ok_or_else(|| anyhow!("artifact {}: missing input '{}'", spec.name, io.name))?;
+            if t.shape != io.shape {
+                bail!(
+                    "artifact {}: input '{}' shape {:?} != expected {:?}",
+                    spec.name,
+                    io.name,
+                    t.shape,
+                    io.shape
+                );
+            }
+            if t.dtype() != io.dtype {
+                bail!(
+                    "artifact {}: input '{}' dtype {:?} != expected {:?}",
+                    spec.name,
+                    io.name,
+                    t.dtype(),
+                    io.dtype
+                );
+            }
+            lits.push(tensor_to_literal(t)?);
+        }
+        Ok(lits)
+    }
+
+    fn take(outs: &mut HashMap<String, Tensor>, key: &str, what: &str) -> Result<Tensor> {
+        outs.remove(key).with_context(|| format!("{what} output '{key}' missing"))
+    }
+}
+
+/// Map a [`LayerParams`] view onto the artifact's `L.*` input names.
+/// Returns the (rank, combo) signature when any projection is cured.
+fn bind_layer_params<'b>(
+    b: &mut Bindings<'b>,
+    p: &'b LayerParams<'b>,
+) -> Result<Option<(usize, String)>> {
+    b.bind_mut("L.ln1", p.ln1);
+    b.bind_mut("L.ln2", p.ln2);
+    b.bind_mut("L.w_v", p.v);
+    b.bind_mut("L.w_o", p.o);
+    b.bind_mut("L.w_up", p.up);
+    b.bind_mut("L.w_down", p.down);
+    let mut rank = None;
+    let mut cured = [false; 3];
+    for (i, (name, proj)) in
+        [("q", &p.q), ("k", &p.k), ("gate", &p.gate)].into_iter().enumerate()
+    {
+        match proj {
+            Proj::Dense(w) => b.bind_mut(format!("L.w_{name}"), w),
+            Proj::Cured { c, u, r } => {
+                cured[i] = true;
+                rank = r.shape.first().copied();
+                b.bind_mut(format!("L.c_{name}"), *c);
+                b.bind_mut(format!("L.r_{name}"), *r);
+                b.bind_owned(format!("L.u_{name}"), u.as_ref().clone());
+            }
+        }
+    }
+    match (cured, rank) {
+        ([false, false, false], _) => Ok(None),
+        (_, Some(rank)) => {
+            let combo = match cured {
+                [true, true, true] => "all",
+                [true, true, false] => "qk",
+                [true, false, true] => "qg",
+                [false, true, true] => "kg",
+                [false, false, true] => "gate",
+                other => bail!("no AOT artifact for cured-projection set {other:?}"),
+            };
+            Ok(Some((rank, combo.to_string())))
+        }
+        _ => bail!("cured projection without a rank"),
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Json {
+        &self.manifest
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.execs.get()
+    }
+
+    fn embed(&self, cfg: &ModelConfig, emb: &Tensor, tokens: &Tensor) -> Result<Tensor> {
+        let mut out = self.execute(
+            &format!("{}_embed_fwd", cfg.name),
+            &Bindings::new().bind("tokens", tokens).bind("emb", emb),
+        )?;
+        Self::take(&mut out, "x", "embed")
+    }
+
+    fn layer_forward(&self, cfg: &ModelConfig, p: &LayerParams, x: &Tensor) -> Result<Tensor> {
+        let mut b = Bindings::new().bind("x", x);
+        let art = match bind_layer_params(&mut b, p)? {
+            None => format!("{}_layer_fwd_dense", cfg.name),
+            Some((rank, combo)) => {
+                format!("{}_layer_fwd_cured_r{rank}_c{combo}", cfg.name)
+            }
+        };
+        let mut out = self.execute(&art, &b)?;
+        Self::take(&mut out, "y", "layer")
+    }
+
+    fn layer_forward_calib(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<CalibOut> {
+        let mut b = Bindings::new().bind("x", x);
+        if bind_layer_params(&mut b, p)?.is_some() {
+            bail!("calibration runs on the dense model only");
+        }
+        let mut out = self.execute(&format!("{}_layer_fwd_calib", cfg.name), &b)?;
+        Ok(CalibOut {
+            y: Self::take(&mut out, "y", "calib")?,
+            attn_sumsq: Self::take(&mut out, "attn_sumsq", "calib")?,
+            ffn_sumsq: Self::take(&mut out, "ffn_sumsq", "calib")?,
+            attn_in: Self::take(&mut out, "attn_in", "calib")?,
+            ffn_in: Self::take(&mut out, "ffn_in", "calib")?,
+        })
+    }
+
+    fn head_logits(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+    ) -> Result<Tensor> {
+        let mut out = self.execute(
+            &format!("{}_head_logits", cfg.name),
+            &Bindings::new().bind("x", x).bind("ln_f", ln_f).bind("emb", emb),
+        )?;
+        Self::take(&mut out, "logits", "head")
+    }
+
+    fn head_nll(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+        targets: &Tensor,
+    ) -> Result<Tensor> {
+        let mut out = self.execute(
+            &format!("{}_head_nll", cfg.name),
+            &Bindings::new()
+                .bind("x", x)
+                .bind("ln_f", ln_f)
+                .bind("emb", emb)
+                .bind("targets", targets),
+        )?;
+        Self::take(&mut out, "nll", "head")
+    }
+
+    fn train_step(
+        &self,
+        cfg: &ModelConfig,
+        store: &mut TensorStore,
+        opt: &mut TensorStore,
+        tokens: &Tensor,
+        targets: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        let names = cfg.dense_param_names();
+        let art = format!("{}_train_step_dense", cfg.name);
+        // Seed missing optimizer moments first: the bindings below hold
+        // borrows of `opt`, so all insertions must happen up front.
+        for n in &names {
+            for k in ["m", "v"] {
+                let key = format!("{k}.{n}");
+                if !opt.contains(&key) {
+                    let shape = store.get(n)?.shape.clone();
+                    opt.insert(key, Tensor::zeros(&shape));
+                }
+            }
+        }
+        let mut b = Bindings::new().bind("tokens", tokens).bind("targets", targets);
+        b.bind_owned("lr", Tensor::scalar_f32(lr));
+        b.bind_owned("t", Tensor::scalar_f32(t));
+        for n in &names {
+            b.bind_mut(n.clone(), store.get(n)?);
+            for k in ["m", "v"] {
+                let key = format!("{k}.{n}");
+                b.bind_mut(key.clone(), opt.get(&key)?);
+            }
+        }
+        let mut out = self.execute(&art, &b)?;
+        drop(b);
+        let loss = Self::take(&mut out, "loss", "train step")?.f32s()?[0] as f64;
+        for n in &names {
+            store.insert(n.clone(), Self::take(&mut out, n, "train step")?);
+            for k in ["m", "v"] {
+                let key = format!("{k}.{n}");
+                opt.insert(key.clone(), Self::take(&mut out, &key, "train step")?);
+            }
+        }
+        Ok(loss)
+    }
+
+    fn heal_step(
+        &self,
+        cfg: &ModelConfig,
+        student: &mut TensorStore,
+        opt: &mut TensorStore,
+        layer: usize,
+        x: &Tensor,
+        y_teacher: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<HealOut> {
+        // The per-layer heal artifact is lowered for combo=all at the
+        // rank-rule rank; verify the store matches.
+        let tr = ["du_q", "du_k", "du_gate"];
+        for proj in ["q", "k", "gate"] {
+            if !student.contains(&format!("L{layer}.c_{proj}")) {
+                bail!("heal artifact requires combo=all (layer {layer} missing c_{proj})");
+            }
+        }
+        let rank = student.get(&format!("L{layer}.u_q"))?.shape[0];
+        let art = format!("{}_layer_heal_step_r{rank}", cfg.name);
+        let mut b = Bindings::new().bind("x", x).bind("y_teacher", y_teacher);
+        b.bind_owned("lr", Tensor::scalar_f32(lr));
+        b.bind_owned("t", Tensor::scalar_f32(t));
+        for suffix in ["ln1", "ln2", "w_v", "w_o", "w_up", "w_down"] {
+            b.bind_mut(format!("L.{suffix}"), student.get(&format!("L{layer}.{suffix}"))?);
+        }
+        for proj in ["q", "k", "gate"] {
+            for part in ["c", "u", "du", "r"] {
+                b.bind_mut(
+                    format!("L.{part}_{proj}"),
+                    student.get(&format!("L{layer}.{part}_{proj}"))?,
+                );
+            }
+        }
+        for name in tr {
+            for kind in ["m", "v"] {
+                let key = format!("heal.L{layer}.{kind}.{name}");
+                if !opt.contains(&key) {
+                    opt.insert(key.clone(), Tensor::zeros(&[rank, rank]));
+                }
+                b.bind_owned(format!("{kind}.{name}"), opt.get(&key)?.clone());
+            }
+        }
+        let mut out = self.execute(&art, &b)?;
+        drop(b);
+        let loss = Self::take(&mut out, "loss", "heal step")?.f32s()?[0] as f64;
+        let y_student = Self::take(&mut out, "y_student", "heal step")?;
+        for name in tr {
+            let proj = name.strip_prefix("du_").expect("du_ prefix");
+            student.insert(
+                format!("L{layer}.du_{proj}"),
+                Self::take(&mut out, name, "heal step")?,
+            );
+            for kind in ["m", "v"] {
+                opt.insert(
+                    format!("heal.L{layer}.{kind}.{name}"),
+                    Self::take(&mut out, &format!("{kind}.{name}"), "heal step")?,
+                );
+            }
+        }
+        Ok(HealOut { loss, y_student })
+    }
+
+    fn supports_artifacts(&self) -> bool {
+        true
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .at(&["artifacts"])
+            .and_then(|a| a.as_obj())
+            .map(|o| o.iter().map(|(k, _)| k.to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    fn artifact_spec(&self, name: &str) -> Result<ArtifactSpec> {
+        spec_from_manifest(&self.manifest, name)
+    }
+
+    fn execute_artifact(
+        &self,
+        name: &str,
+        bindings: &Bindings,
+    ) -> Result<HashMap<String, Tensor>> {
+        self.execute(name, bindings)
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    // Single-copy path: build the literal directly from raw host bytes.
+    // (The obvious `Literal::vec1(..).reshape(..)` costs two extra full
+    // copies per argument — measured 1.32x end-to-end on the pretrain
+    // step, see EXPERIMENTS.md §Perf.)
+    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
+        Data::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+        Data::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
+        .map_err(|e| anyhow!("create literal: {e:?}"))
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    // Safety: f32 slices are always validly viewable as bytes (alignment
+    // shrinks, length scales by 4).
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}

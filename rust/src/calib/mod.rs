@@ -26,13 +26,20 @@ pub struct Calibration {
 }
 
 impl Calibration {
-    /// WANDA xnorm vector for a projection of layer `l`.
-    pub fn xnorm(&self, l: usize, proj: &str) -> &[f64] {
-        match proj {
-            "q" | "k" => &self.attn_norms[l],
-            "gate" => &self.ffn_norms[l],
-            other => panic!("no calibration norms for projection {other}"),
-        }
+    /// WANDA xnorm vector for a projection of layer `l`. Only the paper's
+    /// curable projections carry calibration norms; anything else (or a
+    /// layer index beyond the calibrated depth) is a caller error surfaced
+    /// as a `Result`, not a panic.
+    pub fn xnorm(&self, l: usize, proj: &str) -> Result<&[f64]> {
+        let norms = match proj {
+            "q" | "k" => &self.attn_norms,
+            "gate" => &self.ffn_norms,
+            other => anyhow::bail!("no calibration norms for projection '{other}'"),
+        };
+        norms
+            .get(l)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("no calibration norms for layer {l}"))
     }
 
     pub fn to_json(&self) -> Json {
@@ -177,8 +184,11 @@ mod tests {
             angular: vec![0.0],
             n_examples: 1,
         };
-        assert_eq!(c.xnorm(0, "q")[0], 1.0);
-        assert_eq!(c.xnorm(0, "k")[0], 1.0);
-        assert_eq!(c.xnorm(0, "gate")[0], 2.0);
+        assert_eq!(c.xnorm(0, "q").unwrap()[0], 1.0);
+        assert_eq!(c.xnorm(0, "k").unwrap()[0], 1.0);
+        assert_eq!(c.xnorm(0, "gate").unwrap()[0], 2.0);
+        // Unknown projections and out-of-range layers error gracefully.
+        assert!(c.xnorm(0, "down").is_err());
+        assert!(c.xnorm(5, "q").is_err());
     }
 }

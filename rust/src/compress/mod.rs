@@ -160,7 +160,7 @@ pub fn cure_layers(
             let w = Mat::from_tensor(w_t)?;
             let (m, n) = (w.rows, w.cols);
             let rank = rank_rule(m, n, opts.r_max);
-            let xnorm = calib.xnorm(l, proj);
+            let xnorm = calib.xnorm(l, proj)?;
             let f = cur_with_selector(opts.selector, &w, xnorm, rank, &mut rng)?;
             let rec = f.reconstruct();
             let diff = w.sub(&rec);

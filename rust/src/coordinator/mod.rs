@@ -3,16 +3,17 @@
 //! cached calibration, compression, healing, and the four-metric
 //! evaluation suite of paper Figure 4.
 
+use crate::backend::Backend;
 use crate::calib::{calibrate, Calibration};
 use crate::compress::{cure_layers, select_layers, CompressOptions, CompressReport, LayerStrategy};
 use crate::data::{self, Corpus, CorpusKind, Vocab};
 use crate::heal::cosine_lr;
 use crate::pipeline::{LayerPlan, Pipeline};
-use crate::runtime::{Bindings, Runtime};
+use crate::runtime::Runtime;
 use crate::tensor::{Tensor, TensorStore};
 use crate::util::{Json, Rng};
-use anyhow::{Context, Result};
-use std::path::PathBuf;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
 
 /// Shared context: runtime + vocabulary + a run directory for stores.
 pub struct Ctx {
@@ -57,8 +58,13 @@ impl Default for EvalSizes {
 impl Ctx {
     pub fn new() -> Result<Ctx> {
         let root = std::env::var("CURING_RUNDIR").unwrap_or_else(|_| "runs".to_string());
-        let ctx =
-            Ctx { rt: Runtime::open_default()?, vocab: Vocab::build(), root: PathBuf::from(root) };
+        Ctx::with_runtime(Runtime::open_default()?, Path::new(&root))
+    }
+
+    /// Build a context over an explicit runtime and run directory (tests
+    /// and embedding callers; `new` reads the environment instead).
+    pub fn with_runtime(rt: Runtime, root: &Path) -> Result<Ctx> {
+        let ctx = Ctx { rt, vocab: Vocab::build(), root: root.to_path_buf() };
         std::fs::create_dir_all(&ctx.root)?;
         Ok(ctx)
     }
@@ -71,8 +77,8 @@ impl Ctx {
         self.root.join("stores").join(name)
     }
 
-    /// Pretrain a dense model with the full-model AOT train step; returns
-    /// the weight store and the loss curve.
+    /// Pretrain a dense model with the backend's train step; returns the
+    /// weight store and the loss curve.
     pub fn pretrain(
         &self,
         config: &str,
@@ -86,14 +92,7 @@ impl Ctx {
         let mut rng = Rng::new(seed, 0x7261_494e); // "traiN"
         let mut store = cfg.init_dense(&mut rng);
         let mut opt = TensorStore::new();
-        let names = cfg.dense_param_names();
-        for n in &names {
-            let shape = store.get(n)?.shape.clone();
-            opt.insert(format!("m.{n}"), Tensor::zeros(&shape));
-            opt.insert(format!("v.{n}"), Tensor::zeros(&shape));
-        }
         let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_PRETRAIN);
-        let art = format!("{}_train_step_dense", cfg.name);
         let mut losses = Vec::with_capacity(steps);
         let warmup = (steps / 10).max(1);
         for step in 0..steps {
@@ -103,22 +102,16 @@ impl Ctx {
             let (toks, tgts) = corpus.batch_mixed(&self.vocab, cfg.batch, cfg.seq, 0.3);
             let tokens = Tensor::from_i32(&[cfg.batch, cfg.seq], toks);
             let targets = Tensor::from_i32(&[cfg.batch, cfg.seq], tgts);
-            let mut b = Bindings::new().bind("tokens", &tokens).bind("targets", &targets);
-            b.bind_owned("lr", Tensor::scalar_f32(lr as f32));
-            b.bind_owned("t", Tensor::scalar_f32((step + 1) as f32));
-            for n in &names {
-                b.bind_mut(n.clone(), store.get(n)?);
-                b.bind_mut(format!("m.{n}"), opt.get(&format!("m.{n}"))?);
-                b.bind_mut(format!("v.{n}"), opt.get(&format!("v.{n}"))?);
-            }
-            let mut out = self.rt.execute(&art, &b)?;
-            let loss = out["loss"].f32s()?[0] as f64;
+            let loss = self.rt.backend().train_step(
+                cfg,
+                &mut store,
+                &mut opt,
+                &tokens,
+                &targets,
+                lr as f32,
+                (step + 1) as f32,
+            )?;
             losses.push(loss);
-            for n in &names {
-                store.insert(n.clone(), out.remove(n).context("missing param out")?);
-                opt.insert(format!("m.{n}"), out.remove(&format!("m.{n}")).context("m out")?);
-                opt.insert(format!("v.{n}"), out.remove(&format!("v.{n}")).context("v out")?);
-            }
             log(step, loss);
         }
         store.meta.insert("pretrain_steps".into(), steps.to_string());

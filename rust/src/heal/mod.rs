@@ -4,20 +4,23 @@
 //! Two drivers:
 //!
 //! * [`heal_layers`] — the paper's layer-wise KD: MSE between teacher and
-//!   student layer outputs, per cured layer, using the per-layer
-//!   `layer_heal_step_r{r}` artifact (teacher-forced layer inputs).
+//!   student layer outputs, per cured layer, via the backend's
+//!   `heal_step` operation (teacher-forced layer inputs). Runs on any
+//!   backend, native CPU included.
 //! * [`SwitchedRunner`] — full-model steps on the runtime-maskable
 //!   switched artifacts (`heal_full_*` = 0.9·KD(T=10) + 0.1·CE;
 //!   `task_step_*` = masked CE), shared with the PEFT comparisons.
+//!   Artifact-backed: needs the `pjrt` backend.
 //!
 //! Hyperparameters follow paper App. B: AdamW, lr 3e-4, cosine schedule
 //! with 100 warmup steps.
 
+use crate::backend::Backend;
 use crate::data::{Corpus, Vocab};
 use crate::pipeline::Pipeline;
 use crate::runtime::Bindings;
 use crate::tensor::{Tensor, TensorStore};
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 /// Cosine LR schedule with linear warmup (Loshchilov & Hutter; paper
 /// App. B uses 100 warmup steps and base lr 3e-4).
@@ -76,21 +79,6 @@ pub fn heal_layers(
     if cured.is_empty() {
         return Ok(vec![]);
     }
-    let r_max: usize = student
-        .meta
-        .get("r_max")
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| anyhow!("student store missing r_max meta"))?;
-    let combo = student.meta.get("combo").cloned().unwrap_or_else(|| "all".into());
-    anyhow::ensure!(
-        combo == "all",
-        "layer heal artifact is lowered for combo=all (got {combo})"
-    );
-    // Actual rank given the rule; all three projections share it when
-    // r_max clamps (the default experimental regime).
-    let rank = cfg.rank_rule(cfg.d_model, cfg.d_model, r_max);
-    let art = format!("{}_layer_heal_step_r{}", cfg.name, rank);
-    let tr = ["du_q", "du_k", "du_gate"];
     let mut history = Vec::new();
     // Clamp warmup to a fifth of the run: short healing runs (the paper
     // itself notes recovery "within the first 100 steps") must reach full
@@ -118,50 +106,18 @@ pub fn heal_layers(
                 )?;
                 continue;
             }
-            let mut b = Bindings::new()
-                .bind("x", &x_student)
-                .bind("y_teacher", &t_outputs[l]);
-            b.bind_owned("lr", Tensor::scalar_f32(lr as f32));
-            b.bind_owned("t", Tensor::scalar_f32((step + 1) as f32));
-            // Cured layer params, split U (u = U0, du separate).
-            for suffix in ["ln1", "ln2", "w_v", "w_o", "w_up", "w_down"] {
-                b.bind_mut(format!("L.{suffix}"), student.get(&format!("L{l}.{suffix}"))?);
-            }
-            for proj in ["q", "k", "gate"] {
-                for part in ["c", "u", "du", "r"] {
-                    b.bind_mut(
-                        format!("L.{part}_{proj}"),
-                        student.get(&format!("L{l}.{part}_{proj}"))?,
-                    );
-                }
-            }
-            for name in tr {
-                for kind in ["m", "v"] {
-                    let key = format!("heal.L{l}.{kind}.{name}");
-                    if !opt.contains(&key) {
-                        opt.insert(key.clone(), Tensor::zeros(&[rank, rank]));
-                    }
-                    b.bind_owned(format!("{kind}.{name}"), opt.get(&key)?.clone());
-                }
-            }
-            let mut out = pipe.rt.execute(&art, &b)?;
-            loss_sum += out["loss"].f32s()?[0] as f64;
-            x_student = out.remove("y_student").context("missing y_student")?;
-            for name in tr {
-                let proj = name.strip_prefix("du_").unwrap();
-                student.insert(
-                    format!("L{l}.du_{proj}"),
-                    out.remove(name).context("missing du output")?,
-                );
-                opt.insert(
-                    format!("heal.L{l}.m.{name}"),
-                    out.remove(&format!("m.{name}")).context("missing m output")?,
-                );
-                opt.insert(
-                    format!("heal.L{l}.v.{name}"),
-                    out.remove(&format!("v.{name}")).context("missing v output")?,
-                );
-            }
+            let out = pipe.rt.backend().heal_step(
+                cfg,
+                student,
+                opt,
+                l,
+                &x_student,
+                &t_outputs[l],
+                lr as f32,
+                (step + 1) as f32,
+            )?;
+            loss_sum += out.loss;
+            x_student = out.y_student;
         }
         history.push(HealPoint { step, loss: loss_sum / cured.len() as f64, lr });
     }

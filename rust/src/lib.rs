@@ -1,22 +1,26 @@
 //! # CURing — compression via CUR decomposition
 //!
-//! A three-layer reproduction of *"CURing Large Models: Compression via
-//! CUR Decomposition"* (Park & Moon, ICML 2025):
+//! A reproduction of *"CURing Large Models: Compression via CUR
+//! Decomposition"* (Park & Moon, ICML 2025): the coordinator owns
+//! weights, data, calibration, DEIM-CUR compression, healing, PEFT
+//! comparisons, evaluation and serving, and executes the model through a
+//! pluggable [`backend::Backend`]:
 //!
-//! * **L1** — Pallas kernels (build-time Python, `python/compile/kernels/`)
-//!   for the CURed linear chain, RMSNorm and WANDA statistics.
-//! * **L2** — a JAX Llama-mini model family AOT-lowered to HLO text
-//!   (`python/compile/`, emitted into `artifacts/`).
-//! * **L3** — this crate: the coordinator that owns weights, data,
-//!   calibration, DEIM-CUR compression, healing, PEFT comparisons,
-//!   evaluation and serving, executing the AOT artifacts via PJRT.
-//!
-//! Python never runs on the request path; after `make artifacts` the Rust
-//! binary is self-contained.
+//! * **native** (default) — a pure-Rust CPU implementation of the full
+//!   per-layer operation set (embed, RMSNorm, RoPE causal attention,
+//!   SwiGLU FFN, dense and CURed linear chains, calibration Σx² taps,
+//!   train/heal optimizer steps) with multithreaded blocked matmuls.
+//!   `cargo build && cargo test` work anywhere, no artifacts needed.
+//! * **pjrt** (`--features pjrt`) — the accelerator path: AOT HLO-text
+//!   artifacts (JAX Llama-mini family + Pallas kernels, emitted by the
+//!   Python build step into `artifacts/`) executed via the `xla` PJRT
+//!   crate. Python never runs on the request path; after `make
+//!   artifacts` the Rust binary is self-contained.
 //!
 //! Start at [`coordinator`] for the end-to-end pipeline, or [`cur`] for
 //! the core decomposition math.
 
+pub mod backend;
 pub mod calib;
 pub mod compress;
 pub mod coordinator;

@@ -72,17 +72,33 @@ COMMANDS
   generate  --prompt \"the atom\" [--layers K] [--tokens 24]  greedy decode
   serve     --config tiny [--clients 4] [--requests 32]
 
-ENV  CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
-     CURING_PRETRAIN_STEPS (default 300)"
+ENV  CURING_BACKEND (native|pjrt; default: pjrt when built in and artifacts exist)
+     CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
+     CURING_PRETRAIN_STEPS (default 400)      CURING_THREADS (native matmul workers)"
     );
 }
 
 fn info(_args: &Args) -> Result<()> {
     let ctx = Ctx::new()?;
-    println!("artifacts:");
-    for name in ctx.rt.artifact_names() {
-        let spec = ctx.rt.spec(&name)?;
-        println!("  {:<44} {:>3} in / {:>3} out", name, spec.inputs.len(), spec.outputs.len());
+    println!("backend: {}", ctx.rt.backend_name());
+    println!("configs:");
+    if let Some(configs) = ctx.rt.manifest().at(&["configs"]).and_then(|c| c.as_obj()) {
+        for (name, _) in configs.iter() {
+            let cfg = curing::model::ModelConfig::from_manifest(ctx.rt.manifest(), name)?;
+            println!(
+                "  {:<8} d_model {:>4}  layers {:>2}  heads {:>2}  d_inter {:>4}  seq {:>4}  batch {:>3}",
+                name, cfg.d_model, cfg.n_layers, cfg.n_heads, cfg.d_inter, cfg.seq, cfg.batch
+            );
+        }
+    }
+    if ctx.rt.supports_artifacts() {
+        println!("artifacts:");
+        for name in ctx.rt.artifact_names() {
+            let spec = ctx.rt.spec(&name)?;
+            println!("  {:<44} {:>3} in / {:>3} out", name, spec.inputs.len(), spec.outputs.len());
+        }
+    } else {
+        println!("artifacts: none (the native backend executes layers directly)");
     }
     Ok(())
 }

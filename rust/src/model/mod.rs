@@ -79,14 +79,16 @@ impl ModelConfig {
         (1..self.n_layers - 1).collect()
     }
 
-    /// Dense weight dims of one projection: (m_in, n_out).
-    pub fn weight_dims(&self, proj: &str) -> (usize, usize) {
-        match proj {
+    /// Dense weight dims of one projection: (m_in, n_out). Unknown
+    /// projection names (e.g. from a user-supplied combo) are an error,
+    /// not a panic.
+    pub fn weight_dims(&self, proj: &str) -> Result<(usize, usize)> {
+        Ok(match proj {
             "q" | "k" | "v" | "o" => (self.d_model, self.d_model),
             "gate" | "up" => (self.d_model, self.d_inter),
             "down" => (self.d_inter, self.d_model),
-            other => panic!("unknown projection {other}"),
-        }
+            other => return Err(anyhow!("unknown projection '{other}'")),
+        })
     }
 
     /// Paper Eq. 2: rank rule — largest power of two under the parameter
@@ -101,18 +103,18 @@ impl ModelConfig {
     }
 
     /// Parameters of a CUR factorization of projection `proj` at `rank`.
-    pub fn cur_params(&self, proj: &str, rank: usize) -> usize {
-        let (m, n) = self.weight_dims(proj);
-        m * rank + rank * rank + rank * n
+    pub fn cur_params(&self, proj: &str, rank: usize) -> Result<usize> {
+        let (m, n) = self.weight_dims(proj)?;
+        Ok(m * rank + rank * rank + rank * n)
     }
 
     /// Bytes saved (f32) by curing one layer with `combo` at `rank`.
     pub fn bytes_saved_per_layer(&self, combo: &str, rank: usize) -> Result<usize> {
         let mut saved = 0usize;
         for proj in combo_targets(combo)? {
-            let (m, n) = self.weight_dims(proj);
+            let (m, n) = self.weight_dims(proj)?;
             let dense = m * n;
-            let cur = self.cur_params(proj, rank);
+            let cur = self.cur_params(proj, rank)?;
             saved += dense.saturating_sub(cur) * 4;
         }
         Ok(saved)
@@ -135,25 +137,17 @@ impl ModelConfig {
         names
     }
 
-    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+    pub fn param_shape(&self, name: &str) -> Result<Vec<usize>> {
         let (d, di, v) = (self.d_model, self.d_inter, self.vocab);
-        let suffix = name.split('.').next_back().unwrap();
-        match suffix {
+        let suffix = name.split('.').next_back().unwrap_or(name);
+        Ok(match suffix {
             "emb" => vec![v, d],
-            "ln_f" | "ln1" | "ln2" => {
-                if name == "emb" {
-                    vec![v, d]
-                } else if name == "ln_f" {
-                    vec![d]
-                } else {
-                    vec![d]
-                }
-            }
+            "ln_f" | "ln1" | "ln2" => vec![d],
             "w_q" | "w_k" | "w_v" | "w_o" => vec![d, d],
             "w_gate" | "w_up" => vec![d, di],
             "w_down" => vec![di, d],
-            other => panic!("no static shape for param {other}"),
-        }
+            other => return Err(anyhow!("no static shape for param '{other}'")),
+        })
     }
 
     /// Initialize a dense model (GPT-2-style scaled normal init).
@@ -234,5 +228,17 @@ mod tests {
     fn combo_lookup() {
         assert!(combo_targets("all").is_ok());
         assert!(combo_targets("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_projection_and_param_are_errors() {
+        let cfg = ModelConfig::from_manifest(&tiny_manifest(), "tiny").unwrap();
+        assert!(cfg.weight_dims("sideways").is_err());
+        assert!(cfg.cur_params("sideways", 8).is_err());
+        assert!(cfg.param_shape("L0.w_mystery").is_err());
+        assert_eq!(cfg.weight_dims("down").unwrap(), (704, 256));
+        assert_eq!(cfg.param_shape("L2.w_gate").unwrap(), vec![256, 704]);
+        assert_eq!(cfg.param_shape("emb").unwrap(), vec![512, 256]);
+        assert_eq!(cfg.param_shape("ln_f").unwrap(), vec![256]);
     }
 }

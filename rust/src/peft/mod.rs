@@ -68,8 +68,8 @@ pub fn trainable_params(adapter: Adapter, cfg: &ModelConfig) -> usize {
         Adapter::Mora => 3 * cfg.mora_rank * cfg.mora_rank,
         Adapter::Lora => {
             let rl = cfg.lora_rank;
-            let (dq, _) = cfg.weight_dims("q");
-            let (dg_in, dg_out) = cfg.weight_dims("gate");
+            let (dq, _) = cfg.weight_dims("q").expect("static projection");
+            let (dg_in, dg_out) = cfg.weight_dims("gate").expect("static projection");
             rl * (dq + dq) * 2 + rl * (dg_in + dg_out)
         }
     };
@@ -98,7 +98,7 @@ pub fn init_adapters(
             let rl = cfg.lora_rank;
             for &l in &mids {
                 for proj in ["q", "k", "gate"] {
-                    let (m, n) = cfg.weight_dims(proj);
+                    let (m, n) = cfg.weight_dims(proj)?;
                     store.insert(
                         format!("L{l}.lora_a_{proj}"),
                         Tensor::from_f32(&[m, rl], rng.normal_vec(m * rl, 0.02)),
@@ -120,7 +120,7 @@ pub fn init_adapters(
             for &l in &mids {
                 for proj in ["q", "k", "gate"] {
                     let w = Mat::from_tensor(teacher.get(&format!("L{l}.w_{proj}"))?)?;
-                    let xnorm = calib.xnorm(l, proj);
+                    let xnorm = calib.xnorm(l, proj)?;
                     let (rows, cols) = select_inverted(&w, xnorm, rc);
                     store.insert(format!("L{l}.cl_c_{proj}"), w.select_cols(&cols).to_tensor());
                     store.insert(format!("L{l}.cl_u_{proj}"), Tensor::zeros(&[rc, rc]));

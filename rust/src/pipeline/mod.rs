@@ -1,16 +1,22 @@
 //! Layer-pipeline executor: the serving-style composition engine.
 //!
 //! The coordinator never runs a monolithic model for inference. Instead it
-//! composes per-layer AOT executables — dense or cured, any rank/combo —
+//! composes per-layer operations — dense or cured, any rank/combo —
 //! according to a [`LayerPlan`], exactly like a serving router picking
 //! model variants per stage. This is what makes "compress k layers at
-//! runtime" possible with a finite artifact set, and it doubles as the
-//! calibration engine (the calib artifact emits WANDA statistics).
+//! runtime" possible with a finite operation set, and it doubles as the
+//! calibration engine (the calib forward emits WANDA statistics).
+//!
+//! The pipeline is backend-agnostic: it assembles each layer's
+//! [`LayerParams`] view from the store and hands execution to the
+//! runtime's [`crate::backend::Backend`] (native CPU or PJRT artifacts).
 
+use crate::backend::{Backend, LayerParams, Proj};
 use crate::model::ModelConfig;
-use crate::runtime::{Bindings, Runtime};
+use crate::runtime::Runtime;
 use crate::tensor::{Tensor, TensorStore};
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
+use std::borrow::Cow;
 
 /// How one layer executes.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -72,67 +78,61 @@ pub struct Pipeline<'rt> {
 
 impl<'rt> Pipeline<'rt> {
     pub fn new(rt: &'rt Runtime, config: &str) -> Result<Pipeline<'rt>> {
-        let cfg = ModelConfig::from_manifest(&rt.manifest, config)?;
+        let cfg = ModelConfig::from_manifest(rt.manifest(), config)?;
         Ok(Pipeline { rt, cfg })
-    }
-
-    fn art(&self, suffix: &str) -> String {
-        format!("{}_{}", self.cfg.name, suffix)
-    }
-
-    pub fn layer_artifact(&self, kind: &LayerKind) -> String {
-        match kind {
-            LayerKind::Dense => self.art("layer_fwd_dense"),
-            LayerKind::Cured { rank, combo } => {
-                self.art(&format!("layer_fwd_cured_r{rank}_c{combo}"))
-            }
-        }
     }
 
     /// Embed a token batch: (b, s) i32 -> (b, s, d).
     pub fn embed(&self, store: &TensorStore, tokens: &Tensor) -> Result<Tensor> {
-        let emb = store.get("emb")?;
-        let mut out = self.rt.execute(
-            &self.art("embed_fwd"),
-            &Bindings::new().bind("tokens", tokens).bind("emb", emb),
-        )?;
-        out.remove("x").context("embed output missing")
+        self.rt.backend().embed(&self.cfg, store.get("emb")?, tokens)
     }
 
-    /// Bind one layer's parameters (store names `L{l}.*` → artifact names
-    /// `L.*`); for cured projections the merged `U = U0 + dU` is computed
-    /// host-side (r×r, negligible).
-    pub fn bind_layer<'b>(
+    /// Assemble one layer's parameter view (store names `L{l}.*`); for
+    /// cured projections the merged `U = U0 + dU` is computed host-side
+    /// (r×r, negligible).
+    pub fn layer_params<'b>(
         &self,
-        b: &mut Bindings<'b>,
         store: &'b TensorStore,
         l: usize,
         kind: &LayerKind,
-    ) -> Result<()> {
-        match kind {
-            LayerKind::Dense => {
-                for suffix in ["ln1", "w_q", "w_k", "w_v", "w_o", "ln2", "w_gate", "w_up", "w_down"]
-                {
-                    b.bind_mut(format!("L.{suffix}"), store.get(&format!("L{l}.{suffix}"))?);
-                }
-            }
+    ) -> Result<LayerParams<'b>> {
+        let (q, k, gate) = match kind {
+            LayerKind::Dense => (
+                Proj::Dense(store.get(&format!("L{l}.w_q"))?),
+                Proj::Dense(store.get(&format!("L{l}.w_k"))?),
+                Proj::Dense(store.get(&format!("L{l}.w_gate"))?),
+            ),
             LayerKind::Cured { combo, .. } => {
                 let targets = crate::model::combo_targets(combo)?;
-                for suffix in ["ln1", "ln2", "w_v", "w_o", "w_up", "w_down"] {
-                    b.bind_mut(format!("L.{suffix}"), store.get(&format!("L{l}.{suffix}"))?);
-                }
+                let mut projs = Vec::with_capacity(3);
                 for proj in ["q", "k", "gate"] {
                     if targets.contains(&proj) {
-                        b.bind_mut(format!("L.c_{proj}"), store.get(&format!("L{l}.c_{proj}"))?);
-                        b.bind_mut(format!("L.r_{proj}"), store.get(&format!("L{l}.r_{proj}"))?);
-                        b.bind_owned(format!("L.u_{proj}"), self.merged_u(store, l, proj)?);
+                        projs.push(Proj::Cured {
+                            c: store.get(&format!("L{l}.c_{proj}"))?,
+                            u: Cow::Owned(self.merged_u(store, l, proj)?),
+                            r: store.get(&format!("L{l}.r_{proj}"))?,
+                        });
                     } else {
-                        b.bind_mut(format!("L.w_{proj}"), store.get(&format!("L{l}.w_{proj}"))?);
+                        projs.push(Proj::Dense(store.get(&format!("L{l}.w_{proj}"))?));
                     }
                 }
+                let gate = projs.pop().expect("gate");
+                let k = projs.pop().expect("k");
+                let q = projs.pop().expect("q");
+                (q, k, gate)
             }
-        }
-        Ok(())
+        };
+        Ok(LayerParams {
+            ln1: store.get(&format!("L{l}.ln1"))?,
+            ln2: store.get(&format!("L{l}.ln2"))?,
+            q,
+            k,
+            gate,
+            v: store.get(&format!("L{l}.w_v"))?,
+            o: store.get(&format!("L{l}.w_o"))?,
+            up: store.get(&format!("L{l}.w_up"))?,
+            down: store.get(&format!("L{l}.w_down"))?,
+        })
     }
 
     /// `U = U0 + dU` (dU optional in the store).
@@ -156,10 +156,8 @@ impl<'rt> Pipeline<'rt> {
         kind: &LayerKind,
         x: &Tensor,
     ) -> Result<Tensor> {
-        let mut b = Bindings::new().bind("x", x);
-        self.bind_layer(&mut b, store, l, kind)?;
-        let mut out = self.rt.execute(&self.layer_artifact(kind), &b)?;
-        out.remove("y").context("layer output missing")
+        let params = self.layer_params(store, l, kind)?;
+        self.rt.backend().layer_forward(&self.cfg, &params, x)
     }
 
     /// Full forward to final hidden states.
@@ -186,15 +184,13 @@ impl<'rt> Pipeline<'rt> {
         targets: &Tensor,
     ) -> Result<Tensor> {
         let x = self.forward_hidden(store, plan, tokens)?;
-        let mut out = self.rt.execute(
-            &self.art("head_nll"),
-            &Bindings::new()
-                .bind("x", &x)
-                .bind("ln_f", store.get("ln_f")?)
-                .bind("emb", store.get("emb")?)
-                .bind("targets", targets),
-        )?;
-        out.remove("nll").context("nll output missing")
+        self.rt.backend().head_nll(
+            &self.cfg,
+            &x,
+            store.get("ln_f")?,
+            store.get("emb")?,
+            targets,
+        )
     }
 
     /// Full logits, (b, s, vocab).
@@ -205,14 +201,7 @@ impl<'rt> Pipeline<'rt> {
         tokens: &Tensor,
     ) -> Result<Tensor> {
         let x = self.forward_hidden(store, plan, tokens)?;
-        let mut out = self.rt.execute(
-            &self.art("head_logits"),
-            &Bindings::new()
-                .bind("x", &x)
-                .bind("ln_f", store.get("ln_f")?)
-                .bind("emb", store.get("emb")?),
-        )?;
-        out.remove("logits").context("logits output missing")
+        self.rt.backend().head_logits(&self.cfg, &x, store.get("ln_f")?, store.get("emb")?)
     }
 
     /// Calibration forward: dense layers only, collecting per-layer
@@ -225,25 +214,22 @@ impl<'rt> Pipeline<'rt> {
         let mut ffn_sumsq = Vec::with_capacity(self.cfg.n_layers);
         let mut attn_in = Vec::with_capacity(self.cfg.n_layers);
         let mut ffn_in = Vec::with_capacity(self.cfg.n_layers);
-        let art = self.art("layer_fwd_calib");
         for l in 0..self.cfg.n_layers {
-            let mut b = Bindings::new().bind("x", &x);
-            self.bind_layer(&mut b, store, l, &LayerKind::Dense)?;
-            let mut out = self.rt.execute(&art, &b)?;
-            let y = out.remove("y").context("calib y missing")?;
-            attn_sumsq.push(out.remove("attn_sumsq").context("attn_sumsq missing")?);
-            ffn_sumsq.push(out.remove("ffn_sumsq").context("ffn_sumsq missing")?);
-            attn_in.push(out.remove("attn_in").context("attn_in missing")?);
-            ffn_in.push(out.remove("ffn_in").context("ffn_in missing")?);
-            layer_outputs.push(y.clone());
-            x = y;
+            let params = self.layer_params(store, l, &LayerKind::Dense)?;
+            let out = self.rt.backend().layer_forward_calib(&self.cfg, &params, &x)?;
+            attn_sumsq.push(out.attn_sumsq);
+            ffn_sumsq.push(out.ffn_sumsq);
+            attn_in.push(out.attn_in);
+            ffn_in.push(out.ffn_in);
+            layer_outputs.push(out.y.clone());
+            x = out.y;
         }
         Ok(CalibForward { layer_outputs, embed_out, attn_sumsq, ffn_sumsq, attn_in, ffn_in })
     }
 
     /// Greedy decoding through the per-layer pipeline.
     ///
-    /// The AOT artifacts are fixed-shape (b, s); generation keeps a
+    /// The execution set is fixed-shape (b, s); generation keeps a
     /// sliding window of the last `seq` tokens and recomputes the full
     /// window per emitted token (no KV cache — honest cost: one pipeline
     /// pass per token; fine for demo-scale serving and it exercises the
@@ -348,16 +334,45 @@ mod tests {
     }
 
     #[test]
-    fn cured_artifact_names() {
-        // Artifact naming must match aot.py's emission scheme.
-        let kind = LayerKind::Cured { rank: 16, combo: "qk".into() };
-        let dense = LayerKind::Dense;
-        // Pipeline::layer_artifact needs a runtime; test the format here.
-        let name = match &kind {
-            LayerKind::Cured { rank, combo } => format!("tiny_layer_fwd_cured_r{rank}_c{combo}"),
-            LayerKind::Dense => "tiny_layer_fwd_dense".into(),
+    fn layer_params_views_match_plan() {
+        let c = cfg();
+        let mut rng = crate::util::Rng::new(5, 0);
+        let mut store = c.init_dense(&mut rng);
+        let rt = Runtime::native();
+        let pipe = Pipeline { rt: &rt, cfg: c.clone() };
+        let p = pipe.layer_params(&store, 1, &LayerKind::Dense).unwrap();
+        assert!(!p.q.is_cured() && !p.k.is_cured() && !p.gate.is_cured());
+        // Cure layer 1 (combo qk: gate stays dense), then re-assemble.
+        let calib = crate::calib::Calibration {
+            attn_norms: vec![vec![1.0; c.d_model]; c.n_layers],
+            ffn_norms: vec![vec![1.0; c.d_model]; c.n_layers],
+            angular: vec![0.0; c.n_layers],
+            n_examples: 1,
         };
-        assert_eq!(name, "tiny_layer_fwd_cured_r16_cqk");
-        assert!(matches!(dense, LayerKind::Dense));
+        let opts = crate::compress::CompressOptions {
+            combo: "qk".into(),
+            r_max: 4,
+            ..Default::default()
+        };
+        crate::compress::cure_layers(&mut store, &c, &calib, &[1], &opts).unwrap();
+        let kind = LayerKind::Cured { rank: 4, combo: "qk".into() };
+        let p = pipe.layer_params(&store, 1, &kind).unwrap();
+        assert!(p.q.is_cured() && p.k.is_cured());
+        assert!(!p.gate.is_cured());
+        assert_eq!(p.q.rank(), Some(4));
+        // A dense view of a cured layer must fail loudly (w_q is gone).
+        assert!(pipe.layer_params(&store, 1, &LayerKind::Dense).is_err());
+    }
+
+    #[test]
+    fn merged_u_adds_delta() {
+        let c = cfg();
+        let rt = Runtime::native();
+        let pipe = Pipeline { rt: &rt, cfg: c };
+        let mut store = TensorStore::new();
+        store.insert("L0.u_q", Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        store.insert("L0.du_q", Tensor::from_f32(&[2, 2], vec![0.5, 0.0, -1.0, 0.25]));
+        let u = pipe.merged_u(&store, 0, "q").unwrap();
+        assert_eq!(u.f32s().unwrap(), &[1.5, 2.0, 2.0, 4.25]);
     }
 }

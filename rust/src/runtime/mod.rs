@@ -1,22 +1,26 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//! Runtime facade: owns the active execution [`Backend`] and routes the
+//! coordinator's model operations to it.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
-//! from_text_file` → `compile` → `execute`). The manifest written by
-//! `python/compile/aot.py` drives generic marshalling: artifacts declare
-//! named, shaped inputs/outputs, and callers bind tensors by name — the
-//! runtime validates shapes/dtypes and fixes positional order.
+//! Two backends exist (see [`crate::backend`]):
 //!
-//! Interchange is HLO **text**: xla_extension 0.5.1 rejects jax>=0.5
-//! serialized protos (64-bit instruction ids); the text parser reassigns
-//! ids (see /opt/xla-example/README.md).
+//! * **native** (default) — pure-Rust CPU execution; builds and runs
+//!   anywhere with no artifacts directory.
+//! * **pjrt** (`--features pjrt`) — the AOT artifact executor on the
+//!   `xla` PJRT crate; picked automatically when the artifacts directory
+//!   (`$CURING_ARTIFACTS`, default `./artifacts`) holds a manifest.
+//!
+//! `CURING_BACKEND=native|pjrt` forces the choice. The artifact-name
+//! plumbing ([`ArtifactSpec`], [`Bindings`], [`Runtime::execute`]) is
+//! backend-independent: the switched full-model graphs of the PEFT
+//! comparison experiments go through it, and backends without artifact
+//! support reject those calls with a clear error.
 
-use crate::tensor::{Data, DType, Tensor};
+use crate::backend::Backend;
+use crate::tensor::{DType, Tensor};
 use crate::util::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::cell::RefCell;
+use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::path::PathBuf;
 
 /// One named input/output slot of an artifact.
 #[derive(Debug, Clone)]
@@ -36,188 +40,143 @@ pub struct ArtifactSpec {
     pub outputs: Vec<IoSpec>,
 }
 
-/// A compiled artifact plus its spec.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
+/// Parse one artifact's spec out of a manifest.
+pub fn spec_from_manifest(manifest: &Json, name: &str) -> Result<ArtifactSpec> {
+    let a = manifest
+        .at(&["artifacts", name])
+        .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+    let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+        a.at(&[key])
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
+            .iter()
+            .map(|e| {
+                let mut shape = Vec::new();
+                for d in e
+                    .at(&["shape"])
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("io missing shape"))?
+                {
+                    shape.push(d.as_usize().ok_or_else(|| anyhow!("bad shape entry"))?);
+                }
+                Ok(IoSpec {
+                    name: e
+                        .at(&["name"])
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("io missing name"))?
+                        .to_string(),
+                    shape,
+                    dtype: DType::from_tag(
+                        e.at(&["dtype"]).and_then(|v| v.as_str()).unwrap_or("f32"),
+                    )?,
+                })
+            })
+            .collect()
+    };
+    Ok(ArtifactSpec {
+        name: name.to_string(),
+        file: a
+            .at(&["file"])
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+            .to_string(),
+        config: a.at(&["config"]).and_then(|v| v.as_str()).unwrap_or("").to_string(),
+        inputs: parse_io("inputs")?,
+        outputs: parse_io("outputs")?,
+    })
 }
 
-/// The PJRT runtime: client + manifest + executable cache.
+/// The runtime: the active backend behind a uniform face.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    pub manifest: Json,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-    /// Cumulative PJRT execute count (perf accounting).
-    pub exec_count: std::cell::Cell<u64>,
+    backend: Box<dyn Backend>,
+}
+
+fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(std::env::var("CURING_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
 }
 
 impl Runtime {
-    /// Open the artifacts directory (must contain `manifest.json`).
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let mpath = artifacts_dir.join("manifest.json");
-        let text = std::fs::read_to_string(&mpath)
-            .with_context(|| format!("missing {} — run `make artifacts`", mpath.display()))?;
-        let manifest = Json::parse(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            dir: artifacts_dir.to_path_buf(),
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            exec_count: std::cell::Cell::new(0),
-        })
+    /// The pure-Rust CPU backend (always available).
+    pub fn native() -> Runtime {
+        Runtime { backend: Box::new(crate::backend::native::NativeBackend::new()) }
     }
 
-    /// Default artifacts location: `$CURING_ARTIFACTS` or `./artifacts`.
+    /// Wrap an explicit backend.
+    pub fn from_backend(backend: Box<dyn Backend>) -> Runtime {
+        Runtime { backend }
+    }
+
+    /// The PJRT artifact backend over an artifacts directory.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: &std::path::Path) -> Result<Runtime> {
+        Ok(Runtime { backend: Box::new(crate::backend::pjrt::PjrtBackend::new(artifacts_dir)?) })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_default() -> Result<Runtime> {
+        Runtime::pjrt(&default_artifacts_dir())
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt_default() -> Result<Runtime> {
+        anyhow::bail!(
+            "this build has no PJRT support — rebuild with `--features pjrt` \
+             (and point the `xla` dependency at a real xla-rs checkout)"
+        )
+    }
+
+    /// Backend selection: `CURING_BACKEND=native|pjrt` forces one;
+    /// otherwise pjrt is used when built in *and* artifacts exist, with
+    /// the native backend as the universal fallback.
     pub fn open_default() -> Result<Runtime> {
-        let dir = std::env::var("CURING_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-        Runtime::new(Path::new(&dir))
+        if let Ok(which) = std::env::var("CURING_BACKEND") {
+            return match which.as_str() {
+                "native" => Ok(Runtime::native()),
+                "pjrt" => Runtime::pjrt_default(),
+                other => Err(anyhow!("unknown CURING_BACKEND '{other}' (native|pjrt)")),
+            };
+        }
+        if cfg!(feature = "pjrt") && default_artifacts_dir().join("manifest.json").exists() {
+            return Runtime::pjrt_default();
+        }
+        Ok(Runtime::native())
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    pub fn manifest(&self) -> &Json {
+        self.backend.manifest()
+    }
+
+    /// Cumulative backend-operation count (perf accounting).
+    pub fn exec_count(&self) -> u64 {
+        self.backend.exec_count()
+    }
+
+    /// Whether the backend can run arbitrary named AOT artifacts.
+    pub fn supports_artifacts(&self) -> bool {
+        self.backend.supports_artifacts()
     }
 
     pub fn artifact_names(&self) -> Vec<String> {
-        self.manifest
-            .at(&["artifacts"])
-            .and_then(|a| a.as_obj())
-            .map(|o| o.iter().map(|(k, _)| k.to_string()).collect())
-            .unwrap_or_default()
+        self.backend.artifact_names()
     }
 
     pub fn spec(&self, name: &str) -> Result<ArtifactSpec> {
-        let a = self
-            .manifest
-            .at(&["artifacts", name])
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
-        let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
-            a.at(&[key])
-                .and_then(|v| v.as_arr())
-                .ok_or_else(|| anyhow!("artifact {name} missing {key}"))?
-                .iter()
-                .map(|e| {
-                    Ok(IoSpec {
-                        name: e
-                            .at(&["name"])
-                            .and_then(|v| v.as_str())
-                            .ok_or_else(|| anyhow!("io missing name"))?
-                            .to_string(),
-                        shape: e
-                            .at(&["shape"])
-                            .and_then(|v| v.as_arr())
-                            .ok_or_else(|| anyhow!("io missing shape"))?
-                            .iter()
-                            .map(|d| d.as_usize().unwrap())
-                            .collect(),
-                        dtype: DType::from_tag(
-                            e.at(&["dtype"]).and_then(|v| v.as_str()).unwrap_or("f32"),
-                        )?,
-                    })
-                })
-                .collect()
-        };
-        Ok(ArtifactSpec {
-            name: name.to_string(),
-            file: a
-                .at(&["file"])
-                .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
-                .to_string(),
-            config: a.at(&["config"]).and_then(|v| v.as_str()).unwrap_or("").to_string(),
-            inputs: parse_io("inputs")?,
-            outputs: parse_io("outputs")?,
-        })
+        self.backend.artifact_spec(name)
     }
 
-    /// Load + compile an artifact (cached).
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self.spec(name)?;
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parse hlo {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        let exec = Rc::new(Executable { spec, exe });
-        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
-        Ok(exec)
-    }
-
-    pub fn cached_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
-
-    /// Execute by name with named bindings; returns outputs keyed by the
-    /// manifest's output names.
+    /// Execute an artifact by name with named bindings; returns outputs
+    /// keyed by the manifest's output names. Errors on backends without
+    /// artifact support.
     pub fn execute(&self, name: &str, bindings: &Bindings) -> Result<HashMap<String, Tensor>> {
-        let exe = self.load(name)?;
-        self.execute_loaded(&exe, bindings)
-    }
-
-    pub fn execute_loaded(
-        &self,
-        exe: &Executable,
-        bindings: &Bindings,
-    ) -> Result<HashMap<String, Tensor>> {
-        let lits = self.marshal_inputs(&exe.spec, bindings)?;
-        let outs = exe
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", exe.spec.name))?;
-        self.exec_count.set(self.exec_count.get() + 1);
-        let result = outs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result {}: {e:?}", exe.spec.name))?;
-        let pieces = result
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", exe.spec.name))?;
-        if pieces.len() != exe.spec.outputs.len() {
-            bail!(
-                "artifact {} returned {} outputs, manifest says {}",
-                exe.spec.name,
-                pieces.len(),
-                exe.spec.outputs.len()
-            );
-        }
-        let mut out = HashMap::new();
-        for (io, lit) in exe.spec.outputs.iter().zip(pieces) {
-            out.insert(io.name.clone(), literal_to_tensor(&lit, io)?);
-        }
-        Ok(out)
-    }
-
-    fn marshal_inputs(&self, spec: &ArtifactSpec, bindings: &Bindings) -> Result<Vec<xla::Literal>> {
-        let mut lits = Vec::with_capacity(spec.inputs.len());
-        for io in &spec.inputs {
-            let t = bindings
-                .get(&io.name)
-                .ok_or_else(|| anyhow!("artifact {}: missing input '{}'", spec.name, io.name))?;
-            if t.shape != io.shape {
-                bail!(
-                    "artifact {}: input '{}' shape {:?} != expected {:?}",
-                    spec.name,
-                    io.name,
-                    t.shape,
-                    io.shape
-                );
-            }
-            if t.dtype() != io.dtype {
-                bail!(
-                    "artifact {}: input '{}' dtype {:?} != expected {:?}",
-                    spec.name,
-                    io.name,
-                    t.dtype(),
-                    io.dtype
-                );
-            }
-            lits.push(tensor_to_literal(t)?);
-        }
-        Ok(lits)
+        self.backend.execute_artifact(name, bindings)
     }
 }
 
@@ -270,38 +229,53 @@ impl<'a> Bindings<'a> {
     }
 }
 
-pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    // Single-copy path: build the literal directly from raw host bytes.
-    // (The obvious `Literal::vec1(..).reshape(..)` costs two extra full
-    // copies per argument — measured 1.32x end-to-end on the pretrain
-    // step, see EXPERIMENTS.md §Perf.)
-    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
-        Data::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
-        Data::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
-    };
-    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
-        .map_err(|e| anyhow!("create literal: {e:?}"))
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-fn bytemuck_f32(v: &[f32]) -> &[u8] {
-    // Safety: f32 slices are always validly viewable as bytes (alignment
-    // shrinks, length scales by 4).
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
+    #[test]
+    fn native_runtime_always_opens() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend_name(), "native");
+        assert!(!rt.supports_artifacts());
+        assert!(rt.artifact_names().is_empty());
+        // Config manifest is built in.
+        assert!(rt.manifest().at(&["configs", "tiny"]).is_some());
+        assert!(rt.manifest().at(&["configs", "mini"]).is_some());
+    }
 
-fn bytemuck_i32(v: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
-}
+    #[test]
+    fn native_runtime_rejects_artifact_calls() {
+        let rt = Runtime::native();
+        let err = rt.spec("tiny_model_nll_switched").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "err: {err}");
+        assert!(rt.execute("tiny_embed_fwd", &Bindings::new()).is_err());
+    }
 
-fn literal_to_tensor(lit: &xla::Literal, io: &IoSpec) -> Result<Tensor> {
-    match io.dtype {
-        DType::F32 => {
-            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))?;
-            Ok(Tensor::from_f32(&io.shape, v))
-        }
-        DType::I32 => {
-            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("literal to i32 vec: {e:?}"))?;
-            Ok(Tensor::from_i32(&io.shape, v))
-        }
+    #[test]
+    fn spec_parses_from_manifest() {
+        let manifest = Json::parse(
+            r#"{"artifacts": {"t_op": {"file": "t_op.hlo", "config": "t",
+                "inputs": [{"name": "x", "shape": [2, 3], "dtype": "f32"}],
+                "outputs": [{"name": "y", "shape": [2], "dtype": "i32"}]}}}"#,
+        )
+        .unwrap();
+        let spec = spec_from_manifest(&manifest, "t_op").unwrap();
+        assert_eq!(spec.file, "t_op.hlo");
+        assert_eq!(spec.inputs.len(), 1);
+        assert_eq!(spec.inputs[0].shape, vec![2, 3]);
+        assert_eq!(spec.outputs[0].dtype, DType::I32);
+        assert!(spec_from_manifest(&manifest, "nope").is_err());
+    }
+
+    #[test]
+    fn bindings_borrow_and_own() {
+        let t = Tensor::scalar_f32(1.5);
+        let mut b = Bindings::new().bind("a", &t);
+        b.bind_owned("b", Tensor::scalar_f32(2.5));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.get("a").unwrap().f32s().unwrap()[0], 1.5);
+        assert_eq!(b.get("b").unwrap().f32s().unwrap()[0], 2.5);
+        assert!(b.get("c").is_none());
     }
 }

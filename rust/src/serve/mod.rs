@@ -2,10 +2,12 @@
 //!
 //! A vLLM-router-style front for the compressed/original model variants:
 //! client threads submit single-sequence scoring requests; the server
-//! (which owns the PJRT runtime — the `xla` handles are not `Send`, so
-//! the server runs on the *calling* thread and clients are spawned)
-//! groups them into model-batch-sized PJRT calls with a wait-time cap,
-//! and reports latency/throughput/occupancy statistics.
+//! (which owns the runtime — backend handles are not `Send` (PJRT's xla
+//! handles, the native backend's op counter), so the server runs on the
+//! *calling* thread and clients are spawned) groups them into
+//! model-batch-sized backend calls with a wait-time cap, and reports
+//! latency/throughput/occupancy statistics. The native backend fans each
+//! batched matmul across cores, so batching still buys throughput.
 
 use crate::data::{Corpus, CorpusKind, Vocab};
 use crate::pipeline::{LayerPlan, Pipeline};

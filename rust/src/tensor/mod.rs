@@ -199,8 +199,10 @@ impl TensorStore {
     }
 
     /// Total parameter count of f32 tensors (the "model size" number).
+    /// i32 tensors (token buffers, index maps) are bookkeeping, not model
+    /// parameters, and must not inflate compression-ratio numbers.
     pub fn total_params(&self) -> usize {
-        self.tensors.values().map(|t| t.len()).sum()
+        self.tensors.values().filter(|t| t.dtype() == DType::F32).map(|t| t.len()).sum()
     }
 
     pub fn total_bytes(&self) -> usize {
@@ -251,26 +253,56 @@ impl TensorStore {
             .and_then(|t| t.as_obj())
             .ok_or_else(|| anyhow!("index.json missing 'tensors'"))?;
         for (name, e) in entries.iter() {
-            let file = e.at(&["file"]).and_then(|f| f.as_str()).unwrap();
-            let dtype = DType::from_tag(e.at(&["dtype"]).and_then(|d| d.as_str()).unwrap())?;
-            let shape: Vec<usize> = e
+            let file = e
+                .at(&["file"])
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("tensor '{name}': index entry missing 'file'"))?;
+            let dtag = e
+                .at(&["dtype"])
+                .and_then(|d| d.as_str())
+                .ok_or_else(|| anyhow!("tensor '{name}': index entry missing 'dtype'"))?;
+            let dtype = DType::from_tag(dtag)
+                .with_context(|| format!("tensor '{name}': bad dtype tag"))?;
+            let shape_json = e
                 .at(&["shape"])
                 .and_then(|s| s.as_arr())
-                .unwrap()
-                .iter()
-                .map(|d| d.as_usize().unwrap())
-                .collect();
+                .ok_or_else(|| anyhow!("tensor '{name}': index entry missing 'shape'"))?;
+            let mut shape = Vec::with_capacity(shape_json.len());
+            for d in shape_json {
+                shape.push(
+                    d.as_usize()
+                        .ok_or_else(|| anyhow!("tensor '{name}': non-integer shape entry"))?,
+                );
+            }
             let mut bytes = Vec::new();
-            std::fs::File::open(dir.join(file))?.read_to_end(&mut bytes)?;
-            store.insert(name, Tensor::from_bytes(shape, dtype, &bytes)?);
+            std::fs::File::open(dir.join(file))
+                .with_context(|| format!("tensor '{name}': cannot open {file}"))?
+                .read_to_end(&mut bytes)?;
+            store.insert(
+                name,
+                Tensor::from_bytes(shape, dtype, &bytes)
+                    .with_context(|| format!("tensor '{name}': corrupt blob {file}"))?,
+            );
         }
         Ok(store)
     }
 }
 
-/// Filesystem-safe name mangling ('.' is common in param names).
+/// Filesystem-safe, *injective* name mangling. Alphanumerics and '-' pass
+/// through; every other character (including '_', so `L0.w_q` and
+/// `L0_w_q` cannot collide on disk) becomes `_XXXXXX` with the fixed
+/// 6-hex-digit code point. `load` never inverts this — index.json records
+/// file names.
 fn mangle(name: &str) -> String {
-    name.chars().map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' }).collect()
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '-' {
+            out.push(c);
+        } else {
+            out.push_str(&format!("_{:06x}", c as u32));
+        }
+    }
+    out
 }
 
 /// Resolve a store path under the run directory.
@@ -316,5 +348,72 @@ mod tests {
         let b = t.to_bytes();
         let t2 = Tensor::from_bytes(vec![3], DType::F32, &b).unwrap();
         assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn total_params_counts_only_f32() {
+        let mut s = TensorStore::new();
+        s.insert("w", Tensor::from_f32(&[2, 3], vec![0.0; 6]));
+        s.insert("tokens", Tensor::from_i32(&[100], vec![0; 100]));
+        // The i32 token buffer must not inflate the "model size" number.
+        assert_eq!(s.total_params(), 6);
+        // total_bytes still accounts for everything persisted.
+        assert_eq!(s.total_bytes(), (6 + 100) * 4);
+    }
+
+    #[test]
+    fn mangle_is_injective_for_colliding_names() {
+        assert_ne!(mangle("L0.w_q"), mangle("L0_w_q"));
+        assert_ne!(mangle("a.b"), mangle("a_b"));
+        assert_ne!(mangle("a..b"), mangle("a._b"));
+        // Plain alphanumerics and '-' stay readable.
+        assert_eq!(mangle("emb-v2"), "emb-v2");
+    }
+
+    #[test]
+    fn colliding_names_roundtrip_without_overwrite() {
+        let dir =
+            std::env::temp_dir().join(format!("curing_mangle_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = TensorStore::new();
+        s.insert("L0.w_q", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        s.insert("L0_w_q", Tensor::from_f32(&[2], vec![3.0, 4.0]));
+        s.save(&dir).unwrap();
+        let s2 = TensorStore::load(&dir).unwrap();
+        assert_eq!(s2.get("L0.w_q").unwrap().f32s().unwrap(), &[1.0, 2.0]);
+        assert_eq!(s2.get("L0_w_q").unwrap().f32s().unwrap(), &[3.0, 4.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_malformed_index_gracefully() {
+        let dir =
+            std::env::temp_dir().join(format!("curing_badstore_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Entry with a missing file field must error, not panic.
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"meta": {}, "tensors": {"w": {"dtype": "f32", "shape": [2]}}}"#,
+        )
+        .unwrap();
+        let err = TensorStore::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("file"), "err: {err:#}");
+        // Unknown dtype tag must error, not panic.
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"tensors": {"w": {"file": "w.bin", "dtype": "f16", "shape": [2]}}}"#,
+        )
+        .unwrap();
+        assert!(TensorStore::load(&dir).is_err());
+        // Truncated blob must error, not panic.
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"tensors": {"w": {"file": "w.bin", "dtype": "f32", "shape": [2]}}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("w.bin"), [0u8; 3]).unwrap();
+        assert!(TensorStore::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,45 +1,59 @@
-//! Integration tests over the AOT artifacts + PJRT runtime.
+//! Integration tests over the native backend.
 //!
-//! These need `make artifacts` to have run (they are skipped with a clear
-//! message otherwise) and exercise the real load→compile→execute path the
-//! coordinator uses in production.
+//! These exercise the real coordinator paths (embed → layers → head,
+//! compression, healing, evaluation) end-to-end on the pure-Rust CPU
+//! backend — no artifacts, no skips. With `--features pjrt` plus a real
+//! `xla` checkout and `make artifacts`, the same paths run on the PJRT
+//! backend via `CURING_BACKEND=pjrt`.
 
+use curing::compress::{CompressOptions, LayerStrategy};
+use curing::coordinator::{Ctx, EvalSizes};
 use curing::model::ModelConfig;
-use curing::runtime::{Bindings, Runtime};
-use curing::tensor::Tensor;
+use curing::pipeline::{LayerKind, LayerPlan, Pipeline};
+use curing::runtime::Runtime;
+use curing::tensor::{Tensor, TensorStore};
 use curing::util::Rng;
-use std::path::Path;
 
-fn runtime() -> Option<Runtime> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return None;
-    }
-    Some(Runtime::new(&dir).expect("runtime"))
+fn runtime() -> Runtime {
+    Runtime::native()
+}
+
+fn mini_cfg(rt: &Runtime) -> ModelConfig {
+    ModelConfig::from_manifest(rt.manifest(), "mini").expect("mini config")
 }
 
 fn rand_t(rng: &mut Rng, shape: &[usize], std: f32) -> Tensor {
     Tensor::from_f32(shape, rng.normal_vec(shape.iter().product(), std))
 }
 
+fn flat_calib(cfg: &ModelConfig) -> curing::calib::Calibration {
+    curing::calib::Calibration {
+        attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+        ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+        angular: vec![0.0; cfg.n_layers],
+        n_examples: 1,
+    }
+}
+
 #[test]
-fn embed_fwd_runs_and_gathers() {
-    let Some(rt) = runtime() else { return };
-    let cfg = ModelConfig::from_manifest(&rt.manifest, "tiny").unwrap();
+fn embed_runs_and_gathers() {
+    let rt = runtime();
+    let cfg = mini_cfg(&rt);
     let mut rng = Rng::new(1, 0);
-    let emb = rand_t(&mut rng, &[cfg.vocab, cfg.d_model], 1.0);
+    let store = {
+        let mut s = TensorStore::new();
+        s.insert("emb", rand_t(&mut rng, &[cfg.vocab, cfg.d_model], 1.0));
+        s
+    };
+    let pipe = Pipeline::new(&rt, "mini").unwrap();
     let tokens = Tensor::from_i32(
         &[cfg.batch, cfg.seq],
         (0..cfg.batch * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect(),
     );
-    let out = rt
-        .execute("tiny_embed_fwd", &Bindings::new().bind("tokens", &tokens).bind("emb", &emb))
-        .unwrap();
-    let x = &out["x"];
+    let x = pipe.embed(&store, &tokens).unwrap();
     assert_eq!(x.shape, vec![cfg.batch, cfg.seq, cfg.d_model]);
     // Row 0 token id 0 -> embedding row 0.
-    let e = emb.f32s().unwrap();
+    let e = store.get("emb").unwrap().f32s().unwrap();
     let xs = x.f32s().unwrap();
     for j in 0..cfg.d_model {
         assert_eq!(xs[j], e[j]);
@@ -48,150 +62,67 @@ fn embed_fwd_runs_and_gathers() {
 
 #[test]
 fn dense_layer_and_cured_layer_run() {
-    let Some(rt) = runtime() else { return };
-    let cfg = ModelConfig::from_manifest(&rt.manifest, "tiny").unwrap();
+    let rt = runtime();
+    let cfg = mini_cfg(&rt);
+    let pipe = Pipeline::new(&rt, "mini").unwrap();
     let mut rng = Rng::new(2, 0);
-    let d = cfg.d_model;
-    let x = rand_t(&mut rng, &[cfg.batch, cfg.seq, d], 1.0);
+    let mut store = cfg.init_dense(&mut rng);
+    let x = rand_t(&mut rng, &[cfg.batch, cfg.seq, cfg.d_model], 1.0);
 
-    // Dense layer.
-    let mut b = Bindings::new().bind("x", &x);
-    let store = cfg.init_dense(&mut rng);
-    for name in cfg.dense_layer_param_names(0) {
-        let stripped = name.strip_prefix("L0.").unwrap().to_string();
-        b.bind_owned(format!("L.{stripped}"), store.get(&name).unwrap().clone());
-    }
-    let out = rt.execute("tiny_layer_fwd_dense", &b).unwrap();
-    let y = &out["y"];
-    assert_eq!(y.shape, vec![cfg.batch, cfg.seq, d]);
+    let y = pipe.layer_forward(&store, 0, &LayerKind::Dense, &x).unwrap();
+    assert_eq!(y.shape, x.shape);
     assert!(y.f32s().unwrap().iter().all(|v| v.is_finite()));
 
-    // Cured layer (rank 16, combo all) with random factors.
-    let r = 16usize;
-    let mut b2 = Bindings::new().bind("x", &x);
-    b2.bind_owned("L.ln1", Tensor::from_f32(&[d], vec![1.0; d]));
-    b2.bind_owned("L.ln2", Tensor::from_f32(&[d], vec![1.0; d]));
-    for w in ["q", "k"] {
-        b2.bind_owned(format!("L.c_{w}"), rand_t(&mut rng, &[d, r], 0.05));
-        b2.bind_owned(format!("L.u_{w}"), rand_t(&mut rng, &[r, r], 0.05));
-        b2.bind_owned(format!("L.r_{w}"), rand_t(&mut rng, &[r, d], 0.05));
-    }
-    b2.bind_owned("L.c_gate", rand_t(&mut rng, &[d, r], 0.05));
-    b2.bind_owned("L.u_gate", rand_t(&mut rng, &[r, r], 0.05));
-    b2.bind_owned("L.r_gate", rand_t(&mut rng, &[r, cfg.d_inter], 0.05));
-    for w in ["w_v", "w_o"] {
-        b2.bind_owned(format!("L.{w}"), rand_t(&mut rng, &[d, d], 0.02));
-    }
-    b2.bind_owned("L.w_up", rand_t(&mut rng, &[d, cfg.d_inter], 0.02));
-    b2.bind_owned("L.w_down", rand_t(&mut rng, &[cfg.d_inter, d], 0.02));
-    let out2 = rt.execute("tiny_layer_fwd_cured_r16_call", &b2).unwrap();
-    let y2 = &out2["y"];
-    assert_eq!(y2.shape, vec![cfg.batch, cfg.seq, d]);
+    // Cure layer 1 and run the factored chain.
+    let calib = flat_calib(&cfg);
+    let opts = CompressOptions { r_max: 8, ..Default::default() };
+    curing::compress::cure_layers(&mut store, &cfg, &calib, &[1], &opts).unwrap();
+    let kind = LayerKind::Cured { rank: 8, combo: "all".into() };
+    let y2 = pipe.layer_forward(&store, 1, &kind, &x).unwrap();
+    assert_eq!(y2.shape, x.shape);
     assert!(y2.f32s().unwrap().iter().all(|v| v.is_finite()));
 }
 
-/// Cross-check: the per-layer pipeline and the monolithic switched
-/// artifact must produce the same NLL for the same dense model. This
-/// validates the whole coordinator composition path end-to-end.
-#[test]
-fn pipeline_matches_switched_monolith() {
-    let Some(rt) = runtime() else { return };
-    let pipe = curing::pipeline::Pipeline::new(&rt, "tiny").unwrap();
-    let cfg = &pipe.cfg;
-    let mut rng = Rng::new(10, 0);
-    let store = cfg.init_dense(&mut rng);
-    let toks: Vec<i32> =
-        (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
-    let tgts: Vec<i32> =
-        (0..cfg.batch * cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect();
-    let tokens = Tensor::from_i32(&[cfg.batch, cfg.seq], toks);
-    let targets = Tensor::from_i32(&[cfg.batch, cfg.seq], tgts);
-
-    // Pipeline path (per-layer artifacts).
-    let plan = curing::pipeline::LayerPlan::all_dense(cfg);
-    let nll_pipe = pipe.nll(&store, &plan, &tokens, &targets).unwrap();
-
-    // Monolith path (switched artifact, all switches = 0 -> dense).
-    let spec = rt.spec("tiny_model_nll_switched").unwrap();
-    let switches = Tensor::zeros(&[cfg.n_layers]);
-    let mut b = Bindings::new()
-        .bind("tokens", &tokens)
-        .bind("targets", &targets)
-        .bind("switches", &switches);
-    for io in &spec.inputs {
-        if b.get(&io.name).is_some() {
-            continue;
-        }
-        if store.contains(&io.name) {
-            b.bind_owned(io.name.clone(), store.get(&io.name).unwrap().clone());
-        } else {
-            b.bind_owned(io.name.clone(), Tensor::zeros(&io.shape));
-        }
-    }
-    let out = rt.execute("tiny_model_nll_switched", &b).unwrap();
-    let nll_mono = &out["nll"];
-
-    let a = nll_pipe.f32s().unwrap();
-    let c = nll_mono.f32s().unwrap();
-    for (x, y) in a.iter().zip(c) {
-        assert!(
-            (x - y).abs() < 2e-3 * (1.0 + x.abs()),
-            "pipeline {x} vs monolith {y}"
-        );
-    }
-}
-
-/// Compression fidelity through the real artifacts: cure one layer of a
-/// *synthetically low-rank* model at a rank >= the true rank, and verify
-/// the cured pipeline output matches the dense pipeline output.
+/// Compression fidelity through the real execution path: cure one layer
+/// of a *synthetically low-rank* model at a rank >= the true rank, and
+/// verify the cured pipeline output matches the dense pipeline output.
 #[test]
 fn cured_pipeline_exact_on_low_rank_weights() {
-    let Some(rt) = runtime() else { return };
-    let pipe = curing::pipeline::Pipeline::new(&rt, "tiny").unwrap();
-    let cfg = &pipe.cfg;
+    let rt = runtime();
+    let cfg = mini_cfg(&rt);
+    let pipe = Pipeline::new(&rt, "mini").unwrap();
     let mut rng = Rng::new(11, 0);
     let mut store = cfg.init_dense(&mut rng);
-    // Make layer 3's q/k/gate rank-8 (well under r_max=32).
+    // Make layer 2's q/k/gate rank-4 (well under the rank-rule's 8).
     for (proj, n) in [("q", cfg.d_model), ("k", cfg.d_model), ("gate", cfg.d_inter)] {
-        let a = curing::linalg::Mat::random_normal(cfg.d_model, 8, &mut rng);
-        let bmat = curing::linalg::Mat::random_normal(8, n, &mut rng);
+        let a = curing::linalg::Mat::random_normal(cfg.d_model, 4, &mut rng);
+        let bmat = curing::linalg::Mat::random_normal(4, n, &mut rng);
         let mut w = a.matmul(&bmat);
-        w.scale(0.02);
-        store.insert(format!("L3.w_{proj}"), w.to_tensor());
+        w.scale(0.05);
+        store.insert(format!("L2.w_{proj}"), w.to_tensor());
     }
     let x = rand_t(&mut rng, &[cfg.batch, cfg.seq, cfg.d_model], 1.0);
-    let y_dense = pipe
-        .layer_forward(&store, 3, &curing::pipeline::LayerKind::Dense, &x)
-        .unwrap();
-    // Cure layer 3 at r_max=32 (rank rule gives 32 here).
-    let calib = curing::calib::Calibration {
-        attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
-        ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
-        angular: vec![0.0; cfg.n_layers],
-        n_examples: 1,
-    };
-    let opts = curing::compress::CompressOptions { r_max: 32, ..Default::default() };
-    curing::compress::cure_layers(&mut store, cfg, &calib, &[3], &opts).unwrap();
-    let kind = curing::pipeline::LayerKind::Cured { rank: 32, combo: "all".into() };
-    let y_cur = pipe.layer_forward(&store, 3, &kind, &x).unwrap();
+    let y_dense = pipe.layer_forward(&store, 2, &LayerKind::Dense, &x).unwrap();
+    let calib = flat_calib(&cfg);
+    let opts = CompressOptions { r_max: 8, ..Default::default() };
+    curing::compress::cure_layers(&mut store, &cfg, &calib, &[2], &opts).unwrap();
+    let kind = LayerKind::Cured { rank: 8, combo: "all".into() };
+    let y_cur = pipe.layer_forward(&store, 2, &kind, &x).unwrap();
     let a = y_dense.f32s().unwrap();
     let b = y_cur.f32s().unwrap();
-    let err: f64 = a
-        .iter()
-        .zip(b)
-        .map(|(x, y)| ((x - y) as f64).powi(2))
-        .sum::<f64>()
-        .sqrt();
+    let err: f64 =
+        a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt();
     let norm: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
     assert!(err < 1e-3 * norm, "rel err {}", err / norm);
 }
 
-/// The per-layer heal step must reduce the layer MSE on a fixed batch.
+/// The per-layer heal step must reduce the layer MSE on recoverable
+/// ΔU-subspace damage.
 #[test]
 fn heal_step_reduces_layer_mse() {
-    let Some(rt) = runtime() else { return };
-    let pipe = curing::pipeline::Pipeline::new(&rt, "tiny").unwrap();
-    let cfg = &pipe.cfg;
+    let rt = runtime();
+    let cfg = mini_cfg(&rt);
+    let pipe = Pipeline::new(&rt, "mini").unwrap();
     let mut rng = Rng::new(12, 0);
     let mut dense = cfg.init_dense(&mut rng);
     // Random init (std 0.02) makes the block output nearly insensitive to
@@ -204,18 +135,13 @@ fn heal_step_reduces_layer_mse() {
         }
     }
     let mut student = dense.clone();
-    let calib = curing::calib::Calibration {
-        attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
-        ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
-        angular: vec![0.0; cfg.n_layers],
-        n_examples: 1,
-    };
-    // Rank-8 compression, then corrupt U0 so there is *recoverable*
+    let calib = flat_calib(&cfg);
+    // Rank-4 compression, then corrupt U0 so there is *recoverable*
     // damage in the ΔU subspace (the fresh U0 = C^+ W R^+ is already
     // Frobenius-optimal, so healing a just-cured random-init model has
     // almost nothing to recover — paper Thm 4.3).
-    let opts = curing::compress::CompressOptions { r_max: 8, ..Default::default() };
-    curing::compress::cure_layers(&mut student, cfg, &calib, &[2], &opts).unwrap();
+    let opts = CompressOptions { r_max: 4, ..Default::default() };
+    curing::compress::cure_layers(&mut student, &cfg, &calib, &[2], &opts).unwrap();
     for proj in ["q", "k", "gate"] {
         let du = student.get_mut(&format!("L2.du_{proj}")).unwrap();
         for x in du.f32s_mut().unwrap() {
@@ -224,7 +150,7 @@ fn heal_step_reduces_layer_mse() {
     }
     let vocab = curing::data::Vocab::build();
     let mut corpus = curing::data::Corpus::new(curing::data::CorpusKind::SynthC4, 99);
-    let mut opt = curing::tensor::TensorStore::new();
+    let mut opt = TensorStore::new();
     let hopts = curing::heal::HealOptions { steps: 30, base_lr: 1e-2, warmup: 3 };
     let hist = curing::heal::heal_layers(
         &pipe, &dense, &mut student, &mut opt, &vocab, &mut corpus, &hopts, 0,
@@ -236,7 +162,7 @@ fn heal_step_reduces_layer_mse() {
         last < first * 0.9,
         "healing did not reduce MSE: first {first} last {last}"
     );
-    // dU must have moved away from zero.
+    // dU must have moved away from its corrupted start.
     let du = student.get("L2.du_q").unwrap();
     assert!(du.fro_norm() > 0.0);
 }
@@ -245,12 +171,12 @@ fn heal_step_reduces_layer_mse() {
 /// deterministic for a fixed store.
 #[test]
 fn generation_is_deterministic_and_in_vocab() {
-    let Some(rt) = runtime() else { return };
-    let pipe = curing::pipeline::Pipeline::new(&rt, "tiny").unwrap();
-    let cfg = &pipe.cfg;
+    let rt = runtime();
+    let cfg = mini_cfg(&rt);
+    let pipe = Pipeline::new(&rt, "mini").unwrap();
     let mut rng = Rng::new(21, 0);
     let store = cfg.init_dense(&mut rng);
-    let plan = curing::pipeline::LayerPlan::all_dense(cfg);
+    let plan = LayerPlan::all_dense(&cfg);
     let prompt = vec![1i32, 5, 9, 12];
     let a = pipe.generate_greedy(&store, &plan, &[prompt.clone()], 6).unwrap();
     let b = pipe.generate_greedy(&store, &plan, &[prompt], 6).unwrap();
@@ -260,19 +186,100 @@ fn generation_is_deterministic_and_in_vocab() {
 }
 
 #[test]
-fn missing_input_is_reported_by_name() {
-    let Some(rt) = runtime() else { return };
-    let err = rt.execute("tiny_embed_fwd", &Bindings::new()).unwrap_err();
-    assert!(err.to_string().contains("tokens"), "err: {err}");
+fn missing_weights_are_reported_by_name() {
+    let rt = runtime();
+    let pipe = Pipeline::new(&rt, "mini").unwrap();
+    let store = TensorStore::new();
+    let x = Tensor::zeros(&[1, 2, 32]);
+    let err = pipe.layer_forward(&store, 0, &LayerKind::Dense, &x).unwrap_err();
+    assert!(err.to_string().contains("L0."), "err: {err}");
+    let tokens = Tensor::from_i32(&[1, 2], vec![0, 1]);
+    let err = pipe.embed(&store, &tokens).unwrap_err();
+    assert!(err.to_string().contains("emb"), "err: {err}");
 }
 
 #[test]
-fn shape_mismatch_rejected() {
-    let Some(rt) = runtime() else { return };
-    let bad = Tensor::from_i32(&[1, 2], vec![0, 1]);
-    let emb = Tensor::zeros(&[512, 256]);
-    let err = rt
-        .execute("tiny_embed_fwd", &Bindings::new().bind("tokens", &bad).bind("emb", &emb))
-        .unwrap_err();
-    assert!(err.to_string().contains("shape"), "err: {err}");
+fn shape_and_range_violations_rejected() {
+    let rt = runtime();
+    let cfg = mini_cfg(&rt);
+    let pipe = Pipeline::new(&rt, "mini").unwrap();
+    let mut rng = Rng::new(22, 0);
+    let store = cfg.init_dense(&mut rng);
+    // Out-of-vocab token id.
+    let bad = Tensor::from_i32(&[1, 2], vec![0, cfg.vocab as i32]);
+    assert!(pipe.embed(&store, &bad).is_err());
+    // Wrong input rank to a layer.
+    let flat = Tensor::zeros(&[4, cfg.d_model]);
+    assert!(pipe.layer_forward(&store, 0, &LayerKind::Dense, &flat).is_err());
+}
+
+/// The headline acceptance path: pretrain → calibrate → compress → eval →
+/// heal → eval, entirely on the native backend (this used to require
+/// `make artifacts`).
+#[test]
+fn e2e_compress_heal_eval_on_native_backend() {
+    let root = std::env::temp_dir().join(format!("curing_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let ctx = Ctx::with_runtime(Runtime::native(), &root).unwrap();
+    let pipe = ctx.pipeline("mini").unwrap();
+
+    // 1. Pretrain a few steps (enough to move off random init).
+    let mut last_loss = f64::NAN;
+    let (dense, losses) =
+        ctx.pretrain("mini", 6, 1e-3, 42, &mut |_, l| last_loss = l).unwrap();
+    assert_eq!(losses.len(), 6);
+    assert!(last_loss.is_finite());
+
+    // 2. Calibrate on a handful of examples.
+    let mut corpus =
+        curing::data::Corpus::new(curing::data::CorpusKind::SynthC4, curing::data::SEED_CALIB);
+    let calib =
+        curing::calib::calibrate(&pipe, &dense, &ctx.vocab, &mut corpus, 8).unwrap();
+    assert_eq!(calib.angular.len(), pipe.cfg.n_layers);
+    assert!(calib.angular.iter().all(|a| a.is_finite()));
+    assert!(calib.attn_norms[0].iter().any(|&x| x > 0.0));
+
+    // 3. Compress two layers.
+    let opts = CompressOptions { r_max: 4, ..Default::default() };
+    let (mut student, plan, report) = ctx
+        .compress_k(&pipe, &dense, &calib, 2, LayerStrategy::Angular, &opts)
+        .unwrap();
+    assert_eq!(report.layers.len(), 2);
+    assert!(report.bytes_saved() > 0);
+    assert!(student.total_params() < dense.total_params());
+
+    // 4. Evaluate dense and cured.
+    let sizes = EvalSizes { ppl_batches: 1, boolq_items: 4, mmlu_items: 4 };
+    let dense_suite = ctx
+        .eval_suite(&pipe, &dense, &LayerPlan::all_dense(&pipe.cfg), &sizes)
+        .unwrap();
+    let cured_suite = ctx.eval_suite(&pipe, &student, &plan, &sizes).unwrap();
+    for s in [&dense_suite, &cured_suite] {
+        assert!(s.c4_ppl.is_finite() && s.c4_ppl > 1.0, "{}", s.row());
+        assert!(s.wiki_ppl.is_finite() && s.wiki_ppl > 1.0, "{}", s.row());
+        assert!((0.0..=1.0).contains(&s.boolq_acc));
+        assert!((0.0..=1.0).contains(&s.mmlu_acc));
+    }
+
+    // 5. Heal and re-evaluate.
+    let mut hcorpus =
+        curing::data::Corpus::new(curing::data::CorpusKind::SynthC4, curing::data::SEED_HEAL);
+    let mut opt = TensorStore::new();
+    let hopts = curing::heal::HealOptions { steps: 10, base_lr: 3e-3, warmup: 2 };
+    let hist = curing::heal::heal_layers(
+        &pipe, &dense, &mut student, &mut opt, &ctx.vocab, &mut hcorpus, &hopts, 0,
+    )
+    .unwrap();
+    assert_eq!(hist.len(), 10);
+    assert!(hist.iter().all(|p| p.loss.is_finite()));
+    let healed_suite = ctx.eval_suite(&pipe, &student, &plan, &sizes).unwrap();
+    assert!(healed_suite.c4_ppl.is_finite() && healed_suite.c4_ppl > 1.0);
+
+    // 6. The cured store saves and reloads losslessly.
+    let dir = root.join("stores").join("e2e_student");
+    student.save(&dir).unwrap();
+    let reloaded = TensorStore::load(&dir).unwrap();
+    assert_eq!(reloaded.len(), student.len());
+    assert_eq!(curing::compress::cured_layers_of(&reloaded), report.layers);
+    let _ = std::fs::remove_dir_all(&root);
 }

@@ -1,0 +1,114 @@
+//! Offline stand-in for the `xla` PJRT crate.
+//!
+//! Mirrors exactly the API surface `curing`'s PJRT backend uses, so the
+//! `pjrt` feature always compiles without the (unvendorable) XLA C++
+//! runtime. Every entry point fails at `PjRtClient::cpu()` with a clear
+//! message; swap the `xla` path dependency in `rust/Cargo.toml` for a
+//! real xla-rs checkout to execute artifacts.
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "xla stub: the real XLA/PJRT runtime is not vendored in this build; \
+         point the `xla` path dependency at an xla-rs checkout"
+            .to_string(),
+    ))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Element types a literal can be read back as.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+pub struct Literal(());
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        assert!(err.to_string().contains("xla stub"));
+    }
+}
