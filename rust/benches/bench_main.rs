@@ -12,6 +12,7 @@
 //! design (see DESIGN.md §2).
 
 use anyhow::Result;
+use curing::backend::native::math;
 use curing::calib::Calibration;
 use curing::compress::{CompressOptions, LayerStrategy};
 use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
@@ -24,9 +25,9 @@ use curing::model::ModelConfig;
 use curing::peft::{init_adapters, trainable_params, Adapter};
 use curing::pipeline::{LayerKind, LayerPlan, Pipeline};
 use curing::tensor::{Tensor, TensorStore};
-use curing::util::bench::Bencher;
+use curing::util::bench::{BenchResult, Bencher};
 use curing::util::stats::mib;
-use curing::util::Rng;
+use curing::util::{Json, JsonObj, Rng};
 use curing::wanda::Selector;
 
 fn fast() -> bool {
@@ -92,6 +93,8 @@ fn print_usage() {
 USAGE: cargo bench [-- name ...]
   names: micro t1 t2 t3 f4 f5 f6 f7 f10 t4 t5 t6 (default: all)
   f5/f6/f7 need the pjrt backend (switched AOT artifacts).
+  micro also writes machine-readable results to BENCH_native.json
+  at the repo root (perf trajectory across PRs).
 
 ENV: CURING_BENCH_FAST=1   smoke sizes
      CURING_PRETRAIN_STEPS  pretraining length (cached store)
@@ -101,53 +104,66 @@ ENV: CURING_BENCH_FAST=1   smoke sizes
 
 // ---------------------------------------------------------------- micro
 
-/// Hot-path micro-benchmarks (decomposition math + runtime calls).
+/// Hot-path micro-benchmarks (decomposition math, kernels, runtime
+/// calls, KV-cached decode). Also writes machine-readable results to
+/// `BENCH_native.json` at the repo root so future PRs have a perf
+/// trajectory to compare against.
 fn micro(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
     let mut rng = Rng::new(1, 0);
     let b = if fast() { Bencher::quick() } else { Bencher::default() };
+    let mut rows: Vec<BenchResult> = Vec::new();
+    let mut record = |r: BenchResult| {
+        println!("{}", r.row());
+        rows.push(r);
+    };
     let w_attn = Mat::random_normal(256, 256, &mut rng);
     let w_gate = Mat::random_normal(256, 704, &mut rng);
     let xnorm: Vec<f64> = (0..256).map(|_| rng.f64() + 0.1).collect();
 
-    println!("{}", b.run("jacobi_svd 256x256 (exact)", || jacobi_svd(&w_attn)).row());
+    record(b.run("jacobi_svd 256x256 (exact)", || jacobi_svd(&w_attn)));
     let mut r2 = Rng::new(2, 0);
-    println!(
-        "{}",
-        b.run("rand_svd 256x704 k=16 (selection path)", || rand_svd(&w_gate, 16, 8, 2, &mut r2))
-            .row()
-    );
+    record(b.run("rand_svd 256x704 k=16 (selection path)", || {
+        rand_svd(&w_gate, 16, 8, 2, &mut r2)
+    }));
     let mut r3 = Rng::new(3, 0);
-    println!(
-        "{}",
-        b.run("cur_decompose 256x704 r=16 (full)", || {
-            cur::cur_decompose(&w_gate, &w_gate, 16, &mut r3).unwrap()
-        })
-        .row()
-    );
+    record(b.run("cur_decompose 256x704 r=16 (full)", || {
+        cur::cur_decompose(&w_gate, &w_gate, 16, &mut r3).unwrap()
+    }));
     let mut r4 = Rng::new(4, 0);
-    println!(
-        "{}",
-        b.run("wanda+deim select 256x256 r=16", || {
-            curing::wanda::select_indices(Selector::Curing, &w_attn, &xnorm, 16, &mut r4).unwrap()
-        })
-        .row()
-    );
-    println!("{}", b.run("matmul 256x256 * 256x256", || w_attn.matmul(&w_attn)).row());
+    record(b.run("wanda+deim select 256x256 r=16", || {
+        curing::wanda::select_indices(Selector::Curing, &w_attn, &xnorm, 16, &mut r4).unwrap()
+    }));
+    println!("{}", b.run("matmul 256x256 * 256x256 (f64 Mat)", || w_attn.matmul(&w_attn)).row());
 
-    // Runtime latency: one dense vs one cured layer call.
+    // Tiled microkernels vs the scalar seed kernels (same threading).
+    let mut r5 = Rng::new(5, 0);
+    let (mk, kk, nk) = (256usize, 256usize, 256usize);
+    let af = r5.normal_vec(mk * kk, 1.0);
+    let bf = r5.normal_vec(kk * nk, 1.0);
+    record(b.run("matmul_nn tiled 256x256x256", || math::matmul_nn(&af, &bf, mk, kk, nk)));
+    record(b.run("matmul_nn scalar 256x256x256", || {
+        math::matmul_nn_scalar(&af, &bf, mk, kk, nk)
+    }));
+    record(b.run("matmul_nt tiled 256x256x256", || math::matmul_nt(&af, &bf, mk, kk, nk)));
+    record(b.run("matmul_nt scalar 256x256x256", || {
+        math::matmul_nt_scalar(&af, &bf, mk, kk, nk)
+    }));
+
+    // Runtime latency: one dense vs one cured layer call (cached
+    // train-path forward vs the cache-free inference forward).
     let cfg = &pipe.cfg;
-    let mut rng5 = Rng::new(5, 0);
+    let mut rng5 = Rng::new(6, 0);
     let x = Tensor::from_f32(
         &[cfg.batch, cfg.seq, cfg.d_model],
         rng5.normal_vec(cfg.batch * cfg.seq * cfg.d_model, 1.0),
     );
-    println!(
-        "{}",
-        b.run(&format!("{} layer_fwd_dense (b8 s64 d256)", _ctx.rt.backend_name()), || {
-            pipe.layer_forward(dense, 1, &LayerKind::Dense, &x).unwrap()
-        })
-        .row()
-    );
+    let backend = _ctx.rt.backend_name();
+    record(b.run(&format!("{backend} layer_fwd_dense cached (b8 s64 d256)"), || {
+        pipe.layer_forward(dense, 1, &LayerKind::Dense, &x).unwrap()
+    }));
+    record(b.run(&format!("{backend} layer_fwd_dense infer (b8 s64 d256)"), || {
+        pipe.layer_forward_infer(dense, 1, &LayerKind::Dense, &x).unwrap()
+    }));
     // A cured store for layer 1.
     let calib = Calibration {
         attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
@@ -158,13 +174,84 @@ fn micro(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
     let mut student = dense.clone();
     curing::compress::cure_layers(&mut student, cfg, &calib, &[1], &CompressOptions::default())?;
     let kind = LayerKind::Cured { rank: 16, combo: "all".into() };
+    record(b.run(&format!("{backend} layer_fwd_cured r16 infer (b8 s64 d256)"), || {
+        pipe.layer_forward_infer(&student, 1, &kind, &x).unwrap()
+    }));
+
+    // Greedy decode: prefill vs per-token, KV-cached vs full-window
+    // recompute, at (b=1, s=64) on the tiny config.
+    let plan = LayerPlan::all_dense(cfg);
+    let prompt: Vec<i32> = (1..9).collect();
+    let n_dec = if fast() { 4 } else { 16 };
+    let r_prefill = b.run("decode 1 tok = prefill (kv, b1 s64)", || {
+        pipe.generate_greedy(dense, &plan, &[prompt.clone()], 1).unwrap()
+    });
+    record(r_prefill.clone());
+    let r_kv = b.run(&format!("decode {n_dec} tok kv-cached (b1 s64)"), || {
+        pipe.generate_greedy(dense, &plan, &[prompt.clone()], n_dec).unwrap()
+    });
+    record(r_kv.clone());
+    let r_full = b.run(&format!("decode {n_dec} tok full-recompute (b1 s64)"), || {
+        pipe.generate_greedy_uncached(dense, &plan, &[prompt.clone()], n_dec).unwrap()
+    });
+    record(r_full.clone());
+    // Per-token decode latency: the KV path pays prefill once, then one
+    // single-position pass per token; the full path pays a whole window
+    // per token.
+    let per_tok_kv = ((r_kv.mean_ms - r_prefill.mean_ms) / (n_dec as f64 - 1.0)).max(1e-6);
+    let per_tok_full = r_full.mean_ms / n_dec as f64;
+    let speedup = per_tok_full / per_tok_kv;
     println!(
-        "{}",
-        b.run(&format!("{} layer_fwd_cured r16 (b8 s64 d256)", _ctx.rt.backend_name()), || {
-            pipe.layer_forward(&student, 1, &kind, &x).unwrap()
-        })
-        .row()
+        "decode per-token: kv {per_tok_kv:.4} ms vs full {per_tok_full:.4} ms \
+         -> {speedup:.1}x (prefill {:.4} ms, tokens/s kv {:.0})",
+        r_prefill.mean_ms,
+        1e3 / per_tok_kv
     );
+
+    write_bench_json(backend, fast(), n_dec, per_tok_kv, per_tok_full, &r_prefill, &rows)?;
+    Ok(())
+}
+
+fn bench_result_json(r: &BenchResult) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("name", Json::Str(r.name.clone()));
+    o.insert("iters", Json::Num(r.iters as f64));
+    o.insert("mean_ms", Json::Num(r.mean_ms));
+    o.insert("p50_ms", Json::Num(r.p50_ms));
+    o.insert("p95_ms", Json::Num(r.p95_ms));
+    o.insert("min_ms", Json::Num(r.min_ms));
+    Json::Obj(o)
+}
+
+/// Machine-readable micro results at the repo root: the perf trajectory
+/// future PRs compare against (CI validates the file parses).
+fn write_bench_json(
+    backend: &str,
+    fast: bool,
+    n_dec: usize,
+    per_tok_kv: f64,
+    per_tok_full: f64,
+    prefill: &BenchResult,
+    rows: &[BenchResult],
+) -> Result<()> {
+    let mut decode = JsonObj::new();
+    decode.insert("n_tokens", Json::Num(n_dec as f64));
+    decode.insert("prefill_ms", Json::Num(prefill.mean_ms));
+    decode.insert("per_token_kv_ms", Json::Num(per_tok_kv));
+    decode.insert("per_token_full_ms", Json::Num(per_tok_full));
+    decode.insert("speedup", Json::Num(per_tok_full / per_tok_kv));
+    decode.insert("tokens_per_s_kv", Json::Num(1e3 / per_tok_kv));
+    decode.insert("tokens_per_s_full", Json::Num(1e3 / per_tok_full));
+    let mut root = JsonObj::new();
+    root.insert("schema", Json::Num(1.0));
+    root.insert("backend", Json::Str(backend.to_string()));
+    root.insert("config", Json::Str("tiny".to_string()));
+    root.insert("fast", Json::Bool(fast));
+    root.insert("decode", Json::Obj(decode));
+    root.insert("rows", Json::Arr(rows.iter().map(bench_result_json).collect()));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json");
+    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

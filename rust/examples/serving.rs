@@ -51,11 +51,12 @@ fn main() -> Result<()> {
         };
         let stats = server.run(rx, clients * per_client)?;
         println!(
-            "{label:<11} {} reqs | {:>6.1} seq/s | occupancy {:>4.1}/{} | p50 {:>6.1} ms | p95 {:>6.1} ms",
+            "{label:<11} {} reqs | {:>6.1} seq/s | occupancy {:>4.1}/{} | padded {} | p50 {:>6.1} ms | p95 {:>6.1} ms",
             stats.served,
             stats.throughput_seq_per_s,
             stats.mean_batch_occupancy,
             pipe.cfg.batch,
+            stats.padded_rows,
             stats.p50_latency_ms,
             stats.p95_latency_ms
         );

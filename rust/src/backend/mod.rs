@@ -87,6 +87,44 @@ pub struct HealOut {
     pub y_student: Tensor,
 }
 
+/// Per-layer K/V buffers for incremental greedy decode: layer `l`'s
+/// post-RoPE keys and values live at `k[l]`/`v[l]`, each a flat
+/// (b, s, d) row-major buffer. Filled by [`Backend::layer_prefill`] over
+/// a full window, then advanced one position per emitted token by
+/// [`Backend::layer_decode`].
+///
+/// Resident footprint: n_layers × 2 × b·s·d × 4 bytes f32 (see
+/// [`KvCache::bytes`]) — for the `tiny` config (8 layers, b=8, s=64,
+/// d=256) that is 8 MiB.
+pub struct KvCache {
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, b: usize, s: usize, d: usize) -> KvCache {
+        KvCache {
+            b,
+            s,
+            d,
+            k: vec![vec![0.0; b * s * d]; n_layers],
+            v: vec![vec![0.0; b * s * d]; n_layers],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Resident size in bytes: layers × 2 (K and V) × b·s·d × 4.
+    pub fn bytes(&self) -> usize {
+        self.k.len() * 2 * self.b * self.s * self.d * 4
+    }
+}
+
 /// A model-execution backend. All tensors are host [`Tensor`]s; the
 /// backend owns marshalling to whatever representation it executes.
 pub trait Backend {
@@ -104,6 +142,70 @@ pub trait Backend {
 
     /// One transformer layer forward: (b, s, d) → (b, s, d).
     fn layer_forward(&self, cfg: &ModelConfig, p: &LayerParams, x: &Tensor) -> Result<Tensor>;
+
+    /// Inference-only layer forward: mathematically identical to
+    /// [`Backend::layer_forward`] but free of every backward-pass cache
+    /// (no softmax-probs or activation buffers survive the call). The
+    /// serving/eval/decode hot path. Default: the plain forward.
+    fn layer_forward_infer(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        self.layer_forward(cfg, p, x)
+    }
+
+    /// Whether [`Backend::layer_prefill`] / [`Backend::layer_decode`]
+    /// are implemented (KV-cached greedy decode).
+    fn supports_kv_decode(&self) -> bool {
+        false
+    }
+
+    /// Whether model calls require the manifest's exact (batch, seq)
+    /// shape (AOT artifact backends compile fixed-shape graphs). The
+    /// native backend accepts any leading dims and returns false.
+    fn fixed_shape(&self) -> bool {
+        true
+    }
+
+    /// Full-window layer forward that additionally captures the layer's
+    /// post-RoPE K and V into `kv.k[layer]`/`kv.v[layer]` — the prefill
+    /// step of KV-cached decoding. Output equals `layer_forward_infer`.
+    fn layer_prefill(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+        kv: &mut KvCache,
+        layer: usize,
+    ) -> Result<Tensor> {
+        let _ = (cfg, p, x, kv, layer);
+        bail!(
+            "backend '{}' has no KV-cache decode path (supports_kv_decode = false)",
+            self.name()
+        )
+    }
+
+    /// One-position layer pass for greedy decode: `x` is (b, 1, d) — the
+    /// new token's hidden state per batch row, row `i` at sequence
+    /// position `pos[i]` — attending the cached keys/values 0..=pos[i]
+    /// of `kv` at `layer`, whose cache this call extends in place.
+    fn layer_decode(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+        kv: &mut KvCache,
+        layer: usize,
+        pos: &[usize],
+    ) -> Result<Tensor> {
+        let _ = (cfg, p, x, kv, layer, pos);
+        bail!(
+            "backend '{}' has no KV-cache decode path (supports_kv_decode = false)",
+            self.name()
+        )
+    }
 
     /// Layer forward with calibration taps (dense layers only in practice).
     fn layer_forward_calib(

@@ -1,12 +1,26 @@
-//! Forward passes of the native backend: the Llama-mini transformer
-//! layer (RMSNorm → RoPE causal attention → RMSNorm → SwiGLU FFN, both
-//! with residuals), dense or CUR-factored q/k/gate chains, and the tied
-//! LM head. Every forward caches the intermediates the backward pass
-//! (train/heal steps) consumes — at coordinator scale the caches are a
-//! few MiB and recomputation would dominate the step cost.
+//! Forward passes of the native backend.
+//!
+//! Two execution paths share the Llama-mini layer math (RMSNorm → RoPE
+//! causal attention → RMSNorm → SwiGLU FFN, both with residuals, dense or
+//! CUR-factored q/k/gate chains):
+//!
+//! * [`layer_forward_cached`] — the train/heal path. Caches every
+//!   intermediate the backward pass consumes (softmax probs + ~10
+//!   activation buffers per layer).
+//! * [`layer_infer_impl`] / [`layer_decode_impl`] — the inference path.
+//!   No backward caches: a small [`InferScratch`] buffer set is reused
+//!   across layer calls, attention never materializes the (b·nh·s·s)
+//!   probability tensor, and RoPE tables come from the process-wide
+//!   cache. `layer_infer_impl` optionally captures post-RoPE K/V into a
+//!   KV cache (prefill); `layer_decode_impl` advances one position per
+//!   batch row against cached K/V.
+//!
+//! Both paths drive the same kernels in the same per-row accumulation
+//! order, so they agree bit-for-bit — the parity tests assert it.
 
 use super::math::{
-    add_inplace, matmul_nn, matmul_nt, rmsnorm_fwd, rope_apply, rope_table, silu,
+    add_inplace, dot, matmul_nn, matmul_nn_into, matmul_nt, par_chunk_tasks, par_pair_tasks,
+    rmsnorm_fwd, rmsnorm_into, rope_apply, rope_apply_rows, rope_tables_cached, silu,
 };
 use crate::backend::{LayerParams, Proj};
 use crate::tensor::Tensor;
@@ -30,6 +44,24 @@ pub(super) fn want<'a>(t: &'a Tensor, shape: &[usize], what: &str) -> Result<&'a
         t.shape
     );
     t.f32s()
+}
+
+/// Token-embedding gather shared by `NativeBackend::embed` and the
+/// pretraining step: out[r] = emb[toks[r]].
+pub(super) fn embed_gather(
+    emb: &[f32],
+    vocab: usize,
+    d: usize,
+    toks: &[i32],
+    out: &mut [f32],
+) -> Result<()> {
+    ensure!(out.len() == toks.len() * d, "embed gather: output size mismatch");
+    ensure!(emb.len() == vocab * d, "embed gather: table size mismatch");
+    for (r, &tk) in toks.iter().enumerate() {
+        ensure!((0..vocab as i32).contains(&tk), "token {tk} out of vocab 0..{vocab}");
+        out[r * d..(r + 1) * d].copy_from_slice(&emb[tk as usize * d..(tk as usize + 1) * d]);
+    }
+    Ok(())
 }
 
 /// (in_dim, out_dim) of a projection, with full shape validation.
@@ -86,6 +118,34 @@ pub(super) fn proj_forward(
     }
 }
 
+/// Projection forward into a caller-provided buffer, chain scratch reused
+/// across calls (the inference path — no per-call allocation).
+fn proj_infer(
+    h: &[f32],
+    rows: usize,
+    p: &Proj,
+    hc: &mut Vec<f32>,
+    hcu: &mut Vec<f32>,
+    out: &mut [f32],
+    what: &str,
+) -> Result<()> {
+    let (m, n) = proj_dims(p, what)?;
+    ensure!(h.len() == rows * m, "{what}: input is not rows×{m}");
+    ensure!(out.len() == rows * n, "{what}: output is not rows×{n}");
+    match p {
+        Proj::Dense(w) => matmul_nn_into(h, w.f32s()?, rows, m, n, out),
+        Proj::Cured { c, u, r } => {
+            let rank = c.shape[1];
+            let hcb = grow(hc, rows * rank);
+            matmul_nn_into(h, c.f32s()?, rows, m, rank, hcb);
+            let hcub = grow(hcu, rows * rank);
+            matmul_nn_into(&hc[..rows * rank], u.f32s()?, rows, rank, rank, hcub);
+            matmul_nn_into(&hcu[..rows * rank], r.f32s()?, rows, rank, n, out);
+        }
+    }
+    Ok(())
+}
+
 /// Everything one layer forward produces, kept for the backward pass.
 pub(super) struct LayerCache {
     pub dims: Dims,
@@ -136,9 +196,133 @@ pub(super) fn layer_dims(
     Ok(Dims { b, s, d, di, nh: n_heads, dh })
 }
 
-/// Causal multi-head attention forward; returns (softmax probs, concat
-/// head outputs). Single-threaded: at coordinator scale the projections
-/// around it dominate.
+/// One query row's causal attention, the single numeric core every
+/// attention path shares: scores over keys 0..=si via [`dot`], a
+/// max-subtracted softmax into `prow` (first si+1 entries), then the
+/// sj-ascending weighted-V accumulation into `arow` (dh wide). The
+/// cached path hands in a persistent probs row, the inference and decode
+/// paths a reusable scratch row — bit-identical results by construction.
+/// `row0` is the index of this sequence's first row in k/v (bi·s);
+/// `hoff` is the head offset h·dh.
+#[allow(clippy::too_many_arguments)]
+fn attention_row(
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    row0: usize,
+    d: usize,
+    hoff: usize,
+    si: usize,
+    scale: f32,
+    prow: &mut [f32],
+    arow: &mut [f32],
+) {
+    let dh = arow.len();
+    let mut maxv = f32::NEG_INFINITY;
+    for sj in 0..=si {
+        let koff = (row0 + sj) * d + hoff;
+        let sc = dot(qrow, &k[koff..koff + dh]) * scale;
+        prow[sj] = sc;
+        if sc > maxv {
+            maxv = sc;
+        }
+    }
+    let mut sum = 0.0f32;
+    for p in prow.iter_mut().take(si + 1) {
+        *p = (*p - maxv).exp();
+        sum += *p;
+    }
+    let isum = 1.0 / sum;
+    arow.fill(0.0);
+    for sj in 0..=si {
+        prow[sj] *= isum;
+        let pval = prow[sj];
+        let voff = (row0 + sj) * d + hoff;
+        for (o, &vv) in arow.iter_mut().zip(&v[voff..voff + dh]) {
+            *o += pval * vv;
+        }
+    }
+}
+
+/// One head's causal attention with persisted softmax rows: `probs`
+/// (s×s) is kept for the backward pass; `att` (s×dh) is the head output.
+fn attention_head(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dims: Dims,
+    bi: usize,
+    h: usize,
+    probs: &mut [f32],
+    att: &mut [f32],
+) {
+    let Dims { s, d, dh, .. } = dims;
+    let scale = 1.0 / (dh as f32).sqrt();
+    for si in 0..s {
+        let qoff = (bi * s + si) * d + h * dh;
+        attention_row(
+            &q[qoff..qoff + dh],
+            k,
+            v,
+            bi * s,
+            d,
+            h * dh,
+            si,
+            scale,
+            &mut probs[si * s..(si + 1) * s],
+            &mut att[si * dh..(si + 1) * dh],
+        );
+    }
+}
+
+/// Like [`attention_head`] but with a single reusable score row instead
+/// of a persisted (s×s) probability block (the inference path).
+fn attention_infer_head(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dims: Dims,
+    bi: usize,
+    h: usize,
+    srow: &mut [f32],
+    att: &mut [f32],
+) {
+    let Dims { s, d, dh, .. } = dims;
+    let scale = 1.0 / (dh as f32).sqrt();
+    for si in 0..s {
+        let qoff = (bi * s + si) * d + h * dh;
+        attention_row(
+            &q[qoff..qoff + dh],
+            k,
+            v,
+            bi * s,
+            d,
+            h * dh,
+            si,
+            scale,
+            srow,
+            &mut att[si * dh..(si + 1) * dh],
+        );
+    }
+}
+
+/// Reassemble per-head outputs (b, nh, s, dh) into the row-major
+/// concatenated layout (b·s, nh·dh).
+fn heads_to_rows(att_h: &[f32], dims: Dims, out: &mut [f32]) {
+    let Dims { b, s, d, nh, dh, .. } = dims;
+    for bi in 0..b {
+        for h in 0..nh {
+            for si in 0..s {
+                let src = ((bi * nh + h) * s + si) * dh;
+                let dst = (bi * s + si) * d + h * dh;
+                out[dst..dst + dh].copy_from_slice(&att_h[src..src + dh]);
+            }
+        }
+    }
+}
+
+/// Causal multi-head attention forward, parallel over (batch × heads);
+/// returns (softmax probs, concat head outputs).
 pub(super) fn attention_fwd(
     q: &[f32],
     k: &[f32],
@@ -146,50 +330,78 @@ pub(super) fn attention_fwd(
     dims: Dims,
 ) -> (Vec<f32>, Vec<f32>) {
     let Dims { b, s, d, nh, dh, .. } = dims;
-    let scale = 1.0 / (dh as f32).sqrt();
-    let mut probs = vec![0.0f32; b * nh * s * s];
+    let tasks = b * nh;
+    let mut probs = vec![0.0f32; tasks * s * s];
+    let mut att_h = vec![0.0f32; tasks * s * dh];
+    let flops = 2 * tasks * s * s * dh;
+    // Each (batch, head) task owns a disjoint probs block and a disjoint
+    // head-major output block.
+    par_pair_tasks(&mut probs, s * s, &mut att_h, s * dh, tasks, flops, |t, pb, ab| {
+        let (bi, h) = (t / nh, t % nh);
+        attention_head(q, k, v, dims, bi, h, pb, ab);
+    });
     let mut att = vec![0.0f32; b * s * d];
-    for bi in 0..b {
+    heads_to_rows(&att_h, dims, &mut att);
+    (probs, att)
+}
+
+/// Inference attention: same math and order as [`attention_fwd`] but no
+/// (b·nh·s·s) probability allocation — each task keeps one score row.
+/// Writes head-major outputs into `att_h` and the row-major concat into
+/// `att`; `scores` is the sequential-path scratch.
+fn attention_infer(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dims: Dims,
+    att_h: &mut [f32],
+    att: &mut [f32],
+    scores: &mut Vec<f32>,
+) {
+    let Dims { b, s, nh, dh, .. } = dims;
+    let tasks = b * nh;
+    let flops = 2 * tasks * s * s * dh;
+    par_chunk_tasks(att_h, s * dh, tasks, flops, scores, |t, chunk, srow| {
+        if srow.len() < s {
+            srow.resize(s, 0.0);
+        }
+        let (bi, h) = (t / nh, t % nh);
+        attention_infer_head(q, k, v, dims, bi, h, &mut srow[..s], chunk);
+    });
+    heads_to_rows(att_h, dims, att);
+}
+
+/// Single-position attention against cached K/V: row `bi` queries from
+/// sequence position `pos[bi]` and attends keys 0..=pos[bi] — the shared
+/// [`attention_row`] core at si = pos[bi].
+fn attention_decode(
+    q: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    dims: Dims,
+    pos: &[usize],
+    srow: &mut [f32],
+    att: &mut [f32],
+) {
+    let Dims { s, d, nh, dh, .. } = dims;
+    let scale = 1.0 / (dh as f32).sqrt();
+    for (bi, &p) in pos.iter().enumerate() {
         for h in 0..nh {
-            let pbase = (bi * nh + h) * s * s;
-            for si in 0..s {
-                let qoff = (bi * s + si) * d + h * dh;
-                let qrow = &q[qoff..qoff + dh];
-                let prow = &mut probs[pbase + si * s..pbase + (si + 1) * s];
-                let mut maxv = f32::NEG_INFINITY;
-                for sj in 0..=si {
-                    let koff = (bi * s + sj) * d + h * dh;
-                    let krow = &k[koff..koff + dh];
-                    let mut dot = 0.0f32;
-                    for (a, b2) in qrow.iter().zip(krow) {
-                        dot += a * b2;
-                    }
-                    let sc = dot * scale;
-                    prow[sj] = sc;
-                    if sc > maxv {
-                        maxv = sc;
-                    }
-                }
-                let mut sum = 0.0f32;
-                for p in prow.iter_mut().take(si + 1) {
-                    *p = (*p - maxv).exp();
-                    sum += *p;
-                }
-                let isum = 1.0 / sum;
-                for sj in 0..=si {
-                    prow[sj] *= isum;
-                    let voff = (bi * s + sj) * d + h * dh;
-                    let vrow = &v[voff..voff + dh];
-                    let aoff = (bi * s + si) * d + h * dh;
-                    let pval = prow[sj];
-                    for (jj, &vv) in vrow.iter().enumerate() {
-                        att[aoff + jj] += pval * vv;
-                    }
-                }
-            }
+            let qoff = bi * d + h * dh;
+            attention_row(
+                &q[qoff..qoff + dh],
+                kcache,
+                vcache,
+                bi * s,
+                d,
+                h * dh,
+                p,
+                scale,
+                srow,
+                &mut att[qoff..qoff + dh],
+            );
         }
     }
-    (probs, att)
 }
 
 /// Full layer forward with caches. `x` is the flat (bs × d) input.
@@ -212,9 +424,9 @@ pub(super) fn layer_forward_cached(
     let (mut q, qc) = proj_forward(&h1, bs, &p.q, "w_q")?;
     let (mut k, kc) = proj_forward(&h1, bs, &p.k, "w_k")?;
     let v = matmul_nn(&h1, wv, bs, d, d);
-    let (cos, sin) = rope_table(s, dh / 2);
-    rope_apply(&mut q, b, s, nh, dh, &cos, &sin, 1.0);
-    rope_apply(&mut k, b, s, nh, dh, &cos, &sin, 1.0);
+    let rope = rope_tables_cached(s, dh / 2);
+    rope_apply(&mut q, b, s, nh, dh, &rope.cos, &rope.sin, 1.0);
+    rope_apply(&mut k, b, s, nh, dh, &rope.cos, &rope.sin, 1.0);
     let (probs, att) = attention_fwd(&q, &k, &v, dims);
     let mut x2 = matmul_nn(&att, wo, bs, d, d);
     add_inplace(&mut x2, x);
@@ -249,6 +461,191 @@ pub(super) fn layer_forward_cached(
         kc,
         gc,
     })
+}
+
+/// Reusable buffers of the inference path. One instance lives on the
+/// backend and is shared by every layer call — after the first layer at
+/// a given shape, a forward performs no intermediate allocations (the
+/// output vector is the only fresh buffer).
+pub(super) struct InferScratch {
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att_h: Vec<f32>,
+    att: Vec<f32>,
+    x2: Vec<f32>,
+    g: Vec<f32>,
+    up: Vec<f32>,
+    hc: Vec<f32>,
+    hcu: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl InferScratch {
+    pub(super) fn new() -> InferScratch {
+        InferScratch {
+            h: Vec::new(),
+            q: Vec::new(),
+            k: Vec::new(),
+            v: Vec::new(),
+            att_h: Vec::new(),
+            att: Vec::new(),
+            x2: Vec::new(),
+            g: Vec::new(),
+            up: Vec::new(),
+            hc: Vec::new(),
+            hcu: Vec::new(),
+            scores: Vec::new(),
+        }
+    }
+}
+
+/// Size a scratch buffer and hand out the active prefix.
+fn grow(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+    &mut buf[..n]
+}
+
+/// Cache-free layer forward. When `kv` is given, the post-RoPE K and the
+/// V projection (each bs × d) are copied into it — the prefill step of
+/// KV-cached decoding.
+pub(super) fn layer_infer_impl(
+    dims: Dims,
+    p: &LayerParams,
+    x: &[f32],
+    kv: Option<(&mut [f32], &mut [f32])>,
+    sc: &mut InferScratch,
+) -> Result<Vec<f32>> {
+    let Dims { b, s, d, di, nh, dh } = dims;
+    let bs = b * s;
+    ensure!(x.len() == bs * d, "layer input length mismatch");
+    let ln1 = want(p.ln1, &[d], "ln1")?;
+    let ln2 = want(p.ln2, &[d], "ln2")?;
+    let wv = want(p.v, &[d, d], "w_v")?;
+    let wo = want(p.o, &[d, d], "w_o")?;
+    let wup = want(p.up, &[d, di], "w_up")?;
+    let wdown = want(p.down, &[di, d], "w_down")?;
+    let rope = rope_tables_cached(s, dh / 2);
+
+    let h = {
+        let hb = grow(&mut sc.h, bs * d);
+        rmsnorm_into(x, ln1, bs, d, hb);
+        &*hb
+    };
+    let q = grow(&mut sc.q, bs * d);
+    proj_infer(h, bs, &p.q, &mut sc.hc, &mut sc.hcu, q, "w_q")?;
+    let k = grow(&mut sc.k, bs * d);
+    proj_infer(h, bs, &p.k, &mut sc.hc, &mut sc.hcu, k, "w_k")?;
+    let v = grow(&mut sc.v, bs * d);
+    matmul_nn_into(h, wv, bs, d, d, v);
+    rope_apply(q, b, s, nh, dh, &rope.cos, &rope.sin, 1.0);
+    rope_apply(k, b, s, nh, dh, &rope.cos, &rope.sin, 1.0);
+    if let Some((kcache, vcache)) = kv {
+        ensure!(kcache.len() == bs * d && vcache.len() == bs * d, "kv cache size mismatch");
+        kcache.copy_from_slice(k);
+        vcache.copy_from_slice(v);
+    }
+    let att_h = grow(&mut sc.att_h, bs * d);
+    let att = grow(&mut sc.att, bs * d);
+    attention_infer(q, k, v, dims, att_h, att, &mut sc.scores);
+    let x2 = grow(&mut sc.x2, bs * d);
+    matmul_nn_into(att, wo, bs, d, d, x2);
+    add_inplace(x2, x);
+
+    let h2 = {
+        let hb = grow(&mut sc.h, bs * d);
+        rmsnorm_into(x2, ln2, bs, d, hb);
+        &*hb
+    };
+    let g = grow(&mut sc.g, bs * di);
+    proj_infer(h2, bs, &p.gate, &mut sc.hc, &mut sc.hcu, g, "w_gate")?;
+    let up = grow(&mut sc.up, bs * di);
+    matmul_nn_into(h2, wup, bs, d, di, up);
+    for i in 0..bs * di {
+        g[i] = silu(g[i]) * up[i];
+    }
+    let mut y = vec![0.0f32; bs * d];
+    matmul_nn_into(g, wdown, bs, di, d, &mut y);
+    add_inplace(&mut y, x2);
+    Ok(y)
+}
+
+/// One-position-per-row layer forward against cached K/V. `x` is (b × d)
+/// — the new token's hidden state per batch row, row `i` at sequence
+/// position `pos[i]`. Appends the new K/V rows into the cache, attends
+/// keys 0..=pos[i], and returns the (b × d) layer output. `dims.s` is
+/// the cache capacity.
+pub(super) fn layer_decode_impl(
+    dims: Dims,
+    p: &LayerParams,
+    x: &[f32],
+    kcache: &mut [f32],
+    vcache: &mut [f32],
+    pos: &[usize],
+    sc: &mut InferScratch,
+) -> Result<Vec<f32>> {
+    let Dims { b, s, d, di, nh, dh } = dims;
+    ensure!(x.len() == b * d, "decode input must be b×d");
+    ensure!(pos.len() == b, "one position per batch row");
+    ensure!(
+        kcache.len() == b * s * d && vcache.len() == b * s * d,
+        "kv cache size mismatch"
+    );
+    for &pp in pos {
+        ensure!(pp < s, "decode position {pp} out of cache range 0..{s}");
+    }
+    let ln1 = want(p.ln1, &[d], "ln1")?;
+    let ln2 = want(p.ln2, &[d], "ln2")?;
+    let wv = want(p.v, &[d, d], "w_v")?;
+    let wo = want(p.o, &[d, d], "w_o")?;
+    let wup = want(p.up, &[d, di], "w_up")?;
+    let wdown = want(p.down, &[di, d], "w_down")?;
+    let rope = rope_tables_cached(s, dh / 2);
+
+    let h = {
+        let hb = grow(&mut sc.h, b * d);
+        rmsnorm_into(x, ln1, b, d, hb);
+        &*hb
+    };
+    let q = grow(&mut sc.q, b * d);
+    proj_infer(h, b, &p.q, &mut sc.hc, &mut sc.hcu, q, "w_q")?;
+    let kx = grow(&mut sc.k, b * d);
+    proj_infer(h, b, &p.k, &mut sc.hc, &mut sc.hcu, kx, "w_k")?;
+    let vx = grow(&mut sc.v, b * d);
+    matmul_nn_into(h, wv, b, d, d, vx);
+    rope_apply_rows(q, pos, nh, dh, &rope.cos, &rope.sin);
+    rope_apply_rows(kx, pos, nh, dh, &rope.cos, &rope.sin);
+    for (i, &pp) in pos.iter().enumerate() {
+        let dst = (i * s + pp) * d;
+        kcache[dst..dst + d].copy_from_slice(&kx[i * d..(i + 1) * d]);
+        vcache[dst..dst + d].copy_from_slice(&vx[i * d..(i + 1) * d]);
+    }
+    let att = grow(&mut sc.att, b * d);
+    let srow = grow(&mut sc.scores, s);
+    attention_decode(q, kcache, vcache, dims, pos, srow, att);
+    let x2 = grow(&mut sc.x2, b * d);
+    matmul_nn_into(att, wo, b, d, d, x2);
+    add_inplace(x2, x);
+
+    let h2 = {
+        let hb = grow(&mut sc.h, b * d);
+        rmsnorm_into(x2, ln2, b, d, hb);
+        &*hb
+    };
+    let g = grow(&mut sc.g, b * di);
+    proj_infer(h2, b, &p.gate, &mut sc.hc, &mut sc.hcu, g, "w_gate")?;
+    let up = grow(&mut sc.up, b * di);
+    matmul_nn_into(h2, wup, b, d, di, up);
+    for i in 0..b * di {
+        g[i] = silu(g[i]) * up[i];
+    }
+    let mut y = vec![0.0f32; b * d];
+    matmul_nn_into(g, wdown, b, di, d, &mut y);
+    add_inplace(&mut y, x2);
+    Ok(y)
 }
 
 /// Head forward: final RMSNorm then tied-embedding logits. Returns

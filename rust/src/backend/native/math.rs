@@ -1,15 +1,32 @@
 //! f32 compute kernels for the native CPU backend.
 //!
 //! The hot paths are the three matmul flavors (NN, N·Bᵀ, Aᵀ·B), blocked
-//! row-wise and fanned out over `std::thread::scope` workers; everything
-//! else (RMSNorm, RoPE, SiLU) is memory-bound and stays single-threaded.
+//! row-wise and fanned out over `std::thread::scope` workers. Each worker
+//! runs a register-blocked microkernel (4×16 f32 tiles for NN, an
+//! 8-lane unrolled dot for NT, 4-way k-unrolling for TN) whose unrolled
+//! inner loops the autovectorizer lifts to SIMD. Per output element the
+//! accumulation order over k is fixed and shape-independent, so a kernel
+//! produces bit-identical rows whether it is fed one row (KV decode) or a
+//! full window (prefill) — the KV-cache parity tests rely on this.
+//!
 //! Thread count comes from `CURING_THREADS` or the machine's available
-//! parallelism; small problems stay on the calling thread.
+//! parallelism; small problems stay on the calling thread. The scalar
+//! seed kernels are kept (`*_scalar`) as bench baselines and as the
+//! reference the tiled kernels are tested against.
 
-use std::sync::OnceLock;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Below this many multiply-adds a matmul is not worth fanning out.
-const PAR_MIN_FLOPS: usize = 1 << 17;
+pub(super) const PAR_MIN_FLOPS: usize = 1 << 17;
+
+/// Row tile of the NN microkernel.
+const MR: usize = 4;
+/// Column tile of the NN microkernel (fits the 4×16 f32 accumulator
+/// block in registers on AVX2-class hardware).
+const NR: usize = 16;
+/// Lanes of the unrolled dot-product kernel.
+const DOT_LANES: usize = 8;
 
 fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
@@ -49,8 +66,277 @@ where
     });
 }
 
+/// Split `buf` into `tasks` stride-sized chunks and run
+/// `f(task, chunk, scratch)` on each, fanned out over threads for large
+/// problems. The sequential path reuses the caller's `scratch` (so small
+/// calls stay allocation-free); each worker thread gets its own.
+pub(super) fn par_chunk_tasks<F>(
+    buf: &mut [f32],
+    stride: usize,
+    tasks: usize,
+    flops: usize,
+    scratch: &mut Vec<f32>,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut Vec<f32>) + Sync,
+{
+    debug_assert_eq!(buf.len(), tasks * stride);
+    if tasks == 0 {
+        return;
+    }
+    let threads = if flops < PAR_MIN_FLOPS { 1 } else { num_threads().min(tasks) };
+    if threads <= 1 {
+        for (t, chunk) in buf.chunks_mut(stride).enumerate() {
+            f(t, chunk, scratch);
+        }
+        return;
+    }
+    let per = tasks.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ci, chunk) in buf.chunks_mut(per * stride).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let mut local = Vec::new();
+                for (j, piece) in chunk.chunks_mut(stride).enumerate() {
+                    f(ci * per + j, piece, &mut local);
+                }
+            });
+        }
+    });
+}
+
+/// Like [`par_chunk_tasks`] but over two lockstep-chunked buffers (the
+/// cached attention path: per-task softmax-probs block + head-output
+/// block).
+pub(super) fn par_pair_tasks<F>(
+    bufa: &mut [f32],
+    stride_a: usize,
+    bufb: &mut [f32],
+    stride_b: usize,
+    tasks: usize,
+    flops: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert_eq!(bufa.len(), tasks * stride_a);
+    debug_assert_eq!(bufb.len(), tasks * stride_b);
+    if tasks == 0 {
+        return;
+    }
+    let threads = if flops < PAR_MIN_FLOPS { 1 } else { num_threads().min(tasks) };
+    if threads <= 1 {
+        for (t, (ca, cb)) in
+            bufa.chunks_mut(stride_a).zip(bufb.chunks_mut(stride_b)).enumerate()
+        {
+            f(t, ca, cb);
+        }
+        return;
+    }
+    let per = tasks.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ci, (ca, cb)) in bufa
+            .chunks_mut(per * stride_a)
+            .zip(bufb.chunks_mut(per * stride_b))
+            .enumerate()
+        {
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (pa, pb)) in
+                    ca.chunks_mut(stride_a).zip(cb.chunks_mut(stride_b)).enumerate()
+                {
+                    f(ci * per + j, pa, pb);
+                }
+            });
+        }
+    });
+}
+
+/// Unrolled dot product: 8 independent accumulator lanes (SIMD-friendly)
+/// combined in a fixed tree, plus a sequential tail. The reduction order
+/// depends only on the vector length, never on the surrounding shape.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / DOT_LANES;
+    let mut acc = [0.0f32; DOT_LANES];
+    for c in 0..chunks {
+        let ao = &a[c * DOT_LANES..(c + 1) * DOT_LANES];
+        let bo = &b[c * DOT_LANES..(c + 1) * DOT_LANES];
+        for l in 0..DOT_LANES {
+            acc[l] += ao[l] * bo[l];
+        }
+    }
+    let mut sum = ((acc[0] + acc[4]) + (acc[2] + acc[6])) + ((acc[1] + acc[5]) + (acc[3] + acc[7]));
+    for i in chunks * DOT_LANES..n {
+        sum += a[i] * b[i];
+    }
+    sum
+}
+
+/// NN microkernel over one row chunk: 4×16 register tiles, k-ascending
+/// accumulation per element (same order for every tile and tail path).
+fn nn_rows(a: &[f32], b: &[f32], k: usize, n: usize, lo: usize, chunk: &mut [f32]) {
+    let rows = chunk.len() / n;
+    let mut r = 0;
+    while r + MR <= rows {
+        let a_rows = [
+            &a[(lo + r) * k..(lo + r + 1) * k],
+            &a[(lo + r + 1) * k..(lo + r + 2) * k],
+            &a[(lo + r + 2) * k..(lo + r + 3) * k],
+            &a[(lo + r + 3) * k..(lo + r + 4) * k],
+        ];
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [[0.0f32; NR]; MR];
+            for kk in 0..k {
+                let bv = &b[kk * n + j..kk * n + j + NR];
+                for (ri, a_row) in a_rows.iter().enumerate() {
+                    let av = a_row[kk];
+                    for c in 0..NR {
+                        acc[ri][c] += av * bv[c];
+                    }
+                }
+            }
+            for (ri, acc_row) in acc.iter().enumerate() {
+                chunk[(r + ri) * n + j..(r + ri) * n + j + NR].copy_from_slice(acc_row);
+            }
+            j += NR;
+        }
+        while j < n {
+            let mut acc = [0.0f32; MR];
+            for kk in 0..k {
+                let bv = b[kk * n + j];
+                for (ri, a_row) in a_rows.iter().enumerate() {
+                    acc[ri] += a_row[kk] * bv;
+                }
+            }
+            for (ri, &av) in acc.iter().enumerate() {
+                chunk[(r + ri) * n + j] = av;
+            }
+            j += 1;
+        }
+        r += MR;
+    }
+    while r < rows {
+        let a_row = &a[(lo + r) * k..(lo + r + 1) * k];
+        let out_row = &mut chunk[r * n..(r + 1) * n];
+        let mut j = 0;
+        while j + NR <= n {
+            let mut acc = [0.0f32; NR];
+            for kk in 0..k {
+                let av = a_row[kk];
+                let bv = &b[kk * n + j..kk * n + j + NR];
+                for c in 0..NR {
+                    acc[c] += av * bv[c];
+                }
+            }
+            out_row[j..j + NR].copy_from_slice(&acc);
+            j += NR;
+        }
+        while j < n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a_row[kk] * b[kk * n + j];
+            }
+            out_row[j] = acc;
+            j += 1;
+        }
+        r += 1;
+    }
+}
+
+/// C (m×n) = A (m×k) · B (k×n), all row-major, written into `out`.
+pub fn matmul_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_nn: A size");
+    assert_eq!(b.len(), k * n, "matmul_nn: B size");
+    assert_eq!(out.len(), m * n, "matmul_nn: out size");
+    par_row_chunks(out, m, n, m * k * n, |lo, chunk| nn_rows(a, b, k, n, lo, chunk));
+}
+
 /// C (m×n) = A (m×k) · B (k×n), all row-major.
 pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_nn_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// C (m×n) = A (m×k) · Bᵀ where B is (n×k) row-major, into `out`: rows
+/// of C are dot products of A rows with B rows (never materializes the
+/// transpose).
+pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "matmul_nt: A size");
+    assert_eq!(b.len(), n * k, "matmul_nt: B size");
+    assert_eq!(out.len(), m * n, "matmul_nt: out size");
+    par_row_chunks(out, m, n, m * k * n, |lo, chunk| {
+        for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
+            let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                *o = dot(a_row, &b[j * k..(j + 1) * k]);
+            }
+        }
+    });
+}
+
+/// C (m×n) = A (m×k) · Bᵀ where B is (n×k) row-major.
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_nt_into(a, b, m, k, n, &mut out);
+    out
+}
+
+/// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major (the
+/// gradient-accumulation shape: dW = Xᵀ·dY), into `out`. Unrolls k by 4
+/// so each output row is loaded/stored once per four k steps.
+pub fn matmul_tn_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), k * m, "matmul_tn: A size");
+    assert_eq!(b.len(), k * n, "matmul_tn: B size");
+    assert_eq!(out.len(), m * n, "matmul_tn: out size");
+    par_row_chunks(out, m, n, m * k * n, |lo, chunk| {
+        chunk.fill(0.0);
+        let rows = chunk.len() / n;
+        let k4 = k / 4 * 4;
+        let mut kk = 0;
+        while kk < k4 {
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+            for ri in 0..rows {
+                let c = lo + ri;
+                let (a0, a1, a2, a3) =
+                    (a[kk * m + c], a[(kk + 1) * m + c], a[(kk + 2) * m + c], a[(kk + 3) * m + c]);
+                let out_row = &mut chunk[ri * n..(ri + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for ri in 0..rows {
+                let av = a[kk * m + lo + ri];
+                let out_row = &mut chunk[ri * n..(ri + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                    *o += av * bv;
+                }
+            }
+            kk += 1;
+        }
+    });
+}
+
+/// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major.
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_tn_into(a, b, k, m, n, &mut out);
+    out
+}
+
+/// Scalar NN reference (the seed kernel): bench baseline + test oracle.
+pub fn matmul_nn_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_nn: A size");
     assert_eq!(b.len(), k * n, "matmul_nn: B size");
     let mut out = vec![0.0f32; m * n];
@@ -58,9 +344,6 @@ pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
         for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
             let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
             for (kk, &av) in a_row.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
                 let b_row = &b[kk * n..(kk + 1) * n];
                 for (o, &bv) in out_row.iter_mut().zip(b_row) {
                     *o += av * bv;
@@ -71,9 +354,8 @@ pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     out
 }
 
-/// C (m×n) = A (m×k) · Bᵀ where B is (n×k) row-major: rows of C are dot
-/// products of A rows with B rows (never materializes the transpose).
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Scalar NT reference (the seed kernel): bench baseline + test oracle.
+pub fn matmul_nt_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_nt: A size");
     assert_eq!(b.len(), n * k, "matmul_nt: B size");
     let mut out = vec![0.0f32; m * n];
@@ -93,32 +375,6 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     out
 }
 
-/// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major (the
-/// gradient-accumulation shape: dW = Xᵀ·dY).
-pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    assert_eq!(a.len(), k * m, "matmul_tn: A size");
-    assert_eq!(b.len(), k * n, "matmul_tn: B size");
-    let mut out = vec![0.0f32; m * n];
-    par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
-        let rows = chunk.len() / n;
-        for kk in 0..k {
-            let b_row = &b[kk * n..(kk + 1) * n];
-            let a_row = &a[kk * m..(kk + 1) * m];
-            for ri in 0..rows {
-                let av = a_row[lo + ri];
-                if av == 0.0 {
-                    continue;
-                }
-                let out_row = &mut chunk[ri * n..(ri + 1) * n];
-                for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                    *o += av * bv;
-                }
-            }
-        }
-    });
-    out
-}
-
 pub fn add_inplace(a: &mut [f32], b: &[f32]) {
     debug_assert_eq!(a.len(), b.len());
     for (x, &y) in a.iter_mut().zip(b) {
@@ -129,7 +385,8 @@ pub fn add_inplace(a: &mut [f32], b: &[f32]) {
 pub const RMS_EPS: f32 = 1e-5;
 
 /// RMSNorm over the last dim: y = x / sqrt(mean(x²)+ε) ⊙ w. Returns the
-/// normalized output and the per-row inverse RMS (cached for backward).
+/// normalized output and the per-row inverse RMS (cached for backward),
+/// computed in one fused pass. Produces the same y as [`rmsnorm_into`].
 pub fn rmsnorm_fwd(x: &[f32], w: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
     debug_assert_eq!(x.len(), rows * d);
     debug_assert_eq!(w.len(), d);
@@ -146,6 +403,23 @@ pub fn rmsnorm_fwd(x: &[f32], w: &[f32], rows: usize, d: usize) -> (Vec<f32>, Ve
         }
     }
     (y, inv)
+}
+
+/// RMSNorm into a caller-provided buffer (the inference path — no
+/// inverse-RMS cache, no allocation).
+pub fn rmsnorm_into(x: &[f32], w: &[f32], rows: usize, d: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(w.len(), d);
+    debug_assert_eq!(y.len(), rows * d);
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let s = 1.0 / (ms + RMS_EPS).sqrt();
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            yr[j] = xr[j] * s * w[j];
+        }
+    }
 }
 
 /// RMSNorm backward: given dL/dy, the forward input `x`, the scale `w`
@@ -179,6 +453,12 @@ pub fn rmsnorm_bwd(
     (dx, dw)
 }
 
+/// One RoPE rotation table: cos/sin, each s×half, row-major by position.
+pub struct RopeTable {
+    pub cos: Vec<f32>,
+    pub sin: Vec<f32>,
+}
+
 /// Precompute the RoPE rotation table for `s` positions × `half` pairs
 /// (Llama convention, base 10000): returns (cos, sin), each s×half.
 pub fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
@@ -195,6 +475,21 @@ pub fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
         }
     }
     (cos, sin)
+}
+
+/// Process-wide RoPE table cache keyed on (seq, half-dim). Every layer of
+/// every forward shares one table per shape instead of rebuilding it
+/// per layer call (ROADMAP: the rebuild dominated small-batch serving).
+pub fn rope_tables_cached(s: usize, half: usize) -> Arc<RopeTable> {
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<RopeTable>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().unwrap_or_else(|e| e.into_inner());
+    map.entry((s, half))
+        .or_insert_with(|| {
+            let (cos, sin) = rope_table(s, half);
+            Arc::new(RopeTable { cos, sin })
+        })
+        .clone()
 }
 
 /// Apply RoPE in place to a (b·s, nh·dh) q/k buffer. `sign` = 1.0 rotates
@@ -220,6 +515,34 @@ pub fn rope_apply(
                 let c = cos[pos * half + i];
                 let sn = sin[pos * half + i] * sign;
                 let j0 = h * dh + 2 * i;
+                let (x0, x1) = (xr[j0], xr[j0 + 1]);
+                xr[j0] = x0 * c - x1 * sn;
+                xr[j0 + 1] = x0 * sn + x1 * c;
+            }
+        }
+    }
+}
+
+/// Apply RoPE in place to a (rows × nh·dh) buffer where row `i` sits at
+/// sequence position `pos[i]` (the single-position KV-decode path).
+pub fn rope_apply_rows(
+    x: &mut [f32],
+    pos: &[usize],
+    nh: usize,
+    dh: usize,
+    cos: &[f32],
+    sin: &[f32],
+) {
+    let d = nh * dh;
+    let half = dh / 2;
+    debug_assert_eq!(x.len(), pos.len() * d);
+    for (i, &p) in pos.iter().enumerate() {
+        let xr = &mut x[i * d..(i + 1) * d];
+        for h in 0..nh {
+            for ii in 0..half {
+                let c = cos[p * half + ii];
+                let sn = sin[p * half + ii];
+                let j0 = h * dh + 2 * ii;
                 let (x0, x1) = (xr[j0], xr[j0 + 1]);
                 xr[j0] = x0 * c - x1 * sn;
                 xr[j0 + 1] = x0 * sn + x1 * c;
@@ -289,6 +612,54 @@ mod tests {
     }
 
     #[test]
+    fn tiled_kernels_match_scalar_reference() {
+        // Shapes chosen to hit every tile/tail combination of the
+        // microkernels (row tails, column tails, k tails).
+        let mut rng = Rng::new(9, 0);
+        for &(m, k, n) in &[
+            (1usize, 8usize, 1usize),
+            (3, 5, 7),
+            (4, 16, 16),
+            (13, 17, 11),
+            (32, 64, 48),
+            (67, 33, 96),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bt = rand_vec(&mut rng, n * k);
+            let tiled = matmul_nn(&a, &b, m, k, n);
+            let scalar = matmul_nn_scalar(&a, &b, m, k, n);
+            for (x, y) in tiled.iter().zip(&scalar) {
+                assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "nn {m}x{k}x{n}: {x} vs {y}");
+            }
+            let tiled = matmul_nt(&a, &bt, m, k, n);
+            let scalar = matmul_nt_scalar(&a, &bt, m, k, n);
+            for (x, y) in tiled.iter().zip(&scalar) {
+                assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "nt {m}x{k}x{n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_rows_are_shape_independent() {
+        // The same logical row must come out bit-identical whether the
+        // kernel sees it alone (m=1, KV decode) or inside a batch
+        // (m=rows, prefill) — the KV parity guarantee.
+        let mut rng = Rng::new(10, 0);
+        let (m, k, n) = (9, 33, 21);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let bt = rand_vec(&mut rng, n * k);
+        let full_nn = matmul_nn(&a, &b, m, k, n);
+        let full_nt = matmul_nt(&a, &bt, m, k, n);
+        for r in 0..m {
+            let row = &a[r * k..(r + 1) * k];
+            assert_eq!(&matmul_nn(row, &b, 1, k, n), &full_nn[r * n..(r + 1) * n]);
+            assert_eq!(&matmul_nt(row, &bt, 1, k, n), &full_nt[r * n..(r + 1) * n]);
+        }
+    }
+
+    #[test]
     fn matmul_parallel_path_matches_serial() {
         // Big enough to cross PAR_MIN_FLOPS with a row count that does
         // not divide evenly across workers.
@@ -302,6 +673,18 @@ mod tests {
     }
 
     #[test]
+    fn rope_cache_matches_fresh_table() {
+        let (s, half) = (12, 3);
+        let (cos, sin) = rope_table(s, half);
+        let cached = rope_tables_cached(s, half);
+        assert_eq!(cached.cos, cos);
+        assert_eq!(cached.sin, sin);
+        // Second lookup returns the same shared table.
+        let again = rope_tables_cached(s, half);
+        assert!(Arc::ptr_eq(&cached, &again));
+    }
+
+    #[test]
     fn rmsnorm_forward_unit_scale() {
         let x = vec![3.0f32, -4.0];
         let w = vec![1.0f32, 1.0];
@@ -311,6 +694,10 @@ mod tests {
         assert!((y[0] - 3.0 / rms).abs() < 1e-4);
         assert!((y[1] + 4.0 / rms).abs() < 1e-4);
         assert!((inv[0] - 1.0 / rms).abs() < 1e-5);
+        // The allocation-free variant produces the same output.
+        let mut y2 = vec![0.0f32; 2];
+        rmsnorm_into(&x, &w, 1, 2, &mut y2);
+        assert_eq!(y, y2);
     }
 
     #[test]
@@ -373,6 +760,21 @@ mod tests {
         for (a, b_) in x.iter().zip(&x0) {
             assert!((a - b_).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn rope_rows_matches_positional_apply() {
+        // rope_apply_rows at positions [0, 1, 2, 3] must equal the
+        // windowed rope_apply over a (1, 4) batch.
+        let (s, nh, dh) = (4, 2, 6);
+        let mut rng = Rng::new(5, 0);
+        let x0 = rand_vec(&mut rng, s * nh * dh);
+        let (cos, sin) = rope_table(s, dh / 2);
+        let mut a = x0.clone();
+        rope_apply(&mut a, 1, s, nh, dh, &cos, &sin, 1.0);
+        let mut b = x0.clone();
+        rope_apply_rows(&mut b, &[0, 1, 2, 3], nh, dh, &cos, &sin);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -9,17 +9,24 @@
 //!
 //! This backend defines the reference semantics of the model family; the
 //! `pjrt` artifact backend must agree with it.
+//!
+//! Two forward paths exist: the cached path behind `layer_forward` (the
+//! train/heal reference, keeps every backward intermediate) and the
+//! inference path behind `layer_forward_infer`/`layer_prefill`/
+//! `layer_decode` (no backward caches, scratch buffers reused across
+//! layer calls, process-wide RoPE table cache). Both produce identical
+//! outputs; the parity tests below assert it.
 
 mod forward;
-mod math;
+pub mod math;
 mod train;
 
-use crate::backend::{Backend, CalibOut, HealOut, LayerParams};
+use crate::backend::{Backend, CalibOut, HealOut, KvCache, LayerParams};
 use crate::model::ModelConfig;
 use crate::tensor::{Tensor, TensorStore};
 use crate::util::Json;
 use anyhow::{ensure, Result};
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 
 /// Built-in model-family manifest: the native backend needs no artifacts
 /// directory, so the configurations ship with the binary. `tiny` mirrors
@@ -41,6 +48,9 @@ const NATIVE_MANIFEST: &str = r#"{
 pub struct NativeBackend {
     manifest: Json,
     execs: Cell<u64>,
+    /// Inference-path scratch, shared across layer calls so eval/serve
+    /// forwards allocate nothing but their outputs after warmup.
+    scratch: RefCell<forward::InferScratch>,
 }
 
 impl NativeBackend {
@@ -48,6 +58,7 @@ impl NativeBackend {
         NativeBackend {
             manifest: Json::parse(NATIVE_MANIFEST).expect("builtin manifest parses"),
             execs: Cell::new(0),
+            scratch: RefCell::new(forward::InferScratch::new()),
         }
     }
 
@@ -86,13 +97,8 @@ impl Backend for NativeBackend {
         ensure!(emb.shape.len() == 2, "emb must be (vocab, d), got {:?}", emb.shape);
         let (b, s) = (tokens.shape[0], tokens.shape[1]);
         let (vocab, d) = (emb.shape[0], emb.shape[1]);
-        let toks = tokens.i32s()?;
-        let e = emb.f32s()?;
         let mut out = vec![0.0f32; b * s * d];
-        for (r, &tk) in toks.iter().enumerate() {
-            ensure!((0..vocab as i32).contains(&tk), "token {tk} out of vocab 0..{vocab}");
-            out[r * d..(r + 1) * d].copy_from_slice(&e[tk as usize * d..(tk as usize + 1) * d]);
-        }
+        forward::embed_gather(emb.f32s()?, vocab, d, tokens.i32s()?, &mut out)?;
         Ok(Tensor::from_f32(&[b, s, d], out))
     }
 
@@ -102,6 +108,94 @@ impl Backend for NativeBackend {
         let dims = forward::layer_dims(cfg.n_heads, p, b, s, d)?;
         let cache = forward::layer_forward_cached(dims, p, x.f32s()?)?;
         Ok(Tensor::from_f32(&x.shape, cache.y))
+    }
+
+    fn layer_forward_infer(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        self.tick();
+        let (b, s, d) = Self::xdims(x)?;
+        let dims = forward::layer_dims(cfg.n_heads, p, b, s, d)?;
+        let mut sc = self.scratch.borrow_mut();
+        let y = forward::layer_infer_impl(dims, p, x.f32s()?, None, &mut sc)?;
+        Ok(Tensor::from_f32(&x.shape, y))
+    }
+
+    fn supports_kv_decode(&self) -> bool {
+        true
+    }
+
+    fn fixed_shape(&self) -> bool {
+        false
+    }
+
+    fn layer_prefill(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+        kv: &mut KvCache,
+        layer: usize,
+    ) -> Result<Tensor> {
+        self.tick();
+        let (b, s, d) = Self::xdims(x)?;
+        ensure!(
+            kv.b == b && kv.s == s && kv.d == d,
+            "kv cache is (b={}, s={}, d={}), prefill input is ({b}, {s}, {d})",
+            kv.b,
+            kv.s,
+            kv.d
+        );
+        ensure!(layer < kv.n_layers(), "layer {layer} beyond kv cache ({})", kv.n_layers());
+        let dims = forward::layer_dims(cfg.n_heads, p, b, s, d)?;
+        let mut sc = self.scratch.borrow_mut();
+        let (kc, vc) = (&mut kv.k[layer], &mut kv.v[layer]);
+        let y = forward::layer_infer_impl(
+            dims,
+            p,
+            x.f32s()?,
+            Some((kc.as_mut_slice(), vc.as_mut_slice())),
+            &mut sc,
+        )?;
+        Ok(Tensor::from_f32(&x.shape, y))
+    }
+
+    fn layer_decode(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+        kv: &mut KvCache,
+        layer: usize,
+        pos: &[usize],
+    ) -> Result<Tensor> {
+        self.tick();
+        let (b, s1, d) = Self::xdims(x)?;
+        ensure!(s1 == 1, "decode input must be (b, 1, d), got {:?}", x.shape);
+        ensure!(
+            kv.b == b && kv.d == d,
+            "kv cache is (b={}, d={}), decode input is ({b}, {d})",
+            kv.b,
+            kv.d
+        );
+        ensure!(layer < kv.n_layers(), "layer {layer} beyond kv cache ({})", kv.n_layers());
+        ensure!(pos.len() == b, "need one position per batch row");
+        let dims = forward::layer_dims(cfg.n_heads, p, b, kv.s, d)?;
+        let mut sc = self.scratch.borrow_mut();
+        let (kc, vc) = (&mut kv.k[layer], &mut kv.v[layer]);
+        let y = forward::layer_decode_impl(
+            dims,
+            p,
+            x.f32s()?,
+            kc.as_mut_slice(),
+            vc.as_mut_slice(),
+            pos,
+            &mut sc,
+        )?;
+        Ok(Tensor::from_f32(&[b, 1, d], y))
     }
 
     fn layer_forward_calib(
@@ -262,6 +356,104 @@ mod tests {
                 down: &self.wdown,
             }
         }
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn infer_forward_matches_cached_dense_and_cured() {
+        // The inference-only path must reproduce the cached reference on
+        // dense AND cured layers (same kernels, same per-row order), and
+        // scratch reuse across calls must not corrupt outputs.
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let (d, di) = (cfg.d_model, cfg.d_inter);
+        let mut rng = Rng::new(41, 0);
+        let layer = OwnedLayer::random(&mut rng, d, di, 0.2);
+        let x = rand_t(&mut rng, &[2, 5, d], 1.0);
+        let y_cached = be.layer_forward(&cfg, &layer.params(), &x).unwrap();
+        let y_infer = be.layer_forward_infer(&cfg, &layer.params(), &x).unwrap();
+        assert_close(
+            y_cached.f32s().unwrap(),
+            y_infer.f32s().unwrap(),
+            1e-6,
+            "dense infer",
+        );
+        // Second call through the (now-warm) scratch.
+        let y_again = be.layer_forward_infer(&cfg, &layer.params(), &x).unwrap();
+        assert_eq!(y_infer, y_again, "scratch reuse must be deterministic");
+        // Cured q projection.
+        let r = 4usize;
+        let c = rand_t(&mut rng, &[d, r], 0.4);
+        let u = rand_t(&mut rng, &[r, r], 0.4);
+        let rr = rand_t(&mut rng, &[r, d], 0.4);
+        let mut p = layer.params();
+        p.q = Proj::Cured { c: &c, u: Cow::Borrowed(&u), r: &rr };
+        let y_cached = be.layer_forward(&cfg, &p, &x).unwrap();
+        let y_infer = be.layer_forward_infer(&cfg, &p, &x).unwrap();
+        assert_close(
+            y_cached.f32s().unwrap(),
+            y_infer.f32s().unwrap(),
+            1e-6,
+            "cured infer",
+        );
+    }
+
+    #[test]
+    fn prefill_and_decode_match_full_forward() {
+        // Prefill over a 5-token window + one decode step at position 5
+        // must equal the full 6-token forward: prefill rows bit-match by
+        // causality, and the decoded row matches position 5.
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let (d, di) = (cfg.d_model, cfg.d_inter);
+        let (b, s) = (2usize, 6usize);
+        let mut rng = Rng::new(42, 0);
+        let layer = OwnedLayer::random(&mut rng, d, di, 0.2);
+        let x_full = rand_t(&mut rng, &[b, s, d], 1.0);
+        let y_full = be.layer_forward_infer(&cfg, &layer.params(), &x_full).unwrap();
+        // Window with the last position blanked (prefill sees a pad there).
+        let mut x_pre = x_full.clone();
+        {
+            let xs = x_pre.f32s_mut().unwrap();
+            for bi in 0..b {
+                for j in 0..d {
+                    xs[(bi * s + s - 1) * d + j] = 0.0;
+                }
+            }
+        }
+        let mut kv = crate::backend::KvCache::new(1, b, s, d);
+        let y_pre = be.layer_prefill(&cfg, &layer.params(), &x_pre, &mut kv, 0).unwrap();
+        // Causality: the first s-1 positions agree with the full forward.
+        let (yf, yp) = (y_full.f32s().unwrap(), y_pre.f32s().unwrap());
+        for bi in 0..b {
+            for pos in 0..s - 1 {
+                let o = (bi * s + pos) * d;
+                assert_close(&yf[o..o + d], &yp[o..o + d], 1e-6, "prefill row");
+            }
+        }
+        // Decode the final position against the cache.
+        let mut x_new = vec![0.0f32; b * d];
+        for bi in 0..b {
+            x_new[bi * d..(bi + 1) * d]
+                .copy_from_slice(&x_full.f32s().unwrap()[(bi * s + s - 1) * d..(bi * s + s) * d]);
+        }
+        let x_new = Tensor::from_f32(&[b, 1, d], x_new);
+        let y_dec = be
+            .layer_decode(&cfg, &layer.params(), &x_new, &mut kv, 0, &[s - 1, s - 1])
+            .unwrap();
+        let yd = y_dec.f32s().unwrap();
+        for bi in 0..b {
+            let o = (bi * s + s - 1) * d;
+            assert_close(&yf[o..o + d], &yd[bi * d..(bi + 1) * d], 1e-6, "decode row");
+        }
+        // The cache footprint accounting is honest.
+        assert_eq!(kv.bytes(), 2 * b * s * d * 4);
     }
 
     #[test]

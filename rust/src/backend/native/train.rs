@@ -11,11 +11,12 @@
 //!   layer's cured projections, Adam on ΔU only.
 
 use super::forward::{
-    head_forward, layer_dims, layer_forward_cached, want, Dims, LayerCache, ProjCache,
+    embed_gather, head_forward, layer_dims, layer_forward_cached, want, Dims, LayerCache,
+    ProjCache,
 };
 use super::math::{
-    add_inplace, matmul_nn, matmul_nt, matmul_tn, rmsnorm_bwd, rope_apply, rope_table,
-    silu, silu_grad,
+    add_inplace, matmul_nn, matmul_nt, matmul_tn, rmsnorm_bwd, rope_apply,
+    rope_tables_cached, silu, silu_grad,
 };
 use crate::backend::{HealOut, LayerParams, Proj};
 use crate::model::ModelConfig;
@@ -125,9 +126,9 @@ fn attention_bwd(
             }
         }
     }
-    let (cos, sin) = rope_table(s, dh / 2);
-    rope_apply(&mut dq, b, s, nh, dh, &cos, &sin, -1.0);
-    rope_apply(&mut dk, b, s, nh, dh, &cos, &sin, -1.0);
+    let rope = rope_tables_cached(s, dh / 2);
+    rope_apply(&mut dq, b, s, nh, dh, &rope.cos, &rope.sin, -1.0);
+    rope_apply(&mut dk, b, s, nh, dh, &rope.cos, &rope.sin, -1.0);
     (dq, dk, dv)
 }
 
@@ -319,10 +320,7 @@ pub(super) fn train_step_impl(
         let vocab = emb_t.shape[0];
         let emb = emb_t.f32s()?;
         let mut x0 = vec![0.0f32; bs * d];
-        for (r, &tk) in toks.iter().enumerate() {
-            ensure!((0..vocab as i32).contains(&tk), "token {tk} out of vocab 0..{vocab}");
-            x0[r * d..(r + 1) * d].copy_from_slice(&emb[tk as usize * d..(tk as usize + 1) * d]);
-        }
+        embed_gather(emb, vocab, d, toks, &mut x0)?;
         // Layer l's input is x0 for l=0, else the previous cache's `y`
         // (no clones — the caches already hold every activation needed).
         let mut caches: Vec<LayerCache> = Vec::with_capacity(nl);

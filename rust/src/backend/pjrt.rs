@@ -238,6 +238,20 @@ impl Backend for PjrtBackend {
         Self::take(&mut out, "y", "layer")
     }
 
+    fn layer_forward_infer(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        // The AOT forward graphs are already inference-only — no backward
+        // cache escapes an artifact — so the plain forward IS the infer
+        // path here. KV-cached decode (layer_prefill/layer_decode) stays
+        // unimplemented: the lowered artifacts are fixed-shape full-window
+        // graphs, and the pipeline falls back to full recompute.
+        self.layer_forward(cfg, p, x)
+    }
+
     fn layer_forward_calib(
         &self,
         cfg: &ModelConfig,

@@ -98,7 +98,10 @@ pub fn heal_layers(
         let mut loss_sum = 0.0;
         for l in 0..cfg.n_layers {
             if !cured.contains(&l) {
-                x_student = pipe.layer_forward(
+                // Forward-only propagation: the inference path (no
+                // backward caches) — heal_step builds its own caches for
+                // the layers it actually trains.
+                x_student = pipe.layer_forward_infer(
                     student,
                     l,
                     &crate::pipeline::LayerKind::Dense,

@@ -74,7 +74,8 @@ COMMANDS
 
 ENV  CURING_BACKEND (native|pjrt; default: pjrt when built in and artifacts exist)
      CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
-     CURING_PRETRAIN_STEPS (default 400)      CURING_THREADS (native matmul workers)"
+     CURING_PRETRAIN_STEPS (default 400)      CURING_THREADS (native matmul workers)
+     CURING_NO_KV_CACHE=1 (force full-window recompute in `generate`)"
     );
 }
 
@@ -280,12 +281,13 @@ fn serve(args: &Args) -> Result<()> {
     };
     let stats = server.run(rx, clients * per_client)?;
     println!(
-        "served {} reqs in {:.2}s | {:.1} seq/s | occupancy {:.1}/{} | p50 {:.0}ms p95 {:.0}ms",
+        "served {} reqs in {:.2}s | {:.1} seq/s | occupancy {:.1}/{} | padded rows {} | p50 {:.0}ms p95 {:.0}ms",
         stats.served,
         stats.wall_s,
         stats.throughput_seq_per_s,
         stats.mean_batch_occupancy,
         pipe.cfg.batch,
+        stats.padded_rows,
         stats.p50_latency_ms,
         stats.p95_latency_ms
     );

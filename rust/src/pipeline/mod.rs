@@ -11,12 +11,30 @@
 //! [`LayerParams`] view from the store and hands execution to the
 //! runtime's [`crate::backend::Backend`] (native CPU or PJRT artifacts).
 
-use crate::backend::{Backend, LayerParams, Proj};
+use crate::backend::{Backend, KvCache, LayerParams, Proj};
 use crate::model::ModelConfig;
 use crate::runtime::Runtime;
 use crate::tensor::{Tensor, TensorStore};
 use anyhow::{ensure, Result};
 use std::borrow::Cow;
+
+/// `CURING_NO_KV_CACHE=1` forces greedy decode onto the full-window
+/// recompute path (debugging escape hatch).
+fn kv_cache_disabled() -> bool {
+    std::env::var("CURING_NO_KV_CACHE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (j, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = j;
+        }
+    }
+    best
+}
 
 /// How one layer executes.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -148,7 +166,7 @@ impl<'rt> Pipeline<'rt> {
         Ok(u)
     }
 
-    /// Run one layer: x -> y.
+    /// Run one layer: x -> y (the cached reference path).
     pub fn layer_forward(
         &self,
         store: &TensorStore,
@@ -160,7 +178,20 @@ impl<'rt> Pipeline<'rt> {
         self.rt.backend().layer_forward(&self.cfg, &params, x)
     }
 
-    /// Full forward to final hidden states.
+    /// Run one layer on the inference-only path (no backward caches).
+    pub fn layer_forward_infer(
+        &self,
+        store: &TensorStore,
+        l: usize,
+        kind: &LayerKind,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let params = self.layer_params(store, l, kind)?;
+        self.rt.backend().layer_forward_infer(&self.cfg, &params, x)
+    }
+
+    /// Full forward to final hidden states (inference path: eval, serve
+    /// and decode all come through here).
     pub fn forward_hidden(
         &self,
         store: &TensorStore,
@@ -170,7 +201,7 @@ impl<'rt> Pipeline<'rt> {
         ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
         let mut x = self.embed(store, tokens)?;
         for (l, kind) in plan.0.iter().enumerate() {
-            x = self.layer_forward(store, l, kind, &x)?;
+            x = self.layer_forward_infer(store, l, kind, &x)?;
         }
         Ok(x)
     }
@@ -229,12 +260,15 @@ impl<'rt> Pipeline<'rt> {
 
     /// Greedy decoding through the per-layer pipeline.
     ///
-    /// The execution set is fixed-shape (b, s); generation keeps a
-    /// sliding window of the last `seq` tokens and recomputes the full
-    /// window per emitted token (no KV cache — honest cost: one pipeline
-    /// pass per token; fine for demo-scale serving and it exercises the
-    /// exact deployed compute path). Returns `n_new` generated ids for
-    /// each prompt row.
+    /// On backends with a KV-cache decode path (native), the prompt
+    /// window is prefilled once and each subsequent token is a single-
+    /// position layer pass against per-layer K/V buffers — token ids are
+    /// identical to the full-window recompute path (asserted in tests).
+    /// When a row's window fills, RoPE positions shift under the sliding
+    /// window and the remaining tokens fall back to full recompute, the
+    /// seed behavior. Fixed-shape backends (pjrt) and
+    /// `CURING_NO_KV_CACHE=1` always take the full-recompute path.
+    /// Returns `n_new` generated ids for each prompt row.
     pub fn generate_greedy(
         &self,
         store: &TensorStore,
@@ -242,8 +276,37 @@ impl<'rt> Pipeline<'rt> {
         prompts: &[Vec<i32>],
         n_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        let (b, s, v) = (self.cfg.batch, self.cfg.seq, self.cfg.vocab);
-        ensure!(!prompts.is_empty() && prompts.len() <= b, "1..=batch prompts");
+        let use_kv = self.rt.backend().supports_kv_decode() && !kv_cache_disabled();
+        self.generate_greedy_impl(store, plan, prompts, n_new, use_kv)
+    }
+
+    /// The full-window recompute path (one pipeline pass over the whole
+    /// window per emitted token): the reference the KV-cached path is
+    /// tested against, and the `CURING_NO_KV_CACHE=1` behavior.
+    pub fn generate_greedy_uncached(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        prompts: &[Vec<i32>],
+        n_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        self.generate_greedy_impl(store, plan, prompts, n_new, false)
+    }
+
+    fn generate_greedy_impl(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        prompts: &[Vec<i32>],
+        n_new: usize,
+        use_kv: bool,
+    ) -> Result<Vec<Vec<i32>>> {
+        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
+        let (s, v) = (self.cfg.seq, self.cfg.vocab);
+        // Fixed-shape backends must run the manifest batch (padding with
+        // repeated rows); the native backend runs exactly the prompts.
+        let b = if self.rt.backend().fixed_shape() { self.cfg.batch } else { prompts.len() };
+        ensure!(!prompts.is_empty() && prompts.len() <= b, "1..={b} prompts");
         // Windows padded on the left to length s; track logical lengths.
         let mut windows: Vec<Vec<i32>> = Vec::with_capacity(b);
         let mut lens: Vec<usize> = Vec::with_capacity(b);
@@ -256,22 +319,20 @@ impl<'rt> Pipeline<'rt> {
             lens.push(take);
         }
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
-        for _ in 0..n_new {
+        let mut remaining = n_new;
+        if use_kv && remaining > 0 {
+            let done =
+                self.decode_kv(store, plan, &mut windows, &mut lens, &mut generated, remaining)?;
+            remaining -= done;
+        }
+        for _ in 0..remaining {
             let flat: Vec<i32> = windows.iter().flatten().copied().collect();
             let tokens = Tensor::from_i32(&[b, s], flat);
             let logits = self.logits(store, plan, &tokens)?;
             let data = logits.f32s()?;
             for (i, g) in generated.iter_mut().enumerate() {
                 let pos = lens[i] - 1; // last real token's prediction
-                let row = &data[(i * s + pos) * v..(i * s + pos + 1) * v];
-                let mut best = 0usize;
-                let mut bv = f32::NEG_INFINITY;
-                for (j, &x) in row.iter().enumerate() {
-                    if x > bv {
-                        bv = x;
-                        best = j;
-                    }
-                }
+                let best = argmax(&data[(i * s + pos) * v..(i * s + pos + 1) * v]);
                 g.push(best as i32);
                 // Slide or append.
                 if lens[i] < s {
@@ -286,6 +347,110 @@ impl<'rt> Pipeline<'rt> {
         Ok(generated)
     }
 
+    /// KV-cached greedy decode: prefill the current windows once, then
+    /// emit tokens with single-position layer passes. Emits at most
+    /// `n_new` tokens; stops early (returning the emitted count, windows
+    /// and lengths seed-consistent) when any row's window fills and the
+    /// sliding-window rotation invalidates the cached positions.
+    fn decode_kv(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        windows: &mut [Vec<i32>],
+        lens: &mut [usize],
+        generated: &mut [Vec<i32>],
+        n_new: usize,
+    ) -> Result<usize> {
+        let backend = self.rt.backend();
+        let cfg = &self.cfg;
+        let (b, s, v, d) = (windows.len(), cfg.seq, cfg.vocab, cfg.d_model);
+        let n_real = generated.len();
+        let mut kv = KvCache::new(cfg.n_layers, b, s, d);
+        // Prefill: one full-window inference pass seeding every layer's
+        // K/V, then the head over just each row's last real position.
+        let flat: Vec<i32> = windows.iter().flatten().copied().collect();
+        let tokens = Tensor::from_i32(&[b, s], flat);
+        let mut x = self.embed(store, &tokens)?;
+        for (l, kind) in plan.0.iter().enumerate() {
+            let params = self.layer_params(store, l, kind)?;
+            x = backend.layer_prefill(cfg, &params, &x, &mut kv, l)?;
+        }
+        let xs = x.f32s()?;
+        let mut rows = vec![0.0f32; b * d];
+        for i in 0..b {
+            let p = lens[i] - 1;
+            rows[i * d..(i + 1) * d].copy_from_slice(&xs[(i * s + p) * d..(i * s + p + 1) * d]);
+        }
+        let hidden = Tensor::from_f32(&[b, 1, d], rows);
+        let logits =
+            backend.head_logits(cfg, &hidden, store.get("ln_f")?, store.get("emb")?)?;
+        // `last[i]` is the most recent token of row i, pending append;
+        // pad rows (fixed-shape batches) mirror the last real row.
+        let mut last = vec![0i32; b];
+        {
+            let data = logits.f32s()?;
+            for i in 0..b {
+                let t = argmax(&data[i * v..(i + 1) * v]) as i32;
+                if i < n_real {
+                    generated[i].push(t);
+                    last[i] = t;
+                } else {
+                    last[i] = last[n_real - 1];
+                }
+            }
+        }
+        let mut emitted = 1usize;
+        while emitted < n_new {
+            if lens.iter().any(|&l| l >= s) {
+                // A full window would rotate: append/slide seed-style and
+                // hand the rest to the full-recompute loop.
+                Self::append_or_slide(windows, lens, &last, s);
+                return Ok(emitted);
+            }
+            let mut pos = vec![0usize; b];
+            for i in 0..b {
+                windows[i][lens[i]] = last[i];
+                pos[i] = lens[i];
+                lens[i] += 1;
+            }
+            let toks = Tensor::from_i32(&[b, 1], last.clone());
+            let mut x = self.embed(store, &toks)?;
+            for (l, kind) in plan.0.iter().enumerate() {
+                let params = self.layer_params(store, l, kind)?;
+                x = backend.layer_decode(cfg, &params, &x, &mut kv, l, &pos)?;
+            }
+            let logits =
+                backend.head_logits(cfg, &x, store.get("ln_f")?, store.get("emb")?)?;
+            let data = logits.f32s()?;
+            for i in 0..b {
+                let t = argmax(&data[i * v..(i + 1) * v]) as i32;
+                if i < n_real {
+                    generated[i].push(t);
+                    last[i] = t;
+                } else {
+                    last[i] = last[n_real - 1];
+                }
+            }
+            emitted += 1;
+        }
+        // Append the final emission so the window state stays consistent
+        // with the recompute path (harmless if generation is done).
+        Self::append_or_slide(windows, lens, &last, s);
+        Ok(emitted)
+    }
+
+    fn append_or_slide(windows: &mut [Vec<i32>], lens: &mut [usize], last: &[i32], s: usize) {
+        for i in 0..windows.len() {
+            if lens[i] < s {
+                windows[i][lens[i]] = last[i];
+                lens[i] += 1;
+            } else {
+                windows[i].rotate_left(1);
+                windows[i][s - 1] = last[i];
+            }
+        }
+    }
+
     /// Teacher-forced per-layer forward used for layer-wise KD: returns
     /// the (input, output) pair of every layer under the dense model.
     pub fn forward_trace(
@@ -298,7 +463,7 @@ impl<'rt> Pipeline<'rt> {
         let mut outputs = Vec::with_capacity(self.cfg.n_layers);
         for l in 0..self.cfg.n_layers {
             inputs.push(x.clone());
-            let y = self.layer_forward(store, l, &LayerKind::Dense, &x)?;
+            let y = self.layer_forward_infer(store, l, &LayerKind::Dense, &x)?;
             outputs.push(y.clone());
             x = y;
         }

@@ -37,6 +37,9 @@ pub struct ServeStats {
     pub served: usize,
     pub batches: usize,
     pub mean_batch_occupancy: f64,
+    /// Rows scored only to pad partial batches to the model batch size —
+    /// wasted compute the occupancy numbers must own up to.
+    pub padded_rows: usize,
     pub p50_latency_ms: f64,
     pub p95_latency_ms: f64,
     pub throughput_seq_per_s: f64,
@@ -87,7 +90,8 @@ impl<'p> BatchingServer<'p> {
                 break;
             }
             let occupancy = pending.len().min(b);
-            // Pad a partial batch by repeating the first request.
+            // Pad a partial batch by repeating the last pending request;
+            // pad rows are counted as waste and never extracted below.
             let mut toks = Vec::with_capacity(b * s);
             let mut tgts = Vec::with_capacity(b * s);
             for i in 0..b {
@@ -99,6 +103,8 @@ impl<'p> BatchingServer<'p> {
             let targets = Tensor::from_i32(&[b, s], tgts);
             let nll = self.pipe.nll(self.store, &self.plan, &tokens, &targets)?;
             let nll_data = nll.f32s()?;
+            // Response extraction touches only the real rows; rows
+            // occupancy..b were pad duplicates.
             for (i, req) in pending.drain(..).take(occupancy).enumerate() {
                 let row = &nll_data[i * s..(i + 1) * s];
                 let mean = row.iter().map(|&x| x as f64).sum::<f64>() / s as f64;
@@ -109,6 +115,7 @@ impl<'p> BatchingServer<'p> {
             }
             stats.batches += 1;
             stats.mean_batch_occupancy += occupancy as f64;
+            stats.padded_rows += b - occupancy;
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         if stats.batches > 0 {
@@ -164,6 +171,29 @@ pub fn spawn_clients(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn server_reports_pad_waste() {
+        let rt = crate::runtime::Runtime::native();
+        let cfg = crate::model::ModelConfig::from_manifest(rt.manifest(), "mini").unwrap();
+        let mut rng = crate::util::Rng::new(31, 0);
+        let store = cfg.init_dense(&mut rng);
+        let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+        let vocab = Vocab::build();
+        let (rx, _resps) = spawn_clients(&vocab, CorpusKind::SynthC4, cfg.seq, 3, 1, 0);
+        let server = BatchingServer {
+            pipe: &pipe,
+            store: &store,
+            plan: LayerPlan::all_dense(&cfg),
+            max_wait: Duration::from_millis(20),
+        };
+        let stats = server.run(rx, 3).unwrap();
+        assert_eq!(stats.served, 3);
+        // Every batch is cfg.batch rows; whatever was not a real request
+        // was a pad duplicate and must be reported as waste.
+        assert_eq!(stats.padded_rows, stats.batches * cfg.batch - stats.served);
+        assert!(stats.padded_rows >= 1, "3 requests on batch=2 must pad at least one row");
+    }
 
     #[test]
     fn client_threads_produce_requests() {

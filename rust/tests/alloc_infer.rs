@@ -1,0 +1,98 @@
+//! Allocation accounting for the inference-only forward.
+//!
+//! A counting global allocator measures exactly what one
+//! `layer_forward_infer` call allocates after scratch warmup. The
+//! acceptance bound: the inference path must never allocate the
+//! (b·nh·s·s) softmax-probs tensor the train/heal cache carries, so its
+//! total allocation per call must stay strictly below that buffer's
+//! size (the only fresh buffer is the (b·s·d) output).
+//!
+//! This lives in its own test binary so no sibling test thread pollutes
+//! the process-wide counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use curing::backend::Backend;
+use curing::model::ModelConfig;
+use curing::pipeline::{LayerKind, Pipeline};
+use curing::runtime::Runtime;
+use curing::tensor::Tensor;
+use curing::util::{Json, Rng};
+
+struct CountingAlloc;
+
+static ALLOCATED: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED.fetch_add(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocated() -> usize {
+    ALLOCATED.load(Ordering::Relaxed)
+}
+
+#[test]
+fn infer_path_performs_no_softmax_probs_allocation() {
+    // Small enough that every kernel stays on the calling thread (no
+    // worker-stack allocations in the measurement window).
+    let manifest = Json::parse(
+        r#"{"configs":{"t":{"vocab":64,"d_model":32,"n_layers":1,"n_heads":4,
+        "d_inter":64,"seq":16,"batch":2,"ranks":[4],"default_rank":4,
+        "lora_rank":1,"mora_rank":4,"total_params":0}}}"#,
+    )
+    .unwrap();
+    let cfg = ModelConfig::from_manifest(&manifest, "t").unwrap();
+    let (b, s, d, nh) = (cfg.batch, cfg.seq, cfg.d_model, cfg.n_heads);
+    let mut rng = Rng::new(7, 0);
+    let store = cfg.init_dense(&mut rng);
+    let rt = Runtime::native();
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let params = pipe.layer_params(&store, 0, &LayerKind::Dense).unwrap();
+    let x = Tensor::from_f32(&[b, s, d], rng.normal_vec(b * s * d, 1.0));
+    let be = rt.backend();
+
+    // Warm the scratch buffers and the RoPE table cache.
+    for _ in 0..2 {
+        be.layer_forward_infer(&cfg, &params, &x).unwrap();
+    }
+
+    let probs_bytes = b * nh * s * s * 4;
+    let output_bytes = b * s * d * 4;
+    assert!(
+        output_bytes < probs_bytes,
+        "test shape must separate output from probs ({output_bytes} vs {probs_bytes})"
+    );
+
+    let before = allocated();
+    let y = be.layer_forward_infer(&cfg, &params, &x).unwrap();
+    let infer_bytes = allocated() - before;
+    assert_eq!(y.shape, x.shape);
+    assert!(
+        infer_bytes < probs_bytes,
+        "inference forward allocated {infer_bytes} B — at least a \
+         (b·nh·s·s) probs buffer ({probs_bytes} B) worth; the cache-free \
+         path must only allocate its output (~{output_bytes} B)"
+    );
+
+    // Sanity that the counter sees real allocations: the cached
+    // (train/heal) forward carries the probs buffer and then some.
+    let before = allocated();
+    let y2 = be.layer_forward(&cfg, &params, &x).unwrap();
+    let cached_bytes = allocated() - before;
+    assert_eq!(y2.shape, x.shape);
+    assert!(
+        cached_bytes >= probs_bytes,
+        "cached forward allocated only {cached_bytes} B (< probs {probs_bytes} B)?"
+    );
+}
