@@ -24,11 +24,14 @@ use curing::linalg::{jacobi_svd, rand_svd, Mat};
 use curing::model::ModelConfig;
 use curing::peft::{init_adapters, trainable_params, Adapter};
 use curing::pipeline::{LayerKind, LayerPlan, Pipeline};
+use curing::serve::{spawn_gen_clients, GenerationServer, Request};
 use curing::tensor::{Tensor, TensorStore};
 use curing::util::bench::{BenchResult, Bencher};
 use curing::util::stats::mib;
 use curing::util::{Json, JsonObj, Rng};
 use curing::wanda::Selector;
+use std::sync::mpsc::channel;
+use std::time::Duration;
 
 fn fast() -> bool {
     std::env::var("CURING_BENCH_FAST").as_deref() == Ok("1")
@@ -42,7 +45,8 @@ fn main() -> Result<()> {
     }
     let filters: Vec<String> =
         raw.into_iter().filter(|a| !a.starts_with('-') && a != "bench").collect();
-    let all = ["micro", "t1", "t2", "t3", "f4", "f5", "f6", "f7", "f10", "t4", "t5", "t6"];
+    let all =
+        ["micro", "serve", "t1", "t2", "t3", "f4", "f5", "f6", "f7", "f10", "t4", "t5", "t6"];
     let selected: Vec<&str> = if filters.is_empty() {
         all.to_vec()
     } else {
@@ -68,6 +72,7 @@ fn main() -> Result<()> {
         let t0 = std::time::Instant::now();
         match name {
             "micro" => micro(&ctx, &pipe, &dense)?,
+            "serve" => serve_bench(&ctx)?,
             "t1" => t1(&ctx, &pipe, &dense, &calib)?,
             "t2" => t2(&ctx, &pipe, &dense, &calib)?,
             "t3" => t3(&ctx, &pipe, &dense, &calib)?,
@@ -91,10 +96,12 @@ fn print_usage() {
         "curing bench harness — regenerates the paper's tables/figures.
 
 USAGE: cargo bench [-- name ...]
-  names: micro t1 t2 t3 f4 f5 f6 f7 f10 t4 t5 t6 (default: all)
+  names: micro serve t1 t2 t3 f4 f5 f6 f7 f10 t4 t5 t6 (default: all)
   f5/f6/f7 need the pjrt backend (switched AOT artifacts).
-  micro also writes machine-readable results to BENCH_native.json
-  at the repo root (perf trajectory across PRs).
+  micro and serve also write machine-readable results to
+  BENCH_native.json at the repo root (perf trajectory across PRs);
+  serve measures continuous-batching generation throughput at
+  1/4/8 slots plus the packed-vs-unpacked NT head kernel.
 
 ENV: CURING_BENCH_FAST=1   smoke sizes
      CURING_PRETRAIN_STEPS  pretraining length (cached store)
@@ -178,8 +185,8 @@ fn micro(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
         pipe.layer_forward_infer(&student, 1, &kind, &x).unwrap()
     }));
 
-    // Greedy decode: prefill vs per-token, KV-cached vs full-window
-    // recompute, at (b=1, s=64) on the tiny config.
+    // Greedy decode: prefill vs per-token, KV-cached vs the cache-free
+    // replay reference, at (b=1, window=64) on the tiny config.
     let plan = LayerPlan::all_dense(cfg);
     let prompt: Vec<i32> = (1..9).collect();
     let n_dec = if fast() { 4 } else { 16 };
@@ -191,18 +198,18 @@ fn micro(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
         pipe.generate_greedy(dense, &plan, &[prompt.clone()], n_dec).unwrap()
     });
     record(r_kv.clone());
-    let r_full = b.run(&format!("decode {n_dec} tok full-recompute (b1 s64)"), || {
+    let r_full = b.run(&format!("decode {n_dec} tok replay-reference (b1 s64)"), || {
         pipe.generate_greedy_uncached(dense, &plan, &[prompt.clone()], n_dec).unwrap()
     });
     record(r_full.clone());
     // Per-token decode latency: the KV path pays prefill once, then one
-    // single-position pass per token; the full path pays a whole window
-    // per token.
+    // single-position pass per token; the reference replays the whole
+    // history per token.
     let per_tok_kv = ((r_kv.mean_ms - r_prefill.mean_ms) / (n_dec as f64 - 1.0)).max(1e-6);
     let per_tok_full = r_full.mean_ms / n_dec as f64;
     let speedup = per_tok_full / per_tok_kv;
     println!(
-        "decode per-token: kv {per_tok_kv:.4} ms vs full {per_tok_full:.4} ms \
+        "decode per-token: kv {per_tok_kv:.4} ms vs replay {per_tok_full:.4} ms \
          -> {speedup:.1}x (prefill {:.4} ms, tokens/s kv {:.0})",
         r_prefill.mean_ms,
         1e3 / per_tok_kv
@@ -242,17 +249,118 @@ fn write_bench_json(
     decode.insert("speedup", Json::Num(per_tok_full / per_tok_kv));
     decode.insert("tokens_per_s_kv", Json::Num(1e3 / per_tok_kv));
     decode.insert("tokens_per_s_full", Json::Num(1e3 / per_tok_full));
-    let mut root = JsonObj::new();
-    root.insert("schema", Json::Num(1.0));
-    root.insert("backend", Json::Str(backend.to_string()));
-    root.insert("config", Json::Str("tiny".to_string()));
-    root.insert("fast", Json::Bool(fast));
-    root.insert("decode", Json::Obj(decode));
-    root.insert("rows", Json::Arr(rows.iter().map(bench_result_json).collect()));
+    merge_bench_json(vec![
+        ("schema".to_string(), Json::Num(2.0)),
+        ("backend".to_string(), Json::Str(backend.to_string())),
+        ("config".to_string(), Json::Str("tiny".to_string())),
+        ("fast".to_string(), Json::Bool(fast)),
+        ("decode".to_string(), Json::Obj(decode)),
+        ("rows".to_string(), Json::Arr(rows.iter().map(bench_result_json).collect())),
+    ])
+}
+
+/// Merge top-level sections into `BENCH_native.json`, preserving
+/// whatever other sections are already there (micro and serve each own
+/// their keys and can run in either order).
+fn merge_bench_json(sections: Vec<(String, Json)>) -> Result<()> {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json");
+    let mut root = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(o)) => o,
+            _ => JsonObj::new(),
+        },
+        Err(_) => JsonObj::new(),
+    };
+    for (k, v) in sections {
+        root.insert(k, v);
+    }
     std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
     println!("wrote {}", path.display());
     Ok(())
+}
+
+// ---------------------------------------------------------------- serve
+
+/// Continuous-batching generation throughput on the mini config: 8
+/// requests decoded past the window-rotation boundary at 1 / 4 / 8
+/// slots (slots=1 IS the sequential single-slot baseline the batched
+/// numbers are measured against), plus the packed-vs-unpacked NT head
+/// kernel at the fused-decode shape. Results land in the `serve`
+/// section of `BENCH_native.json` (CI validates the keys).
+fn serve_bench(ctx: &Ctx) -> Result<()> {
+    let pipe = ctx.pipeline("mini")?;
+    let cfg = pipe.cfg.clone();
+    let mut rng = Rng::new(77, 0);
+    let store = cfg.init_dense(&mut rng);
+    let plan = LayerPlan::all_dense(&cfg);
+    let n_req = 8usize;
+    // Past the rotation boundary: prompt 8 + n_new > seq 32.
+    let n_new = if fast() { cfg.seq - 4 } else { cfg.seq + 8 };
+    println!(
+        "serve — continuous-batching generation, mini config \
+         ({n_req} requests × {n_new} tokens, window {})",
+        cfg.seq
+    );
+    let mut sec = JsonObj::new();
+    sec.insert("config", Json::Str("mini".to_string()));
+    sec.insert("requests", Json::Num(n_req as f64));
+    sec.insert("n_new", Json::Num(n_new as f64));
+    let mut tps = Vec::new();
+    for &slots in &[1usize, 4, 8] {
+        let (tx, rx) = channel::<Request>();
+        let _resps = spawn_gen_clients(
+            &tx,
+            &ctx.vocab,
+            CorpusKind::SynthC4,
+            8,
+            n_new,
+            n_req,
+            1,
+            0,
+        );
+        drop(tx);
+        let server = GenerationServer {
+            pipe: &pipe,
+            store: &store,
+            plan: plan.clone(),
+            max_wait: Duration::from_millis(5),
+            slots,
+        };
+        let stats = server.run(rx)?;
+        println!(
+            "  slots {slots}: {:>8.0} tok/s | occupancy {:>4.1} | prefills {} | \
+             tok p50 {:.3} ms p95 {:.3} ms",
+            stats.tokens_per_s,
+            stats.mean_active_slots,
+            stats.prefills,
+            stats.tok_p50_ms,
+            stats.tok_p95_ms
+        );
+        sec.insert(format!("tokens_per_s_slots{slots}"), Json::Num(stats.tokens_per_s));
+        sec.insert(format!("tok_p50_ms_slots{slots}"), Json::Num(stats.tok_p50_ms));
+        sec.insert(format!("tok_p95_ms_slots{slots}"), Json::Num(stats.tok_p95_ms));
+        tps.push(stats.tokens_per_s);
+    }
+    let speedup = tps[tps.len() - 1] / tps[0].max(1e-9);
+    println!("  8-slot batched vs sequential single-slot: {speedup:.1}x tokens/s");
+    sec.insert("speedup_8_slots_vs_1", Json::Num(speedup));
+
+    // Packed vs unpacked NT at the fused-decode head shape (8 active
+    // rows, large-k B reused across steps — pack cost paid once).
+    let b = if fast() { Bencher::quick() } else { Bencher::default() };
+    let mut r = Rng::new(78, 0);
+    let (m, k, n) = (8usize, 256usize, 512usize);
+    let a = r.normal_vec(m * k, 1.0);
+    let bt = r.normal_vec(n * k, 1.0);
+    let packed = math::pack_nt(&bt, n, k);
+    let r_packed =
+        b.run("matmul_nt packed 8x256x512", || math::matmul_nt_packed(&a, &packed, m));
+    let r_plain = b.run("matmul_nt unpacked 8x256x512", || math::matmul_nt(&a, &bt, m, k, n));
+    println!("{}", r_packed.row());
+    println!("{}", r_plain.row());
+    sec.insert("nt_packed_ms", Json::Num(r_packed.mean_ms));
+    sec.insert("nt_unpacked_ms", Json::Num(r_plain.mean_ms));
+    merge_bench_json(vec![("serve".to_string(), Json::Obj(sec))])
 }
 
 // ------------------------------------------------------------------- t1

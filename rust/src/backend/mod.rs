@@ -87,31 +87,70 @@ pub struct HealOut {
     pub y_student: Tensor,
 }
 
-/// Per-layer K/V buffers for incremental greedy decode: layer `l`'s
-/// post-RoPE keys and values live at `k[l]`/`v[l]`, each a flat
-/// (b, s, d) row-major buffer. Filled by [`Backend::layer_prefill`] over
-/// a full window, then advanced one position per emitted token by
-/// [`Backend::layer_decode`].
+/// Per-slot ring-buffer K/V for incremental greedy decode.
 ///
-/// Resident footprint: n_layers × 2 × b·s·d × 4 bytes f32 (see
-/// [`KvCache::bytes`]) — for the `tiny` config (8 layers, b=8, s=64,
-/// d=256) that is 8 MiB.
+/// Layer `l`'s post-RoPE keys and values live at `k[l]`/`v[l]`, each a
+/// flat (slots, cap, d) row-major buffer: slot `i` owns the lane
+/// `[i·cap, (i+1)·cap)`, and the token at absolute sequence position `p`
+/// sits at ring row `p % cap`. Positions increase monotonically for the
+/// lifetime of a slot; once more than `window` tokens have entered, the
+/// newest write simply overwrites the oldest ring row — the sliding
+/// window rotates with **no recompute and no cache invalidation**.
+/// `next_pos[i]` is the absolute position of slot `i`'s next token
+/// (equivalently: how many tokens the slot has seen).
+///
+/// A cache is filled per slot by [`Backend::layer_prefill`] over the
+/// prompt window, then advanced one position per emitted token by
+/// [`Backend::layer_decode_batch`] (which reads `next_pos`; callers bump
+/// it via [`KvCache::advance`] after the last layer of a token).
+///
+/// `cap >= window`: the fast path uses `cap == window` (a true ring);
+/// the generation parity oracle uses `cap == total tokens` so the same
+/// decode code runs against a never-wrapping linear layout.
+///
+/// Resident footprint: n_layers × 2 × slots·cap·d × 4 bytes f32 (see
+/// [`KvCache::bytes`]) — for the `tiny` config (8 layers, 8 slots,
+/// cap=64, d=256) that is 8 MiB.
 pub struct KvCache {
+    /// Number of slot lanes (independent sequences).
     pub b: usize,
-    pub s: usize,
+    /// Ring capacity per lane, in positions.
+    pub cap: usize,
+    /// Attention span: a query at position p attends the last
+    /// min(p+1, window) positions. Always <= cap.
+    pub window: usize,
     pub d: usize,
     pub k: Vec<Vec<f32>>,
     pub v: Vec<Vec<f32>>,
+    /// Per slot: absolute position of the next token (tokens seen).
+    pub next_pos: Vec<usize>,
 }
 
 impl KvCache {
-    pub fn new(n_layers: usize, b: usize, s: usize, d: usize) -> KvCache {
+    /// The serving shape: ring capacity equals the attention window.
+    pub fn new(n_layers: usize, slots: usize, window: usize, d: usize) -> KvCache {
+        Self::with_capacity(n_layers, slots, window, window, d)
+    }
+
+    /// Explicit capacity (>= window). `cap > window` never evicts live
+    /// positions early; the oracle path uses `cap` = total tokens so the
+    /// ring never wraps.
+    pub fn with_capacity(
+        n_layers: usize,
+        slots: usize,
+        window: usize,
+        cap: usize,
+        d: usize,
+    ) -> KvCache {
+        assert!(window >= 1 && cap >= window, "kv cache needs cap >= window >= 1");
         KvCache {
-            b,
-            s,
+            b: slots,
+            cap,
+            window,
             d,
-            k: vec![vec![0.0; b * s * d]; n_layers],
-            v: vec![vec![0.0; b * s * d]; n_layers],
+            k: vec![vec![0.0; slots * cap * d]; n_layers],
+            v: vec![vec![0.0; slots * cap * d]; n_layers],
+            next_pos: vec![0; slots],
         }
     }
 
@@ -119,10 +158,49 @@ impl KvCache {
         self.k.len()
     }
 
-    /// Resident size in bytes: layers × 2 (K and V) × b·s·d × 4.
-    pub fn bytes(&self) -> usize {
-        self.k.len() * 2 * self.b * self.s * self.d * 4
+    /// Recycle a slot lane for a new request (continuous batching).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.next_pos[slot] = 0;
     }
+
+    /// Record that `w` prompt positions were prefilled into `slot`.
+    pub fn commit_prefill(&mut self, slot: usize, w: usize) {
+        self.next_pos[slot] = w;
+    }
+
+    /// Bump the given slots by one position (call once per emitted
+    /// token, after the last layer's decode pass).
+    pub fn advance(&mut self, slots: &[usize]) {
+        for &s in slots {
+            self.next_pos[s] += 1;
+        }
+    }
+
+    /// Resident size in bytes: layers × 2 (K and V) × slots·cap·d × 4.
+    pub fn bytes(&self) -> usize {
+        self.k.len() * 2 * self.b * self.cap * self.d * 4
+    }
+}
+
+/// Pre-packed LM-head weights for the decode hot loop: the tied
+/// embedding (vocab, d) re-laid out into column panels so the
+/// logits matmul streams one contiguous buffer and shares each panel
+/// line across all batched decode rows ([`Backend::pack_head`] /
+/// [`Backend::head_logits_packed`]). Opaque outside the backend that
+/// built it; backends without a packed kernel return `None` from
+/// `pack_head` and callers fall back to [`Backend::head_logits`].
+///
+/// The payload is currently the native backend's panel layout — the
+/// only packing implementation. A second packing backend (e.g. a
+/// lowered pjrt decode graph with its own device-resident pack) should
+/// generalize this into a per-backend payload rather than reuse
+/// `PackedB`; callers only ever round-trip the struct between
+/// `pack_head` and `head_logits_packed` of the same backend, so the
+/// seam itself won't change.
+pub struct PackedHead {
+    pub vocab: usize,
+    pub d: usize,
+    pub(crate) packed: crate::backend::native::math::PackedB,
 }
 
 /// A model-execution backend. All tensors are host [`Tensor`]s; the
@@ -156,8 +234,9 @@ pub trait Backend {
         self.layer_forward(cfg, p, x)
     }
 
-    /// Whether [`Backend::layer_prefill`] / [`Backend::layer_decode`]
-    /// are implemented (KV-cached greedy decode).
+    /// Whether [`Backend::layer_prefill`] /
+    /// [`Backend::layer_decode_batch`] are implemented (KV-cached
+    /// greedy decode and the continuous-batching generation server).
     fn supports_kv_decode(&self) -> bool {
         false
     }
@@ -169,9 +248,13 @@ pub trait Backend {
         true
     }
 
-    /// Full-window layer forward that additionally captures the layer's
-    /// post-RoPE K and V into `kv.k[layer]`/`kv.v[layer]` — the prefill
-    /// step of KV-cached decoding. Output equals `layer_forward_infer`.
+    /// Prompt-window layer forward for one slot: `x` is (1, w, d) with
+    /// `w <= kv.window`; the layer's post-RoPE K and V rows for
+    /// positions 0..w are captured into slot `slot`'s lane of
+    /// `kv.k[layer]`/`kv.v[layer]`. Output equals `layer_forward_infer`
+    /// on the same rows. Called once per request per layer (the
+    /// continuous-batching admission step); the ring rotation never
+    /// re-enters this path.
     fn layer_prefill(
         &self,
         cfg: &ModelConfig,
@@ -179,32 +262,60 @@ pub trait Backend {
         x: &Tensor,
         kv: &mut KvCache,
         layer: usize,
+        slot: usize,
     ) -> Result<Tensor> {
-        let _ = (cfg, p, x, kv, layer);
+        let _ = (cfg, p, x, kv, layer, slot);
         bail!(
             "backend '{}' has no KV-cache decode path (supports_kv_decode = false)",
             self.name()
         )
     }
 
-    /// One-position layer pass for greedy decode: `x` is (b, 1, d) — the
-    /// new token's hidden state per batch row, row `i` at sequence
-    /// position `pos[i]` — attending the cached keys/values 0..=pos[i]
-    /// of `kv` at `layer`, whose cache this call extends in place.
-    fn layer_decode(
+    /// Fused one-position layer pass across N independent slots: `x` is
+    /// (n, 1, d) — row `r` is the new token's hidden state for slot
+    /// `slots[r]`, entering at absolute position `kv.next_pos[slots[r]]`.
+    /// The matmuls see one n-row activation instead of n separate 1-row
+    /// calls. Each row's K/V is written to its ring position and the row
+    /// attends the last min(pos+1, window) cached positions of its own
+    /// lane. `kv.next_pos` is NOT bumped (the same positions must hold
+    /// for every layer of the token) — callers advance via
+    /// [`KvCache::advance`] after the last layer.
+    fn layer_decode_batch(
         &self,
         cfg: &ModelConfig,
         p: &LayerParams,
         x: &Tensor,
         kv: &mut KvCache,
         layer: usize,
-        pos: &[usize],
+        slots: &[usize],
     ) -> Result<Tensor> {
-        let _ = (cfg, p, x, kv, layer, pos);
+        let _ = (cfg, p, x, kv, layer, slots);
         bail!(
             "backend '{}' has no KV-cache decode path (supports_kv_decode = false)",
             self.name()
         )
+    }
+
+    /// Pre-pack the tied-embedding LM head for repeated decode-step
+    /// logits calls ([`Backend::head_logits_packed`]). `None` (the
+    /// default) means this backend has no packed kernel and callers
+    /// must use [`Backend::head_logits`].
+    fn pack_head(&self, emb: &Tensor) -> Result<Option<PackedHead>> {
+        let _ = emb;
+        Ok(None)
+    }
+
+    /// [`Backend::head_logits`] against a pre-packed head. Only valid
+    /// with a `PackedHead` from this backend's [`Backend::pack_head`].
+    fn head_logits_packed(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        packed: &PackedHead,
+    ) -> Result<Tensor> {
+        let _ = (cfg, x, ln_f, packed);
+        bail!("backend '{}' has no packed-head kernel", self.name())
     }
 
     /// Layer forward with calibration taps (dense layers only in practice).

@@ -12,15 +12,17 @@
 //!   across layer calls, attention never materializes the (b·nh·s·s)
 //!   probability tensor, and RoPE tables come from the process-wide
 //!   cache. `layer_infer_impl` optionally captures post-RoPE K/V into a
-//!   KV cache (prefill); `layer_decode_impl` advances one position per
-//!   batch row against cached K/V.
+//!   KV cache lane (per-slot prefill); `layer_decode_impl` advances one
+//!   position per active slot against ring-buffer K/V, fusing N slots
+//!   into one batched layer pass.
 //!
 //! Both paths drive the same kernels in the same per-row accumulation
 //! order, so they agree bit-for-bit — the parity tests assert it.
 
 use super::math::{
     add_inplace, dot, matmul_nn, matmul_nn_into, matmul_nt, par_chunk_tasks, par_pair_tasks,
-    rmsnorm_fwd, rmsnorm_into, rope_apply, rope_apply_rows, rope_tables_cached, silu,
+    rmsnorm_fwd, rmsnorm_into, rope_apply, rope_apply_rows_local, rope_row_into,
+    rope_tables_cached, silu,
 };
 use crate::backend::{LayerParams, Proj};
 use crate::tensor::Tensor;
@@ -371,30 +373,102 @@ fn attention_infer(
     heads_to_rows(att_h, dims, att);
 }
 
-/// Single-position attention against cached K/V: row `bi` queries from
-/// sequence position `pos[bi]` and attends keys 0..=pos[bi] — the shared
-/// [`attention_row`] core at si = pos[bi].
+/// One query row's causal attention over a **ring-buffer** K/V lane:
+/// the query sits at absolute position `pos` and attends absolute
+/// positions `lo..=pos`, where position `j` lives at ring row
+/// `lane_row0 + j % cap`. The score/softmax/accumulate op sequence
+/// mirrors [`attention_row`] exactly (scores ascending by absolute
+/// position, max-subtracted softmax, ascending weighted-V) — at
+/// `lo == 0, cap > pos` the arithmetic is identical, which is what
+/// makes ring decode bit-match prefill and the linear-layout oracle.
+/// The `lo..=pos` span covers at most two contiguous ring runs, so the
+/// hot loops carry no modulo.
+#[allow(clippy::too_many_arguments)]
+fn attention_row_ring(
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    lane_row0: usize,
+    cap: usize,
+    d: usize,
+    hoff: usize,
+    lo: usize,
+    pos: usize,
+    scale: f32,
+    prow: &mut [f32],
+    arow: &mut [f32],
+) {
+    let dh = arow.len();
+    let n = pos - lo + 1;
+    debug_assert!(n <= cap);
+    let start = lo % cap;
+    let run1 = n.min(cap - start);
+    let mut maxv = f32::NEG_INFINITY;
+    let mut idx = 0usize;
+    for run in [(start, run1), (0, n - run1)] {
+        for rr in run.0..run.0 + run.1 {
+            let koff = (lane_row0 + rr) * d + hoff;
+            let sc = dot(qrow, &k[koff..koff + dh]) * scale;
+            prow[idx] = sc;
+            idx += 1;
+            if sc > maxv {
+                maxv = sc;
+            }
+        }
+    }
+    let mut sum = 0.0f32;
+    for p in prow.iter_mut().take(n) {
+        *p = (*p - maxv).exp();
+        sum += *p;
+    }
+    let isum = 1.0 / sum;
+    arow.fill(0.0);
+    let mut idx = 0usize;
+    for run in [(start, run1), (0, n - run1)] {
+        for rr in run.0..run.0 + run.1 {
+            prow[idx] *= isum;
+            let pval = prow[idx];
+            idx += 1;
+            let voff = (lane_row0 + rr) * d + hoff;
+            for (o, &vv) in arow.iter_mut().zip(&v[voff..voff + dh]) {
+                *o += pval * vv;
+            }
+        }
+    }
+}
+
+/// Fused single-position attention for N independent slots against the
+/// ring cache: row `r` queries from absolute position `pos[r]` of lane
+/// `slots[r]` and attends the last `min(pos+1, window)` cached
+/// positions. `cap` is the lane ring capacity (`dims.s`).
+#[allow(clippy::too_many_arguments)]
 fn attention_decode(
     q: &[f32],
     kcache: &[f32],
     vcache: &[f32],
     dims: Dims,
+    window: usize,
+    slots: &[usize],
     pos: &[usize],
     srow: &mut [f32],
     att: &mut [f32],
 ) {
-    let Dims { s, d, nh, dh, .. } = dims;
+    let Dims { s: cap, d, nh, dh, .. } = dims;
     let scale = 1.0 / (dh as f32).sqrt();
-    for (bi, &p) in pos.iter().enumerate() {
+    for (r, (&slot, &p)) in slots.iter().zip(pos).enumerate() {
+        let span = (p + 1).min(window);
+        let lo = p + 1 - span;
         for h in 0..nh {
-            let qoff = bi * d + h * dh;
-            attention_row(
+            let qoff = r * d + h * dh;
+            attention_row_ring(
                 &q[qoff..qoff + dh],
                 kcache,
                 vcache,
-                bi * s,
+                slot * cap,
+                cap,
                 d,
                 h * dh,
+                lo,
                 p,
                 scale,
                 srow,
@@ -480,6 +554,11 @@ pub(super) struct InferScratch {
     hc: Vec<f32>,
     hcu: Vec<f32>,
     scores: Vec<f32>,
+    /// Per-row RoPE rotation rows of the decode path (positions are
+    /// unbounded, so decode never consults the process-wide table
+    /// cache).
+    rcos: Vec<f32>,
+    rsin: Vec<f32>,
 }
 
 impl InferScratch {
@@ -497,6 +576,8 @@ impl InferScratch {
             hc: Vec::new(),
             hcu: Vec::new(),
             scores: Vec::new(),
+            rcos: Vec::new(),
+            rsin: Vec::new(),
         }
     }
 }
@@ -573,29 +654,38 @@ pub(super) fn layer_infer_impl(
     Ok(y)
 }
 
-/// One-position-per-row layer forward against cached K/V. `x` is (b × d)
-/// — the new token's hidden state per batch row, row `i` at sequence
-/// position `pos[i]`. Appends the new K/V rows into the cache, attends
-/// keys 0..=pos[i], and returns the (b × d) layer output. `dims.s` is
-/// the cache capacity.
+/// Fused one-position layer forward for N slots against the ring
+/// cache. `x` is (n × d) — row `r` is the new token's hidden state for
+/// slot `slots[r]`, entering at absolute position `pos[r]` (ring row
+/// `pos[r] % cap` of the slot's lane). The q/k/v/gate/up/down matmuls
+/// each see one n-row activation — the continuous-batching fusion.
+/// Writes the new K/V rows, attends each row's last
+/// `min(pos+1, window)` cached positions, and returns the (n × d)
+/// layer output. `dims.b` is n; `dims.s` is the lane capacity `cap`;
+/// `kcache`/`vcache` are whole-cache layer buffers (lanes × cap × d).
+#[allow(clippy::too_many_arguments)]
 pub(super) fn layer_decode_impl(
     dims: Dims,
     p: &LayerParams,
     x: &[f32],
     kcache: &mut [f32],
     vcache: &mut [f32],
+    window: usize,
+    slots: &[usize],
     pos: &[usize],
     sc: &mut InferScratch,
 ) -> Result<Vec<f32>> {
-    let Dims { b, s, d, di, nh, dh } = dims;
-    ensure!(x.len() == b * d, "decode input must be b×d");
-    ensure!(pos.len() == b, "one position per batch row");
+    let Dims { b, s: cap, d, di, nh, dh } = dims;
+    ensure!(x.len() == b * d, "decode input must be n×d");
+    ensure!(slots.len() == b && pos.len() == b, "one slot and position per row");
+    ensure!(window >= 1 && window <= cap, "window {window} must be in 1..={cap}");
+    let lanes = kcache.len() / (cap * d);
     ensure!(
-        kcache.len() == b * s * d && vcache.len() == b * s * d,
+        kcache.len() == lanes * cap * d && vcache.len() == kcache.len(),
         "kv cache size mismatch"
     );
-    for &pp in pos {
-        ensure!(pp < s, "decode position {pp} out of cache range 0..{s}");
+    for &slot in slots {
+        ensure!(slot < lanes, "slot {slot} out of cache lanes 0..{lanes}");
     }
     let ln1 = want(p.ln1, &[d], "ln1")?;
     let ln2 = want(p.ln2, &[d], "ln2")?;
@@ -603,7 +693,22 @@ pub(super) fn layer_decode_impl(
     let wo = want(p.o, &[d, d], "w_o")?;
     let wup = want(p.up, &[d, di], "w_up")?;
     let wdown = want(p.down, &[di, d], "w_down")?;
-    let rope = rope_tables_cached(s, dh / 2);
+    // Positions are absolute and unbounded (the ring wraps, RoPE does
+    // not) — and client-controlled via n_new, so the process-wide table
+    // cache must not grow with them. Compute each row's rotation on the
+    // fly into scratch; bit-identical to the cached tables by
+    // construction (rope_row_into is their shared per-position core).
+    let half = dh / 2;
+    let rcos = grow(&mut sc.rcos, b * half);
+    let rsin = grow(&mut sc.rsin, b * half);
+    for (i, &pp) in pos.iter().enumerate() {
+        rope_row_into(
+            pp,
+            half,
+            &mut rcos[i * half..(i + 1) * half],
+            &mut rsin[i * half..(i + 1) * half],
+        );
+    }
 
     let h = {
         let hb = grow(&mut sc.h, b * d);
@@ -616,16 +721,16 @@ pub(super) fn layer_decode_impl(
     proj_infer(h, b, &p.k, &mut sc.hc, &mut sc.hcu, kx, "w_k")?;
     let vx = grow(&mut sc.v, b * d);
     matmul_nn_into(h, wv, b, d, d, vx);
-    rope_apply_rows(q, pos, nh, dh, &rope.cos, &rope.sin);
-    rope_apply_rows(kx, pos, nh, dh, &rope.cos, &rope.sin);
-    for (i, &pp) in pos.iter().enumerate() {
-        let dst = (i * s + pp) * d;
-        kcache[dst..dst + d].copy_from_slice(&kx[i * d..(i + 1) * d]);
-        vcache[dst..dst + d].copy_from_slice(&vx[i * d..(i + 1) * d]);
+    rope_apply_rows_local(q, b, nh, dh, rcos, rsin);
+    rope_apply_rows_local(kx, b, nh, dh, rcos, rsin);
+    for (r, (&slot, &pp)) in slots.iter().zip(pos).enumerate() {
+        let dst = (slot * cap + pp % cap) * d;
+        kcache[dst..dst + d].copy_from_slice(&kx[r * d..(r + 1) * d]);
+        vcache[dst..dst + d].copy_from_slice(&vx[r * d..(r + 1) * d]);
     }
     let att = grow(&mut sc.att, b * d);
-    let srow = grow(&mut sc.scores, s);
-    attention_decode(q, kcache, vcache, dims, pos, srow, att);
+    let srow = grow(&mut sc.scores, window);
+    attention_decode(q, kcache, vcache, dims, window, slots, pos, srow, att);
     let x2 = grow(&mut sc.x2, b * d);
     matmul_nn_into(att, wo, b, d, d, x2);
     add_inplace(x2, x);

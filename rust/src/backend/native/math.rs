@@ -286,6 +286,109 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     out
 }
 
+/// B of an NT matmul, re-laid out once into k-major column panels of
+/// [`NR`] so the product kernel streams one contiguous buffer and reuses
+/// each panel line across every A row (ROADMAP: "packing B for large-k
+/// cache locality"). Built with [`pack_nt`], consumed by
+/// [`matmul_nt_packed_into`]; the buffer is reusable across calls — the
+/// decode hot loop packs the LM head once and reuses it every step.
+pub struct PackedB {
+    pub k: usize,
+    pub n: usize,
+    /// ceil(n/NR) panels, each k×NR: `data[(p·k + kk)·NR + c] =
+    /// B[(p·NR + c)·k + kk]`, zero-padded in the tail panel's columns.
+    data: Vec<f32>,
+}
+
+/// Pack B (n×k row-major, the NT layout) into column panels.
+pub fn pack_nt(b: &[f32], n: usize, k: usize) -> PackedB {
+    assert_eq!(b.len(), n * k, "pack_nt: B size");
+    let panels = n.div_ceil(NR);
+    let mut data = vec![0.0f32; panels * k * NR];
+    for p in 0..panels {
+        let width = (n - p * NR).min(NR);
+        let base = p * k * NR;
+        for c in 0..width {
+            let brow = &b[(p * NR + c) * k..(p * NR + c + 1) * k];
+            for (kk, &bv) in brow.iter().enumerate() {
+                data[base + kk * NR + c] = bv;
+            }
+        }
+    }
+    PackedB { k, n, data }
+}
+
+/// C (m×n) = A (m×k) · Bᵀ against a pre-packed B. Per output element
+/// the accumulation is k-ascending and independent of m and of the
+/// surrounding shape, so a row comes out bit-identical whether computed
+/// alone (single-slot decode) or inside a batch (fused decode /
+/// prefill) — same guarantee as the other kernels, different reduction
+/// order than [`matmul_nt`]'s lane tree (do not mix the two within one
+/// parity domain).
+pub fn matmul_nt_packed_into(a: &[f32], pb: &PackedB, m: usize, out: &mut [f32]) {
+    let (k, n) = (pb.k, pb.n);
+    assert_eq!(a.len(), m * k, "matmul_nt_packed: A size");
+    assert_eq!(out.len(), m * n, "matmul_nt_packed: out size");
+    let panels = n.div_ceil(NR);
+    par_row_chunks(out, m, n, m * k * n, |lo, chunk| {
+        let rows = chunk.len() / n;
+        let mut r = 0;
+        // 4-row tiles share each streamed panel line; k ascending per
+        // (row, column) accumulator in every tile and tail path.
+        while r + MR <= rows {
+            let a_rows = [
+                &a[(lo + r) * k..(lo + r + 1) * k],
+                &a[(lo + r + 1) * k..(lo + r + 2) * k],
+                &a[(lo + r + 2) * k..(lo + r + 3) * k],
+                &a[(lo + r + 3) * k..(lo + r + 4) * k],
+            ];
+            for p in 0..panels {
+                let width = (n - p * NR).min(NR);
+                let panel = &pb.data[p * k * NR..(p + 1) * k * NR];
+                let mut acc = [[0.0f32; NR]; MR];
+                for kk in 0..k {
+                    let bv = &panel[kk * NR..(kk + 1) * NR];
+                    for (ri, a_row) in a_rows.iter().enumerate() {
+                        let av = a_row[kk];
+                        for c in 0..NR {
+                            acc[ri][c] += av * bv[c];
+                        }
+                    }
+                }
+                for (ri, acc_row) in acc.iter().enumerate() {
+                    let o = (r + ri) * n + p * NR;
+                    chunk[o..o + width].copy_from_slice(&acc_row[..width]);
+                }
+            }
+            r += MR;
+        }
+        while r < rows {
+            let a_row = &a[(lo + r) * k..(lo + r + 1) * k];
+            for p in 0..panels {
+                let width = (n - p * NR).min(NR);
+                let panel = &pb.data[p * k * NR..(p + 1) * k * NR];
+                let mut acc = [0.0f32; NR];
+                for (kk, &av) in a_row.iter().enumerate() {
+                    let bv = &panel[kk * NR..(kk + 1) * NR];
+                    for c in 0..NR {
+                        acc[c] += av * bv[c];
+                    }
+                }
+                let o = r * n + p * NR;
+                chunk[o..o + width].copy_from_slice(&acc[..width]);
+            }
+            r += 1;
+        }
+    });
+}
+
+/// Allocating convenience over [`matmul_nt_packed_into`].
+pub fn matmul_nt_packed(a: &[f32], pb: &PackedB, m: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * pb.n];
+    matmul_nt_packed_into(a, pb, m, &mut out);
+    out
+}
+
 /// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major (the
 /// gradient-accumulation shape: dW = Xᵀ·dY), into `out`. Unrolls k by 4
 /// so each output row is loaded/stored once per four k steps.
@@ -459,20 +562,33 @@ pub struct RopeTable {
     pub sin: Vec<f32>,
 }
 
-/// Precompute the RoPE rotation table for `s` positions × `half` pairs
-/// (Llama convention, base 10000): returns (cos, sin), each s×half.
+/// Fill one position's RoPE rotation row (cos and sin, each `half`
+/// wide; Llama convention, base 10000). The single per-position
+/// definition both [`rope_table`] and the unbounded-position decode
+/// path are built on, so cached tables and on-the-fly rows are
+/// bit-identical by construction.
+pub fn rope_row_into(pos: usize, half: usize, cos: &mut [f32], sin: &mut [f32]) {
+    debug_assert!(cos.len() == half && sin.len() == half);
+    for i in 0..half {
+        let freq = (10000.0f64).powf(-(2.0 * i as f64) / (2.0 * half as f64));
+        let angle = pos as f64 * freq;
+        cos[i] = angle.cos() as f32;
+        sin[i] = angle.sin() as f32;
+    }
+}
+
+/// Precompute the RoPE rotation table for `s` positions × `half` pairs:
+/// returns (cos, sin), each s×half.
 pub fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
     let mut cos = vec![0.0f32; s * half];
     let mut sin = vec![0.0f32; s * half];
-    let freqs: Vec<f64> = (0..half)
-        .map(|i| (10000.0f64).powf(-(2.0 * i as f64) / (2.0 * half as f64)))
-        .collect();
     for pos in 0..s {
-        for (i, &freq) in freqs.iter().enumerate() {
-            let angle = pos as f64 * freq;
-            cos[pos * half + i] = angle.cos() as f32;
-            sin[pos * half + i] = angle.sin() as f32;
-        }
+        rope_row_into(
+            pos,
+            half,
+            &mut cos[pos * half..(pos + 1) * half],
+            &mut sin[pos * half..(pos + 1) * half],
+        );
     }
     (cos, sin)
 }
@@ -538,15 +654,45 @@ pub fn rope_apply_rows(
     debug_assert_eq!(x.len(), pos.len() * d);
     for (i, &p) in pos.iter().enumerate() {
         let xr = &mut x[i * d..(i + 1) * d];
-        for h in 0..nh {
-            for ii in 0..half {
-                let c = cos[p * half + ii];
-                let sn = sin[p * half + ii];
-                let j0 = h * dh + 2 * ii;
-                let (x0, x1) = (xr[j0], xr[j0 + 1]);
-                xr[j0] = x0 * c - x1 * sn;
-                xr[j0 + 1] = x0 * sn + x1 * c;
-            }
+        rope_rotate_row(xr, nh, dh, &cos[p * half..(p + 1) * half], &sin[p * half..(p + 1) * half]);
+    }
+}
+
+/// Apply RoPE in place to a (rows × nh·dh) buffer where row `i` carries
+/// its own precomputed rotation row (`dh/2` cos/sin values each, e.g.
+/// from [`rope_row_into`]) — the unbounded-position decode path, which
+/// never touches the process-wide table cache.
+pub fn rope_apply_rows_local(
+    x: &mut [f32],
+    rows: usize,
+    nh: usize,
+    dh: usize,
+    cos: &[f32],
+    sin: &[f32],
+) {
+    let d = nh * dh;
+    let half = dh / 2;
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert!(cos.len() >= rows * half && sin.len() >= rows * half);
+    for i in 0..rows {
+        let xr = &mut x[i * d..(i + 1) * d];
+        rope_rotate_row(xr, nh, dh, &cos[i * half..(i + 1) * half], &sin[i * half..(i + 1) * half]);
+    }
+}
+
+/// Rotate one (nh·dh) row by one position's cos/sin row — the shared
+/// core of [`rope_apply_rows`] and [`rope_apply_rows_local`].
+#[inline]
+fn rope_rotate_row(xr: &mut [f32], nh: usize, dh: usize, cos: &[f32], sin: &[f32]) {
+    let half = dh / 2;
+    for h in 0..nh {
+        for ii in 0..half {
+            let c = cos[ii];
+            let sn = sin[ii];
+            let j0 = h * dh + 2 * ii;
+            let (x0, x1) = (xr[j0], xr[j0 + 1]);
+            xr[j0] = x0 * c - x1 * sn;
+            xr[j0 + 1] = x0 * sn + x1 * c;
         }
     }
 }
@@ -637,6 +783,51 @@ mod tests {
             for (x, y) in tiled.iter().zip(&scalar) {
                 assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "nt {m}x{k}x{n}: {x} vs {y}");
             }
+        }
+    }
+
+    #[test]
+    fn packed_nt_matches_unpacked() {
+        // Shapes hit full panels, a ragged tail panel, row tiles and row
+        // tails; the packed kernel must agree with plain NT within fp
+        // tolerance (the reduction orders differ by design).
+        let mut rng = Rng::new(11, 0);
+        for &(m, k, n) in &[
+            (1usize, 8usize, 1usize),
+            (3, 5, 7),
+            (4, 16, 16),
+            (8, 32, 384),
+            (13, 17, 37),
+            (67, 33, 96),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let bt = rand_vec(&mut rng, n * k);
+            let packed = pack_nt(&bt, n, k);
+            let got = matmul_nt_packed(&a, &packed, m);
+            let want = matmul_nt(&a, &bt, m, k, n);
+            for (x, y) in got.iter().zip(&want) {
+                assert!(
+                    (x - y).abs() < 1e-4 * (1.0 + y.abs()),
+                    "packed nt {m}x{k}x{n}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_nt_rows_are_shape_independent() {
+        // Like the other kernels, a logical row must come out
+        // bit-identical at m=1 (single-slot decode) and inside a batch
+        // (fused decode / prefill head) — generation parity relies on it.
+        let mut rng = Rng::new(12, 0);
+        let (m, k, n) = (9, 33, 37);
+        let a = rand_vec(&mut rng, m * k);
+        let bt = rand_vec(&mut rng, n * k);
+        let packed = pack_nt(&bt, n, k);
+        let full = matmul_nt_packed(&a, &packed, m);
+        for r in 0..m {
+            let row = &a[r * k..(r + 1) * k];
+            assert_eq!(&matmul_nt_packed(row, &packed, 1), &full[r * n..(r + 1) * n]);
         }
     }
 
@@ -774,6 +965,37 @@ mod tests {
         rope_apply(&mut a, 1, s, nh, dh, &cos, &sin, 1.0);
         let mut b = x0.clone();
         rope_apply_rows(&mut b, &[0, 1, 2, 3], nh, dh, &cos, &sin);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rope_local_rows_match_table_bitwise() {
+        // On-the-fly per-position rows (the unbounded-position decode
+        // path) must be bit-identical to the cached table, including
+        // at positions far beyond any window, and applying them must
+        // equal the table-indexed apply.
+        let (nh, dh) = (2, 6);
+        let half = dh / 2;
+        let positions = [0usize, 3, 7, 1000];
+        let (cos, sin) = rope_table(1001, half);
+        let mut rcos = vec![0.0f32; positions.len() * half];
+        let mut rsin = vec![0.0f32; positions.len() * half];
+        for (i, &p) in positions.iter().enumerate() {
+            rope_row_into(
+                p,
+                half,
+                &mut rcos[i * half..(i + 1) * half],
+                &mut rsin[i * half..(i + 1) * half],
+            );
+            assert_eq!(&rcos[i * half..(i + 1) * half], &cos[p * half..(p + 1) * half]);
+            assert_eq!(&rsin[i * half..(i + 1) * half], &sin[p * half..(p + 1) * half]);
+        }
+        let mut rng = Rng::new(6, 0);
+        let x0 = rand_vec(&mut rng, positions.len() * nh * dh);
+        let mut a = x0.clone();
+        rope_apply_rows(&mut a, &positions, nh, dh, &cos, &sin);
+        let mut b = x0.clone();
+        rope_apply_rows_local(&mut b, positions.len(), nh, dh, &rcos, &rsin);
         assert_eq!(a, b);
     }
 

@@ -13,9 +13,10 @@
 //! Two forward paths exist: the cached path behind `layer_forward` (the
 //! train/heal reference, keeps every backward intermediate) and the
 //! inference path behind `layer_forward_infer`/`layer_prefill`/
-//! `layer_decode` (no backward caches, scratch buffers reused across
-//! layer calls, process-wide RoPE table cache). Both produce identical
-//! outputs; the parity tests below assert it.
+//! `layer_decode_batch` (no backward caches, scratch buffers reused
+//! across layer calls, process-wide RoPE table cache, fused multi-slot
+//! decode against ring-buffer K/V). Both produce identical outputs; the
+//! parity tests below assert it.
 
 mod forward;
 pub mod math;
@@ -139,51 +140,62 @@ impl Backend for NativeBackend {
         x: &Tensor,
         kv: &mut KvCache,
         layer: usize,
+        slot: usize,
     ) -> Result<Tensor> {
         self.tick();
-        let (b, s, d) = Self::xdims(x)?;
+        let (b, w, d) = Self::xdims(x)?;
+        ensure!(b == 1, "prefill input must be (1, w, d), got {:?}", x.shape);
         ensure!(
-            kv.b == b && kv.s == s && kv.d == d,
-            "kv cache is (b={}, s={}, d={}), prefill input is ({b}, {s}, {d})",
-            kv.b,
-            kv.s,
+            w >= 1 && w <= kv.window && kv.d == d,
+            "kv cache is (window={}, d={}), prefill input is ({w}, {d})",
+            kv.window,
             kv.d
         );
+        ensure!(slot < kv.b, "slot {slot} out of cache lanes 0..{}", kv.b);
+        ensure!(
+            kv.next_pos[slot] == 0,
+            "slot {slot} already holds {} positions — reset_slot before re-prefilling",
+            kv.next_pos[slot]
+        );
         ensure!(layer < kv.n_layers(), "layer {layer} beyond kv cache ({})", kv.n_layers());
-        let dims = forward::layer_dims(cfg.n_heads, p, b, s, d)?;
+        let dims = forward::layer_dims(cfg.n_heads, p, 1, w, d)?;
         let mut sc = self.scratch.borrow_mut();
-        let (kc, vc) = (&mut kv.k[layer], &mut kv.v[layer]);
-        let y = forward::layer_infer_impl(
-            dims,
-            p,
-            x.f32s()?,
-            Some((kc.as_mut_slice(), vc.as_mut_slice())),
-            &mut sc,
-        )?;
+        // Prompt positions 0..w never wrap (w <= window <= cap): the
+        // slot's lane prefix is plain row-major.
+        let lane = slot * kv.cap * d;
+        let (kc, vc) = (
+            &mut kv.k[layer][lane..lane + w * d],
+            &mut kv.v[layer][lane..lane + w * d],
+        );
+        let y = forward::layer_infer_impl(dims, p, x.f32s()?, Some((kc, vc)), &mut sc)?;
         Ok(Tensor::from_f32(&x.shape, y))
     }
 
-    fn layer_decode(
+    fn layer_decode_batch(
         &self,
         cfg: &ModelConfig,
         p: &LayerParams,
         x: &Tensor,
         kv: &mut KvCache,
         layer: usize,
-        pos: &[usize],
+        slots: &[usize],
     ) -> Result<Tensor> {
         self.tick();
-        let (b, s1, d) = Self::xdims(x)?;
-        ensure!(s1 == 1, "decode input must be (b, 1, d), got {:?}", x.shape);
-        ensure!(
-            kv.b == b && kv.d == d,
-            "kv cache is (b={}, d={}), decode input is ({b}, {d})",
-            kv.b,
-            kv.d
-        );
+        let (n, s1, d) = Self::xdims(x)?;
+        ensure!(s1 == 1, "decode input must be (n, 1, d), got {:?}", x.shape);
+        ensure!(kv.d == d, "kv cache is d={}, decode input is d={d}", kv.d);
         ensure!(layer < kv.n_layers(), "layer {layer} beyond kv cache ({})", kv.n_layers());
-        ensure!(pos.len() == b, "need one position per batch row");
-        let dims = forward::layer_dims(cfg.n_heads, p, b, kv.s, d)?;
+        ensure!(slots.len() == n, "need one slot per input row");
+        let mut pos = Vec::with_capacity(n);
+        for (r, &slot) in slots.iter().enumerate() {
+            ensure!(slot < kv.b, "slot {slot} out of cache lanes 0..{}", kv.b);
+            ensure!(
+                !slots[..r].contains(&slot),
+                "slot {slot} appears twice in one decode batch"
+            );
+            pos.push(kv.next_pos[slot]);
+        }
+        let dims = forward::layer_dims(cfg.n_heads, p, n, kv.cap, d)?;
         let mut sc = self.scratch.borrow_mut();
         let (kc, vc) = (&mut kv.k[layer], &mut kv.v[layer]);
         let y = forward::layer_decode_impl(
@@ -192,10 +204,41 @@ impl Backend for NativeBackend {
             x.f32s()?,
             kc.as_mut_slice(),
             vc.as_mut_slice(),
-            pos,
+            kv.window,
+            slots,
+            &pos,
             &mut sc,
         )?;
-        Ok(Tensor::from_f32(&[b, 1, d], y))
+        Ok(Tensor::from_f32(&[n, 1, d], y))
+    }
+
+    fn pack_head(&self, emb: &Tensor) -> Result<Option<crate::backend::PackedHead>> {
+        ensure!(emb.shape.len() == 2, "emb must be (vocab, d), got {:?}", emb.shape);
+        let (vocab, d) = (emb.shape[0], emb.shape[1]);
+        Ok(Some(crate::backend::PackedHead {
+            vocab,
+            d,
+            packed: math::pack_nt(emb.f32s()?, vocab, d),
+        }))
+    }
+
+    fn head_logits_packed(
+        &self,
+        _cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        packed: &crate::backend::PackedHead,
+    ) -> Result<Tensor> {
+        self.tick();
+        let (b, s, d) = Self::xdims(x)?;
+        ensure!(packed.d == d, "packed head is d={}, hidden is d={d}", packed.d);
+        let lnf = forward::want(ln_f, &[d], "ln_f")?;
+        let rows = b * s;
+        let mut xf = vec![0.0f32; rows * d];
+        math::rmsnorm_into(x.f32s()?, lnf, rows, d, &mut xf);
+        let mut logits = vec![0.0f32; rows * packed.vocab];
+        math::matmul_nt_packed_into(&xf, &packed.packed, rows, &mut logits);
+        Ok(Tensor::from_f32(&[b, s, packed.vocab], logits))
     }
 
     fn layer_forward_calib(
@@ -406,9 +449,10 @@ mod tests {
 
     #[test]
     fn prefill_and_decode_match_full_forward() {
-        // Prefill over a 5-token window + one decode step at position 5
-        // must equal the full 6-token forward: prefill rows bit-match by
-        // causality, and the decoded row matches position 5.
+        // Per-slot prefill over the first 5 positions + one fused decode
+        // step at position 5 must equal the full 6-token forward:
+        // prefill rows bit-match by causality, and the decoded rows
+        // match position 5 across both slots.
         let be = NativeBackend::new();
         let cfg = small_cfg();
         let (d, di) = (cfg.d_model, cfg.d_inter);
@@ -417,27 +461,25 @@ mod tests {
         let layer = OwnedLayer::random(&mut rng, d, di, 0.2);
         let x_full = rand_t(&mut rng, &[b, s, d], 1.0);
         let y_full = be.layer_forward_infer(&cfg, &layer.params(), &x_full).unwrap();
-        // Window with the last position blanked (prefill sees a pad there).
-        let mut x_pre = x_full.clone();
-        {
-            let xs = x_pre.f32s_mut().unwrap();
-            for bi in 0..b {
-                for j in 0..d {
-                    xs[(bi * s + s - 1) * d + j] = 0.0;
-                }
-            }
-        }
+        let yf = y_full.f32s().unwrap();
         let mut kv = crate::backend::KvCache::new(1, b, s, d);
-        let y_pre = be.layer_prefill(&cfg, &layer.params(), &x_pre, &mut kv, 0).unwrap();
-        // Causality: the first s-1 positions agree with the full forward.
-        let (yf, yp) = (y_full.f32s().unwrap(), y_pre.f32s().unwrap());
-        for bi in 0..b {
-            for pos in 0..s - 1 {
-                let o = (bi * s + pos) * d;
-                assert_close(&yf[o..o + d], &yp[o..o + d], 1e-6, "prefill row");
+        for slot in 0..b {
+            // This slot's first s-1 rows as a (1, s-1, d) prompt window.
+            let w = s - 1;
+            let rows =
+                x_full.f32s().unwrap()[(slot * s) * d..(slot * s + w) * d].to_vec();
+            let x_pre = Tensor::from_f32(&[1, w, d], rows);
+            let y_pre =
+                be.layer_prefill(&cfg, &layer.params(), &x_pre, &mut kv, 0, slot).unwrap();
+            kv.commit_prefill(slot, w);
+            // Causality: prefill rows agree with the full forward.
+            let yp = y_pre.f32s().unwrap();
+            for pos in 0..w {
+                let o = (slot * s + pos) * d;
+                assert_close(&yf[o..o + d], &yp[pos * d..(pos + 1) * d], 1e-6, "prefill row");
             }
         }
-        // Decode the final position against the cache.
+        // Decode the final position of both slots in one fused call.
         let mut x_new = vec![0.0f32; b * d];
         for bi in 0..b {
             x_new[bi * d..(bi + 1) * d]
@@ -445,7 +487,7 @@ mod tests {
         }
         let x_new = Tensor::from_f32(&[b, 1, d], x_new);
         let y_dec = be
-            .layer_decode(&cfg, &layer.params(), &x_new, &mut kv, 0, &[s - 1, s - 1])
+            .layer_decode_batch(&cfg, &layer.params(), &x_new, &mut kv, 0, &[0, 1])
             .unwrap();
         let yd = y_dec.f32s().unwrap();
         for bi in 0..b {
@@ -454,6 +496,43 @@ mod tests {
         }
         // The cache footprint accounting is honest.
         assert_eq!(kv.bytes(), 2 * b * s * d * 4);
+    }
+
+    #[test]
+    fn ring_rotation_matches_linear_cache_bitwise() {
+        // The rotation invariant: feeding T > cap tokens through a
+        // wrapping ring (cap == window) must produce bit-identical
+        // outputs to the same stream through a never-wrapping linear
+        // cache (cap == T) with the same attention window — eviction by
+        // overwrite IS the sliding window, no recompute anywhere. Also
+        // runs the ring side as a 2-slot fused batch against the linear
+        // side's single-slot calls, pinning slot-fusion independence.
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let (d, di) = (cfg.d_model, cfg.d_inter);
+        let (window, t_total) = (4usize, 7usize);
+        let mut rng = Rng::new(43, 0);
+        let layer = OwnedLayer::random(&mut rng, d, di, 0.2);
+        let xs: Vec<Tensor> = (0..t_total).map(|_| rand_t(&mut rng, &[1, 1, d], 1.0)).collect();
+        // Ring: two slots fed the same stream, fused per step.
+        let mut ring = crate::backend::KvCache::new(1, 2, window, d);
+        // Linear: one slot, capacity covers the whole stream.
+        let mut lin = crate::backend::KvCache::with_capacity(1, 1, window, t_total, d);
+        for x in &xs {
+            let mut both = x.f32s().unwrap().to_vec();
+            both.extend_from_slice(x.f32s().unwrap());
+            let xb = Tensor::from_f32(&[2, 1, d], both);
+            let y_ring =
+                be.layer_decode_batch(&cfg, &layer.params(), &xb, &mut ring, 0, &[0, 1]).unwrap();
+            ring.advance(&[0, 1]);
+            let y_lin =
+                be.layer_decode_batch(&cfg, &layer.params(), x, &mut lin, 0, &[0]).unwrap();
+            lin.advance(&[0]);
+            let (yr, yl) = (y_ring.f32s().unwrap(), y_lin.f32s().unwrap());
+            assert_eq!(&yr[..d], yl, "ring slot 0 diverged from linear cache");
+            assert_eq!(&yr[d..], yl, "ring slot 1 diverged from linear cache");
+        }
+        assert_eq!(ring.next_pos, vec![t_total; 2]);
     }
 
     #[test]

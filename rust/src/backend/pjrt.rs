@@ -246,9 +246,14 @@ impl Backend for PjrtBackend {
     ) -> Result<Tensor> {
         // The AOT forward graphs are already inference-only — no backward
         // cache escapes an artifact — so the plain forward IS the infer
-        // path here. KV-cached decode (layer_prefill/layer_decode) stays
-        // unimplemented: the lowered artifacts are fixed-shape full-window
-        // graphs, and the pipeline falls back to full recompute.
+        // path here. KV-cached decode (layer_prefill/layer_decode_batch)
+        // and the packed LM head (pack_head/head_logits_packed) stay at
+        // their bailing trait defaults: the lowered artifacts are
+        // fixed-shape full-window graphs, so generation falls back to
+        // the windowed full-recompute loop and the generation server's
+        // continuous-batching slots are unavailable (scoring mode still
+        // works). Lowering a single-position decode graph per layer is
+        // the natural follow-up once the ring cache layout settles.
         self.layer_forward(cfg, p, x)
     }
 

@@ -15,7 +15,7 @@ use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
 use curing::data::{Corpus, CorpusKind, SEED_HEAL};
 use curing::heal::{heal_layers, HealOptions};
 use curing::pipeline::LayerPlan;
-use curing::serve::{spawn_clients, BatchingServer};
+use curing::serve::{spawn_gen_clients, spawn_score_clients, GenerationServer, Request};
 use curing::tensor::TensorStore;
 use curing::util::cli::Args;
 use curing::util::stats::mib;
@@ -70,12 +70,13 @@ COMMANDS
   heal      --config tiny --layers K --steps N [--rank 16]
   eval      --config tiny [--layers K]       Figure-4 metric suite
   generate  --prompt \"the atom\" [--layers K] [--tokens 24]  greedy decode
-  serve     --config tiny [--clients 4] [--requests 32]
+  serve     --config tiny [--mode score|generate|mixed] [--clients 4]
+            [--requests 32] [--slots 4] [--tokens 24] [--prompt-len 8]
 
 ENV  CURING_BACKEND (native|pjrt; default: pjrt when built in and artifacts exist)
      CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
      CURING_PRETRAIN_STEPS (default 400)      CURING_THREADS (native matmul workers)
-     CURING_NO_KV_CACHE=1 (force full-window recompute in `generate`)"
+     CURING_NO_KV_CACHE=1 (force the cache-free replay reference in `generate`)"
     );
 }
 
@@ -259,38 +260,79 @@ fn generate(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let ctx = Ctx::new()?;
     let config = args.str_opt("config", "tiny");
+    let mode = args.str_opt("mode", "score");
     let clients = args.usize_opt("clients", 4);
     let per_client = args.usize_opt("requests", 8);
+    let slots = args.usize_opt("slots", 4);
+    let n_new = args.usize_opt("tokens", 24);
+    let prompt_len = args.usize_opt("prompt-len", 8);
     let steps = args.usize_opt("steps", default_pretrain_steps());
     check_unknown(args)?;
+    if !matches!(mode.as_str(), "score" | "generate" | "mixed") {
+        bail!("unknown serve mode '{mode}' (score|generate|mixed)");
+    }
     let dense = ctx.load_or_pretrain(&config, steps)?;
     let pipe = ctx.pipeline(&config)?;
-    let (rx, _resps) = spawn_clients(
-        &ctx.vocab,
-        CorpusKind::SynthC4,
-        pipe.cfg.seq,
-        clients,
-        per_client,
-        5,
-    );
-    let server = BatchingServer {
+    let (tx, rx) = std::sync::mpsc::channel::<Request>();
+    let (mut _score_resps, mut _gen_resps) = (Vec::new(), Vec::new());
+    if mode == "score" || mode == "mixed" {
+        _score_resps = spawn_score_clients(
+            &tx,
+            &ctx.vocab,
+            CorpusKind::SynthC4,
+            pipe.cfg.seq,
+            clients,
+            per_client,
+            5,
+        );
+    }
+    if mode == "generate" || mode == "mixed" {
+        _gen_resps = spawn_gen_clients(
+            &tx,
+            &ctx.vocab,
+            CorpusKind::SynthC4,
+            prompt_len,
+            n_new,
+            clients,
+            per_client,
+            5,
+        );
+    }
+    drop(tx);
+    let server = GenerationServer {
         pipe: &pipe,
         store: &dense,
         plan: LayerPlan::all_dense(&pipe.cfg),
         max_wait: Duration::from_millis(30),
+        slots,
     };
-    let stats = server.run(rx, clients * per_client)?;
-    println!(
-        "served {} reqs in {:.2}s | {:.1} seq/s | occupancy {:.1}/{} | padded rows {} | p50 {:.0}ms p95 {:.0}ms",
-        stats.served,
-        stats.wall_s,
-        stats.throughput_seq_per_s,
-        stats.mean_batch_occupancy,
-        pipe.cfg.batch,
-        stats.padded_rows,
-        stats.p50_latency_ms,
-        stats.p95_latency_ms
-    );
+    let stats = server.run(rx)?;
+    if stats.served > 0 {
+        println!(
+            "scored {} reqs | {:.1} seq/s | occupancy {:.1}/{} | padded rows {} | p50 {:.0}ms p95 {:.0}ms",
+            stats.served,
+            stats.throughput_seq_per_s,
+            stats.mean_batch_occupancy,
+            pipe.cfg.batch,
+            stats.padded_rows,
+            stats.p50_latency_ms,
+            stats.p95_latency_ms
+        );
+    }
+    if stats.gen_served > 0 {
+        println!(
+            "generated {} reqs / {} toks | {:.1} tok/s | slots {:.1}/{} | prefills {} | tok p50 {:.2}ms p95 {:.2}ms",
+            stats.gen_served,
+            stats.tokens_generated,
+            stats.tokens_per_s,
+            stats.mean_active_slots,
+            slots,
+            stats.prefills,
+            stats.tok_p50_ms,
+            stats.tok_p95_ms
+        );
+    }
+    println!("wall {:.2}s", stats.wall_s);
     Ok(())
 }
 

@@ -11,15 +11,16 @@
 //! [`LayerParams`] view from the store and hands execution to the
 //! runtime's [`crate::backend::Backend`] (native CPU or PJRT artifacts).
 
-use crate::backend::{Backend, KvCache, LayerParams, Proj};
+use crate::backend::{Backend, KvCache, LayerParams, PackedHead, Proj};
 use crate::model::ModelConfig;
 use crate::runtime::Runtime;
 use crate::tensor::{Tensor, TensorStore};
 use anyhow::{ensure, Result};
 use std::borrow::Cow;
 
-/// `CURING_NO_KV_CACHE=1` forces greedy decode onto the full-window
-/// recompute path (debugging escape hatch).
+/// `CURING_NO_KV_CACHE=1` forces greedy decode onto the cache-free
+/// per-token replay reference ([`Pipeline::generate_greedy_uncached`] —
+/// same token stream, no persistent KV state; debugging escape hatch).
 fn kv_cache_disabled() -> bool {
     std::env::var("CURING_NO_KV_CACHE").map(|v| v == "1").unwrap_or(false)
 }
@@ -258,17 +259,110 @@ impl<'rt> Pipeline<'rt> {
         Ok(CalibForward { layer_outputs, embed_out, attn_sumsq, ffn_sumsq, attn_in, ffn_in })
     }
 
+    /// Pre-pack the LM head for repeated decode-step logits calls.
+    /// `None` on backends without a packed kernel — pass the result to
+    /// [`Pipeline::head_rows`], which falls back to the plain head.
+    pub fn pack_head(&self, store: &TensorStore) -> Result<Option<PackedHead>> {
+        self.rt.backend().pack_head(store.get("emb")?)
+    }
+
+    /// Head logits over hidden rows `x` (any (b, s, d)), preferring the
+    /// pre-packed kernel when one was built. Every head call of a
+    /// generation run must go through the same kernel (packed or not) —
+    /// the decode/replay parity is bit-exact only within one kernel.
+    pub fn head_rows(
+        &self,
+        store: &TensorStore,
+        x: &Tensor,
+        packed: Option<&PackedHead>,
+    ) -> Result<Tensor> {
+        match packed {
+            Some(ph) => {
+                self.rt.backend().head_logits_packed(&self.cfg, x, store.get("ln_f")?, ph)
+            }
+            None => self.rt.backend().head_logits(
+                &self.cfg,
+                x,
+                store.get("ln_f")?,
+                store.get("emb")?,
+            ),
+        }
+    }
+
+    /// Admit one prompt into KV-cache slot `slot`: reset the lane,
+    /// prefill the last `min(len, window)` prompt tokens (positions
+    /// 0..w — the one and only prefill this slot ever runs; ring
+    /// rotation never re-enters this path), then head the final
+    /// position. Returns the first emitted token.
+    pub fn prefill_slot(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        kv: &mut KvCache,
+        slot: usize,
+        prompt: &[i32],
+        packed: Option<&PackedHead>,
+    ) -> Result<i32> {
+        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
+        ensure!(!prompt.is_empty(), "empty prompt");
+        let d = self.cfg.d_model;
+        let w = prompt.len().min(kv.window);
+        kv.reset_slot(slot);
+        let tokens = Tensor::from_i32(&[1, w], prompt[prompt.len() - w..].to_vec());
+        let mut x = self.embed(store, &tokens)?;
+        for (l, kind) in plan.0.iter().enumerate() {
+            let params = self.layer_params(store, l, kind)?;
+            x = self.rt.backend().layer_prefill(&self.cfg, &params, &x, kv, l, slot)?;
+        }
+        kv.commit_prefill(slot, w);
+        let hidden =
+            Tensor::from_f32(&[1, 1, d], x.f32s()?[(w - 1) * d..w * d].to_vec());
+        let logits = self.head_rows(store, &hidden, packed)?;
+        Ok(argmax(&logits.f32s()?[..self.cfg.vocab]) as i32)
+    }
+
+    /// One fused decode step across the active slots: feed `last[r]`
+    /// (slot `slots[r]`'s most recent token) as an (n, 1) batch, run one
+    /// single-position layer pass per layer over all n rows at once,
+    /// advance the slots, and return each slot's next greedy token.
+    pub fn decode_step(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        kv: &mut KvCache,
+        slots: &[usize],
+        last: &[i32],
+        packed: Option<&PackedHead>,
+    ) -> Result<Vec<i32>> {
+        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
+        ensure!(slots.len() == last.len() && !slots.is_empty(), "one token per slot");
+        let (n, v) = (slots.len(), self.cfg.vocab);
+        let toks = Tensor::from_i32(&[n, 1], last.to_vec());
+        let mut x = self.embed(store, &toks)?;
+        for (l, kind) in plan.0.iter().enumerate() {
+            let params = self.layer_params(store, l, kind)?;
+            x = self.rt.backend().layer_decode_batch(&self.cfg, &params, &x, kv, l, slots)?;
+        }
+        kv.advance(slots);
+        let logits = self.head_rows(store, &x, packed)?;
+        let data = logits.f32s()?;
+        Ok((0..n).map(|r| argmax(&data[r * v..(r + 1) * v]) as i32).collect())
+    }
+
     /// Greedy decoding through the per-layer pipeline.
     ///
-    /// On backends with a KV-cache decode path (native), the prompt
-    /// window is prefilled once and each subsequent token is a single-
-    /// position layer pass against per-layer K/V buffers — token ids are
-    /// identical to the full-window recompute path (asserted in tests).
-    /// When a row's window fills, RoPE positions shift under the sliding
-    /// window and the remaining tokens fall back to full recompute, the
-    /// seed behavior. Fixed-shape backends (pjrt) and
-    /// `CURING_NO_KV_CACHE=1` always take the full-recompute path.
-    /// Returns `n_new` generated ids for each prompt row.
+    /// On backends with a KV-cache decode path (native) this is
+    /// streaming generation: each prompt is prefilled once into its own
+    /// ring-buffer KV lane, then every token is one fused single-
+    /// position layer pass across all rows. RoPE positions increase
+    /// monotonically and a full window rotates by overwriting the
+    /// oldest ring row — sliding-window attention over the last
+    /// `cfg.seq` tokens with **no recompute and no re-prefill**, ever.
+    /// Token ids are bit-identical to the cache-free replay reference
+    /// ([`Pipeline::generate_greedy_uncached`], asserted in tests),
+    /// which `CURING_NO_KV_CACHE=1` forces. Backends without a decode
+    /// path (fixed-shape pjrt artifacts) fall back to the windowed
+    /// full-recompute loop. Returns `n_new` generated ids per prompt.
     pub fn generate_greedy(
         &self,
         store: &TensorStore,
@@ -276,13 +370,62 @@ impl<'rt> Pipeline<'rt> {
         prompts: &[Vec<i32>],
         n_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        let use_kv = self.rt.backend().supports_kv_decode() && !kv_cache_disabled();
-        self.generate_greedy_impl(store, plan, prompts, n_new, use_kv)
+        if !self.rt.backend().supports_kv_decode() {
+            return self.generate_greedy_windowed(store, plan, prompts, n_new);
+        }
+        if kv_cache_disabled() {
+            return self.generate_greedy_uncached(store, plan, prompts, n_new);
+        }
+        self.decode_streaming(store, plan, prompts, n_new)
     }
 
-    /// The full-window recompute path (one pipeline pass over the whole
-    /// window per emitted token): the reference the KV-cached path is
-    /// tested against, and the `CURING_NO_KV_CACHE=1` behavior.
+    /// The fast path: per-slot prefill once, then lockstep fused decode.
+    fn decode_streaming(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        prompts: &[Vec<i32>],
+        n_new: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
+        ensure!(!prompts.is_empty(), "need at least one prompt");
+        let cfg = &self.cfg;
+        let n = prompts.len();
+        if n_new == 0 {
+            return Ok(vec![Vec::new(); n]);
+        }
+        let mut kv = KvCache::new(cfg.n_layers, n, cfg.seq, cfg.d_model);
+        let packed = self.pack_head(store)?;
+        let mut last = Vec::with_capacity(n);
+        for (slot, prompt) in prompts.iter().enumerate() {
+            last.push(self.prefill_slot(store, plan, &mut kv, slot, prompt, packed.as_ref())?);
+        }
+        let mut generated: Vec<Vec<i32>> = last.iter().map(|&t| vec![t]).collect();
+        let slots: Vec<usize> = (0..n).collect();
+        for _ in 1..n_new {
+            last = self.decode_step(store, plan, &mut kv, &slots, &last, packed.as_ref())?;
+            for (g, &t) in generated.iter_mut().zip(&last) {
+                g.push(t);
+            }
+        }
+        Ok(generated)
+    }
+
+    /// The cache-free reference of the same streaming semantics — the
+    /// parity oracle the fast path is tested against, and the
+    /// `CURING_NO_KV_CACHE=1` behavior.
+    ///
+    /// No state survives between emitted tokens: for every token the
+    /// slot's entire history is replayed from scratch, one position at
+    /// a time, through a fresh **never-wrapping linear** cache
+    /// (capacity = history length) with the same attention window. The
+    /// replay exercises none of the fast path's machinery — no ring
+    /// wrap-around, no fused multi-slot batching, no prompt-window
+    /// prefill, no incremental reuse — yet must reproduce its token
+    /// stream bit-for-bit, because every kernel produces identical rows
+    /// regardless of batch shape (see `backend::native::math`). On
+    /// backends without a decode path this falls back to the windowed
+    /// full-recompute loop.
     pub fn generate_greedy_uncached(
         &self,
         store: &TensorStore,
@@ -290,16 +433,63 @@ impl<'rt> Pipeline<'rt> {
         prompts: &[Vec<i32>],
         n_new: usize,
     ) -> Result<Vec<Vec<i32>>> {
-        self.generate_greedy_impl(store, plan, prompts, n_new, false)
+        if !self.rt.backend().supports_kv_decode() {
+            return self.generate_greedy_windowed(store, plan, prompts, n_new);
+        }
+        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
+        ensure!(!prompts.is_empty(), "need at least one prompt");
+        let cfg = &self.cfg;
+        let backend = self.rt.backend();
+        let window = cfg.seq;
+        let packed = self.pack_head(store)?;
+        let mut out = Vec::with_capacity(prompts.len());
+        for prompt in prompts {
+            ensure!(!prompt.is_empty(), "empty prompt");
+            // Entry truncation matches the fast path: only the last
+            // `window` prompt tokens ever enter the model.
+            let take = prompt.len().min(window);
+            let mut hist: Vec<i32> = prompt[prompt.len() - take..].to_vec();
+            let mut gen = Vec::with_capacity(n_new);
+            for _ in 0..n_new {
+                let cap = hist.len().max(window);
+                let mut kv =
+                    KvCache::with_capacity(cfg.n_layers, 1, window, cap, cfg.d_model);
+                let mut x_last = None;
+                for &tok in &hist {
+                    let toks = Tensor::from_i32(&[1, 1], vec![tok]);
+                    let mut x = self.embed(store, &toks)?;
+                    for (l, kind) in plan.0.iter().enumerate() {
+                        let params = self.layer_params(store, l, kind)?;
+                        x = backend
+                            .layer_decode_batch(cfg, &params, &x, &mut kv, l, &[0])?;
+                    }
+                    kv.advance(&[0]);
+                    x_last = Some(x);
+                }
+                let hidden = x_last.expect("non-empty history");
+                let logits = self.head_rows(store, &hidden, packed.as_ref())?;
+                let t = argmax(&logits.f32s()?[..cfg.vocab]) as i32;
+                gen.push(t);
+                hist.push(t);
+            }
+            out.push(gen);
+        }
+        Ok(out)
     }
 
-    fn generate_greedy_impl(
+    /// The seed full-window loop: one whole-window pipeline pass per
+    /// emitted token, windows left-padded to `cfg.seq`, RoPE positions
+    /// rebased on rotation. The only generation path available to
+    /// fixed-shape backends (pjrt AOT artifacts); identical to the
+    /// streaming path until the first rotation, after which the rebase
+    /// semantics diverge from the KV semantics (positions shift instead
+    /// of sliding) — documented, not hidden.
+    pub fn generate_greedy_windowed(
         &self,
         store: &TensorStore,
         plan: &LayerPlan,
         prompts: &[Vec<i32>],
         n_new: usize,
-        use_kv: bool,
     ) -> Result<Vec<Vec<i32>>> {
         ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
         let (s, v) = (self.cfg.seq, self.cfg.vocab);
@@ -319,13 +509,7 @@ impl<'rt> Pipeline<'rt> {
             lens.push(take);
         }
         let mut generated: Vec<Vec<i32>> = vec![Vec::new(); prompts.len()];
-        let mut remaining = n_new;
-        if use_kv && remaining > 0 {
-            let done =
-                self.decode_kv(store, plan, &mut windows, &mut lens, &mut generated, remaining)?;
-            remaining -= done;
-        }
-        for _ in 0..remaining {
+        for _ in 0..n_new {
             let flat: Vec<i32> = windows.iter().flatten().copied().collect();
             let tokens = Tensor::from_i32(&[b, s], flat);
             let logits = self.logits(store, plan, &tokens)?;
@@ -345,110 +529,6 @@ impl<'rt> Pipeline<'rt> {
             }
         }
         Ok(generated)
-    }
-
-    /// KV-cached greedy decode: prefill the current windows once, then
-    /// emit tokens with single-position layer passes. Emits at most
-    /// `n_new` tokens; stops early (returning the emitted count, windows
-    /// and lengths seed-consistent) when any row's window fills and the
-    /// sliding-window rotation invalidates the cached positions.
-    fn decode_kv(
-        &self,
-        store: &TensorStore,
-        plan: &LayerPlan,
-        windows: &mut [Vec<i32>],
-        lens: &mut [usize],
-        generated: &mut [Vec<i32>],
-        n_new: usize,
-    ) -> Result<usize> {
-        let backend = self.rt.backend();
-        let cfg = &self.cfg;
-        let (b, s, v, d) = (windows.len(), cfg.seq, cfg.vocab, cfg.d_model);
-        let n_real = generated.len();
-        let mut kv = KvCache::new(cfg.n_layers, b, s, d);
-        // Prefill: one full-window inference pass seeding every layer's
-        // K/V, then the head over just each row's last real position.
-        let flat: Vec<i32> = windows.iter().flatten().copied().collect();
-        let tokens = Tensor::from_i32(&[b, s], flat);
-        let mut x = self.embed(store, &tokens)?;
-        for (l, kind) in plan.0.iter().enumerate() {
-            let params = self.layer_params(store, l, kind)?;
-            x = backend.layer_prefill(cfg, &params, &x, &mut kv, l)?;
-        }
-        let xs = x.f32s()?;
-        let mut rows = vec![0.0f32; b * d];
-        for i in 0..b {
-            let p = lens[i] - 1;
-            rows[i * d..(i + 1) * d].copy_from_slice(&xs[(i * s + p) * d..(i * s + p + 1) * d]);
-        }
-        let hidden = Tensor::from_f32(&[b, 1, d], rows);
-        let logits =
-            backend.head_logits(cfg, &hidden, store.get("ln_f")?, store.get("emb")?)?;
-        // `last[i]` is the most recent token of row i, pending append;
-        // pad rows (fixed-shape batches) mirror the last real row.
-        let mut last = vec![0i32; b];
-        {
-            let data = logits.f32s()?;
-            for i in 0..b {
-                let t = argmax(&data[i * v..(i + 1) * v]) as i32;
-                if i < n_real {
-                    generated[i].push(t);
-                    last[i] = t;
-                } else {
-                    last[i] = last[n_real - 1];
-                }
-            }
-        }
-        let mut emitted = 1usize;
-        while emitted < n_new {
-            if lens.iter().any(|&l| l >= s) {
-                // A full window would rotate: append/slide seed-style and
-                // hand the rest to the full-recompute loop.
-                Self::append_or_slide(windows, lens, &last, s);
-                return Ok(emitted);
-            }
-            let mut pos = vec![0usize; b];
-            for i in 0..b {
-                windows[i][lens[i]] = last[i];
-                pos[i] = lens[i];
-                lens[i] += 1;
-            }
-            let toks = Tensor::from_i32(&[b, 1], last.clone());
-            let mut x = self.embed(store, &toks)?;
-            for (l, kind) in plan.0.iter().enumerate() {
-                let params = self.layer_params(store, l, kind)?;
-                x = backend.layer_decode(cfg, &params, &x, &mut kv, l, &pos)?;
-            }
-            let logits =
-                backend.head_logits(cfg, &x, store.get("ln_f")?, store.get("emb")?)?;
-            let data = logits.f32s()?;
-            for i in 0..b {
-                let t = argmax(&data[i * v..(i + 1) * v]) as i32;
-                if i < n_real {
-                    generated[i].push(t);
-                    last[i] = t;
-                } else {
-                    last[i] = last[n_real - 1];
-                }
-            }
-            emitted += 1;
-        }
-        // Append the final emission so the window state stays consistent
-        // with the recompute path (harmless if generation is done).
-        Self::append_or_slide(windows, lens, &last, s);
-        Ok(emitted)
-    }
-
-    fn append_or_slide(windows: &mut [Vec<i32>], lens: &mut [usize], last: &[i32], s: usize) {
-        for i in 0..windows.len() {
-            if lens[i] < s {
-                windows[i][lens[i]] = last[i];
-                lens[i] += 1;
-            } else {
-                windows[i].rotate_left(1);
-                windows[i][s - 1] = last[i];
-            }
-        }
     }
 
     /// Teacher-forced per-layer forward used for layer-wise KD: returns

@@ -1,162 +1,461 @@
-//! Threaded batching evaluation server.
+//! Continuous-batching model server.
 //!
-//! A vLLM-router-style front for the compressed/original model variants:
-//! client threads submit single-sequence scoring requests; the server
-//! (which owns the runtime — backend handles are not `Send` (PJRT's xla
-//! handles, the native backend's op counter), so the server runs on the
-//! *calling* thread and clients are spawned) groups them into
-//! model-batch-sized backend calls with a wait-time cap, and reports
-//! latency/throughput/occupancy statistics. The native backend fans each
-//! batched matmul across cores, so batching still buys throughput.
+//! A vLLM-style front for the compressed/original model variants with
+//! two request kinds on one queue:
+//!
+//! * **Score** — classic batched evaluation: full sequences are grouped
+//!   into model-batch-sized NLL calls with a wait-time cap. On backends
+//!   that accept variable shapes (native) a partial batch is submitted
+//!   at its true occupancy — no pad rows, no wasted compute; fixed-shape
+//!   backends (pjrt) still pad and the waste is reported.
+//! * **Generate** — greedy decoding over per-request KV-cache slots with
+//!   **continuous batching**: a new request is admitted into any free
+//!   slot mid-flight (one prefill, ever — the ring buffer rotates the
+//!   sliding window with no recompute), every decode step is one fused
+//!   single-position layer pass across all active slots
+//!   ([`crate::backend::Backend::layer_decode_batch`]), the LM head runs
+//!   against a pre-packed weight buffer, and each slot retires
+//!   independently the moment its request completes.
+//!
+//! Backend handles are not `Send` (PJRT's xla handles, the native op
+//! counter), so the server runs on the *calling* thread and clients are
+//! spawned. The server exits when the request channel disconnects and
+//! all queued work has drained — drop the last `Sender` to stop it.
 
+use crate::backend::{Backend, KvCache, PackedHead};
 use crate::data::{Corpus, CorpusKind, Vocab};
 use crate::pipeline::{LayerPlan, Pipeline};
 use crate::tensor::{Tensor, TensorStore};
 use crate::util::stats::percentile;
 use anyhow::Result;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// One scoring request: a full sequence (tokens + next-token targets).
-pub struct Request {
+pub struct ScoreRequest {
     pub tokens: Vec<i32>,
     pub targets: Vec<i32>,
     pub enqueued: Instant,
-    pub respond: Sender<Response>,
+    pub respond: Sender<ScoreResponse>,
 }
 
 #[derive(Debug, Clone)]
-pub struct Response {
+pub struct ScoreResponse {
     pub mean_nll: f64,
     pub latency_ms: f64,
+    /// `Some` when the request was malformed (e.g. wrong sequence
+    /// length); `mean_nll` is NaN then. The server keeps serving.
+    pub error: Option<String>,
+}
+
+/// One generation request: a prompt to continue by `n_new` greedy
+/// tokens. Token ids are identical to a standalone
+/// [`Pipeline::generate_greedy`] / `generate_greedy_uncached` run on the
+/// same prompt, regardless of what else shares the batch (tested).
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub n_new: usize,
+    pub enqueued: Instant,
+    pub respond: Sender<GenResponse>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub tokens: Vec<i32>,
+    pub latency_ms: f64,
+    /// `Some` when the server could not decode this request (e.g. a
+    /// scoring-only backend); `tokens` is empty then. The server keeps
+    /// serving other traffic either way.
+    pub error: Option<String>,
+}
+
+/// A request on the server's single intake queue.
+pub enum Request {
+    Score(ScoreRequest),
+    Generate(GenRequest),
 }
 
 /// Server-side metrics over one run.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Scoring requests answered.
     pub served: usize,
     pub batches: usize,
     pub mean_batch_occupancy: f64,
     /// Rows scored only to pad partial batches to the model batch size —
-    /// wasted compute the occupancy numbers must own up to.
+    /// wasted compute the occupancy numbers must own up to. Always 0 on
+    /// variable-shape backends (native), which submit true occupancy.
     pub padded_rows: usize,
     pub p50_latency_ms: f64,
     pub p95_latency_ms: f64,
     pub throughput_seq_per_s: f64,
+    /// Generation requests completed.
+    pub gen_served: usize,
+    /// Prompt prefills run — exactly one per admitted generation
+    /// request, even when decoding runs far past the window-rotation
+    /// boundary (the ring buffer never re-prefills).
+    pub prefills: usize,
+    pub tokens_generated: usize,
+    /// Fused decode steps executed (each covers all active slots).
+    pub decode_steps: usize,
+    /// Mean number of active slots per decode step (slot occupancy).
+    pub mean_active_slots: f64,
+    pub tokens_per_s: f64,
+    /// Per-token latency percentiles as a client observes them: the
+    /// prefill duration for a request's first token, then the
+    /// wall-clock gap between consecutive emissions — which includes
+    /// any scoring batches or admissions interleaved between decode
+    /// steps, not just the decode compute.
+    pub tok_p50_ms: f64,
+    pub tok_p95_ms: f64,
     pub wall_s: f64,
 }
 
-pub struct BatchingServer<'p> {
+/// One in-flight generation: the request plus its decode state. The
+/// KV-cache slot index is the position in the server's slot table.
+struct GenSlot {
+    req: GenRequest,
+    generated: Vec<i32>,
+    last: i32,
+    /// When this slot last emitted a token (per-token latency base).
+    last_emit: Instant,
+}
+
+/// The server. `slots` bounds concurrent generations (the KV-cache
+/// footprint: `n_layers × 2 × slots·seq·d_model × 4` bytes); scoring
+/// batches are bounded by the model config's batch size.
+pub struct GenerationServer<'p> {
     pub pipe: &'p Pipeline<'p>,
     pub store: &'p TensorStore,
     pub plan: LayerPlan,
-    /// Max time to wait for a full batch before flushing a partial one.
+    /// Max time to wait before flushing a partial scoring batch.
     pub max_wait: Duration,
+    /// Concurrent generation slots.
+    pub slots: usize,
 }
 
-impl<'p> BatchingServer<'p> {
-    /// Serve until `n_expected` requests have been answered (or the
-    /// channel closes). Runs on the calling thread.
-    pub fn run(&self, rx: Receiver<Request>, n_expected: usize) -> Result<ServeStats> {
+/// The scoring server is one mode of the generation server (send only
+/// [`Request::Score`]); the old name stays for that use.
+pub type BatchingServer<'p> = GenerationServer<'p>;
+
+impl<'p> GenerationServer<'p> {
+    /// Serve until the request channel disconnects and all accepted
+    /// work has drained. Runs on the calling thread.
+    pub fn run(&self, rx: Receiver<Request>) -> Result<ServeStats> {
         let cfg = &self.pipe.cfg;
-        let (b, s) = (cfg.batch, cfg.seq);
-        let mut latencies = Vec::new();
+        let n_slots = self.slots.max(1);
         let mut stats = ServeStats::default();
+        let mut score_lat: Vec<f64> = Vec::new();
+        let mut tok_lat: Vec<f64> = Vec::new();
+        let mut slot_steps = 0usize;
         let t0 = Instant::now();
-        let mut pending: Vec<Request> = Vec::new();
-        while stats.served < n_expected {
-            // Fill a batch (bounded wait).
-            let deadline = Instant::now() + self.max_wait;
-            while pending.len() < b {
-                let now = Instant::now();
-                if now >= deadline && !pending.is_empty() {
-                    break;
-                }
-                let timeout = deadline.saturating_duration_since(now).max(Duration::from_millis(1));
-                match rx.recv_timeout(timeout) {
-                    Ok(req) => pending.push(req),
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                        if !pending.is_empty() {
-                            break;
-                        }
-                        if stats.served >= n_expected {
-                            break;
-                        }
-                    }
-                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        let mut pending: Vec<ScoreRequest> = Vec::new();
+        let mut queue: VecDeque<GenRequest> = VecDeque::new();
+        let mut active: Vec<Option<GenSlot>> = (0..n_slots).map(|_| None).collect();
+        let mut n_active = 0usize;
+        // Generation state, built lazily on the first Generate request.
+        let mut kv: Option<KvCache> = None;
+        let mut packed: Option<PackedHead> = None;
+        let mut disconnected = false;
+        loop {
+            // ---- intake. Block only as long as no work would stall:
+            // not at all while decode slots are active or admissions/
+            // flushes are due, until the oldest score's deadline while a
+            // partial batch ages, for max_wait when fully idle.
+            let block = if n_active > 0
+                || !queue.is_empty()
+                || disconnected
+                || pending.len() >= cfg.batch
+            {
+                Duration::ZERO
+            } else if let Some(r) = pending.first() {
+                self.max_wait.saturating_sub(r.enqueued.elapsed())
+            } else {
+                self.max_wait
+            };
+            if block > Duration::ZERO {
+                match rx.recv_timeout(block) {
+                    Ok(r) => Self::enqueue(r, &mut pending, &mut queue),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => disconnected = true,
                 }
             }
-            if pending.is_empty() {
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => Self::enqueue(r, &mut pending, &mut queue),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            if disconnected && n_active == 0 && pending.is_empty() && queue.is_empty() {
                 break;
             }
-            let occupancy = pending.len().min(b);
-            // Pad a partial batch by repeating the last pending request;
-            // pad rows are counted as waste and never extracted below.
-            let mut toks = Vec::with_capacity(b * s);
-            let mut tgts = Vec::with_capacity(b * s);
-            for i in 0..b {
-                let r = &pending[i.min(pending.len() - 1)];
-                toks.extend_from_slice(&r.tokens);
-                tgts.extend_from_slice(&r.targets);
+            // ---- admit generation requests into free slots, mid-flight.
+            while n_active < n_slots && !queue.is_empty() {
+                let req = queue.pop_front().expect("non-empty queue");
+                if req.n_new == 0 {
+                    // Zero tokens requested: trivially complete.
+                    let _ = req.respond.send(GenResponse {
+                        tokens: Vec::new(),
+                        latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: None,
+                    });
+                    stats.gen_served += 1;
+                    continue;
+                }
+                if req.prompt.is_empty() {
+                    // Invalid, not empty-success: there is nothing to
+                    // condition on (every pipeline entry point rejects
+                    // an empty prompt too).
+                    let _ = req.respond.send(GenResponse {
+                        tokens: Vec::new(),
+                        latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: Some("empty prompt".to_string()),
+                    });
+                    stats.gen_served += 1;
+                    continue;
+                }
+                // A scoring-only backend answers generation requests
+                // with an error instead of aborting the server — other
+                // traffic (and already-admitted work) keeps flowing.
+                if kv.is_none() && !self.pipe.rt.backend().supports_kv_decode() {
+                    let _ = req.respond.send(GenResponse {
+                        tokens: Vec::new(),
+                        latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: Some(format!(
+                            "generation needs a KV-decode backend \
+                             (backend '{}' is scoring-only)",
+                            self.pipe.rt.backend().name()
+                        )),
+                    });
+                    stats.gen_served += 1;
+                    continue;
+                }
+                if kv.is_none() {
+                    kv = Some(KvCache::new(cfg.n_layers, n_slots, cfg.seq, cfg.d_model));
+                    packed = self.pipe.pack_head(self.store)?;
+                }
+                let slot = active.iter().position(|s| s.is_none()).expect("free slot");
+                let kvm = kv.as_mut().expect("kv cache");
+                let tp = Instant::now();
+                // A bad request (e.g. out-of-vocab prompt token) is
+                // answered with an error, not allowed to take down the
+                // server and every other in-flight request with it.
+                let first = match self.pipe.prefill_slot(
+                    self.store,
+                    &self.plan,
+                    kvm,
+                    slot,
+                    &req.prompt,
+                    packed.as_ref(),
+                ) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        let _ = req.respond.send(GenResponse {
+                            tokens: Vec::new(),
+                            latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+                            error: Some(format!("{e:#}")),
+                        });
+                        stats.gen_served += 1;
+                        continue;
+                    }
+                };
+                stats.prefills += 1;
+                stats.tokens_generated += 1;
+                tok_lat.push(tp.elapsed().as_secs_f64() * 1e3);
+                let gs = GenSlot {
+                    req,
+                    generated: vec![first],
+                    last: first,
+                    last_emit: Instant::now(),
+                };
+                if gs.generated.len() >= gs.req.n_new {
+                    Self::retire(gs, &mut stats);
+                } else {
+                    active[slot] = Some(gs);
+                    n_active += 1;
+                }
             }
-            let tokens = Tensor::from_i32(&[b, s], toks);
-            let targets = Tensor::from_i32(&[b, s], tgts);
-            let nll = self.pipe.nll(self.store, &self.plan, &tokens, &targets)?;
-            let nll_data = nll.f32s()?;
-            // Response extraction touches only the real rows; rows
-            // occupancy..b were pad duplicates.
-            for (i, req) in pending.drain(..).take(occupancy).enumerate() {
-                let row = &nll_data[i * s..(i + 1) * s];
-                let mean = row.iter().map(|&x| x as f64).sum::<f64>() / s as f64;
-                let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-                latencies.push(latency_ms);
-                let _ = req.respond.send(Response { mean_nll: mean, latency_ms });
-                stats.served += 1;
+            // ---- flush a scoring batch when full, aged, or input done.
+            let flush = !pending.is_empty()
+                && (pending.len() >= cfg.batch
+                    || disconnected
+                    || pending[0].enqueued.elapsed() >= self.max_wait);
+            if flush {
+                self.score_batch(&mut pending, &mut stats, &mut score_lat)?;
             }
-            stats.batches += 1;
-            stats.mean_batch_occupancy += occupancy as f64;
-            stats.padded_rows += b - occupancy;
+            // ---- one fused decode step across all active slots.
+            if n_active > 0 {
+                let kvm = kv.as_mut().expect("kv cache");
+                let mut slot_ids = Vec::with_capacity(n_active);
+                let mut last = Vec::with_capacity(n_active);
+                for (i, s) in active.iter().enumerate() {
+                    if let Some(gs) = s {
+                        slot_ids.push(i);
+                        last.push(gs.last);
+                    }
+                }
+                let next = self.pipe.decode_step(
+                    self.store,
+                    &self.plan,
+                    kvm,
+                    &slot_ids,
+                    &last,
+                    packed.as_ref(),
+                )?;
+                let now = Instant::now();
+                stats.decode_steps += 1;
+                slot_steps += slot_ids.len();
+                for (&slot, &tok) in slot_ids.iter().zip(&next) {
+                    let done = {
+                        let gs = active[slot].as_mut().expect("active slot");
+                        gs.generated.push(tok);
+                        gs.last = tok;
+                        // What the client sees between two tokens: the
+                        // decode step plus anything interleaved since
+                        // this slot's previous emission (scoring
+                        // batches, admissions of other requests).
+                        tok_lat.push(now.duration_since(gs.last_emit).as_secs_f64() * 1e3);
+                        gs.last_emit = now;
+                        gs.generated.len() >= gs.req.n_new
+                    };
+                    stats.tokens_generated += 1;
+                    if done {
+                        let gs = active[slot].take().expect("active slot");
+                        n_active -= 1;
+                        Self::retire(gs, &mut stats);
+                    }
+                }
+            }
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         if stats.batches > 0 {
             stats.mean_batch_occupancy /= stats.batches as f64;
         }
-        stats.p50_latency_ms = percentile(&latencies, 50.0);
-        stats.p95_latency_ms = percentile(&latencies, 95.0);
+        if stats.decode_steps > 0 {
+            stats.mean_active_slots = slot_steps as f64 / stats.decode_steps as f64;
+        }
+        stats.p50_latency_ms = percentile(&score_lat, 50.0);
+        stats.p95_latency_ms = percentile(&score_lat, 95.0);
+        stats.tok_p50_ms = percentile(&tok_lat, 50.0);
+        stats.tok_p95_ms = percentile(&tok_lat, 95.0);
         stats.throughput_seq_per_s = stats.served as f64 / stats.wall_s.max(1e-9);
+        stats.tokens_per_s = stats.tokens_generated as f64 / stats.wall_s.max(1e-9);
         Ok(stats)
+    }
+
+    fn enqueue(r: Request, pending: &mut Vec<ScoreRequest>, queue: &mut VecDeque<GenRequest>) {
+        match r {
+            Request::Score(s) => pending.push(s),
+            Request::Generate(g) => queue.push_back(g),
+        }
+    }
+
+    fn retire(gs: GenSlot, stats: &mut ServeStats) {
+        let latency_ms = gs.req.enqueued.elapsed().as_secs_f64() * 1e3;
+        let _ = gs
+            .req
+            .respond
+            .send(GenResponse { tokens: gs.generated, latency_ms, error: None });
+        stats.gen_served += 1;
+    }
+
+    /// Score one batch off the pending queue. Variable-shape backends
+    /// (native) run exactly the occupied rows; fixed-shape backends pad
+    /// by repeating the last request and the waste is accounted.
+    fn score_batch(
+        &self,
+        pending: &mut Vec<ScoreRequest>,
+        stats: &mut ServeStats,
+        latencies: &mut Vec<f64>,
+    ) -> Result<()> {
+        let cfg = &self.pipe.cfg;
+        let (b, s) = (cfg.batch, cfg.seq);
+        // Answer malformed requests individually (wrong sequence
+        // length would panic Tensor::from_i32 below and take the whole
+        // server down with it).
+        pending.retain(|r| {
+            let ok = r.tokens.len() == s && r.targets.len() == s;
+            if !ok {
+                let _ = r.respond.send(ScoreResponse {
+                    mean_nll: f64::NAN,
+                    latency_ms: r.enqueued.elapsed().as_secs_f64() * 1e3,
+                    error: Some(format!(
+                        "scoring needs tokens/targets of length {s}, got {}/{}",
+                        r.tokens.len(),
+                        r.targets.len()
+                    )),
+                });
+            }
+            ok
+        });
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let occupancy = pending.len().min(b);
+        let rows = if self.pipe.rt.backend().fixed_shape() { b } else { occupancy };
+        let mut toks = Vec::with_capacity(rows * s);
+        let mut tgts = Vec::with_capacity(rows * s);
+        for i in 0..rows {
+            let r = &pending[i.min(occupancy - 1)];
+            toks.extend_from_slice(&r.tokens);
+            tgts.extend_from_slice(&r.targets);
+        }
+        let tokens = Tensor::from_i32(&[rows, s], toks);
+        let targets = Tensor::from_i32(&[rows, s], tgts);
+        let nll = self.pipe.nll(self.store, &self.plan, &tokens, &targets)?;
+        let nll_data = nll.f32s()?;
+        for (i, req) in pending.drain(..occupancy).enumerate() {
+            let row = &nll_data[i * s..(i + 1) * s];
+            let mean = row.iter().map(|&x| x as f64).sum::<f64>() / s as f64;
+            let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            latencies.push(latency_ms);
+            let _ = req
+                .respond
+                .send(ScoreResponse { mean_nll: mean, latency_ms, error: None });
+            stats.served += 1;
+        }
+        stats.batches += 1;
+        stats.mean_batch_occupancy += occupancy as f64;
+        stats.padded_rows += rows - occupancy;
+        Ok(())
     }
 }
 
-/// Spawn `n_clients` threads each submitting `per_client` corpus-drawn
-/// requests with `think_ms` spacing; returns the request receiver plus
-/// the response receivers (client threads detach and exit on their own).
-pub fn spawn_clients(
+/// Shared client-thread scaffold: `n_clients` detached threads, each
+/// with its own corpus stream seeded `seed_base + client`, submitting
+/// `per_client` requests built by `build` through `tx` with `think_ms`
+/// spacing. Returns the per-client response receivers (client threads
+/// detach and exit, and their `Sender` clones drop with them).
+fn spawn_request_clients<R, F>(
+    tx: &Sender<Request>,
     vocab: &Vocab,
     kind: CorpusKind,
-    seq: usize,
+    seed_base: u64,
     n_clients: usize,
     per_client: usize,
     think_ms: u64,
-) -> (Receiver<Request>, Vec<Receiver<Response>>) {
-    let (tx, rx) = channel::<Request>();
+    build: F,
+) -> Vec<Receiver<R>>
+where
+    R: Send + 'static,
+    F: Fn(&mut Corpus, &Vocab, Sender<R>) -> Request + Clone + Send + 'static,
+{
     let mut resp_rxs = Vec::new();
     for c in 0..n_clients {
-        let (rtx, rrx) = channel::<Response>();
+        let (rtx, rrx) = channel::<R>();
         resp_rxs.push(rrx);
         let tx = tx.clone();
         let vocab = vocab.clone();
+        let build = build.clone();
         std::thread::spawn(move || {
-            let mut corpus = Corpus::new(kind, 9000 + c as u64);
+            let mut corpus = Corpus::new(kind, seed_base + c as u64);
             for _ in 0..per_client {
-                let s = corpus.sequence(&vocab, seq + 1);
-                let req = Request {
-                    tokens: s[..seq].to_vec(),
-                    targets: s[1..seq + 1].to_vec(),
-                    enqueued: Instant::now(),
-                    respond: rtx.clone(),
-                };
-                if tx.send(req).is_err() {
+                if tx.send(build(&mut corpus, &vocab, rtx.clone())).is_err() {
                     return;
                 }
                 if think_ms > 0 {
@@ -165,34 +464,109 @@ pub fn spawn_clients(
             }
         });
     }
+    resp_rxs
+}
+
+/// Spawn `n_clients` threads each submitting `per_client` corpus-drawn
+/// scoring requests through `tx` with `think_ms` spacing.
+pub fn spawn_score_clients(
+    tx: &Sender<Request>,
+    vocab: &Vocab,
+    kind: CorpusKind,
+    seq: usize,
+    n_clients: usize,
+    per_client: usize,
+    think_ms: u64,
+) -> Vec<Receiver<ScoreResponse>> {
+    spawn_request_clients(tx, vocab, kind, 9000, n_clients, per_client, think_ms, move |corpus, vocab, respond| {
+        let s = corpus.sequence(vocab, seq + 1);
+        Request::Score(ScoreRequest {
+            tokens: s[..seq].to_vec(),
+            targets: s[1..seq + 1].to_vec(),
+            enqueued: Instant::now(),
+            respond,
+        })
+    })
+}
+
+/// Spawn `n_clients` threads each submitting `per_client` generation
+/// requests (`prompt_len` corpus tokens, `n_new` tokens to decode).
+pub fn spawn_gen_clients(
+    tx: &Sender<Request>,
+    vocab: &Vocab,
+    kind: CorpusKind,
+    prompt_len: usize,
+    n_new: usize,
+    n_clients: usize,
+    per_client: usize,
+    think_ms: u64,
+) -> Vec<Receiver<GenResponse>> {
+    spawn_request_clients(tx, vocab, kind, 7000, n_clients, per_client, think_ms, move |corpus, vocab, respond| {
+        Request::Generate(GenRequest {
+            prompt: corpus.sequence(vocab, prompt_len),
+            n_new,
+            enqueued: Instant::now(),
+            respond,
+        })
+    })
+}
+
+/// Scoring-only convenience: a fresh channel with `n_clients` scoring
+/// clients on it. The originating `Sender` is dropped before returning,
+/// so the receiver disconnects — and the server exits — exactly when
+/// the last client thread finishes.
+pub fn spawn_clients(
+    vocab: &Vocab,
+    kind: CorpusKind,
+    seq: usize,
+    n_clients: usize,
+    per_client: usize,
+    think_ms: u64,
+) -> (Receiver<Request>, Vec<Receiver<ScoreResponse>>) {
+    let (tx, rx) = channel::<Request>();
+    let resp_rxs = spawn_score_clients(&tx, vocab, kind, seq, n_clients, per_client, think_ms);
+    drop(tx);
     (rx, resp_rxs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::Pipeline;
 
-    #[test]
-    fn server_reports_pad_waste() {
+    fn mini_setup() -> (crate::runtime::Runtime, crate::model::ModelConfig, TensorStore) {
         let rt = crate::runtime::Runtime::native();
         let cfg = crate::model::ModelConfig::from_manifest(rt.manifest(), "mini").unwrap();
         let mut rng = crate::util::Rng::new(31, 0);
         let store = cfg.init_dense(&mut rng);
+        (rt, cfg, store)
+    }
+
+    #[test]
+    fn native_scoring_submits_true_occupancy() {
+        // 3 requests on batch=2: the native backend accepts variable
+        // shapes, so the odd request runs as a 1-row batch — zero pad
+        // rows — and the server exits on client disconnect without
+        // being told an expected count.
+        let (rt, cfg, store) = mini_setup();
         let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
         let vocab = Vocab::build();
-        let (rx, _resps) = spawn_clients(&vocab, CorpusKind::SynthC4, cfg.seq, 3, 1, 0);
-        let server = BatchingServer {
+        let (rx, resps) = spawn_clients(&vocab, CorpusKind::SynthC4, cfg.seq, 3, 1, 0);
+        let server = GenerationServer {
             pipe: &pipe,
             store: &store,
             plan: LayerPlan::all_dense(&cfg),
             max_wait: Duration::from_millis(20),
+            slots: 1,
         };
-        let stats = server.run(rx, 3).unwrap();
+        let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, 3);
-        // Every batch is cfg.batch rows; whatever was not a real request
-        // was a pad duplicate and must be reported as waste.
-        assert_eq!(stats.padded_rows, stats.batches * cfg.batch - stats.served);
-        assert!(stats.padded_rows >= 1, "3 requests on batch=2 must pad at least one row");
+        assert_eq!(stats.padded_rows, 0, "variable-shape backend must not pad");
+        assert!(stats.batches >= 2, "3 requests cannot fit one batch of {}", cfg.batch);
+        for r in resps {
+            let resp = r.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(resp.mean_nll.is_finite());
+        }
     }
 
     #[test]
@@ -200,14 +574,275 @@ mod tests {
         let vocab = Vocab::build();
         let (rx, _resp) = spawn_clients(&vocab, CorpusKind::SynthC4, 16, 2, 3, 0);
         let mut n = 0;
+        // The channel disconnects by itself once both clients finish —
+        // iteration ends without a count or a timeout race.
         while let Ok(req) = rx.recv_timeout(Duration::from_secs(5)) {
+            let Request::Score(req) = req else { panic!("scoring clients sent gen") };
             assert_eq!(req.tokens.len(), 16);
             assert_eq!(req.targets.len(), 16);
             n += 1;
-            if n == 6 {
-                break;
-            }
         }
         assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn continuous_batching_matches_uncached_reference() {
+        // Five requests with ragged prompts onto three slots, decoding
+        // well past the window-rotation boundary (prompt + n_new >
+        // seq): every response must be token-identical to a standalone
+        // cache-free reference run of its own prompt, each request must
+        // have been prefilled exactly once (rotation never re-prefills),
+        // and the slots must actually have overlapped.
+        let (rt, cfg, store) = mini_setup();
+        let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+        let plan = LayerPlan::all_dense(&cfg);
+        let n_new = cfg.seq + 4;
+        let prompts: Vec<Vec<i32>> = vec![
+            vec![1, 5, 9],
+            vec![2, 3, 4, 7, 8],
+            vec![1, 2],
+            vec![9, 8, 7, 6, 5, 4, 3],
+            vec![1, 30, 60],
+        ];
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        let mut resp_rxs = Vec::new();
+        for p in &prompts {
+            let (rtx, rrx) = std::sync::mpsc::channel::<GenResponse>();
+            resp_rxs.push(rrx);
+            tx.send(Request::Generate(GenRequest {
+                prompt: p.clone(),
+                n_new,
+                enqueued: Instant::now(),
+                respond: rtx,
+            }))
+            .unwrap();
+        }
+        drop(tx);
+        let server = GenerationServer {
+            pipe: &pipe,
+            store: &store,
+            plan: plan.clone(),
+            max_wait: Duration::from_millis(10),
+            slots: 3,
+        };
+        let stats = server.run(rx).unwrap();
+        assert_eq!(stats.gen_served, prompts.len());
+        assert_eq!(stats.prefills, prompts.len(), "exactly one prefill per request");
+        assert_eq!(stats.tokens_generated, prompts.len() * n_new);
+        assert!(
+            stats.mean_active_slots > 1.0,
+            "slots never overlapped (mean {})",
+            stats.mean_active_slots
+        );
+        for (p, rrx) in prompts.iter().zip(resp_rxs) {
+            let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let want = pipe
+                .generate_greedy_uncached(&store, &plan, &[p.clone()], n_new)
+                .unwrap();
+            assert_eq!(resp.tokens, want[0], "continuous batching diverged for {p:?}");
+            assert!(resp.latency_ms >= 0.0);
+        }
+    }
+
+    /// Native math behind the trait's *defaults*: `fixed_shape` stays
+    /// true and `supports_kv_decode` stays false, standing in for an
+    /// AOT artifact backend — drives the pad branch of `score_batch`
+    /// and the scoring-only generation error path, which CI otherwise
+    /// never exercises against the server.
+    struct FixedShapeNative(crate::backend::native::NativeBackend);
+
+    impl crate::backend::Backend for FixedShapeNative {
+        fn name(&self) -> &'static str {
+            "fixed-native"
+        }
+        fn manifest(&self) -> &crate::util::Json {
+            self.0.manifest()
+        }
+        fn exec_count(&self) -> u64 {
+            self.0.exec_count()
+        }
+        fn embed(
+            &self,
+            cfg: &crate::model::ModelConfig,
+            emb: &Tensor,
+            tokens: &Tensor,
+        ) -> anyhow::Result<Tensor> {
+            self.0.embed(cfg, emb, tokens)
+        }
+        fn layer_forward(
+            &self,
+            cfg: &crate::model::ModelConfig,
+            p: &crate::backend::LayerParams,
+            x: &Tensor,
+        ) -> anyhow::Result<Tensor> {
+            self.0.layer_forward(cfg, p, x)
+        }
+        fn layer_forward_calib(
+            &self,
+            cfg: &crate::model::ModelConfig,
+            p: &crate::backend::LayerParams,
+            x: &Tensor,
+        ) -> anyhow::Result<crate::backend::CalibOut> {
+            self.0.layer_forward_calib(cfg, p, x)
+        }
+        fn head_logits(
+            &self,
+            cfg: &crate::model::ModelConfig,
+            x: &Tensor,
+            ln_f: &Tensor,
+            emb: &Tensor,
+        ) -> anyhow::Result<Tensor> {
+            self.0.head_logits(cfg, x, ln_f, emb)
+        }
+        fn head_nll(
+            &self,
+            cfg: &crate::model::ModelConfig,
+            x: &Tensor,
+            ln_f: &Tensor,
+            emb: &Tensor,
+            targets: &Tensor,
+        ) -> anyhow::Result<Tensor> {
+            self.0.head_nll(cfg, x, ln_f, emb, targets)
+        }
+        fn train_step(
+            &self,
+            cfg: &crate::model::ModelConfig,
+            store: &mut TensorStore,
+            opt: &mut TensorStore,
+            tokens: &Tensor,
+            targets: &Tensor,
+            lr: f32,
+            t: f32,
+        ) -> anyhow::Result<f64> {
+            self.0.train_step(cfg, store, opt, tokens, targets, lr, t)
+        }
+        fn heal_step(
+            &self,
+            cfg: &crate::model::ModelConfig,
+            student: &mut TensorStore,
+            opt: &mut TensorStore,
+            layer: usize,
+            x: &Tensor,
+            y_teacher: &Tensor,
+            lr: f32,
+            t: f32,
+        ) -> anyhow::Result<crate::backend::HealOut> {
+            self.0.heal_step(cfg, student, opt, layer, x, y_teacher, lr, t)
+        }
+    }
+
+    #[test]
+    fn fixed_shape_backend_pads_and_rejects_generation() {
+        // Fixed-shape scoring must pad partial batches (and own up to
+        // the waste), extract only real rows — each response's NLL
+        // equals an independent native run of that sequence — and a
+        // Generate request must come back as an error response, not a
+        // server abort.
+        let rt = crate::runtime::Runtime::from_backend(Box::new(FixedShapeNative(
+            crate::backend::native::NativeBackend::new(),
+        )));
+        let cfg = crate::model::ModelConfig::from_manifest(rt.manifest(), "mini").unwrap();
+        let mut rng = crate::util::Rng::new(31, 0);
+        let store = cfg.init_dense(&mut rng);
+        let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+        let vocab = Vocab::build();
+        let mut corpus = Corpus::new(CorpusKind::SynthC4, 500);
+        let n_req = 3usize; // odd on batch=2: forces one pad row
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        let mut seqs = Vec::new();
+        let mut score_rxs = Vec::new();
+        for _ in 0..n_req {
+            let s = corpus.sequence(&vocab, cfg.seq + 1);
+            let (rtx, rrx) = std::sync::mpsc::channel::<ScoreResponse>();
+            tx.send(Request::Score(ScoreRequest {
+                tokens: s[..cfg.seq].to_vec(),
+                targets: s[1..cfg.seq + 1].to_vec(),
+                enqueued: Instant::now(),
+                respond: rtx,
+            }))
+            .unwrap();
+            seqs.push(s);
+            score_rxs.push(rrx);
+        }
+        let (gtx, grx) = std::sync::mpsc::channel::<GenResponse>();
+        tx.send(Request::Generate(GenRequest {
+            prompt: vec![1, 2, 3],
+            n_new: 4,
+            enqueued: Instant::now(),
+            respond: gtx,
+        }))
+        .unwrap();
+        drop(tx);
+        let server = GenerationServer {
+            pipe: &pipe,
+            store: &store,
+            plan: LayerPlan::all_dense(&cfg),
+            max_wait: Duration::from_millis(10),
+            slots: 2,
+        };
+        let stats = server.run(rx).unwrap();
+        assert_eq!(stats.served, n_req);
+        assert_eq!(
+            stats.padded_rows,
+            stats.batches * cfg.batch - n_req,
+            "fixed-shape pad accounting"
+        );
+        assert!(stats.padded_rows >= 1, "3 requests on batch=2 must pad");
+        assert_eq!(stats.gen_served, 1);
+        assert_eq!(stats.prefills, 0, "scoring-only backend must never prefill");
+        let gen = grx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(gen.tokens.is_empty());
+        assert!(gen.error.is_some(), "generation on a non-KV backend must error");
+        // Pad extraction correctness: each real row's NLL matches an
+        // independent single-row native run of the same sequence.
+        let native_rt = crate::runtime::Runtime::native();
+        let native_pipe = Pipeline { rt: &native_rt, cfg: cfg.clone() };
+        let plan = LayerPlan::all_dense(&cfg);
+        for (s, rrx) in seqs.iter().zip(score_rxs) {
+            let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+            let tokens = Tensor::from_i32(&[1, cfg.seq], s[..cfg.seq].to_vec());
+            let targets = Tensor::from_i32(&[1, cfg.seq], s[1..cfg.seq + 1].to_vec());
+            let nll = native_pipe.nll(&store, &plan, &tokens, &targets).unwrap();
+            let want = nll.f32s().unwrap().iter().map(|&x| x as f64).sum::<f64>()
+                / cfg.seq as f64;
+            assert!(
+                (resp.mean_nll - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "padded-batch NLL diverged: {} vs {want}",
+                resp.mean_nll
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_score_and_generate_traffic() {
+        let (rt, cfg, store) = mini_setup();
+        let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+        let vocab = Vocab::build();
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        let score_resps =
+            spawn_score_clients(&tx, &vocab, CorpusKind::SynthC4, cfg.seq, 2, 2, 1);
+        let gen_resps =
+            spawn_gen_clients(&tx, &vocab, CorpusKind::SynthC4, 6, 8, 2, 1, 1);
+        drop(tx);
+        let server = GenerationServer {
+            pipe: &pipe,
+            store: &store,
+            plan: LayerPlan::all_dense(&cfg),
+            max_wait: Duration::from_millis(15),
+            slots: 2,
+        };
+        let stats = server.run(rx).unwrap();
+        assert_eq!(stats.served, 4);
+        assert_eq!(stats.gen_served, 2);
+        assert_eq!(stats.tokens_generated, 2 * 8);
+        for r in score_resps {
+            while let Ok(resp) = r.recv_timeout(Duration::from_secs(5)) {
+                assert!(resp.mean_nll.is_finite());
+            }
+        }
+        for r in gen_resps {
+            let resp = r.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.tokens.len(), 8);
+        }
     }
 }

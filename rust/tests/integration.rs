@@ -186,35 +186,44 @@ fn generation_is_deterministic_and_in_vocab() {
     assert!(a[0].iter().all(|&t| (t as usize) < cfg.vocab));
 }
 
-/// KV-cached greedy decode must emit token-for-token identical ids to
-/// the full-window recompute path — on dense and cured pipelines, with
-/// ragged prompt lengths, and across the window-capacity fallback.
+/// Streaming KV decode (per-slot prefill + fused batched ring decode)
+/// must emit token-for-token identical ids to the cache-free replay
+/// reference — on dense and cured pipelines, with ragged prompt
+/// lengths, and across the window-rotation boundary, where the ring
+/// buffer overwrites the oldest position instead of re-prefilling.
 #[test]
-fn kv_decode_matches_full_window_recompute() {
+fn kv_decode_matches_replay_reference() {
     let rt = runtime();
     assert!(rt.backend().supports_kv_decode(), "native backend must decode with a KV cache");
     let cfg = mini_cfg(&rt);
     let pipe = Pipeline::new(&rt, "mini").unwrap();
     let mut rng = Rng::new(23, 0);
     let mut store = cfg.init_dense(&mut rng);
-    let prompts = vec![vec![1i32, 5, 9], vec![2i32, 3, 4, 7, 8]];
-    // Enough new tokens to fill the seq-32 window and cross into the
-    // sliding-window fallback for both rows.
-    let n_new = cfg.seq;
+    let prompts = vec![vec![1i32, 5, 9], vec![2i32, 3, 4, 7, 8], vec![11i32, 2]];
+    // Enough new tokens to fill the seq-32 window and rotate it for
+    // every row (prompt + n_new > seq).
+    let n_new = cfg.seq + 4;
     let plan = LayerPlan::all_dense(&cfg);
     let kv = pipe.generate_greedy(&store, &plan, &prompts, n_new).unwrap();
     let full = pipe.generate_greedy_uncached(&store, &plan, &prompts, n_new).unwrap();
-    assert_eq!(kv, full, "dense KV decode diverged from full recompute");
+    assert_eq!(kv, full, "dense KV decode diverged from the replay reference");
     assert_eq!(kv[0].len(), n_new);
+
+    // Batch independence: each row of the fused multi-slot run must
+    // equal its own single-prompt run.
+    for (i, p) in prompts.iter().enumerate() {
+        let solo = pipe.generate_greedy(&store, &plan, &[p.clone()], n_new).unwrap();
+        assert_eq!(solo[0], kv[i], "row {i} changed under batching");
+    }
 
     // Same check through a cured layer (the factored q/k/gate chain).
     let calib = flat_calib(&cfg);
     let opts = CompressOptions { r_max: 8, ..Default::default() };
     curing::compress::cure_layers(&mut store, &cfg, &calib, &[1], &opts).unwrap();
     let plan = LayerPlan::with_cured(&cfg, &[1], 8, "all");
-    let kv = pipe.generate_greedy(&store, &plan, &prompts, 8).unwrap();
-    let full = pipe.generate_greedy_uncached(&store, &plan, &prompts, 8).unwrap();
-    assert_eq!(kv, full, "cured KV decode diverged from full recompute");
+    let kv = pipe.generate_greedy(&store, &plan, &prompts, n_new).unwrap();
+    let full = pipe.generate_greedy_uncached(&store, &plan, &prompts, n_new).unwrap();
+    assert_eq!(kv, full, "cured KV decode diverged from the replay reference");
 }
 
 #[test]
