@@ -13,6 +13,7 @@
 
 use anyhow::Result;
 use curing::backend::native::math;
+use curing::backend::KvPolicy;
 use curing::calib::Calibration;
 use curing::compress::{CompressOptions, LayerStrategy};
 use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
@@ -45,8 +46,10 @@ fn main() -> Result<()> {
     }
     let filters: Vec<String> =
         raw.into_iter().filter(|a| !a.starts_with('-') && a != "bench").collect();
-    let all =
-        ["micro", "serve", "t1", "t2", "t3", "f4", "f5", "f6", "f7", "f10", "t4", "t5", "t6"];
+    let all = [
+        "micro", "serve", "kv_cur", "t1", "t2", "t3", "f4", "f5", "f6", "f7", "f10", "t4",
+        "t5", "t6",
+    ];
     let selected: Vec<&str> = if filters.is_empty() {
         all.to_vec()
     } else {
@@ -73,6 +76,7 @@ fn main() -> Result<()> {
         match name {
             "micro" => micro(&ctx, &pipe, &dense)?,
             "serve" => serve_bench(&ctx)?,
+            "kv_cur" => kv_cur_bench(&ctx)?,
             "t1" => t1(&ctx, &pipe, &dense, &calib)?,
             "t2" => t2(&ctx, &pipe, &dense, &calib)?,
             "t3" => t3(&ctx, &pipe, &dense, &calib)?,
@@ -96,12 +100,14 @@ fn print_usage() {
         "curing bench harness — regenerates the paper's tables/figures.
 
 USAGE: cargo bench [-- name ...]
-  names: micro serve t1 t2 t3 f4 f5 f6 f7 f10 t4 t5 t6 (default: all)
+  names: micro serve kv_cur t1 t2 t3 f4 f5 f6 f7 f10 t4 t5 t6 (default: all)
   f5/f6/f7 need the pjrt backend (switched AOT artifacts).
-  micro and serve also write machine-readable results to
+  micro, serve and kv_cur also write machine-readable results to
   BENCH_native.json at the repo root (perf trajectory across PRs);
   serve measures continuous-batching generation throughput at
-  1/4/8 slots plus the packed-vs-unpacked NT head kernel.
+  1/4/8 slots plus the packed-vs-unpacked NT head kernel; kv_cur
+  measures the CUR-compressed KV cache (tokens/s, live cache bytes
+  and quality vs the exact ring at keep 1.0/0.5/0.25).
 
 ENV: CURING_BENCH_FAST=1   smoke sizes
      CURING_PRETRAIN_STEPS  pretraining length (cached store)
@@ -325,6 +331,7 @@ fn serve_bench(ctx: &Ctx) -> Result<()> {
             plan: plan.clone(),
             max_wait: Duration::from_millis(5),
             slots,
+            kv_policy: KvPolicy::Exact,
         };
         let stats = server.run(rx)?;
         println!(
@@ -361,6 +368,113 @@ fn serve_bench(ctx: &Ctx) -> Result<()> {
     sec.insert("nt_packed_ms", Json::Num(r_packed.mean_ms));
     sec.insert("nt_unpacked_ms", Json::Num(r_plain.mean_ms));
     merge_bench_json(vec![("serve".to_string(), Json::Obj(sec))])
+}
+
+// --------------------------------------------------------------- kv_cur
+
+/// CUR-compressed KV cache (mini config): continuous-batching
+/// generation under `--kv-policy cur:<keep>` at keep-ratios
+/// 1.0 / 0.5 / 0.25, decoding well past the compaction high-water mark.
+/// Records tokens/s, compaction counts and the mean per-slot live cache
+/// bytes against the exact-ring bound, plus the quality harness at
+/// keep 0.5: greedy-token agreement with the exact cache and the
+/// teacher-forced decode-perplexity delta. Results land in the `kv_cur`
+/// section of `BENCH_native.json` (CI validates the keys, including
+/// live-bytes < exact bound).
+fn kv_cur_bench(ctx: &Ctx) -> Result<()> {
+    let pipe = ctx.pipeline("mini")?;
+    let cfg = pipe.cfg.clone();
+    let mut rng = Rng::new(79, 0);
+    let store = cfg.init_dense(&mut rng);
+    let plan = LayerPlan::all_dense(&cfg);
+    let (n_req, slots, prompt_len) = (8usize, 4usize, 8usize);
+    let n_new = if fast() { cfg.seq + 8 } else { 2 * cfg.seq };
+    let exact_slot_bytes =
+        curing::backend::KvCache::exact_slot_bound(cfg.n_layers, cfg.seq, cfg.d_model);
+    println!(
+        "kv_cur — CUR-compressed KV cache, mini config ({n_req} requests × {n_new} tokens, \
+         window {}, exact bound {exact_slot_bytes} B/slot)",
+        cfg.seq
+    );
+    let mut sec = JsonObj::new();
+    sec.insert("config", Json::Str("mini".to_string()));
+    sec.insert("requests", Json::Num(n_req as f64));
+    sec.insert("n_new", Json::Num(n_new as f64));
+    sec.insert("exact_slot_bytes", Json::Num(exact_slot_bytes as f64));
+    for (label, keep) in [("keep100", 1.0f32), ("keep50", 0.5), ("keep25", 0.25)] {
+        let policy = KvPolicy::Cur { keep, sinks: 4, recent: 8 };
+        let (tx, rx) = channel::<Request>();
+        let _resps = spawn_gen_clients(
+            &tx,
+            &ctx.vocab,
+            CorpusKind::SynthC4,
+            prompt_len,
+            n_new,
+            n_req,
+            1,
+            0,
+        );
+        drop(tx);
+        let server = GenerationServer {
+            pipe: &pipe,
+            store: &store,
+            plan: plan.clone(),
+            max_wait: Duration::from_millis(5),
+            slots,
+            kv_policy: policy,
+        };
+        let stats = server.run(rx)?;
+        let live_per_slot = stats.kv_live_bytes_mean / slots as f64;
+        println!(
+            "  {label}: {:>8.0} tok/s | compactions {:>4} | live {:>7.0} B/slot \
+             ({:.0}% of exact)",
+            stats.tokens_per_s,
+            stats.kv_compactions,
+            live_per_slot,
+            100.0 * live_per_slot / exact_slot_bytes as f64
+        );
+        sec.insert(format!("tokens_per_s_{label}"), Json::Num(stats.tokens_per_s));
+        sec.insert(format!("live_bytes_{label}"), Json::Num(live_per_slot));
+        sec.insert(format!("compactions_{label}"), Json::Num(stats.kv_compactions as f64));
+    }
+    // Quality harness at keep 0.5: greedy agreement + decode-ppl delta
+    // vs the exact cache, on prompts decoding past the window.
+    let mut corpus = Corpus::new(CorpusKind::SynthC4, 4242);
+    let prompts: Vec<Vec<i32>> =
+        (0..4).map(|_| corpus.sequence(&ctx.vocab, prompt_len)).collect();
+    let exact = pipe.generate_greedy(&store, &plan, &prompts, n_new)?;
+    let cur = pipe.generate_greedy_with_policy(
+        &store,
+        &plan,
+        &prompts,
+        n_new,
+        KvPolicy::Cur { keep: 0.5, sinks: 4, recent: 8 },
+    )?;
+    let total = (exact.len() * n_new) as f64;
+    let matches: usize = exact
+        .iter()
+        .zip(&cur)
+        .map(|(a, b)| a.iter().zip(b).filter(|(x, y)| x == y).count())
+        .sum();
+    let agreement = matches as f64 / total;
+    let seqs: Vec<Vec<i32>> =
+        (0..2).map(|_| corpus.sequence(&ctx.vocab, 2 * cfg.seq)).collect();
+    let ppl_exact = eval::decode_perplexity(&pipe, &store, &plan, KvPolicy::Exact, &seqs)?;
+    let ppl_cur = eval::decode_perplexity(
+        &pipe,
+        &store,
+        &plan,
+        KvPolicy::Cur { keep: 0.5, sinks: 4, recent: 8 },
+        &seqs,
+    )?;
+    println!(
+        "  quality keep50: greedy agreement {:.3} | decode ppl exact {:.2} vs cur {:.2}",
+        agreement, ppl_exact, ppl_cur
+    );
+    sec.insert("token_agreement_keep50", Json::Num(agreement));
+    sec.insert("ppl_exact", Json::Num(ppl_exact));
+    sec.insert("ppl_keep50", Json::Num(ppl_cur));
+    merge_bench_json(vec![("kv_cur".to_string(), Json::Obj(sec))])
 }
 
 // ------------------------------------------------------------------- t1

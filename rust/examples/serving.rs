@@ -4,9 +4,10 @@
 //! paper's intro motivates: same input/output interface, smaller model,
 //! no architecture change).
 //!
-//! Run: cargo run --release --example serving [-- --clients 4 --requests 8 --slots 4 --tokens 24]
+//! Run: cargo run --release --example serving [-- --clients 4 --requests 8 --slots 4 --tokens 24 --kv-policy cur:0.5]
 
 use anyhow::Result;
+use curing::backend::KvPolicy;
 use curing::compress::{CompressOptions, LayerStrategy};
 use curing::coordinator::{default_pretrain_steps, Ctx};
 use curing::data::CorpusKind;
@@ -22,6 +23,7 @@ fn main() -> Result<()> {
     let per_client = args.usize_opt("requests", 8);
     let slots = args.usize_opt("slots", 4);
     let n_new = args.usize_opt("tokens", 24);
+    let kv_policy = KvPolicy::parse(&args.str_opt("kv-policy", "exact"))?;
     let ctx = Ctx::new()?;
     let pipe = ctx.pipeline("tiny")?;
     let dense = ctx.load_or_pretrain("tiny", default_pretrain_steps())?;
@@ -69,6 +71,7 @@ fn main() -> Result<()> {
             plan,
             max_wait: Duration::from_millis(25),
             slots,
+            kv_policy,
         };
         let stats = server.run(rx)?;
         println!(
@@ -91,6 +94,13 @@ fn main() -> Result<()> {
             stats.tok_p50_ms,
             stats.tok_p95_ms,
         );
+        if stats.kv_compactions > 0 {
+            println!(
+                "{label:<11} kv:    policy {kv_policy} | {} compactions | mean live {:.3} MiB",
+                stats.kv_compactions,
+                stats.kv_live_bytes_mean / (1024.0 * 1024.0),
+            );
+        }
     }
     println!("\n(The cured pipeline replaces three dense layers with rank-16 CUR chains;");
     println!(" same request interface, fewer FLOPs per layer, smaller weights. Each");

@@ -25,7 +25,7 @@ use crate::model::ModelConfig;
 use crate::runtime::{ArtifactSpec, Bindings};
 use crate::tensor::{Tensor, TensorStore};
 use crate::util::Json;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 use std::borrow::Cow;
 use std::collections::HashMap;
 
@@ -87,17 +87,131 @@ pub struct HealOut {
     pub y_student: Tensor,
 }
 
-/// Per-slot ring-buffer K/V for incremental greedy decode.
+/// How a [`KvCache`] retires cached positions once a slot lane is full.
+///
+/// * [`KvPolicy::Exact`] — the sliding-window ring: the newest write
+///   overwrites the oldest ring row, attention spans the last `window`
+///   positions, nothing else is ever dropped. The default, and the
+///   semantics every parity test is pinned to.
+/// * [`KvPolicy::Cur`] — CUR-compressed cache: when a slot lane fills,
+///   [`Backend::compress_kv_slot`] keeps roughly `keep × window`
+///   positions per layer — the `sinks` oldest stream positions
+///   (attention sinks, absolute position `< sinks`) and the `recent`
+///   newest rows are always retained; the remaining budget is chosen by
+///   value-guided DEIM selection over the cached keys
+///   ([`crate::cur::select_kv_positions`]) — and decode continues
+///   against the compacted lane with **no recompute**. `keep = 1.0`
+///   degenerates to dropping only the single oldest position per step,
+///   which is arithmetically identical to the exact ring (asserted in
+///   tests); `keep < 1.0` trades tokens-for-bytes and may diverge from
+///   the exact-cache oracle once the first compaction runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KvPolicy {
+    /// Exact sliding-window ring buffer (drop-oldest only).
+    Exact,
+    /// CUR-compress full lanes down to `keep × window` positions,
+    /// always protecting `sinks` + `recent` positions.
+    Cur {
+        /// Fraction of the window to retain per compaction, in (0, 1].
+        keep: f32,
+        /// Stream positions `0..sinks` are never evicted (StreamingLLM
+        /// attention sinks).
+        sinks: usize,
+        /// The newest `recent` cached rows are never evicted.
+        recent: usize,
+    },
+}
+
+impl KvPolicy {
+    /// Default protected-sink count for `cur:<keep>` without explicit
+    /// sink/recent counts.
+    pub const DEFAULT_SINKS: usize = 4;
+    /// Default protected-recent count.
+    pub const DEFAULT_RECENT: usize = 8;
+
+    /// Parse a CLI spec: `exact`, `cur:<keep>` or
+    /// `cur:<keep>:<sinks>:<recent>` (e.g. `cur:0.5`, `cur:0.25:4:8`).
+    pub fn parse(s: &str) -> Result<KvPolicy> {
+        if s == "exact" {
+            return Ok(KvPolicy::Exact);
+        }
+        let Some(rest) = s.strip_prefix("cur:") else {
+            bail!("unknown kv policy '{s}' (exact | cur:<keep>[:<sinks>:<recent>])");
+        };
+        let parts: Vec<&str> = rest.split(':').collect();
+        ensure!(
+            parts.len() == 1 || parts.len() == 3,
+            "kv policy '{s}' must be cur:<keep> or cur:<keep>:<sinks>:<recent>"
+        );
+        let keep: f32 = parts[0]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad keep ratio '{}' in kv policy '{s}'", parts[0]))?;
+        ensure!(keep > 0.0 && keep <= 1.0, "keep ratio {keep} must be in (0, 1]");
+        let (sinks, recent) = if parts.len() == 3 {
+            let sinks: usize = parts[1]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad sink count '{}' in kv policy '{s}'", parts[1]))?;
+            let recent: usize = parts[2].parse().map_err(|_| {
+                anyhow::anyhow!("bad recent count '{}' in kv policy '{s}'", parts[2])
+            })?;
+            (sinks, recent)
+        } else {
+            (Self::DEFAULT_SINKS, Self::DEFAULT_RECENT)
+        };
+        ensure!(recent >= 1, "kv policy needs recent >= 1 (the newest row must survive)");
+        Ok(KvPolicy::Cur { keep, sinks, recent })
+    }
+
+    /// Check this policy against an attention window: under
+    /// [`KvPolicy::Cur`] the protected set must leave room to evict
+    /// (`sinks + recent < window`). [`KvPolicy::parse`] cannot know the
+    /// window, so every decode entry point validates before building a
+    /// cache (and [`KvCache::with_policy`] asserts it as a backstop).
+    pub fn validate(&self, window: usize) -> Result<()> {
+        if let KvPolicy::Cur { sinks, recent, .. } = self {
+            ensure!(
+                sinks + recent < window,
+                "kv policy '{self}' protects {} positions but the window holds only {window}",
+                sinks + recent
+            );
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for KvPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvPolicy::Exact => write!(f, "exact"),
+            KvPolicy::Cur { keep, sinks, recent } => {
+                write!(f, "cur:{keep}:{sinks}:{recent}")
+            }
+        }
+    }
+}
+
+/// Per-slot K/V cache for incremental greedy decode: a sliding-window
+/// ring buffer under [`KvPolicy::Exact`], a compacted lane under
+/// [`KvPolicy::Cur`].
 ///
 /// Layer `l`'s post-RoPE keys and values live at `k[l]`/`v[l]`, each a
 /// flat (slots, cap, d) row-major buffer: slot `i` owns the lane
-/// `[i·cap, (i+1)·cap)`, and the token at absolute sequence position `p`
-/// sits at ring row `p % cap`. Positions increase monotonically for the
-/// lifetime of a slot; once more than `window` tokens have entered, the
-/// newest write simply overwrites the oldest ring row — the sliding
-/// window rotates with **no recompute and no cache invalidation**.
-/// `next_pos[i]` is the absolute position of slot `i`'s next token
-/// (equivalently: how many tokens the slot has seen).
+/// `[i·cap, (i+1)·cap)`. Under the exact policy, the token at absolute
+/// sequence position `p` sits at ring row `p % cap`. Positions increase
+/// monotonically for the lifetime of a slot; once more than `window`
+/// tokens have entered, the newest write simply overwrites the oldest
+/// ring row — the sliding window rotates with **no recompute and no
+/// cache invalidation**. `next_pos[i]` is the absolute position of slot
+/// `i`'s next token (equivalently: how many tokens the slot has seen).
+///
+/// Under the CUR policy the lane is instead an append-only prefix of
+/// `fill[i]` valid rows in ascending-position order; `positions[l][i]`
+/// maps each physical row to its absolute position (layers retain
+/// *different* position sets after a compaction, so the map is
+/// per-layer). When `fill[i] == cap` the lane must be compacted by
+/// [`Backend::compress_kv_slot`] before the next token
+/// ([`KvCache::needs_compaction`]); decode then appends at row
+/// `fill[i]`.
 ///
 /// A cache is filled per slot by [`Backend::layer_prefill`] over the
 /// prompt window, then advanced one position per emitted token by
@@ -108,9 +222,30 @@ pub struct HealOut {
 /// the generation parity oracle uses `cap == total tokens` so the same
 /// decode code runs against a never-wrapping linear layout.
 ///
-/// Resident footprint: n_layers × 2 × slots·cap·d × 4 bytes f32 (see
-/// [`KvCache::bytes`]) — for the `tiny` config (8 layers, 8 slots,
-/// cap=64, d=256) that is 8 MiB.
+/// # Memory
+///
+/// Resident footprint ([`KvCache::bytes`]):
+///
+/// ```text
+/// n_layers × 2 (K and V) × slots·cap·d × 4 bytes (f32)
+/// ```
+///
+/// — for the `tiny` config (8 layers, 8 slots, cap=64, d=256) that is
+/// 8 MiB, and it grows linearly in every serving knob (slots, window,
+/// depth, width). [`KvCache::live_bytes`] counts only rows that hold a
+/// cached position. Under the exact policy a streaming slot pins the
+/// full window bound, `n_layers × 2 × window·d × 4` bytes per slot,
+/// forever. Under `cur:<keep>:<sinks>:<recent>` a lane oscillates
+/// between the post-compaction floor of
+///
+/// ```text
+/// n_layers × 2 × max(keep·window, sinks + recent)·d × 4 bytes
+/// ```
+///
+/// and the `window`-row high-water mark that triggers the next
+/// compaction, so the steady-state mean sits strictly below the exact
+/// bound whenever `keep < 1` — the `kv_cur` bench records that mean
+/// against the exact bound above.
 pub struct KvCache {
     /// Number of slot lanes (independent sequences).
     pub b: usize,
@@ -124,6 +259,19 @@ pub struct KvCache {
     pub v: Vec<Vec<f32>>,
     /// Per slot: absolute position of the next token (tokens seen).
     pub next_pos: Vec<usize>,
+    /// Eviction policy (see [`KvPolicy`]).
+    pub policy: KvPolicy,
+    /// Per slot: physical rows in use under [`KvPolicy::Cur`] (the lane
+    /// prefix `0..fill` is valid, ascending by position). Unused under
+    /// the exact policy, where occupancy is `min(next_pos, cap)`.
+    pub fill: Vec<usize>,
+    /// `positions[layer][slot][row]` = absolute position cached at that
+    /// physical row, for rows `0..fill[slot]`. Only maintained under
+    /// [`KvPolicy::Cur`] (empty otherwise); per-layer because each layer
+    /// retains its own position set after a compaction.
+    pub positions: Vec<Vec<Vec<usize>>>,
+    /// Total [`Backend::compress_kv_slot`] compactions run on this cache.
+    pub compactions: usize,
 }
 
 impl KvCache {
@@ -151,7 +299,34 @@ impl KvCache {
             k: vec![vec![0.0; slots * cap * d]; n_layers],
             v: vec![vec![0.0; slots * cap * d]; n_layers],
             next_pos: vec![0; slots],
+            policy: KvPolicy::Exact,
+            fill: vec![0; slots],
+            positions: Vec::new(),
+            compactions: 0,
         }
+    }
+
+    /// The serving shape under an explicit eviction policy. Under
+    /// [`KvPolicy::Cur`] the protected set must leave room to evict:
+    /// `sinks + recent < window`.
+    pub fn with_policy(
+        n_layers: usize,
+        slots: usize,
+        window: usize,
+        d: usize,
+        policy: KvPolicy,
+    ) -> KvCache {
+        let mut kv = Self::new(n_layers, slots, window, d);
+        if let KvPolicy::Cur { sinks, recent, .. } = policy {
+            assert!(
+                sinks + recent < window,
+                "kv policy protects {} positions but the window holds only {window}",
+                sinks + recent
+            );
+            kv.positions = vec![vec![Vec::new(); slots]; n_layers];
+        }
+        kv.policy = policy;
+        kv
     }
 
     pub fn n_layers(&self) -> usize {
@@ -161,24 +336,69 @@ impl KvCache {
     /// Recycle a slot lane for a new request (continuous batching).
     pub fn reset_slot(&mut self, slot: usize) {
         self.next_pos[slot] = 0;
+        self.fill[slot] = 0;
+        for layer in &mut self.positions {
+            layer[slot].clear();
+        }
     }
 
     /// Record that `w` prompt positions were prefilled into `slot`.
     pub fn commit_prefill(&mut self, slot: usize, w: usize) {
         self.next_pos[slot] = w;
+        self.fill[slot] = w;
+        for layer in &mut self.positions {
+            layer[slot] = (0..w).collect();
+        }
     }
 
     /// Bump the given slots by one position (call once per emitted
     /// token, after the last layer's decode pass).
     pub fn advance(&mut self, slots: &[usize]) {
+        let compacted = matches!(self.policy, KvPolicy::Cur { .. });
         for &s in slots {
             self.next_pos[s] += 1;
+            if compacted {
+                self.fill[s] += 1;
+            }
         }
+    }
+
+    /// Whether `slot`'s lane is full and must be compacted by
+    /// [`Backend::compress_kv_slot`] before the next decode step. Always
+    /// false under [`KvPolicy::Exact`] (the ring evicts by overwrite).
+    pub fn needs_compaction(&self, slot: usize) -> bool {
+        matches!(self.policy, KvPolicy::Cur { .. }) && self.fill[slot] >= self.cap
+    }
+
+    /// Rows of `slot`'s lane that hold a cached position.
+    pub fn live_rows(&self, slot: usize) -> usize {
+        match self.policy {
+            KvPolicy::Exact => self.next_pos[slot].min(self.cap),
+            KvPolicy::Cur { .. } => self.fill[slot],
+        }
+    }
+
+    /// Bytes of K/V actually holding cached positions, summed over all
+    /// slots: layers × 2 × Σ_slot live_rows(slot) × d × 4. Under the CUR
+    /// policy this is what compaction shrinks; [`KvCache::bytes`] (the
+    /// allocation) does not move.
+    pub fn live_bytes(&self) -> usize {
+        let rows: usize = (0..self.b).map(|s| self.live_rows(s)).sum();
+        self.k.len() * 2 * rows * self.d * 4
     }
 
     /// Resident size in bytes: layers × 2 (K and V) × slots·cap·d × 4.
     pub fn bytes(&self) -> usize {
         self.k.len() * 2 * self.b * self.cap * self.d * 4
+    }
+
+    /// The exact-policy live-bytes bound for ONE streaming slot:
+    /// `n_layers × 2 × window·d × 4` bytes — what a full ring pins for
+    /// the life of the slot, and the baseline the compressed cache is
+    /// measured against (the `kv_cur` bench and the serve CLI both
+    /// report against this).
+    pub const fn exact_slot_bound(n_layers: usize, window: usize, d: usize) -> usize {
+        n_layers * 2 * window * d * 4
     }
 }
 
@@ -292,6 +512,38 @@ pub trait Backend {
         let _ = (cfg, p, x, kv, layer, slots);
         bail!(
             "backend '{}' has no KV-cache decode path (supports_kv_decode = false)",
+            self.name()
+        )
+    }
+
+    /// Compact slot `slot`'s full K/V lane down to the cache's
+    /// [`KvPolicy::Cur`] keep budget, per layer: stream positions
+    /// `< sinks` and the newest `recent` rows are always retained; the
+    /// remaining budget is filled by value-guided CUR position selection
+    /// over that layer's cached keys
+    /// ([`crate::cur::select_kv_positions`] — each key row weighted by
+    /// its value-vector norm, then DEIM over the weighted key matrix's
+    /// leading left singular vectors). Retained rows are moved to the
+    /// lane prefix in ascending-position order and
+    /// [`KvCache::fill`]/[`KvCache::positions`] are updated; decode
+    /// resumes against the compacted lane with no recompute. At
+    /// `keep = 1.0` the selection is bypassed and only the single oldest
+    /// position is dropped — bit-identical to the exact ring's eviction.
+    ///
+    /// Returns the number of positions dropped (per layer — every layer
+    /// retains the same count, though not the same positions). Callers
+    /// invoke this when [`KvCache::needs_compaction`] reports a full
+    /// lane ([`crate::pipeline::Pipeline::decode_step`] does it
+    /// automatically).
+    fn compress_kv_slot(
+        &self,
+        cfg: &ModelConfig,
+        kv: &mut KvCache,
+        slot: usize,
+    ) -> Result<usize> {
+        let _ = (cfg, kv, slot);
+        bail!(
+            "backend '{}' has no KV-cache compression path (supports_kv_decode = false)",
             self.name()
         )
     }

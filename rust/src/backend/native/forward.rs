@@ -374,14 +374,16 @@ fn attention_infer(
 }
 
 /// One query row's causal attention over a **ring-buffer** K/V lane:
-/// the query sits at absolute position `pos` and attends absolute
-/// positions `lo..=pos`, where position `j` lives at ring row
-/// `lane_row0 + j % cap`. The score/softmax/accumulate op sequence
-/// mirrors [`attention_row`] exactly (scores ascending by absolute
-/// position, max-subtracted softmax, ascending weighted-V) — at
-/// `lo == 0, cap > pos` the arithmetic is identical, which is what
-/// makes ring decode bit-match prefill and the linear-layout oracle.
-/// The `lo..=pos` span covers at most two contiguous ring runs, so the
+/// the query attends ring coordinates `lo..=hi`, where coordinate `j`
+/// lives at ring row `lane_row0 + j % cap` (for the exact policy the
+/// coordinates are absolute positions; for a compacted lane they are
+/// physical rows with `lo = 0` and no wrap). The
+/// score/softmax/accumulate op sequence mirrors [`attention_row`]
+/// exactly (scores ascending by coordinate, max-subtracted softmax,
+/// ascending weighted-V) — at `lo == 0, cap > hi` the arithmetic is
+/// identical, which is what makes ring decode bit-match prefill, the
+/// linear-layout oracle, and the compacted lane at keep = 1. The
+/// `lo..=hi` span covers at most two contiguous ring runs, so the
 /// hot loops carry no modulo.
 #[allow(clippy::too_many_arguments)]
 fn attention_row_ring(
@@ -393,13 +395,13 @@ fn attention_row_ring(
     d: usize,
     hoff: usize,
     lo: usize,
-    pos: usize,
+    hi: usize,
     scale: f32,
     prow: &mut [f32],
     arow: &mut [f32],
 ) {
     let dh = arow.len();
-    let n = pos - lo + 1;
+    let n = hi - lo + 1;
     debug_assert!(n <= cap);
     let start = lo % cap;
     let run1 = n.min(cap - start);
@@ -437,27 +439,50 @@ fn attention_row_ring(
     }
 }
 
-/// Fused single-position attention for N independent slots against the
-/// ring cache: row `r` queries from absolute position `pos[r]` of lane
-/// `slots[r]` and attends the last `min(pos+1, window)` cached
-/// positions. `cap` is the lane ring capacity (`dims.s`).
+/// One decode row's cache coordinates, computed by the backend from the
+/// [`crate::backend::KvCache`] policy before the kernel runs:
+///
+/// * exact ring — `write = pos % cap`, attention spans ring coordinates
+///   `lo..=hi` with `lo = pos+1-min(pos+1, window)`, `hi = pos` (rows
+///   read at `coord % cap`);
+/// * compacted lane — `write = fill` (append), `lo = 0`, `hi = fill`
+///   (the valid prefix plus the just-written row; never wraps since
+///   `fill < cap`).
+///
+/// In both cases `hi % cap == write`, so the entering token always
+/// attends its own freshly written K/V row, and iteration ascends by
+/// position — the accumulation-order invariant every parity test leans
+/// on. `pos` is the absolute RoPE position, decoupled from the physical
+/// coordinates.
+#[derive(Debug, Clone, Copy)]
+pub(super) struct DecodeRow {
+    /// Absolute sequence position of the entering token (RoPE rotation).
+    pub pos: usize,
+    /// Physical lane row receiving the new K/V.
+    pub write: usize,
+    /// First attended ring coordinate (inclusive).
+    pub lo: usize,
+    /// Last attended ring coordinate (inclusive; its row is `write`).
+    pub hi: usize,
+}
+
+/// Fused single-position attention for N independent slots: row `r`
+/// queries lane `slots[r]` over the ring coordinates `rows[r].lo..=hi`
+/// (see [`DecodeRow`]). `cap` is the lane capacity (`dims.s`).
 #[allow(clippy::too_many_arguments)]
 fn attention_decode(
     q: &[f32],
     kcache: &[f32],
     vcache: &[f32],
     dims: Dims,
-    window: usize,
     slots: &[usize],
-    pos: &[usize],
+    rows: &[DecodeRow],
     srow: &mut [f32],
     att: &mut [f32],
 ) {
     let Dims { s: cap, d, nh, dh, .. } = dims;
     let scale = 1.0 / (dh as f32).sqrt();
-    for (r, (&slot, &p)) in slots.iter().zip(pos).enumerate() {
-        let span = (p + 1).min(window);
-        let lo = p + 1 - span;
+    for (r, (&slot, row)) in slots.iter().zip(rows).enumerate() {
         for h in 0..nh {
             let qoff = r * d + h * dh;
             attention_row_ring(
@@ -468,8 +493,8 @@ fn attention_decode(
                 cap,
                 d,
                 h * dh,
-                lo,
-                p,
+                row.lo,
+                row.hi,
                 scale,
                 srow,
                 &mut att[qoff..qoff + dh],
@@ -654,15 +679,15 @@ pub(super) fn layer_infer_impl(
     Ok(y)
 }
 
-/// Fused one-position layer forward for N slots against the ring
-/// cache. `x` is (n × d) — row `r` is the new token's hidden state for
-/// slot `slots[r]`, entering at absolute position `pos[r]` (ring row
-/// `pos[r] % cap` of the slot's lane). The q/k/v/gate/up/down matmuls
-/// each see one n-row activation — the continuous-batching fusion.
-/// Writes the new K/V rows, attends each row's last
-/// `min(pos+1, window)` cached positions, and returns the (n × d)
-/// layer output. `dims.b` is n; `dims.s` is the lane capacity `cap`;
-/// `kcache`/`vcache` are whole-cache layer buffers (lanes × cap × d).
+/// Fused one-position layer forward for N slots against the cache.
+/// `x` is (n × d) — row `r` is the new token's hidden state for slot
+/// `slots[r]`, with cache coordinates `rows[r]` (see [`DecodeRow`] for
+/// the exact-ring vs compacted-lane layouts). The q/k/v/gate/up/down
+/// matmuls each see one n-row activation — the continuous-batching
+/// fusion. Writes the new K/V rows, attends each row's `lo..=hi` span,
+/// and returns the (n × d) layer output. `dims.b` is n; `dims.s` is the
+/// lane capacity `cap`; `kcache`/`vcache` are whole-cache layer buffers
+/// (lanes × cap × d).
 #[allow(clippy::too_many_arguments)]
 pub(super) fn layer_decode_impl(
     dims: Dims,
@@ -670,22 +695,24 @@ pub(super) fn layer_decode_impl(
     x: &[f32],
     kcache: &mut [f32],
     vcache: &mut [f32],
-    window: usize,
     slots: &[usize],
-    pos: &[usize],
+    rows: &[DecodeRow],
     sc: &mut InferScratch,
 ) -> Result<Vec<f32>> {
     let Dims { b, s: cap, d, di, nh, dh } = dims;
     ensure!(x.len() == b * d, "decode input must be n×d");
-    ensure!(slots.len() == b && pos.len() == b, "one slot and position per row");
-    ensure!(window >= 1 && window <= cap, "window {window} must be in 1..={cap}");
+    ensure!(slots.len() == b && rows.len() == b, "one slot and cache row per input row");
     let lanes = kcache.len() / (cap * d);
     ensure!(
         kcache.len() == lanes * cap * d && vcache.len() == kcache.len(),
         "kv cache size mismatch"
     );
-    for &slot in slots {
+    for (&slot, row) in slots.iter().zip(rows) {
         ensure!(slot < lanes, "slot {slot} out of cache lanes 0..{lanes}");
+        ensure!(
+            row.lo <= row.hi && row.hi - row.lo < cap && row.write == row.hi % cap,
+            "inconsistent decode coordinates {row:?} for cap {cap}"
+        );
     }
     let ln1 = want(p.ln1, &[d], "ln1")?;
     let ln2 = want(p.ln2, &[d], "ln2")?;
@@ -701,9 +728,9 @@ pub(super) fn layer_decode_impl(
     let half = dh / 2;
     let rcos = grow(&mut sc.rcos, b * half);
     let rsin = grow(&mut sc.rsin, b * half);
-    for (i, &pp) in pos.iter().enumerate() {
+    for (i, row) in rows.iter().enumerate() {
         rope_row_into(
-            pp,
+            row.pos,
             half,
             &mut rcos[i * half..(i + 1) * half],
             &mut rsin[i * half..(i + 1) * half],
@@ -723,14 +750,14 @@ pub(super) fn layer_decode_impl(
     matmul_nn_into(h, wv, b, d, d, vx);
     rope_apply_rows_local(q, b, nh, dh, rcos, rsin);
     rope_apply_rows_local(kx, b, nh, dh, rcos, rsin);
-    for (r, (&slot, &pp)) in slots.iter().zip(pos).enumerate() {
-        let dst = (slot * cap + pp % cap) * d;
+    for (r, (&slot, row)) in slots.iter().zip(rows).enumerate() {
+        let dst = (slot * cap + row.write) * d;
         kcache[dst..dst + d].copy_from_slice(&kx[r * d..(r + 1) * d]);
         vcache[dst..dst + d].copy_from_slice(&vx[r * d..(r + 1) * d]);
     }
     let att = grow(&mut sc.att, b * d);
-    let srow = grow(&mut sc.scores, window);
-    attention_decode(q, kcache, vcache, dims, window, slots, pos, srow, att);
+    let srow = grow(&mut sc.scores, cap);
+    attention_decode(q, kcache, vcache, dims, slots, rows, srow, att);
     let x2 = grow(&mut sc.x2, b * d);
     matmul_nn_into(att, wo, b, d, d, x2);
     add_inplace(x2, x);

@@ -287,7 +287,7 @@ pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 }
 
 /// B of an NT matmul, re-laid out once into k-major column panels of
-/// [`NR`] so the product kernel streams one contiguous buffer and reuses
+/// `NR` so the product kernel streams one contiguous buffer and reuses
 /// each panel line across every A row (ROADMAP: "packing B for large-k
 /// cache locality"). Built with [`pack_nt`], consumed by
 /// [`matmul_nt_packed_into`]; the buffer is reusable across calls — the

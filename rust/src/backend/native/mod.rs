@@ -22,11 +22,12 @@ mod forward;
 pub mod math;
 mod train;
 
-use crate::backend::{Backend, CalibOut, HealOut, KvCache, LayerParams};
+use crate::backend::{Backend, CalibOut, HealOut, KvCache, KvPolicy, LayerParams};
+use crate::linalg::Mat;
 use crate::model::ModelConfig;
 use crate::tensor::{Tensor, TensorStore};
 use crate::util::Json;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::cell::{Cell, RefCell};
 
 /// Built-in model-family manifest: the native backend needs no artifacts
@@ -186,14 +187,36 @@ impl Backend for NativeBackend {
         ensure!(kv.d == d, "kv cache is d={}, decode input is d={d}", kv.d);
         ensure!(layer < kv.n_layers(), "layer {layer} beyond kv cache ({})", kv.n_layers());
         ensure!(slots.len() == n, "need one slot per input row");
-        let mut pos = Vec::with_capacity(n);
+        // Validate every row before touching any cache state, so a bad
+        // batch errors without leaving position maps half-updated.
+        let mut rows = Vec::with_capacity(n);
         for (r, &slot) in slots.iter().enumerate() {
             ensure!(slot < kv.b, "slot {slot} out of cache lanes 0..{}", kv.b);
             ensure!(
                 !slots[..r].contains(&slot),
                 "slot {slot} appears twice in one decode batch"
             );
-            pos.push(kv.next_pos[slot]);
+            let pos = kv.next_pos[slot];
+            match kv.policy {
+                KvPolicy::Exact => {
+                    let span = (pos + 1).min(kv.window);
+                    rows.push(forward::DecodeRow {
+                        pos,
+                        write: pos % kv.cap,
+                        lo: pos + 1 - span,
+                        hi: pos,
+                    });
+                }
+                KvPolicy::Cur { .. } => {
+                    let fill = kv.fill[slot];
+                    ensure!(
+                        fill < kv.cap,
+                        "slot {slot} lane is full ({fill} rows) — run \
+                         compress_kv_slot before the next decode step"
+                    );
+                    rows.push(forward::DecodeRow { pos, write: fill, lo: 0, hi: fill });
+                }
+            }
         }
         let dims = forward::layer_dims(cfg.n_heads, p, n, kv.cap, d)?;
         let mut sc = self.scratch.borrow_mut();
@@ -204,12 +227,121 @@ impl Backend for NativeBackend {
             x.f32s()?,
             kc.as_mut_slice(),
             vc.as_mut_slice(),
-            kv.window,
             slots,
-            &pos,
+            &rows,
             &mut sc,
         )?;
+        if matches!(kv.policy, KvPolicy::Cur { .. }) {
+            // Only after the kernel succeeded do the new rows' absolute
+            // positions join this layer's maps — a failed step must not
+            // leave them out of sync with `fill` (which the caller bumps
+            // via `KvCache::advance` after the last layer).
+            for (&slot, row) in slots.iter().zip(&rows) {
+                kv.positions[layer][slot].push(row.pos);
+            }
+        }
         Ok(Tensor::from_f32(&[n, 1, d], y))
+    }
+
+    fn compress_kv_slot(&self, _cfg: &ModelConfig, kv: &mut KvCache, slot: usize) -> Result<usize> {
+        self.tick();
+        let KvPolicy::Cur { keep, sinks, recent } = kv.policy else {
+            bail!("compress_kv_slot needs a cur kv policy (cache policy is '{}')", kv.policy)
+        };
+        ensure!(slot < kv.b, "slot {slot} out of cache lanes 0..{}", kv.b);
+        let (cap, d) = (kv.cap, kv.d);
+        let fill = kv.fill[slot];
+        ensure!(fill >= 2, "slot {slot} holds {fill} positions — nothing to compact");
+        let lane = slot * cap * d;
+        // Keep budget: `keep × window` positions, never fewer than the
+        // protected set, and always at least one row freed.
+        let target = ((keep as f64) * kv.window as f64).round() as usize;
+        let mut retained_count = 0usize;
+        for l in 0..kv.n_layers() {
+            ensure!(
+                kv.positions[l][slot].len() == fill,
+                "slot {slot} layer {l} position map out of sync ({} vs fill {fill})",
+                kv.positions[l][slot].len()
+            );
+            let retained: Vec<usize> = if keep >= 1.0 {
+                // Degenerate exact sliding window: drop only the oldest
+                // position (no sink protection — bit-identical to the
+                // ring's eviction-by-overwrite).
+                (1..fill).collect()
+            } else {
+                let pos = &kv.positions[l][slot];
+                // Protected rows: attention sinks (absolute position
+                // below `sinks`) and the newest `recent` rows. Both sets
+                // hold the same positions in every layer — sinks are
+                // never evicted once cached and the recent tail is the
+                // same recent tokens — so every layer retains the same
+                // count and `fill` stays one number per slot.
+                let mut protected = vec![false; fill];
+                for (i, &p) in pos.iter().enumerate() {
+                    if p < sinks {
+                        protected[i] = true;
+                    }
+                }
+                for flag in protected.iter_mut().skip(fill.saturating_sub(recent)) {
+                    *flag = true;
+                }
+                let free: Vec<usize> = (0..fill).filter(|&i| !protected[i]).collect();
+                let n_prot = fill - free.len();
+                let retain = target.clamp(n_prot.max(1).min(fill - 1), fill - 1);
+                let budget = retain.saturating_sub(n_prot);
+                let mut sel: Vec<usize> = (0..fill).filter(|&i| protected[i]).collect();
+                if budget > 0 {
+                    // budget <= free.len() - 1 by the clamp above, so
+                    // selection always has real choices to make.
+                    let kbuf = &kv.k[l][lane..lane + fill * d];
+                    let vbuf = &kv.v[l][lane..lane + fill * d];
+                    let mut keys = Mat::zeros(free.len(), d);
+                    let mut weights = vec![0.0f64; free.len()];
+                    for (fi, &i) in free.iter().enumerate() {
+                        let kr = &kbuf[i * d..(i + 1) * d];
+                        let vr = &vbuf[i * d..(i + 1) * d];
+                        for (j, &x) in kr.iter().enumerate() {
+                            keys[(fi, j)] = x as f64;
+                        }
+                        let kn: f64 = kr.iter().map(|&x| (x as f64) * (x as f64)).sum();
+                        let vn: f64 = vr.iter().map(|&x| (x as f64) * (x as f64)).sum();
+                        weights[fi] = (kn.sqrt() * vn.sqrt()).max(1e-12);
+                    }
+                    let picked = crate::cur::select_kv_positions(&keys, &weights, budget)?;
+                    sel.extend(picked.into_iter().map(|fi| free[fi]));
+                }
+                sel.sort_unstable();
+                sel
+            };
+            ensure!(
+                retained_count == 0 || retained.len() == retained_count,
+                "layers retained different position counts"
+            );
+            retained_count = retained.len();
+            // Compact K, V and the position map to the lane prefix —
+            // ascending physical order is ascending position order, so
+            // the copy preserves the attention iteration order.
+            let kl = &mut kv.k[l][lane..lane + cap * d];
+            for (dst, &src) in retained.iter().enumerate() {
+                if dst != src {
+                    kl.copy_within(src * d..(src + 1) * d, dst * d);
+                }
+            }
+            let vl = &mut kv.v[l][lane..lane + cap * d];
+            for (dst, &src) in retained.iter().enumerate() {
+                if dst != src {
+                    vl.copy_within(src * d..(src + 1) * d, dst * d);
+                }
+            }
+            let newpos: Vec<usize> = {
+                let pos = &kv.positions[l][slot];
+                retained.iter().map(|&i| pos[i]).collect()
+            };
+            kv.positions[l][slot] = newpos;
+        }
+        kv.fill[slot] = retained_count;
+        kv.compactions += 1;
+        Ok(fill - retained_count)
     }
 
     fn pack_head(&self, emb: &Tensor) -> Result<Option<crate::backend::PackedHead>> {
@@ -533,6 +665,87 @@ mod tests {
             assert_eq!(&yr[d..], yl, "ring slot 1 diverged from linear cache");
         }
         assert_eq!(ring.next_pos, vec![t_total; 2]);
+    }
+
+    #[test]
+    fn compacted_lane_keep_one_matches_ring_bitwise() {
+        // Feeding T > window tokens through a Cur{keep: 1.0} compacted
+        // lane (compact-on-full, drop-oldest) must produce bit-identical
+        // layer outputs to the exact ring: the lane machinery (append
+        // writes, compaction row moves, flat ascending attention) is
+        // pure bookkeeping, so every keep < 1 divergence is an eviction
+        // *choice*, never numeric drift.
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let (d, di) = (cfg.d_model, cfg.d_inter);
+        let (window, t_total) = (4usize, 9usize);
+        let mut rng = Rng::new(44, 0);
+        let layer = OwnedLayer::random(&mut rng, d, di, 0.2);
+        let xs: Vec<Tensor> =
+            (0..t_total).map(|_| rand_t(&mut rng, &[1, 1, d], 1.0)).collect();
+        let mut ring = crate::backend::KvCache::new(1, 1, window, d);
+        let policy = crate::backend::KvPolicy::Cur { keep: 1.0, sinks: 1, recent: 1 };
+        let mut lane = crate::backend::KvCache::with_policy(1, 1, window, d, policy);
+        for x in &xs {
+            if lane.needs_compaction(0) {
+                be.compress_kv_slot(&cfg, &mut lane, 0).unwrap();
+            }
+            let y_ring = be
+                .layer_decode_batch(&cfg, &layer.params(), x, &mut ring, 0, &[0])
+                .unwrap();
+            ring.advance(&[0]);
+            let y_lane = be
+                .layer_decode_batch(&cfg, &layer.params(), x, &mut lane, 0, &[0])
+                .unwrap();
+            lane.advance(&[0]);
+            assert_eq!(y_ring, y_lane, "compacted lane diverged from the exact ring");
+        }
+        assert!(lane.compactions > 0, "the lane never compacted");
+        assert_eq!(lane.next_pos[0], t_total);
+    }
+
+    #[test]
+    fn compress_kv_slot_moves_rows_intact() {
+        // Compaction must relocate whole K/V rows (values untouched),
+        // keep the maps ascending, and honor sink + recent protection.
+        let be = NativeBackend::new();
+        let cfg = small_cfg();
+        let d = cfg.d_model;
+        let window = 8usize;
+        let policy = crate::backend::KvPolicy::Cur { keep: 0.5, sinks: 1, recent: 2 };
+        let mut kv = crate::backend::KvCache::with_policy(2, 1, window, d, policy);
+        // Hand-fill the lane: row r of layer l holds the constant
+        // l·100 + r, so provenance is readable after the move.
+        for l in 0..2 {
+            for r in 0..window {
+                for j in 0..d {
+                    kv.k[l][r * d + j] = (l * 100 + r) as f32;
+                    kv.v[l][r * d + j] = (l * 100 + r) as f32 + 0.5;
+                }
+            }
+            kv.positions[l][0] = (0..window).collect();
+        }
+        kv.fill[0] = window;
+        kv.next_pos[0] = window;
+        let dropped = be.compress_kv_slot(&cfg, &mut kv, 0).unwrap();
+        assert_eq!(kv.fill[0], 4, "keep 0.5 of an 8-row window retains 4");
+        assert_eq!(dropped, 4);
+        assert_eq!(kv.compactions, 1);
+        for l in 0..2 {
+            let map = &kv.positions[l][0];
+            assert_eq!(map.len(), 4);
+            assert!(map.windows(2).all(|w| w[0] < w[1]), "map must stay ascending");
+            assert_eq!(map[0], 0, "the sink position must survive");
+            assert_eq!(map[2..].to_vec(), vec![6, 7], "the recent tail must survive");
+            for (row, &p) in map.iter().enumerate() {
+                assert_eq!(kv.k[l][row * d], (l * 100 + p) as f32, "layer {l} K row moved wrong");
+                assert_eq!(kv.v[l][row * d], (l * 100 + p) as f32 + 0.5, "layer {l} V row moved wrong");
+            }
+        }
+        // An exact-policy cache refuses compaction outright.
+        let mut exact = crate::backend::KvCache::new(1, 1, window, d);
+        exact.next_pos[0] = window;
+        assert!(be.compress_kv_slot(&cfg, &mut exact, 0).is_err());
     }
 
     #[test]

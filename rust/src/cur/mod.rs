@@ -172,6 +172,59 @@ fn take_cols(m: &Mat, k: usize) -> Mat {
     m.select_cols(&idx)
 }
 
+/// Value-guided KV-cache position selection (PAPERS: *Value-Guided KV
+/// Compression via Approximated CUR Decomposition*, arXiv:2509.15038):
+/// pick the `keep` cached positions whose keys span the most
+/// informative subspace, exactly the way the compression path picks
+/// rows of a weight matrix — truncated SVD of an importance-weighted
+/// matrix, then DEIM over the leading left singular vectors.
+///
+/// `keys` is the (n positions × d) cached post-RoPE key matrix of one
+/// layer/slot lane; `weights` is one non-negative mass estimate per
+/// position (the serving path uses ‖k_i‖·‖v_i‖ — the value norm bounds
+/// position `i`'s contribution to the attention output, the key norm
+/// its score leverage). Each key row is scaled by its weight before
+/// factorization, so high-mass positions dominate the subspace DEIM
+/// interpolates.
+///
+/// Deterministic (fixed internal seed on the randomized-SVD path).
+/// Returns `keep` distinct indices into `0..n`, unsorted; when the
+/// matrix cannot supply `keep` singular vectors (`keep > d`) the
+/// remainder is filled greedily by descending weight.
+pub fn select_kv_positions(keys: &Mat, weights: &[f64], keep: usize) -> Result<Vec<usize>> {
+    let n = keys.rows;
+    ensure!(weights.len() == n, "need one weight per cached position");
+    ensure!(keep >= 1 && keep <= n, "keep {keep} out of range 1..={n}");
+    if keep == n {
+        return Ok((0..n).collect());
+    }
+    let mut s = Mat::zeros(n, keys.cols);
+    for i in 0..n {
+        ensure!(weights[i].is_finite() && weights[i] >= 0.0, "weight {i} must be finite >= 0");
+        let w = weights[i].max(1e-12);
+        for (dst, &src) in s.row_mut(i).iter_mut().zip(keys.row(i)) {
+            *dst = src * w;
+        }
+    }
+    let r = keep.min(keys.cols);
+    let mut rng = Rng::new(0x5eed, 0);
+    let svd = svd_for_selection(&s, r, &mut rng);
+    let p_vecs = take_cols(&svd.u, r);
+    let mut picked = deim(&p_vecs)?;
+    if picked.len() < keep {
+        let mut in_set = vec![false; n];
+        for &i in &picked {
+            in_set[i] = true;
+        }
+        let mut rest: Vec<usize> = (0..n).filter(|&i| !in_set[i]).collect();
+        rest.sort_by(|&a, &b| {
+            weights[b].partial_cmp(&weights[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        picked.extend(rest.into_iter().take(keep - picked.len()));
+    }
+    Ok(picked)
+}
+
 /// Theorem 3.1 error constants for DEIM selections:
 /// `η_p = ‖(P[p, :])^{-1}‖₂ = 1/σ_min(P[p, :])` and likewise for q.
 pub fn deim_error_constants(p_vecs: &Mat, rows: &[usize], q_vecs: &Mat, cols: &[usize]) -> (f64, f64) {
@@ -351,6 +404,69 @@ mod tests {
             let perturbed = w.sub(&fu.reconstruct()).fro_norm();
             assert!(perturbed >= base - 1e-9, "perturbed {perturbed} < base {base}");
         }
+    }
+
+    #[test]
+    fn kv_selection_distinct_in_range_and_deterministic() {
+        let mut rng = Rng::new(21, 0);
+        for _ in 0..10 {
+            let n = 12 + rng.below(50);
+            let d = 8 + rng.below(24);
+            let keep = 1 + rng.below(n - 1);
+            let keys = Mat::random_normal(n, d, &mut rng);
+            let weights: Vec<f64> = (0..n).map(|_| rng.f64() + 0.05).collect();
+            let idx = select_kv_positions(&keys, &weights, keep).unwrap();
+            assert_eq!(idx.len(), keep);
+            let mut s = idx.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), keep, "duplicate kv indices");
+            assert!(idx.iter().all(|&i| i < n));
+            // Same inputs, same picks (no hidden randomness).
+            assert_eq!(select_kv_positions(&keys, &weights, keep).unwrap(), idx);
+        }
+    }
+
+    #[test]
+    fn kv_selection_prefers_high_mass_positions() {
+        // Eight positions: rows 1, 4 and 6 carry large orthogonal keys
+        // with large weights, the rest are tiny noise. Value-guided
+        // selection at keep=3 must find exactly the heavy trio.
+        let mut rng = Rng::new(22, 0);
+        let (n, d) = (8usize, 16usize);
+        let mut keys = Mat::random_normal(n, d, &mut rng);
+        keys.scale(0.01);
+        let mut weights = vec![0.05f64; n];
+        for (axis, &i) in [1usize, 4, 6].iter().enumerate() {
+            for j in 0..d {
+                keys[(i, j)] = 0.0;
+            }
+            keys[(i, axis)] = 10.0;
+            weights[i] = 5.0 - axis as f64; // distinct masses break SVD ties
+        }
+        let mut idx = select_kv_positions(&keys, &weights, 3).unwrap();
+        idx.sort_unstable();
+        assert_eq!(idx, vec![1, 4, 6]);
+    }
+
+    #[test]
+    fn kv_selection_keep_all_and_overflow_fill() {
+        let mut rng = Rng::new(23, 0);
+        // keep == n short-circuits to the identity selection.
+        let keys = Mat::random_normal(6, 4, &mut rng);
+        let w = vec![1.0; 6];
+        let mut idx = select_kv_positions(&keys, &w, 6).unwrap();
+        idx.sort_unstable();
+        assert_eq!(idx, vec![0, 1, 2, 3, 4, 5]);
+        // keep > d: DEIM supplies d picks, the rest fill by weight.
+        let keys = Mat::random_normal(7, 2, &mut rng);
+        let w: Vec<f64> = (0..7).map(|i| i as f64 + 0.5).collect();
+        let idx = select_kv_positions(&keys, &w, 5).unwrap();
+        assert_eq!(idx.len(), 5);
+        let mut s = idx.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 5);
     }
 
     #[test]

@@ -148,8 +148,8 @@ pub fn uuid_string(rng: &mut Rng) -> String {
 }
 
 /// The paper's UUID→UUID pair task (App. B):
-/// "given this uuid : <in> the corresponding uuid is : <out>", char-level
-/// for the UUIDs. Loss mask covers the output UUID chars.
+/// `given this uuid : <in> the corresponding uuid is : <out>`,
+/// char-level for the UUIDs. Loss mask covers the output UUID chars.
 pub fn uuid_item(vocab: &Vocab, input: &str, output: &str, seq: usize) -> TrainItem {
     let mut tokens = vec![BOS];
     tokens.extend(vocab.encode("given this uuid :"));

@@ -6,6 +6,7 @@
 //! * the switched full-model logits artifacts for PEFT-adapted models
 //!   (`model_logits_switched_{du,lora,mora,curlora}`).
 
+use crate::backend::{KvCache, KvPolicy};
 use crate::data::ChoiceItem;
 use crate::data::{Corpus, Vocab};
 use crate::linalg::Mat;
@@ -33,6 +34,54 @@ pub fn perplexity(
         let nll = pipe.nll(store, plan, &tokens, &targets)?;
         for &x in nll.f32s()? {
             total += x as f64;
+            count += 1;
+        }
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Teacher-forced perplexity through the *decode* path under a KV
+/// eviction policy: each sequence runs one token per step through a
+/// single-slot cache — compacting whenever the lane fills, exactly like
+/// serving traffic under `--kv-policy` — and the next-token NLL is read
+/// off the decode-step logits. The quality harness for the compressed
+/// KV cache: run it twice on sequences longer than the attention window
+/// (so compaction actually fires), once with [`KvPolicy::Exact`] and
+/// once with [`KvPolicy::Cur`], and the ratio is the perplexity cost of
+/// the evicted positions. `ppl = exp(mean per-token NLL)`.
+pub fn decode_perplexity(
+    pipe: &Pipeline,
+    store: &TensorStore,
+    plan: &LayerPlan,
+    policy: KvPolicy,
+    seqs: &[Vec<i32>],
+) -> Result<f64> {
+    let cfg = &pipe.cfg;
+    ensure!(!seqs.is_empty(), "decode perplexity needs at least one sequence");
+    policy.validate(cfg.seq)?;
+    let packed = pipe.pack_head(store)?;
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for seq in seqs {
+        ensure!(seq.len() >= 2, "decode perplexity needs sequences of >= 2 tokens");
+        let mut kv = KvCache::with_policy(cfg.n_layers, 1, cfg.seq, cfg.d_model, policy);
+        for i in 0..seq.len() - 1 {
+            let logits = pipe.decode_step_logits(
+                store,
+                plan,
+                &mut kv,
+                &[0],
+                &[seq[i]],
+                packed.as_ref(),
+            )?;
+            let row = &logits.f32s()?[..cfg.vocab];
+            let t = seq[i + 1];
+            ensure!(
+                (0..cfg.vocab as i32).contains(&t),
+                "target token {t} out of vocab 0..{}",
+                cfg.vocab
+            );
+            total += nll_row(row, t as usize);
             count += 1;
         }
     }
@@ -172,6 +221,16 @@ pub fn switched_logits(
     out.remove("logits").context("logits missing")
 }
 
+/// Per-row NLL from a logits row: max-subtracted logsumexp minus the
+/// target logit, accumulated in f64. The single definition every
+/// host-side NLL path shares — the decode-path quality harness depends
+/// on exact vs compressed runs computing this identically.
+fn nll_row(row: &[f32], target: usize) -> f64 {
+    let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let logz = maxv + row.iter().map(|&x| ((x as f64) - maxv).exp()).sum::<f64>().ln();
+    logz - row[target] as f64
+}
+
 /// Host-side mean NLL from logits + targets (used for adapted models).
 pub fn nll_from_logits_host(logits: &Tensor, targets: &[i32], mask: Option<&[f32]>) -> Result<f64> {
     let (b, s, v) = (logits.shape[0], logits.shape[1], logits.shape[2]);
@@ -185,11 +244,7 @@ pub fn nll_from_logits_host(logits: &Tensor, targets: &[i32], mask: Option<&[f32
             continue;
         }
         let row = &data[i * v..(i + 1) * v];
-        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-        let logz = maxv
-            + row.iter().map(|&x| ((x as f64) - maxv).exp()).sum::<f64>().ln();
-        let nll = logz - row[targets[i] as usize] as f64;
-        total += w * nll;
+        total += w * nll_row(row, targets[i] as usize);
         wsum += w;
     }
     Ok(total / wsum.max(1.0))

@@ -10,6 +10,7 @@
 //!   info       artifact/manifest inventory
 
 use anyhow::{bail, Result};
+use curing::backend::KvPolicy;
 use curing::compress::{CompressOptions, LayerStrategy};
 use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
 use curing::data::{Corpus, CorpusKind, SEED_HEAL};
@@ -72,6 +73,7 @@ COMMANDS
   generate  --prompt \"the atom\" [--layers K] [--tokens 24]  greedy decode
   serve     --config tiny [--mode score|generate|mixed] [--clients 4]
             [--requests 32] [--slots 4] [--tokens 24] [--prompt-len 8]
+            [--kv-policy exact|cur:<keep>[:<sinks>:<recent>]]
 
 ENV  CURING_BACKEND (native|pjrt; default: pjrt when built in and artifacts exist)
      CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
@@ -267,6 +269,7 @@ fn serve(args: &Args) -> Result<()> {
     let n_new = args.usize_opt("tokens", 24);
     let prompt_len = args.usize_opt("prompt-len", 8);
     let steps = args.usize_opt("steps", default_pretrain_steps());
+    let kv_policy = KvPolicy::parse(&args.str_opt("kv-policy", "exact"))?;
     check_unknown(args)?;
     if !matches!(mode.as_str(), "score" | "generate" | "mixed") {
         bail!("unknown serve mode '{mode}' (score|generate|mixed)");
@@ -305,6 +308,7 @@ fn serve(args: &Args) -> Result<()> {
         plan: LayerPlan::all_dense(&pipe.cfg),
         max_wait: Duration::from_millis(30),
         slots,
+        kv_policy,
     };
     let stats = server.run(rx)?;
     if stats.served > 0 {
@@ -330,6 +334,18 @@ fn serve(args: &Args) -> Result<()> {
             stats.prefills,
             stats.tok_p50_ms,
             stats.tok_p95_ms
+        );
+        let exact_bound = slots
+            * curing::backend::KvCache::exact_slot_bound(
+                pipe.cfg.n_layers,
+                pipe.cfg.seq,
+                pipe.cfg.d_model,
+            );
+        println!(
+            "kv policy {kv_policy} | compactions {} | mean live KV {:.3} MiB (exact bound {:.3} MiB)",
+            stats.kv_compactions,
+            mib(stats.kv_live_bytes_mean),
+            mib(exact_bound as f64)
         );
     }
     println!("wall {:.2}s", stats.wall_s);

@@ -11,7 +11,7 @@
 //! [`LayerParams`] view from the store and hands execution to the
 //! runtime's [`crate::backend::Backend`] (native CPU or PJRT artifacts).
 
-use crate::backend::{Backend, KvCache, LayerParams, PackedHead, Proj};
+use crate::backend::{Backend, KvCache, KvPolicy, LayerParams, PackedHead, Proj};
 use crate::model::ModelConfig;
 use crate::runtime::Runtime;
 use crate::tensor::{Tensor, TensorStore};
@@ -321,10 +321,47 @@ impl<'rt> Pipeline<'rt> {
         Ok(argmax(&logits.f32s()?[..self.cfg.vocab]) as i32)
     }
 
+    /// One fused decode step across the active slots, returning the raw
+    /// head logits (n, 1, vocab) for each row. Under a
+    /// [`KvPolicy::Cur`] cache, any slot whose lane hit the high-water
+    /// mark is first compacted via
+    /// [`crate::backend::Backend::compress_kv_slot`] — the caller never
+    /// schedules compactions itself. Advances the slots.
+    pub fn decode_step_logits(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        kv: &mut KvCache,
+        slots: &[usize],
+        last: &[i32],
+        packed: Option<&PackedHead>,
+    ) -> Result<Tensor> {
+        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
+        ensure!(slots.len() == last.len() && !slots.is_empty(), "one token per slot");
+        if matches!(kv.policy, KvPolicy::Cur { .. }) {
+            for &slot in slots {
+                if kv.needs_compaction(slot) {
+                    self.rt.backend().compress_kv_slot(&self.cfg, kv, slot)?;
+                }
+            }
+        }
+        let n = slots.len();
+        let toks = Tensor::from_i32(&[n, 1], last.to_vec());
+        let mut x = self.embed(store, &toks)?;
+        for (l, kind) in plan.0.iter().enumerate() {
+            let params = self.layer_params(store, l, kind)?;
+            x = self.rt.backend().layer_decode_batch(&self.cfg, &params, &x, kv, l, slots)?;
+        }
+        kv.advance(slots);
+        self.head_rows(store, &x, packed)
+    }
+
     /// One fused decode step across the active slots: feed `last[r]`
     /// (slot `slots[r]`'s most recent token) as an (n, 1) batch, run one
     /// single-position layer pass per layer over all n rows at once,
     /// advance the slots, and return each slot's next greedy token.
+    /// Compacts full [`KvPolicy::Cur`] lanes first (see
+    /// [`Pipeline::decode_step_logits`]).
     pub fn decode_step(
         &self,
         store: &TensorStore,
@@ -334,17 +371,8 @@ impl<'rt> Pipeline<'rt> {
         last: &[i32],
         packed: Option<&PackedHead>,
     ) -> Result<Vec<i32>> {
-        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
-        ensure!(slots.len() == last.len() && !slots.is_empty(), "one token per slot");
         let (n, v) = (slots.len(), self.cfg.vocab);
-        let toks = Tensor::from_i32(&[n, 1], last.to_vec());
-        let mut x = self.embed(store, &toks)?;
-        for (l, kind) in plan.0.iter().enumerate() {
-            let params = self.layer_params(store, l, kind)?;
-            x = self.rt.backend().layer_decode_batch(&self.cfg, &params, &x, kv, l, slots)?;
-        }
-        kv.advance(slots);
-        let logits = self.head_rows(store, &x, packed)?;
+        let logits = self.decode_step_logits(store, plan, kv, slots, last, packed)?;
         let data = logits.f32s()?;
         Ok((0..n).map(|r| argmax(&data[r * v..(r + 1) * v]) as i32).collect())
     }
@@ -376,7 +404,32 @@ impl<'rt> Pipeline<'rt> {
         if kv_cache_disabled() {
             return self.generate_greedy_uncached(store, plan, prompts, n_new);
         }
-        self.decode_streaming(store, plan, prompts, n_new)
+        self.decode_streaming(store, plan, prompts, n_new, KvPolicy::Exact)
+    }
+
+    /// [`Pipeline::generate_greedy`] under an explicit KV eviction
+    /// policy: `KvPolicy::Exact` is the fast path above;
+    /// `KvPolicy::Cur { .. }` decodes against a CUR-compressed cache —
+    /// token-identical to the exact stream until the first compaction
+    /// (and bit-identical throughout at keep = 1.0, asserted in tests),
+    /// after which dropped positions may shift the greedy argmax. Needs
+    /// a KV-decode backend (no windowed fallback: the recompute loop
+    /// cannot reproduce compacted-cache semantics).
+    pub fn generate_greedy_with_policy(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        prompts: &[Vec<i32>],
+        n_new: usize,
+        policy: KvPolicy,
+    ) -> Result<Vec<Vec<i32>>> {
+        ensure!(
+            self.rt.backend().supports_kv_decode(),
+            "kv policy '{policy}' needs a KV-decode backend (backend '{}' has none)",
+            self.rt.backend().name()
+        );
+        policy.validate(self.cfg.seq)?;
+        self.decode_streaming(store, plan, prompts, n_new, policy)
     }
 
     /// The fast path: per-slot prefill once, then lockstep fused decode.
@@ -386,6 +439,7 @@ impl<'rt> Pipeline<'rt> {
         plan: &LayerPlan,
         prompts: &[Vec<i32>],
         n_new: usize,
+        policy: KvPolicy,
     ) -> Result<Vec<Vec<i32>>> {
         ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
         ensure!(!prompts.is_empty(), "need at least one prompt");
@@ -394,7 +448,7 @@ impl<'rt> Pipeline<'rt> {
         if n_new == 0 {
             return Ok(vec![Vec::new(); n]);
         }
-        let mut kv = KvCache::new(cfg.n_layers, n, cfg.seq, cfg.d_model);
+        let mut kv = KvCache::with_policy(cfg.n_layers, n, cfg.seq, cfg.d_model, policy);
         let packed = self.pack_head(store)?;
         let mut last = Vec::with_capacity(n);
         for (slot, prompt) in prompts.iter().enumerate() {

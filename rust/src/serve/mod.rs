@@ -15,14 +15,19 @@
 //!   single-position layer pass across all active slots
 //!   ([`crate::backend::Backend::layer_decode_batch`]), the LM head runs
 //!   against a pre-packed weight buffer, and each slot retires
-//!   independently the moment its request completes.
+//!   independently the moment its request completes. Slots honor a
+//!   [`KvPolicy`]: the exact sliding-window ring, or CUR-compressed
+//!   lanes (`--kv-policy cur:<keep>` on the CLI) that are compacted by
+//!   value-guided position selection whenever they fill —
+//!   [`ServeStats::kv_compactions`] and
+//!   [`ServeStats::kv_live_bytes_mean`] report the effect.
 //!
 //! Backend handles are not `Send` (PJRT's xla handles, the native op
 //! counter), so the server runs on the *calling* thread and clients are
 //! spawned. The server exits when the request channel disconnects and
 //! all queued work has drained — drop the last `Sender` to stop it.
 
-use crate::backend::{Backend, KvCache, PackedHead};
+use crate::backend::{Backend, KvCache, KvPolicy, PackedHead};
 use crate::data::{Corpus, CorpusKind, Vocab};
 use crate::pipeline::{LayerPlan, Pipeline};
 use crate::tensor::{Tensor, TensorStore};
@@ -109,6 +114,15 @@ pub struct ServeStats {
     /// steps, not just the decode compute.
     pub tok_p50_ms: f64,
     pub tok_p95_ms: f64,
+    /// KV-cache compactions run ([`crate::backend::Backend::compress_kv_slot`]).
+    /// Always 0 under [`KvPolicy::Exact`].
+    pub kv_compactions: usize,
+    /// Mean bytes of K/V holding cached positions
+    /// ([`KvCache::live_bytes`]), sampled after every decode step. Under
+    /// a `cur` policy this sits below the exact-cache bound
+    /// ([`KvCache::bytes`]) once lanes start compacting; 0 when no
+    /// generation ran.
+    pub kv_live_bytes_mean: f64,
     pub wall_s: f64,
 }
 
@@ -123,16 +137,27 @@ struct GenSlot {
 }
 
 /// The server. `slots` bounds concurrent generations (the KV-cache
-/// footprint: `n_layers × 2 × slots·seq·d_model × 4` bytes); scoring
-/// batches are bounded by the model config's batch size.
+/// footprint: `n_layers × 2 × slots·seq·d_model × 4` bytes — see
+/// [`KvCache`] for the full memory math); scoring batches are bounded
+/// by the model config's batch size.
 pub struct GenerationServer<'p> {
+    /// The per-layer execution pipeline (model config + backend).
     pub pipe: &'p Pipeline<'p>,
+    /// Weights served (original or CURed — any [`LayerPlan`] mix).
     pub store: &'p TensorStore,
+    /// Per-layer dense/cured execution plan.
     pub plan: LayerPlan,
     /// Max time to wait before flushing a partial scoring batch.
     pub max_wait: Duration,
     /// Concurrent generation slots.
     pub slots: usize,
+    /// KV-cache eviction policy for the generation slots:
+    /// [`KvPolicy::Exact`] (the sliding-window ring) or
+    /// [`KvPolicy::Cur`] (CUR-compressed lanes; full lanes are compacted
+    /// transparently inside [`Pipeline::decode_step`], and
+    /// [`ServeStats::kv_compactions`] / [`ServeStats::kv_live_bytes_mean`]
+    /// report the effect). Scoring traffic is unaffected.
+    pub kv_policy: KvPolicy,
 }
 
 /// The scoring server is one mode of the generation server (send only
@@ -144,11 +169,15 @@ impl<'p> GenerationServer<'p> {
     /// work has drained. Runs on the calling thread.
     pub fn run(&self, rx: Receiver<Request>) -> Result<ServeStats> {
         let cfg = &self.pipe.cfg;
+        // Reject an unusable policy before accepting traffic — the
+        // protected set must leave room to evict something.
+        self.kv_policy.validate(cfg.seq)?;
         let n_slots = self.slots.max(1);
         let mut stats = ServeStats::default();
         let mut score_lat: Vec<f64> = Vec::new();
         let mut tok_lat: Vec<f64> = Vec::new();
         let mut slot_steps = 0usize;
+        let mut kv_live_accum = 0.0f64;
         let t0 = Instant::now();
         let mut pending: Vec<ScoreRequest> = Vec::new();
         let mut queue: VecDeque<GenRequest> = VecDeque::new();
@@ -236,7 +265,13 @@ impl<'p> GenerationServer<'p> {
                     continue;
                 }
                 if kv.is_none() {
-                    kv = Some(KvCache::new(cfg.n_layers, n_slots, cfg.seq, cfg.d_model));
+                    kv = Some(KvCache::with_policy(
+                        cfg.n_layers,
+                        n_slots,
+                        cfg.seq,
+                        cfg.d_model,
+                        self.kv_policy,
+                    ));
                     packed = self.pipe.pack_head(self.store)?;
                 }
                 let slot = active.iter().position(|s| s.is_none()).expect("free slot");
@@ -310,6 +345,7 @@ impl<'p> GenerationServer<'p> {
                 let now = Instant::now();
                 stats.decode_steps += 1;
                 slot_steps += slot_ids.len();
+                kv_live_accum += kvm.live_bytes() as f64;
                 for (&slot, &tok) in slot_ids.iter().zip(&next) {
                     let done = {
                         let gs = active[slot].as_mut().expect("active slot");
@@ -327,6 +363,10 @@ impl<'p> GenerationServer<'p> {
                     if done {
                         let gs = active[slot].take().expect("active slot");
                         n_active -= 1;
+                        // Release the lane immediately so live-KV stats
+                        // count only in-flight requests (admission would
+                        // reset it anyway).
+                        kvm.reset_slot(slot);
                         Self::retire(gs, &mut stats);
                     }
                 }
@@ -338,6 +378,10 @@ impl<'p> GenerationServer<'p> {
         }
         if stats.decode_steps > 0 {
             stats.mean_active_slots = slot_steps as f64 / stats.decode_steps as f64;
+            stats.kv_live_bytes_mean = kv_live_accum / stats.decode_steps as f64;
+        }
+        if let Some(kvm) = &kv {
+            stats.kv_compactions = kvm.compactions;
         }
         stats.p50_latency_ms = percentile(&score_lat, 50.0);
         stats.p95_latency_ms = percentile(&score_lat, 95.0);
@@ -558,6 +602,7 @@ mod tests {
             plan: LayerPlan::all_dense(&cfg),
             max_wait: Duration::from_millis(20),
             slots: 1,
+            kv_policy: KvPolicy::Exact,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, 3);
@@ -624,6 +669,7 @@ mod tests {
             plan: plan.clone(),
             max_wait: Duration::from_millis(10),
             slots: 3,
+            kv_policy: KvPolicy::Exact,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.gen_served, prompts.len());
@@ -641,6 +687,56 @@ mod tests {
                 .unwrap();
             assert_eq!(resp.tokens, want[0], "continuous batching diverged for {p:?}");
             assert!(resp.latency_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn cur_kv_policy_serves_mixed_traffic_with_smaller_cache() {
+        // Compressed KV cache end-to-end: generation requests decoding
+        // well past the window under cur:0.5 — lanes compact
+        // (kv_compactions > 0), the mean live cache stays below the
+        // exact-cache bound, and every request still completes with the
+        // full token count, with scoring traffic interleaved on the
+        // same queue.
+        let (rt, cfg, store) = mini_setup();
+        let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+        let vocab = Vocab::build();
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        let n_new = 2 * cfg.seq; // well past the high-water mark
+        let score_resps =
+            spawn_score_clients(&tx, &vocab, CorpusKind::SynthC4, cfg.seq, 1, 2, 1);
+        let gen_resps =
+            spawn_gen_clients(&tx, &vocab, CorpusKind::SynthC4, 6, n_new, 2, 1, 1);
+        drop(tx);
+        let server = GenerationServer {
+            pipe: &pipe,
+            store: &store,
+            plan: LayerPlan::all_dense(&cfg),
+            max_wait: Duration::from_millis(10),
+            slots: 2,
+            kv_policy: KvPolicy::Cur { keep: 0.5, sinks: 2, recent: 4 },
+        };
+        let stats = server.run(rx).unwrap();
+        assert_eq!(stats.gen_served, 2);
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.prefills, 2, "compaction must never re-prefill");
+        assert!(stats.kv_compactions > 0, "lanes never compacted");
+        let exact_bound =
+            (2 * KvCache::exact_slot_bound(cfg.n_layers, cfg.seq, cfg.d_model)) as f64;
+        assert!(
+            stats.kv_live_bytes_mean > 0.0 && stats.kv_live_bytes_mean < exact_bound,
+            "mean live KV {} not below the exact bound {exact_bound}",
+            stats.kv_live_bytes_mean
+        );
+        for r in gen_resps {
+            let resp = r.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.tokens.len(), n_new);
+        }
+        for r in score_resps {
+            while let Ok(resp) = r.recv_timeout(Duration::from_secs(5)) {
+                assert!(resp.mean_nll.is_finite());
+            }
         }
     }
 
@@ -779,6 +875,7 @@ mod tests {
             plan: LayerPlan::all_dense(&cfg),
             max_wait: Duration::from_millis(10),
             slots: 2,
+            kv_policy: KvPolicy::Exact,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, n_req);
@@ -830,6 +927,7 @@ mod tests {
             plan: LayerPlan::all_dense(&cfg),
             max_wait: Duration::from_millis(15),
             slots: 2,
+            kv_policy: KvPolicy::Exact,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, 4);
