@@ -51,7 +51,7 @@ fn main() -> Result<()> {
     let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
     println!("      angular distances (paper Table 4 analog), ascending:");
     let mut order = pipe.cfg.middle_layers();
-    order.sort_by(|&a, &b| calib.angular[a].partial_cmp(&calib.angular[b]).unwrap());
+    order.sort_by(|&a, &b| calib.angular[a].total_cmp(&calib.angular[b]));
     for &l in &order {
         println!("        layer {:>2}: {:.4}", l, calib.angular[l]);
     }
@@ -101,35 +101,27 @@ fn main() -> Result<()> {
     let healed = ctx.eval_suite(&pipe, &student, &plan, &sizes)?;
     println!("      healed:   {}", healed.row());
 
-    // 6. A few full-model KD steps (0.9*KD + 0.1*CE) to exercise the
-    // switched training path end to end. The switched graphs are AOT
-    // artifacts, so this leg needs the pjrt backend.
-    let final_suite = if ctx.rt.supports_artifacts() {
-        println!("[6/6] full-model KD (switched artifact, 5 steps)...");
-        let runner = SwitchedRunner::new("tiny", "du", StepMode::Heal);
-        let mut adapters = TensorStore::new();
-        let mut fullopt = TensorStore::new();
-        for step in 0..5 {
-            let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
-            let tokens =
-                curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
-            let targets =
-                curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
-            let loss = runner.step(
-                &pipe, &dense, &mut student, &mut adapters, &mut fullopt, &tokens, &targets,
-                None, 1e-4, step + 1,
-            )?;
-            println!("        step {step}: loss {loss:.4}");
-        }
-        ctx.eval_suite(&pipe, &student, &plan, &sizes)?
-    } else {
-        println!(
-            "[6/6] skipping full-model switched KD (needs --features pjrt + `make artifacts`; \
-             backend: {})",
-            ctx.rt.backend_name()
-        );
-        healed.clone()
-    };
+    // 6. A few full-model KD steps (0.9·KD(T=10) + 0.1·CE) to exercise
+    // the switched training path end to end. Runs on every backend: the
+    // native backend executes the blended full-model graph directly, the
+    // pjrt backend dispatches the switched AOT artifact.
+    println!("[6/6] full-model KD (switched ΔU graph, 5 steps)...");
+    let runner = SwitchedRunner::new(curing::peft::Adapter::Du, StepMode::Heal);
+    let mut adapters = TensorStore::new();
+    let mut fullopt = TensorStore::new();
+    for step in 0..5 {
+        let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
+        let tokens =
+            curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
+        let targets =
+            curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
+        let loss = runner.step(
+            &pipe, &dense, &mut student, &mut adapters, &mut fullopt, &tokens, &targets,
+            None, 1e-4, step + 1,
+        )?;
+        println!("        step {step}: loss {loss:.4}");
+    }
+    let final_suite = ctx.eval_suite(&pipe, &student, &plan, &sizes)?;
     println!("      final:    {}", final_suite.row());
 
     // Record + summary.

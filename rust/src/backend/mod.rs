@@ -51,8 +51,50 @@ impl Proj<'_> {
     }
 }
 
+/// One projection's PEFT-adapter delta, blended onto the base projection
+/// by the switched full-model graphs: `y = base(x) + delta(x)`. The base
+/// may itself be dense or CUR-factored — the delta is additive either
+/// way, and every family's trainable factor starts at zero (LoRA `B`,
+/// MoRA `M`, CURLoRA `U`), so a freshly initialized adapter is exactly
+/// inert.
+pub enum ProjAdapter<'a> {
+    /// LoRA (Hu et al.): `delta = (x·A)·B`, `A` (m, r) normal-init,
+    /// `B` (r, n) zero-init. Both train.
+    Lora { a: &'a Tensor, b: &'a Tensor },
+    /// MoRA (Jiang et al.): `delta = decompress(compress(x)·M)` with a
+    /// single square trainable `M` (r, r). Compression sums input
+    /// features in contiguous groups of `ceil(m/r)`; decompression
+    /// broadcasts each of the r outputs over its contiguous group of
+    /// `ceil(n/r)` output features (the papers' parameter-free
+    /// "sharing" operators).
+    Mora { m: &'a Tensor },
+    /// CURLoRA (Fawi): `delta = ((x·C)·U)·R` with `C` (m, r) / `R`
+    /// (r, n) frozen inverted-importance slices of `W` and `U` (r, r)
+    /// trainable, zero-init.
+    CurLora { c: &'a Tensor, u: &'a Tensor, r: &'a Tensor },
+}
+
+/// Per-layer adapter deltas for the curable projections. `None` entries
+/// blend nothing; [`Adapter::Du`](crate::peft::Adapter) never builds a
+/// view at all — its trainable ΔU already lives inside the student's
+/// merged `U = U₀ + ΔU`.
+#[derive(Default)]
+pub struct AdapterView<'a> {
+    pub q: Option<ProjAdapter<'a>>,
+    pub k: Option<ProjAdapter<'a>>,
+    pub gate: Option<ProjAdapter<'a>>,
+}
+
+impl AdapterView<'_> {
+    pub fn is_empty(&self) -> bool {
+        self.q.is_none() && self.k.is_none() && self.gate.is_none()
+    }
+}
+
 /// One transformer layer's parameters, as the backend consumes them.
 /// Only q/k/gate are curable (paper §4.1); the rest are always dense.
+/// `adapter` carries the switched graphs' PEFT deltas (blended by the
+/// train/heal forward only; `None` everywhere else).
 pub struct LayerParams<'a> {
     pub ln1: &'a Tensor,
     pub ln2: &'a Tensor,
@@ -63,6 +105,29 @@ pub struct LayerParams<'a> {
     pub gate: Proj<'a>,
     pub up: &'a Tensor,
     pub down: &'a Tensor,
+    pub adapter: Option<AdapterView<'a>>,
+}
+
+/// Which full-model switched step family to run (the PEFT comparison
+/// experiments, Figs 5–7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Healing: `0.9·KD(T=10) + 0.1·CE` against the dense teacher's
+    /// logits on the same batch (KD = T²·KL(teacher‖student) over
+    /// temperature-T softmaxes, the standard Hinton scaling).
+    Heal,
+    /// Task fine-tuning: cross-entropy masked to the answer tokens.
+    Task,
+}
+
+impl StepMode {
+    /// Artifact-name stem (`heal_full` / `task_step`).
+    pub fn artifact_stem(&self) -> &'static str {
+        match self {
+            StepMode::Heal => "heal_full",
+            StepMode::Task => "task_step",
+        }
+    }
 }
 
 /// Output of one calibration layer forward (WANDA taps, paper §4.2).
@@ -402,6 +467,28 @@ impl KvCache {
     }
 }
 
+/// Whether a switched-graph tensor name is a PEFT adapter parameter
+/// (`lora_*` / `mora_*` / `cl_*` suffix after the `L{l}.` part).
+pub fn is_adapter_param(name: &str) -> bool {
+    let suffix = name.split('.').next_back().unwrap_or("");
+    suffix.starts_with("lora_") || suffix.starts_with("mora_") || suffix.starts_with("cl_")
+}
+
+/// Whether a switched-graph tensor name is a CUR student factor
+/// (`c_` / `u_` / `du_` / `r_` suffix).
+pub fn is_cur_param(name: &str) -> bool {
+    let suffix = name.split('.').next_back().unwrap_or("");
+    suffix.starts_with("c_")
+        || suffix.starts_with("u_")
+        || suffix.starts_with("du_")
+        || suffix.starts_with("r_")
+}
+
+/// Layer index of an `L{l}.*` tensor name.
+pub fn layer_of(name: &str) -> Option<usize> {
+    name.strip_prefix('L')?.split('.').next()?.parse().ok()
+}
+
 /// Pre-packed LM-head weights for the decode hot loop: the tied
 /// embedding (vocab, d) re-laid out into column panels so the
 /// logits matmul streams one contiguous buffer and shares each panel
@@ -630,6 +717,61 @@ pub trait Backend {
         t: f32,
     ) -> Result<HealOut>;
 
+    /// One full-model switched optimizer step (the PEFT comparisons,
+    /// Figs 5–7): forward the cured `student` with `adapter`'s deltas
+    /// blended onto the q/k/gate projections, compute the [`StepMode`]
+    /// loss ([`StepMode::Heal`] needs the dense `teacher` for KD), and
+    /// Adam-update **only** the active adapter's parameters — ΔU for
+    /// `Du` (written to `student`), A/B for LoRA, M for MoRA, U for
+    /// CURLoRA (written to `adapters`; C/R stay frozen). Moments live in
+    /// `opt` under `{tag}.{m,v}.{name}`. Returns the batch loss.
+    ///
+    /// Missing tensors of the *active* adapter family, and missing
+    /// student factors of a *cured* layer, are hard errors — a typo'd
+    /// tensor name must never silently train or evaluate the base model.
+    #[allow(clippy::too_many_arguments)]
+    fn switched_step(
+        &self,
+        cfg: &ModelConfig,
+        teacher: &TensorStore,
+        student: &mut TensorStore,
+        adapters: &mut TensorStore,
+        opt: &mut TensorStore,
+        adapter: crate::peft::Adapter,
+        mode: StepMode,
+        tokens: &Tensor,
+        targets: &Tensor,
+        loss_mask: Option<&Tensor>,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        let _ = (cfg, teacher, student, adapters, opt, adapter, mode, tokens, targets,
+                 loss_mask, lr, t);
+        bail!(
+            "backend '{}' has no switched full-model step implementation",
+            self.name()
+        )
+    }
+
+    /// Logits of the adapter-blended student model, (b, s, vocab) — the
+    /// eval counterpart of [`Backend::switched_step`], with the same
+    /// strict missing-tensor rules.
+    fn switched_logits(
+        &self,
+        cfg: &ModelConfig,
+        teacher: &TensorStore,
+        student: &TensorStore,
+        adapters: &TensorStore,
+        adapter: crate::peft::Adapter,
+        tokens: &Tensor,
+    ) -> Result<Tensor> {
+        let _ = (cfg, teacher, student, adapters, adapter, tokens);
+        bail!(
+            "backend '{}' has no switched full-model logits implementation",
+            self.name()
+        )
+    }
+
     /// Whether this backend can execute arbitrary named AOT artifacts
     /// (the switched full-model train/eval graphs used by the PEFT
     /// comparison experiments).
@@ -660,5 +802,31 @@ pub trait Backend {
              (build with --features pjrt and run `make artifacts`)",
             self.name()
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_classifiers() {
+        assert!(is_adapter_param("L3.lora_a_q"));
+        assert!(is_adapter_param("L3.mora_m_gate"));
+        assert!(is_adapter_param("L3.cl_u_k"));
+        assert!(!is_adapter_param("L3.w_q"));
+        assert!(is_cur_param("L3.du_q"));
+        assert!(is_cur_param("L3.c_gate"));
+        assert!(!is_cur_param("L3.w_gate"));
+        assert!(!is_cur_param("emb"));
+        assert_eq!(layer_of("L3.du_q"), Some(3));
+        assert_eq!(layer_of("L12.w_gate"), Some(12));
+        assert_eq!(layer_of("emb"), None);
+    }
+
+    #[test]
+    fn step_mode_stems() {
+        assert_eq!(StepMode::Heal.artifact_stem(), "heal_full");
+        assert_eq!(StepMode::Task.artifact_stem(), "task_step");
     }
 }

@@ -24,9 +24,29 @@ use super::math::{
     rmsnorm_fwd, rmsnorm_into, rope_apply, rope_apply_rows_local, rope_row_into,
     rope_tables_cached, silu,
 };
-use crate::backend::{LayerParams, Proj};
+use crate::backend::{LayerParams, Proj, ProjAdapter};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
+
+/// MoRA's parameter-free compression group size: input features are
+/// summed in contiguous groups of `ceil(dim/rank)` (and outputs
+/// broadcast the same way), so `rank` groups always cover `dim`.
+pub(super) fn mora_group(dim: usize, rank: usize) -> usize {
+    dim.div_ceil(rank)
+}
+
+/// MoRA compress: (rows × m) → (rows × rank) by contiguous group sums.
+fn mora_compress(x: &[f32], rows: usize, m: usize, rank: usize, out: &mut [f32]) {
+    let gi = mora_group(m, rank);
+    out.fill(0.0);
+    for r in 0..rows {
+        let xr = &x[r * m..(r + 1) * m];
+        let or = &mut out[r * rank..(r + 1) * rank];
+        for (i, &v) in xr.iter().enumerate() {
+            or[i / gi] += v;
+        }
+    }
+}
 
 /// Problem dimensions of one layer call.
 #[derive(Debug, Clone, Copy)]
@@ -99,25 +119,136 @@ pub(super) struct ProjCache {
     pub hcu: Vec<f32>,
 }
 
-/// Projection forward: returns the output plus the chain cache when cured.
+/// Cached intermediates of a blended adapter delta (the switched
+/// graphs' backward pass consumes them).
+pub(super) struct AdapterCache {
+    /// First chain stage, (rows × r): LoRA `x·A`, MoRA `compress(x)`,
+    /// CURLoRA `x·C`.
+    pub h1: Vec<f32>,
+    /// Second chain stage, (rows × r): MoRA `compress(x)·M`, CURLoRA
+    /// `(x·C)·U`. Empty for LoRA (its delta is a two-stage chain).
+    pub h2: Vec<f32>,
+}
+
+/// Validate an adapter's factor shapes against the base projection's
+/// (m, n) and return its rank.
+pub(super) fn adapter_rank(ad: &ProjAdapter, m: usize, n: usize, what: &str) -> Result<usize> {
+    match ad {
+        ProjAdapter::Lora { a, b } => {
+            ensure!(
+                a.shape.len() == 2 && a.shape[0] == m,
+                "{what}: lora A must be ({m}, r), got {:?}",
+                a.shape
+            );
+            let r = a.shape[1];
+            ensure!(
+                b.shape == [r, n],
+                "{what}: lora B must be ({r}, {n}), got {:?}",
+                b.shape
+            );
+            Ok(r)
+        }
+        ProjAdapter::Mora { m: mm } => {
+            ensure!(
+                mm.shape.len() == 2 && mm.shape[0] == mm.shape[1],
+                "{what}: mora M must be square, got {:?}",
+                mm.shape
+            );
+            let r = mm.shape[0];
+            ensure!(r <= m && r <= n, "{what}: mora rank {r} exceeds ({m}, {n})");
+            Ok(r)
+        }
+        ProjAdapter::CurLora { c, u, r } => {
+            ensure!(
+                c.shape.len() == 2 && c.shape[0] == m,
+                "{what}: curlora C must be ({m}, r), got {:?}",
+                c.shape
+            );
+            let rank = c.shape[1];
+            ensure!(
+                u.shape == [rank, rank] && r.shape == [rank, n],
+                "{what}: inconsistent curlora factors (C {:?}, U {:?}, R {:?})",
+                c.shape,
+                u.shape,
+                r.shape
+            );
+            Ok(rank)
+        }
+    }
+}
+
+/// Blend one adapter delta into `out` (+=) and return its cache.
+/// The delta is computed separately and added, so a zero-initialized
+/// trainable factor (LoRA B, MoRA M, CURLoRA U) leaves the base output
+/// numerically untouched — the zero-adapter identity the tests pin.
+fn adapter_forward(
+    h: &[f32],
+    rows: usize,
+    ad: &ProjAdapter,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+    what: &str,
+) -> Result<AdapterCache> {
+    let rank = adapter_rank(ad, m, n, what)?;
+    match ad {
+        ProjAdapter::Lora { a, b } => {
+            let h1 = matmul_nn(h, a.f32s()?, rows, m, rank);
+            let delta = matmul_nn(&h1, b.f32s()?, rows, rank, n);
+            add_inplace(out, &delta);
+            Ok(AdapterCache { h1, h2: Vec::new() })
+        }
+        ProjAdapter::Mora { m: mm } => {
+            let mut h1 = vec![0.0f32; rows * rank];
+            mora_compress(h, rows, m, rank, &mut h1);
+            let h2 = matmul_nn(&h1, mm.f32s()?, rows, rank, rank);
+            // Decompress: out[j] += h2[j / gj].
+            let gj = mora_group(n, rank);
+            for r in 0..rows {
+                let yr = &h2[r * rank..(r + 1) * rank];
+                let or = &mut out[r * n..(r + 1) * n];
+                for (j, o) in or.iter_mut().enumerate() {
+                    *o += yr[j / gj];
+                }
+            }
+            Ok(AdapterCache { h1, h2 })
+        }
+        ProjAdapter::CurLora { c, u, r } => {
+            let h1 = matmul_nn(h, c.f32s()?, rows, m, rank);
+            let h2 = matmul_nn(&h1, u.f32s()?, rows, rank, rank);
+            let delta = matmul_nn(&h2, r.f32s()?, rows, rank, n);
+            add_inplace(out, &delta);
+            Ok(AdapterCache { h1, h2 })
+        }
+    }
+}
+
+/// Projection forward: returns the output plus the chain cache when
+/// cured, plus the adapter cache when an adapter delta is blended.
 pub(super) fn proj_forward(
     h: &[f32],
     rows: usize,
     p: &Proj,
+    ad: Option<&ProjAdapter>,
     what: &str,
-) -> Result<(Vec<f32>, Option<ProjCache>)> {
+) -> Result<(Vec<f32>, Option<ProjCache>, Option<AdapterCache>)> {
     let (m, n) = proj_dims(p, what)?;
     ensure!(h.len() == rows * m, "{what}: input is not rows×{m}");
-    match p {
-        Proj::Dense(w) => Ok((matmul_nn(h, w.f32s()?, rows, m, n), None)),
+    let (mut out, pc) = match p {
+        Proj::Dense(w) => (matmul_nn(h, w.f32s()?, rows, m, n), None),
         Proj::Cured { c, u, r } => {
             let rank = c.shape[1];
             let hc = matmul_nn(h, c.f32s()?, rows, m, rank);
             let hcu = matmul_nn(&hc, u.f32s()?, rows, rank, rank);
             let out = matmul_nn(&hcu, r.f32s()?, rows, rank, n);
-            Ok((out, Some(ProjCache { hc, hcu })))
+            (out, Some(ProjCache { hc, hcu }))
         }
-    }
+    };
+    let ac = match ad {
+        Some(ad) => Some(adapter_forward(h, rows, ad, m, n, &mut out, what)?),
+        None => None,
+    };
+    Ok((out, pc, ac))
 }
 
 /// Projection forward into a caller-provided buffer, chain scratch reused
@@ -176,6 +307,11 @@ pub(super) struct LayerCache {
     pub qc: Option<ProjCache>,
     pub kc: Option<ProjCache>,
     pub gc: Option<ProjCache>,
+    /// Adapter-delta caches of the switched graphs (None when no
+    /// adapter is blended on that projection).
+    pub qa: Option<AdapterCache>,
+    pub ka: Option<AdapterCache>,
+    pub ga: Option<AdapterCache>,
 }
 
 pub(super) fn layer_dims(
@@ -519,9 +655,12 @@ pub(super) fn layer_forward_cached(
     let wup = want(p.up, &[d, di], "w_up")?;
     let wdown = want(p.down, &[di, d], "w_down")?;
 
+    let ad_q = p.adapter.as_ref().and_then(|a| a.q.as_ref());
+    let ad_k = p.adapter.as_ref().and_then(|a| a.k.as_ref());
+    let ad_g = p.adapter.as_ref().and_then(|a| a.gate.as_ref());
     let (h1, inv1) = rmsnorm_fwd(x, ln1, bs, d);
-    let (mut q, qc) = proj_forward(&h1, bs, &p.q, "w_q")?;
-    let (mut k, kc) = proj_forward(&h1, bs, &p.k, "w_k")?;
+    let (mut q, qc, qa) = proj_forward(&h1, bs, &p.q, ad_q, "w_q")?;
+    let (mut k, kc, ka) = proj_forward(&h1, bs, &p.k, ad_k, "w_k")?;
     let v = matmul_nn(&h1, wv, bs, d, d);
     let rope = rope_tables_cached(s, dh / 2);
     rope_apply(&mut q, b, s, nh, dh, &rope.cos, &rope.sin, 1.0);
@@ -531,7 +670,7 @@ pub(super) fn layer_forward_cached(
     add_inplace(&mut x2, x);
 
     let (h2, inv2) = rmsnorm_fwd(&x2, ln2, bs, d);
-    let (g, gc) = proj_forward(&h2, bs, &p.gate, "w_gate")?;
+    let (g, gc, ga) = proj_forward(&h2, bs, &p.gate, ad_g, "w_gate")?;
     let up = matmul_nn(&h2, wup, bs, d, di);
     let mut act = vec![0.0f32; bs * di];
     for i in 0..bs * di {
@@ -559,6 +698,9 @@ pub(super) fn layer_forward_cached(
         qc,
         kc,
         gc,
+        qa,
+        ka,
+        ga,
     })
 }
 
@@ -628,6 +770,10 @@ pub(super) fn layer_infer_impl(
     let Dims { b, s, d, di, nh, dh } = dims;
     let bs = b * s;
     ensure!(x.len() == bs * d, "layer input length mismatch");
+    ensure!(
+        p.adapter.as_ref().map(|a| a.is_empty()).unwrap_or(true),
+        "the inference path does not blend adapter deltas (use the switched graphs)"
+    );
     let ln1 = want(p.ln1, &[d], "ln1")?;
     let ln2 = want(p.ln2, &[d], "ln2")?;
     let wv = want(p.v, &[d, d], "w_v")?;
@@ -701,6 +847,10 @@ pub(super) fn layer_decode_impl(
 ) -> Result<Vec<f32>> {
     let Dims { b, s: cap, d, di, nh, dh } = dims;
     ensure!(x.len() == b * d, "decode input must be n×d");
+    ensure!(
+        p.adapter.as_ref().map(|a| a.is_empty()).unwrap_or(true),
+        "the decode path does not blend adapter deltas (use the switched graphs)"
+    );
     ensure!(slots.len() == b && rows.len() == b, "one slot and cache row per input row");
     let lanes = kcache.len() / (cap * d);
     ensure!(

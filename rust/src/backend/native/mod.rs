@@ -20,9 +20,10 @@
 
 mod forward;
 pub mod math;
+mod switched;
 mod train;
 
-use crate::backend::{Backend, CalibOut, HealOut, KvCache, KvPolicy, LayerParams};
+use crate::backend::{Backend, CalibOut, HealOut, KvCache, KvPolicy, LayerParams, StepMode};
 use crate::linalg::Mat;
 use crate::model::ModelConfig;
 use crate::tensor::{Tensor, TensorStore};
@@ -464,6 +465,41 @@ impl Backend for NativeBackend {
         self.tick();
         train::heal_step_impl(cfg, student, opt, layer, x, y_teacher, lr, t)
     }
+
+    fn switched_step(
+        &self,
+        cfg: &ModelConfig,
+        teacher: &TensorStore,
+        student: &mut TensorStore,
+        adapters: &mut TensorStore,
+        opt: &mut TensorStore,
+        adapter: crate::peft::Adapter,
+        mode: StepMode,
+        tokens: &Tensor,
+        targets: &Tensor,
+        loss_mask: Option<&Tensor>,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        self.tick();
+        switched::switched_step_impl(
+            cfg, teacher, student, adapters, opt, adapter, mode, tokens, targets, loss_mask,
+            lr, t,
+        )
+    }
+
+    fn switched_logits(
+        &self,
+        cfg: &ModelConfig,
+        _teacher: &TensorStore,
+        student: &TensorStore,
+        adapters: &TensorStore,
+        adapter: crate::peft::Adapter,
+        tokens: &Tensor,
+    ) -> Result<Tensor> {
+        self.tick();
+        switched::switched_logits_impl(cfg, student, adapters, adapter, tokens)
+    }
 }
 
 #[cfg(test)]
@@ -529,6 +565,7 @@ mod tests {
                 o: &self.wo,
                 up: &self.wup,
                 down: &self.wdown,
+                adapter: None,
             }
         }
     }

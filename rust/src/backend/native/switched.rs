@@ -1,0 +1,739 @@
+//! Native switched full-model graphs (the PEFT comparisons, Figs 5–7).
+//!
+//! The pjrt backend runs these as AOT artifacts; this module is the
+//! pure-Rust reference: a full-model forward over the (possibly cured)
+//! student with one adapter family's deltas blended onto the q/k/gate
+//! projections, a [`StepMode`] loss, and backprop restricted to the
+//! active adapter's parameters.
+//!
+//! * Forward: [`layer_forward_cached`] with
+//!   [`crate::backend::AdapterView`] deltas — `y = base(x) + delta(x)`
+//!   per projection, so a zero-initialized adapter (LoRA `B`, MoRA `M`,
+//!   CURLoRA `U`) leaves the student's logits numerically untouched.
+//! * Heal loss: `0.9·KD(T=10) + 0.1·CE` against the dense teacher's
+//!   logits on the same batch, with `KD = T²·KL(teacher‖student)` over
+//!   temperature-`T` softmaxes (the standard distillation scaling).
+//! * Task loss: cross-entropy weighted by the caller's answer mask.
+//! * Optimizer: Adam on **only** the active family's parameters — ΔU
+//!   for `Du` (updated in the student store), A/B for LoRA, M for MoRA,
+//!   U for CURLoRA (updated in the adapter store; C/R frozen).
+//!
+//! Missing tensors are hard errors, never silent zeros: every middle
+//! layer must hold the active family's complete tensor set, and every
+//! cured projection must have its ΔU — a typo'd name must not quietly
+//! train or evaluate the base model.
+
+use super::forward::{
+    embed_gather, head_forward, layer_dims, layer_forward_cached, layer_infer_impl, want,
+    InferScratch, LayerCache,
+};
+use super::train::{
+    adam_update, dense_layer_params, layer_backward, student_layer_params, AdapterGrad,
+    ProjGrad,
+};
+use crate::backend::{AdapterView, LayerParams, ProjAdapter, StepMode};
+use crate::model::ModelConfig;
+use crate::peft::Adapter;
+use crate::tensor::{Tensor, TensorStore};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::HashMap;
+
+/// Distillation temperature of the heal loss (paper App. B).
+pub const KD_TEMPERATURE: f64 = 10.0;
+/// KD weight in the heal loss mix.
+pub const KD_WEIGHT: f64 = 0.9;
+/// CE weight in the heal loss mix.
+pub const CE_WEIGHT: f64 = 0.1;
+
+/// Resolve layer `l`'s blended adapter view. `Du` and non-middle layers
+/// get `None`; for the other families every middle layer must hold the
+/// complete tensor set — a missing (e.g. misnamed) tensor of the
+/// *active* family is a hard error, not a silent zero.
+fn adapter_view<'a>(
+    cfg: &ModelConfig,
+    adapters: &'a TensorStore,
+    l: usize,
+    adapter: Adapter,
+) -> Result<Option<AdapterView<'a>>> {
+    if adapter == Adapter::Du || !cfg.middle_layers().contains(&l) {
+        return Ok(None);
+    }
+    let get = |name: String| -> Result<&'a Tensor> {
+        adapters
+            .get(&name)
+            .with_context(|| format!("adapter '{}' tensor '{name}' missing", adapter.label()))
+    };
+    let mut view = AdapterView::default();
+    for proj in ["q", "k", "gate"] {
+        let ad = match adapter {
+            Adapter::Du => unreachable!(),
+            Adapter::Lora => ProjAdapter::Lora {
+                a: get(format!("L{l}.lora_a_{proj}"))?,
+                b: get(format!("L{l}.lora_b_{proj}"))?,
+            },
+            Adapter::Mora => ProjAdapter::Mora { m: get(format!("L{l}.mora_m_{proj}"))? },
+            Adapter::CurLora => ProjAdapter::CurLora {
+                c: get(format!("L{l}.cl_c_{proj}"))?,
+                u: get(format!("L{l}.cl_u_{proj}"))?,
+                r: get(format!("L{l}.cl_r_{proj}"))?,
+            },
+        };
+        match proj {
+            "q" => view.q = Some(ad),
+            "k" => view.k = Some(ad),
+            _ => view.gate = Some(ad),
+        }
+    }
+    Ok(Some(view))
+}
+
+/// Layer params of the blended student: cured-or-dense base from the
+/// student store (`U = U₀ + ΔU` merged) plus the active adapter's view.
+fn blended_params<'a>(
+    cfg: &ModelConfig,
+    student: &'a TensorStore,
+    adapters: &'a TensorStore,
+    l: usize,
+    adapter: Adapter,
+) -> Result<LayerParams<'a>> {
+    let mut p = student_layer_params(student, l)?;
+    p.adapter = adapter_view(cfg, adapters, l, adapter)?;
+    Ok(p)
+}
+
+/// Every cured projection's ΔU names, validated present for **every**
+/// adapter family — `student_proj` would otherwise merge `U = U₀` and
+/// silently evaluate an un-healed chain when a `du_*` tensor is
+/// misnamed (the exact silent-fallback class this PR removes; the pjrt
+/// binding enforces the same rule).
+fn cured_du_names(student: &TensorStore) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for l in crate::compress::cured_layers_of(student) {
+        for proj in ["q", "k", "gate"] {
+            if !student.contains(&format!("L{l}.c_{proj}")) {
+                continue;
+            }
+            let name = format!("L{l}.du_{proj}");
+            ensure!(
+                student.contains(&name),
+                "cured layer {l} is missing its '{name}' tensor — the student \
+                 store is malformed, refusing to silently skip it"
+            );
+            names.push(name);
+        }
+    }
+    Ok(names)
+}
+
+/// Names of the active adapter's trainable tensors, validated present
+/// (hard error naming the first missing one). Also validates the cured
+/// layers' ΔU completeness regardless of family.
+fn trainable_names(
+    cfg: &ModelConfig,
+    student: &TensorStore,
+    adapters: &TensorStore,
+    adapter: Adapter,
+) -> Result<Vec<String>> {
+    let du_names = cured_du_names(student)?;
+    match adapter {
+        Adapter::Du => {
+            ensure!(
+                !du_names.is_empty(),
+                "adapter 'curing-du' trains ΔU of cured projections, but the student \
+                 store has no cured layers"
+            );
+            Ok(du_names)
+        }
+        Adapter::Lora | Adapter::Mora | Adapter::CurLora => {
+            let mut names = Vec::new();
+            for l in cfg.middle_layers() {
+                // adapter_view validates the complete per-layer set
+                // (including the frozen CURLoRA C/R).
+                adapter_view(cfg, adapters, l, adapter)?;
+                for proj in ["q", "k", "gate"] {
+                    match adapter {
+                        Adapter::Lora => {
+                            names.push(format!("L{l}.lora_a_{proj}"));
+                            names.push(format!("L{l}.lora_b_{proj}"));
+                        }
+                        Adapter::Mora => names.push(format!("L{l}.mora_m_{proj}")),
+                        Adapter::CurLora => names.push(format!("L{l}.cl_u_{proj}")),
+                        Adapter::Du => unreachable!(),
+                    }
+                }
+            }
+            Ok(names)
+        }
+    }
+}
+
+/// Dense-teacher logits on the inference path (flat bs×vocab).
+fn teacher_logits(
+    cfg: &ModelConfig,
+    teacher: &TensorStore,
+    toks: &[i32],
+    b: usize,
+    s: usize,
+) -> Result<Vec<f32>> {
+    let (d, bs) = (cfg.d_model, b * s);
+    let emb_t = teacher.get("emb")?;
+    ensure!(
+        emb_t.shape.len() == 2 && emb_t.shape[1] == d,
+        "teacher emb must be (vocab, {d}), got {:?}",
+        emb_t.shape
+    );
+    let vocab = emb_t.shape[0];
+    let emb = emb_t.f32s()?;
+    let mut x = vec![0.0f32; bs * d];
+    embed_gather(emb, vocab, d, toks, &mut x)?;
+    let mut sc = InferScratch::new();
+    for l in 0..cfg.n_layers {
+        let p = dense_layer_params(teacher, l)?;
+        let dims = layer_dims(cfg.n_heads, &p, b, s, d)?;
+        x = layer_infer_impl(dims, &p, &x, None, &mut sc)?;
+    }
+    let ln_f = want(teacher.get("ln_f")?, &[d], "ln_f")?;
+    let (logits, _, _) = head_forward(&x, ln_f, emb, bs, d, vocab);
+    Ok(logits)
+}
+
+/// Per-row softmax at temperature `temp` into `out`, f64 throughout.
+fn softmax_t(row: &[f32], temp: f64, out: &mut [f64]) {
+    let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut sum = 0.0f64;
+    for (o, &z) in out.iter_mut().zip(row) {
+        *o = ((z as f64 - maxv) / temp).exp();
+        sum += *o;
+    }
+    let inv = 1.0 / sum;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Loss + dlogits of one switched step over already-computed student
+/// logits. `weights` are per-position loss weights (the task mask, or
+/// all-ones), already including the 1/Σw normalization factor `inv_w`.
+#[allow(clippy::too_many_arguments)]
+fn loss_and_dlogits(
+    mode: StepMode,
+    logits_s: &[f32],
+    logits_t: Option<&[f32]>,
+    tgts: &[i32],
+    weights: &[f32],
+    inv_w: f64,
+    bs: usize,
+    vocab: usize,
+) -> Result<(f64, Vec<f32>)> {
+    let mut dlogits = vec![0.0f32; bs * vocab];
+    let mut loss = 0.0f64;
+    let mut p = vec![0.0f64; vocab];
+    let mut qs = vec![0.0f64; vocab];
+    let mut qt = vec![0.0f64; vocab];
+    let temp = KD_TEMPERATURE;
+    for r in 0..bs {
+        let w = weights[r] as f64 * inv_w;
+        if w == 0.0 {
+            continue;
+        }
+        let tk = tgts[r];
+        ensure!((0..vocab as i32).contains(&tk), "target {tk} out of vocab 0..{vocab}");
+        let row = &logits_s[r * vocab..(r + 1) * vocab];
+        let drow = &mut dlogits[r * vocab..(r + 1) * vocab];
+        // CE term (always present; weight 1.0 in task mode).
+        softmax_t(row, 1.0, &mut p);
+        let ce = -p[tk as usize].max(1e-300).ln();
+        let ce_w = match mode {
+            StepMode::Heal => CE_WEIGHT,
+            StepMode::Task => 1.0,
+        };
+        loss += w * ce_w * ce;
+        for j in 0..vocab {
+            drow[j] = (w * ce_w * (p[j] - if j == tk as usize { 1.0 } else { 0.0 })) as f32;
+        }
+        if mode == StepMode::Heal {
+            let t_row = &logits_t.ok_or_else(|| anyhow!("heal mode needs teacher logits"))?
+                [r * vocab..(r + 1) * vocab];
+            softmax_t(row, temp, &mut qs);
+            softmax_t(t_row, temp, &mut qt);
+            // KD = T²·KL(teacher ‖ student); dKD/dz_s = T·(q_s − q_t).
+            let mut kl = 0.0f64;
+            for j in 0..vocab {
+                if qt[j] > 0.0 {
+                    kl += qt[j] * (qt[j].ln() - qs[j].max(1e-300).ln());
+                }
+                drow[j] += (w * KD_WEIGHT * temp * (qs[j] - qt[j])) as f32;
+            }
+            loss += w * KD_WEIGHT * temp * temp * kl;
+        }
+    }
+    Ok((loss, dlogits))
+}
+
+/// Forward + loss + adapter-restricted gradients of one switched step.
+/// Shared by [`switched_step_impl`] and the finite-difference gradcheck
+/// tests (which read only the loss).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn switched_grads(
+    cfg: &ModelConfig,
+    teacher: &TensorStore,
+    student: &TensorStore,
+    adapters: &TensorStore,
+    adapter: Adapter,
+    mode: StepMode,
+    tokens: &Tensor,
+    targets: &Tensor,
+    loss_mask: Option<&Tensor>,
+) -> Result<(f64, HashMap<String, Vec<f32>>)> {
+    ensure!(tokens.shape.len() == 2, "tokens must be (b, s)");
+    ensure!(targets.shape == tokens.shape, "targets shape mismatch");
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let bs = b * s;
+    let (d, nl) = (cfg.d_model, cfg.n_layers);
+    let toks = tokens.i32s()?;
+    let tgts = targets.i32s()?;
+    let weights: Vec<f32> = match loss_mask {
+        Some(m) => {
+            ensure!(m.shape == tokens.shape, "loss mask shape mismatch");
+            m.f32s()?.to_vec()
+        }
+        None => vec![1.0; bs],
+    };
+    let wsum: f64 = weights.iter().map(|&x| x as f64).sum();
+    ensure!(wsum > 0.0, "loss mask selects no positions");
+    let inv_w = 1.0 / wsum;
+
+    // Student forward with backward caches, adapter deltas blended.
+    let emb_t = student.get("emb")?;
+    ensure!(
+        emb_t.shape.len() == 2 && emb_t.shape[1] == d,
+        "emb must be (vocab, {d}), got {:?}",
+        emb_t.shape
+    );
+    let vocab = emb_t.shape[0];
+    let emb = emb_t.f32s()?;
+    let mut x0 = vec![0.0f32; bs * d];
+    embed_gather(emb, vocab, d, toks, &mut x0)?;
+    let mut caches: Vec<LayerCache> = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let p = blended_params(cfg, student, adapters, l, adapter)?;
+        let dims = layer_dims(cfg.n_heads, &p, b, s, d)?;
+        let x_in: &[f32] = if l == 0 { &x0 } else { &caches[l - 1].y };
+        caches.push(layer_forward_cached(dims, &p, x_in)?);
+    }
+    let x_final: &[f32] = if nl == 0 { &x0 } else { &caches[nl - 1].y };
+    let ln_f = want(student.get("ln_f")?, &[d], "ln_f")?;
+    let (logits, xf, invf) = head_forward(x_final, ln_f, emb, bs, d, vocab);
+    drop(xf);
+
+    let t_logits = match mode {
+        StepMode::Heal => Some(teacher_logits(cfg, teacher, toks, b, s)?),
+        StepMode::Task => None,
+    };
+    let (loss, dlogits) = loss_and_dlogits(
+        mode,
+        &logits,
+        t_logits.as_deref(),
+        tgts,
+        &weights,
+        inv_w,
+        bs,
+        vocab,
+    )?;
+
+    // Head backward. The head (ln_f, tied emb) is frozen in every
+    // switched graph, so only the input gradient is propagated.
+    let dxf = super::math::matmul_nn(&dlogits, emb, bs, vocab, d);
+    let (mut dx, _dlnf) = super::math::rmsnorm_bwd(&dxf, x_final, ln_f, &invf, bs, d);
+
+    let mut grads: HashMap<String, Vec<f32>> = HashMap::new();
+    for l in (0..nl).rev() {
+        let p = blended_params(cfg, student, adapters, l, adapter)?;
+        let x_in: &[f32] = if l == 0 { &x0 } else { &caches[l - 1].y };
+        let g = layer_backward(&p, x_in, &caches[l], &dx)?;
+        dx = g.dx;
+        match adapter {
+            Adapter::Du => {
+                // ΔU grads are the cured chains' U grads (U = U₀ + ΔU).
+                for (proj, pg) in [("q", g.q), ("k", g.k), ("gate", g.gate)] {
+                    if let ProjGrad::CuredU(du) = pg {
+                        grads.insert(format!("L{l}.du_{proj}"), du);
+                    }
+                }
+            }
+            Adapter::Lora | Adapter::Mora | Adapter::CurLora => {
+                for (proj, ag) in [("q", g.q_ad), ("k", g.k_ad), ("gate", g.gate_ad)] {
+                    match ag {
+                        None => {}
+                        Some(AdapterGrad::Lora { da, db }) => {
+                            grads.insert(format!("L{l}.lora_a_{proj}"), da);
+                            grads.insert(format!("L{l}.lora_b_{proj}"), db);
+                        }
+                        Some(AdapterGrad::Mora { dm }) => {
+                            grads.insert(format!("L{l}.mora_m_{proj}"), dm);
+                        }
+                        Some(AdapterGrad::CurLora { du }) => {
+                            grads.insert(format!("L{l}.cl_u_{proj}"), du);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((loss, grads))
+}
+
+/// One native switched optimizer step: see [`crate::backend::Backend::switched_step`].
+#[allow(clippy::too_many_arguments)]
+pub(super) fn switched_step_impl(
+    cfg: &ModelConfig,
+    teacher: &TensorStore,
+    student: &mut TensorStore,
+    adapters: &mut TensorStore,
+    opt: &mut TensorStore,
+    adapter: Adapter,
+    mode: StepMode,
+    tokens: &Tensor,
+    targets: &Tensor,
+    loss_mask: Option<&Tensor>,
+    lr: f32,
+    t: f32,
+) -> Result<f64> {
+    let trainables = trainable_names(cfg, student, adapters, adapter)?;
+    let (loss, mut grads) = switched_grads(
+        cfg, teacher, student, adapters, adapter, mode, tokens, targets, loss_mask,
+    )?;
+    let tag = adapter.tag();
+    for name in &trainables {
+        let g = grads
+            .remove(name)
+            .ok_or_else(|| anyhow!("missing gradient for trainable '{name}'"))?;
+        let store: &mut TensorStore =
+            if adapter == Adapter::Du { &mut *student } else { &mut *adapters };
+        adam_update(
+            store,
+            opt,
+            name,
+            format!("{tag}.m.{name}"),
+            format!("{tag}.v.{name}"),
+            &g,
+            lr,
+            t,
+        )?;
+    }
+    Ok(loss)
+}
+
+/// Native switched logits: the adapter-blended student's (b, s, vocab)
+/// logits. Strict like the step: missing active-family or cured-factor
+/// tensors error instead of silently scoring the base model.
+///
+/// Runs the cached (train-path) forward because only it blends adapter
+/// deltas; the backward caches it allocates are discarded. Teaching the
+/// scratch-reusing infer path to blend (and re-proving bitwise parity)
+/// is the follow-up if switched eval ever becomes hot — at the
+/// reproduction sizes the extra allocation is noise.
+pub(super) fn switched_logits_impl(
+    cfg: &ModelConfig,
+    student: &TensorStore,
+    adapters: &TensorStore,
+    adapter: Adapter,
+    tokens: &Tensor,
+) -> Result<Tensor> {
+    ensure!(tokens.shape.len() == 2, "tokens must be (b, s)");
+    // Same completeness validation as the step (a renamed tensor must
+    // error at eval time too).
+    trainable_names(cfg, student, adapters, adapter)?;
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let bs = b * s;
+    let d = cfg.d_model;
+    let toks = tokens.i32s()?;
+    let emb_t = student.get("emb")?;
+    ensure!(
+        emb_t.shape.len() == 2 && emb_t.shape[1] == d,
+        "emb must be (vocab, {d}), got {:?}",
+        emb_t.shape
+    );
+    let vocab = emb_t.shape[0];
+    let emb = emb_t.f32s()?;
+    let mut x = vec![0.0f32; bs * d];
+    embed_gather(emb, vocab, d, toks, &mut x)?;
+    for l in 0..cfg.n_layers {
+        let p = blended_params(cfg, student, adapters, l, adapter)?;
+        let dims = layer_dims(cfg.n_heads, &p, b, s, d)?;
+        x = layer_forward_cached(dims, &p, &x)?.y;
+    }
+    let ln_f = want(student.get("ln_f")?, &[d], "ln_f")?;
+    let (logits, _, _) = head_forward(&x, ln_f, emb, bs, d, vocab);
+    Ok(Tensor::from_f32(&[b, s, vocab], logits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calib::Calibration;
+    use crate::compress::{cure_layers, CompressOptions};
+    use crate::peft::init_adapters;
+    use crate::util::{Json, Rng};
+
+    fn cfg() -> ModelConfig {
+        let j = Json::parse(
+            r#"{"configs":{"t":{"vocab":48,"d_model":16,"n_layers":3,"n_heads":2,
+            "d_inter":24,"seq":6,"batch":2,"ranks":[4],"default_rank":4,
+            "lora_rank":1,"mora_rank":4,"total_params":0}}}"#,
+        )
+        .unwrap();
+        ModelConfig::from_manifest(&j, "t").unwrap()
+    }
+
+    fn flat_calib(c: &ModelConfig) -> Calibration {
+        Calibration {
+            attn_norms: vec![vec![1.0; c.d_model]; c.n_layers],
+            ffn_norms: vec![vec![1.0; c.d_model]; c.n_layers],
+            angular: vec![0.0; c.n_layers],
+            n_examples: 1,
+        }
+    }
+
+    struct Setup {
+        cfg: ModelConfig,
+        teacher: TensorStore,
+        student: TensorStore,
+        adapters: TensorStore,
+        tokens: Tensor,
+        targets: Tensor,
+        mask: Tensor,
+    }
+
+    fn setup(adapter: Adapter, seed: u64) -> Setup {
+        let c = cfg();
+        let mut rng = Rng::new(seed, 0);
+        let teacher = c.init_dense(&mut rng);
+        let mut student = teacher.clone();
+        let calib = flat_calib(&c);
+        let opts = CompressOptions { r_max: 4, ..Default::default() };
+        cure_layers(&mut student, &c, &calib, &[1], &opts).unwrap();
+        let mut adapters = init_adapters(adapter, &c, &teacher, &calib, &mut rng).unwrap();
+        // Randomize the trainable factors so gradients are nontrivial
+        // (they are zero-initialized, where many grads vanish).
+        let mut names: Vec<String> = adapters.names().map(|s| s.to_string()).collect();
+        names.sort();
+        for name in names {
+            let t = adapters.get_mut(&name).unwrap();
+            for x in t.f32s_mut().unwrap() {
+                if *x == 0.0 {
+                    *x = rng.normal() * 0.05;
+                }
+            }
+        }
+        if adapter == Adapter::Du {
+            for proj in ["q", "k", "gate"] {
+                let t = student.get_mut(&format!("L1.du_{proj}")).unwrap();
+                for x in t.f32s_mut().unwrap() {
+                    *x = rng.normal() * 0.05;
+                }
+            }
+        }
+        let (b, s) = (c.batch, c.seq);
+        let toks: Vec<i32> = (0..b * s).map(|_| rng.below(c.vocab) as i32).collect();
+        let mut tgts = toks[1..].to_vec();
+        tgts.push(0);
+        let mask: Vec<f32> = (0..b * s).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        Setup {
+            tokens: Tensor::from_i32(&[b, s], toks),
+            targets: Tensor::from_i32(&[b, s], tgts),
+            mask: Tensor::from_f32(&[b, s], mask),
+            cfg: c,
+            teacher,
+            student,
+            adapters,
+        }
+    }
+
+    /// Central finite-difference gradcheck of the adapter-restricted
+    /// gradients, every family, both step modes.
+    fn gradcheck(adapter: Adapter, mode: StepMode, seed: u64) {
+        let st = setup(adapter, seed);
+        let mask = if mode == StepMode::Task { Some(&st.mask) } else { None };
+        let loss_of = |student: &TensorStore, adapters: &TensorStore| -> f64 {
+            switched_grads(
+                &st.cfg, &st.teacher, student, adapters, adapter, mode, &st.tokens,
+                &st.targets, mask,
+            )
+            .unwrap()
+            .0
+        };
+        let (_, grads) = switched_grads(
+            &st.cfg, &st.teacher, &st.student, &st.adapters, adapter, mode, &st.tokens,
+            &st.targets, mask,
+        )
+        .unwrap();
+        let names = trainable_names(&st.cfg, &st.student, &st.adapters, adapter).unwrap();
+        assert!(!names.is_empty());
+        let eps = 1e-2f32;
+        for name in &names {
+            let g = &grads[name];
+            // Probe the three largest-|g| elements: they carry the
+            // signal a wrong backward would corrupt, and their magnitude
+            // makes the 1e-3 relative tolerance meaningful against f32
+            // forward noise.
+            let mut order: Vec<usize> = (0..g.len()).collect();
+            order.sort_by(|&a, &b| g[b].abs().total_cmp(&g[a].abs()));
+            for &i in order.iter().take(3) {
+                let in_student = adapter == Adapter::Du;
+                let perturb = |delta: f32| -> f64 {
+                    let mut s2 = st.student.clone();
+                    let mut a2 = st.adapters.clone();
+                    let t = if in_student {
+                        s2.get_mut(name).unwrap()
+                    } else {
+                        a2.get_mut(name).unwrap()
+                    };
+                    t.f32s_mut().unwrap()[i] += delta;
+                    loss_of(&s2, &a2)
+                };
+                let num = (perturb(eps) - perturb(-eps)) / (2.0 * eps as f64);
+                let ana = g[i] as f64;
+                // rel-err < 1e-3, plus an absolute term for f32 forward
+                // rounding through the finite difference (loss noise
+                // ~1e-6·|L| divided by 2ε) and truncation (ε²·f'''/6) —
+                // a wrong backward is off by O(|g|), far outside this.
+                let tol = 1e-3 * (num.abs() + ana.abs()) + 5e-4;
+                assert!(
+                    (num - ana).abs() < tol,
+                    "{:?} {name}[{i}]: analytic {ana} vs numeric {num}",
+                    adapter
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gradcheck_du_heal() {
+        gradcheck(Adapter::Du, StepMode::Heal, 101);
+    }
+
+    #[test]
+    fn gradcheck_lora_heal() {
+        gradcheck(Adapter::Lora, StepMode::Heal, 102);
+    }
+
+    #[test]
+    fn gradcheck_lora_task() {
+        gradcheck(Adapter::Lora, StepMode::Task, 103);
+    }
+
+    #[test]
+    fn gradcheck_mora_task() {
+        gradcheck(Adapter::Mora, StepMode::Task, 104);
+    }
+
+    #[test]
+    fn gradcheck_curlora_task() {
+        gradcheck(Adapter::CurLora, StepMode::Task, 105);
+    }
+
+    #[test]
+    fn gradcheck_mora_heal() {
+        gradcheck(Adapter::Mora, StepMode::Heal, 106);
+    }
+
+    #[test]
+    fn gradcheck_curlora_heal() {
+        gradcheck(Adapter::CurLora, StepMode::Heal, 107);
+    }
+
+    #[test]
+    fn step_updates_only_active_adapter() {
+        // A LoRA step must move A/B and nothing else: the student store
+        // (incl. ΔU and the cured factors) stays bit-identical.
+        let st = setup(Adapter::Lora, 55);
+        let mut student = st.student.clone();
+        let mut adapters = st.adapters.clone();
+        let mut opt = TensorStore::new();
+        let loss = switched_step_impl(
+            &st.cfg, &st.teacher, &mut student, &mut adapters, &mut opt, Adapter::Lora,
+            StepMode::Heal, &st.tokens, &st.targets, None, 1e-3, 1.0,
+        )
+        .unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let mut names: Vec<String> = st.student.names().map(|s| s.to_string()).collect();
+        names.sort();
+        for name in names {
+            assert_eq!(
+                student.get(&name).unwrap(),
+                st.student.get(&name).unwrap(),
+                "LoRA step must not touch student tensor '{name}'"
+            );
+        }
+        let mut moved = 0usize;
+        let mut anames: Vec<String> = st.adapters.names().map(|s| s.to_string()).collect();
+        anames.sort();
+        for name in anames {
+            if adapters.get(&name).unwrap() != st.adapters.get(&name).unwrap() {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "no adapter tensor moved");
+    }
+
+    #[test]
+    fn du_step_updates_student_delta_u_only() {
+        let st = setup(Adapter::Du, 56);
+        let mut student = st.student.clone();
+        let mut adapters = TensorStore::new();
+        let mut opt = TensorStore::new();
+        switched_step_impl(
+            &st.cfg, &st.teacher, &mut student, &mut adapters, &mut opt, Adapter::Du,
+            StepMode::Heal, &st.tokens, &st.targets, None, 1e-3, 1.0,
+        )
+        .unwrap();
+        let mut du_moved = 0usize;
+        let mut names: Vec<String> = st.student.names().map(|s| s.to_string()).collect();
+        names.sort();
+        for name in names {
+            let changed = student.get(&name).unwrap() != st.student.get(&name).unwrap();
+            let is_du = name.contains(".du_");
+            if is_du {
+                du_moved += changed as usize;
+            } else {
+                assert!(!changed, "Du step must not touch '{name}'");
+            }
+        }
+        assert_eq!(du_moved, 3, "all three cured ΔU tensors must move");
+        assert!(adapters.is_empty());
+    }
+
+    #[test]
+    fn task_mask_restricts_loss_positions() {
+        // An all-but-one-zero mask: perturbing a masked-out target must
+        // not change the loss.
+        let st = setup(Adapter::Mora, 57);
+        let (b, s) = (st.cfg.batch, st.cfg.seq);
+        let mut mask = vec![0.0f32; b * s];
+        mask[1] = 1.0;
+        let mask = Tensor::from_f32(&[b, s], mask);
+        let loss = |targets: &Tensor| -> f64 {
+            switched_grads(
+                &st.cfg, &st.teacher, &st.student, &st.adapters, Adapter::Mora,
+                StepMode::Task, &st.tokens, targets, Some(&mask),
+            )
+            .unwrap()
+            .0
+        };
+        let l0 = loss(&st.targets);
+        let mut tg2 = st.targets.clone();
+        // Change a masked-out position's target (position 0).
+        let cur = tg2.i32s().unwrap()[0];
+        if let crate::tensor::Data::I32(v) = &mut tg2.data {
+            v[0] = (cur + 1) % st.cfg.vocab as i32;
+        }
+        assert_eq!(loss(&tg2), l0, "masked-out target changed the loss");
+        // Changing the one live position does change it.
+        let cur = tg2.i32s().unwrap()[1];
+        if let crate::tensor::Data::I32(v) = &mut tg2.data {
+            v[1] = (cur + 1) % st.cfg.vocab as i32;
+        }
+        assert_ne!(loss(&tg2), l0, "live target did not affect the loss");
+    }
+}

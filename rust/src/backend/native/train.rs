@@ -11,14 +11,14 @@
 //!   layer's cured projections, Adam on ΔU only.
 
 use super::forward::{
-    embed_gather, head_forward, layer_dims, layer_forward_cached, want, Dims, LayerCache,
-    ProjCache,
+    embed_gather, head_forward, layer_dims, layer_forward_cached, mora_group, want,
+    AdapterCache, Dims, LayerCache, ProjCache,
 };
 use super::math::{
     add_inplace, matmul_nn, matmul_nt, matmul_tn, rmsnorm_bwd, rope_apply,
     rope_tables_cached, silu, silu_grad,
 };
-use crate::backend::{HealOut, LayerParams, Proj};
+use crate::backend::{HealOut, LayerParams, Proj, ProjAdapter};
 use crate::model::ModelConfig;
 use crate::tensor::{Tensor, TensorStore};
 use anyhow::{anyhow, bail, ensure, Result};
@@ -32,6 +32,15 @@ pub(super) enum ProjGrad {
     CuredU(Vec<f32>),
 }
 
+/// Gradients of one blended adapter's *trainable* factors (frozen
+/// factors — CURLoRA's C/R, the MoRA compress/decompress operators —
+/// get none by construction).
+pub(super) enum AdapterGrad {
+    Lora { da: Vec<f32>, db: Vec<f32> },
+    Mora { dm: Vec<f32> },
+    CurLora { du: Vec<f32> },
+}
+
 pub(super) struct LayerGrads {
     pub ln1: Vec<f32>,
     pub ln2: Vec<f32>,
@@ -42,24 +51,89 @@ pub(super) struct LayerGrads {
     pub gate: ProjGrad,
     pub up: Vec<f32>,
     pub down: Vec<f32>,
+    pub q_ad: Option<AdapterGrad>,
+    pub k_ad: Option<AdapterGrad>,
+    pub gate_ad: Option<AdapterGrad>,
     pub dx: Vec<f32>,
 }
 
-/// Backward through a projection: returns (weight grad, input grad).
+/// Backward through a blended adapter delta: trainable-factor grads plus
+/// the delta path's contribution to the input grad (added to `dh`).
+fn adapter_backward(
+    h: &[f32],
+    rows: usize,
+    dout: &[f32],
+    ad: &ProjAdapter,
+    cache: &AdapterCache,
+    m: usize,
+    n: usize,
+    dh: &mut [f32],
+) -> Result<AdapterGrad> {
+    match ad {
+        ProjAdapter::Lora { a, b } => {
+            let rank = a.shape[1];
+            // delta = (h·A)·B with h1 = h·A cached.
+            let db = matmul_tn(&cache.h1, dout, rows, rank, n);
+            let dh1 = matmul_nt(dout, b.f32s()?, rows, n, rank);
+            let da = matmul_tn(h, &dh1, rows, m, rank);
+            add_inplace(dh, &matmul_nt(&dh1, a.f32s()?, rows, rank, m));
+            Ok(AdapterGrad::Lora { da, db })
+        }
+        ProjAdapter::Mora { m: mm } => {
+            let rank = mm.shape[0];
+            // delta = decompress(compress(h)·M): fold dout over output
+            // groups, then chain through M and the compress groups.
+            let gj = mora_group(n, rank);
+            let mut dy = vec![0.0f32; rows * rank];
+            for r in 0..rows {
+                let dr = &dout[r * n..(r + 1) * n];
+                let yr = &mut dy[r * rank..(r + 1) * rank];
+                for (j, &v) in dr.iter().enumerate() {
+                    yr[j / gj] += v;
+                }
+            }
+            let dm = matmul_tn(&cache.h1, &dy, rows, rank, rank);
+            let dh1 = matmul_nt(&dy, mm.f32s()?, rows, rank, rank);
+            let gi = mora_group(m, rank);
+            for r in 0..rows {
+                let sr = &dh1[r * rank..(r + 1) * rank];
+                let hr = &mut dh[r * m..(r + 1) * m];
+                for (i, o) in hr.iter_mut().enumerate() {
+                    *o += sr[i / gi];
+                }
+            }
+            Ok(AdapterGrad::Mora { dm })
+        }
+        ProjAdapter::CurLora { c, u, r } => {
+            let rank = c.shape[1];
+            // delta = ((h·C)·U)·R with h1 = h·C cached; C/R frozen.
+            let dh2 = matmul_nt(dout, r.f32s()?, rows, n, rank);
+            let du = matmul_tn(&cache.h1, &dh2, rows, rank, rank);
+            let dh1 = matmul_nt(&dh2, u.f32s()?, rows, rank, rank);
+            add_inplace(dh, &matmul_nt(&dh1, c.f32s()?, rows, rank, m));
+            Ok(AdapterGrad::CurLora { du })
+        }
+    }
+}
+
+/// Backward through a projection: returns (weight grad, adapter grad,
+/// input grad).
 fn proj_backward(
     h: &[f32],
     rows: usize,
     dout: &[f32],
     p: &Proj,
     cache: Option<&ProjCache>,
-) -> Result<(ProjGrad, Vec<f32>)> {
-    match p {
+    ad: Option<&ProjAdapter>,
+    adcache: Option<&AdapterCache>,
+) -> Result<(ProjGrad, Option<AdapterGrad>, Vec<f32>)> {
+    let (pg, mut dh, m, n) = match p {
         Proj::Dense(w) => {
             let (m, n) = (w.shape[0], w.shape[1]);
             let wf = w.f32s()?;
             let dw = matmul_tn(h, dout, rows, m, n);
             let dh = matmul_nt(dout, wf, rows, n, m);
-            Ok((ProjGrad::Dense(dw), dh))
+            (ProjGrad::Dense(dw), dh, m, n)
         }
         Proj::Cured { c, u, r } => {
             let cache = cache.ok_or_else(|| anyhow!("missing CUR chain cache"))?;
@@ -70,9 +144,17 @@ fn proj_backward(
             let du = matmul_tn(&cache.hc, &dhcu, rows, rank, rank);
             let dhc = matmul_nt(&dhcu, u.f32s()?, rows, rank, rank);
             let dh = matmul_nt(&dhc, c.f32s()?, rows, rank, m);
-            Ok((ProjGrad::CuredU(du), dh))
+            (ProjGrad::CuredU(du), dh, m, n)
         }
-    }
+    };
+    let ag = match ad {
+        Some(ad) => {
+            let adcache = adcache.ok_or_else(|| anyhow!("missing adapter cache"))?;
+            Some(adapter_backward(h, rows, dout, ad, adcache, m, n, &mut dh)?)
+        }
+        None => None,
+    };
+    Ok((pg, ag, dh))
 }
 
 /// Backward through causal multi-head attention (+ inverse RoPE), from
@@ -150,6 +232,10 @@ pub(super) fn layer_backward(
     let wup = p.up.f32s()?;
     let wdown = p.down.f32s()?;
 
+    let ad_q = p.adapter.as_ref().and_then(|a| a.q.as_ref());
+    let ad_k = p.adapter.as_ref().and_then(|a| a.k.as_ref());
+    let ad_g = p.adapter.as_ref().and_then(|a| a.gate.as_ref());
+
     // FFN: y = x2 + (silu(g) ⊙ up)·Wdown.
     let dact = matmul_nt(dy, wdown, bs, d, di);
     let ddown = matmul_tn(&cache.act, dy, bs, di, d);
@@ -159,7 +245,8 @@ pub(super) fn layer_backward(
         dg[i] = dact[i] * cache.up[i] * silu_grad(cache.g[i]);
         dup[i] = dact[i] * silu(cache.g[i]);
     }
-    let (gate_grad, mut dh2) = proj_backward(&cache.h2, bs, &dg, &p.gate, cache.gc.as_ref())?;
+    let (gate_grad, gate_ad, mut dh2) =
+        proj_backward(&cache.h2, bs, &dg, &p.gate, cache.gc.as_ref(), ad_g, cache.ga.as_ref())?;
     let dup_w = matmul_tn(&cache.h2, &dup, bs, d, di);
     add_inplace(&mut dh2, &matmul_nt(&dup, wup, bs, di, d));
     let (mut dx2, dln2) = rmsnorm_bwd(&dh2, &cache.x2, ln2, &cache.inv2, bs, d);
@@ -169,8 +256,10 @@ pub(super) fn layer_backward(
     let datt = matmul_nt(&dx2, wo, bs, d, d);
     let do_w = matmul_tn(&cache.att, &dx2, bs, d, d);
     let (dq, dk, dv) = attention_bwd(&datt, &cache.q, &cache.k, &cache.v, &cache.probs, cache.dims);
-    let (q_grad, mut dh1) = proj_backward(&cache.h1, bs, &dq, &p.q, cache.qc.as_ref())?;
-    let (k_grad, dh1_k) = proj_backward(&cache.h1, bs, &dk, &p.k, cache.kc.as_ref())?;
+    let (q_grad, q_ad, mut dh1) =
+        proj_backward(&cache.h1, bs, &dq, &p.q, cache.qc.as_ref(), ad_q, cache.qa.as_ref())?;
+    let (k_grad, k_ad, dh1_k) =
+        proj_backward(&cache.h1, bs, &dk, &p.k, cache.kc.as_ref(), ad_k, cache.ka.as_ref())?;
     add_inplace(&mut dh1, &dh1_k);
     let dv_w = matmul_tn(&cache.h1, &dv, bs, d, d);
     add_inplace(&mut dh1, &matmul_nt(&dv, wv, bs, d, d));
@@ -187,6 +276,9 @@ pub(super) fn layer_backward(
         gate: gate_grad,
         up: dup_w,
         down: ddown,
+        q_ad,
+        k_ad,
+        gate_ad,
         dx,
     })
 }
@@ -208,7 +300,7 @@ fn adam_kernel(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], lr: f32, 
 
 /// Adam-update `store[name]` from `g`, with moments in `opt` under
 /// `{mkey}`/`{vkey}` (zero-initialized on first touch).
-fn adam_update(
+pub(super) fn adam_update(
     store: &mut TensorStore,
     opt: &mut TensorStore,
     name: &str,
@@ -238,7 +330,7 @@ fn adam_update(
     Ok(())
 }
 
-fn dense_layer_params(store: &TensorStore, l: usize) -> Result<LayerParams<'_>> {
+pub(super) fn dense_layer_params(store: &TensorStore, l: usize) -> Result<LayerParams<'_>> {
     Ok(LayerParams {
         ln1: store.get(&format!("L{l}.ln1"))?,
         ln2: store.get(&format!("L{l}.ln2"))?,
@@ -249,6 +341,7 @@ fn dense_layer_params(store: &TensorStore, l: usize) -> Result<LayerParams<'_>> 
         o: store.get(&format!("L{l}.w_o"))?,
         up: store.get(&format!("L{l}.w_up"))?,
         down: store.get(&format!("L{l}.w_down"))?,
+        adapter: None,
     })
 }
 
@@ -285,6 +378,7 @@ pub(super) fn student_layer_params(store: &TensorStore, l: usize) -> Result<Laye
         o: store.get(&format!("L{l}.w_o"))?,
         up: store.get(&format!("L{l}.w_up"))?,
         down: store.get(&format!("L{l}.w_down"))?,
+        adapter: None,
     })
 }
 

@@ -17,8 +17,12 @@
 //! `execute_artifact` passthrough additionally serves the switched
 //! full-model graphs of the PEFT comparisons.
 
-use crate::backend::{Backend, CalibOut, HealOut, LayerParams, Proj};
+use crate::backend::{
+    is_adapter_param, is_cur_param, layer_of, Backend, CalibOut, HealOut, LayerParams, Proj,
+    StepMode,
+};
 use crate::model::ModelConfig;
+use crate::peft::Adapter;
 use crate::runtime::{spec_from_manifest, ArtifactSpec, Bindings};
 use crate::tensor::{Data, DType, Tensor, TensorStore};
 use crate::util::Json;
@@ -158,6 +162,61 @@ impl PjrtBackend {
     fn take(outs: &mut HashMap<String, Tensor>, key: &str, what: &str) -> Result<Tensor> {
         outs.remove(key).with_context(|| format!("{what} output '{key}' missing"))
     }
+}
+
+/// Resolve one switched-artifact weight input by name, strictly:
+///
+/// * tensors of the **active** adapter family must exist in the adapter
+///   store — a missing (e.g. misnamed) one is a hard error, because
+///   zero-filling it would silently evaluate/train the base model;
+/// * inactive-family adapter tensors bind zeros (their graph switch is
+///   off, the values are inert);
+/// * CUR student factors (`c_`/`u_`/`du_`/`r_`) of a **cured** layer
+///   must exist in the student store — hard error otherwise; factors of
+///   non-cured layers bind zeros (that layer's switch is 0);
+/// * everything else is a dense teacher tensor (always required).
+fn resolve_switched_input(
+    name: &str,
+    shape: &[usize],
+    teacher: &TensorStore,
+    student: &TensorStore,
+    adapters: &TensorStore,
+    adapter: Adapter,
+    cured: &[usize],
+) -> Result<Tensor> {
+    let suffix = name.split('.').next_back().unwrap_or("");
+    if is_adapter_param(name) {
+        if Adapter::family_of_suffix(suffix) == Some(adapter) {
+            return Ok(adapters
+                .get(name)
+                .with_context(|| {
+                    format!(
+                        "switched graph input '{name}' belongs to the active adapter \
+                         '{}' but is missing from the adapter store — refusing to \
+                         silently bind zeros",
+                        adapter.label()
+                    )
+                })?
+                .clone());
+        }
+        return Ok(Tensor::zeros(shape));
+    }
+    if is_cur_param(name) {
+        if layer_of(name).map(|l| cured.contains(&l)).unwrap_or(false) {
+            return Ok(student
+                .get(name)
+                .with_context(|| {
+                    format!(
+                        "switched graph input '{name}' is a cured layer's factor but \
+                         is missing from the student store — refusing to silently \
+                         bind zeros"
+                    )
+                })?
+                .clone());
+        }
+        return Ok(Tensor::zeros(shape));
+    }
+    Ok(teacher.get(name)?.clone())
 }
 
 /// Map a [`LayerParams`] view onto the artifact's `L.*` input names.
@@ -418,6 +477,125 @@ impl Backend for PjrtBackend {
             }
         }
         Ok(HealOut { loss, y_student })
+    }
+
+    fn switched_step(
+        &self,
+        cfg: &ModelConfig,
+        teacher: &TensorStore,
+        student: &mut TensorStore,
+        adapters: &mut TensorStore,
+        opt: &mut TensorStore,
+        adapter: Adapter,
+        mode: StepMode,
+        tokens: &Tensor,
+        targets: &Tensor,
+        loss_mask: Option<&Tensor>,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        let art = format!("{}_{}_{}", cfg.name, mode.artifact_stem(), adapter.tag());
+        let spec = self.artifact_spec(&art)?;
+        let switches = crate::heal::SwitchedRunner::switches(cfg, student);
+        let cured = crate::compress::cured_layers_of(student);
+        let tag = adapter.tag();
+        // Seed missing optimizer moments up front (the bindings below
+        // hold borrows of `opt`).
+        for io in &spec.inputs {
+            if let Some(rest) =
+                io.name.strip_prefix("m.").or_else(|| io.name.strip_prefix("v."))
+            {
+                let kind = &io.name[..1];
+                let key = format!("{tag}.{kind}.{rest}");
+                if !opt.contains(&key) {
+                    opt.insert(key, Tensor::zeros(&io.shape));
+                }
+            }
+        }
+        let mut b = Bindings::new()
+            .bind("tokens", tokens)
+            .bind("targets", targets)
+            .bind("switches", &switches);
+        b.bind_owned("lr", Tensor::scalar_f32(lr));
+        b.bind_owned("t", Tensor::scalar_f32(t));
+        if let Some(m) = loss_mask {
+            b.bind_mut("loss_mask", m);
+        }
+        for io in &spec.inputs {
+            if b.get(&io.name).is_some() {
+                continue;
+            }
+            let name = &io.name;
+            if let Some(rest) = name.strip_prefix("m.").or_else(|| name.strip_prefix("v."))
+            {
+                let kind = &name[..1];
+                b.bind_mut(name.clone(), opt.get(&format!("{tag}.{kind}.{rest}"))?);
+            } else {
+                b.bind_owned(
+                    name.clone(),
+                    resolve_switched_input(
+                        name, &io.shape, teacher, student, adapters, adapter, &cured,
+                    )?,
+                );
+            }
+        }
+        let mut out = self.execute(&art, &b)?;
+        drop(b);
+        let loss = Self::take(&mut out, "loss", "switched step")?.f32s()?[0] as f64;
+        for o in &spec.outputs {
+            if o.name == "loss" {
+                continue;
+            }
+            let tensor = out.remove(&o.name).context("missing switched-step output")?;
+            if let Some(rest) =
+                o.name.strip_prefix("m.").or_else(|| o.name.strip_prefix("v."))
+            {
+                let kind = &o.name[..1];
+                opt.insert(format!("{tag}.{kind}.{rest}"), tensor);
+            } else if is_adapter_param(&o.name) {
+                adapters.insert(o.name.clone(), tensor);
+            } else if student.contains(&o.name) {
+                // du_* updates belong to the student (only written for
+                // layers that are actually cured — zeros stay zeros, and
+                // writing them into the student store for non-cured
+                // layers would pollute it).
+                student.insert(o.name.clone(), tensor);
+            }
+        }
+        Ok(loss)
+    }
+
+    fn switched_logits(
+        &self,
+        cfg: &ModelConfig,
+        teacher: &TensorStore,
+        student: &TensorStore,
+        adapters: &TensorStore,
+        adapter: Adapter,
+        tokens: &Tensor,
+    ) -> Result<Tensor> {
+        let art = format!("{}_model_logits_switched_{}", cfg.name, adapter.tag());
+        let spec = self.artifact_spec(&art)?;
+        let switches = crate::heal::SwitchedRunner::switches(cfg, student);
+        let cured = crate::compress::cured_layers_of(student);
+        // The lowered signature includes unused `targets`; bind zeros.
+        let dummy_targets =
+            Tensor::from_i32(&[cfg.batch, cfg.seq], vec![0; cfg.batch * cfg.seq]);
+        let mut b = Bindings::new().bind("tokens", tokens).bind("switches", &switches);
+        b.bind_mut("targets", &dummy_targets);
+        for io in &spec.inputs {
+            if b.get(&io.name).is_some() {
+                continue;
+            }
+            b.bind_owned(
+                io.name.clone(),
+                resolve_switched_input(
+                    &io.name, &io.shape, teacher, student, adapters, adapter, &cured,
+                )?,
+            );
+        }
+        let mut out = self.execute(&art, &b)?;
+        Self::take(&mut out, "logits", "switched logits")
     }
 
     fn supports_artifacts(&self) -> bool {

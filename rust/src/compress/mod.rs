@@ -55,7 +55,7 @@ pub fn select_layers(
     let mut chosen = match strategy {
         LayerStrategy::Angular => {
             let mut order = eligible.clone();
-            order.sort_by(|&a, &b| calib.angular[a].partial_cmp(&calib.angular[b]).unwrap());
+            order.sort_by(|&a, &b| calib.angular[a].total_cmp(&calib.angular[b]));
             order.truncate(k);
             order
         }

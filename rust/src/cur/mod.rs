@@ -217,9 +217,12 @@ pub fn select_kv_positions(keys: &Mat, weights: &[f64], keep: usize) -> Result<V
             in_set[i] = true;
         }
         let mut rest: Vec<usize> = (0..n).filter(|&i| !in_set[i]).collect();
-        rest.sort_by(|&a, &b| {
-            weights[b].partial_cmp(&weights[a]).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        // Descending by weight, NaN last (the crate-wide NaN sort
+        // policy): a row whose importance is undefined must never be
+        // kept ahead of a finite one. Weights are clamped >= 1e-12
+        // upstream, so this is defense-in-depth.
+        use crate::util::stats::nan_last_desc;
+        rest.sort_by(|&a, &b| nan_last_desc(weights[b]).total_cmp(&nan_last_desc(weights[a])));
         picked.extend(rest.into_iter().take(keep - picked.len()));
     }
     Ok(picked)

@@ -3,17 +3,19 @@
 //!
 //! Two forward paths:
 //! * the per-layer [`Pipeline`] (dense or ΔU-cured models);
-//! * the switched full-model logits artifacts for PEFT-adapted models
-//!   (`model_logits_switched_{du,lora,mora,curlora}`).
+//! * the switched full-model logits for PEFT-adapted models, via
+//!   [`crate::backend::Backend::switched_logits`] (native blended
+//!   forward, or the `model_logits_switched_{du,lora,mora,curlora}`
+//!   artifacts on pjrt).
 
-use crate::backend::{KvCache, KvPolicy};
+use crate::backend::{Backend, KvCache, KvPolicy};
 use crate::data::ChoiceItem;
 use crate::data::{Corpus, Vocab};
 use crate::linalg::Mat;
+use crate::peft::Adapter;
 use crate::pipeline::{LayerPlan, Pipeline};
-use crate::runtime::Bindings;
 use crate::tensor::{Tensor, TensorStore};
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 
 /// Mean per-token NLL over `n_batches` from `corpus`; ppl = exp(nll).
 pub fn perplexity(
@@ -179,46 +181,20 @@ pub fn choice_accuracy(
     Ok(correct as f64 / total.max(1) as f64)
 }
 
-/// Logits from a switched full-model artifact with adapters — see
-/// [`crate::heal::SwitchedRunner`] for the parameter-resolution scheme.
+/// Logits of an adapter-blended (switched) model, routed through the
+/// backend: the native blended forward, or the switched logits artifact
+/// on pjrt. Missing tensors of the active adapter family — or of a
+/// cured layer's factors — are hard errors on every backend: a typo'd
+/// tensor name must never silently evaluate the base model.
 pub fn switched_logits(
     pipe: &Pipeline,
     teacher: &TensorStore,
     student: &TensorStore,
     adapters: &TensorStore,
-    adapter_tag: &str,
+    adapter: Adapter,
     tokens: &Tensor,
 ) -> Result<Tensor> {
-    let art = format!("{}_model_logits_switched_{}", pipe.cfg.name, adapter_tag);
-    let spec = pipe.rt.spec(&art)?;
-    let switches = crate::heal::SwitchedRunner::switches(&pipe.cfg, student);
-    // The lowered signature includes unused `targets`; bind zeros.
-    let dummy_targets =
-        Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], vec![0; pipe.cfg.batch * pipe.cfg.seq]);
-    let mut b = Bindings::new().bind("tokens", tokens).bind("switches", &switches);
-    b.bind_mut("targets", &dummy_targets);
-    for io in &spec.inputs {
-        if b.get(&io.name).is_some() {
-            continue;
-        }
-        let name = &io.name;
-        let suffix = name.split('.').next_back().unwrap_or("");
-        let t = if suffix.starts_with("lora_") || suffix.starts_with("mora_") || suffix.starts_with("cl_")
-        {
-            adapters.get(name).ok().cloned().unwrap_or_else(|| Tensor::zeros(&io.shape))
-        } else if suffix.starts_with("c_")
-            || suffix.starts_with("u_")
-            || suffix.starts_with("du_")
-            || suffix.starts_with("r_")
-        {
-            student.get(name).ok().cloned().unwrap_or_else(|| Tensor::zeros(&io.shape))
-        } else {
-            teacher.get(name)?.clone()
-        };
-        b.bind_owned(name.clone(), t);
-    }
-    let mut out = pipe.rt.execute(&art, &b)?;
-    out.remove("logits").context("logits missing")
+    pipe.rt.backend().switched_logits(&pipe.cfg, teacher, student, adapters, adapter, tokens)
 }
 
 /// Per-row NLL from a logits row: max-subtracted logsumexp minus the
@@ -284,7 +260,7 @@ pub fn perplexity_switched(
     teacher: &TensorStore,
     student: &TensorStore,
     adapters: &TensorStore,
-    adapter_tag: &str,
+    adapter: Adapter,
     vocab: &Vocab,
     corpus: &mut Corpus,
     n_batches: usize,
@@ -294,7 +270,7 @@ pub fn perplexity_switched(
     for _ in 0..n_batches {
         let (toks, tgts) = corpus.batch(vocab, cfg.batch, cfg.seq);
         let tokens = Tensor::from_i32(&[cfg.batch, cfg.seq], toks);
-        let logits = switched_logits(pipe, teacher, student, adapters, adapter_tag, &tokens)?;
+        let logits = switched_logits(pipe, teacher, student, adapters, adapter, &tokens)?;
         acc += nll_from_logits_host(&logits, &tgts, None)?;
     }
     Ok((acc / n_batches as f64).exp())
@@ -306,14 +282,14 @@ pub fn choice_accuracy_switched(
     teacher: &TensorStore,
     student: &TensorStore,
     adapters: &TensorStore,
-    adapter_tag: &str,
+    adapter: Adapter,
     items: &[ChoiceItem],
 ) -> Result<f64> {
     let cfg = &pipe.cfg;
     let mut seen = vec::BitSet::new(items.len());
     let (mut correct, mut total) = (0usize, 0usize);
     for (tokens, idx) in pack_items(items, cfg.batch, cfg.seq) {
-        let logits = switched_logits(pipe, teacher, student, adapters, adapter_tag, &tokens)?;
+        let logits = switched_logits(pipe, teacher, student, adapters, adapter, &tokens)?;
         score_batch(&logits, items, &idx, &mut seen, &mut correct, &mut total)?;
     }
     Ok(correct as f64 / total.max(1) as f64)

@@ -7,20 +7,23 @@
 //!   student layer outputs, per cured layer, via the backend's
 //!   `heal_step` operation (teacher-forced layer inputs). Runs on any
 //!   backend, native CPU included.
-//! * [`SwitchedRunner`] — full-model steps on the runtime-maskable
-//!   switched artifacts (`heal_full_*` = 0.9·KD(T=10) + 0.1·CE;
-//!   `task_step_*` = masked CE), shared with the PEFT comparisons.
-//!   Artifact-backed: needs the `pjrt` backend.
+//! * [`SwitchedRunner`] — full-model switched steps (`heal_full` =
+//!   0.9·KD(T=10) + 0.1·CE; `task_step` = masked CE), shared with the
+//!   PEFT comparisons. Routed through
+//!   [`Backend::switched_step`]: the native backend runs the blended
+//!   forward + adapter-restricted backprop directly, the pjrt backend
+//!   dispatches the runtime-maskable switched AOT artifacts.
 //!
 //! Hyperparameters follow paper App. B: AdamW, lr 3e-4, cosine schedule
 //! with 100 warmup steps.
 
 use crate::backend::Backend;
+pub use crate::backend::StepMode;
 use crate::data::{Corpus, Vocab};
+use crate::peft::Adapter;
 use crate::pipeline::Pipeline;
-use crate::runtime::Bindings;
 use crate::tensor::{Tensor, TensorStore};
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 /// Cosine LR schedule with linear warmup (Loshchilov & Hutter; paper
 /// App. B uses 100 warmup steps and base lr 3e-4).
@@ -127,40 +130,31 @@ pub fn heal_layers(
     Ok(history)
 }
 
-/// Which full-model step family to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum StepMode {
-    /// `heal_full_*`: 0.9·KD(T=10) + 0.1·CE against in-graph teacher.
-    Heal,
-    /// `task_step_*`: CE masked to answer tokens.
-    Task,
-}
-
-/// Runner for the full-model switched artifacts, shared between healing
-/// (Fig. 5) and PEFT task fine-tuning (Figs. 6–7). Parameter resolution
-/// per artifact input name:
-///   `m.*`/`v.*` → `opt` store (zero-init on first touch);
-///   adapter params (`lora_*`, `mora_*`, `cl_*`) → `adapters` store;
-///   CUR factors (`c_*`,`u_*`,`du_*`,`r_*`) → `student`, zeros if absent
-///   (layer not cured — its switch is 0 so values are inert);
-///   dense weights → `teacher` store (they also feed the in-graph
-///   teacher for KD).
+/// Runner for the full-model switched graphs, shared between healing
+/// (Fig. 5) and PEFT task fine-tuning (Figs. 6–7). A thin veneer over
+/// [`Backend::switched_step`]: the backend owns parameter resolution —
+/// natively that is the blended [`crate::backend::AdapterView`] forward
+/// with Adam restricted to the active adapter; on pjrt it is the
+/// switched AOT artifact (`{config}_heal_full_{tag}` /
+/// `{config}_task_step_{tag}`) with strict missing-tensor binding.
 pub struct SwitchedRunner {
-    pub artifact: String,
-    pub adapter: String,
+    pub adapter: Adapter,
     pub mode: StepMode,
 }
 
 impl SwitchedRunner {
-    pub fn new(cfg_name: &str, adapter: &str, mode: StepMode) -> SwitchedRunner {
-        let artifact = match mode {
-            StepMode::Heal => format!("{cfg_name}_heal_full_{adapter}"),
-            StepMode::Task => format!("{cfg_name}_task_step_{adapter}"),
-        };
-        SwitchedRunner { artifact, adapter: adapter.to_string(), mode }
+    pub fn new(adapter: Adapter, mode: StepMode) -> SwitchedRunner {
+        SwitchedRunner { adapter, mode }
     }
 
-    /// Switch vector: 1.0 for layers cured in the student store.
+    /// The pjrt artifact this runner maps to (informational on native).
+    pub fn artifact_name(&self, cfg_name: &str) -> String {
+        format!("{cfg_name}_{}_{}", self.mode.artifact_stem(), self.adapter.tag())
+    }
+
+    /// Switch vector: 1.0 for layers cured in the student store (the
+    /// pjrt artifacts' runtime layer mask; the native backend reads the
+    /// store directly instead).
     pub fn switches(cfg: &crate::model::ModelConfig, student: &TensorStore) -> Tensor {
         let cured = crate::compress::cured_layers_of(student);
         let mut s = vec![0.0f32; cfg.n_layers];
@@ -170,8 +164,8 @@ impl SwitchedRunner {
         Tensor::from_f32(&[cfg.n_layers], s)
     }
 
-    /// One optimizer step; returns the loss. Trainable outputs are written
-    /// back to their owning stores.
+    /// One optimizer step; returns the loss. Trainable updates land in
+    /// their owning stores (ΔU in `student`, A/B/M/U in `adapters`).
     #[allow(clippy::too_many_arguments)]
     pub fn step(
         &self,
@@ -186,82 +180,21 @@ impl SwitchedRunner {
         lr: f64,
         t: usize,
     ) -> Result<f64> {
-        let spec = pipe.rt.spec(&self.artifact)?;
-        let switches = Self::switches(&pipe.cfg, student);
-        let mut b = Bindings::new()
-            .bind("tokens", tokens)
-            .bind("targets", targets)
-            .bind("switches", &switches);
-        b.bind_owned("lr", Tensor::scalar_f32(lr as f32));
-        b.bind_owned("t", Tensor::scalar_f32(t as f32));
-        if let Some(m) = loss_mask {
-            b.bind_mut("loss_mask", m);
-        }
-        for io in &spec.inputs {
-            if b.get(&io.name).is_some() {
-                continue;
-            }
-            let name = &io.name;
-            if let Some(rest) = name.strip_prefix("m.").or_else(|| name.strip_prefix("v.")) {
-                let kind = &name[..1];
-                let key = format!("{}.{kind}.{rest}", self.adapter);
-                if !opt.contains(&key) {
-                    opt.insert(key.clone(), Tensor::zeros(&io.shape));
-                }
-                b.bind_owned(name.clone(), opt.get(&key)?.clone());
-            } else if is_adapter_param(name) {
-                if !adapters.contains(name) {
-                    adapters.insert(name.clone(), Tensor::zeros(&io.shape));
-                }
-                b.bind_owned(name.clone(), adapters.get(name)?.clone());
-            } else if is_cur_param(name) {
-                if student.contains(name) {
-                    b.bind_owned(name.clone(), student.get(name)?.clone());
-                } else {
-                    b.bind_owned(name.clone(), Tensor::zeros(&io.shape));
-                }
-            } else {
-                // Dense weight / norm / embedding.
-                b.bind_owned(name.clone(), teacher.get(name)?.clone());
-            }
-        }
-        let mut out = pipe.rt.execute(&self.artifact, &b)?;
-        let loss = out["loss"].f32s()?[0] as f64;
-        for o in &spec.outputs {
-            if o.name == "loss" {
-                continue;
-            }
-            let tensor = out.remove(&o.name).context("missing step output")?;
-            if let Some(rest) =
-                o.name.strip_prefix("m.").or_else(|| o.name.strip_prefix("v."))
-            {
-                let kind = &o.name[..1];
-                opt.insert(format!("{}.{kind}.{rest}", self.adapter), tensor);
-            } else if is_adapter_param(&o.name) {
-                adapters.insert(o.name.clone(), tensor);
-            } else {
-                // du_* updates belong to the student (only written for
-                // layers that are actually cured — zeros stay zeros, and
-                // writing them into the student store for non-cured layers
-                // would pollute it).
-                if student.contains(&o.name) {
-                    student.insert(o.name.clone(), tensor);
-                }
-            }
-        }
-        Ok(loss)
+        pipe.rt.backend().switched_step(
+            &pipe.cfg,
+            teacher,
+            student,
+            adapters,
+            opt,
+            self.adapter,
+            self.mode,
+            tokens,
+            targets,
+            loss_mask,
+            lr as f32,
+            t as f32,
+        )
     }
-}
-
-fn is_adapter_param(name: &str) -> bool {
-    let suffix = name.split('.').next_back().unwrap_or("");
-    suffix.starts_with("lora_") || suffix.starts_with("mora_") || suffix.starts_with("cl_")
-}
-
-fn is_cur_param(name: &str) -> bool {
-    let suffix = name.split('.').next_back().unwrap_or("");
-    suffix.starts_with("c_") || suffix.starts_with("u_") || suffix.starts_with("du_")
-        || suffix.starts_with("r_")
 }
 
 #[cfg(test)]
@@ -282,14 +215,10 @@ mod tests {
     }
 
     #[test]
-    fn param_classifiers() {
-        assert!(is_adapter_param("L3.lora_a_q"));
-        assert!(is_adapter_param("L3.mora_m_gate"));
-        assert!(is_adapter_param("L3.cl_u_k"));
-        assert!(!is_adapter_param("L3.w_q"));
-        assert!(is_cur_param("L3.du_q"));
-        assert!(is_cur_param("L3.c_gate"));
-        assert!(!is_cur_param("L3.w_gate"));
-        assert!(!is_cur_param("emb"));
+    fn artifact_names_follow_the_scheme() {
+        let r = SwitchedRunner::new(Adapter::Lora, StepMode::Heal);
+        assert_eq!(r.artifact_name("tiny"), "tiny_heal_full_lora");
+        let r = SwitchedRunner::new(Adapter::Du, StepMode::Task);
+        assert_eq!(r.artifact_name("tiny"), "tiny_task_step_du");
     }
 }

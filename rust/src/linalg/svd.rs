@@ -76,7 +76,7 @@ pub fn jacobi_svd(a: &Mat) -> Svd {
     // Extract singular values and sort descending.
     let mut order: Vec<usize> = (0..n).collect();
     let norms: Vec<f64> = w.iter().map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt()).collect();
-    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+    order.sort_by(|&i, &j| norms[j].total_cmp(&norms[i]));
     let mut u = Mat::zeros(m, n);
     let mut s = Vec::with_capacity(n);
     let mut vv = Mat::zeros(n, n);

@@ -14,7 +14,8 @@ use curing::backend::KvPolicy;
 use curing::compress::{CompressOptions, LayerStrategy};
 use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
 use curing::data::{Corpus, CorpusKind, SEED_HEAL};
-use curing::heal::{heal_layers, HealOptions};
+use curing::heal::{heal_layers, HealOptions, StepMode, SwitchedRunner};
+use curing::peft::{init_adapters, trainable_params, Adapter};
 use curing::pipeline::LayerPlan;
 use curing::serve::{spawn_gen_clients, spawn_score_clients, GenerationServer, Request};
 use curing::tensor::TensorStore;
@@ -49,6 +50,7 @@ fn run(args: &Args) -> Result<()> {
         "calibrate" => calibrate(args),
         "compress" => compress(args),
         "heal" => heal(args),
+        "peft" => peft(args),
         "eval" => eval(args),
         "generate" => generate(args),
         "serve" => serve(args),
@@ -69,6 +71,10 @@ COMMANDS
   compress  --config tiny --layers K [--rank 16] [--combo all]
             [--selector curing] [--strategy angular] [--eval]
   heal      --config tiny --layers K --steps N [--rank 16]
+  peft      --adapter du|lora|mora|curlora [--mode heal|task] [--layers K]
+            [--steps N] [--lr 1e-3]        full-model switched steps
+            (heal: 0.9·KD(T=10) + 0.1·CE vs the dense teacher; task:
+             answer-masked CE on synth-mrpc) — native, no artifacts
   eval      --config tiny [--layers K]       Figure-4 metric suite
   generate  --prompt \"the atom\" [--layers K] [--tokens 24]  greedy decode
   serve     --config tiny [--mode score|generate|mixed] [--clients 4]
@@ -132,7 +138,7 @@ fn calibrate(args: &Args) -> Result<()> {
     let calib = ctx.calibrate_cached(&pipe, &store, examples)?;
     println!("angular distances (layer: d(h_l-1, h_l)), ascending:");
     let mut order: Vec<usize> = pipe.cfg.middle_layers();
-    order.sort_by(|&a, &b| calib.angular[a].partial_cmp(&calib.angular[b]).unwrap());
+    order.sort_by(|&a, &b| calib.angular[a].total_cmp(&calib.angular[b]));
     for l in order {
         println!("  layer {:>2}: {:.4}", l, calib.angular[l]);
     }
@@ -207,6 +213,86 @@ fn heal(args: &Args) -> Result<()> {
     }
     let suite = ctx.eval_suite(&pipe, &student, &plan, &EvalSizes::default())?;
     println!("healed: {}", suite.row());
+    Ok(())
+}
+
+/// Full-model PEFT comparison driver (Figs 5–7 surface): compress k
+/// layers, initialize the chosen adapter, run N switched steps through
+/// the backend (native blended graphs by default), and report the loss
+/// curve plus the switched model's wiki perplexity.
+fn peft(args: &Args) -> Result<()> {
+    let ctx = Ctx::new()?;
+    let config = args.str_opt("config", "tiny");
+    let adapter = Adapter::parse(&args.str_opt("adapter", "du"))?;
+    let mode_s = args.str_opt("mode", "heal");
+    let mode = match mode_s.as_str() {
+        "heal" => StepMode::Heal,
+        "task" => StepMode::Task,
+        other => bail!("unknown peft mode '{other}' (heal|task)"),
+    };
+    let k = args.usize_opt("layers", 3);
+    let steps = args.usize_opt("steps", 30);
+    let base_lr = args.f64_opt("lr", 1e-3);
+    let pre_steps = args.usize_opt("pretrain-steps", default_pretrain_steps());
+    let opts = parse_opts(args)?;
+    check_unknown(args)?;
+    let dense = ctx.load_or_pretrain(&config, pre_steps)?;
+    let pipe = ctx.pipeline(&config)?;
+    let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
+    let (mut student, _plan, _) =
+        ctx.compress_k(&pipe, &dense, &calib, k, LayerStrategy::Angular, &opts)?;
+    let mut rng = curing::util::Rng::new(opts.seed.wrapping_add(17), 0);
+    let mut adapters = init_adapters(adapter, &pipe.cfg, &dense, &calib, &mut rng)?;
+    let mut opt = TensorStore::new();
+    let runner = SwitchedRunner::new(adapter, mode);
+    println!(
+        "peft: adapter {} ({} trainable params), mode {mode_s}, k={k}, {steps} steps",
+        adapter.label(),
+        trainable_params(adapter, &pipe.cfg)
+    );
+    let train_items: Vec<curing::data::TrainItem> = if mode == StepMode::Task {
+        let mut trng = curing::util::Rng::new(77, 0);
+        (0..64).map(|_| curing::data::mrpc_item(&ctx.vocab, &mut trng, pipe.cfg.seq).1).collect()
+    } else {
+        Vec::new()
+    };
+    let mut corpus = Corpus::new(CorpusKind::SynthC4, SEED_HEAL);
+    for step in 0..steps {
+        let lr = curing::heal::cosine_lr(step, steps, base_lr, steps / 5);
+        let loss = match mode {
+            StepMode::Heal => {
+                let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
+                let tokens =
+                    curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
+                let targets =
+                    curing::tensor::Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
+                runner.step(
+                    &pipe, &dense, &mut student, &mut adapters, &mut opt, &tokens, &targets,
+                    None, lr, step + 1,
+                )?
+            }
+            StepMode::Task => {
+                let (tokens, targets, mask) = curing::eval::pack_train(
+                    &train_items,
+                    step * pipe.cfg.batch,
+                    pipe.cfg.batch,
+                    pipe.cfg.seq,
+                );
+                runner.step(
+                    &pipe, &dense, &mut student, &mut adapters, &mut opt, &tokens, &targets,
+                    Some(&mask), lr, step + 1,
+                )?
+            }
+        };
+        if step % (steps / 10).max(1) == 0 || step + 1 == steps {
+            println!("  step {step:>4}: loss {loss:.4} (lr {lr:.2e})");
+        }
+    }
+    let mut wiki = Corpus::new(CorpusKind::SynthWiki, curing::data::SEED_EVAL);
+    let ppl = curing::eval::perplexity_switched(
+        &pipe, &dense, &student, &adapters, adapter, &ctx.vocab, &mut wiki, 4,
+    )?;
+    println!("switched wiki ppl after {steps} {mode_s} steps: {ppl:.2}");
     Ok(())
 }
 

@@ -57,6 +57,29 @@ impl Adapter {
             other => bail!("unknown adapter '{other}'"),
         })
     }
+
+    /// Store-name prefix of this family's tensors (after the `L{l}.`
+    /// layer part): `lora_a_q`, `mora_m_gate`, `cl_u_k`, `du_q`, …
+    /// `Du`'s tensors live in the *student* store; the other three live
+    /// in the adapter store.
+    pub fn param_prefix(&self) -> &'static str {
+        match self {
+            Adapter::Du => "du_",
+            Adapter::Lora => "lora_",
+            Adapter::Mora => "mora_",
+            Adapter::CurLora => "cl_",
+        }
+    }
+
+    /// The adapter family owning a tensor-name suffix (`lora_a_q` →
+    /// LoRA), if any. `du_*` maps to `Du` even though those tensors are
+    /// student factors — callers that care distinguish via
+    /// [`Adapter::param_prefix`].
+    pub fn family_of_suffix(suffix: &str) -> Option<Adapter> {
+        [Adapter::Lora, Adapter::Mora, Adapter::CurLora, Adapter::Du]
+            .into_iter()
+            .find(|a| suffix.starts_with(a.param_prefix()))
+    }
 }
 
 /// Trainable-parameter count per adapter (for the equal-budget tables).
@@ -67,10 +90,17 @@ pub fn trainable_params(adapter: Adapter, cfg: &ModelConfig) -> usize {
         Adapter::Du | Adapter::CurLora => 3 * r * r,
         Adapter::Mora => 3 * cfg.mora_rank * cfg.mora_rank,
         Adapter::Lora => {
+            // Per projection, LoRA trains A (m×rl) + B (rl×n) = rl·(m+n).
+            // Computed from each projection's own dims so the equal-budget
+            // tables stay honest if q/k/gate shapes ever diverge.
             let rl = cfg.lora_rank;
-            let (dq, _) = cfg.weight_dims("q").expect("static projection");
-            let (dg_in, dg_out) = cfg.weight_dims("gate").expect("static projection");
-            rl * (dq + dq) * 2 + rl * (dg_in + dg_out)
+            ["q", "k", "gate"]
+                .iter()
+                .map(|p| {
+                    let (m, n) = cfg.weight_dims(p).expect("static projection");
+                    rl * (m + n)
+                })
+                .sum()
         }
     };
     mids * per_layer
@@ -165,8 +195,18 @@ mod tests {
         // du == mora == curlora by construction.
         assert_eq!(du, mora);
         assert_eq!(du, curlora);
-        // LoRA at its minimum rank is within a small factor.
+        // Exact closed forms: 3 r² per middle layer for the square
+        // families; Σ rl·(m+n) over q/k/gate for LoRA.
+        let mids = c.middle_layers().len();
+        assert_eq!(du, mids * 3 * c.default_rank * c.default_rank);
         let lora = trainable_params(Adapter::Lora, &c);
+        let (d, di) = (c.d_model, c.d_inter);
+        assert_eq!(
+            lora,
+            mids * (c.lora_rank * (d + d) * 2 + c.lora_rank * (d + di)),
+            "LoRA budget must be Σ rl·(m+n) over q, k and gate"
+        );
+        // LoRA at its minimum rank is within a small factor.
         assert!(lora < du * 4, "lora={lora} du={du}");
     }
 

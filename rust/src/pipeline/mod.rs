@@ -151,6 +151,7 @@ impl<'rt> Pipeline<'rt> {
             o: store.get(&format!("L{l}.w_o"))?,
             up: store.get(&format!("L{l}.w_up"))?,
             down: store.get(&format!("L{l}.w_down"))?,
+            adapter: None,
         })
     }
 

@@ -57,12 +57,35 @@ impl Accum {
 }
 
 /// Percentile over a copied, sorted sample (fine at our sample sizes).
+/// Sort key demoting NaN for **descending** `total_cmp` sorts: NaN maps
+/// to −∞ so it never outranks a finite score (`f64::total_cmp` alone
+/// ranks +NaN above +∞). A NaN score carries no ordering information —
+/// it must lose to every finite candidate, whichever end of the sort
+/// "wins". Shared by the wanda selectors and the KV position picker.
+pub fn nan_last_desc(x: f64) -> f64 {
+    if x.is_nan() {
+        f64::NEG_INFINITY
+    } else {
+        x
+    }
+}
+
+/// Companion of [`nan_last_desc`] for **ascending** sorts: NaN maps to
+/// +∞ so it sorts after every finite score.
+pub fn nan_last_asc(x: f64) -> f64 {
+    if x.is_nan() {
+        f64::INFINITY
+    } else {
+        x
+    }
+}
+
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
     v[idx.min(v.len() - 1)]
 }

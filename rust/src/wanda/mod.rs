@@ -11,6 +11,7 @@
 
 use crate::cur::{cur_from_indices, deim, CurFactors};
 use crate::linalg::{jacobi_svd, rand_svd, Mat};
+use crate::util::stats::{nan_last_asc, nan_last_desc};
 use crate::util::Rng;
 use anyhow::{ensure, Result};
 
@@ -125,9 +126,16 @@ fn top_col_norms(s: &Mat, k: usize) -> Vec<usize> {
     top_k(&norms, k)
 }
 
+/// NaN-proofing (`util::stats::nan_last_*` keys): degenerate
+/// calibration (all-zero activations against zero weight rows) can push
+/// 0·∞ products through the importance math, and the seed's
+/// `partial_cmp().unwrap()` on the resulting NaN panicked
+/// mid-compression. NaN scores sort as "least preferred" in both
+/// directions — they carry no ordering information and must never beat
+/// a finite score.
 fn top_k(scores: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.sort_by(|&a, &b| nan_last_desc(scores[b]).total_cmp(&nan_last_desc(scores[a])));
     idx.truncate(k);
     idx
 }
@@ -156,7 +164,9 @@ pub fn select_inverted(w: &Mat, xnorm: &[f64], rank: usize) -> (Vec<usize>, Vec<
 
 fn bottom_k(scores: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    // Ascending by score, NaN last (a NaN row is not "least important" —
+    // it is unranked, and must not crowd out real low-importance picks).
+    idx.sort_by(|&a, &b| nan_last_asc(scores[a]).total_cmp(&nan_last_asc(scores[b])));
     idx.truncate(k);
     idx
 }
@@ -251,6 +261,31 @@ mod tests {
         }
         let (rows, _cols) = select_inverted(&w, &xnorm, 8);
         assert!(rows.iter().all(|&i| i >= 4), "inverted selection picked a dominant row: {rows:?}");
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic_or_win() {
+        // Degenerate calibration can produce NaN importance scores
+        // (0·∞ upstream); sorting must not panic, and the NaN entry
+        // must lose to every finite candidate in both directions.
+        let scores = vec![3.0, f64::NAN, 1.0, 2.0, 0.5];
+        let top = top_k(&scores, 3);
+        assert_eq!(top, vec![0, 3, 2], "top_k must prefer finite scores over NaN");
+        let bottom = bottom_k(&scores, 3);
+        assert_eq!(bottom, vec![4, 2, 3], "bottom_k must prefer finite scores over NaN");
+        // All-NaN input still returns k valid, distinct indices.
+        let all_nan = vec![f64::NAN; 4];
+        let t = top_k(&all_nan, 2);
+        assert_eq!(t.len(), 2);
+        assert_ne!(t[0], t[1]);
+        // End-to-end: an inverted selection over a weight matrix whose
+        // importance goes NaN must error-free return distinct indices.
+        let (w, mut xnorm, _) = setup(12, 10, 9);
+        xnorm[3] = f64::NAN;
+        let (rows, cols) = select_inverted(&w, &xnorm, 4);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(cols.len(), 4);
+        assert!(!rows.contains(&3), "the NaN-scored row must not be selected");
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Integration tests of the native switched full-model graphs (the
+//! PEFT comparisons, Figs 5–7): zero-adapter identity, strict
+//! missing-tensor errors, and full-model ΔU healing.
+
+use curing::backend::StepMode;
+use curing::calib::Calibration;
+use curing::compress::{cure_layers, CompressOptions};
+use curing::heal::SwitchedRunner;
+use curing::model::ModelConfig;
+use curing::peft::{init_adapters, Adapter};
+use curing::pipeline::{LayerPlan, Pipeline};
+use curing::runtime::Runtime;
+use curing::tensor::{Tensor, TensorStore};
+use curing::util::Rng;
+
+fn mini(rt: &Runtime) -> ModelConfig {
+    ModelConfig::from_manifest(rt.manifest(), "mini").expect("mini config")
+}
+
+fn flat_calib(cfg: &ModelConfig) -> Calibration {
+    Calibration {
+        attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+        ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
+        angular: vec![0.0; cfg.n_layers],
+        n_examples: 1,
+    }
+}
+
+/// Compressed student over a pretend-trained dense teacher, plus a
+/// token batch.
+fn setup(seed: u64) -> (Runtime, ModelConfig, TensorStore, TensorStore, Tensor, Tensor) {
+    let rt = Runtime::native();
+    let cfg = mini(&rt);
+    let mut rng = Rng::new(seed, 0);
+    let teacher = cfg.init_dense(&mut rng);
+    let mut student = teacher.clone();
+    let calib = flat_calib(&cfg);
+    let opts = CompressOptions { r_max: 4, ..Default::default() };
+    cure_layers(&mut student, &cfg, &calib, &[1, 2], &opts).unwrap();
+    let (b, s) = (cfg.batch, cfg.seq);
+    let toks: Vec<i32> = (0..b * s).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let mut tgts = toks[1..].to_vec();
+    tgts.push(0);
+    let tokens = Tensor::from_i32(&[b, s], toks);
+    let targets = Tensor::from_i32(&[b, s], tgts);
+    (rt, cfg, teacher, student, tokens, targets)
+}
+
+/// A freshly initialized adapter is exactly inert: every family's
+/// trainable factor starts at zero (LoRA B, MoRA M, CURLoRA U; Du has
+/// no adapter store at all), so switched logits must equal the plain
+/// cured-student logits bitwise.
+#[test]
+fn zero_initialized_adapters_are_identity() {
+    let (rt, cfg, teacher, student, tokens, _) = setup(31);
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let plan = LayerPlan::with_cured(&cfg, &[1, 2], 4, "all");
+    let base = pipe.logits(&student, &plan, &tokens).unwrap();
+    let calib = flat_calib(&cfg);
+    for adapter in Adapter::ALL {
+        let mut rng = Rng::new(7, 0);
+        let adapters = init_adapters(adapter, &cfg, &teacher, &calib, &mut rng).unwrap();
+        let switched =
+            curing::eval::switched_logits(&pipe, &teacher, &student, &adapters, adapter, &tokens)
+                .unwrap();
+        assert_eq!(
+            switched, base,
+            "{adapter:?}: zero-initialized adapter changed the logits"
+        );
+    }
+}
+
+/// A misnamed active-family tensor must be a hard error — never a
+/// silent zero-fill that evaluates (or trains) the base model.
+#[test]
+fn renamed_adapter_tensor_errors_instead_of_scoring() {
+    let (rt, cfg, teacher, mut student, tokens, targets) = setup(32);
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let calib = flat_calib(&cfg);
+    let mut rng = Rng::new(8, 0);
+    let mut adapters = init_adapters(Adapter::Lora, &cfg, &teacher, &calib, &mut rng).unwrap();
+    // Sanity: intact store evaluates fine.
+    curing::eval::switched_logits(&pipe, &teacher, &student, &adapters, Adapter::Lora, &tokens)
+        .unwrap();
+    // Rename one LoRA tensor (the satellite's typo scenario).
+    let t = adapters.remove("L1.lora_a_q").unwrap();
+    adapters.insert("L1.lora_a_q_oops", t);
+    let err = curing::eval::switched_logits(
+        &pipe, &teacher, &student, &adapters, Adapter::Lora, &tokens,
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("lora_a_q"),
+        "error must name the missing tensor, got: {err:#}"
+    );
+    // The train step must refuse too.
+    let runner = SwitchedRunner::new(Adapter::Lora, StepMode::Heal);
+    let mut opt = TensorStore::new();
+    let err = runner
+        .step(
+            &pipe, &teacher, &mut student, &mut adapters, &mut opt, &tokens, &targets, None,
+            1e-3, 1,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("lora_a_q"), "step error must name it, got: {err:#}");
+    // An inactive family's absence stays fine: evaluating MoRA with a
+    // proper MoRA store ignores the broken LoRA tensors entirely.
+    let mora = init_adapters(Adapter::Mora, &cfg, &teacher, &calib, &mut rng).unwrap();
+    curing::eval::switched_logits(&pipe, &teacher, &student, &mora, Adapter::Mora, &tokens)
+        .unwrap();
+}
+
+/// A cured layer missing its ΔU tensor is a malformed student store:
+/// the switched graphs must error, not skip it — for every adapter
+/// family, since `U = U₀ + ΔU` merges silently when ΔU is absent.
+#[test]
+fn missing_student_delta_u_errors() {
+    let (rt, cfg, teacher, mut student, tokens, _) = setup(33);
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    student.remove("L1.du_q").unwrap();
+    let adapters = TensorStore::new();
+    let err = curing::eval::switched_logits(
+        &pipe, &teacher, &student, &adapters, Adapter::Du, &tokens,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("du_q"), "error must name the factor, got: {err:#}");
+    // The same malformed store must also refuse to score under a
+    // non-Du adapter (the cured base would silently lose its heal).
+    let calib = flat_calib(&cfg);
+    let mut rng = Rng::new(10, 0);
+    let lora = init_adapters(Adapter::Lora, &cfg, &teacher, &calib, &mut rng).unwrap();
+    let err = curing::eval::switched_logits(
+        &pipe, &teacher, &student, &lora, Adapter::Lora, &tokens,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("du_q"), "LoRA eval must error too, got: {err:#}");
+}
+
+/// Full-model ΔU healing on a fixed batch: 20 switched KD steps must
+/// reduce the 0.9·KD(T=10) + 0.1·CE loss (deterministic descent — the
+/// same batch every step).
+#[test]
+fn switched_du_heal_loss_decreases_on_fixed_batch() {
+    let (rt, cfg, teacher, mut student, tokens, targets) = setup(34);
+    let pipe = Pipeline { rt: &rt, cfg };
+    let mut adapters = TensorStore::new();
+    let mut opt = TensorStore::new();
+    let runner = SwitchedRunner::new(Adapter::Du, StepMode::Heal);
+    let mut losses = Vec::new();
+    for step in 0..20 {
+        let loss = runner
+            .step(
+                &pipe, &teacher, &mut student, &mut adapters, &mut opt, &tokens, &targets,
+                None, 3e-3, step + 1,
+            )
+            .unwrap();
+        assert!(loss.is_finite(), "step {step} loss {loss}");
+        losses.push(loss);
+    }
+    let first: f64 = losses[..3].iter().sum::<f64>() / 3.0;
+    let last: f64 = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
+    assert!(
+        last < first,
+        "switched ΔU healing must reduce the KD loss on a fixed batch: \
+         first {first} last {last} (series {losses:?})"
+    );
+    // ΔU actually moved.
+    let du = student.get("L1.du_q").unwrap();
+    assert!(du.fro_norm() > 0.0, "ΔU never moved");
+}
+
+/// The switched step must accept every adapter family end-to-end on the
+/// mini config (one step each, heal and task modes).
+#[test]
+fn all_families_step_in_both_modes() {
+    let (rt, cfg, teacher, student, tokens, targets) = setup(35);
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let calib = flat_calib(&cfg);
+    let mask = Tensor::from_f32(
+        &[cfg.batch, cfg.seq],
+        (0..cfg.batch * cfg.seq).map(|i| (i % 2) as f32).collect(),
+    );
+    for adapter in Adapter::ALL {
+        for mode in [StepMode::Heal, StepMode::Task] {
+            let mut rng = Rng::new(9, 0);
+            let mut student = student.clone();
+            let mut adapters =
+                init_adapters(adapter, &cfg, &teacher, &calib, &mut rng).unwrap();
+            let mut opt = TensorStore::new();
+            let runner = SwitchedRunner::new(adapter, mode);
+            let loss_mask = if mode == StepMode::Task { Some(&mask) } else { None };
+            let loss = runner
+                .step(
+                    &pipe, &teacher, &mut student, &mut adapters, &mut opt, &tokens,
+                    &targets, loss_mask, 1e-3, 1,
+                )
+                .unwrap();
+            assert!(loss.is_finite() && loss > 0.0, "{adapter:?} {mode:?} loss {loss}");
+        }
+    }
+}
