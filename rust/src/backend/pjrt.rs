@@ -629,19 +629,41 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     // copies per argument — measured 1.32x end-to-end on the pretrain
     // step, see EXPERIMENTS.md §Perf.)
     let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
-        Data::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
-        Data::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+        Data::F32(v) => (xla::ElementType::F32, pod_bytes(v)),
+        Data::I32(v) => (xla::ElementType::S32, pod_bytes(v)),
     };
     xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
         .map_err(|e| anyhow!("create literal: {e:?}"))
 }
 
-fn bytemuck_f32(v: &[f32]) -> &[u8] {
-    // Safety: f32 slices are always validly viewable as bytes (alignment
-    // shrinks, length scales by 4).
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+/// Numeric element types whose host slices may be reinterpreted as raw
+/// bytes for literal marshalling. Sealed: implemented only for `f32` and
+/// `i32` — plain 4-byte numerics with no padding, no niches, and every
+/// bit pattern valid when read back as `u8`.
+trait PodNum: sealed::Sealed {}
+impl PodNum for f32 {}
+impl PodNum for i32 {}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for i32 {}
 }
 
-fn bytemuck_i32(v: &[i32]) -> &[u8] {
-    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+// PJRT untyped-literal ingestion expects little-endian element bytes;
+// this gate keeps `pod_bytes` from silently producing byte-swapped
+// literals on a big-endian host.
+#[cfg(not(target_endian = "little"))]
+compile_error!("PJRT literal marshalling assumes little-endian host bytes");
+
+/// View a numeric slice as its underlying bytes, in host memory order.
+fn pod_bytes<T: PodNum>(v: &[T]) -> &[u8] {
+    // `T` is sealed to f32/i32 — 4-byte POD numerics with no padding or
+    // invalid bit patterns, so every element is readable as plain bytes.
+    // SAFETY: the pointer comes from a live `&[T]`, alignment only
+    // shrinks (align_of::<u8>() == 1), the length scales by the element
+    // size, and the borrow ties the byte view's lifetime to `v`.
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
 }

@@ -57,8 +57,7 @@ impl Default for EvalSizes {
 
 impl Ctx {
     pub fn new() -> Result<Ctx> {
-        let root = std::env::var("CURING_RUNDIR").unwrap_or_else(|_| "runs".to_string());
-        Ctx::with_runtime(Runtime::open_default()?, Path::new(&root))
+        Ctx::with_runtime(Runtime::open_default()?, &crate::util::config::run_dir())
     }
 
     /// Build a context over an explicit runtime and run directory (tests
@@ -225,10 +224,7 @@ fn report_rank(report: &CompressReport) -> usize {
 /// The default pretraining length used by all experiments (one-time,
 /// cached). Override with CURING_PRETRAIN_STEPS.
 pub fn default_pretrain_steps() -> usize {
-    std::env::var("CURING_PRETRAIN_STEPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(400)
+    crate::util::config::pretrain_steps_override().unwrap_or(400)
 }
 
 /// Resolve an artifacts+runs context rooted at the repo (examples/benches

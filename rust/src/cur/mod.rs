@@ -473,6 +473,22 @@ mod tests {
     }
 
     #[test]
+    fn kv_selection_rejects_non_finite_weights() {
+        // Regression guard for the crate-wide NaN ordering policy: an
+        // undefined importance weight must be a hard error at the API
+        // boundary, never a position silently ranked ahead of finite
+        // ones (the failure mode behind the original wanda NaN panic).
+        let mut rng = Rng::new(24, 0);
+        let keys = Mat::random_normal(6, 4, &mut rng);
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            let mut w = vec![1.0f64; 6];
+            w[3] = bad;
+            let err = select_kv_positions(&keys, &w, 2).unwrap_err();
+            assert!(err.to_string().contains("finite"), "weight {bad}: {err}");
+        }
+    }
+
+    #[test]
     fn param_count_matches_rank_formula() {
         let mut rng = Rng::new(7, 0);
         let w = Mat::random_normal(50, 30, &mut rng);

@@ -173,7 +173,7 @@ fn compress(args: &Args) -> Result<()> {
         report.seconds_total,
         mib(report.bytes_saved() as f64)
     );
-    let dir = std::path::Path::new(&std::env::var("CURING_RUNDIR").unwrap_or("runs".into()))
+    let dir = curing::util::config::run_dir()
         .join("stores")
         .join(format!("{config}_cured_k{k}"));
     student.save(&dir)?;

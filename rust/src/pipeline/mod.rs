@@ -22,7 +22,7 @@ use std::borrow::Cow;
 /// per-token replay reference ([`Pipeline::generate_greedy_uncached`] —
 /// same token stream, no persistent KV state; debugging escape hatch).
 fn kv_cache_disabled() -> bool {
-    std::env::var("CURING_NO_KV_CACHE").map(|v| v == "1").unwrap_or(false)
+    crate::util::config::kv_cache_disabled()
 }
 
 fn argmax(row: &[f32]) -> usize {

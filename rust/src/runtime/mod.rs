@@ -92,7 +92,7 @@ pub struct Runtime {
 }
 
 fn default_artifacts_dir() -> PathBuf {
-    PathBuf::from(std::env::var("CURING_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()))
+    crate::util::config::artifacts_dir()
 }
 
 impl Runtime {
@@ -129,7 +129,7 @@ impl Runtime {
     /// otherwise pjrt is used when built in *and* artifacts exist, with
     /// the native backend as the universal fallback.
     pub fn open_default() -> Result<Runtime> {
-        if let Ok(which) = std::env::var("CURING_BACKEND") {
+        if let Some(which) = crate::util::config::backend_override() {
             return match which.as_str() {
                 "native" => Ok(Runtime::native()),
                 "pjrt" => Runtime::pjrt_default(),

@@ -32,7 +32,7 @@ use crate::data::{Corpus, CorpusKind, Vocab};
 use crate::pipeline::{LayerPlan, Pipeline};
 use crate::tensor::{Tensor, TensorStore};
 use crate::util::stats::percentile;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
@@ -224,8 +224,8 @@ impl<'p> GenerationServer<'p> {
                 break;
             }
             // ---- admit generation requests into free slots, mid-flight.
-            while n_active < n_slots && !queue.is_empty() {
-                let req = queue.pop_front().expect("non-empty queue");
+            while n_active < n_slots {
+                let Some(req) = queue.pop_front() else { break };
                 if req.n_new == 0 {
                     // Zero tokens requested: trivially complete.
                     let _ = req.respond.send(GenResponse {
@@ -274,8 +274,11 @@ impl<'p> GenerationServer<'p> {
                     ));
                     packed = self.pipe.pack_head(self.store)?;
                 }
-                let slot = active.iter().position(|s| s.is_none()).expect("free slot");
-                let kvm = kv.as_mut().expect("kv cache");
+                let slot = active
+                    .iter()
+                    .position(|s| s.is_none())
+                    .ok_or_else(|| anyhow!("no free generation slot despite n_active < n_slots"))?;
+                let kvm = kv.as_mut().ok_or_else(|| anyhow!("kv cache missing at admission"))?;
                 let tp = Instant::now();
                 // A bad request (e.g. out-of-vocab prompt token) is
                 // answered with an error, not allowed to take down the
@@ -325,7 +328,8 @@ impl<'p> GenerationServer<'p> {
             }
             // ---- one fused decode step across all active slots.
             if n_active > 0 {
-                let kvm = kv.as_mut().expect("kv cache");
+                let kvm =
+                    kv.as_mut().ok_or_else(|| anyhow!("kv cache missing with active slots"))?;
                 let mut slot_ids = Vec::with_capacity(n_active);
                 let mut last = Vec::with_capacity(n_active);
                 for (i, s) in active.iter().enumerate() {
@@ -348,7 +352,9 @@ impl<'p> GenerationServer<'p> {
                 kv_live_accum += kvm.live_bytes() as f64;
                 for (&slot, &tok) in slot_ids.iter().zip(&next) {
                     let done = {
-                        let gs = active[slot].as_mut().expect("active slot");
+                        let gs = active[slot]
+                            .as_mut()
+                            .ok_or_else(|| anyhow!("decode step touched an empty slot {slot}"))?;
                         gs.generated.push(tok);
                         gs.last = tok;
                         // What the client sees between two tokens: the
@@ -361,7 +367,9 @@ impl<'p> GenerationServer<'p> {
                     };
                     stats.tokens_generated += 1;
                     if done {
-                        let gs = active[slot].take().expect("active slot");
+                        let gs = active[slot]
+                            .take()
+                            .ok_or_else(|| anyhow!("finished slot {slot} already empty"))?;
                         n_active -= 1;
                         // Release the lane immediately so live-KV stats
                         // count only in-flight requests (admission would

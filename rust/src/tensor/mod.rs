@@ -139,13 +139,17 @@ impl Tensor {
         }
         let t = match dtype {
             DType::F32 => {
-                let v: Vec<f32> =
-                    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+                let v: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
                 Tensor { shape, data: Data::F32(v) }
             }
             DType::I32 => {
-                let v: Vec<i32> =
-                    bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+                let v: Vec<i32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect();
                 Tensor { shape, data: Data::I32(v) }
             }
         };

@@ -29,8 +29,8 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), v);
                 } else {
                     out.flags.insert(name.to_string(), "true".to_string());
                 }
@@ -52,6 +52,7 @@ impl Args {
         self.seen.borrow_mut().push((name.to_string(), default.to_string()));
         self.flags
             .get(name)
+            // curlint: allow(panic) -- CLI flag validation: abort with a clear message
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v}")))
             .unwrap_or(default)
     }
@@ -60,6 +61,7 @@ impl Args {
         self.seen.borrow_mut().push((name.to_string(), default.to_string()));
         self.flags
             .get(name)
+            // curlint: allow(panic) -- CLI flag validation: abort with a clear message
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v}")))
             .unwrap_or(default)
     }

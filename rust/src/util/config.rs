@@ -1,0 +1,119 @@
+//! The one place `CURING_*` environment escape hatches are read.
+//!
+//! curlint's `env-var` rule forbids `env::var` everywhere else in
+//! `rust/src/**`, so this table is the complete inventory — a new knob
+//! means a new accessor here, documented in the same commit.
+//!
+//! | Variable                | Accessor                    | Effect |
+//! |-------------------------|-----------------------------|--------|
+//! | `CURING_RUNDIR`         | [`run_dir`]                 | Root for run outputs and cached stores (default `runs`) |
+//! | `CURING_ARTIFACTS`      | [`artifacts_dir`]           | PJRT AOT artifact directory (default `artifacts`) |
+//! | `CURING_BACKEND`        | [`backend_override`]        | Force `native` or `pjrt` instead of auto-detection |
+//! | `CURING_THREADS`        | [`thread_count_override`]   | Kernel thread-pool width (default: available parallelism) |
+//! | `CURING_NO_KV_CACHE`    | [`kv_cache_disabled`]       | `1` routes greedy decode onto the cache-free replay reference |
+//! | `CURING_PRETRAIN_STEPS` | [`pretrain_steps_override`] | Pretraining length for the one-time cached dense store |
+//! | `CURING_TIMING`         | [`timing_enabled`]          | `1` prints `[timing]` lines from `util::stats::Timer` |
+//! | `CURING_BENCH_FAST`     | [`bench_fast`]              | `1` shrinks every bench to CI smoke sizes |
+
+use std::path::PathBuf;
+
+/// The single allowed `env::var` call site (see module docs).
+fn var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+fn flag(name: &str) -> bool {
+    var(name).as_deref() == Some("1")
+}
+
+/// `CURING_RUNDIR`: root directory for run outputs, cached stores and
+/// reports. Defaults to `runs` under the current working directory.
+pub fn run_dir() -> PathBuf {
+    PathBuf::from(var("CURING_RUNDIR").unwrap_or_else(|| "runs".to_string()))
+}
+
+/// `CURING_ARTIFACTS`: where the PJRT backend looks for AOT artifacts
+/// (`manifest.json` plus HLO programs). Defaults to `artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(var("CURING_ARTIFACTS").unwrap_or_else(|| "artifacts".to_string()))
+}
+
+/// `CURING_BACKEND`: force a backend (`native` or `pjrt`) instead of the
+/// auto-detection in `Runtime::open_default`. `None` means auto.
+/// Validation stays with the caller so unknown names keep their
+/// current "hard error, list the options" behavior.
+pub fn backend_override() -> Option<String> {
+    var("CURING_BACKEND")
+}
+
+/// `CURING_THREADS`: worker-thread count for the native kernels' row
+/// fan-out. `None` (unset, unparsable, or zero) means use the machine's
+/// available parallelism.
+pub fn thread_count_override() -> Option<usize> {
+    var("CURING_THREADS").and_then(|s| s.parse::<usize>().ok()).filter(|&n| n > 0)
+}
+
+/// `CURING_NO_KV_CACHE=1`: route greedy decode onto the cache-free
+/// per-token replay reference (same token stream, no persistent KV
+/// state; the debugging escape hatch).
+pub fn kv_cache_disabled() -> bool {
+    flag("CURING_NO_KV_CACHE")
+}
+
+/// `CURING_PRETRAIN_STEPS`: override the pretraining length used to
+/// build the one-time cached dense store. `None` means the caller's
+/// default (400 for all experiments; CI smoke uses 5).
+pub fn pretrain_steps_override() -> Option<usize> {
+    var("CURING_PRETRAIN_STEPS").and_then(|s| s.parse().ok())
+}
+
+/// `CURING_TIMING=1`: `util::stats::Timer` prints `[timing]` lines on
+/// drop.
+pub fn timing_enabled() -> bool {
+    flag("CURING_TIMING")
+}
+
+/// `CURING_BENCH_FAST=1`: every bench drops to CI smoke sizes.
+pub fn bench_fast() -> bool {
+    flag("CURING_BENCH_FAST")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Env mutation is process-global, so everything lives in one test
+    // (cargo runs tests in parallel threads).
+    #[test]
+    fn accessors_parse_and_default() {
+        // Defaults with the variables unset. CI never sets these; a dev
+        // shell that does will still exercise the parse paths below.
+        if std::env::var_os("CURING_RUNDIR").is_none() {
+            assert_eq!(run_dir(), PathBuf::from("runs"));
+        }
+        if std::env::var_os("CURING_ARTIFACTS").is_none() {
+            assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+        }
+
+        std::env::set_var("CURING_THREADS", "0");
+        assert_eq!(thread_count_override(), None, "zero threads means auto");
+        std::env::set_var("CURING_THREADS", "three");
+        assert_eq!(thread_count_override(), None, "garbage means auto");
+        std::env::set_var("CURING_THREADS", "3");
+        assert_eq!(thread_count_override(), Some(3));
+        std::env::remove_var("CURING_THREADS");
+
+        std::env::set_var("CURING_PRETRAIN_STEPS", "17");
+        assert_eq!(pretrain_steps_override(), Some(17));
+        std::env::remove_var("CURING_PRETRAIN_STEPS");
+
+        // Exercise the shared `flag` parse through the harmless timing
+        // knob (flipping CURING_NO_KV_CACHE here could race a parallel
+        // decode test in this binary).
+        std::env::set_var("CURING_TIMING", "1");
+        assert!(timing_enabled());
+        std::env::set_var("CURING_TIMING", "0");
+        assert!(!timing_enabled());
+        std::env::remove_var("CURING_TIMING");
+    }
+}

@@ -113,7 +113,7 @@ impl Timer {
 
 impl Drop for Timer {
     fn drop(&mut self) {
-        if std::env::var("CURING_TIMING").as_deref() == Ok("1") {
+        if crate::util::config::timing_enabled() {
             eprintln!("[timing] {}: {:.1} ms", self.label, self.elapsed_ms());
         }
     }

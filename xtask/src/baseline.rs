@@ -1,0 +1,149 @@
+//! The violation ratchet: `curlint.baseline` grandfathers the long tail
+//! of pre-existing violations per `(file, rule)` while CI guarantees the
+//! counts only ever shrink. Burned-down modules simply have no entry.
+//!
+//! Format (one grandfathered bucket per line, `#` comments allowed):
+//!
+//! ```text
+//! <count> <rule> <path>
+//! ```
+
+use std::collections::BTreeMap;
+
+/// `(path, rule) -> grandfathered violation count`, ordered for stable
+/// serialization.
+pub type Counts = BTreeMap<(String, String), usize>;
+
+/// Parse a baseline file. Unparseable lines are hard errors — a corrupt
+/// ratchet must never silently allow violations.
+pub fn parse(text: &str) -> Result<Counts, String> {
+    let mut out = Counts::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (count, rule, path) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(c), Some(r), Some(p)) => (c, r, p),
+            _ => return Err(format!("baseline line {}: expected `<count> <rule> <path>`", ln + 1)),
+        };
+        if parts.next().is_some() {
+            return Err(format!("baseline line {}: trailing fields", ln + 1));
+        }
+        let count: usize = count
+            .parse()
+            .map_err(|_| format!("baseline line {}: bad count `{count}`", ln + 1))?;
+        if count == 0 {
+            return Err(format!(
+                "baseline line {}: zero-count entry — delete the line instead",
+                ln + 1
+            ));
+        }
+        if out.insert((path.to_string(), rule.to_string()), count).is_some() {
+            return Err(format!("baseline line {}: duplicate entry", ln + 1));
+        }
+    }
+    Ok(out)
+}
+
+/// Serialize counts in the checked-in format (sorted, zero-free).
+pub fn serialize(counts: &Counts) -> String {
+    let mut out = String::from(
+        "# curlint baseline — grandfathered violation counts per (file, rule).\n\
+         # The ratchet only tightens: CI fails when any count grows, and this\n\
+         # file is regenerated (shrinking) with `cargo xtask lint --update-baseline`.\n",
+    );
+    for ((path, rule), count) in counts {
+        if *count > 0 {
+            out.push_str(&format!("{count} {rule} {path}\n"));
+        }
+    }
+    out
+}
+
+/// One bucket's ratchet verdict.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Count grew past the baseline (or appeared with no entry): fail.
+    Grew { allowed: usize, actual: usize },
+    /// Count shrank below the baseline: pass, but the file is stale.
+    Shrank { allowed: usize, actual: usize },
+    /// Exactly at the baseline.
+    AtBaseline,
+}
+
+/// Compare actual counts against the baseline, per bucket. Buckets absent
+/// from both sides never appear; baseline entries for clean (or deleted)
+/// files come back as `Shrank { actual: 0 }`.
+pub fn compare(baseline: &Counts, actual: &Counts) -> Vec<((String, String), Verdict)> {
+    let mut out = Vec::new();
+    for (key, &n) in actual {
+        let allowed = baseline.get(key).copied().unwrap_or(0);
+        let verdict = if n > allowed {
+            Verdict::Grew { allowed, actual: n }
+        } else if n < allowed {
+            Verdict::Shrank { allowed, actual: n }
+        } else {
+            Verdict::AtBaseline
+        };
+        out.push((key.clone(), verdict));
+    }
+    for (key, &allowed) in baseline {
+        if !actual.contains_key(key) {
+            out.push((key.clone(), Verdict::Shrank { allowed, actual: 0 }));
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(entries: &[(&str, &str, usize)]) -> Counts {
+        entries
+            .iter()
+            .map(|&(p, r, c)| ((p.to_string(), r.to_string()), c))
+            .collect()
+    }
+
+    #[test]
+    fn round_trip() {
+        let c = counts(&[("rust/src/a.rs", "panic", 3), ("rust/src/b.rs", "env-var", 1)]);
+        assert_eq!(parse(&serialize(&c)).unwrap(), c);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("nonsense").is_err());
+        assert!(parse("x panic rust/src/a.rs").is_err());
+        assert!(parse("0 panic rust/src/a.rs").is_err());
+        assert!(parse("1 panic rust/src/a.rs extra").is_err());
+        assert!(parse("1 panic rust/src/a.rs\n1 panic rust/src/a.rs").is_err());
+        assert!(parse("# comment\n\n2 panic rust/src/a.rs\n").is_ok());
+    }
+
+    #[test]
+    fn ratchet_verdicts() {
+        let base = counts(&[("a.rs", "panic", 2), ("b.rs", "panic", 1)]);
+        let actual = counts(&[("a.rs", "panic", 3), ("c.rs", "panic", 1)]);
+        let v = compare(&base, &actual);
+        assert_eq!(
+            v,
+            vec![
+                (("a.rs".into(), "panic".into()), Verdict::Grew { allowed: 2, actual: 3 }),
+                (("b.rs".into(), "panic".into()), Verdict::Shrank { allowed: 1, actual: 0 }),
+                (("c.rs".into(), "panic".into()), Verdict::Grew { allowed: 0, actual: 1 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn at_baseline_passes() {
+        let base = counts(&[("a.rs", "panic", 2)]);
+        let v = compare(&base, &base);
+        assert_eq!(v, vec![(("a.rs".into(), "panic".into()), Verdict::AtBaseline)]);
+    }
+}

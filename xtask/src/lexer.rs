@@ -1,0 +1,360 @@
+//! A minimal Rust lexer for curlint: just enough token structure to
+//! tell code from comments, strings, char literals and lifetimes, with
+//! `line:col` positions on every token. No `syn`, no regex — the
+//! offline-build guarantee (see `rust/vendor/`) extends to the lint.
+//!
+//! Fidelity notes (deliberate simplifications, fine for linting):
+//! * String/char contents are discarded — rules only need to know *that*
+//!   a string sits somewhere, never what it says.
+//! * Numeric literals are one token including suffixes (`1e`, `-`, `12`
+//!   may split — rules never look at numbers).
+//! * Non-ASCII bytes outside comments/strings are skipped; Rust sources
+//!   in this repo only use Unicode in comments and string literals.
+
+/// What a token is; `text` is only meaningful for `Ident` and `Punct`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// A comment with its line span (block comments may span many lines).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: usize,
+    pub end_line: usize,
+}
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    i: usize,
+    line: usize,
+    col: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn at(&self, j: usize) -> u8 {
+        if j < self.src.len() {
+            self.src[j]
+        } else {
+            0
+        }
+    }
+
+    fn advance(&mut self, upto: usize) {
+        while self.i < upto && self.i < self.src.len() {
+            if self.src[self.i] == b'\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+            self.i += 1;
+        }
+    }
+}
+
+fn is_id_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_id_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize `src`, returning code tokens and the comment list separately
+/// (rules match tokens; the `// SAFETY:` and pragma checks read comments).
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut c = Cursor { src: src.as_bytes(), i: 0, line: 1, col: 1 };
+    let n = c.src.len();
+
+    while c.i < n {
+        let b = c.src[c.i];
+        let (line, col) = (c.line, c.col);
+
+        if b == b' ' || b == b'\t' || b == b'\r' || b == b'\n' {
+            c.advance(c.i + 1);
+            continue;
+        }
+
+        // Line comment.
+        if b == b'/' && c.at(c.i + 1) == b'/' {
+            let mut j = c.i;
+            while j < n && c.src[j] != b'\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                text: String::from_utf8_lossy(&c.src[c.i..j]).into_owned(),
+                line,
+                end_line: line,
+            });
+            c.advance(j);
+            continue;
+        }
+
+        // Block comment (Rust block comments nest).
+        if b == b'/' && c.at(c.i + 1) == b'*' {
+            let start = c.i;
+            let mut depth = 0usize;
+            let mut j = c.i;
+            while j < n {
+                if c.src[j] == b'/' && c.at(j + 1) == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if c.src[j] == b'*' && c.at(j + 1) == b'/' {
+                    depth -= 1;
+                    j += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    j += 1;
+                }
+            }
+            c.advance(j);
+            comments.push(Comment {
+                text: String::from_utf8_lossy(&c.src[start..j]).into_owned(),
+                line,
+                end_line: c.line,
+            });
+            continue;
+        }
+
+        // Raw / byte-raw string: r"..", r#".."#, br"..", br#".."#.
+        let raw_at = if b == b'r' && matches!(c.at(c.i + 1), b'"' | b'#') {
+            Some(c.i + 1)
+        } else if b == b'b' && c.at(c.i + 1) == b'r' && matches!(c.at(c.i + 2), b'"' | b'#') {
+            Some(c.i + 2)
+        } else {
+            None
+        };
+        if let Some(start) = raw_at {
+            let mut j = start;
+            let mut hashes = 0usize;
+            while c.at(j) == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if c.at(j) == b'"' {
+                j += 1;
+                // Find `"` followed by `hashes` '#'s.
+                let close = loop {
+                    match c.src[j..].iter().position(|&x| x == b'"') {
+                        None => break n,
+                        Some(p) => {
+                            let q = j + p + 1;
+                            if c.src[q..].len() >= hashes
+                                && c.src[q..q + hashes].iter().all(|&x| x == b'#')
+                            {
+                                break q + hashes;
+                            }
+                            j = q;
+                        }
+                    }
+                };
+                toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+                c.advance(close);
+                continue;
+            }
+            // `r#ident` raw identifier or stray hash: fall through.
+        }
+
+        // Byte string / byte char.
+        if b == b'b' && c.at(c.i + 1) == b'"' {
+            let mut j = c.i + 2;
+            while j < n {
+                match c.src[j] {
+                    b'\\' => j += 2,
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+            c.advance(j);
+            continue;
+        }
+        if b == b'b' && c.at(c.i + 1) == b'\'' {
+            let mut j = c.i + 2;
+            if c.at(j) == b'\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && c.src[j] != b'\'' {
+                j += 1;
+            }
+            c.advance(j + 1);
+            continue;
+        }
+
+        // String literal.
+        if b == b'"' {
+            let mut j = c.i + 1;
+            while j < n {
+                match c.src[j] {
+                    b'\\' => j += 2,
+                    b'"' => {
+                        j += 1;
+                        break;
+                    }
+                    _ => j += 1,
+                }
+            }
+            toks.push(Tok { kind: TokKind::Str, text: String::new(), line, col });
+            c.advance(j);
+            continue;
+        }
+
+        // Char literal vs lifetime: `'a'` is a char, `'a ` is a lifetime.
+        if b == b'\'' {
+            if is_id_start(c.at(c.i + 1)) {
+                let mut j = c.i + 1;
+                while j < n && is_id_cont(c.src[j]) {
+                    j += 1;
+                }
+                if c.at(j) == b'\'' {
+                    c.advance(j + 1); // char literal like 'a'
+                } else {
+                    c.advance(j); // lifetime
+                }
+                continue;
+            }
+            let mut j = c.i + 1;
+            if c.at(j) == b'\\' {
+                j += 2;
+            } else {
+                j += 1;
+            }
+            while j < n && c.src[j] != b'\'' {
+                j += 1;
+            }
+            c.advance(j + 1);
+            continue;
+        }
+
+        if is_id_start(b) {
+            let mut j = c.i;
+            while j < n && is_id_cont(c.src[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: String::from_utf8_lossy(&c.src[c.i..j]).into_owned(),
+                line,
+                col,
+            });
+            c.advance(j);
+            continue;
+        }
+
+        if b.is_ascii_digit() {
+            let mut j = c.i;
+            while j < n && (is_id_cont(c.src[j]) || c.src[j] == b'.') {
+                // A dot continues the number only before another digit
+                // (`1.5`); `0..n` ranges and `x.1.cmp(…)` tuple-field
+                // method calls stop it.
+                if c.src[j] == b'.' && !c.at(j + 1).is_ascii_digit() {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: String::from_utf8_lossy(&c.src[c.i..j]).into_owned(),
+                line,
+                col,
+            });
+            c.advance(j);
+            continue;
+        }
+
+        if b.is_ascii() {
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: (b as char).to_string(),
+                line,
+                col,
+            });
+        }
+        c.advance(c.i + 1);
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_code() {
+        let src = "// unwrap()\nlet s = \"unwrap()\"; /* expect( */ real()";
+        assert_eq!(idents(src), vec!["let", "s", "real"]);
+        let (toks, comments) = lex(src);
+        assert_eq!(comments.len(), 2);
+        assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn raw_strings_and_hashes() {
+        let src = "let m = r#\"a \"quoted\" unwrap()\"#; next";
+        assert_eq!(idents(src), vec!["let", "m", "next"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let esc = '\\''; g(c, esc) }";
+        let ids = idents(src);
+        assert!(ids.contains(&"g".to_string()));
+        // 'a must lex as a lifetime, not swallow code as a char literal.
+        assert!(ids.contains(&"str".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let src = "/* outer /* inner */ still comment */ after";
+        assert_eq!(idents(src), vec!["after"]);
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let (toks, _) = lex("ab\n  cd");
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let src = "p.expect(b'{'); q(b\"unwrap()\")";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["p", "expect", "q"]);
+        // b'{' is not a Str token — `expect(b'{')` must not look like
+        // `expect("msg")` to the panic rule.
+        let (toks, _) = lex("expect(b'{')");
+        assert!(toks.iter().all(|t| t.kind != TokKind::Str));
+    }
+}

@@ -1,0 +1,10 @@
+//! `xtask` — repo tooling, invoked as `cargo xtask <command>` (the alias
+//! lives in `.cargo/config.toml`). The one command today is `lint`: the
+//! **curlint** dependency-free static-analysis pass over `rust/src/**`,
+//! with a `curlint.baseline` ratchet so grandfathered violations can
+//! only ever shrink. See `rust/README.md` § curlint for the rule list
+//! and the incident each rule encodes.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;

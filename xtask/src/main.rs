@@ -1,0 +1,218 @@
+//! `cargo xtask lint` — run curlint over `rust/src/**` and enforce the
+//! `curlint.baseline` ratchet. Exit codes: 0 clean (or fully
+//! grandfathered), 1 new violations or a grown bucket, 2 usage/IO error.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use xtask::baseline::{self, Counts, Verdict};
+use xtask::rules::{check_source, Violation};
+
+const USAGE: &str = "\
+usage: cargo xtask lint [options]
+
+options:
+  --update-baseline   rewrite curlint.baseline from the current violations
+                      (review the diff: counts should only ever shrink)
+  --list              print grandfathered violations too, not just new ones
+  --root <dir>        repo root (default: auto-detected from cwd)
+  -h, --help          this message
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut update = false;
+    let mut list = false;
+    let mut root: Option<PathBuf> = None;
+    let mut cmd: Option<String> = None;
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            "--update-baseline" => update = true,
+            "--list" => list = true,
+            "--root" => match it.next() {
+                Some(d) => root = Some(PathBuf::from(d)),
+                None => {
+                    eprintln!("--root needs a directory\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            other if cmd.is_none() && !other.starts_with('-') => cmd = Some(other.to_string()),
+            other => {
+                eprintln!("unknown option `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    match cmd.as_deref() {
+        Some("lint") => {}
+        Some(other) => {
+            eprintln!("unknown command `{other}` (only `lint`)\n{USAGE}");
+            return ExitCode::from(2);
+        }
+        None => {
+            eprintln!("missing command\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    }
+
+    let root = match root.or_else(find_repo_root) {
+        Some(r) => r,
+        None => {
+            eprintln!("curlint: could not find the repo root (looked for rust/src upward)");
+            return ExitCode::from(2);
+        }
+    };
+    match run_lint(&root, update, list) {
+        Ok(clean) => {
+            if clean {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("curlint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Walk upward from cwd to the first directory containing `rust/src`.
+fn find_repo_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn rs_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let entries =
+            std::fs::read_dir(&d).map_err(|e| format!("read_dir {}: {e}", d.display()))?;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("read_dir {}: {e}", d.display()))?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn run_lint(root: &Path, update: bool, list: bool) -> Result<bool, String> {
+    let src_root = root.join("rust/src");
+    let baseline_path = root.join("curlint.baseline");
+
+    let files = rs_files(&src_root)?;
+    let n_files = files.len();
+    let mut actual = Counts::new();
+    let mut by_file: Vec<(String, Vec<Violation>)> = Vec::new();
+    let mut total = 0usize;
+    for file in files {
+        let rel = file
+            .strip_prefix(root)
+            .unwrap_or(&file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&file)
+            .map_err(|e| format!("read {}: {e}", file.display()))?;
+        let violations = check_source(&rel, &src);
+        total += violations.len();
+        for v in &violations {
+            *actual.entry((rel.clone(), v.rule.to_string())).or_insert(0) += 1;
+        }
+        if !violations.is_empty() {
+            by_file.push((rel, violations));
+        }
+    }
+
+    if update {
+        std::fs::write(&baseline_path, baseline::serialize(&actual))
+            .map_err(|e| format!("write {}: {e}", baseline_path.display()))?;
+        println!(
+            "curlint: baseline rewritten with {total} violation(s) across {} bucket(s)",
+            actual.len()
+        );
+        return Ok(true);
+    }
+
+    let base_text = match std::fs::read_to_string(&baseline_path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+        Err(e) => return Err(format!("read {}: {e}", baseline_path.display())),
+    };
+    let base = baseline::parse(&base_text)?;
+
+    let comparisons = baseline::compare(&base, &actual);
+    let mut grew = 0usize;
+    let mut stale = 0usize;
+    for ((path, rule), verdict) in &comparisons {
+        match verdict {
+            Verdict::Grew { allowed, actual } => {
+                grew += 1;
+                eprintln!(
+                    "curlint: {path}: [{rule}] {actual} violation(s), baseline allows \
+                     {allowed} — fix them or `// curlint: allow({rule}) -- <reason>`"
+                );
+            }
+            Verdict::Shrank { allowed, actual } => {
+                stale += 1;
+                println!(
+                    "curlint: {path}: [{rule}] improved to {actual} (baseline {allowed}) \
+                     — tighten with `cargo xtask lint --update-baseline`"
+                );
+            }
+            Verdict::AtBaseline => {}
+        }
+    }
+
+    // Print the offending sites: every violation in a grown bucket, or
+    // everything under --list.
+    for (path, violations) in &by_file {
+        for v in violations {
+            let bucket_grew = comparisons.iter().any(|((p, r), verdict)| {
+                p == path && r == v.rule && matches!(verdict, Verdict::Grew { .. })
+            });
+            if list || bucket_grew {
+                println!("{path}:{}:{}: [{}] {}", v.line, v.col, v.rule, v.msg);
+            }
+        }
+    }
+
+    let grandfathered = total - comparisons
+        .iter()
+        .map(|((p, r), _)| {
+            let allowed = base.get(&(p.clone(), r.clone())).copied().unwrap_or(0);
+            let n = actual.get(&(p.clone(), r.clone())).copied().unwrap_or(0);
+            n.saturating_sub(allowed)
+        })
+        .sum::<usize>();
+    println!(
+        "curlint: {total} violation(s) ({grandfathered} grandfathered, {n_files} file(s) \
+         scanned){}",
+        if stale > 0 { ", baseline is stale" } else { "" }
+    );
+    if grew > 0 {
+        eprintln!("curlint: FAILED — {grew} bucket(s) above the baseline");
+        return Ok(false);
+    }
+    println!("curlint: ok");
+    Ok(true)
+}

@@ -1,0 +1,320 @@
+//! The curlint rule set. Each rule encodes an invariant this repo has
+//! already been burned by (see `rust/README.md` § curlint for the
+//! incident behind each one):
+//!
+//! * `panic` — no `unwrap()` / `expect("…")` / `panic!` / `todo!` /
+//!   `unimplemented!` in library code (the PR 1 panic→`Result` sweep,
+//!   kept swept). `#[cfg(test)]` code is exempt. `expect` only fires
+//!   when called with a string-literal message — `self.expect(b'{')`
+//!   in the JSON parser is a fallible method, not `Option::expect`.
+//! * `float-sort` — `sort_by` / `sort_unstable_by` / `max_by` / `min_by`
+//!   must order through `total_cmp`, `Ord::cmp`, or the shared
+//!   `util::stats::nan_last_*` keys (the wanda NaN-panic audit,
+//!   automated). `partial_cmp` in a sort closure always fires.
+//! * `safety-comment` — every `unsafe` block needs a `// SAFETY:`
+//!   comment ending no more than 3 lines above it.
+//! * `env-var` — `env::var` only inside `util::config`, so `CURING_*`
+//!   escape hatches stay centralized and documented.
+//! * `kernel-purity` — no `Instant` and no allocating calls
+//!   (`vec!`, `Vec::new`, `to_vec()`, `collect()`, …) in the kernel
+//!   modules listed in [`KERNEL_MODULES`]; deliberate allocations
+//!   (output buffers of convenience wrappers) carry a pragma.
+//!
+//! Any violation is suppressible in place with
+//! `// curlint: allow(<rule>) -- <reason>` on the same line or the line
+//! above; a pragma with an unknown rule name or a missing reason is
+//! itself reported (`pragma`).
+
+use crate::lexer::{lex, Comment, Tok, TokKind};
+
+/// Kernel modules (path suffixes, `/`-separated) held to `kernel-purity`.
+pub const KERNEL_MODULES: &[&str] = &["rust/src/backend/native/math.rs"];
+
+/// The one module allowed to read `env::var` (path suffix).
+pub const CONFIG_MODULE: &str = "rust/src/util/config.rs";
+
+/// All rule names, the vocabulary `allow(...)` pragmas draw from.
+pub const RULE_NAMES: &[&str] =
+    &["panic", "float-sort", "safety-comment", "env-var", "kernel-purity", "pragma"];
+
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented"];
+const FLOAT_SORTS: &[&str] = &["sort_by", "sort_unstable_by", "max_by", "min_by"];
+const SAFE_CMPS: &[&str] = &["total_cmp", "nan_last_desc", "nan_last_asc", "cmp"];
+const KERNEL_BANNED_MACROS: &[&str] = &["vec", "format"];
+const KERNEL_BANNED_CALLS: &[&str] = &["to_vec", "collect", "to_string"];
+const KERNEL_BANNED_CTORS: &[&str] = &["Vec", "String", "Box"];
+const KERNEL_CTOR_FNS: &[&str] = &["new", "with_capacity", "from"];
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+}
+
+/// Token index spans covered by `#[cfg(test)]` / `#[test]` items.
+fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        if toks[i].text == "#" && i + 1 < n && toks[i + 1].text == "[" {
+            // Scan the attribute to its matching `]`, collecting idents.
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut names: Vec<&str> = Vec::new();
+            while j < n {
+                let t = &toks[j];
+                if t.text == "[" {
+                    depth += 1;
+                } else if t.text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Ident {
+                    names.push(&t.text);
+                }
+                j += 1;
+            }
+            let is_test = (names.contains(&"cfg") && names.contains(&"test"))
+                || names.first() == Some(&"test");
+            i = j + 1;
+            if !is_test {
+                continue;
+            }
+            // Skip further attributes stacked on the same item.
+            while i + 1 < n && toks[i].text == "#" && toks[i + 1].text == "[" {
+                let mut depth = 0usize;
+                while i < n {
+                    if toks[i].text == "[" {
+                        depth += 1;
+                    } else if toks[i].text == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    i += 1;
+                }
+            }
+            // The item body: to `;` at depth 0, or the matched brace block.
+            let start = i;
+            let mut depth = 0usize;
+            while i < n {
+                let t = &toks[i];
+                if t.text == "{" {
+                    depth += 1;
+                } else if t.text == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.text == ";" && depth == 0 {
+                    break;
+                }
+                i += 1;
+            }
+            regions.push((start, i.min(n.saturating_sub(1))));
+        }
+        i += 1;
+    }
+    regions
+}
+
+fn suffix_match(path: &str, suffix: &str) -> bool {
+    let p = path.replace('\\', "/");
+    p == suffix || p.ends_with(&format!("/{suffix}"))
+}
+
+/// Lint one source file. `path` is repo-root-relative with `/` separators
+/// (used for the kernel-module and config-module scoping).
+pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
+    let (toks, comments) = lex(src);
+    let regions = test_regions(&toks);
+    let is_kernel = KERNEL_MODULES.iter().any(|k| suffix_match(path, k));
+    let is_config = suffix_match(path, CONFIG_MODULE);
+    let n = toks.len();
+    let mut out: Vec<Violation> = Vec::new();
+    let mut push = |rule: &'static str, line: usize, col: usize, msg: String| {
+        out.push(Violation { rule, line, col, msg });
+    };
+
+    for i in 0..n {
+        if regions.iter().any(|&(a, b)| a <= i && i <= b) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let nxt = toks.get(i + 1);
+        let nxt2 = toks.get(i + 2);
+        let text = |o: Option<&Tok>| o.map(|t| t.text.as_str()).unwrap_or("");
+        let kind = |o: Option<&Tok>| o.map(|t| t.kind);
+
+        // ---- panic
+        if t.text == "unwrap" && text(nxt) == "(" && text(nxt2) == ")" {
+            push("panic", t.line, t.col, "`unwrap()` can panic".into());
+        }
+        if t.text == "expect" && text(nxt) == "(" && kind(nxt2) == Some(TokKind::Str) {
+            push("panic", t.line, t.col, "`expect(\"…\")` can panic".into());
+        }
+        if PANIC_MACROS.contains(&t.text.as_str()) && text(nxt) == "!" {
+            push("panic", t.line, t.col, format!("`{}!` in library code", t.text));
+        }
+
+        // ---- float-sort
+        if FLOAT_SORTS.contains(&t.text.as_str()) && text(nxt) == "(" {
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut has_safe = false;
+            let mut has_partial = false;
+            while j < n {
+                let u = &toks[j];
+                if u.text == "(" {
+                    depth += 1;
+                } else if u.text == ")" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if u.kind == TokKind::Ident {
+                    if SAFE_CMPS.contains(&u.text.as_str()) {
+                        has_safe = true;
+                    }
+                    if u.text == "partial_cmp" {
+                        has_partial = true;
+                    }
+                }
+                j += 1;
+            }
+            if has_partial || !has_safe {
+                push(
+                    "float-sort",
+                    t.line,
+                    t.col,
+                    format!(
+                        "`{}` without a total order — use `total_cmp` or the \
+                         `util::stats::nan_last_*` keys",
+                        t.text
+                    ),
+                );
+            }
+        }
+
+        // ---- safety-comment
+        if t.text == "unsafe" && text(nxt) == "{" {
+            let covered = comments.iter().any(|c| {
+                c.text.contains("SAFETY:")
+                    && c.end_line + 3 >= t.line
+                    && c.end_line <= t.line
+            });
+            if !covered {
+                push(
+                    "safety-comment",
+                    t.line,
+                    t.col,
+                    "`unsafe` block without a preceding `// SAFETY:` comment".into(),
+                );
+            }
+        }
+
+        // ---- env-var
+        if !is_config
+            && t.text == "env"
+            && text(nxt) == ":"
+            && text(nxt2) == ":"
+            && matches!(text(toks.get(i + 3)), "var" | "var_os")
+        {
+            let v = &toks[i + 3];
+            push(
+                "env-var",
+                v.line,
+                v.col,
+                "`env::var` outside `util::config` — add an accessor there".into(),
+            );
+        }
+
+        // ---- kernel-purity
+        if is_kernel {
+            let bad = if t.text == "Instant" {
+                Some("`Instant` in a kernel module".to_string())
+            } else if KERNEL_BANNED_MACROS.contains(&t.text.as_str()) && text(nxt) == "!" {
+                Some(format!("`{}!` allocates in a kernel module", t.text))
+            } else if KERNEL_BANNED_CALLS.contains(&t.text.as_str()) && text(nxt) == "(" {
+                Some(format!("`{}()` allocates in a kernel module", t.text))
+            } else if KERNEL_BANNED_CTORS.contains(&t.text.as_str())
+                && text(nxt) == ":"
+                && text(nxt2) == ":"
+                && KERNEL_CTOR_FNS.contains(&text(toks.get(i + 3)))
+            {
+                Some(format!(
+                    "`{}::{}` allocates in a kernel module",
+                    t.text,
+                    text(toks.get(i + 3))
+                ))
+            } else {
+                None
+            };
+            if let Some(msg) = bad {
+                push("kernel-purity", t.line, t.col, msg);
+            }
+        }
+    }
+
+    apply_pragmas(out, &comments)
+}
+
+/// Parse `// curlint: allow(rule[, rule]) -- reason` pragmas and drop
+/// suppressed violations; malformed pragmas become violations themselves.
+fn apply_pragmas(found: Vec<Violation>, comments: &[Comment]) -> Vec<Violation> {
+    // (rule, first suppressed line, last suppressed line)
+    let mut allows: Vec<(String, usize, usize)> = Vec::new();
+    let mut out: Vec<Violation> = Vec::new();
+    for c in comments {
+        let Some(k) = c.text.find("curlint: allow(") else { continue };
+        let rest = &c.text[k + "curlint: allow(".len()..];
+        let Some(close) = rest.find(')') else {
+            out.push(Violation {
+                rule: "pragma",
+                line: c.line,
+                col: 1,
+                msg: "malformed curlint pragma (unclosed `allow(`)".into(),
+            });
+            continue;
+        };
+        let names: Vec<String> =
+            rest[..close].split(',').map(|r| r.trim().to_string()).collect();
+        let tail = &rest[close + 1..];
+        let reason = match tail.find("--") {
+            Some(sep) => tail[sep + 2..].trim(),
+            None => "",
+        };
+        if reason.is_empty() || names.iter().any(|r| !RULE_NAMES.contains(&r.as_str())) {
+            out.push(Violation {
+                rule: "pragma",
+                line: c.line,
+                col: 1,
+                msg: "malformed curlint pragma (need a known rule and `-- <reason>`)"
+                    .into(),
+            });
+            continue;
+        }
+        for r in names {
+            allows.push((r, c.line, c.end_line + 1));
+        }
+    }
+    for v in found {
+        let suppressed = allows
+            .iter()
+            .any(|(r, lo, hi)| r == v.rule && *lo <= v.line && v.line <= *hi);
+        if !suppressed {
+            out.push(v);
+        }
+    }
+    out.sort_by(|a, b| (a.line, a.col).cmp(&(b.line, b.col)));
+    out
+}

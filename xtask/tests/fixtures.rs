@@ -1,0 +1,320 @@
+//! Fixture tests for curlint: every rule must fire on a seeded
+//! violation, stay quiet on the idiomatic fix, ignore lookalikes inside
+//! strings/comments/test code, and honor `// curlint: allow` pragmas.
+//! The baseline ratchet's accept/reject behavior is pinned at the end.
+
+use xtask::baseline::{self, Counts, Verdict};
+use xtask::rules::check_source;
+
+const LIB: &str = "rust/src/serve/mod.rs";
+
+fn rules_at(path: &str, src: &str) -> Vec<(String, usize)> {
+    check_source(path, src)
+        .into_iter()
+        .map(|v| (v.rule.to_string(), v.line))
+        .collect()
+}
+
+// ---------------------------------------------------------------- panic
+
+#[test]
+fn bare_unwrap_fires_with_position() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let v = check_source(LIB, src);
+    assert_eq!(v.len(), 1);
+    assert_eq!(v[0].rule, "panic");
+    assert_eq!((v[0].line, v[0].col), (2, 7));
+    assert!(v[0].msg.contains("unwrap"));
+}
+
+#[test]
+fn expect_with_message_fires() {
+    let src = "fn f(x: Option<u32>) -> u32 { x.expect(\"always some\") }\n";
+    assert_eq!(rules_at(LIB, src), vec![("panic".into(), 1)]);
+}
+
+#[test]
+fn panic_family_macros_fire() {
+    let src = "fn f() { panic!(\"boom\") }\nfn g() { todo!() }\nfn h() { unimplemented!() }\n";
+    assert_eq!(
+        rules_at(LIB, src),
+        vec![("panic".into(), 1), ("panic".into(), 2), ("panic".into(), 3)]
+    );
+}
+
+#[test]
+fn fallible_expect_method_is_not_option_expect() {
+    // The JSON parser's own `fn expect(&mut self, b: u8) -> Result<…>`:
+    // a byte-char argument is not a panic message.
+    let src = "fn obj(&mut self) -> R { self.expect(b'{')?; self.expect(b'}') }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn unwrap_lookalikes_do_not_fire() {
+    let src = "fn f() -> usize {\n\
+               // a comment saying unwrap() and panic!(…)\n\
+               let s = \"unwrap()\";\n\
+               let r = r#\"expect(\"nested\") unwrap()\"#;\n\
+               let o = x.unwrap_or(3);\n\
+               s.len() + r.len() + o\n}\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn cfg_test_code_is_exempt() {
+    let src = "fn lib() -> u32 { 1 }\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   #[test]\n\
+                   fn t() { assert_eq!(super::lib(), Some(1).unwrap()); }\n\
+               }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn violation_before_test_mod_still_fires() {
+    let src = "fn lib(x: Option<u32>) -> u32 { x.unwrap() }\n\
+               #[cfg(test)]\nmod tests { fn t() { lib(None).unwrap(); } }\n";
+    assert_eq!(rules_at(LIB, src), vec![("panic".into(), 1)]);
+}
+
+// ----------------------------------------------------------- float-sort
+
+#[test]
+fn partial_cmp_sort_fires() {
+    let src = "fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+    let rules: Vec<String> = check_source(LIB, src).into_iter().map(|v| v.rule.into()).collect();
+    // both the unsound comparator and the unwrap on it
+    assert!(rules.contains(&"float-sort".to_string()));
+    assert!(rules.contains(&"panic".to_string()));
+}
+
+#[test]
+fn keyless_float_sort_fires() {
+    let src = "fn f(v: &mut Vec<(f64, usize)>) { v.sort_unstable_by(|a, b| cmp_somehow(a, b)); }\n";
+    assert_eq!(rules_at(LIB, src), vec![("float-sort".into(), 1)]);
+}
+
+#[test]
+fn total_cmp_and_nan_keys_pass() {
+    let src = "fn f(v: &mut [f64], w: &[f64]) {\n\
+               v.sort_by(|a, b| a.total_cmp(b));\n\
+               idx.sort_by(|&a, &b| nan_last_desc(w[b]).total_cmp(&nan_last_desc(w[a])));\n\
+               items.sort_unstable_by(|a, b| nan_last_asc(a.0).total_cmp(&nan_last_asc(b.0)));\n\
+               }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn ord_cmp_sort_passes() {
+    let src = "fn f(v: &mut Vec<(u32, u32)>) { v.sort_by(|a, b| b.1.cmp(&a.1)); }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn max_by_with_partial_cmp_fires() {
+    let src = "fn f(v: &[f32]) { v.iter().max_by(|a, b| a.partial_cmp(b).expect(\"cmp\")); }\n";
+    let rules: Vec<String> = check_source(LIB, src).into_iter().map(|v| v.rule.into()).collect();
+    assert!(rules.contains(&"float-sort".to_string()));
+}
+
+// ------------------------------------------------------- safety-comment
+
+#[test]
+fn uncommented_unsafe_fires() {
+    let src = "fn f(v: &[f32]) -> &[u8] {\n    unsafe { cast(v) }\n}\n";
+    assert_eq!(rules_at(LIB, src), vec![("safety-comment".into(), 2)]);
+}
+
+#[test]
+fn safety_comment_satisfies() {
+    let src = "fn f(v: &[f32]) -> &[u8] {\n\
+               // SAFETY: f32 has no invalid bit patterns and u8 alignment\n\
+               // is never stricter; the view borrows `v`.\n\
+               unsafe { cast(v) }\n}\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn distant_safety_comment_does_not_satisfy() {
+    let src = "// SAFETY: way up here\nfn a() {}\nfn b() {}\nfn c() {}\n\
+               fn f(v: &[f32]) -> &[u8] { unsafe { cast(v) } }\n";
+    assert_eq!(rules_at(LIB, src), vec![("safety-comment".into(), 5)]);
+}
+
+// -------------------------------------------------------------- env-var
+
+#[test]
+fn stray_env_var_fires() {
+    let src = "fn f() -> String { std::env::var(\"CURING_RUNDIR\").unwrap_or_default() }\n";
+    assert_eq!(rules_at(LIB, src), vec![("env-var".into(), 1)]);
+}
+
+#[test]
+fn env_var_in_config_module_passes() {
+    let src = "fn var(name: &str) -> Option<String> { std::env::var(name).ok() }\n";
+    assert!(rules_at("rust/src/util/config.rs", src).is_empty());
+}
+
+#[test]
+fn env_args_is_fine_anywhere() {
+    let src = "fn f() { for a in std::env::args() { drop(a); } }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+// -------------------------------------------------------- kernel-purity
+
+const KERNEL: &str = "rust/src/backend/native/math.rs";
+
+#[test]
+fn kernel_allocation_patterns_fire() {
+    let src = "fn k(n: usize) {\n\
+               let a = vec![0.0f32; n];\n\
+               let b: Vec<f32> = Vec::new();\n\
+               let c = xs.to_vec();\n\
+               let d: Vec<f32> = ys.iter().copied().collect();\n\
+               let t = Instant::now();\n\
+               }\n";
+    let got = rules_at(KERNEL, src);
+    assert_eq!(got.len(), 5, "{got:?}");
+    assert!(got.iter().all(|(r, _)| r == "kernel-purity"));
+    assert_eq!(
+        got.iter().map(|&(_, l)| l).collect::<Vec<_>>(),
+        vec![2, 3, 4, 5, 6]
+    );
+}
+
+#[test]
+fn same_code_outside_kernel_modules_passes() {
+    let src = "fn k(n: usize) { let a = vec![0.0f32; n]; drop(a); }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+// -------------------------------------------------------------- pragmas
+
+#[test]
+fn pragma_suppresses_same_line() {
+    let src =
+        "fn f(x: Option<u32>) -> u32 { x.unwrap() } // curlint: allow(panic) -- invariant: caller checked\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn pragma_suppresses_next_line() {
+    let src = "// curlint: allow(panic) -- poisoned mutex is already fatal\n\
+               fn f() { lock.lock().unwrap() }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
+fn pragma_scope_is_tight() {
+    // The allow covers its own line + the next one, not the whole file.
+    let src = "// curlint: allow(panic) -- first only\n\
+               fn f() { a.unwrap() }\n\
+               fn g() { b.unwrap() }\n";
+    assert_eq!(rules_at(LIB, src), vec![("panic".into(), 3)]);
+}
+
+#[test]
+fn pragma_for_other_rule_does_not_suppress() {
+    let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() } // curlint: allow(env-var) -- wrong rule\n";
+    assert_eq!(rules_at(LIB, src), vec![("panic".into(), 1)]);
+}
+
+#[test]
+fn pragma_without_reason_is_itself_a_violation() {
+    let src = "fn f() -> u32 { 3 } // curlint: allow(panic)\n";
+    assert_eq!(rules_at(LIB, src), vec![("pragma".into(), 1)]);
+}
+
+#[test]
+fn pragma_with_unknown_rule_is_malformed() {
+    let src = "fn f() -> u32 { 3 } // curlint: allow(no-such-rule) -- why\n";
+    assert_eq!(rules_at(LIB, src), vec![("pragma".into(), 1)]);
+}
+
+#[test]
+fn pragma_can_cover_multiple_rules() {
+    let src = "// curlint: allow(panic, float-sort) -- bench-only scratch path\n\
+               fn f(v: &mut [f64]) { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+// ---------------------------------------------------- baseline ratchet
+
+fn counts(entries: &[(&str, &str, usize)]) -> Counts {
+    entries.iter().map(|&(p, r, c)| ((p.to_string(), r.to_string()), c)).collect()
+}
+
+#[test]
+fn ratchet_accepts_at_or_below_baseline() {
+    let base = counts(&[("rust/src/util/json.rs", "panic", 3)]);
+    let at = counts(&[("rust/src/util/json.rs", "panic", 3)]);
+    let below = counts(&[("rust/src/util/json.rs", "panic", 1)]);
+    assert!(baseline::compare(&base, &at)
+        .iter()
+        .all(|(_, v)| !matches!(v, Verdict::Grew { .. })));
+    assert!(baseline::compare(&base, &below)
+        .iter()
+        .all(|(_, v)| !matches!(v, Verdict::Grew { .. })));
+}
+
+#[test]
+fn ratchet_rejects_growth_and_new_buckets() {
+    let base = counts(&[("rust/src/util/json.rs", "panic", 3)]);
+    let grown = counts(&[("rust/src/util/json.rs", "panic", 4)]);
+    let fresh = counts(&[
+        ("rust/src/util/json.rs", "panic", 3),
+        ("rust/src/serve/mod.rs", "panic", 1),
+    ]);
+    assert!(baseline::compare(&base, &grown)
+        .iter()
+        .any(|(_, v)| matches!(v, Verdict::Grew { .. })));
+    let v = baseline::compare(&base, &fresh);
+    assert!(v
+        .iter()
+        .any(|((p, _), v)| p == "rust/src/serve/mod.rs" && matches!(v, Verdict::Grew { .. })));
+}
+
+#[test]
+fn baseline_serialization_round_trips_real_shape() {
+    let base = counts(&[
+        ("rust/src/peft/mod.rs", "panic", 1),
+        ("rust/src/pipeline/mod.rs", "panic", 4),
+        ("rust/src/util/json.rs", "panic", 3),
+    ]);
+    let text = baseline::serialize(&base);
+    assert!(text.starts_with('#'), "keeps the how-to-regenerate header");
+    assert_eq!(baseline::parse(&text).unwrap(), base);
+}
+
+// --------------------------------------------- end-to-end shaped fixture
+
+#[test]
+fn mixed_fixture_reports_each_class_once() {
+    let src = "\
+use std::time::Instant;
+
+fn admit(q: &mut Queue) -> Slot {
+    q.pop().expect(\"non-empty\")
+}
+
+fn order(scores: &mut Vec<f64>) {
+    scores.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn cast(v: &[f32]) -> &[u8] {
+    unsafe { transmute(v) }
+}
+
+fn rundir() -> String {
+    std::env::var(\"CURING_RUNDIR\").unwrap_or_else(|_| \"runs\".into())
+}
+";
+    let mut rules: Vec<String> =
+        check_source(LIB, src).into_iter().map(|v| v.rule.to_string()).collect();
+    rules.sort();
+    rules.dedup();
+    assert_eq!(rules, vec!["env-var", "float-sort", "panic", "safety-comment"]);
+}
