@@ -325,6 +325,8 @@ fn serve_bench(ctx: &Ctx) -> Result<()> {
             max_wait: Duration::from_millis(5),
             slots,
             kv_policy: KvPolicy::Exact,
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx)?;
         println!(
@@ -344,6 +346,47 @@ fn serve_bench(ctx: &Ctx) -> Result<()> {
     let speedup = tps[tps.len() - 1] / tps[0].max(1e-9);
     println!("  8-slot batched vs sequential single-slot: {speedup:.1}x tokens/s");
     sec.insert("speedup_8_slots_vs_1", Json::Num(speedup));
+
+    // Faulted traffic: the same workload at 4 slots against a backend
+    // injecting ~1% decode faults — what rollback + per-slot retry and
+    // the typed failure paths cost in throughput and tail latency when
+    // the fleet is unhealthy (compare against the clean slots4 row).
+    {
+        let faults = curing::backend::fault::FaultPlan::parse("seed=7;decode=0.01")?;
+        let frt = curing::runtime::Runtime::native().with_faults(faults);
+        let fpipe = Pipeline { rt: &frt, cfg: cfg.clone() };
+        let (tx, rx) = channel::<Request>();
+        let _resps = spawn_gen_clients(
+            &tx,
+            &ctx.vocab,
+            CorpusKind::SynthC4,
+            8,
+            n_new,
+            n_req,
+            1,
+            0,
+        );
+        drop(tx);
+        let server = GenerationServer {
+            pipe: &fpipe,
+            store: &store,
+            plan: plan.clone(),
+            max_wait: Duration::from_millis(5),
+            slots: 4,
+            kv_policy: KvPolicy::Exact,
+            deadline: None,
+            queue_cap: 0,
+        };
+        let stats = server.run(rx)?;
+        println!(
+            "  faulted (decode p=0.01, 4 slots): {:>8.0} tok/s | tok p95 {:.3} ms | \
+             slot failures {}",
+            stats.tokens_per_s, stats.tok_p95_ms, stats.slot_failures
+        );
+        sec.insert("tokens_per_s_faulted", Json::Num(stats.tokens_per_s));
+        sec.insert("tok_p95_ms_faulted", Json::Num(stats.tok_p95_ms));
+        sec.insert("slot_failures_faulted", Json::Num(stats.slot_failures as f64));
+    }
 
     // Packed vs unpacked NT at the fused-decode head shape (8 active
     // rows, large-k B reused across steps — pack cost paid once).
@@ -415,6 +458,8 @@ fn kv_cur_bench(ctx: &Ctx) -> Result<()> {
             max_wait: Duration::from_millis(5),
             slots,
             kv_policy: policy,
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx)?;
         let live_per_slot = stats.kv_live_bytes_mean / slots as f64;
@@ -680,7 +725,7 @@ fn f5(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> R
         println!(
             "  {} (trainable ≈ {} params, {steps} steps):",
             adapter.label(),
-            trainable_params(adapter, &pipe.cfg)
+            trainable_params(adapter, &pipe.cfg)?
         );
         let mut series = Vec::with_capacity(steps);
         let t0 = std::time::Instant::now();

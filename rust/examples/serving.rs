@@ -72,6 +72,8 @@ fn main() -> Result<()> {
             max_wait: Duration::from_millis(25),
             slots,
             kv_policy,
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx)?;
         println!(

@@ -1,0 +1,567 @@
+//! Deterministic fault injection: a [`Backend`] wrapper that makes the
+//! serving stack's failure paths testable.
+//!
+//! [`FaultyBackend`] wraps any inner backend and, driven by a seeded
+//! [`FaultPlan`], injects three failure shapes at the four call sites
+//! the generation server exercises per token —
+//! [`Backend::layer_prefill`], [`Backend::layer_decode_batch`],
+//! [`Backend::compress_kv_slot`] and the head calls
+//! ([`Backend::head_logits`] / [`Backend::head_logits_packed`] /
+//! [`Backend::head_nll`]):
+//!
+//! * **typed errors** — the call fails with a downcastable
+//!   [`InjectedFault`] instead of running;
+//! * **NaN/Inf poisoning** — the call runs, then ONE element of ONE
+//!   output row is overwritten with a non-finite value. Because every
+//!   kernel is row-independent (see `backend::native::math`), the
+//!   corruption is confined to a single slot's stream and must surface
+//!   as that one request's typed error, never as cross-slot divergence;
+//! * **latency spikes** — the call sleeps `delay<ms>` first, then runs
+//!   normally (deadline/timeout fuel).
+//!
+//! Injection decisions come from a PCG stream seeded by
+//! [`FaultPlan::seed`]: the same plan over the same call sequence hits
+//! the same sites (asserted in `tests/chaos.rs`). Everything outside the
+//! four sites delegates untouched, so scoring-only paths and
+//! train/heal/compress flows see the inner backend verbatim.
+//!
+//! The plan is normally supplied via the `CURING_FAULTS` environment
+//! variable (read by [`crate::util::config::faults_spec`], applied in
+//! `Runtime::open_default`) or the serve CLI's `--faults` flag; the
+//! grammar lives at [`FaultPlan::parse`].
+
+use crate::backend::{Backend, CalibOut, HealOut, KvCache, LayerParams, PackedHead, StepMode};
+use crate::model::ModelConfig;
+use crate::runtime::{ArtifactSpec, Bindings};
+use crate::tensor::{Tensor, TensorStore};
+use crate::util::{Json, Rng};
+use anyhow::{bail, ensure, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+/// A backend call site faults can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// [`Backend::layer_prefill`] (admission).
+    Prefill,
+    /// [`Backend::layer_decode_batch`] (the fused decode hot loop).
+    Decode,
+    /// [`Backend::compress_kv_slot`] (CUR lane compaction).
+    Compress,
+    /// The head calls: [`Backend::head_logits`],
+    /// [`Backend::head_logits_packed`] and [`Backend::head_nll`].
+    Head,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 4] =
+        [FaultSite::Prefill, FaultSite::Decode, FaultSite::Compress, FaultSite::Head];
+
+    fn parse(s: &str) -> Result<FaultSite> {
+        Ok(match s {
+            "prefill" => FaultSite::Prefill,
+            "decode" => FaultSite::Decode,
+            "compress" => FaultSite::Compress,
+            "head" => FaultSite::Head,
+            other => bail!("unknown fault site '{other}' (prefill|decode|compress|head|all)"),
+        })
+    }
+}
+
+impl std::fmt::Display for FaultSite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultSite::Prefill => "prefill",
+            FaultSite::Decode => "decode",
+            FaultSite::Compress => "compress",
+            FaultSite::Head => "head",
+        })
+    }
+}
+
+/// What an injection does to the targeted call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the call with a typed [`InjectedFault`] error.
+    Error,
+    /// Run the call, then overwrite one output element with NaN.
+    Nan,
+    /// Run the call, then overwrite one output element with +Inf.
+    Inf,
+    /// Sleep this many milliseconds, then run the call normally.
+    Delay(u64),
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        if let Some(ms) = s.strip_prefix("delay") {
+            let ms: u64 = ms
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad delay '{s}' (want delay<ms>, e.g. delay5)"))?;
+            return Ok(FaultKind::Delay(ms));
+        }
+        Ok(match s {
+            "err" => FaultKind::Error,
+            "nan" => FaultKind::Nan,
+            "inf" => FaultKind::Inf,
+            other => bail!("unknown fault kind '{other}' (err|nan|inf|delay<ms>)"),
+        })
+    }
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FaultKind::Error => f.write_str("err"),
+            FaultKind::Nan => f.write_str("nan"),
+            FaultKind::Inf => f.write_str("inf"),
+            FaultKind::Delay(ms) => write!(f, "delay{ms}"),
+        }
+    }
+}
+
+/// One injection rule: at `site`, with per-call probability `p`, do
+/// `kind`. A site may carry several rules (e.g. mostly delays plus rare
+/// hard errors); each rule draws independently and the first hit wins.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRule {
+    pub site: FaultSite,
+    pub p: f64,
+    pub kind: FaultKind,
+}
+
+/// A seeded fault schedule for one [`FaultyBackend`].
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// PCG seed for the injection stream. Same seed + same call
+    /// sequence = same injected sites.
+    pub seed: u64,
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a `CURING_FAULTS` / `--faults` spec.
+    ///
+    /// Grammar — `;`-separated clauses:
+    ///
+    /// ```text
+    /// seed=<u64>                         injection-stream seed (default 0)
+    /// <site>=<p>[:<kind>]                one rule; kind defaults to err
+    /// all=<p>[:<kind>]                   sugar: one rule per site
+    /// site ∈ prefill|decode|compress|head
+    /// kind ∈ err|nan|inf|delay<ms>
+    /// ```
+    ///
+    /// Example: `seed=7;decode=0.05;head=0.01:nan;prefill=0.02:delay5`.
+    /// Probabilities must lie in [0, 1]; unknown sites/kinds are errors
+    /// (a typo'd spec must never silently run fault-free).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let Some((key, val)) = clause.split_once('=') else {
+                bail!("fault clause '{clause}' is not key=value");
+            };
+            if key == "seed" {
+                plan.seed = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad fault seed '{val}' (want u64)"))?;
+                continue;
+            }
+            let (p_str, kind) = match val.split_once(':') {
+                Some((p, k)) => (p, FaultKind::parse(k)?),
+                None => (val, FaultKind::Error),
+            };
+            let p: f64 = p_str
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fault probability '{p_str}' in '{clause}'"))?;
+            ensure!((0.0..=1.0).contains(&p), "fault probability {p} must be in [0, 1]");
+            if key == "all" {
+                plan.rules.extend(FaultSite::ALL.map(|site| FaultRule { site, p, kind }));
+            } else {
+                plan.rules.push(FaultRule { site: FaultSite::parse(key)?, p, kind });
+            }
+        }
+        ensure!(!plan.rules.is_empty(), "fault spec '{spec}' defines no rules");
+        Ok(plan)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "seed={}", self.seed)?;
+        for r in &self.rules {
+            write!(f, ";{}={}:{}", r.site, r.p, r.kind)?;
+        }
+        Ok(())
+    }
+}
+
+/// The typed error an injected [`FaultKind::Error`] raises — downcast
+/// from the anyhow chain (`err.downcast_ref::<InjectedFault>()`) to
+/// distinguish injected faults from organic backend errors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub site: FaultSite,
+    /// 1-based ordinal of this injection on its backend (observability:
+    /// "the 3rd injected fault").
+    pub seq: u64,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected fault #{} at {}", self.seq, self.site)
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// A [`Backend`] that injects the faults of a [`FaultPlan`] around an
+/// inner backend. Interior mutability mirrors the inner backends' op
+/// counters: the server single-threads all backend calls, and the
+/// wrapper (like the handles it wraps) is not `Sync`.
+pub struct FaultyBackend {
+    inner: Box<dyn Backend>,
+    plan: FaultPlan,
+    rng: RefCell<Rng>,
+    injected: Cell<u64>,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Box<dyn Backend>, plan: FaultPlan) -> FaultyBackend {
+        let rng = RefCell::new(Rng::new(plan.seed, 0xFA17));
+        FaultyBackend { inner, plan, rng, injected: Cell::new(0) }
+    }
+
+    /// Total faults injected so far (errors + poisonings + delays).
+    pub fn injected(&self) -> u64 {
+        self.injected.get()
+    }
+
+    /// Draw this site's rules in plan order; the first hit wins. Every
+    /// matching rule consumes exactly one draw whether it hits or not,
+    /// so the decision stream depends only on (seed, rules, call
+    /// sequence) — the determinism the chaos tests pin.
+    fn arm(&self, site: FaultSite) -> Option<FaultKind> {
+        let mut rng = self.rng.borrow_mut();
+        let mut hit = None;
+        for rule in self.plan.rules.iter().filter(|r| r.site == site) {
+            let draw = rng.f64();
+            if hit.is_none() && draw < rule.p {
+                hit = Some(rule.kind);
+            }
+        }
+        hit
+    }
+
+    fn fault_err(&self, site: FaultSite) -> anyhow::Error {
+        let seq = self.injected.get() + 1;
+        self.injected.set(seq);
+        anyhow::Error::new(InjectedFault { site, seq })
+    }
+
+    /// Pre-call gate: raise injected errors, apply delays, and hand
+    /// poison kinds back for post-call application.
+    fn pre(&self, site: FaultSite) -> Result<Option<FaultKind>> {
+        match self.arm(site) {
+            None => Ok(None),
+            Some(FaultKind::Error) => Err(self.fault_err(site)),
+            Some(FaultKind::Delay(ms)) => {
+                self.injected.set(self.injected.get() + 1);
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(None)
+            }
+            Some(kind) => {
+                self.injected.set(self.injected.get() + 1);
+                Ok(Some(kind))
+            }
+        }
+    }
+
+    /// Overwrite one element of one row of `t` with the poison value.
+    /// Row-confined on purpose: row-independent kernels then corrupt
+    /// exactly one slot's stream, which serve must fail individually.
+    fn poison(&self, t: &mut Tensor, kind: FaultKind) -> Result<()> {
+        let val = if kind == FaultKind::Nan { f32::NAN } else { f32::INFINITY };
+        let rows = t.shape.first().copied().unwrap_or(1).max(1);
+        let data = t.f32s_mut()?;
+        let per = (data.len() / rows).max(1);
+        let mut rng = self.rng.borrow_mut();
+        let idx = rng.below(rows) * per + rng.below(per);
+        if let Some(x) = data.get_mut(idx) {
+            *x = val;
+        }
+        Ok(())
+    }
+
+    fn run_poisoned<F>(&self, site: FaultSite, call: F) -> Result<Tensor>
+    where
+        F: FnOnce() -> Result<Tensor>,
+    {
+        let armed = self.pre(site)?;
+        let mut out = call()?;
+        if let Some(kind) = armed {
+            self.poison(&mut out, kind)?;
+        }
+        Ok(out)
+    }
+}
+
+impl Backend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn manifest(&self) -> &Json {
+        self.inner.manifest()
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.inner.exec_count()
+    }
+
+    fn embed(&self, cfg: &ModelConfig, emb: &Tensor, tokens: &Tensor) -> Result<Tensor> {
+        self.inner.embed(cfg, emb, tokens)
+    }
+
+    fn layer_forward(&self, cfg: &ModelConfig, p: &LayerParams, x: &Tensor) -> Result<Tensor> {
+        self.inner.layer_forward(cfg, p, x)
+    }
+
+    fn layer_forward_infer(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        self.inner.layer_forward_infer(cfg, p, x)
+    }
+
+    fn supports_kv_decode(&self) -> bool {
+        self.inner.supports_kv_decode()
+    }
+
+    fn fixed_shape(&self) -> bool {
+        self.inner.fixed_shape()
+    }
+
+    fn layer_prefill(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+        kv: &mut KvCache,
+        layer: usize,
+        slot: usize,
+    ) -> Result<Tensor> {
+        self.run_poisoned(FaultSite::Prefill, || {
+            self.inner.layer_prefill(cfg, p, x, kv, layer, slot)
+        })
+    }
+
+    fn layer_decode_batch(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+        kv: &mut KvCache,
+        layer: usize,
+        slots: &[usize],
+    ) -> Result<Tensor> {
+        self.run_poisoned(FaultSite::Decode, || {
+            self.inner.layer_decode_batch(cfg, p, x, kv, layer, slots)
+        })
+    }
+
+    fn compress_kv_slot(&self, cfg: &ModelConfig, kv: &mut KvCache, slot: usize) -> Result<usize> {
+        // No f32 output to poison here: any armed non-delay kind fails
+        // the call (a corrupt compaction is indistinguishable from a
+        // failed one at this seam).
+        match self.arm(FaultSite::Compress) {
+            Some(FaultKind::Delay(ms)) => {
+                self.injected.set(self.injected.get() + 1);
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            Some(_) => return Err(self.fault_err(FaultSite::Compress)),
+            None => {}
+        }
+        self.inner.compress_kv_slot(cfg, kv, slot)
+    }
+
+    fn pack_head(&self, emb: &Tensor) -> Result<Option<PackedHead>> {
+        self.inner.pack_head(emb)
+    }
+
+    fn head_logits_packed(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        packed: &PackedHead,
+    ) -> Result<Tensor> {
+        self.run_poisoned(FaultSite::Head, || {
+            self.inner.head_logits_packed(cfg, x, ln_f, packed)
+        })
+    }
+
+    fn layer_forward_calib(
+        &self,
+        cfg: &ModelConfig,
+        p: &LayerParams,
+        x: &Tensor,
+    ) -> Result<CalibOut> {
+        self.inner.layer_forward_calib(cfg, p, x)
+    }
+
+    fn head_logits(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+    ) -> Result<Tensor> {
+        self.run_poisoned(FaultSite::Head, || self.inner.head_logits(cfg, x, ln_f, emb))
+    }
+
+    fn head_nll(
+        &self,
+        cfg: &ModelConfig,
+        x: &Tensor,
+        ln_f: &Tensor,
+        emb: &Tensor,
+        targets: &Tensor,
+    ) -> Result<Tensor> {
+        self.run_poisoned(FaultSite::Head, || self.inner.head_nll(cfg, x, ln_f, emb, targets))
+    }
+
+    fn train_step(
+        &self,
+        cfg: &ModelConfig,
+        store: &mut TensorStore,
+        opt: &mut TensorStore,
+        tokens: &Tensor,
+        targets: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        self.inner.train_step(cfg, store, opt, tokens, targets, lr, t)
+    }
+
+    fn heal_step(
+        &self,
+        cfg: &ModelConfig,
+        student: &mut TensorStore,
+        opt: &mut TensorStore,
+        layer: usize,
+        x: &Tensor,
+        y_teacher: &Tensor,
+        lr: f32,
+        t: f32,
+    ) -> Result<HealOut> {
+        self.inner.heal_step(cfg, student, opt, layer, x, y_teacher, lr, t)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn switched_step(
+        &self,
+        cfg: &ModelConfig,
+        teacher: &TensorStore,
+        student: &mut TensorStore,
+        adapters: &mut TensorStore,
+        opt: &mut TensorStore,
+        adapter: crate::peft::Adapter,
+        mode: StepMode,
+        tokens: &Tensor,
+        targets: &Tensor,
+        loss_mask: Option<&Tensor>,
+        lr: f32,
+        t: f32,
+    ) -> Result<f64> {
+        self.inner.switched_step(
+            cfg, teacher, student, adapters, opt, adapter, mode, tokens, targets, loss_mask,
+            lr, t,
+        )
+    }
+
+    fn switched_logits(
+        &self,
+        cfg: &ModelConfig,
+        teacher: &TensorStore,
+        student: &TensorStore,
+        adapters: &TensorStore,
+        adapter: crate::peft::Adapter,
+        tokens: &Tensor,
+    ) -> Result<Tensor> {
+        self.inner.switched_logits(cfg, teacher, student, adapters, adapter, tokens)
+    }
+
+    fn supports_artifacts(&self) -> bool {
+        self.inner.supports_artifacts()
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        self.inner.artifact_names()
+    }
+
+    fn artifact_spec(&self, name: &str) -> Result<ArtifactSpec> {
+        self.inner.artifact_spec(name)
+    }
+
+    fn execute_artifact(&self, name: &str, bindings: &Bindings) -> Result<HashMap<String, Tensor>> {
+        self.inner.execute_artifact(name, bindings)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_grammar() {
+        let p = FaultPlan::parse("seed=7;decode=0.05;head=0.01:nan;prefill=0.02:delay5").unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(
+            p.rules[0],
+            FaultRule { site: FaultSite::Decode, p: 0.05, kind: FaultKind::Error }
+        );
+        assert_eq!(p.rules[1].kind, FaultKind::Nan);
+        assert_eq!(p.rules[2].kind, FaultKind::Delay(5));
+        // `all=` expands to one rule per site.
+        let p = FaultPlan::parse("all=0.5:inf").unwrap();
+        assert_eq!(p.rules.len(), 4);
+        assert_eq!(p.seed, 0);
+        // Round-trip through Display.
+        let p2 = FaultPlan::parse(&p.to_string()).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn plan_parse_rejects_garbage() {
+        for bad in [
+            "",
+            "decode",
+            "decode=1.5",
+            "decode=-0.1",
+            "decode=0.5:boom",
+            "warp=0.5",
+            "seed=x;decode=0.1",
+            "decode=0.1:delayx",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn injected_fault_downcasts() {
+        let plan = FaultPlan::parse("decode=1.0").unwrap();
+        let fb = FaultyBackend::new(
+            Box::new(crate::backend::native::NativeBackend::new()),
+            plan,
+        );
+        let err = fb.fault_err(FaultSite::Decode);
+        let inj = err.downcast_ref::<InjectedFault>().unwrap();
+        assert_eq!(inj.site, FaultSite::Decode);
+        assert_eq!(inj.seq, 1);
+        assert_eq!(fb.injected(), 1);
+    }
+}

@@ -17,6 +17,7 @@
 //! tensors plus a [`LayerParams`] view of the weights and gets tensors
 //! back.
 
+pub mod fault;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -425,6 +426,22 @@ impl KvCache {
             if compacted {
                 self.fill[s] += 1;
             }
+        }
+    }
+
+    /// Roll back a *partially executed* decode step on `slot`: a fused
+    /// [`Backend::layer_decode_batch`] pass that failed mid-stack has
+    /// already appended this token's position to the per-layer position
+    /// maps of every layer it completed (K/V row writes themselves are
+    /// idempotent — the row index depends only on the not-yet-advanced
+    /// `next_pos`/`fill`). Truncating every layer's map back to `fill`
+    /// makes re-executing the step safe. Call only on a slot whose
+    /// current step has NOT been advanced; no-op under
+    /// [`KvPolicy::Exact`], which keeps no maps.
+    pub fn rollback_token(&mut self, slot: usize) {
+        let fill = self.fill[slot];
+        for layer in &mut self.positions {
+            layer[slot].truncate(fill);
         }
     }
 

@@ -464,7 +464,9 @@ impl Backend for PjrtBackend {
         let loss = Self::take(&mut out, "loss", "heal step")?.f32s()?[0] as f64;
         let y_student = Self::take(&mut out, "y_student", "heal step")?;
         for name in tr {
-            let proj = name.strip_prefix("du_").expect("du_ prefix");
+            let proj = name
+                .strip_prefix("du_")
+                .ok_or_else(|| anyhow!("trainable tensor '{name}' missing du_ prefix"))?;
             student.insert(
                 format!("L{layer}.du_{proj}"),
                 Self::take(&mut out, name, "heal step")?,

@@ -80,11 +80,15 @@ COMMANDS
   serve     --config tiny [--mode score|generate|mixed] [--clients 4]
             [--requests 32] [--slots 4] [--tokens 24] [--prompt-len 8]
             [--kv-policy exact|cur:<keep>[:<sinks>:<recent>]]
+            [--deadline-ms 0] per-request deadline (0 = none)
+            [--queue-cap 0]   backlog bound, sheds Overloaded (0 = unbounded)
+            [--faults \"seed=7;decode=0.05;head=0.01:nan\"] chaos injection
 
 ENV  CURING_BACKEND (native|pjrt; default: pjrt when built in and artifacts exist)
      CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
      CURING_PRETRAIN_STEPS (default 400)      CURING_THREADS (native matmul workers)
-     CURING_NO_KV_CACHE=1 (force the cache-free replay reference in `generate`)"
+     CURING_NO_KV_CACHE=1 (force the cache-free replay reference in `generate`)
+     CURING_FAULTS (fault-injection plan wrapped around any command's backend)"
     );
 }
 
@@ -248,7 +252,7 @@ fn peft(args: &Args) -> Result<()> {
     println!(
         "peft: adapter {} ({} trainable params), mode {mode_s}, k={k}, {steps} steps",
         adapter.label(),
-        trainable_params(adapter, &pipe.cfg)
+        trainable_params(adapter, &pipe.cfg)?
     );
     let train_items: Vec<curing::data::TrainItem> = if mode == StepMode::Task {
         let mut trng = curing::util::Rng::new(77, 0);
@@ -346,7 +350,7 @@ fn generate(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let ctx = Ctx::new()?;
+    let mut ctx = Ctx::new()?;
     let config = args.str_opt("config", "tiny");
     let mode = args.str_opt("mode", "score");
     let clients = args.usize_opt("clients", 4);
@@ -356,11 +360,22 @@ fn serve(args: &Args) -> Result<()> {
     let prompt_len = args.usize_opt("prompt-len", 8);
     let steps = args.usize_opt("steps", default_pretrain_steps());
     let kv_policy = KvPolicy::parse(&args.str_opt("kv-policy", "exact"))?;
+    let deadline_ms = args.usize_opt("deadline-ms", 0);
+    let queue_cap = args.usize_opt("queue-cap", 0);
+    let faults = args.str_opt("faults", "");
     check_unknown(args)?;
     if !matches!(mode.as_str(), "score" | "generate" | "mixed") {
         bail!("unknown serve mode '{mode}' (score|generate|mixed)");
     }
+    // Pretrain/load on the clean backend — faults apply to serving
+    // traffic only, never to building the cached store.
     let dense = ctx.load_or_pretrain(&config, steps)?;
+    if !faults.trim().is_empty() {
+        let plan = curing::backend::fault::FaultPlan::parse(&faults)?;
+        println!("injecting faults: {plan}");
+        let rt = std::mem::replace(&mut ctx.rt, curing::runtime::Runtime::native());
+        ctx.rt = rt.with_faults(plan);
+    }
     let pipe = ctx.pipeline(&config)?;
     let (tx, rx) = std::sync::mpsc::channel::<Request>();
     let (mut _score_resps, mut _gen_resps) = (Vec::new(), Vec::new());
@@ -395,6 +410,8 @@ fn serve(args: &Args) -> Result<()> {
         max_wait: Duration::from_millis(30),
         slots,
         kv_policy,
+        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64)),
+        queue_cap,
     };
     let stats = server.run(rx)?;
     if stats.served > 0 {
@@ -432,6 +449,21 @@ fn serve(args: &Args) -> Result<()> {
             stats.kv_compactions,
             mib(stats.kv_live_bytes_mean),
             mib(exact_bound as f64)
+        );
+    }
+    let troubled = stats.rejected
+        + stats.timed_out
+        + stats.slot_failures
+        + stats.quarantined_slots
+        + stats.degraded_steps;
+    if troubled > 0 {
+        println!(
+            "robustness: rejected {} | timed out {} | slot failures {} | quarantined slots {} | degraded steps {}",
+            stats.rejected,
+            stats.timed_out,
+            stats.slot_failures,
+            stats.quarantined_slots,
+            stats.degraded_steps
         );
     }
     println!("wall {:.2}s", stats.wall_s);

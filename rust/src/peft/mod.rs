@@ -83,7 +83,7 @@ impl Adapter {
 }
 
 /// Trainable-parameter count per adapter (for the equal-budget tables).
-pub fn trainable_params(adapter: Adapter, cfg: &ModelConfig) -> usize {
+pub fn trainable_params(adapter: Adapter, cfg: &ModelConfig) -> Result<usize> {
     let mids = cfg.middle_layers().len();
     let r = cfg.default_rank;
     let per_layer = match adapter {
@@ -94,16 +94,15 @@ pub fn trainable_params(adapter: Adapter, cfg: &ModelConfig) -> usize {
             // Computed from each projection's own dims so the equal-budget
             // tables stay honest if q/k/gate shapes ever diverge.
             let rl = cfg.lora_rank;
-            ["q", "k", "gate"]
-                .iter()
-                .map(|p| {
-                    let (m, n) = cfg.weight_dims(p).expect("static projection");
-                    rl * (m + n)
-                })
-                .sum()
+            let mut total = 0;
+            for p in ["q", "k", "gate"] {
+                let (m, n) = cfg.weight_dims(p)?;
+                total += rl * (m + n);
+            }
+            total
         }
     };
-    mids * per_layer
+    Ok(mids * per_layer)
 }
 
 /// Initialize an adapter store for the middle layers.
@@ -189,9 +188,9 @@ mod tests {
     #[test]
     fn budgets_are_comparable() {
         let c = cfg();
-        let du = trainable_params(Adapter::Du, &c);
-        let mora = trainable_params(Adapter::Mora, &c);
-        let curlora = trainable_params(Adapter::CurLora, &c);
+        let du = trainable_params(Adapter::Du, &c).unwrap();
+        let mora = trainable_params(Adapter::Mora, &c).unwrap();
+        let curlora = trainable_params(Adapter::CurLora, &c).unwrap();
         // du == mora == curlora by construction.
         assert_eq!(du, mora);
         assert_eq!(du, curlora);
@@ -199,7 +198,7 @@ mod tests {
         // families; Σ rl·(m+n) over q/k/gate for LoRA.
         let mids = c.middle_layers().len();
         assert_eq!(du, mids * 3 * c.default_rank * c.default_rank);
-        let lora = trainable_params(Adapter::Lora, &c);
+        let lora = trainable_params(Adapter::Lora, &c).unwrap();
         let (d, di) = (c.d_model, c.d_inter);
         assert_eq!(
             lora,

@@ -25,16 +25,39 @@ fn kv_cache_disabled() -> bool {
     crate::util::config::kv_cache_disabled()
 }
 
-fn argmax(row: &[f32]) -> usize {
+/// Typed poisoned-decode error: the logits row fed to greedy token
+/// selection held a NaN or infinity. Downcast from the anyhow chain to
+/// distinguish numeric poisoning from other decode failures — the serve
+/// loop routes it through its per-slot failure path (fail one request,
+/// keep serving) instead of letting a silent `NaN > x == false`
+/// comparison emit token 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NonFiniteLogits;
+
+impl std::fmt::Display for NonFiniteLogits {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("non-finite logits (NaN/Inf) reached greedy token selection")
+    }
+}
+
+impl std::error::Error for NonFiniteLogits {}
+
+/// Greedy token over one logits row. Any non-finite entry is a typed
+/// [`NonFiniteLogits`] error: a poisoned row must fail its request, not
+/// silently decode token 0 (NaN loses every `>` comparison).
+pub fn greedy_token(row: &[f32]) -> Result<i32> {
     let mut best = 0usize;
     let mut bv = f32::NEG_INFINITY;
     for (j, &x) in row.iter().enumerate() {
+        if !x.is_finite() {
+            return Err(anyhow::Error::new(NonFiniteLogits));
+        }
         if x > bv {
             bv = x;
             best = j;
         }
     }
-    best
+    Ok(best as i32)
 }
 
 /// How one layer executes.
@@ -123,22 +146,18 @@ impl<'rt> Pipeline<'rt> {
             ),
             LayerKind::Cured { combo, .. } => {
                 let targets = crate::model::combo_targets(combo)?;
-                let mut projs = Vec::with_capacity(3);
-                for proj in ["q", "k", "gate"] {
+                let view = |proj: &'static str| -> Result<Proj<'b>> {
                     if targets.contains(&proj) {
-                        projs.push(Proj::Cured {
+                        Ok(Proj::Cured {
                             c: store.get(&format!("L{l}.c_{proj}"))?,
                             u: Cow::Owned(self.merged_u(store, l, proj)?),
                             r: store.get(&format!("L{l}.r_{proj}"))?,
-                        });
+                        })
                     } else {
-                        projs.push(Proj::Dense(store.get(&format!("L{l}.w_{proj}"))?));
+                        Ok(Proj::Dense(store.get(&format!("L{l}.w_{proj}"))?))
                     }
-                }
-                let gate = projs.pop().expect("gate");
-                let k = projs.pop().expect("k");
-                let q = projs.pop().expect("q");
-                (q, k, gate)
+                };
+                (view("q")?, view("k")?, view("gate")?)
             }
         };
         Ok(LayerParams {
@@ -319,7 +338,48 @@ impl<'rt> Pipeline<'rt> {
         let hidden =
             Tensor::from_f32(&[1, 1, d], x.f32s()?[(w - 1) * d..w * d].to_vec());
         let logits = self.head_rows(store, &hidden, packed)?;
-        Ok(argmax(&logits.f32s()?[..self.cfg.vocab]) as i32)
+        greedy_token(&logits.f32s()?[..self.cfg.vocab])
+    }
+
+    /// Compact `slot`'s lane if it is full under [`KvPolicy::Cur`];
+    /// returns whether a compaction ran. The granular entry point for
+    /// callers that need per-slot error isolation (the serve loop fails
+    /// only the slot whose compaction errored);
+    /// [`Pipeline::decode_step_logits`] runs it for every slot
+    /// automatically.
+    pub fn compact_slot(&self, kv: &mut KvCache, slot: usize) -> Result<bool> {
+        if kv.needs_compaction(slot) {
+            self.rt.backend().compress_kv_slot(&self.cfg, kv, slot)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// The hidden-state half of one fused decode step: embed `last` and
+    /// run every layer's single-position pass across the slots,
+    /// returning the (n, 1, d) hidden rows. Performs **no** compaction
+    /// and does **not** advance the cache — callers own both
+    /// ([`Pipeline::decode_step_logits`] composes all three; the serve
+    /// loop calls the pieces so a failure can be rolled back per slot
+    /// via [`KvCache::rollback_token`] and retried or failed in
+    /// isolation). Full [`KvPolicy::Cur`] lanes must be compacted first.
+    pub fn decode_hidden(
+        &self,
+        store: &TensorStore,
+        plan: &LayerPlan,
+        kv: &mut KvCache,
+        slots: &[usize],
+        last: &[i32],
+    ) -> Result<Tensor> {
+        ensure!(plan.0.len() == self.cfg.n_layers, "plan length mismatch");
+        ensure!(slots.len() == last.len() && !slots.is_empty(), "one token per slot");
+        let toks = Tensor::from_i32(&[slots.len(), 1], last.to_vec());
+        let mut x = self.embed(store, &toks)?;
+        for (l, kind) in plan.0.iter().enumerate() {
+            let params = self.layer_params(store, l, kind)?;
+            x = self.rt.backend().layer_decode_batch(&self.cfg, &params, &x, kv, l, slots)?;
+        }
+        Ok(x)
     }
 
     /// One fused decode step across the active slots, returning the raw
@@ -341,18 +401,10 @@ impl<'rt> Pipeline<'rt> {
         ensure!(slots.len() == last.len() && !slots.is_empty(), "one token per slot");
         if matches!(kv.policy, KvPolicy::Cur { .. }) {
             for &slot in slots {
-                if kv.needs_compaction(slot) {
-                    self.rt.backend().compress_kv_slot(&self.cfg, kv, slot)?;
-                }
+                self.compact_slot(kv, slot)?;
             }
         }
-        let n = slots.len();
-        let toks = Tensor::from_i32(&[n, 1], last.to_vec());
-        let mut x = self.embed(store, &toks)?;
-        for (l, kind) in plan.0.iter().enumerate() {
-            let params = self.layer_params(store, l, kind)?;
-            x = self.rt.backend().layer_decode_batch(&self.cfg, &params, &x, kv, l, slots)?;
-        }
+        let x = self.decode_hidden(store, plan, kv, slots, last)?;
         kv.advance(slots);
         self.head_rows(store, &x, packed)
     }
@@ -375,7 +427,7 @@ impl<'rt> Pipeline<'rt> {
         let (n, v) = (slots.len(), self.cfg.vocab);
         let logits = self.decode_step_logits(store, plan, kv, slots, last, packed)?;
         let data = logits.f32s()?;
-        Ok((0..n).map(|r| argmax(&data[r * v..(r + 1) * v]) as i32).collect())
+        (0..n).map(|r| greedy_token(&data[r * v..(r + 1) * v])).collect()
     }
 
     /// Greedy decoding through the per-layer pipeline.
@@ -521,9 +573,10 @@ impl<'rt> Pipeline<'rt> {
                     kv.advance(&[0]);
                     x_last = Some(x);
                 }
-                let hidden = x_last.expect("non-empty history");
+                let hidden = x_last
+                    .ok_or_else(|| anyhow::anyhow!("empty decode history for slot replay"))?;
                 let logits = self.head_rows(store, &hidden, packed.as_ref())?;
-                let t = argmax(&logits.f32s()?[..cfg.vocab]) as i32;
+                let t = greedy_token(&logits.f32s()?[..cfg.vocab])?;
                 gen.push(t);
                 hist.push(t);
             }
@@ -571,15 +624,15 @@ impl<'rt> Pipeline<'rt> {
             let data = logits.f32s()?;
             for (i, g) in generated.iter_mut().enumerate() {
                 let pos = lens[i] - 1; // last real token's prediction
-                let best = argmax(&data[(i * s + pos) * v..(i * s + pos + 1) * v]);
-                g.push(best as i32);
+                let best = greedy_token(&data[(i * s + pos) * v..(i * s + pos + 1) * v])?;
+                g.push(best);
                 // Slide or append.
                 if lens[i] < s {
-                    windows[i][lens[i]] = best as i32;
+                    windows[i][lens[i]] = best;
                     lens[i] += 1;
                 } else {
                     windows[i].rotate_left(1);
-                    windows[i][s - 1] = best as i32;
+                    windows[i][s - 1] = best;
                 }
             }
         }
@@ -619,6 +672,15 @@ mod tests {
         )
         .unwrap();
         ModelConfig::from_manifest(&j, "t").unwrap()
+    }
+
+    #[test]
+    fn greedy_token_rejects_non_finite() {
+        assert_eq!(greedy_token(&[0.1, 0.9, -0.5]).unwrap(), 1);
+        let err = greedy_token(&[0.1, f32::NAN, 0.3]).unwrap_err();
+        assert!(err.downcast_ref::<NonFiniteLogits>().is_some(), "typed error expected: {err}");
+        assert!(greedy_token(&[f32::INFINITY, 0.0]).is_err());
+        assert!(greedy_token(&[f32::NEG_INFINITY, 0.0]).is_err());
     }
 
     #[test]

@@ -127,8 +127,22 @@ impl Runtime {
 
     /// Backend selection: `CURING_BACKEND=native|pjrt` forces one;
     /// otherwise pjrt is used when built in *and* artifacts exist, with
-    /// the native backend as the universal fallback.
+    /// the native backend as the universal fallback. When
+    /// `CURING_FAULTS` is set, the chosen backend is wrapped in a
+    /// fault-injecting [`crate::backend::fault::FaultyBackend`] — any
+    /// command becomes a chaos run.
     pub fn open_default() -> Result<Runtime> {
+        let rt = Self::open_default_clean()?;
+        match crate::util::config::faults_spec() {
+            Some(spec) => {
+                let plan = crate::backend::fault::FaultPlan::parse(&spec)?;
+                Ok(rt.with_faults(plan))
+            }
+            None => Ok(rt),
+        }
+    }
+
+    fn open_default_clean() -> Result<Runtime> {
         if let Some(which) = crate::util::config::backend_override() {
             return match which.as_str() {
                 "native" => Ok(Runtime::native()),
@@ -140,6 +154,14 @@ impl Runtime {
             return Runtime::pjrt_default();
         }
         Ok(Runtime::native())
+    }
+
+    /// Wrap this runtime's backend in a fault-injecting
+    /// [`crate::backend::fault::FaultyBackend`] driven by `plan`.
+    pub fn with_faults(self, plan: crate::backend::fault::FaultPlan) -> Runtime {
+        Runtime {
+            backend: Box::new(crate::backend::fault::FaultyBackend::new(self.backend, plan)),
+        }
     }
 
     pub fn backend(&self) -> &dyn Backend {

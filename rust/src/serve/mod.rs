@@ -25,11 +25,35 @@
 //! Backend handles are not `Send` (PJRT's xla handles, the native op
 //! counter), so the server runs on the *calling* thread and clients are
 //! spawned. The server exits when the request channel disconnects and
-//! all queued work has drained — drop the last `Sender` to stop it.
+//! all queued work has drained — drop the last `Sender` to stop it —
+//! or when a [`Request::Shutdown`] drains it gracefully.
+//!
+//! # Failure semantics
+//!
+//! The server never aborts on per-request trouble; every outcome is a
+//! typed [`ServeError`] on the response:
+//!
+//! * **Request-level**: malformed input (empty prompt, out-of-vocab
+//!   token, wrong scoring lengths) → [`ServeError::Rejected`]; a
+//!   backend failure or non-finite logits confined to one request →
+//!   [`ServeError::Failed`]; an elapsed deadline (queued or mid-decode)
+//!   → [`ServeError::Timeout`] with any partial tokens; a full backlog
+//!   at enqueue → [`ServeError::Overloaded`].
+//! * **Slot-level**: a failed fused decode step is rolled back
+//!   ([`KvCache::rollback_token`]) and re-run one slot at a time, so
+//!   only the faulty slot's request fails; [`QUARANTINE_AFTER`]
+//!   consecutive failures quarantine the slot (capacity shrinks,
+//!   [`ServeStats::quarantined_slots`]).
+//! * **Server-level**: [`Request::Shutdown`] stops admission (later
+//!   requests get [`ServeError::ShuttingDown`]), finishes in-flight
+//!   work, and sends the final [`ServeStats`] to the shutdown sender.
+//!   Under memory/queue pressure a `cur` KV policy degrades (halves
+//!   `keep`, down to [`DEGRADE_MAX_LEVEL`] steps) and restores when
+//!   pressure clears — [`ServeStats::degraded_steps`] counts the trips.
 
 use crate::backend::{Backend, KvCache, KvPolicy, PackedHead};
 use crate::data::{Corpus, CorpusKind, Vocab};
-use crate::pipeline::{LayerPlan, Pipeline};
+use crate::pipeline::{greedy_token, LayerPlan, Pipeline};
 use crate::tensor::{Tensor, TensorStore};
 use crate::util::stats::percentile;
 use anyhow::{anyhow, Result};
@@ -37,11 +61,51 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
+/// Why the server declined or failed a request. Every response carries
+/// `Option<ServeError>` — `None` is success; anything else is typed so
+/// clients can branch on the cause instead of parsing strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed at enqueue: the backlog was at [`GenerationServer::queue_cap`].
+    Overloaded { depth: usize, cap: usize },
+    /// The request's deadline elapsed before it completed. A generation
+    /// response still carries any tokens decoded before eviction.
+    Timeout { deadline_ms: u64 },
+    /// Malformed request (empty prompt, out-of-vocab token, wrong
+    /// scoring lengths) — rejected before touching the backend.
+    Rejected { reason: String },
+    /// The backend failed this request (after any per-slot retry); the
+    /// server kept serving everything else.
+    Failed { detail: String },
+    /// Received after a [`Request::Shutdown`] was accepted.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { depth, cap } => {
+                write!(f, "overloaded: backlog {depth} at cap {cap}")
+            }
+            ServeError::Timeout { deadline_ms } => {
+                write!(f, "deadline of {deadline_ms} ms elapsed")
+            }
+            ServeError::Rejected { reason } => write!(f, "rejected: {reason}"),
+            ServeError::Failed { detail } => write!(f, "failed: {detail}"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// One scoring request: a full sequence (tokens + next-token targets).
 pub struct ScoreRequest {
     pub tokens: Vec<i32>,
     pub targets: Vec<i32>,
     pub enqueued: Instant,
+    /// Per-request deadline; `None` falls back to the server default.
+    pub deadline: Option<Duration>,
     pub respond: Sender<ScoreResponse>,
 }
 
@@ -49,9 +113,9 @@ pub struct ScoreRequest {
 pub struct ScoreResponse {
     pub mean_nll: f64,
     pub latency_ms: f64,
-    /// `Some` when the request was malformed (e.g. wrong sequence
-    /// length); `mean_nll` is NaN then. The server keeps serving.
-    pub error: Option<String>,
+    /// `Some` when the request was declined or failed; `mean_nll` is
+    /// NaN then. The server keeps serving.
+    pub error: Option<ServeError>,
 }
 
 /// One generation request: a prompt to continue by `n_new` greedy
@@ -62,6 +126,8 @@ pub struct GenRequest {
     pub prompt: Vec<i32>,
     pub n_new: usize,
     pub enqueued: Instant,
+    /// Per-request deadline; `None` falls back to the server default.
+    pub deadline: Option<Duration>,
     pub respond: Sender<GenResponse>,
 }
 
@@ -69,16 +135,20 @@ pub struct GenRequest {
 pub struct GenResponse {
     pub tokens: Vec<i32>,
     pub latency_ms: f64,
-    /// `Some` when the server could not decode this request (e.g. a
-    /// scoring-only backend); `tokens` is empty then. The server keeps
-    /// serving other traffic either way.
-    pub error: Option<String>,
+    /// `Some` when the server declined or could not finish this request;
+    /// `tokens` holds whatever was decoded before the failure (empty on
+    /// rejection). The server keeps serving other traffic either way.
+    pub error: Option<ServeError>,
 }
 
 /// A request on the server's single intake queue.
 pub enum Request {
     Score(ScoreRequest),
     Generate(GenRequest),
+    /// Graceful drain: stop admitting, finish in-flight and queued
+    /// work, then send the final [`ServeStats`] and exit. Requests that
+    /// arrive after this one get [`ServeError::ShuttingDown`].
+    Shutdown(Sender<ServeStats>),
 }
 
 /// Server-side metrics over one run.
@@ -123,6 +193,22 @@ pub struct ServeStats {
     /// ([`KvCache::bytes`]) once lanes start compacting; 0 when no
     /// generation ran.
     pub kv_live_bytes_mean: f64,
+    /// Requests shed at enqueue ([`ServeError::Overloaded`] /
+    /// [`ServeError::ShuttingDown`]) — never admitted, not in
+    /// `served`/`gen_served`.
+    pub rejected: usize,
+    /// Requests evicted with [`ServeError::Timeout`] — queued or
+    /// mid-decode (the latter keep their partial tokens).
+    pub timed_out: usize,
+    /// Per-request backend failures absorbed ([`ServeError::Failed`]
+    /// responses from slot isolation — the server kept serving).
+    pub slot_failures: usize,
+    /// Generation slots quarantined after [`QUARANTINE_AFTER`]
+    /// consecutive failures (capacity shrank by this many lanes).
+    pub quarantined_slots: usize,
+    /// Times the degraded-mode controller stepped the `cur` KV `keep`
+    /// ratio down under memory/queue pressure.
+    pub degraded_steps: usize,
     pub wall_s: f64,
 }
 
@@ -134,7 +220,22 @@ struct GenSlot {
     last: i32,
     /// When this slot last emitted a token (per-token latency base).
     last_emit: Instant,
+    /// Resolved deadline (request's own, else the server default).
+    deadline: Option<Duration>,
 }
+
+/// Consecutive per-slot request failures before the slot is
+/// quarantined (capacity shrinks instead of burning every admission on
+/// a lane the backend keeps failing).
+pub const QUARANTINE_AFTER: usize = 3;
+/// Max degraded-mode steps; each halves the `cur` KV `keep` ratio.
+pub const DEGRADE_MAX_LEVEL: u32 = 3;
+/// Live-KV fraction (of the allocation) above which — or a backlog at
+/// ≥3/4 of `queue_cap` — degraded mode steps `keep` down.
+pub const DEGRADE_HIGH_WATER: f64 = 0.85;
+/// Live-KV fraction below which (with a cooled backlog) degraded mode
+/// steps back toward the configured policy.
+pub const DEGRADE_LOW_WATER: f64 = 0.60;
 
 /// The server. `slots` bounds concurrent generations (the KV-cache
 /// footprint: `n_layers × 2 × slots·seq·d_model × 4` bytes — see
@@ -158,6 +259,14 @@ pub struct GenerationServer<'p> {
     /// [`ServeStats::kv_compactions`] / [`ServeStats::kv_live_bytes_mean`]
     /// report the effect). Scoring traffic is unaffected.
     pub kv_policy: KvPolicy,
+    /// Default per-request deadline (admission *and* every decode
+    /// iteration check it; a request's own `deadline` overrides).
+    /// `None` means no deadline.
+    pub deadline: Option<Duration>,
+    /// Max queued-but-unadmitted requests (scores + generations
+    /// combined) before enqueue sheds with [`ServeError::Overloaded`].
+    /// `0` means unbounded.
+    pub queue_cap: usize,
 }
 
 /// The scoring server is one mode of the generation server (send only
@@ -183,6 +292,12 @@ impl<'p> GenerationServer<'p> {
         let mut queue: VecDeque<GenRequest> = VecDeque::new();
         let mut active: Vec<Option<GenSlot>> = (0..n_slots).map(|_| None).collect();
         let mut n_active = 0usize;
+        // Robustness state: consecutive per-slot failures, quarantine
+        // flags, the degraded-mode level, and graceful-drain senders.
+        let mut fail_streak = vec![0usize; n_slots];
+        let mut quarantined = vec![false; n_slots];
+        let mut degrade_level: u32 = 0;
+        let mut drain_notify: Vec<Sender<ServeStats>> = Vec::new();
         // Generation state, built lazily on the first Generate request.
         let mut kv: Option<KvCache> = None;
         let mut packed: Option<PackedHead> = None;
@@ -195,24 +310,37 @@ impl<'p> GenerationServer<'p> {
             let block = if n_active > 0
                 || !queue.is_empty()
                 || disconnected
+                || !drain_notify.is_empty()
                 || pending.len() >= cfg.batch
             {
                 Duration::ZERO
             } else if let Some(r) = pending.first() {
-                self.max_wait.saturating_sub(r.enqueued.elapsed())
+                // Wake for the flush-age cap or the earliest pending
+                // score deadline, whichever lands first.
+                let mut b = self.max_wait.saturating_sub(r.enqueued.elapsed());
+                for s in &pending {
+                    if let Some(d) = s.deadline.or(self.deadline) {
+                        b = b.min(d.saturating_sub(s.enqueued.elapsed()));
+                    }
+                }
+                b
             } else {
                 self.max_wait
             };
             if block > Duration::ZERO {
                 match rx.recv_timeout(block) {
-                    Ok(r) => Self::enqueue(r, &mut pending, &mut queue),
+                    Ok(r) => {
+                        self.enqueue(r, &mut pending, &mut queue, &mut drain_notify, &mut stats)
+                    }
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => disconnected = true,
                 }
             }
             loop {
                 match rx.try_recv() {
-                    Ok(r) => Self::enqueue(r, &mut pending, &mut queue),
+                    Ok(r) => {
+                        self.enqueue(r, &mut pending, &mut queue, &mut drain_notify, &mut stats)
+                    }
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         disconnected = true;
@@ -220,12 +348,38 @@ impl<'p> GenerationServer<'p> {
                     }
                 }
             }
-            if disconnected && n_active == 0 && pending.is_empty() && queue.is_empty() {
+            let draining = !drain_notify.is_empty();
+            if (disconnected || draining)
+                && n_active == 0
+                && pending.is_empty()
+                && queue.is_empty()
+            {
                 break;
             }
-            // ---- admit generation requests into free slots, mid-flight.
-            while n_active < n_slots {
+            // ---- evict queued generations whose deadline passed.
+            queue.retain(|g| {
+                let Some(ms) = Self::expired(g.enqueued, g.deadline.or(self.deadline)) else {
+                    return true;
+                };
+                let _ = g.respond.send(GenResponse {
+                    tokens: Vec::new(),
+                    latency_ms: g.enqueued.elapsed().as_secs_f64() * 1e3,
+                    error: Some(ServeError::Timeout { deadline_ms: ms }),
+                });
+                stats.timed_out += 1;
+                stats.gen_served += 1;
+                false
+            });
+            // ---- admit generation requests into free, healthy slots,
+            // mid-flight (quarantined lanes are skipped — capacity has
+            // shrunk by that many slots).
+            loop {
+                let usable = quarantined.iter().filter(|&&q| !q).count();
+                if usable == 0 || n_active >= usable {
+                    break;
+                }
                 let Some(req) = queue.pop_front() else { break };
+                let deadline = req.deadline.or(self.deadline);
                 if req.n_new == 0 {
                     // Zero tokens requested: trivially complete.
                     let _ = req.respond.send(GenResponse {
@@ -243,7 +397,25 @@ impl<'p> GenerationServer<'p> {
                     let _ = req.respond.send(GenResponse {
                         tokens: Vec::new(),
                         latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
-                        error: Some("empty prompt".to_string()),
+                        error: Some(ServeError::Rejected { reason: "empty prompt".to_string() }),
+                    });
+                    stats.gen_served += 1;
+                    continue;
+                }
+                // Validate before touching a slot: a bad request must
+                // never charge a lane's failure streak.
+                if let Some(&t) =
+                    req.prompt.iter().find(|&&t| t < 0 || t as usize >= cfg.vocab)
+                {
+                    let _ = req.respond.send(GenResponse {
+                        tokens: Vec::new(),
+                        latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: Some(ServeError::Rejected {
+                            reason: format!(
+                                "prompt token {t} outside the vocabulary 0..{}",
+                                cfg.vocab
+                            ),
+                        }),
                     });
                     stats.gen_served += 1;
                     continue;
@@ -255,11 +427,13 @@ impl<'p> GenerationServer<'p> {
                     let _ = req.respond.send(GenResponse {
                         tokens: Vec::new(),
                         latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
-                        error: Some(format!(
-                            "generation needs a KV-decode backend \
-                             (backend '{}' is scoring-only)",
-                            self.pipe.rt.backend().name()
-                        )),
+                        error: Some(ServeError::Failed {
+                            detail: format!(
+                                "generation needs a KV-decode backend \
+                                 (backend '{}' is scoring-only)",
+                                self.pipe.rt.backend().name()
+                            ),
+                        }),
                     });
                     stats.gen_served += 1;
                     continue;
@@ -276,13 +450,14 @@ impl<'p> GenerationServer<'p> {
                 }
                 let slot = active
                     .iter()
-                    .position(|s| s.is_none())
-                    .ok_or_else(|| anyhow!("no free generation slot despite n_active < n_slots"))?;
+                    .enumerate()
+                    .position(|(i, s)| s.is_none() && !quarantined[i])
+                    .ok_or_else(|| anyhow!("no free generation slot despite n_active < usable"))?;
                 let kvm = kv.as_mut().ok_or_else(|| anyhow!("kv cache missing at admission"))?;
                 let tp = Instant::now();
-                // A bad request (e.g. out-of-vocab prompt token) is
-                // answered with an error, not allowed to take down the
-                // server and every other in-flight request with it.
+                // A backend fault during prefill fails this request (and
+                // charges the lane's streak) — it never takes down the
+                // server or the other in-flight requests.
                 let first = match self.pipe.prefill_slot(
                     self.store,
                     &self.plan,
@@ -293,12 +468,19 @@ impl<'p> GenerationServer<'p> {
                 ) {
                     Ok(t) => t,
                     Err(e) => {
+                        kvm.reset_slot(slot);
                         let _ = req.respond.send(GenResponse {
                             tokens: Vec::new(),
                             latency_ms: req.enqueued.elapsed().as_secs_f64() * 1e3,
-                            error: Some(format!("{e:#}")),
+                            error: Some(ServeError::Failed { detail: format!("{e:#}") }),
                         });
                         stats.gen_served += 1;
+                        stats.slot_failures += 1;
+                        fail_streak[slot] += 1;
+                        if fail_streak[slot] >= QUARANTINE_AFTER && !quarantined[slot] {
+                            quarantined[slot] = true;
+                            stats.quarantined_slots += 1;
+                        }
                         continue;
                     }
                 };
@@ -310,6 +492,7 @@ impl<'p> GenerationServer<'p> {
                     generated: vec![first],
                     last: first,
                     last_emit: Instant::now(),
+                    deadline,
                 };
                 if gs.generated.len() >= gs.req.n_new {
                     Self::retire(gs, &mut stats);
@@ -318,15 +501,67 @@ impl<'p> GenerationServer<'p> {
                     n_active += 1;
                 }
             }
+            // With every lane quarantined nothing can ever decode —
+            // answer queued generations instead of letting them hang.
+            if !queue.is_empty() && quarantined.iter().all(|&q| q) {
+                for g in queue.drain(..) {
+                    let _ = g.respond.send(GenResponse {
+                        tokens: Vec::new(),
+                        latency_ms: g.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: Some(ServeError::Failed {
+                            detail: "all generation slots quarantined".to_string(),
+                        }),
+                    });
+                    stats.gen_served += 1;
+                }
+            }
+            // ---- time out pending scores past their deadline.
+            pending.retain(|r| {
+                let Some(ms) = Self::expired(r.enqueued, r.deadline.or(self.deadline)) else {
+                    return true;
+                };
+                let _ = r.respond.send(ScoreResponse {
+                    mean_nll: f64::NAN,
+                    latency_ms: r.enqueued.elapsed().as_secs_f64() * 1e3,
+                    error: Some(ServeError::Timeout { deadline_ms: ms }),
+                });
+                stats.timed_out += 1;
+                false
+            });
             // ---- flush a scoring batch when full, aged, or input done.
             let flush = !pending.is_empty()
                 && (pending.len() >= cfg.batch
                     || disconnected
+                    || draining
                     || pending[0].enqueued.elapsed() >= self.max_wait);
             if flush {
                 self.score_batch(&mut pending, &mut stats, &mut score_lat)?;
             }
-            // ---- one fused decode step across all active slots.
+            // ---- evict active slots whose deadline passed; the client
+            // gets whatever tokens were decoded before the cutoff.
+            if n_active > 0 {
+                for slot in 0..n_slots {
+                    let hit = match &active[slot] {
+                        Some(gs) => Self::expired(gs.req.enqueued, gs.deadline),
+                        None => None,
+                    };
+                    let Some(ms) = hit else { continue };
+                    let Some(gs) = active[slot].take() else { continue };
+                    n_active -= 1;
+                    if let Some(kvm) = kv.as_mut() {
+                        kvm.reset_slot(slot);
+                    }
+                    let _ = gs.req.respond.send(GenResponse {
+                        tokens: gs.generated,
+                        latency_ms: gs.req.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: Some(ServeError::Timeout { deadline_ms: ms }),
+                    });
+                    stats.timed_out += 1;
+                    stats.gen_served += 1;
+                }
+            }
+            // ---- one fused decode step across all active slots, with
+            // per-slot fault isolation.
             if n_active > 0 {
                 let kvm =
                     kv.as_mut().ok_or_else(|| anyhow!("kv cache missing with active slots"))?;
@@ -338,19 +573,135 @@ impl<'p> GenerationServer<'p> {
                         last.push(gs.last);
                     }
                 }
-                let next = self.pipe.decode_step(
-                    self.store,
-                    &self.plan,
-                    kvm,
-                    &slot_ids,
-                    &last,
-                    packed.as_ref(),
-                )?;
+                // Full CUR lanes must compact before the layer pass; a
+                // compaction failure costs only that slot's request.
+                let mut i = 0;
+                while i < slot_ids.len() {
+                    match self.pipe.compact_slot(kvm, slot_ids[i]) {
+                        Ok(_) => i += 1,
+                        Err(e) => {
+                            Self::fail_slot(
+                                slot_ids[i],
+                                &mut active,
+                                &mut n_active,
+                                kvm,
+                                &mut stats,
+                                &mut fail_streak,
+                                &mut quarantined,
+                                &e,
+                            );
+                            slot_ids.remove(i);
+                            last.remove(i);
+                        }
+                    }
+                }
+                // Hidden pass. A fused failure may have pushed partial
+                // position-map entries for every slot in the batch, so
+                // all are rolled back and each slot re-runs alone — the
+                // kernels emit identical rows at any batch shape, so
+                // survivors stay bit-exact and only the faulty slot's
+                // request fails.
+                let d = cfg.d_model;
+                let mut hid: Vec<(usize, Vec<f32>)> = Vec::with_capacity(slot_ids.len());
+                if !slot_ids.is_empty() {
+                    match self.pipe.decode_hidden(self.store, &self.plan, kvm, &slot_ids, &last)
+                    {
+                        Ok(x) => {
+                            let data = x.f32s()?;
+                            for (i, &slot) in slot_ids.iter().enumerate() {
+                                hid.push((slot, data[i * d..(i + 1) * d].to_vec()));
+                            }
+                        }
+                        Err(_) => {
+                            for &slot in &slot_ids {
+                                kvm.rollback_token(slot);
+                            }
+                            for (&slot, &lt) in slot_ids.iter().zip(&last) {
+                                match self.pipe.decode_hidden(
+                                    self.store,
+                                    &self.plan,
+                                    kvm,
+                                    &[slot],
+                                    &[lt],
+                                ) {
+                                    Ok(x) => hid.push((slot, x.f32s()?.to_vec())),
+                                    Err(e) => Self::fail_slot(
+                                        slot,
+                                        &mut active,
+                                        &mut n_active,
+                                        kvm,
+                                        &mut stats,
+                                        &mut fail_streak,
+                                        &mut quarantined,
+                                        &e,
+                                    ),
+                                }
+                            }
+                        }
+                    }
+                }
+                // Head + greedy pick. A fused head failure retries one
+                // row at a time; non-finite logits (NaN/Inf corruption)
+                // fail only the poisoned slot — token 0 is never
+                // silently emitted.
+                let v = cfg.vocab;
+                let mut picked: Vec<(usize, Result<i32>)> = Vec::with_capacity(hid.len());
+                if !hid.is_empty() {
+                    let mut flat = Vec::with_capacity(hid.len() * d);
+                    for (_, row) in &hid {
+                        flat.extend_from_slice(row);
+                    }
+                    let xt = Tensor::from_f32(&[hid.len(), 1, d], flat);
+                    match self.pipe.head_rows(self.store, &xt, packed.as_ref()) {
+                        Ok(logits) => {
+                            let data = logits.f32s()?;
+                            for (i, (slot, _)) in hid.iter().enumerate() {
+                                picked.push((*slot, greedy_token(&data[i * v..(i + 1) * v])));
+                            }
+                        }
+                        Err(_) => {
+                            for (slot, row) in &hid {
+                                let xt1 = Tensor::from_f32(&[1, 1, d], row.clone());
+                                let r = self
+                                    .pipe
+                                    .head_rows(self.store, &xt1, packed.as_ref())
+                                    .and_then(|lg| greedy_token(&lg.f32s()?[..v]));
+                                picked.push((*slot, r));
+                            }
+                        }
+                    }
+                }
+                if !slot_ids.is_empty() {
+                    stats.decode_steps += 1;
+                    slot_steps += slot_ids.len();
+                    kv_live_accum += kvm.live_bytes() as f64;
+                }
                 let now = Instant::now();
-                stats.decode_steps += 1;
-                slot_steps += slot_ids.len();
-                kv_live_accum += kvm.live_bytes() as f64;
-                for (&slot, &tok) in slot_ids.iter().zip(&next) {
+                let mut advanced: Vec<usize> = Vec::with_capacity(picked.len());
+                let mut emitted: Vec<(usize, i32)> = Vec::with_capacity(picked.len());
+                for (slot, r) in picked {
+                    match r {
+                        Ok(t) => {
+                            advanced.push(slot);
+                            emitted.push((slot, t));
+                        }
+                        Err(e) => Self::fail_slot(
+                            slot,
+                            &mut active,
+                            &mut n_active,
+                            kvm,
+                            &mut stats,
+                            &mut fail_streak,
+                            &mut quarantined,
+                            &e,
+                        ),
+                    }
+                }
+                // Only survivors advance — failed slots were fully
+                // reset, so the step never half-commits.
+                kvm.advance(&advanced);
+                for (slot, tok) in emitted {
+                    fail_streak[slot] = 0;
                     let done = {
                         let gs = active[slot]
                             .as_mut()
@@ -379,6 +730,27 @@ impl<'p> GenerationServer<'p> {
                     }
                 }
             }
+            // ---- degraded mode: under memory or queue pressure a cur
+            // policy halves its keep ratio (down to DEGRADE_MAX_LEVEL
+            // steps) and walks back up once pressure clears.
+            if let KvPolicy::Cur { keep, sinks, recent } = self.kv_policy {
+                if let Some(kvm) = kv.as_mut() {
+                    let live = kvm.live_bytes() as f64 / kvm.bytes().max(1) as f64;
+                    let backlog = queue.len() + pending.len();
+                    let queue_hot = self.queue_cap > 0 && backlog * 4 >= self.queue_cap * 3;
+                    let queue_cool = self.queue_cap == 0 || backlog * 2 <= self.queue_cap;
+                    if (live >= DEGRADE_HIGH_WATER || queue_hot)
+                        && degrade_level < DEGRADE_MAX_LEVEL
+                    {
+                        degrade_level += 1;
+                        stats.degraded_steps += 1;
+                        kvm.policy = Self::degraded_policy(keep, sinks, recent, degrade_level);
+                    } else if live <= DEGRADE_LOW_WATER && queue_cool && degrade_level > 0 {
+                        degrade_level -= 1;
+                        kvm.policy = Self::degraded_policy(keep, sinks, recent, degrade_level);
+                    }
+                }
+            }
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
         if stats.batches > 0 {
@@ -397,13 +769,103 @@ impl<'p> GenerationServer<'p> {
         stats.tok_p95_ms = percentile(&tok_lat, 95.0);
         stats.throughput_seq_per_s = stats.served as f64 / stats.wall_s.max(1e-9);
         stats.tokens_per_s = stats.tokens_generated as f64 / stats.wall_s.max(1e-9);
+        // A graceful drain always ends in a stats report, whatever
+        // happened on the way down.
+        for tx in drain_notify {
+            let _ = tx.send(stats.clone());
+        }
         Ok(stats)
     }
 
-    fn enqueue(r: Request, pending: &mut Vec<ScoreRequest>, queue: &mut VecDeque<GenRequest>) {
+    /// Intake with admission control: once a drain began every new
+    /// request is answered [`ServeError::ShuttingDown`], and with a
+    /// `queue_cap` a full backlog sheds with [`ServeError::Overloaded`]
+    /// — both immediately, bumping [`ServeStats::rejected`].
+    fn enqueue(
+        &self,
+        r: Request,
+        pending: &mut Vec<ScoreRequest>,
+        queue: &mut VecDeque<GenRequest>,
+        drain_notify: &mut Vec<Sender<ServeStats>>,
+        stats: &mut ServeStats,
+    ) {
+        let backlog = pending.len() + queue.len();
+        let shed = if !drain_notify.is_empty() {
+            Some(ServeError::ShuttingDown)
+        } else if self.queue_cap > 0 && backlog >= self.queue_cap {
+            Some(ServeError::Overloaded { depth: backlog, cap: self.queue_cap })
+        } else {
+            None
+        };
         match r {
-            Request::Score(s) => pending.push(s),
-            Request::Generate(g) => queue.push_back(g),
+            Request::Shutdown(tx) => drain_notify.push(tx),
+            Request::Score(s) => match shed {
+                Some(e) => {
+                    let _ = s.respond.send(ScoreResponse {
+                        mean_nll: f64::NAN,
+                        latency_ms: s.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: Some(e),
+                    });
+                    stats.rejected += 1;
+                }
+                None => pending.push(s),
+            },
+            Request::Generate(g) => match shed {
+                Some(e) => {
+                    let _ = g.respond.send(GenResponse {
+                        tokens: Vec::new(),
+                        latency_ms: g.enqueued.elapsed().as_secs_f64() * 1e3,
+                        error: Some(e),
+                    });
+                    stats.rejected += 1;
+                }
+                None => queue.push_back(g),
+            },
+        }
+    }
+
+    /// `Some(deadline_ms)` when `deadline` has elapsed since `enqueued`.
+    fn expired(enqueued: Instant, deadline: Option<Duration>) -> Option<u64> {
+        deadline.filter(|d| enqueued.elapsed() >= *d).map(|d| d.as_millis() as u64)
+    }
+
+    /// The `cur` policy at degraded-mode `level`: each level halves the
+    /// configured keep ratio, floored at 0.05 (the protected sinks and
+    /// recent positions always survive compaction regardless).
+    fn degraded_policy(keep: f32, sinks: usize, recent: usize, level: u32) -> KvPolicy {
+        KvPolicy::Cur { keep: (keep * 0.5f32.powi(level as i32)).max(0.05), sinks, recent }
+    }
+
+    /// Fail one in-flight generation: answer the client with a typed
+    /// [`ServeError::Failed`] (keeping any tokens decoded so far), free
+    /// the lane, and charge the slot's failure streak — at
+    /// [`QUARANTINE_AFTER`] consecutive failures the lane is
+    /// quarantined and serving capacity shrinks.
+    #[allow(clippy::too_many_arguments)]
+    fn fail_slot(
+        slot: usize,
+        active: &mut [Option<GenSlot>],
+        n_active: &mut usize,
+        kvm: &mut KvCache,
+        stats: &mut ServeStats,
+        fail_streak: &mut [usize],
+        quarantined: &mut [bool],
+        err: &anyhow::Error,
+    ) {
+        let Some(gs) = active[slot].take() else { return };
+        *n_active -= 1;
+        kvm.reset_slot(slot);
+        let _ = gs.req.respond.send(GenResponse {
+            tokens: gs.generated,
+            latency_ms: gs.req.enqueued.elapsed().as_secs_f64() * 1e3,
+            error: Some(ServeError::Failed { detail: format!("{err:#}") }),
+        });
+        stats.gen_served += 1;
+        stats.slot_failures += 1;
+        fail_streak[slot] += 1;
+        if fail_streak[slot] >= QUARANTINE_AFTER && !quarantined[slot] {
+            quarantined[slot] = true;
+            stats.quarantined_slots += 1;
         }
     }
 
@@ -436,11 +898,13 @@ impl<'p> GenerationServer<'p> {
                 let _ = r.respond.send(ScoreResponse {
                     mean_nll: f64::NAN,
                     latency_ms: r.enqueued.elapsed().as_secs_f64() * 1e3,
-                    error: Some(format!(
-                        "scoring needs tokens/targets of length {s}, got {}/{}",
-                        r.tokens.len(),
-                        r.targets.len()
-                    )),
+                    error: Some(ServeError::Rejected {
+                        reason: format!(
+                            "scoring needs tokens/targets of length {s}, got {}/{}",
+                            r.tokens.len(),
+                            r.targets.len()
+                        ),
+                    }),
                 });
             }
             ok
@@ -459,22 +923,75 @@ impl<'p> GenerationServer<'p> {
         }
         let tokens = Tensor::from_i32(&[rows, s], toks);
         let targets = Tensor::from_i32(&[rows, s], tgts);
-        let nll = self.pipe.nll(self.store, &self.plan, &tokens, &targets)?;
-        let nll_data = nll.f32s()?;
-        for (i, req) in pending.drain(..occupancy).enumerate() {
-            let row = &nll_data[i * s..(i + 1) * s];
-            let mean = row.iter().map(|&x| x as f64).sum::<f64>() / s as f64;
+        let means: Vec<Result<f64>> =
+            match self.pipe.nll(self.store, &self.plan, &tokens, &targets) {
+                Ok(nll) => {
+                    let nll_data = nll.f32s()?;
+                    (0..occupancy)
+                        .map(|i| {
+                            let row = &nll_data[i * s..(i + 1) * s];
+                            Ok(row.iter().map(|&x| x as f64).sum::<f64>() / s as f64)
+                        })
+                        .collect()
+                }
+                // The fused batch call failed: re-score each request
+                // alone so only the one(s) the backend actually fails
+                // lose their response.
+                Err(_) => (0..occupancy).map(|i| self.score_one(&pending[i])).collect(),
+            };
+        for (req, mean) in pending.drain(..occupancy).zip(means) {
             let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            latencies.push(latency_ms);
-            let _ = req
-                .respond
-                .send(ScoreResponse { mean_nll: mean, latency_ms, error: None });
-            stats.served += 1;
+            match mean {
+                Ok(m) if m.is_finite() => {
+                    latencies.push(latency_ms);
+                    let _ = req
+                        .respond
+                        .send(ScoreResponse { mean_nll: m, latency_ms, error: None });
+                    stats.served += 1;
+                }
+                // A non-finite mean (NaN/Inf corruption in the NLL row)
+                // is a typed failure, never a silent garbage score.
+                Ok(m) => {
+                    let _ = req.respond.send(ScoreResponse {
+                        mean_nll: f64::NAN,
+                        latency_ms,
+                        error: Some(ServeError::Failed {
+                            detail: format!("non-finite mean NLL {m}"),
+                        }),
+                    });
+                }
+                Err(e) => {
+                    let _ = req.respond.send(ScoreResponse {
+                        mean_nll: f64::NAN,
+                        latency_ms,
+                        error: Some(ServeError::Failed { detail: format!("{e:#}") }),
+                    });
+                }
+            }
         }
         stats.batches += 1;
         stats.mean_batch_occupancy += occupancy as f64;
         stats.padded_rows += rows - occupancy;
         Ok(())
+    }
+
+    /// Score a single request — the per-request retry path of
+    /// [`GenerationServer::score_batch`]'s fused-failure branch.
+    fn score_one(&self, req: &ScoreRequest) -> Result<f64> {
+        let cfg = &self.pipe.cfg;
+        let s = cfg.seq;
+        let rows = if self.pipe.rt.backend().fixed_shape() { cfg.batch } else { 1 };
+        let mut toks = Vec::with_capacity(rows * s);
+        let mut tgts = Vec::with_capacity(rows * s);
+        for _ in 0..rows {
+            toks.extend_from_slice(&req.tokens);
+            tgts.extend_from_slice(&req.targets);
+        }
+        let tokens = Tensor::from_i32(&[rows, s], toks);
+        let targets = Tensor::from_i32(&[rows, s], tgts);
+        let nll = self.pipe.nll(self.store, &self.plan, &tokens, &targets)?;
+        let row = &nll.f32s()?[..s];
+        Ok(row.iter().map(|&x| x as f64).sum::<f64>() / s as f64)
     }
 }
 
@@ -536,6 +1053,7 @@ pub fn spawn_score_clients(
             tokens: s[..seq].to_vec(),
             targets: s[1..seq + 1].to_vec(),
             enqueued: Instant::now(),
+            deadline: None,
             respond,
         })
     })
@@ -558,6 +1076,7 @@ pub fn spawn_gen_clients(
             prompt: corpus.sequence(vocab, prompt_len),
             n_new,
             enqueued: Instant::now(),
+            deadline: None,
             respond,
         })
     })
@@ -611,6 +1130,8 @@ mod tests {
             max_wait: Duration::from_millis(20),
             slots: 1,
             kv_policy: KvPolicy::Exact,
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, 3);
@@ -666,6 +1187,7 @@ mod tests {
                 prompt: p.clone(),
                 n_new,
                 enqueued: Instant::now(),
+                deadline: None,
                 respond: rtx,
             }))
             .unwrap();
@@ -678,6 +1200,8 @@ mod tests {
             max_wait: Duration::from_millis(10),
             slots: 3,
             kv_policy: KvPolicy::Exact,
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.gen_served, prompts.len());
@@ -723,6 +1247,8 @@ mod tests {
             max_wait: Duration::from_millis(10),
             slots: 2,
             kv_policy: KvPolicy::Cur { keep: 0.5, sinks: 2, recent: 4 },
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.gen_served, 2);
@@ -862,6 +1388,7 @@ mod tests {
                 tokens: s[..cfg.seq].to_vec(),
                 targets: s[1..cfg.seq + 1].to_vec(),
                 enqueued: Instant::now(),
+                deadline: None,
                 respond: rtx,
             }))
             .unwrap();
@@ -873,6 +1400,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             n_new: 4,
             enqueued: Instant::now(),
+            deadline: None,
             respond: gtx,
         }))
         .unwrap();
@@ -884,6 +1412,8 @@ mod tests {
             max_wait: Duration::from_millis(10),
             slots: 2,
             kv_policy: KvPolicy::Exact,
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, n_req);
@@ -936,6 +1466,8 @@ mod tests {
             max_wait: Duration::from_millis(15),
             slots: 2,
             kv_policy: KvPolicy::Exact,
+            deadline: None,
+            queue_cap: 0,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, 4);

@@ -14,6 +14,17 @@
 //! | `CURING_PRETRAIN_STEPS` | [`pretrain_steps_override`] | Pretraining length for the one-time cached dense store |
 //! | `CURING_TIMING`         | [`timing_enabled`]          | `1` prints `[timing]` lines from `util::stats::Timer` |
 //! | `CURING_BENCH_FAST`     | [`bench_fast`]              | `1` shrinks every bench to CI smoke sizes |
+//! | `CURING_FAULTS`         | [`faults_spec`]             | Fault-injection plan wrapped around the backend (see below) |
+//!
+//! `CURING_FAULTS` holds a [`crate::backend::fault::FaultPlan`] spec —
+//! `;`-separated clauses `seed=<u64>`, `<site>=<p>[:<kind>]` or
+//! `all=<p>[:<kind>]` with site ∈ `prefill|decode|compress|head` and
+//! kind ∈ `err|nan|inf|delay<ms>` (default `err`), e.g.
+//! `seed=7;decode=0.05;head=0.01:nan`. When set,
+//! `Runtime::open_default` wraps whichever backend it picked in a
+//! [`crate::backend::fault::FaultyBackend`], so any command becomes a
+//! chaos run; a malformed spec is a hard error, never a silent
+//! fault-free run.
 
 use std::path::PathBuf;
 
@@ -76,6 +87,13 @@ pub fn timing_enabled() -> bool {
 /// `CURING_BENCH_FAST=1`: every bench drops to CI smoke sizes.
 pub fn bench_fast() -> bool {
     flag("CURING_BENCH_FAST")
+}
+
+/// `CURING_FAULTS`: a [`crate::backend::fault::FaultPlan`] spec to wrap
+/// around the backend `Runtime::open_default` picks (see module docs
+/// for the grammar). `None` (or empty) means no injection.
+pub fn faults_spec() -> Option<String> {
+    var("CURING_FAULTS").filter(|s| !s.trim().is_empty())
 }
 
 #[cfg(test)]

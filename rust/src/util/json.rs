@@ -144,9 +144,9 @@ impl Json {
                         v.write(out, None);
                     }
                 }
-                if indent.is_some() && !a.is_empty() {
+                if let (Some(ind), false) = (indent, a.is_empty()) {
                     out.push('\n');
-                    out.push_str(&" ".repeat(indent.unwrap()));
+                    out.push_str(&" ".repeat(ind));
                 }
                 out.push(']');
             }
@@ -168,9 +168,9 @@ impl Json {
                         v.write(out, None);
                     }
                 }
-                if indent.is_some() && !o.is_empty() {
+                if let (Some(ind), false) = (indent, o.is_empty()) {
                     out.push('\n');
-                    out.push_str(&" ".repeat(indent.unwrap()));
+                    out.push_str(&" ".repeat(ind));
                 }
                 out.push('}');
             }
@@ -395,7 +395,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("invalid utf8 in number"))?;
         text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }

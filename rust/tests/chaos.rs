@@ -1,0 +1,434 @@
+//! Chaos suite: the serving engine under deterministic fault injection
+//! ([`curing::backend::fault::FaultyBackend`]), deadlines, backpressure,
+//! quarantine, degraded mode and graceful drain. Every trouble outcome
+//! must be a typed [`ServeError`] on a response — never a panic, never
+//! a silent wrong answer — and non-faulted generations must stay
+//! bit-identical to a cache-free reference run.
+//!
+//! All tests are named `chaos_*` so the nightly ThreadSanitizer lane
+//! can select them alongside the serve/kv suites.
+
+use curing::backend::fault::{FaultPlan, FaultSite, FaultyBackend, InjectedFault};
+use curing::backend::native::NativeBackend;
+use curing::backend::{Backend, KvPolicy};
+use curing::model::ModelConfig;
+use curing::pipeline::{LayerPlan, Pipeline};
+use curing::runtime::Runtime;
+use curing::serve::{
+    GenRequest, GenResponse, GenerationServer, Request, ScoreRequest, ScoreResponse, ServeError,
+    ServeStats,
+};
+use curing::tensor::{Tensor, TensorStore};
+use curing::util::Rng;
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+/// The shared store every test serves: the mini config's dense init at
+/// a fixed seed, so faulted and clean (oracle) runtimes see identical
+/// weights.
+fn mini_store() -> (ModelConfig, TensorStore) {
+    let rt = Runtime::native();
+    let cfg = ModelConfig::from_manifest(rt.manifest(), "mini").expect("mini config");
+    let mut rng = Rng::new(31, 0);
+    let store = cfg.init_dense(&mut rng);
+    (cfg, store)
+}
+
+fn server<'p>(
+    pipe: &'p Pipeline<'p>,
+    store: &'p TensorStore,
+    slots: usize,
+) -> GenerationServer<'p> {
+    GenerationServer {
+        pipe,
+        store,
+        plan: LayerPlan::all_dense(&pipe.cfg),
+        max_wait: Duration::from_millis(10),
+        slots,
+        kv_policy: KvPolicy::Exact,
+        deadline: None,
+        queue_cap: 0,
+    }
+}
+
+fn gen_request(
+    prompt: Vec<i32>,
+    n_new: usize,
+    deadline: Option<Duration>,
+) -> (Request, Receiver<GenResponse>) {
+    let (rtx, rrx) = channel::<GenResponse>();
+    let req = Request::Generate(GenRequest {
+        prompt,
+        n_new,
+        enqueued: Instant::now(),
+        deadline,
+        respond: rtx,
+    });
+    (req, rrx)
+}
+
+fn score_request(seq: usize, seed: i32) -> (Request, Receiver<ScoreResponse>) {
+    let (rtx, rrx) = channel::<ScoreResponse>();
+    let tokens: Vec<i32> = (0..seq as i32).map(|i| (i * 7 + seed) % 384).collect();
+    let targets: Vec<i32> = (0..seq as i32).map(|i| (i * 5 + seed + 1) % 384).collect();
+    let req = Request::Score(ScoreRequest {
+        tokens,
+        targets,
+        enqueued: Instant::now(),
+        deadline: None,
+        respond: rtx,
+    });
+    (req, rrx)
+}
+
+/// Same seed + same call sequence = same injected sites: the
+/// determinism contract every other chaos test leans on. Two backends
+/// built from one plan must produce an identical Ok/Err pattern over
+/// an identical call sequence, with typed, downcastable errors.
+#[test]
+fn chaos_fault_plan_is_deterministic() {
+    let (cfg, store) = mini_store();
+    let x = Tensor::from_f32(&[1, 1, cfg.d_model], vec![0.25; cfg.d_model]);
+    let ln_f = store.get("ln_f").unwrap().clone();
+    let emb = store.get("emb").unwrap().clone();
+    let pattern = |seed: u64| -> (Vec<bool>, u64) {
+        let plan = FaultPlan::parse(&format!("seed={seed};head=0.5")).unwrap();
+        let fb = FaultyBackend::new(Box::new(NativeBackend::new()), plan);
+        let mut hits = Vec::new();
+        for _ in 0..60 {
+            match fb.head_logits(&cfg, &x, &ln_f, &emb) {
+                Ok(logits) => {
+                    assert!(logits.f32s().unwrap().iter().all(|v| v.is_finite()));
+                    hits.push(false);
+                }
+                Err(e) => {
+                    let inj = e
+                        .downcast_ref::<InjectedFault>()
+                        .expect("injected faults must stay downcastable");
+                    assert_eq!(inj.site, FaultSite::Head);
+                    hits.push(true);
+                }
+            }
+        }
+        (hits, fb.injected())
+    };
+    let (a, a_injected) = pattern(7);
+    let (b, b_injected) = pattern(7);
+    assert_eq!(a, b, "same seed must inject at the same calls");
+    assert_eq!(a_injected, b_injected);
+    assert!(a.iter().any(|&h| h), "p=0.5 over 60 calls never fired");
+    assert!(a.iter().any(|&h| !h), "p=0.5 over 60 calls always fired");
+    assert_eq!(a_injected, a.iter().filter(|&&h| h).count() as u64);
+}
+
+/// Mixed score + generate traffic against a backend injecting decode
+/// errors and NaN head poisoning (≈5%/2% per call): every response is
+/// either a success or a typed error, and every *successful* generation
+/// is bit-identical to a cache-free oracle run on a clean runtime —
+/// fault isolation never perturbs a surviving request's stream.
+#[test]
+fn chaos_mixed_traffic_survivors_match_cachefree_oracle() {
+    let (cfg, store) = mini_store();
+    let plan = FaultPlan::parse("seed=11;decode=0.05;head=0.02:nan").unwrap();
+    let rt = Runtime::native().with_faults(plan);
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let n_new = 12usize;
+    let prompts: Vec<Vec<i32>> = (0..8)
+        .map(|i| (0..3 + (i % 4)).map(|j| (13 * i + 7 * j + 1) % 384).collect())
+        .collect();
+    let (tx, rx) = channel::<Request>();
+    // Generation clients on real threads (the TSan lane watches these),
+    // submitting known prompts so the oracle can replay them.
+    let mut gen_rxs = Vec::new();
+    let mut handles = Vec::new();
+    for half in prompts.chunks(4) {
+        let mut reqs = Vec::new();
+        for p in half {
+            let (req, rrx) = gen_request(p.clone(), n_new, None);
+            reqs.push(req);
+            gen_rxs.push(rrx);
+        }
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            for req in reqs {
+                let _ = tx.send(req);
+            }
+        }));
+    }
+    let mut score_rxs = Vec::new();
+    for i in 0..2 {
+        let (req, rrx) = score_request(cfg.seq, 50 + i);
+        tx.send(req).unwrap();
+        score_rxs.push(rrx);
+    }
+    drop(tx);
+    let stats = server(&pipe, &store, 2).run(rx).unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(stats.gen_served, prompts.len());
+    assert!(
+        stats.slot_failures > 0,
+        "the fault plan never fired — the test exercised nothing"
+    );
+    // Oracle on a clean (fault-free) runtime, cache-free decode path.
+    let clean = Runtime::native();
+    let clean_pipe = Pipeline { rt: &clean, cfg: cfg.clone() };
+    let lplan = LayerPlan::all_dense(&cfg);
+    let mut ok = 0usize;
+    for (p, rrx) in prompts.iter().zip(gen_rxs) {
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        match resp.error {
+            None => {
+                let want = clean_pipe
+                    .generate_greedy_uncached(&store, &lplan, &[p.clone()], n_new)
+                    .unwrap();
+                assert_eq!(
+                    resp.tokens, want[0],
+                    "non-faulted request diverged from the cache-free oracle for {p:?}"
+                );
+                ok += 1;
+            }
+            Some(ServeError::Failed { .. }) => {
+                // Partial tokens (if any) are a prefix of the oracle
+                // stream — the failure cut the request short, it never
+                // corrupted what was already emitted.
+                let want = clean_pipe
+                    .generate_greedy_uncached(&store, &lplan, &[p.clone()], n_new)
+                    .unwrap();
+                assert!(
+                    resp.tokens.len() <= want[0].len()
+                        && resp.tokens == want[0][..resp.tokens.len()],
+                    "failed request's partial tokens diverged for {p:?}"
+                );
+            }
+            Some(other) => panic!("unexpected error kind under faults: {other:?}"),
+        }
+    }
+    assert_eq!(ok + stats.slot_failures, prompts.len());
+    for rrx in score_rxs {
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        match resp.error {
+            None => assert!(resp.mean_nll.is_finite()),
+            Some(ServeError::Failed { .. }) => assert!(resp.mean_nll.is_nan()),
+            Some(other) => panic!("unexpected score error under faults: {other:?}"),
+        }
+    }
+}
+
+/// Deadlines at both eviction points: an already-expired request is
+/// timed out straight from the queue (empty tokens), and a request too
+/// large for its budget is evicted mid-decode keeping its partial
+/// stream. Both come back as typed [`ServeError::Timeout`].
+#[test]
+fn chaos_deadline_evicts_queued_and_mid_decode() {
+    let (cfg, store) = mini_store();
+    let rt = Runtime::native();
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    // Queued eviction: a zero deadline expires before admission.
+    let (tx, rx) = channel::<Request>();
+    let (req_a, rx_a) = gen_request(vec![1, 2, 3], 4, Some(Duration::ZERO));
+    let (req_b, rx_b) = gen_request(vec![4, 5, 6], 4, None);
+    tx.send(req_a).unwrap();
+    tx.send(req_b).unwrap();
+    drop(tx);
+    let stats = server(&pipe, &store, 1).run(rx).unwrap();
+    let a = rx_a.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(a.error, Some(ServeError::Timeout { deadline_ms: 0 }));
+    assert!(a.tokens.is_empty(), "a queued eviction never decoded anything");
+    let b = rx_b.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(b.error, None);
+    assert_eq!(b.tokens.len(), 4);
+    assert_eq!(stats.timed_out, 1);
+    assert_eq!(stats.gen_served, 2);
+    // Mid-decode eviction: 5000 tokens cannot fit a 5 ms budget; the
+    // response keeps whatever was decoded before the cutoff.
+    let (tx, rx) = channel::<Request>();
+    let n_new = 5000usize;
+    let (req_c, rx_c) = gen_request(vec![7, 8, 9], n_new, Some(Duration::from_millis(5)));
+    tx.send(req_c).unwrap();
+    drop(tx);
+    let stats = server(&pipe, &store, 1).run(rx).unwrap();
+    let c = rx_c.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(c.error, Some(ServeError::Timeout { deadline_ms: 5 }));
+    assert!(c.tokens.len() < n_new, "a 5 ms deadline cannot decode {n_new} tokens");
+    assert_eq!(stats.timed_out, 1);
+}
+
+/// Bounded admission: with `queue_cap = 2` and six requests already on
+/// the channel, exactly two are admitted and four shed with a typed
+/// [`ServeError::Overloaded`] carrying the observed depth.
+#[test]
+fn chaos_overload_sheds_beyond_queue_cap() {
+    let (cfg, store) = mini_store();
+    let rt = Runtime::native();
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for i in 0..6 {
+        let (req, rrx) = gen_request(vec![1 + i, 2 + i, 3 + i], 2, None);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    drop(tx);
+    let mut srv = server(&pipe, &store, 2);
+    srv.queue_cap = 2;
+    let stats = srv.run(rx).unwrap();
+    assert_eq!(stats.rejected, 4);
+    assert_eq!(stats.gen_served, 2);
+    let mut shed = 0usize;
+    let mut served = 0usize;
+    for rrx in resp_rxs {
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        match resp.error {
+            None => {
+                assert_eq!(resp.tokens.len(), 2);
+                served += 1;
+            }
+            Some(ServeError::Overloaded { depth, cap }) => {
+                assert_eq!(cap, 2);
+                assert_eq!(depth, 2, "shed at a full backlog");
+                assert!(resp.tokens.is_empty());
+                shed += 1;
+            }
+            Some(other) => panic!("unexpected shed error: {other:?}"),
+        }
+    }
+    assert_eq!((served, shed), (2, 4));
+}
+
+/// Graceful drain: a [`Request::Shutdown`] stops admission (later
+/// requests get [`ServeError::ShuttingDown`]), finishes the accepted
+/// work, and reports the final stats on the shutdown channel — while
+/// the request channel is still connected.
+#[test]
+fn chaos_graceful_drain_returns_final_stats() {
+    let (cfg, store) = mini_store();
+    let rt = Runtime::native();
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let (tx, rx) = channel::<Request>();
+    let (req1, rx1) = gen_request(vec![1, 2, 3], 3, None);
+    let (req2, rx2) = gen_request(vec![4, 5], 3, None);
+    let (stx, srx) = channel::<ServeStats>();
+    let (req3, rx3) = gen_request(vec![6, 7], 3, None);
+    tx.send(req1).unwrap();
+    tx.send(req2).unwrap();
+    tx.send(Request::Shutdown(stx)).unwrap();
+    tx.send(req3).unwrap();
+    // tx stays alive: the exit below is the drain, not a disconnect.
+    let stats = server(&pipe, &store, 2).run(rx).unwrap();
+    drop(tx);
+    assert_eq!(stats.gen_served, 2);
+    assert_eq!(stats.rejected, 1);
+    for rrx in [rx1, rx2] {
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.error, None);
+        assert_eq!(resp.tokens.len(), 3);
+    }
+    let resp3 = rx3.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(resp3.error, Some(ServeError::ShuttingDown));
+    let reported = srx.recv_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(reported.gen_served, stats.gen_served);
+    assert_eq!(reported.rejected, stats.rejected);
+    assert_eq!(reported.tokens_generated, stats.tokens_generated);
+}
+
+/// Slot quarantine: with one lane and a backend failing every decode,
+/// three consecutive request failures quarantine the slot; later
+/// generations are answered (typed) instead of hanging, and the server
+/// still exits cleanly.
+#[test]
+fn chaos_quarantine_shrinks_capacity_after_repeated_failures() {
+    let (cfg, store) = mini_store();
+    let plan = FaultPlan::parse("seed=5;decode=1.0").unwrap();
+    let rt = Runtime::native().with_faults(plan);
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for i in 0..5 {
+        let (req, rrx) = gen_request(vec![1 + i, 2 + i], 3, None);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    drop(tx);
+    let stats = server(&pipe, &store, 1).run(rx).unwrap();
+    assert_eq!(stats.gen_served, 5);
+    assert_eq!(stats.slot_failures, curing::serve::QUARANTINE_AFTER);
+    assert_eq!(stats.quarantined_slots, 1);
+    for (i, rrx) in resp_rxs.into_iter().enumerate() {
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let Some(ServeError::Failed { detail }) = resp.error else {
+            panic!("request {i} must fail typed, got {:?}", resp.error);
+        };
+        if i < curing::serve::QUARANTINE_AFTER {
+            // Admitted and prefilled: the first token survives as a
+            // partial stream even though every decode step failed.
+            assert_eq!(resp.tokens.len(), 1, "request {i} kept its prefill token");
+        } else {
+            assert!(
+                detail.contains("quarantined"),
+                "request {i} must name the quarantine, got '{detail}'"
+            );
+            assert!(resp.tokens.is_empty());
+        }
+    }
+}
+
+/// Degraded mode: a backlog at ≥3/4 of `queue_cap` pushes a `cur` KV
+/// policy down a keep level (counted in `degraded_steps`) while every
+/// request still completes successfully.
+#[test]
+fn chaos_degraded_mode_steps_keep_down_under_backlog() {
+    let (cfg, store) = mini_store();
+    let rt = Runtime::native();
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for i in 0..4 {
+        let (req, rrx) = gen_request(vec![1 + i, 2 + i, 3 + i], 6, None);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    drop(tx);
+    let mut srv = server(&pipe, &store, 1);
+    srv.kv_policy = KvPolicy::Cur { keep: 0.5, sinks: 2, recent: 4 };
+    srv.queue_cap = 4;
+    let stats = srv.run(rx).unwrap();
+    assert!(
+        stats.degraded_steps >= 1,
+        "a backlog of 3 on cap 4 must trip degraded mode"
+    );
+    assert_eq!(stats.gen_served, 4);
+    assert_eq!(stats.rejected, 0, "cap 4 admits all four requests");
+    for rrx in resp_rxs {
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.error, None, "degraded mode must not fail requests");
+        assert_eq!(resp.tokens.len(), 6);
+    }
+}
+
+/// Scoring under head faults: NaN poisoning surfaces as a typed
+/// non-finite failure, hard errors as a typed backend failure — never
+/// a silent garbage score, never a server abort.
+#[test]
+fn chaos_score_faults_fail_typed() {
+    let (cfg, store) = mini_store();
+    for spec in ["seed=3;head=1.0:nan", "seed=3;head=1.0"] {
+        let plan = FaultPlan::parse(spec).unwrap();
+        let rt = Runtime::native().with_faults(plan);
+        let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+        let (tx, rx) = channel::<Request>();
+        let (req, rrx) = score_request(cfg.seq, 9);
+        tx.send(req).unwrap();
+        drop(tx);
+        let stats = server(&pipe, &store, 1).run(rx).unwrap();
+        assert_eq!(stats.served, 0, "a faulted score must not count as served");
+        let resp = rrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.mean_nll.is_nan());
+        assert!(
+            matches!(resp.error, Some(ServeError::Failed { .. })),
+            "spec '{spec}' must fail typed, got {:?}",
+            resp.error
+        );
+    }
+}
