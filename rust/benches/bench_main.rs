@@ -25,7 +25,7 @@ use curing::linalg::{jacobi_svd, rand_svd, Mat};
 use curing::model::ModelConfig;
 use curing::peft::{init_adapters, trainable_params, Adapter};
 use curing::pipeline::{LayerKind, LayerPlan, Pipeline};
-use curing::serve::{spawn_gen_clients, GenerationServer, Request};
+use curing::serve::{spawn_gen_clients, ClusterServer, GenerationServer, Request};
 use curing::tensor::{Tensor, TensorStore};
 use curing::util::bench::{BenchResult, Bencher};
 use curing::util::stats::mib;
@@ -327,6 +327,7 @@ fn serve_bench(ctx: &Ctx) -> Result<()> {
             kv_policy: KvPolicy::Exact,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx)?;
         println!(
@@ -376,6 +377,7 @@ fn serve_bench(ctx: &Ctx) -> Result<()> {
             kv_policy: KvPolicy::Exact,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx)?;
         println!(
@@ -386,6 +388,63 @@ fn serve_bench(ctx: &Ctx) -> Result<()> {
         sec.insert("tokens_per_s_faulted", Json::Num(stats.tokens_per_s));
         sec.insert("tok_p95_ms_faulted", Json::Num(stats.tok_p95_ms));
         sec.insert("slot_failures_faulted", Json::Num(stats.slot_failures as f64));
+    }
+
+    // Worker scaling: the same workload behind the supervised cluster
+    // router at 1 / 2 / 4 / 8 replicated engines (2 KV slots each),
+    // clean and with an injected crash plan — what replication buys in
+    // throughput and what supervised replay costs when workers die.
+    let cstore = std::sync::Arc::new(store.clone());
+    for crash in [false, true] {
+        let suffix = if crash { "_crash" } else { "" };
+        for &workers in &[1usize, 2, 4, 8] {
+            let (tx, rx) = channel::<Request>();
+            let _resps = spawn_gen_clients(
+                &tx,
+                &ctx.vocab,
+                CorpusKind::SynthC4,
+                8,
+                n_new,
+                n_req,
+                1,
+                0,
+            );
+            drop(tx);
+            let mut cluster =
+                ClusterServer::new(cfg.clone(), cstore.clone(), plan.clone(), workers);
+            cluster.max_wait = Duration::from_millis(5);
+            cluster.retry_budget = 4;
+            if crash {
+                let plan =
+                    curing::backend::fault::FaultPlan::parse("seed=5;decode=0.002:crash")?;
+                cluster = cluster.with_fault_plan(plan);
+            }
+            let stats = cluster.run(rx)?;
+            println!(
+                "  workers {workers}{}: {:>8.0} tok/s | tok p95 {:.3} ms | crashes {} | \
+                 retried {} | retired {}",
+                if crash { " (crash p=0.002)" } else { "          " },
+                stats.tokens_per_s,
+                stats.tok_p95_ms,
+                stats.worker_crashes,
+                stats.retried_requests,
+                stats.retired_workers
+            );
+            sec.insert(
+                format!("tokens_per_s_workers{workers}{suffix}"),
+                Json::Num(stats.tokens_per_s),
+            );
+            sec.insert(
+                format!("tok_p95_ms_workers{workers}{suffix}"),
+                Json::Num(stats.tok_p95_ms),
+            );
+            if crash {
+                sec.insert(
+                    format!("worker_crashes_workers{workers}{suffix}"),
+                    Json::Num(stats.worker_crashes as f64),
+                );
+            }
+        }
     }
 
     // Packed vs unpacked NT at the fused-decode head shape (8 active
@@ -460,6 +519,7 @@ fn kv_cur_bench(ctx: &Ctx) -> Result<()> {
             kv_policy: policy,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx)?;
         let live_per_slot = stats.kv_live_bytes_mean / slots as f64;

@@ -12,7 +12,10 @@ use curing::compress::{CompressOptions, LayerStrategy};
 use curing::coordinator::{default_pretrain_steps, Ctx};
 use curing::data::CorpusKind;
 use curing::pipeline::LayerPlan;
-use curing::serve::{spawn_gen_clients, spawn_score_clients, GenerationServer, Request};
+use curing::serve::{
+    drain_gen_responses, drain_score_responses, spawn_gen_clients, spawn_score_clients,
+    GenerationServer, Request,
+};
 use curing::util::cli::Args;
 use std::sync::mpsc::channel;
 use std::time::Duration;
@@ -45,7 +48,7 @@ fn main() -> Result<()> {
         // clients; generation requests are admitted into free KV slots
         // mid-flight while partial scoring batches flush in between.
         let (tx, rx) = channel::<Request>();
-        let _scores = spawn_score_clients(
+        let scores = spawn_score_clients(
             &tx,
             &ctx.vocab,
             CorpusKind::SynthC4,
@@ -54,7 +57,7 @@ fn main() -> Result<()> {
             per_client,
             2,
         );
-        let _gens = spawn_gen_clients(
+        let gens = spawn_gen_clients(
             &tx,
             &ctx.vocab,
             CorpusKind::SynthC4,
@@ -74,6 +77,7 @@ fn main() -> Result<()> {
             kv_policy,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx)?;
         println!(
@@ -103,6 +107,11 @@ fn main() -> Result<()> {
                 stats.kv_live_bytes_mean / (1024.0 * 1024.0),
             );
         }
+        // Per-request outcomes as the clients saw them (typed errors,
+        // not just the aggregate counters).
+        let (_, score_tally) = drain_score_responses(&scores);
+        let (_, gen_tally) = drain_gen_responses(&gens);
+        println!("{label:<11} reqs:  score {score_tally} | gen {gen_tally}");
     }
     println!("\n(The cured pipeline replaces three dense layers with rank-16 CUR chains;");
     println!(" same request interface, fewer FLOPs per layer, smaller weights. Each");

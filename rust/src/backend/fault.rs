@@ -17,7 +17,10 @@
 //!   corruption is confined to a single slot's stream and must surface
 //!   as that one request's typed error, never as cross-slot divergence;
 //! * **latency spikes** — the call sleeps `delay<ms>` first, then runs
-//!   normally (deadline/timeout fuel).
+//!   normally (deadline/timeout fuel);
+//! * **crashes** — the calling thread panics with a downcastable
+//!   [`InjectedCrash`] payload (deterministic worker death for the
+//!   cluster supervisor in [`crate::serve::cluster`]).
 //!
 //! Injection decisions come from a PCG stream seeded by
 //! [`FaultPlan::seed`]: the same plan over the same call sequence hits
@@ -90,6 +93,10 @@ pub enum FaultKind {
     Inf,
     /// Sleep this many milliseconds, then run the call normally.
     Delay(u64),
+    /// Panic the calling thread with a downcastable [`InjectedCrash`]
+    /// payload — deterministic worker death for the cluster
+    /// supervisor's `catch_unwind` boundary. The call never runs.
+    Crash,
 }
 
 impl FaultKind {
@@ -104,7 +111,8 @@ impl FaultKind {
             "err" => FaultKind::Error,
             "nan" => FaultKind::Nan,
             "inf" => FaultKind::Inf,
-            other => bail!("unknown fault kind '{other}' (err|nan|inf|delay<ms>)"),
+            "crash" => FaultKind::Crash,
+            other => bail!("unknown fault kind '{other}' (err|nan|inf|delay<ms>|crash)"),
         })
     }
 }
@@ -116,6 +124,7 @@ impl std::fmt::Display for FaultKind {
             FaultKind::Nan => f.write_str("nan"),
             FaultKind::Inf => f.write_str("inf"),
             FaultKind::Delay(ms) => write!(f, "delay{ms}"),
+            FaultKind::Crash => f.write_str("crash"),
         }
     }
 }
@@ -149,7 +158,7 @@ impl FaultPlan {
     /// <site>=<p>[:<kind>]                one rule; kind defaults to err
     /// all=<p>[:<kind>]                   sugar: one rule per site
     /// site ∈ prefill|decode|compress|head
-    /// kind ∈ err|nan|inf|delay<ms>
+    /// kind ∈ err|nan|inf|delay<ms>|crash
     /// ```
     ///
     /// Example: `seed=7;decode=0.05;head=0.01:nan;prefill=0.02:delay5`.
@@ -215,6 +224,39 @@ impl std::fmt::Display for InjectedFault {
 
 impl std::error::Error for InjectedFault {}
 
+/// The panic payload of an injected [`FaultKind::Crash`]. The cluster
+/// supervisor's `catch_unwind` boundary downcasts the payload to tell
+/// injected worker deaths from organic panics; a standalone server hit
+/// by a `crash` rule simply dies, which is the point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedCrash {
+    pub site: FaultSite,
+    /// 1-based ordinal of this injection on its backend.
+    pub seq: u64,
+}
+
+impl std::fmt::Display for InjectedCrash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected crash #{} at {}", self.seq, self.site)
+    }
+}
+
+/// Stop the default panic hook from printing a "thread panicked"
+/// report for [`InjectedCrash`] payloads — the supervisor catches and
+/// accounts for them, so the stderr noise would only drown real
+/// panics (which still report through the previously installed hook).
+pub fn mute_injected_crash_reports() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedCrash>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
 /// A [`Backend`] that injects the faults of a [`FaultPlan`] around an
 /// inner backend. Interior mutability mirrors the inner backends' op
 /// counters: the server single-threads all backend calls, and the
@@ -259,8 +301,8 @@ impl FaultyBackend {
         anyhow::Error::new(InjectedFault { site, seq })
     }
 
-    /// Pre-call gate: raise injected errors, apply delays, and hand
-    /// poison kinds back for post-call application.
+    /// Pre-call gate: raise injected errors, apply delays and crashes,
+    /// and hand poison kinds back for post-call application.
     fn pre(&self, site: FaultSite) -> Result<Option<FaultKind>> {
         match self.arm(site) {
             None => Ok(None),
@@ -269,6 +311,15 @@ impl FaultyBackend {
                 self.injected.set(self.injected.get() + 1);
                 std::thread::sleep(std::time::Duration::from_millis(ms));
                 Ok(None)
+            }
+            Some(FaultKind::Crash) => {
+                let seq = self.injected.get() + 1;
+                self.injected.set(seq);
+                // Injected worker death IS the tested behavior: the
+                // serve worker thread dies here and the cluster
+                // supervisor's catch_unwind boundary owns the payload.
+                // curlint: allow(panic) -- deterministic crash injection; payload caught at the supervisor boundary
+                std::panic::panic_any(InjectedCrash { site, seq });
             }
             Some(kind) => {
                 self.injected.set(self.injected.get() + 1);
@@ -380,6 +431,12 @@ impl Backend for FaultyBackend {
             Some(FaultKind::Delay(ms)) => {
                 self.injected.set(self.injected.get() + 1);
                 std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
+            Some(FaultKind::Crash) => {
+                let seq = self.injected.get() + 1;
+                self.injected.set(seq);
+                // curlint: allow(panic) -- deterministic crash injection; payload caught at the supervisor boundary
+                std::panic::panic_any(InjectedCrash { site: FaultSite::Compress, seq });
             }
             Some(_) => return Err(self.fault_err(FaultSite::Compress)),
             None => {}

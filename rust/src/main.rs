@@ -17,7 +17,10 @@ use curing::data::{Corpus, CorpusKind, SEED_HEAL};
 use curing::heal::{heal_layers, HealOptions, StepMode, SwitchedRunner};
 use curing::peft::{init_adapters, trainable_params, Adapter};
 use curing::pipeline::LayerPlan;
-use curing::serve::{spawn_gen_clients, spawn_score_clients, GenerationServer, Request};
+use curing::serve::{
+    drain_gen_responses, drain_score_responses, spawn_gen_clients, spawn_score_clients,
+    ClusterServer, GenerationServer, Request,
+};
 use curing::tensor::TensorStore;
 use curing::util::cli::Args;
 use curing::util::stats::mib;
@@ -82,7 +85,10 @@ COMMANDS
             [--kv-policy exact|cur:<keep>[:<sinks>:<recent>]]
             [--deadline-ms 0] per-request deadline (0 = none)
             [--queue-cap 0]   backlog bound, sheds Overloaded (0 = unbounded)
-            [--faults \"seed=7;decode=0.05;head=0.01:nan\"] chaos injection
+            [--workers 1]     replicated engines behind the cluster router
+            [--retry-budget 2]  replays per request after a worker death
+            [--heartbeat-ms 200] hung-worker liveness deadline
+            [--faults \"seed=7;decode=0.05;head=0.01:nan;prefill=0.02:crash\"]
 
 ENV  CURING_BACKEND (native|pjrt; default: pjrt when built in and artifacts exist)
      CURING_ARTIFACTS (default ./artifacts)   CURING_RUNDIR (default ./runs)
@@ -362,6 +368,9 @@ fn serve(args: &Args) -> Result<()> {
     let kv_policy = KvPolicy::parse(&args.str_opt("kv-policy", "exact"))?;
     let deadline_ms = args.usize_opt("deadline-ms", 0);
     let queue_cap = args.usize_opt("queue-cap", 0);
+    let workers = args.usize_opt("workers", 1);
+    let retry_budget = args.usize_opt("retry-budget", 2);
+    let heartbeat_ms = args.usize_opt("heartbeat-ms", 200);
     let faults = args.str_opt("faults", "");
     check_unknown(args)?;
     if !matches!(mode.as_str(), "score" | "generate" | "mixed") {
@@ -370,28 +379,30 @@ fn serve(args: &Args) -> Result<()> {
     // Pretrain/load on the clean backend — faults apply to serving
     // traffic only, never to building the cached store.
     let dense = ctx.load_or_pretrain(&config, steps)?;
-    if !faults.trim().is_empty() {
+    let fault_plan = if faults.trim().is_empty() {
+        None
+    } else {
         let plan = curing::backend::fault::FaultPlan::parse(&faults)?;
         println!("injecting faults: {plan}");
-        let rt = std::mem::replace(&mut ctx.rt, curing::runtime::Runtime::native());
-        ctx.rt = rt.with_faults(plan);
-    }
-    let pipe = ctx.pipeline(&config)?;
+        Some(plan)
+    };
+    let cfg = curing::model::ModelConfig::from_manifest(ctx.rt.manifest(), &config)?;
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64));
     let (tx, rx) = std::sync::mpsc::channel::<Request>();
-    let (mut _score_resps, mut _gen_resps) = (Vec::new(), Vec::new());
+    let (mut score_resps, mut gen_resps) = (Vec::new(), Vec::new());
     if mode == "score" || mode == "mixed" {
-        _score_resps = spawn_score_clients(
+        score_resps = spawn_score_clients(
             &tx,
             &ctx.vocab,
             CorpusKind::SynthC4,
-            pipe.cfg.seq,
+            cfg.seq,
             clients,
             per_client,
             5,
         );
     }
     if mode == "generate" || mode == "mixed" {
-        _gen_resps = spawn_gen_clients(
+        gen_resps = spawn_gen_clients(
             &tx,
             &ctx.vocab,
             CorpusKind::SynthC4,
@@ -403,24 +414,58 @@ fn serve(args: &Args) -> Result<()> {
         );
     }
     drop(tx);
-    let server = GenerationServer {
-        pipe: &pipe,
-        store: &dense,
-        plan: LayerPlan::all_dense(&pipe.cfg),
-        max_wait: Duration::from_millis(30),
-        slots,
-        kv_policy,
-        deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms as u64)),
-        queue_cap,
+    let stats = if workers > 1 {
+        // Multi-worker path: each worker builds its own runtime
+        // in-thread, so any fault plan rides the cluster's factory, not
+        // `ctx.rt`.
+        let mut cluster = ClusterServer::new(
+            cfg.clone(),
+            std::sync::Arc::new(dense),
+            LayerPlan::all_dense(&cfg),
+            workers,
+        );
+        cluster.slots = slots;
+        cluster.kv_policy = kv_policy;
+        cluster.max_wait = Duration::from_millis(30);
+        cluster.deadline = deadline;
+        cluster.queue_cap = queue_cap;
+        cluster.retry_budget = retry_budget;
+        cluster.heartbeat = Duration::from_millis(heartbeat_ms.max(1) as u64);
+        let cluster = match fault_plan {
+            Some(plan) => cluster.with_fault_plan(plan),
+            None => cluster,
+        };
+        println!(
+            "cluster: {workers} workers × {slots} slots | retry budget {retry_budget} | heartbeat {}ms",
+            heartbeat_ms.max(1)
+        );
+        cluster.run(rx)?
+    } else {
+        if let Some(plan) = fault_plan {
+            let rt = std::mem::replace(&mut ctx.rt, curing::runtime::Runtime::native());
+            ctx.rt = rt.with_faults(plan);
+        }
+        let pipe = ctx.pipeline(&config)?;
+        let server = GenerationServer {
+            pipe: &pipe,
+            store: &dense,
+            plan: LayerPlan::all_dense(&pipe.cfg),
+            max_wait: Duration::from_millis(30),
+            slots,
+            kv_policy,
+            deadline,
+            queue_cap,
+            tick: None,
+        };
+        server.run(rx)?
     };
-    let stats = server.run(rx)?;
     if stats.served > 0 {
         println!(
             "scored {} reqs | {:.1} seq/s | occupancy {:.1}/{} | padded rows {} | p50 {:.0}ms p95 {:.0}ms",
             stats.served,
             stats.throughput_seq_per_s,
             stats.mean_batch_occupancy,
-            pipe.cfg.batch,
+            cfg.batch,
             stats.padded_rows,
             stats.p50_latency_ms,
             stats.p95_latency_ms
@@ -438,12 +483,9 @@ fn serve(args: &Args) -> Result<()> {
             stats.tok_p50_ms,
             stats.tok_p95_ms
         );
-        let exact_bound = slots
-            * curing::backend::KvCache::exact_slot_bound(
-                pipe.cfg.n_layers,
-                pipe.cfg.seq,
-                pipe.cfg.d_model,
-            );
+        let exact_bound = workers.max(1)
+            * slots
+            * curing::backend::KvCache::exact_slot_bound(cfg.n_layers, cfg.seq, cfg.d_model);
         println!(
             "kv policy {kv_policy} | compactions {} | mean live KV {:.3} MiB (exact bound {:.3} MiB)",
             stats.kv_compactions,
@@ -465,6 +507,25 @@ fn serve(args: &Args) -> Result<()> {
             stats.quarantined_slots,
             stats.degraded_steps
         );
+    }
+    if stats.worker_crashes + stats.worker_restarts + stats.retried_requests + stats.retired_workers
+        > 0
+    {
+        println!(
+            "cluster: worker crashes {} | restarts {} | retried requests {} | retired workers {}",
+            stats.worker_crashes,
+            stats.worker_restarts,
+            stats.retried_requests,
+            stats.retired_workers
+        );
+    }
+    let (_, score_tally) = drain_score_responses(&score_resps);
+    if score_tally.total() > 0 {
+        println!("score outcomes: {score_tally}");
+    }
+    let (_, gen_tally) = drain_gen_responses(&gen_resps);
+    if gen_tally.total() > 0 {
+        println!("gen outcomes: {gen_tally}");
     }
     println!("wall {:.2}s", stats.wall_s);
     Ok(())

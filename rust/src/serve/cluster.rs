@@ -1,0 +1,685 @@
+//! A supervised multi-worker serving cluster.
+//!
+//! [`ClusterServer`] replicates the single-threaded
+//! [`GenerationServer`] engine across N worker threads — each with its
+//! own KV slots and its own `Runtime` (backend handles are not `Send`,
+//! so every worker builds one in-thread via [`WorkerRuntime`]) over a
+//! shared [`TensorStore`] — behind a [`ClusterRouter`] that does
+//! least-outstanding-work dispatch and bounded cluster-wide admission.
+//! Worker lifecycle (heartbeats, `catch_unwind` crash detection,
+//! exponential-backoff respawn, circuit-breaker retirement) belongs to
+//! the [`Supervisor`](super::supervisor::Supervisor).
+//!
+//! The cluster speaks the engine's protocol verbatim: send
+//! [`Request`]s (Score / Generate / Shutdown) on the channel passed to
+//! [`ClusterServer::run`], read typed responses, and either drop the
+//! sender or send [`Request::Shutdown`] for a graceful drain that
+//! merges every worker's [`ServeStats`].
+//!
+//! **Replay correctness.** A request in flight on a dying worker is
+//! re-queued to a healthy one (bounded by
+//! [`ClusterServer::retry_budget`]). Greedy decode is deterministic
+//! and a replay re-prefills from the prompt, so a replayed request's
+//! token stream is bit-identical to an unfaulted run — the cluster
+//! tests assert this against the cache-free oracle. With every worker
+//! retired, queued and later requests are answered with
+//! [`ServeError::AllWorkersRetired`] instead of hanging.
+
+use super::supervisor::{Supervisor, SupervisorConfig, WorkerEvent, WorkerExit, WorkerSeed};
+use super::{
+    GenRequest, GenResponse, GenerationServer, Request, ScoreRequest, ScoreResponse, ServeError,
+    ServeStats,
+};
+use crate::backend::fault::{mute_injected_crash_reports, FaultPlan, InjectedCrash};
+use crate::backend::KvPolicy;
+use crate::model::ModelConfig;
+use crate::pipeline::{LayerPlan, Pipeline};
+use crate::runtime::Runtime;
+use crate::tensor::TensorStore;
+use crate::util::stats::percentile;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Builds one worker's [`Runtime`] *inside* the worker thread (the
+/// handles are not `Send`). The argument is the worker id — a
+/// per-worker fault plan or backend choice hangs here.
+pub type WorkerRuntime = Arc<dyn Fn(usize) -> Result<Runtime> + Send + Sync>;
+
+/// The multi-worker server. Mirrors [`GenerationServer`]'s knobs per
+/// worker and adds the cluster-level ones (admission, retry budget,
+/// supervision). All fields are public so tests and benches can tune
+/// the topology directly; [`ClusterServer::new`] picks serving-grade
+/// defaults.
+pub struct ClusterServer {
+    pub cfg: ModelConfig,
+    /// Weights shared by every worker (plain data: `Send + Sync`).
+    pub store: Arc<TensorStore>,
+    pub plan: LayerPlan,
+    /// Worker threads (each a full [`GenerationServer`]).
+    pub workers: usize,
+    /// KV slots per worker.
+    pub slots: usize,
+    pub kv_policy: KvPolicy,
+    /// Scoring flush cap per worker; clamped to `heartbeat / 4` so an
+    /// idle worker still beats in time.
+    pub max_wait: Duration,
+    /// Cluster-default per-request deadline (a request's own overrides).
+    pub deadline: Option<Duration>,
+    /// Bounded cluster-wide admission: max undispatched requests before
+    /// intake sheds with [`ServeError::Overloaded`]. `0` = unbounded.
+    pub queue_cap: usize,
+    /// Replays allowed per request after worker deaths before it is
+    /// answered [`ServeError::RetriesExhausted`].
+    pub retry_budget: usize,
+    /// Heartbeat deadline for hung-worker detection.
+    pub heartbeat: Duration,
+    /// First respawn backoff; doubles per crash up to `backoff_max`.
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// Circuit breaker: crashes inside `breaker_window` that retire a
+    /// worker permanently.
+    pub breaker_crashes: usize,
+    pub breaker_window: Duration,
+    /// Per-worker runtime factory (fault plans are injected here).
+    pub factory: WorkerRuntime,
+}
+
+impl ClusterServer {
+    /// A cluster over `workers` clean native workers with defaults
+    /// sized for the test/bench models.
+    pub fn new(
+        cfg: ModelConfig,
+        store: Arc<TensorStore>,
+        plan: LayerPlan,
+        workers: usize,
+    ) -> ClusterServer {
+        ClusterServer {
+            cfg,
+            store,
+            plan,
+            workers,
+            slots: 2,
+            kv_policy: KvPolicy::Exact,
+            max_wait: Duration::from_millis(10),
+            deadline: None,
+            queue_cap: 0,
+            retry_budget: 2,
+            heartbeat: Duration::from_millis(200),
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(500),
+            breaker_crashes: 3,
+            breaker_window: Duration::from_secs(10),
+            factory: Arc::new(|_| Ok(Runtime::native())),
+        }
+    }
+
+    /// Wrap every worker's backend in a [`FaultPlan`], with the seed
+    /// decorrelated per worker (same plan + same worker id = same
+    /// injection stream, across respawns too — a crash-looping worker
+    /// crash-loops deterministically, which is what the breaker tests
+    /// pin).
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> ClusterServer {
+        self.factory = Arc::new(move |w| {
+            let mut p = plan.clone();
+            p.seed = plan.seed ^ 0x9E3779B97F4A7C15u64.wrapping_mul(w as u64 + 1);
+            Ok(Runtime::native().with_faults(p))
+        });
+        self
+    }
+
+    /// Serve until the request channel disconnects and all accepted
+    /// work has drained (or was answered with a typed error). Runs the
+    /// router and supervisor on the calling thread; workers are spawned
+    /// threads.
+    pub fn run(&self, rx: Receiver<Request>) -> Result<ServeStats> {
+        mute_injected_crash_reports();
+        // Fail fast on an unusable policy before spawning anything.
+        self.kv_policy.validate(self.cfg.seq)?;
+        let n = self.workers.max(1);
+        let sup_cfg = SupervisorConfig {
+            heartbeat: self.heartbeat,
+            backoff_base: self.backoff_base,
+            backoff_max: self.backoff_max,
+            breaker_crashes: self.breaker_crashes,
+            breaker_window: self.breaker_window,
+        };
+        let mut sup = Supervisor::new(n, sup_cfg, self.worker_spawn());
+        let mut router = ClusterRouter {
+            queue: VecDeque::new(),
+            flight: Vec::new(),
+            slots_per_worker: self.slots.max(1),
+            retry_budget: self.retry_budget,
+            deadline: self.deadline,
+        };
+        let t0 = Instant::now();
+        let mut stats = ServeStats::default();
+        let mut score_lat: Vec<f64> = Vec::new();
+        let mut drain_notify: Vec<Sender<ServeStats>> = Vec::new();
+        let mut disconnected = false;
+        loop {
+            // ---- intake. Poll fast while work is in flight (response
+            // polling is pull-based), lazily when idle.
+            let block = if !router.flight.is_empty()
+                || !router.queue.is_empty()
+                || disconnected
+                || !drain_notify.is_empty()
+            {
+                Duration::from_millis(1)
+            } else {
+                (self.heartbeat / 2).max(Duration::from_millis(1))
+            };
+            match rx.recv_timeout(block) {
+                Ok(r) => self.intake(r, &mut router, &sup, &mut drain_notify, &mut stats),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(r) => self.intake(r, &mut router, &sup, &mut drain_notify, &mut stats),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            let draining = !drain_notify.is_empty();
+            if (disconnected || draining) && router.queue.is_empty() && router.flight.is_empty()
+            {
+                break;
+            }
+            // ---- supervision: reap crashes/hangs, respawn, and replay
+            // the dead workers' in-flight requests.
+            for w in sup.poll() {
+                router.requeue_worker(w, &mut stats);
+            }
+            // ---- forward finished responses; a disconnected response
+            // channel is a worker death the supervisor hasn't reported
+            // yet — replay, don't lose the request.
+            router.poll_responses(&mut stats, &mut score_lat);
+            // ---- evict queued requests whose deadline passed.
+            router.evict_expired(&mut stats);
+            // ---- terminal no-capacity state: every worker retired,
+            // nothing will ever respawn. Answer instead of hanging.
+            if sup.all_retired() {
+                router.drain_retired(sup.workers(), &mut stats);
+            }
+            // ---- least-outstanding-work dispatch.
+            router.dispatch(&sup);
+        }
+        // ---- teardown: drop worker senders, collect final stats.
+        let report = sup.shutdown(self.heartbeat.max(Duration::from_secs(2)));
+        stats.worker_crashes = report.crashes;
+        stats.worker_restarts = report.restarts;
+        stats.retired_workers = report.retired;
+        merge_worker_stats(&mut stats, &report.finished);
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        stats.p50_latency_ms = percentile(&score_lat, 50.0);
+        stats.p95_latency_ms = percentile(&score_lat, 95.0);
+        stats.throughput_seq_per_s = stats.served as f64 / stats.wall_s.max(1e-9);
+        stats.tokens_per_s = stats.tokens_generated as f64 / stats.wall_s.max(1e-9);
+        for tx in drain_notify {
+            let _ = tx.send(stats.clone());
+        }
+        Ok(stats)
+    }
+
+    /// The [`WorkerSpawn`](super::supervisor::WorkerSpawn) closure: one
+    /// OS thread per incarnation, building its own `Runtime`/`Pipeline`
+    /// in-thread, heartbeating through the engine's `tick` hook, and
+    /// reporting its exit — clean stats, fatal error, or caught panic —
+    /// on the supervisor's event channel.
+    fn worker_spawn(&self) -> super::supervisor::WorkerSpawn {
+        let store = self.store.clone();
+        let cfg = self.cfg.clone();
+        let plan = self.plan.clone();
+        let factory = self.factory.clone();
+        let slots = self.slots.max(1);
+        let kv_policy = self.kv_policy;
+        // An idle worker blocks for max_wait between heartbeats: keep
+        // that well inside the liveness deadline.
+        let wait = self.max_wait.min(self.heartbeat / 4).max(Duration::from_millis(1));
+        Box::new(move |seed: WorkerSeed| {
+            let WorkerSeed { worker, incarnation, requests, beat, epoch, events } = seed;
+            let store = store.clone();
+            let cfg = cfg.clone();
+            let plan = plan.clone();
+            let factory = factory.clone();
+            std::thread::spawn(move || {
+                let tick: Box<dyn Fn()> = Box::new(move || {
+                    beat.store(epoch.elapsed().as_millis() as u64, Ordering::Relaxed);
+                });
+                // The supervisor's crash boundary: a worker panic (the
+                // injected `crash` fault, or an organic one) must become
+                // a WorkerEvent, never tear down the cluster.
+                // curlint: allow(panic) -- supervisor crash boundary: panics become WorkerExit events
+                let out = std::panic::catch_unwind(AssertUnwindSafe(|| -> Result<ServeStats> {
+                    let rt = factory(worker)?;
+                    let pipe = Pipeline { rt: &rt, cfg };
+                    let server = GenerationServer {
+                        pipe: &pipe,
+                        store: &store,
+                        plan,
+                        max_wait: wait,
+                        slots,
+                        kv_policy,
+                        deadline: None, // requests carry the resolved deadline
+                        queue_cap: 0,   // admission is bounded cluster-wide
+                        tick: Some(tick),
+                    };
+                    server.run(requests)
+                }));
+                let exit = match out {
+                    Ok(Ok(stats)) => WorkerExit::Clean(Box::new(stats)),
+                    Ok(Err(e)) => WorkerExit::Fatal(format!("{e:#}")),
+                    Err(payload) => WorkerExit::Panicked(describe_panic(payload.as_ref())),
+                };
+                let _ = events.send(WorkerEvent { worker, incarnation, exit });
+            })
+        })
+    }
+
+    /// Cluster-level admission: shed while draining or over the queue
+    /// cap, answer immediately when all capacity is retired, otherwise
+    /// queue for dispatch.
+    fn intake(
+        &self,
+        r: Request,
+        router: &mut ClusterRouter,
+        sup: &Supervisor,
+        drain_notify: &mut Vec<Sender<ServeStats>>,
+        stats: &mut ServeStats,
+    ) {
+        let depth = router.queue.len();
+        let shed = if !drain_notify.is_empty() {
+            Some(ServeError::ShuttingDown)
+        } else if sup.all_retired() {
+            Some(ServeError::AllWorkersRetired { retired: sup.workers() })
+        } else if self.queue_cap > 0 && depth >= self.queue_cap {
+            Some(ServeError::Overloaded { depth, cap: self.queue_cap })
+        } else {
+            None
+        };
+        let job = match r {
+            Request::Shutdown(tx) => {
+                drain_notify.push(tx);
+                return;
+            }
+            Request::Score(s) => Job::Score(ScoreJob {
+                tokens: s.tokens,
+                targets: s.targets,
+                enqueued: s.enqueued,
+                deadline: s.deadline.or(self.deadline),
+                client: s.respond,
+                attempts: 1,
+            }),
+            Request::Generate(g) => Job::Gen(GenJob {
+                prompt: g.prompt,
+                n_new: g.n_new,
+                enqueued: g.enqueued,
+                deadline: g.deadline.or(self.deadline),
+                client: g.respond,
+                attempts: 1,
+            }),
+        };
+        match shed {
+            Some(e) => {
+                stats.rejected += 1;
+                job.reply_error(e);
+            }
+            None => router.queue.push_back(job),
+        }
+    }
+}
+
+/// A queued (or re-queued) request with its replay count. Holds the
+/// *client's* response sender; each dispatch pairs the worker with a
+/// fresh shim channel so the router observes completion or loss.
+struct GenJob {
+    prompt: Vec<i32>,
+    n_new: usize,
+    enqueued: Instant,
+    deadline: Option<Duration>,
+    client: Sender<GenResponse>,
+    /// Dispatch attempts so far (1 = first try).
+    attempts: usize,
+}
+
+struct ScoreJob {
+    tokens: Vec<i32>,
+    targets: Vec<i32>,
+    enqueued: Instant,
+    deadline: Option<Duration>,
+    client: Sender<ScoreResponse>,
+    attempts: usize,
+}
+
+enum Job {
+    Gen(GenJob),
+    Score(ScoreJob),
+}
+
+impl Job {
+    fn enqueued(&self) -> Instant {
+        match self {
+            Job::Gen(j) => j.enqueued,
+            Job::Score(j) => j.enqueued,
+        }
+    }
+
+    fn deadline(&self) -> Option<Duration> {
+        match self {
+            Job::Gen(j) => j.deadline,
+            Job::Score(j) => j.deadline,
+        }
+    }
+
+    fn reply_error(self, e: ServeError) {
+        let latency_ms = self.enqueued().elapsed().as_secs_f64() * 1e3;
+        match self {
+            Job::Gen(j) => {
+                let _ = j.client.send(GenResponse {
+                    tokens: Vec::new(),
+                    latency_ms,
+                    error: Some(e),
+                });
+            }
+            Job::Score(j) => {
+                let _ = j.client.send(ScoreResponse {
+                    mean_nll: f64::NAN,
+                    latency_ms,
+                    error: Some(e),
+                });
+            }
+        }
+    }
+}
+
+/// The shim receiver a dispatched job's worker answers on.
+enum Shim {
+    Gen(Receiver<GenResponse>),
+    Score(Receiver<ScoreResponse>),
+}
+
+struct InFlight {
+    job: Job,
+    shim: Shim,
+    worker: usize,
+}
+
+/// Dispatch state: the cluster backlog, the in-flight table, and the
+/// routing policy (least outstanding work wins, per-worker outstanding
+/// bounded at `2 × slots` so a respawned worker picks up load).
+struct ClusterRouter {
+    queue: VecDeque<Job>,
+    flight: Vec<InFlight>,
+    slots_per_worker: usize,
+    retry_budget: usize,
+    deadline: Option<Duration>,
+}
+
+impl ClusterRouter {
+    fn outstanding(&self, w: usize) -> usize {
+        self.flight.iter().filter(|f| f.worker == w).count()
+    }
+
+    /// Dispatch queued jobs to live workers, least-outstanding first.
+    fn dispatch(&mut self, sup: &Supervisor) {
+        while !self.queue.is_empty() {
+            let cap = 2 * self.slots_per_worker;
+            let Some(w) = sup
+                .up()
+                .into_iter()
+                .map(|w| (self.outstanding(w), w))
+                .filter(|&(n, _)| n < cap)
+                .min()
+                .map(|(_, w)| w)
+            else {
+                break;
+            };
+            let Some(tx) = sup.sender(w) else { break };
+            let Some(job) = self.queue.pop_front() else { break };
+            let (job, req, shim) = Self::wire(job);
+            if tx.send(req).is_err() {
+                // The worker died between poll and dispatch; put the
+                // job back — the next supervision pass owns the death.
+                self.queue.push_front(job);
+                break;
+            }
+            self.flight.push(InFlight { job, shim, worker: w });
+        }
+    }
+
+    /// Pair a job with a fresh shim channel and build the worker-bound
+    /// request (the resolved deadline rides along; `enqueued` stays the
+    /// client's original instant so latency and deadlines are
+    /// end-to-end across replays).
+    fn wire(job: Job) -> (Job, Request, Shim) {
+        match job {
+            Job::Gen(j) => {
+                let (stx, srx) = channel();
+                let req = Request::Generate(GenRequest {
+                    prompt: j.prompt.clone(),
+                    n_new: j.n_new,
+                    enqueued: j.enqueued,
+                    deadline: j.deadline,
+                    respond: stx,
+                });
+                (Job::Gen(j), req, Shim::Gen(srx))
+            }
+            Job::Score(j) => {
+                let (stx, srx) = channel();
+                let req = Request::Score(ScoreRequest {
+                    tokens: j.tokens.clone(),
+                    targets: j.targets.clone(),
+                    enqueued: j.enqueued,
+                    deadline: j.deadline,
+                    respond: stx,
+                });
+                (Job::Score(j), req, Shim::Score(srx))
+            }
+        }
+    }
+
+    /// Forward every completed response to its client; treat a
+    /// disconnected shim (the worker dropped the request's sender
+    /// without answering — it died) as a replayable loss.
+    fn poll_responses(&mut self, stats: &mut ServeStats, score_lat: &mut Vec<f64>) {
+        let mut i = 0;
+        while i < self.flight.len() {
+            enum Got {
+                GenDone(GenResponse),
+                ScoreDone(ScoreResponse),
+                Wait,
+                Lost,
+            }
+            let got = match &self.flight[i].shim {
+                Shim::Gen(rx) => match rx.try_recv() {
+                    Ok(r) => Got::GenDone(r),
+                    Err(TryRecvError::Empty) => Got::Wait,
+                    Err(TryRecvError::Disconnected) => Got::Lost,
+                },
+                Shim::Score(rx) => match rx.try_recv() {
+                    Ok(r) => Got::ScoreDone(r),
+                    Err(TryRecvError::Empty) => Got::Wait,
+                    Err(TryRecvError::Disconnected) => Got::Lost,
+                },
+            };
+            match got {
+                Got::Wait => i += 1,
+                Got::Lost => {
+                    let inflight = self.flight.swap_remove(i);
+                    self.requeue(inflight.job, stats);
+                }
+                Got::GenDone(resp) => {
+                    let InFlight { job: Job::Gen(j), .. } = self.flight.swap_remove(i) else {
+                        continue; // shim and job kinds are wired together
+                    };
+                    if matches!(resp.error, Some(ServeError::Timeout { .. })) {
+                        stats.timed_out += 1;
+                    }
+                    stats.gen_served += 1;
+                    stats.tokens_generated += resp.tokens.len();
+                    let _ = j.client.send(resp);
+                }
+                Got::ScoreDone(resp) => {
+                    let InFlight { job: Job::Score(j), .. } = self.flight.swap_remove(i) else {
+                        continue;
+                    };
+                    if matches!(resp.error, Some(ServeError::Timeout { .. })) {
+                        stats.timed_out += 1;
+                    }
+                    if resp.error.is_none() {
+                        stats.served += 1;
+                        score_lat.push(resp.latency_ms);
+                    }
+                    let _ = j.client.send(resp);
+                }
+            }
+        }
+    }
+
+    /// Replay every in-flight request of a dead worker.
+    fn requeue_worker(&mut self, w: usize, stats: &mut ServeStats) {
+        let mut i = 0;
+        while i < self.flight.len() {
+            if self.flight[i].worker == w {
+                let inflight = self.flight.swap_remove(i);
+                self.requeue(inflight.job, stats);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// One replay: back to the queue front under the retry budget,
+    /// typed [`ServeError::RetriesExhausted`] beyond it. Replays
+    /// re-prefill from the prompt on the new worker, so the replayed
+    /// stream is bit-identical to an unfaulted run (greedy decode is
+    /// deterministic).
+    fn requeue(&mut self, mut job: Job, stats: &mut ServeStats) {
+        let attempts = match &mut job {
+            Job::Gen(j) => {
+                j.attempts += 1;
+                j.attempts
+            }
+            Job::Score(j) => {
+                j.attempts += 1;
+                j.attempts
+            }
+        };
+        if attempts > self.retry_budget.saturating_add(1) {
+            match &job {
+                Job::Gen(_) => stats.gen_served += 1,
+                Job::Score(_) => {}
+            }
+            job.reply_error(ServeError::RetriesExhausted { attempts: attempts - 1 });
+            return;
+        }
+        stats.retried_requests += 1;
+        self.queue.push_front(job);
+    }
+
+    /// Evict queued jobs whose end-to-end deadline elapsed (dispatched
+    /// jobs are deadline-checked by their worker).
+    fn evict_expired(&mut self, stats: &mut ServeStats) {
+        let expired: Vec<usize> = self
+            .queue
+            .iter()
+            .enumerate()
+            .filter_map(|(i, job)| {
+                let d = job.deadline().or(self.deadline)?;
+                (job.enqueued().elapsed() >= d).then_some(i)
+            })
+            .collect();
+        for i in expired.into_iter().rev() {
+            let Some(job) = self.queue.remove(i) else { continue };
+            let Some(d) = job.deadline().or(self.deadline) else { continue };
+            stats.timed_out += 1;
+            if matches!(job, Job::Gen(_)) {
+                stats.gen_served += 1;
+            }
+            job.reply_error(ServeError::Timeout { deadline_ms: d.as_millis() as u64 });
+        }
+    }
+
+    /// Terminal path: all capacity is retired. Answer everything still
+    /// queued with the typed error (in-flight work was already replayed
+    /// into the queue when its worker died) — the cluster never hangs.
+    fn drain_retired(&mut self, retired: usize, stats: &mut ServeStats) {
+        for job in self.queue.drain(..) {
+            stats.rejected += 1;
+            if matches!(job, Job::Gen(_)) {
+                stats.gen_served += 1;
+            }
+            job.reply_error(ServeError::AllWorkersRetired { retired });
+        }
+    }
+}
+
+/// Render a `catch_unwind` payload: injected crashes by their typed
+/// payload, plain panic messages verbatim, anything else generically.
+fn describe_panic(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(c) = payload.downcast_ref::<InjectedCrash>() {
+        return c.to_string();
+    }
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        return format!("panic: {s}");
+    }
+    if let Some(s) = payload.downcast_ref::<String>() {
+        return format!("panic: {s}");
+    }
+    "panic with a non-string payload".to_string()
+}
+
+/// Merge the engine-level stats of cleanly drained workers into the
+/// cluster totals. Request-level counters (`served`, `gen_served`,
+/// `tokens_generated`, `rejected`, `timed_out`, retry/crash counters)
+/// are owned by the router — the workers' copies would double count —
+/// so only machine-level fields merge here. Percentile fields cannot
+/// be merged exactly; the per-token ones are token-weighted means
+/// across workers (documented approximation).
+fn merge_worker_stats(stats: &mut ServeStats, finished: &[ServeStats]) {
+    let mut batches = 0usize;
+    let mut occ_sum = 0.0f64;
+    let mut steps = 0usize;
+    let mut active_sum = 0.0f64;
+    let mut live_sum = 0.0f64;
+    let mut toks = 0usize;
+    let mut p50_sum = 0.0f64;
+    let mut p95_sum = 0.0f64;
+    for s in finished {
+        stats.prefills += s.prefills;
+        stats.decode_steps += s.decode_steps;
+        stats.kv_compactions += s.kv_compactions;
+        stats.padded_rows += s.padded_rows;
+        stats.slot_failures += s.slot_failures;
+        stats.quarantined_slots += s.quarantined_slots;
+        stats.degraded_steps += s.degraded_steps;
+        batches += s.batches;
+        occ_sum += s.mean_batch_occupancy * s.batches as f64;
+        steps += s.decode_steps;
+        active_sum += s.mean_active_slots * s.decode_steps as f64;
+        live_sum += s.kv_live_bytes_mean * s.decode_steps as f64;
+        toks += s.tokens_generated;
+        p50_sum += s.tok_p50_ms * s.tokens_generated as f64;
+        p95_sum += s.tok_p95_ms * s.tokens_generated as f64;
+    }
+    stats.batches += batches;
+    if batches > 0 {
+        stats.mean_batch_occupancy = occ_sum / batches as f64;
+    }
+    if steps > 0 {
+        stats.mean_active_slots = active_sum / steps as f64;
+        stats.kv_live_bytes_mean = live_sum / steps as f64;
+    }
+    if toks > 0 {
+        stats.tok_p50_ms = p50_sum / toks as f64;
+        stats.tok_p95_ms = p95_sum / toks as f64;
+    }
+}

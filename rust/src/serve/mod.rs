@@ -61,6 +61,12 @@ use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
+pub mod cluster;
+pub mod supervisor;
+
+pub use cluster::{ClusterServer, WorkerRuntime};
+pub use supervisor::{Supervisor, SupervisorConfig};
+
 /// Why the server declined or failed a request. Every response carries
 /// `Option<ServeError>` — `None` is success; anything else is typed so
 /// clients can branch on the cause instead of parsing strings.
@@ -79,6 +85,13 @@ pub enum ServeError {
     Failed { detail: String },
     /// Received after a [`Request::Shutdown`] was accepted.
     ShuttingDown,
+    /// Cluster only: every worker was retired by the circuit breaker —
+    /// queued and later requests are answered with this instead of
+    /// hanging on capacity that is permanently gone.
+    AllWorkersRetired { retired: usize },
+    /// Cluster only: the request was replayed after worker deaths until
+    /// its retry budget ran out (`attempts` includes the first try).
+    RetriesExhausted { attempts: usize },
 }
 
 impl std::fmt::Display for ServeError {
@@ -93,6 +106,12 @@ impl std::fmt::Display for ServeError {
             ServeError::Rejected { reason } => write!(f, "rejected: {reason}"),
             ServeError::Failed { detail } => write!(f, "failed: {detail}"),
             ServeError::ShuttingDown => write!(f, "server is shutting down"),
+            ServeError::AllWorkersRetired { retired } => {
+                write!(f, "all {retired} cluster workers retired by the circuit breaker")
+            }
+            ServeError::RetriesExhausted { attempts } => {
+                write!(f, "retry budget exhausted after {attempts} attempts on dying workers")
+            }
         }
     }
 }
@@ -209,6 +228,19 @@ pub struct ServeStats {
     /// Times the degraded-mode controller stepped the `cur` KV `keep`
     /// ratio down under memory/queue pressure.
     pub degraded_steps: usize,
+    /// Cluster only: worker incarnations that died — panic (e.g. an
+    /// injected `crash` fault), fatal engine error, or missed
+    /// heartbeat. Always 0 on a single engine.
+    pub worker_crashes: usize,
+    /// Cluster only: workers respawned after a crash (each waited out
+    /// its exponential backoff first).
+    pub worker_restarts: usize,
+    /// Cluster only: requests re-queued to a healthy worker after
+    /// their worker died mid-flight (counted per replay).
+    pub retried_requests: usize,
+    /// Cluster only: workers permanently retired by the circuit
+    /// breaker (K crashes inside the sliding window).
+    pub retired_workers: usize,
     pub wall_s: f64,
 }
 
@@ -267,6 +299,11 @@ pub struct GenerationServer<'p> {
     /// combined) before enqueue sheds with [`ServeError::Overloaded`].
     /// `0` means unbounded.
     pub queue_cap: usize,
+    /// Liveness hook, called once per server-loop iteration (so at
+    /// least once per decode step and at least once per `max_wait` when
+    /// idle). The cluster supervisor hangs its heartbeat here; `None`
+    /// is a no-op for standalone servers.
+    pub tick: Option<Box<dyn Fn()>>,
 }
 
 /// The scoring server is one mode of the generation server (send only
@@ -303,6 +340,11 @@ impl<'p> GenerationServer<'p> {
         let mut packed: Option<PackedHead> = None;
         let mut disconnected = false;
         loop {
+            // ---- heartbeat first: a loop that still turns is alive,
+            // whatever the queues hold.
+            if let Some(beat) = &self.tick {
+                beat();
+            }
             // ---- intake. Block only as long as no work would stall:
             // not at all while decode slots are active or admissions/
             // flushes are due, until the oldest score's deadline while a
@@ -1100,6 +1142,104 @@ pub fn spawn_clients(
     (rx, resp_rxs)
 }
 
+/// Per-request outcomes of a client fleet, split by typed
+/// [`ServeError`] — so callers of [`spawn_score_clients`] /
+/// [`spawn_gen_clients`] can count retries, timeouts and shed requests
+/// instead of only reading the successful payloads.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClientTally {
+    pub ok: usize,
+    pub overloaded: usize,
+    pub timed_out: usize,
+    pub rejected: usize,
+    pub failed: usize,
+    pub shutting_down: usize,
+    pub all_retired: usize,
+    pub retries_exhausted: usize,
+}
+
+impl ClientTally {
+    pub fn count(&mut self, error: &Option<ServeError>) {
+        match error {
+            None => self.ok += 1,
+            Some(ServeError::Overloaded { .. }) => self.overloaded += 1,
+            Some(ServeError::Timeout { .. }) => self.timed_out += 1,
+            Some(ServeError::Rejected { .. }) => self.rejected += 1,
+            Some(ServeError::Failed { .. }) => self.failed += 1,
+            Some(ServeError::ShuttingDown) => self.shutting_down += 1,
+            Some(ServeError::AllWorkersRetired { .. }) => self.all_retired += 1,
+            Some(ServeError::RetriesExhausted { .. }) => self.retries_exhausted += 1,
+        }
+    }
+
+    /// All responses seen, whatever the outcome.
+    pub fn total(&self) -> usize {
+        self.ok
+            + self.overloaded
+            + self.timed_out
+            + self.rejected
+            + self.failed
+            + self.shutting_down
+            + self.all_retired
+            + self.retries_exhausted
+    }
+
+    /// Responses that carried any error.
+    pub fn errored(&self) -> usize {
+        self.total() - self.ok
+    }
+}
+
+impl std::fmt::Display for ClientTally {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ok={}", self.ok)?;
+        for (n, label) in [
+            (self.overloaded, "overloaded"),
+            (self.timed_out, "timeout"),
+            (self.rejected, "rejected"),
+            (self.failed, "failed"),
+            (self.shutting_down, "shutting-down"),
+            (self.all_retired, "all-retired"),
+            (self.retries_exhausted, "retries-exhausted"),
+        ] {
+            if n > 0 {
+                write!(f, " {label}={n}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Drain every generation response from a client fleet (call after the
+/// server run returns, when all response senders have dropped) and
+/// tally the outcomes.
+pub fn drain_gen_responses(rxs: &[Receiver<GenResponse>]) -> (Vec<GenResponse>, ClientTally) {
+    let mut out = Vec::new();
+    let mut tally = ClientTally::default();
+    for rx in rxs {
+        for resp in rx.iter() {
+            tally.count(&resp.error);
+            out.push(resp);
+        }
+    }
+    (out, tally)
+}
+
+/// Scoring twin of [`drain_gen_responses`].
+pub fn drain_score_responses(
+    rxs: &[Receiver<ScoreResponse>],
+) -> (Vec<ScoreResponse>, ClientTally) {
+    let mut out = Vec::new();
+    let mut tally = ClientTally::default();
+    for rx in rxs {
+        for resp in rx.iter() {
+            tally.count(&resp.error);
+            out.push(resp);
+        }
+    }
+    (out, tally)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1132,6 +1272,7 @@ mod tests {
             kv_policy: KvPolicy::Exact,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, 3);
@@ -1202,6 +1343,7 @@ mod tests {
             kv_policy: KvPolicy::Exact,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.gen_served, prompts.len());
@@ -1249,6 +1391,7 @@ mod tests {
             kv_policy: KvPolicy::Cur { keep: 0.5, sinks: 2, recent: 4 },
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.gen_served, 2);
@@ -1414,6 +1557,7 @@ mod tests {
             kv_policy: KvPolicy::Exact,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, n_req);
@@ -1468,6 +1612,7 @@ mod tests {
             kv_policy: KvPolicy::Exact,
             deadline: None,
             queue_cap: 0,
+            tick: None,
         };
         let stats = server.run(rx).unwrap();
         assert_eq!(stats.served, 4);

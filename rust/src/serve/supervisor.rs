@@ -1,0 +1,371 @@
+//! Worker lifecycle supervision for the serving cluster.
+//!
+//! The [`Supervisor`] owns N worker *slots*. Each slot runs at most one
+//! live *incarnation* — an OS thread executing a
+//! [`super::GenerationServer`] loop — and moves through a small state
+//! machine:
+//!
+//! ```text
+//!   Up ──crash/hang──▶ Backoff ──delay elapsed──▶ Up (respawn)
+//!   Up ──K crashes in the sliding window──▶ Retired   (permanent)
+//!   Up ──cluster shutdown──▶ Stopped                  (stats merged)
+//! ```
+//!
+//! Liveness is a heartbeat: every incarnation gets an `Arc<AtomicU64>`
+//! it must bump (via the server's `tick` hook) with milliseconds since
+//! the supervisor epoch; an `Up` worker whose beat goes stale past the
+//! configured deadline is declared hung and torn down. Rust threads
+//! cannot be killed, so teardown *abandons* the incarnation: its
+//! request sender is dropped (the thread exits once it notices), its
+//! in-flight work is replayed elsewhere by the router, and any late
+//! exit event from the zombie is ignored by incarnation number.
+//!
+//! Crash detection is two-layered: the worker thread body wraps its
+//! engine in `catch_unwind` (a panic — e.g. an injected
+//! [`crate::backend::fault::FaultKind::Crash`] — becomes
+//! [`WorkerExit::Panicked`]) and a fatal engine error (`run` returning
+//! `Err`, never used for per-request trouble) escalates as
+//! [`WorkerExit::Fatal`]. Either way the slot backs off exponentially
+//! before respawning, and a circuit breaker retires it permanently
+//! after `breaker_crashes` crashes inside `breaker_window` — capacity
+//! shrinks instead of crash-looping forever.
+
+use super::{Request, ServeStats};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How one worker incarnation ended.
+#[derive(Debug)]
+pub enum WorkerExit {
+    /// The engine drained cleanly (its request channel disconnected);
+    /// the stats are collected for the cluster merge.
+    Clean(Box<ServeStats>),
+    /// The engine returned a fatal error — an invariant breach, not a
+    /// per-request failure (those are typed responses).
+    Fatal(String),
+    /// The worker thread panicked (injected `crash` fault or organic).
+    Panicked(String),
+}
+
+/// One worker-exit report on the supervisor's event channel.
+#[derive(Debug)]
+pub struct WorkerEvent {
+    pub worker: usize,
+    pub incarnation: u64,
+    pub exit: WorkerExit,
+}
+
+/// Everything a spawner needs to start one worker incarnation. The
+/// thread must bump `beat` (ms since `epoch`) while alive and send
+/// exactly one [`WorkerEvent`] carrying `incarnation` when it ends.
+pub struct WorkerSeed {
+    pub worker: usize,
+    pub incarnation: u64,
+    pub requests: Receiver<Request>,
+    pub beat: Arc<AtomicU64>,
+    pub epoch: Instant,
+    pub events: Sender<WorkerEvent>,
+}
+
+/// Spawns the OS thread for one incarnation. The cluster supplies
+/// this; backend handles are not `Send`, so the closure must build the
+/// worker's `Runtime` *inside* the thread.
+pub type WorkerSpawn = Box<dyn Fn(WorkerSeed) -> std::thread::JoinHandle<()>>;
+
+/// Supervision knobs.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// An `Up` worker whose heartbeat is older than this is declared
+    /// hung and torn down. Must comfortably exceed the worker's idle
+    /// block (`max_wait`) — the cluster clamps the worker wait to a
+    /// quarter of this.
+    pub heartbeat: Duration,
+    /// First respawn delay; doubles per crash in the sliding window,
+    /// capped at `backoff_max`.
+    pub backoff_base: Duration,
+    pub backoff_max: Duration,
+    /// Circuit breaker: this many crashes inside `breaker_window`
+    /// retire the worker permanently.
+    pub breaker_crashes: usize,
+    pub breaker_window: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            heartbeat: Duration::from_millis(200),
+            backoff_base: Duration::from_millis(10),
+            backoff_max: Duration::from_millis(500),
+            breaker_crashes: 3,
+            breaker_window: Duration::from_secs(10),
+        }
+    }
+}
+
+enum Health {
+    Up { tx: Sender<Request>, beat: Arc<AtomicU64>, spawned: Instant },
+    Backoff { until: Instant },
+    Retired,
+    /// Shutdown requested: the sender is dropped, the incarnation is
+    /// draining (or already gone).
+    Stopped,
+}
+
+struct WorkerSlot {
+    health: Health,
+    /// Incarnation number of the latest spawn; exit events from older
+    /// (abandoned) incarnations are ignored.
+    incarnation: u64,
+    /// Crash timestamps inside the breaker's sliding window.
+    crashes: VecDeque<Instant>,
+}
+
+/// The lifecycle manager: spawns incarnations, watches heartbeats,
+/// turns exits into backoff/retirement, and collects clean-exit stats.
+/// Request routing lives in [`super::cluster`]; the supervisor only
+/// says *which* workers are up and *when* one died.
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    spawn: WorkerSpawn,
+    slots: Vec<WorkerSlot>,
+    events_tx: Sender<WorkerEvent>,
+    events_rx: Receiver<WorkerEvent>,
+    epoch: Instant,
+    /// Stats of incarnations that drained cleanly.
+    pub finished: Vec<ServeStats>,
+    /// Incarnation deaths: panics, fatal errors, and missed heartbeats.
+    pub crashes: usize,
+    /// Respawns after backoff (the initial spawns don't count).
+    pub restarts: usize,
+    /// Last crash detail per worker (observability).
+    pub last_fault: Vec<Option<String>>,
+}
+
+impl Supervisor {
+    /// Spawn `n` workers (incarnation 1 each) and start supervising.
+    pub fn new(n: usize, cfg: SupervisorConfig, spawn: WorkerSpawn) -> Supervisor {
+        let (events_tx, events_rx) = channel();
+        let mut sup = Supervisor {
+            cfg,
+            spawn,
+            slots: Vec::new(),
+            events_tx,
+            events_rx,
+            epoch: Instant::now(),
+            finished: Vec::new(),
+            crashes: 0,
+            restarts: 0,
+            last_fault: vec![None; n],
+        };
+        for w in 0..n {
+            sup.slots.push(WorkerSlot {
+                health: Health::Backoff { until: sup.epoch },
+                incarnation: 0,
+                crashes: VecDeque::new(),
+            });
+            sup.respawn(w);
+        }
+        sup
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    fn respawn(&mut self, w: usize) {
+        let now = self.now_ms();
+        let slot = &mut self.slots[w];
+        slot.incarnation += 1;
+        let beat = Arc::new(AtomicU64::new(now));
+        let (tx, rx) = channel();
+        let seed = WorkerSeed {
+            worker: w,
+            incarnation: slot.incarnation,
+            requests: rx,
+            beat: beat.clone(),
+            epoch: self.epoch,
+            events: self.events_tx.clone(),
+        };
+        slot.health = Health::Up { tx, beat, spawned: Instant::now() };
+        // The handle is dropped on purpose: incarnations are reaped
+        // through the event channel (a hung one can never be joined).
+        let _ = (self.spawn)(seed);
+    }
+
+    /// The request sender of worker `w`, if it is up.
+    pub fn sender(&self, w: usize) -> Option<&Sender<Request>> {
+        match &self.slots[w].health {
+            Health::Up { tx, .. } => Some(tx),
+            _ => None,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Worker ids currently up (spawned and not known-dead).
+    pub fn up(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&w| self.sender(w).is_some()).collect()
+    }
+
+    pub fn retired(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s.health, Health::Retired)).count()
+    }
+
+    /// True once every worker is retired — the cluster's terminal
+    /// no-capacity state (nothing is backing off toward a respawn).
+    pub fn all_retired(&self) -> bool {
+        self.slots.iter().all(|s| matches!(s.health, Health::Retired))
+    }
+
+    /// One supervision pass: reap exit events, declare hung workers
+    /// dead, respawn slots whose backoff elapsed. Returns the workers
+    /// whose live incarnation died in this pass — the router must
+    /// replay their in-flight requests.
+    pub fn poll(&mut self) -> Vec<usize> {
+        let mut died = Vec::new();
+        while let Ok(ev) = self.events_rx.try_recv() {
+            let slot = &mut self.slots[ev.worker];
+            if ev.incarnation != slot.incarnation {
+                continue; // zombie: an incarnation abandoned after a hang
+            }
+            match ev.exit {
+                WorkerExit::Clean(stats) => {
+                    // Clean exits only happen after a teardown dropped
+                    // the sender; a slot no longer Up was abandoned as
+                    // hung and its work replayed — don't let the zombie
+                    // revive it or double-count its stats.
+                    if matches!(slot.health, Health::Up { .. }) {
+                        self.finished.push(*stats);
+                        slot.health = Health::Stopped;
+                    }
+                }
+                WorkerExit::Fatal(detail) | WorkerExit::Panicked(detail) => {
+                    if matches!(slot.health, Health::Up { .. }) {
+                        self.last_fault[ev.worker] = Some(detail);
+                        self.note_crash(ev.worker);
+                        died.push(ev.worker);
+                    }
+                }
+            }
+        }
+        // Heartbeat sweep: an Up worker whose beat is stale past the
+        // deadline is hung — abandon it and replay its work.
+        let now = self.now_ms();
+        for w in 0..self.slots.len() {
+            let hung = match &self.slots[w].health {
+                Health::Up { beat, spawned, .. } => {
+                    spawned.elapsed() > self.cfg.heartbeat
+                        && now.saturating_sub(beat.load(Ordering::Relaxed))
+                            > self.cfg.heartbeat.as_millis() as u64
+                }
+                _ => false,
+            };
+            if hung {
+                self.last_fault[w] =
+                    Some(format!("missed heartbeat deadline of {:?}", self.cfg.heartbeat));
+                self.note_crash(w);
+                died.push(w);
+            }
+        }
+        // Respawns whose backoff elapsed.
+        for w in 0..self.slots.len() {
+            if matches!(&self.slots[w].health, Health::Backoff { until } if *until <= Instant::now())
+            {
+                self.restarts += 1;
+                self.respawn(w);
+            }
+        }
+        died
+    }
+
+    /// Account one incarnation death: slide the breaker window, retire
+    /// at the threshold, otherwise schedule an exponential-backoff
+    /// respawn. Dropping the `Up` sender here is the teardown — the
+    /// (possibly still running) thread exits once it notices.
+    fn note_crash(&mut self, w: usize) {
+        self.crashes += 1;
+        let window = self.cfg.breaker_window;
+        let slot = &mut self.slots[w];
+        let now = Instant::now();
+        slot.crashes.push_back(now);
+        while slot.crashes.front().is_some_and(|&t| now.duration_since(t) > window) {
+            slot.crashes.pop_front();
+        }
+        if slot.crashes.len() >= self.cfg.breaker_crashes.max(1) {
+            slot.health = Health::Retired;
+        } else {
+            let exp = (slot.crashes.len().saturating_sub(1)).min(16) as u32;
+            let delay = self
+                .cfg
+                .backoff_base
+                .saturating_mul(2u32.saturating_pow(exp))
+                .min(self.cfg.backoff_max);
+            slot.health = Health::Backoff { until: now + delay };
+        }
+    }
+
+    /// Tear the cluster down: drop every live sender, then wait up to
+    /// `timeout` for the draining incarnations to report their final
+    /// stats (a hung worker that never reports is simply abandoned).
+    pub fn shutdown(mut self, timeout: Duration) -> SupervisorReport {
+        let mut awaiting: Vec<Option<u64>> = vec![None; self.slots.len()];
+        for (w, slot) in self.slots.iter_mut().enumerate() {
+            if matches!(slot.health, Health::Up { .. }) {
+                awaiting[w] = Some(slot.incarnation);
+                slot.health = Health::Stopped; // drops the sender
+            }
+        }
+        let deadline = Instant::now() + timeout;
+        let mut open = awaiting.iter().filter(|a| a.is_some()).count();
+        while open > 0 {
+            let now = Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                break;
+            };
+            let Ok(ev) = self.events_rx.recv_timeout(left) else { break };
+            if awaiting[ev.worker] != Some(ev.incarnation) {
+                continue;
+            }
+            awaiting[ev.worker] = None;
+            open -= 1;
+            match ev.exit {
+                WorkerExit::Clean(stats) => self.finished.push(*stats),
+                WorkerExit::Fatal(detail) | WorkerExit::Panicked(detail) => {
+                    // Full crash accounting (breaker window included):
+                    // a final crash racing the drain must still count
+                    // toward retirement, or `retired` under-reports.
+                    self.last_fault[ev.worker] = Some(detail);
+                    self.note_crash(ev.worker);
+                }
+            }
+        }
+        SupervisorReport {
+            finished: self.finished,
+            crashes: self.crashes,
+            restarts: self.restarts,
+            retired: self
+                .slots
+                .iter()
+                .filter(|s| matches!(s.health, Health::Retired))
+                .count(),
+            last_fault: self.last_fault,
+        }
+    }
+}
+
+/// What supervision saw over one cluster run.
+#[derive(Debug, Default)]
+pub struct SupervisorReport {
+    /// Final stats of every cleanly drained incarnation.
+    pub finished: Vec<ServeStats>,
+    pub crashes: usize,
+    pub restarts: usize,
+    pub retired: usize,
+    pub last_fault: Vec<Option<String>>,
+}

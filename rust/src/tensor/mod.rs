@@ -214,6 +214,13 @@ impl TensorStore {
     }
 
     /// Persist to `dir/index.json` + `dir/<mangled>.bin`.
+    ///
+    /// Every file is written to a sibling temp file and `rename`d into
+    /// place (atomic within a directory), so a crash mid-save leaves
+    /// the previous version intact, never a truncated blob; and each
+    /// entry records an FNV-1a checksum of its blob bytes that
+    /// [`TensorStore::load`] verifies — a half-written compress/heal
+    /// checkpoint can never load as silently wrong weights.
     pub fn save(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let mut index = JsonObj::new();
@@ -225,7 +232,9 @@ impl TensorStore {
         let mut entries = JsonObj::new();
         for (name, t) in &self.tensors {
             let file = format!("{}.bin", mangle(name));
-            std::fs::File::create(dir.join(&file))?.write_all(&t.to_bytes())?;
+            let bytes = t.to_bytes();
+            write_atomic(dir, &file, &bytes)
+                .with_context(|| format!("tensor '{name}': writing {file}"))?;
             let mut e = JsonObj::new();
             e.insert("file", Json::Str(file));
             e.insert("dtype", Json::Str(t.dtype().tag().to_string()));
@@ -233,10 +242,15 @@ impl TensorStore {
                 "shape",
                 Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
             );
+            // Hex string, not Json::Num: the full u64 range does not
+            // survive an f64 round-trip.
+            e.insert("fnv1a64", Json::Str(format!("{:016x}", fnv1a64(&bytes))));
             entries.insert(name.clone(), Json::Obj(e));
         }
         index.insert("tensors", Json::Obj(entries));
-        std::fs::write(dir.join("index.json"), Json::Obj(index).to_string_pretty())?;
+        // The index goes last, atomically too: it only ever names blobs
+        // that are already fully on disk.
+        write_atomic(dir, "index.json", Json::Obj(index).to_string_pretty().as_bytes())?;
         Ok(())
     }
 
@@ -282,6 +296,23 @@ impl TensorStore {
             std::fs::File::open(dir.join(file))
                 .with_context(|| format!("tensor '{name}': cannot open {file}"))?
                 .read_to_end(&mut bytes)?;
+            // Verify the recorded checksum before trusting the bytes.
+            // Stores written before checksums existed carry no
+            // `fnv1a64` entry and still load.
+            if let Some(sum) = e.at(&["fnv1a64"]).and_then(|s| s.as_str()) {
+                let expected = u64::from_str_radix(sum, 16).with_context(|| {
+                    format!("tensor '{name}': malformed checksum '{sum}' in index.json")
+                })?;
+                let actual = fnv1a64(&bytes);
+                if actual != expected {
+                    return Err(anyhow::Error::new(StoreCorruption {
+                        name: name.to_string(),
+                        file: file.to_string(),
+                        expected,
+                        actual,
+                    }));
+                }
+            }
             store.insert(
                 name,
                 Tensor::from_bytes(shape, dtype, &bytes)
@@ -290,6 +321,55 @@ impl TensorStore {
         }
         Ok(store)
     }
+}
+
+/// The typed error [`TensorStore::load`] raises when a blob's bytes do
+/// not hash to the checksum its `index.json` entry records — corruption
+/// (truncation, bit rot, a concurrent writer) detected before the
+/// tensor can be used. Downcast from the anyhow chain to branch on it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreCorruption {
+    pub name: String,
+    pub file: String,
+    pub expected: u64,
+    pub actual: u64,
+}
+
+impl std::fmt::Display for StoreCorruption {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tensor '{}' is corrupt: {} hashes to {:016x}, index records {:016x}",
+            self.name, self.file, self.actual, self.expected
+        )
+    }
+}
+
+impl std::error::Error for StoreCorruption {}
+
+/// FNV-1a, 64-bit — the store's blob checksum. Not cryptographic;
+/// chosen because it is tiny, dependency-free, and byte-order stable.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write `bytes` to `dir/file` via a sibling temp file + `rename`.
+/// Readers only ever observe a complete file; a crash between the two
+/// steps leaves at worst an orphaned `.tmp` next to the intact old
+/// version (the checksum in the index catches anything subtler).
+fn write_atomic(dir: &Path, file: &str, bytes: &[u8]) -> Result<()> {
+    let tmp = dir.join(format!("{file}.tmp"));
+    std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?
+        .write_all(bytes)?;
+    std::fs::rename(&tmp, dir.join(file))
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
 }
 
 /// Filesystem-safe, *injective* name mangling. Alphanumerics and '-' pass
@@ -419,5 +499,57 @@ mod tests {
         std::fs::write(dir.join("w.bin"), [0u8; 3]).unwrap();
         assert!(TensorStore::load(&dir).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn save_leaves_no_temp_files_and_records_checksums() {
+        let dir =
+            std::env::temp_dir().join(format!("curing_atomic_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = TensorStore::new();
+        s.insert("w", Tensor::from_f32(&[2], vec![1.0, 2.0]));
+        s.save(&dir).unwrap();
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            let name = name.to_string_lossy().to_string();
+            assert!(!name.ends_with(".tmp"), "stray temp file {name} after save");
+        }
+        let index = std::fs::read_to_string(dir.join("index.json")).unwrap();
+        assert!(index.contains("fnv1a64"), "index records no checksums:\n{index}");
+        // Saving over an existing store replaces files in place.
+        s.save(&dir).unwrap();
+        assert_eq!(TensorStore::load(&dir).unwrap().get("w").unwrap(), s.get("w").unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_blob_fails_load_with_typed_error() {
+        let dir =
+            std::env::temp_dir().join(format!("curing_corrupt_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = TensorStore::new();
+        s.insert("w", Tensor::from_f32(&[3], vec![1.0, 2.0, 3.0]));
+        s.save(&dir).unwrap();
+        // Flip one byte of the blob, keeping its length valid — only
+        // the checksum can catch this.
+        let blob = dir.join(format!("{}.bin", mangle("w")));
+        let mut bytes = std::fs::read(&blob).unwrap();
+        bytes[1] ^= 0x40;
+        std::fs::write(&blob, &bytes).unwrap();
+        let err = TensorStore::load(&dir).unwrap_err();
+        let corrupt = err
+            .downcast_ref::<StoreCorruption>()
+            .unwrap_or_else(|| panic!("expected StoreCorruption, got: {err:#}"));
+        assert_eq!(corrupt.name, "w");
+        assert_ne!(corrupt.expected, corrupt.actual);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 }

@@ -48,6 +48,7 @@ fn server<'p>(
         kv_policy: KvPolicy::Exact,
         deadline: None,
         queue_cap: 0,
+        tick: None,
     }
 }
 

@@ -1,0 +1,372 @@
+//! Cluster suite: the supervised multi-worker server under worker
+//! crashes, hangs, circuit-breaker retirement and graceful drain.
+//! Replayed requests must stay bit-identical to the cache-free oracle,
+//! dead capacity must turn into typed errors instead of hangs, and a
+//! drained cluster must merge every worker's stats.
+//!
+//! All tests are named `cluster_*` so the nightly ThreadSanitizer lane
+//! can select them alongside the serve/kv/chaos suites.
+
+use curing::backend::fault::{
+    mute_injected_crash_reports, FaultPlan, FaultSite, FaultyBackend, InjectedCrash,
+};
+use curing::backend::native::NativeBackend;
+use curing::backend::Backend;
+use curing::model::ModelConfig;
+use curing::pipeline::{LayerPlan, Pipeline};
+use curing::runtime::Runtime;
+use curing::serve::{ClusterServer, GenRequest, GenResponse, Request, ServeError, ServeStats};
+use curing::tensor::{Tensor, TensorStore};
+use curing::util::Rng;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The shared store every test serves: the mini config's dense init at
+/// a fixed seed, so cluster workers and the clean oracle runtime see
+/// identical weights.
+fn mini_store() -> (ModelConfig, Arc<TensorStore>) {
+    let rt = Runtime::native();
+    let cfg = ModelConfig::from_manifest(rt.manifest(), "mini").expect("mini config");
+    let mut rng = Rng::new(31, 0);
+    let store = cfg.init_dense(&mut rng);
+    (cfg, Arc::new(store))
+}
+
+/// A test-sized cluster: 1 KV slot per worker, fast supervision knobs.
+fn cluster(cfg: &ModelConfig, store: &Arc<TensorStore>, workers: usize) -> ClusterServer {
+    let mut c = ClusterServer::new(cfg.clone(), store.clone(), LayerPlan::all_dense(cfg), workers);
+    c.slots = 1;
+    c.max_wait = Duration::from_millis(5);
+    c.backoff_base = Duration::from_millis(1);
+    c.backoff_max = Duration::from_millis(20);
+    c
+}
+
+/// A worker-runtime factory where worker 0 always crashes at `site` and
+/// every other worker is clean.
+fn crashy_worker_zero(site: &str) -> curing::serve::WorkerRuntime {
+    let spec = format!("seed=1;{site}=1.0:crash");
+    Arc::new(move |w| {
+        if w == 0 {
+            Ok(Runtime::native().with_faults(FaultPlan::parse(&spec)?))
+        } else {
+            Ok(Runtime::native())
+        }
+    })
+}
+
+fn gen_request(prompt: Vec<i32>, n_new: usize) -> (Request, Receiver<GenResponse>) {
+    let (rtx, rrx) = channel::<GenResponse>();
+    let req = Request::Generate(GenRequest {
+        prompt,
+        n_new,
+        enqueued: Instant::now(),
+        deadline: None,
+        respond: rtx,
+    });
+    (req, rrx)
+}
+
+fn test_prompts(n: usize) -> Vec<Vec<i32>> {
+    (0..n as i32).map(|i| (0..3 + (i % 4)).map(|j| (13 * i + 7 * j + 1) % 384).collect()).collect()
+}
+
+/// Oracle token streams: cache-free greedy decode on a clean runtime.
+fn oracle(cfg: &ModelConfig, store: &TensorStore, prompts: &[Vec<i32>], n_new: usize) -> Vec<Vec<i32>> {
+    let rt = Runtime::native();
+    let pipe = Pipeline { rt: &rt, cfg: cfg.clone() };
+    let plan = LayerPlan::all_dense(cfg);
+    prompts
+        .iter()
+        .map(|p| {
+            pipe.generate_greedy_uncached(store, &plan, &[p.clone()], n_new).unwrap().remove(0)
+        })
+        .collect()
+}
+
+/// The `crash` action round-trips through the fault grammar and raises
+/// a downcastable [`InjectedCrash`] panic payload at the armed site.
+#[test]
+fn cluster_crash_fault_grammar_and_payload() {
+    let plan = FaultPlan::parse("seed=5;decode=0.01:crash").unwrap();
+    let shown = plan.to_string();
+    assert!(shown.contains("crash"), "Display must name the crash action: {shown}");
+    let reparsed = FaultPlan::parse(&shown).unwrap();
+    assert_eq!(reparsed.to_string(), shown, "grammar must round-trip");
+
+    mute_injected_crash_reports();
+    let (cfg, store) = mini_store();
+    let x = Tensor::from_f32(&[1, 1, cfg.d_model], vec![0.25; cfg.d_model]);
+    let ln_f = store.get("ln_f").unwrap().clone();
+    let emb = store.get("emb").unwrap().clone();
+    let fb = FaultyBackend::new(
+        Box::new(NativeBackend::new()),
+        FaultPlan::parse("seed=5;head=1.0:crash").unwrap(),
+    );
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        fb.head_logits(&cfg, &x, &ln_f, &emb)
+    }));
+    let payload = caught.expect_err("an armed crash rule must panic");
+    let crash = payload
+        .downcast_ref::<InjectedCrash>()
+        .expect("crash payload must downcast to InjectedCrash");
+    assert_eq!(crash.site, FaultSite::Head);
+    assert_eq!(crash.seq, 1);
+}
+
+/// The chaos centerpiece: worker 0 panics on every prefill (the
+/// injected `crash` action), worker 1 is clean. Every request must
+/// still succeed — replayed onto healthy capacity — with a token
+/// stream bit-identical to the cache-free oracle, while the supervisor
+/// respawns worker 0 with backoff and finally retires it via the
+/// circuit breaker.
+#[test]
+fn cluster_crash_replay_matches_cachefree_oracle() {
+    let (cfg, store) = mini_store();
+    let n_new = 4usize;
+    let prompts = test_prompts(12);
+    let mut c = cluster(&cfg, &store, 2);
+    c.factory = crashy_worker_zero("prefill");
+    c.breaker_crashes = 2;
+    // Generous budget: a replay may land on worker 0's next (equally
+    // doomed) incarnation before the breaker retires it.
+    c.retry_budget = 10;
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for p in &prompts {
+        let (req, rrx) = gen_request(p.clone(), n_new);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    drop(tx);
+    let stats = c.run(rx).unwrap();
+    let want = oracle(&cfg, &store, &prompts, n_new);
+    for ((p, rrx), want) in prompts.iter().zip(resp_rxs).zip(want) {
+        let resp = rrx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.error, None, "request {p:?} must survive worker crashes");
+        assert_eq!(
+            resp.tokens, want,
+            "replayed request {p:?} diverged from the cache-free oracle"
+        );
+    }
+    assert_eq!(stats.gen_served, prompts.len());
+    assert_eq!(stats.tokens_generated, prompts.len() * n_new);
+    assert!(stats.worker_crashes >= 2, "worker 0 must crash at least twice: {stats:?}");
+    assert!(stats.worker_restarts >= 1, "worker 0 must respawn after backoff: {stats:?}");
+    assert!(stats.retried_requests >= 1, "crashed dispatches must be replayed: {stats:?}");
+    assert_eq!(stats.retired_workers, 1, "the breaker must retire worker 0: {stats:?}");
+}
+
+/// Circuit breaker on the last worker: a crash-looping single worker is
+/// respawned with backoff, retired after `breaker_crashes` crashes, and
+/// the cluster answers everything left with typed errors — the
+/// all-retired terminal path never hangs.
+#[test]
+fn cluster_breaker_retirement_drains_typed_instead_of_hanging() {
+    let (cfg, store) = mini_store();
+    let mut c = cluster(&cfg, &store, 1);
+    c.factory = crashy_worker_zero("prefill");
+    c.breaker_crashes = 2;
+    c.retry_budget = 1;
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for p in test_prompts(3) {
+        let (req, rrx) = gen_request(p, 3);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    drop(tx);
+    let stats = c.run(rx).unwrap();
+    assert_eq!(stats.worker_crashes, 2, "breaker fires at exactly 2 crashes: {stats:?}");
+    assert_eq!(stats.worker_restarts, 1, "one respawn between the two crashes: {stats:?}");
+    assert_eq!(stats.retired_workers, 1, "the only worker must retire: {stats:?}");
+    assert!(stats.retried_requests >= 1, "in-flight work must be replayed: {stats:?}");
+    for (i, rrx) in resp_rxs.into_iter().enumerate() {
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        match resp.error {
+            Some(ServeError::AllWorkersRetired { retired }) => assert_eq!(retired, 1),
+            Some(ServeError::RetriesExhausted { attempts }) => {
+                assert!(attempts >= 2, "exhaustion implies at least one replay")
+            }
+            other => panic!("request {i} must fail typed on a dead cluster, got {other:?}"),
+        }
+        assert!(resp.tokens.is_empty());
+    }
+}
+
+/// Requests arriving after every worker retired are shed at intake with
+/// the typed terminal error (not queued onto capacity that will never
+/// come back).
+#[test]
+fn cluster_all_retired_sheds_new_arrivals() {
+    let (cfg, store) = mini_store();
+    let mut c = cluster(&cfg, &store, 1);
+    c.factory = crashy_worker_zero("prefill");
+    c.breaker_crashes = 1; // first crash retires the only worker
+    c.retry_budget = 0;
+    let (tx, rx) = channel::<Request>();
+    let (req, rrx) = gen_request(vec![1, 2, 3], 3);
+    tx.send(req).unwrap();
+    // A client that keeps submitting while the cluster dies: the late
+    // requests must come back typed, never hang the intake loop.
+    let late = std::thread::spawn(move || {
+        let mut rxs = Vec::new();
+        for i in 0..20 {
+            let (req, rrx) = gen_request(vec![4 + i, 5, 6], 3);
+            if tx.send(req).is_err() {
+                break;
+            }
+            rxs.push(rrx);
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        rxs
+    });
+    let stats = c.run(rx).unwrap();
+    assert_eq!(stats.retired_workers, 1);
+    assert_eq!(stats.worker_restarts, 0, "breaker at 1 leaves no room for a respawn");
+    let first = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(
+        matches!(
+            first.error,
+            Some(ServeError::AllWorkersRetired { .. }) | Some(ServeError::RetriesExhausted { .. })
+        ),
+        "the crashed request must fail typed, got {:?}",
+        first.error
+    );
+    let mut terminal = 0usize;
+    for rrx in late.join().unwrap() {
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_ne!(resp.error, None, "no request can succeed on a fully retired cluster");
+        if matches!(resp.error, Some(ServeError::AllWorkersRetired { .. })) {
+            terminal += 1;
+        }
+    }
+    assert!(terminal >= 1, "at least one late arrival must see the terminal error");
+}
+
+/// A hung worker (every decode stalls far past the heartbeat deadline)
+/// is detected by liveness, abandoned, and its in-flight request is
+/// replayed on the healthy worker — the response still matches the
+/// oracle bit-for-bit.
+#[test]
+fn cluster_hung_worker_detected_and_work_replayed() {
+    let (cfg, store) = mini_store();
+    let n_new = 2usize;
+    let prompts = test_prompts(4);
+    let mut c = cluster(&cfg, &store, 2);
+    c.heartbeat = Duration::from_millis(50);
+    c.breaker_crashes = 2;
+    c.retry_budget = 6;
+    // Worker 0 sleeps 250 ms on every decode call — 5× the heartbeat
+    // deadline; worker 1 is clean.
+    c.factory = Arc::new(|w| {
+        if w == 0 {
+            Ok(Runtime::native().with_faults(FaultPlan::parse("seed=1;decode=1.0:delay250")?))
+        } else {
+            Ok(Runtime::native())
+        }
+    });
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for p in &prompts {
+        let (req, rrx) = gen_request(p.clone(), n_new);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    drop(tx);
+    let stats = c.run(rx).unwrap();
+    assert!(
+        stats.worker_crashes >= 1,
+        "the stalled worker must miss its heartbeat: {stats:?}"
+    );
+    assert!(stats.retried_requests >= 1, "the hung worker's request must replay: {stats:?}");
+    let want = oracle(&cfg, &store, &prompts, n_new);
+    for ((p, rrx), want) in prompts.iter().zip(resp_rxs).zip(want) {
+        let resp = rrx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.error, None, "request {p:?} must survive the hang");
+        assert_eq!(resp.tokens, want, "replayed request {p:?} diverged from the oracle");
+    }
+}
+
+/// Graceful cluster drain: [`Request::Shutdown`] finishes accepted
+/// work, sheds later arrivals typed, reports merged stats on the
+/// shutdown channel, and the merge carries the workers' machine-level
+/// counters (prefills, decode steps) alongside the router's
+/// request-level ones.
+#[test]
+fn cluster_graceful_drain_merges_worker_stats() {
+    let (cfg, store) = mini_store();
+    let n_new = 3usize;
+    let prompts = test_prompts(4);
+    let c = cluster(&cfg, &store, 2);
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for p in &prompts {
+        let (req, rrx) = gen_request(p.clone(), n_new);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    let (stx, srx) = channel::<ServeStats>();
+    tx.send(Request::Shutdown(stx)).unwrap();
+    let (late_req, late_rx) = gen_request(vec![9, 8, 7], n_new);
+    tx.send(late_req).unwrap();
+    // tx stays alive: the exit below is the drain, not a disconnect.
+    let stats = c.run(rx).unwrap();
+    drop(tx);
+    assert_eq!(stats.gen_served, prompts.len());
+    assert_eq!(stats.tokens_generated, prompts.len() * n_new);
+    assert_eq!(stats.rejected, 1, "the post-shutdown arrival is shed");
+    assert_eq!(stats.worker_crashes, 0);
+    assert_eq!(stats.worker_restarts, 0);
+    assert_eq!(stats.retired_workers, 0);
+    // Machine-level counters exist only inside the workers — their
+    // presence proves the clean-exit stats merged into the total.
+    assert_eq!(stats.prefills, prompts.len(), "one prefill per request, merged from workers");
+    assert!(stats.decode_steps > 0, "decode steps merge from worker stats");
+    for rrx in resp_rxs {
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.error, None);
+        assert_eq!(resp.tokens.len(), n_new);
+    }
+    let late = late_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(late.error, Some(ServeError::ShuttingDown));
+    let reported = srx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(reported.gen_served, stats.gen_served);
+    assert_eq!(reported.tokens_generated, stats.tokens_generated);
+    assert_eq!(reported.prefills, stats.prefills);
+    assert_eq!(reported.rejected, stats.rejected);
+}
+
+/// Two clean workers split a batch of requests (least-outstanding
+/// dispatch), every stream matches the oracle, and nothing crashes or
+/// retries — the supervised path costs no correctness on the happy
+/// path.
+#[test]
+fn cluster_clean_run_matches_oracle_with_no_supervision_events() {
+    let (cfg, store) = mini_store();
+    let n_new = 4usize;
+    let prompts = test_prompts(6);
+    let c = cluster(&cfg, &store, 2);
+    let (tx, rx) = channel::<Request>();
+    let mut resp_rxs = Vec::new();
+    for p in &prompts {
+        let (req, rrx) = gen_request(p.clone(), n_new);
+        tx.send(req).unwrap();
+        resp_rxs.push(rrx);
+    }
+    drop(tx);
+    let stats = c.run(rx).unwrap();
+    let want = oracle(&cfg, &store, &prompts, n_new);
+    for ((p, rrx), want) in prompts.iter().zip(resp_rxs).zip(want) {
+        let resp = rrx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.error, None);
+        assert_eq!(resp.tokens, want, "clean cluster run diverged from the oracle for {p:?}");
+    }
+    assert_eq!(stats.gen_served, prompts.len());
+    assert_eq!(stats.worker_crashes, 0);
+    assert_eq!(stats.worker_restarts, 0);
+    assert_eq!(stats.retried_requests, 0);
+    assert_eq!(stats.retired_workers, 0);
+    assert_eq!(stats.prefills, prompts.len());
+}

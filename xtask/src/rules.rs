@@ -7,6 +7,10 @@
 //!   kept swept). `#[cfg(test)]` code is exempt. `expect` only fires
 //!   when called with a string-literal message — `self.expect(b'{')`
 //!   in the JSON parser is a fallible method, not `Option::expect`.
+//!   `panic_any(...)` and `catch_unwind(...)` also fire: panic
+//!   boundaries exist only at the fault injector (the `crash` action)
+//!   and the cluster supervisor, and each use carries a reasoned
+//!   pragma naming its boundary.
 //! * `float-sort` — `sort_by` / `sort_unstable_by` / `max_by` / `min_by`
 //!   must order through `total_cmp`, `Ord::cmp`, or the shared
 //!   `util::stats::nan_last_*` keys (the wanda NaN-panic audit,
@@ -164,6 +168,18 @@ pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
         }
         if PANIC_MACROS.contains(&t.text.as_str()) && text(nxt) == "!" {
             push("panic", t.line, t.col, format!("`{}!` in library code", t.text));
+        }
+        // Panic boundaries: raising one (`panic_any`, the injected
+        // `crash` fault) or catching one (`catch_unwind`, the cluster
+        // supervisor) is infrastructure territory — each use carries a
+        // reasoned pragma saying whose boundary it is.
+        if (t.text == "panic_any" || t.text == "catch_unwind") && text(nxt) == "(" {
+            push(
+                "panic",
+                t.line,
+                t.col,
+                format!("`{}` is a panic boundary; justify it with a pragma", t.text),
+            );
         }
 
         // ---- float-sort

@@ -43,6 +43,24 @@ fn panic_family_macros_fire() {
 }
 
 #[test]
+fn panic_boundaries_fire() {
+    let src = "fn f() {\n\
+               std::panic::panic_any(Crash { seq });\n\
+               let r = std::panic::catch_unwind(|| work());\n\
+               }\n";
+    assert_eq!(rules_at(LIB, src), vec![("panic".into(), 2), ("panic".into(), 3)]);
+}
+
+#[test]
+fn pragma_justifies_panic_boundaries() {
+    let src = "// curlint: allow(panic) -- crash injection; caught at the supervisor boundary\n\
+               fn f() { std::panic::panic_any(Crash { seq }); }\n\
+               // curlint: allow(panic) -- supervisor crash boundary\n\
+               fn g() { let _ = std::panic::catch_unwind(|| work()); }\n";
+    assert!(rules_at(LIB, src).is_empty());
+}
+
+#[test]
 fn fallible_expect_method_is_not_option_expect() {
     // The JSON parser's own `fn expect(&mut self, b: u8) -> Result<…>`:
     // a byte-char argument is not a panic message.
