@@ -1,42 +1,23 @@
-//! Benchmark + experiment harness: regenerates every table and figure of
-//! the paper's evaluation (see DESIGN.md §4 for the index), plus micro-
-//! benchmarks of the hot paths.
+//! Thin driver over the perf-barometer harness (`harness/`): named
+//! workload models with units land in the v2 recorded-run file
+//! `BENCH_native.json`; the paper's table/figure reproductions print.
 //!
 //! Usage:
-//!   cargo bench                 # everything (moderate sizes)
-//!   cargo bench -- t1 f4        # subset
-//!   CURING_BENCH_FAST=1 cargo bench   # smoke sizes
+//!   cargo bench                      # everything (moderate sizes)
+//!   cargo bench -- workloads         # every recorded workload model
+//!   cargo bench -- kv_cur t1         # subset (workloads and/or tables)
+//!   CURING_BENCH_FAST=1 cargo bench  # quick mode (smoke sizes)
 //!
 //! Shapes (who wins, scaling direction, crossovers) are the reproduction
 //! target — absolute numbers differ from the paper's H100/8B setup by
-//! design (see DESIGN.md §2).
+//! design (see DESIGN.md §2). Compare runs with
+//! `cargo xtask bench-diff <old.json> <new.json>`.
+
+mod harness;
 
 use anyhow::Result;
-use curing::backend::native::math;
-use curing::backend::KvPolicy;
-use curing::calib::Calibration;
-use curing::compress::{CompressOptions, LayerStrategy};
-use curing::coordinator::{default_pretrain_steps, Ctx, EvalSizes};
-use curing::cur;
-use curing::data::{self, Corpus, CorpusKind, TrainItem};
-use curing::eval;
-use curing::heal::{heal_layers, HealOptions, StepMode, SwitchedRunner};
-use curing::linalg::{jacobi_svd, rand_svd, Mat};
-use curing::model::ModelConfig;
-use curing::peft::{init_adapters, trainable_params, Adapter};
-use curing::pipeline::{LayerKind, LayerPlan, Pipeline};
-use curing::serve::{spawn_gen_clients, ClusterServer, GenerationServer, Request};
-use curing::tensor::{Tensor, TensorStore};
-use curing::util::bench::{BenchResult, Bencher};
-use curing::util::stats::mib;
-use curing::util::{Json, JsonObj, Rng};
-use curing::wanda::Selector;
-use std::sync::mpsc::channel;
-use std::time::Duration;
-
-fn fast() -> bool {
-    curing::util::config::bench_fast()
-}
+use curing::coordinator::{default_pretrain_steps, Ctx};
+use harness::{run_workloads, tables, workload_specs, BenchCtx};
 
 fn main() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -46,1120 +27,80 @@ fn main() -> Result<()> {
     }
     let filters: Vec<String> =
         raw.into_iter().filter(|a| !a.starts_with('-') && a != "bench").collect();
-    let all = [
-        "micro", "serve", "kv_cur", "t1", "t2", "t3", "f4", "f5", "f6", "f7", "f10", "t4",
-        "t5", "t6",
-    ];
-    let selected: Vec<&str> = if filters.is_empty() {
-        all.to_vec()
-    } else {
+
+    let workload_names: Vec<&str> = workload_specs().iter().map(|s| s.name).collect();
+    let table_names: Vec<&str> = tables::table_specs().iter().map(|s| s.name).collect();
+    for f in &filters {
+        let known = f == "workloads"
+            || f == "tables"
+            || workload_names.contains(&f.as_str())
+            || table_names.contains(&f.as_str());
+        anyhow::ensure!(known, "unknown bench target '{f}' (try --help)");
+    }
+    let pick = |all: &[&'static str], group: &str| -> Vec<&'static str> {
+        if filters.is_empty() || filters.iter().any(|f| f == group) {
+            return all.to_vec();
+        }
         all.iter().copied().filter(|n| filters.iter().any(|f| f == n)).collect()
     };
+    let selected_workloads = pick(&workload_names, "workloads");
+    let selected_tables = pick(&table_names, "tables");
+
+    let quick = curing::util::config::bench_fast();
     let ctx = Ctx::new()?;
-    let pipe = ctx.pipeline("tiny")?;
     let dense = ctx.load_or_pretrain("tiny", default_pretrain_steps())?;
+    let pipe = ctx.pipeline("tiny")?;
     let calib = ctx.calibrate_cached(&pipe, &dense, 128)?;
-    // The PEFT-comparison benches (f5/f6/f7) run the switched full-model
-    // graphs natively — no artifacts, no skips, on every backend.
-    for name in selected {
-        println!("\n════════ bench {name} ════════");
-        let t0 = std::time::Instant::now();
-        match name {
-            "micro" => micro(&ctx, &pipe, &dense)?,
-            "serve" => serve_bench(&ctx)?,
-            "kv_cur" => kv_cur_bench(&ctx)?,
-            "t1" => t1(&ctx, &pipe, &dense, &calib)?,
-            "t2" => t2(&ctx, &pipe, &dense, &calib)?,
-            "t3" => t3(&ctx, &pipe, &dense, &calib)?,
-            "f4" => f4(&ctx, &pipe, &dense, &calib)?,
-            "f5" => f5(&ctx, &pipe, &dense, &calib)?,
-            "f6" => f6(&ctx, &pipe, &dense, &calib)?,
-            "f7" => f7(&ctx, &pipe, &dense, &calib)?,
-            "f10" => f10(&ctx, &pipe, &dense)?,
-            "t4" => t4(&ctx, &pipe, &dense, &calib)?,
-            "t5" => t5(&ctx, &pipe, &dense, &calib)?,
-            "t6" => t6(&ctx, &pipe, &dense, &calib)?,
-            _ => unreachable!(),
+    let b = BenchCtx::new(&ctx, quick, dense, calib)?;
+
+    if !selected_workloads.is_empty() {
+        let run = run_workloads(&b, &selected_workloads)?;
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json");
+        run.merge_into(&path)?;
+        println!("\nwrote {}", path.display());
+    }
+    for spec in tables::table_specs() {
+        if !selected_tables.contains(&spec.name) {
+            continue;
         }
-        println!("──── {name} done in {:.1}s", t0.elapsed().as_secs_f64());
+        println!("\n════════ table {} ════════", spec.name);
+        println!("{}", spec.about);
+        let t0 = std::time::Instant::now();
+        (spec.run)(&b)?;
+        println!("──── {} done in {:.1}s", spec.name, t0.elapsed().as_secs_f64());
     }
     Ok(())
 }
 
 fn print_usage() {
     println!(
-        "curing bench harness — regenerates the paper's tables/figures.
+        "curing perf barometer — named workload models + the paper's tables.
 
 USAGE: cargo bench [-- name ...]
-  names: micro serve kv_cur t1 t2 t3 f4 f5 f6 f7 f10 t4 t5 t6 (default: all)
-  f5/f6/f7 (the PEFT comparisons) run the switched full-model graphs
-  natively — no pjrt, no artifacts.
-  micro, serve, kv_cur, f5, f6 and f7 also write machine-readable
-  results to BENCH_native.json at the repo root (perf trajectory across
-  PRs); serve measures continuous-batching generation throughput at
-  1/4/8 slots plus the packed-vs-unpacked NT head kernel; kv_cur
-  measures the CUR-compressed KV cache (tokens/s, live cache bytes
-  and quality vs the exact ring at keep 1.0/0.5/0.25); f5 records
-  per-adapter heal losses incl. the Du KD-loss series CI checks.
+  workloads              every recorded workload model
+  tables                 every print-only table/figure reproduction
+  (default: both groups)
 
-ENV: CURING_BENCH_FAST=1   smoke sizes
+  workload models (recorded to BENCH_native.json, schema v2):"
+    );
+    for s in workload_specs() {
+        println!("    {:<14} {}", s.name, s.about);
+    }
+    println!("\n  tables (print-only):");
+    for s in tables::table_specs() {
+        println!("    {:<14} {}", s.name, s.about);
+    }
+    println!(
+        "
+  Every workload declares its units (tokens/s, ms/iter, s, bytes, …),
+  runs timed rows under a warmup + min-iters + CV-stop policy, and
+  serializes params/measurements/samples into BENCH_native.json.
+  Compare two recorded runs:  cargo xtask bench-diff old.json new.json
+  Validate a recorded run:    cargo xtask bench-check BENCH_native.json
+
+ENV: CURING_BENCH_FAST=1   quick mode (smoke sizes)
      CURING_PRETRAIN_STEPS  pretraining length (cached store)
+     CURING_COMMIT          commit sha stamped into the recorded run
      CURING_BACKEND         native|pjrt"
     );
-}
-
-// ---------------------------------------------------------------- micro
-
-/// Hot-path micro-benchmarks (decomposition math, kernels, runtime
-/// calls, KV-cached decode). Also writes machine-readable results to
-/// `BENCH_native.json` at the repo root so future PRs have a perf
-/// trajectory to compare against.
-fn micro(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
-    let mut rng = Rng::new(1, 0);
-    let b = if fast() { Bencher::quick() } else { Bencher::default() };
-    let mut rows: Vec<BenchResult> = Vec::new();
-    let mut record = |r: BenchResult| {
-        println!("{}", r.row());
-        rows.push(r);
-    };
-    let w_attn = Mat::random_normal(256, 256, &mut rng);
-    let w_gate = Mat::random_normal(256, 704, &mut rng);
-    let xnorm: Vec<f64> = (0..256).map(|_| rng.f64() + 0.1).collect();
-
-    record(b.run("jacobi_svd 256x256 (exact)", || jacobi_svd(&w_attn)));
-    let mut r2 = Rng::new(2, 0);
-    record(b.run("rand_svd 256x704 k=16 (selection path)", || {
-        rand_svd(&w_gate, 16, 8, 2, &mut r2)
-    }));
-    let mut r3 = Rng::new(3, 0);
-    record(b.run("cur_decompose 256x704 r=16 (full)", || {
-        cur::cur_decompose(&w_gate, &w_gate, 16, &mut r3).unwrap()
-    }));
-    let mut r4 = Rng::new(4, 0);
-    record(b.run("wanda+deim select 256x256 r=16", || {
-        curing::wanda::select_indices(Selector::Curing, &w_attn, &xnorm, 16, &mut r4).unwrap()
-    }));
-    println!("{}", b.run("matmul 256x256 * 256x256 (f64 Mat)", || w_attn.matmul(&w_attn)).row());
-
-    // Tiled microkernels vs the scalar seed kernels (same threading).
-    let mut r5 = Rng::new(5, 0);
-    let (mk, kk, nk) = (256usize, 256usize, 256usize);
-    let af = r5.normal_vec(mk * kk, 1.0);
-    let bf = r5.normal_vec(kk * nk, 1.0);
-    record(b.run("matmul_nn tiled 256x256x256", || math::matmul_nn(&af, &bf, mk, kk, nk)));
-    record(b.run("matmul_nn scalar 256x256x256", || {
-        math::matmul_nn_scalar(&af, &bf, mk, kk, nk)
-    }));
-    record(b.run("matmul_nt tiled 256x256x256", || math::matmul_nt(&af, &bf, mk, kk, nk)));
-    record(b.run("matmul_nt scalar 256x256x256", || {
-        math::matmul_nt_scalar(&af, &bf, mk, kk, nk)
-    }));
-
-    // Runtime latency: one dense vs one cured layer call (cached
-    // train-path forward vs the cache-free inference forward).
-    let cfg = &pipe.cfg;
-    let mut rng5 = Rng::new(6, 0);
-    let x = Tensor::from_f32(
-        &[cfg.batch, cfg.seq, cfg.d_model],
-        rng5.normal_vec(cfg.batch * cfg.seq * cfg.d_model, 1.0),
-    );
-    let backend = _ctx.rt.backend_name();
-    record(b.run(&format!("{backend} layer_fwd_dense cached (b8 s64 d256)"), || {
-        pipe.layer_forward(dense, 1, &LayerKind::Dense, &x).unwrap()
-    }));
-    record(b.run(&format!("{backend} layer_fwd_dense infer (b8 s64 d256)"), || {
-        pipe.layer_forward_infer(dense, 1, &LayerKind::Dense, &x).unwrap()
-    }));
-    // A cured store for layer 1.
-    let calib = Calibration {
-        attn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
-        ffn_norms: vec![vec![1.0; cfg.d_model]; cfg.n_layers],
-        angular: vec![0.0; cfg.n_layers],
-        n_examples: 1,
-    };
-    let mut student = dense.clone();
-    curing::compress::cure_layers(&mut student, cfg, &calib, &[1], &CompressOptions::default())?;
-    let kind = LayerKind::Cured { rank: 16, combo: "all".into() };
-    record(b.run(&format!("{backend} layer_fwd_cured r16 infer (b8 s64 d256)"), || {
-        pipe.layer_forward_infer(&student, 1, &kind, &x).unwrap()
-    }));
-
-    // Greedy decode: prefill vs per-token, KV-cached vs the cache-free
-    // replay reference, at (b=1, window=64) on the tiny config.
-    let plan = LayerPlan::all_dense(cfg);
-    let prompt: Vec<i32> = (1..9).collect();
-    let n_dec = if fast() { 4 } else { 16 };
-    let r_prefill = b.run("decode 1 tok = prefill (kv, b1 s64)", || {
-        pipe.generate_greedy(dense, &plan, &[prompt.clone()], 1).unwrap()
-    });
-    record(r_prefill.clone());
-    let r_kv = b.run(&format!("decode {n_dec} tok kv-cached (b1 s64)"), || {
-        pipe.generate_greedy(dense, &plan, &[prompt.clone()], n_dec).unwrap()
-    });
-    record(r_kv.clone());
-    let r_full = b.run(&format!("decode {n_dec} tok replay-reference (b1 s64)"), || {
-        pipe.generate_greedy_uncached(dense, &plan, &[prompt.clone()], n_dec).unwrap()
-    });
-    record(r_full.clone());
-    // Per-token decode latency: the KV path pays prefill once, then one
-    // single-position pass per token; the reference replays the whole
-    // history per token.
-    let per_tok_kv = ((r_kv.mean_ms - r_prefill.mean_ms) / (n_dec as f64 - 1.0)).max(1e-6);
-    let per_tok_full = r_full.mean_ms / n_dec as f64;
-    let speedup = per_tok_full / per_tok_kv;
-    println!(
-        "decode per-token: kv {per_tok_kv:.4} ms vs replay {per_tok_full:.4} ms \
-         -> {speedup:.1}x (prefill {:.4} ms, tokens/s kv {:.0})",
-        r_prefill.mean_ms,
-        1e3 / per_tok_kv
-    );
-
-    write_bench_json(backend, fast(), n_dec, per_tok_kv, per_tok_full, &r_prefill, &rows)?;
-    Ok(())
-}
-
-fn bench_result_json(r: &BenchResult) -> Json {
-    let mut o = JsonObj::new();
-    o.insert("name", Json::Str(r.name.clone()));
-    o.insert("iters", Json::Num(r.iters as f64));
-    o.insert("mean_ms", Json::Num(r.mean_ms));
-    o.insert("p50_ms", Json::Num(r.p50_ms));
-    o.insert("p95_ms", Json::Num(r.p95_ms));
-    o.insert("min_ms", Json::Num(r.min_ms));
-    Json::Obj(o)
-}
-
-/// Machine-readable micro results at the repo root: the perf trajectory
-/// future PRs compare against (CI validates the file parses).
-fn write_bench_json(
-    backend: &str,
-    fast: bool,
-    n_dec: usize,
-    per_tok_kv: f64,
-    per_tok_full: f64,
-    prefill: &BenchResult,
-    rows: &[BenchResult],
-) -> Result<()> {
-    let mut decode = JsonObj::new();
-    decode.insert("n_tokens", Json::Num(n_dec as f64));
-    decode.insert("prefill_ms", Json::Num(prefill.mean_ms));
-    decode.insert("per_token_kv_ms", Json::Num(per_tok_kv));
-    decode.insert("per_token_full_ms", Json::Num(per_tok_full));
-    decode.insert("speedup", Json::Num(per_tok_full / per_tok_kv));
-    decode.insert("tokens_per_s_kv", Json::Num(1e3 / per_tok_kv));
-    decode.insert("tokens_per_s_full", Json::Num(1e3 / per_tok_full));
-    merge_bench_json(vec![
-        ("schema".to_string(), Json::Num(2.0)),
-        ("backend".to_string(), Json::Str(backend.to_string())),
-        ("config".to_string(), Json::Str("tiny".to_string())),
-        ("fast".to_string(), Json::Bool(fast)),
-        ("decode".to_string(), Json::Obj(decode)),
-        ("rows".to_string(), Json::Arr(rows.iter().map(bench_result_json).collect())),
-    ])
-}
-
-/// Merge top-level sections into `BENCH_native.json`, preserving
-/// whatever other sections are already there (micro and serve each own
-/// their keys and can run in either order).
-fn merge_bench_json(sections: Vec<(String, Json)>) -> Result<()> {
-    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_native.json");
-    let mut root = match std::fs::read_to_string(&path) {
-        Ok(text) => match Json::parse(&text) {
-            Ok(Json::Obj(o)) => o,
-            _ => JsonObj::new(),
-        },
-        Err(_) => JsonObj::new(),
-    };
-    for (k, v) in sections {
-        root.insert(k, v);
-    }
-    std::fs::write(&path, Json::Obj(root).to_string_pretty())?;
-    println!("wrote {}", path.display());
-    Ok(())
-}
-
-// ---------------------------------------------------------------- serve
-
-/// Continuous-batching generation throughput on the mini config: 8
-/// requests decoded past the window-rotation boundary at 1 / 4 / 8
-/// slots (slots=1 IS the sequential single-slot baseline the batched
-/// numbers are measured against), plus the packed-vs-unpacked NT head
-/// kernel at the fused-decode shape. Results land in the `serve`
-/// section of `BENCH_native.json` (CI validates the keys).
-fn serve_bench(ctx: &Ctx) -> Result<()> {
-    let pipe = ctx.pipeline("mini")?;
-    let cfg = pipe.cfg.clone();
-    let mut rng = Rng::new(77, 0);
-    let store = cfg.init_dense(&mut rng);
-    let plan = LayerPlan::all_dense(&cfg);
-    let n_req = 8usize;
-    // Past the rotation boundary: prompt 8 + n_new > seq 32.
-    let n_new = if fast() { cfg.seq - 4 } else { cfg.seq + 8 };
-    println!(
-        "serve — continuous-batching generation, mini config \
-         ({n_req} requests × {n_new} tokens, window {})",
-        cfg.seq
-    );
-    let mut sec = JsonObj::new();
-    sec.insert("config", Json::Str("mini".to_string()));
-    sec.insert("requests", Json::Num(n_req as f64));
-    sec.insert("n_new", Json::Num(n_new as f64));
-    let mut tps = Vec::new();
-    for &slots in &[1usize, 4, 8] {
-        let (tx, rx) = channel::<Request>();
-        let _resps = spawn_gen_clients(
-            &tx,
-            &ctx.vocab,
-            CorpusKind::SynthC4,
-            8,
-            n_new,
-            n_req,
-            1,
-            0,
-        );
-        drop(tx);
-        let server = GenerationServer {
-            pipe: &pipe,
-            store: &store,
-            plan: plan.clone(),
-            max_wait: Duration::from_millis(5),
-            slots,
-            kv_policy: KvPolicy::Exact,
-            deadline: None,
-            queue_cap: 0,
-            tick: None,
-        };
-        let stats = server.run(rx)?;
-        println!(
-            "  slots {slots}: {:>8.0} tok/s | occupancy {:>4.1} | prefills {} | \
-             tok p50 {:.3} ms p95 {:.3} ms",
-            stats.tokens_per_s,
-            stats.mean_active_slots,
-            stats.prefills,
-            stats.tok_p50_ms,
-            stats.tok_p95_ms
-        );
-        sec.insert(format!("tokens_per_s_slots{slots}"), Json::Num(stats.tokens_per_s));
-        sec.insert(format!("tok_p50_ms_slots{slots}"), Json::Num(stats.tok_p50_ms));
-        sec.insert(format!("tok_p95_ms_slots{slots}"), Json::Num(stats.tok_p95_ms));
-        tps.push(stats.tokens_per_s);
-    }
-    let speedup = tps[tps.len() - 1] / tps[0].max(1e-9);
-    println!("  8-slot batched vs sequential single-slot: {speedup:.1}x tokens/s");
-    sec.insert("speedup_8_slots_vs_1", Json::Num(speedup));
-
-    // Faulted traffic: the same workload at 4 slots against a backend
-    // injecting ~1% decode faults — what rollback + per-slot retry and
-    // the typed failure paths cost in throughput and tail latency when
-    // the fleet is unhealthy (compare against the clean slots4 row).
-    {
-        let faults = curing::backend::fault::FaultPlan::parse("seed=7;decode=0.01")?;
-        let frt = curing::runtime::Runtime::native().with_faults(faults);
-        let fpipe = Pipeline { rt: &frt, cfg: cfg.clone() };
-        let (tx, rx) = channel::<Request>();
-        let _resps = spawn_gen_clients(
-            &tx,
-            &ctx.vocab,
-            CorpusKind::SynthC4,
-            8,
-            n_new,
-            n_req,
-            1,
-            0,
-        );
-        drop(tx);
-        let server = GenerationServer {
-            pipe: &fpipe,
-            store: &store,
-            plan: plan.clone(),
-            max_wait: Duration::from_millis(5),
-            slots: 4,
-            kv_policy: KvPolicy::Exact,
-            deadline: None,
-            queue_cap: 0,
-            tick: None,
-        };
-        let stats = server.run(rx)?;
-        println!(
-            "  faulted (decode p=0.01, 4 slots): {:>8.0} tok/s | tok p95 {:.3} ms | \
-             slot failures {}",
-            stats.tokens_per_s, stats.tok_p95_ms, stats.slot_failures
-        );
-        sec.insert("tokens_per_s_faulted", Json::Num(stats.tokens_per_s));
-        sec.insert("tok_p95_ms_faulted", Json::Num(stats.tok_p95_ms));
-        sec.insert("slot_failures_faulted", Json::Num(stats.slot_failures as f64));
-    }
-
-    // Worker scaling: the same workload behind the supervised cluster
-    // router at 1 / 2 / 4 / 8 replicated engines (2 KV slots each),
-    // clean and with an injected crash plan — what replication buys in
-    // throughput and what supervised replay costs when workers die.
-    let cstore = std::sync::Arc::new(store.clone());
-    for crash in [false, true] {
-        let suffix = if crash { "_crash" } else { "" };
-        for &workers in &[1usize, 2, 4, 8] {
-            let (tx, rx) = channel::<Request>();
-            let _resps = spawn_gen_clients(
-                &tx,
-                &ctx.vocab,
-                CorpusKind::SynthC4,
-                8,
-                n_new,
-                n_req,
-                1,
-                0,
-            );
-            drop(tx);
-            let mut cluster =
-                ClusterServer::new(cfg.clone(), cstore.clone(), plan.clone(), workers);
-            cluster.max_wait = Duration::from_millis(5);
-            cluster.retry_budget = 4;
-            if crash {
-                let plan =
-                    curing::backend::fault::FaultPlan::parse("seed=5;decode=0.002:crash")?;
-                cluster = cluster.with_fault_plan(plan);
-            }
-            let stats = cluster.run(rx)?;
-            println!(
-                "  workers {workers}{}: {:>8.0} tok/s | tok p95 {:.3} ms | crashes {} | \
-                 retried {} | retired {}",
-                if crash { " (crash p=0.002)" } else { "          " },
-                stats.tokens_per_s,
-                stats.tok_p95_ms,
-                stats.worker_crashes,
-                stats.retried_requests,
-                stats.retired_workers
-            );
-            sec.insert(
-                format!("tokens_per_s_workers{workers}{suffix}"),
-                Json::Num(stats.tokens_per_s),
-            );
-            sec.insert(
-                format!("tok_p95_ms_workers{workers}{suffix}"),
-                Json::Num(stats.tok_p95_ms),
-            );
-            if crash {
-                sec.insert(
-                    format!("worker_crashes_workers{workers}{suffix}"),
-                    Json::Num(stats.worker_crashes as f64),
-                );
-            }
-        }
-    }
-
-    // Packed vs unpacked NT at the fused-decode head shape (8 active
-    // rows, large-k B reused across steps — pack cost paid once).
-    let b = if fast() { Bencher::quick() } else { Bencher::default() };
-    let mut r = Rng::new(78, 0);
-    let (m, k, n) = (8usize, 256usize, 512usize);
-    let a = r.normal_vec(m * k, 1.0);
-    let bt = r.normal_vec(n * k, 1.0);
-    let packed = math::pack_nt(&bt, n, k);
-    let r_packed =
-        b.run("matmul_nt packed 8x256x512", || math::matmul_nt_packed(&a, &packed, m));
-    let r_plain = b.run("matmul_nt unpacked 8x256x512", || math::matmul_nt(&a, &bt, m, k, n));
-    println!("{}", r_packed.row());
-    println!("{}", r_plain.row());
-    sec.insert("nt_packed_ms", Json::Num(r_packed.mean_ms));
-    sec.insert("nt_unpacked_ms", Json::Num(r_plain.mean_ms));
-    merge_bench_json(vec![("serve".to_string(), Json::Obj(sec))])
-}
-
-// --------------------------------------------------------------- kv_cur
-
-/// CUR-compressed KV cache (mini config): continuous-batching
-/// generation under `--kv-policy cur:<keep>` at keep-ratios
-/// 1.0 / 0.5 / 0.25, decoding well past the compaction high-water mark.
-/// Records tokens/s, compaction counts and the mean per-slot live cache
-/// bytes against the exact-ring bound, plus the quality harness at
-/// keep 0.5: greedy-token agreement with the exact cache and the
-/// teacher-forced decode-perplexity delta. Results land in the `kv_cur`
-/// section of `BENCH_native.json` (CI validates the keys, including
-/// live-bytes < exact bound).
-fn kv_cur_bench(ctx: &Ctx) -> Result<()> {
-    let pipe = ctx.pipeline("mini")?;
-    let cfg = pipe.cfg.clone();
-    let mut rng = Rng::new(79, 0);
-    let store = cfg.init_dense(&mut rng);
-    let plan = LayerPlan::all_dense(&cfg);
-    let (n_req, slots, prompt_len) = (8usize, 4usize, 8usize);
-    let n_new = if fast() { cfg.seq + 8 } else { 2 * cfg.seq };
-    let exact_slot_bytes =
-        curing::backend::KvCache::exact_slot_bound(cfg.n_layers, cfg.seq, cfg.d_model);
-    println!(
-        "kv_cur — CUR-compressed KV cache, mini config ({n_req} requests × {n_new} tokens, \
-         window {}, exact bound {exact_slot_bytes} B/slot)",
-        cfg.seq
-    );
-    let mut sec = JsonObj::new();
-    sec.insert("config", Json::Str("mini".to_string()));
-    sec.insert("requests", Json::Num(n_req as f64));
-    sec.insert("n_new", Json::Num(n_new as f64));
-    sec.insert("exact_slot_bytes", Json::Num(exact_slot_bytes as f64));
-    for (label, keep) in [("keep100", 1.0f32), ("keep50", 0.5), ("keep25", 0.25)] {
-        let policy = KvPolicy::Cur { keep, sinks: 4, recent: 8 };
-        let (tx, rx) = channel::<Request>();
-        let _resps = spawn_gen_clients(
-            &tx,
-            &ctx.vocab,
-            CorpusKind::SynthC4,
-            prompt_len,
-            n_new,
-            n_req,
-            1,
-            0,
-        );
-        drop(tx);
-        let server = GenerationServer {
-            pipe: &pipe,
-            store: &store,
-            plan: plan.clone(),
-            max_wait: Duration::from_millis(5),
-            slots,
-            kv_policy: policy,
-            deadline: None,
-            queue_cap: 0,
-            tick: None,
-        };
-        let stats = server.run(rx)?;
-        let live_per_slot = stats.kv_live_bytes_mean / slots as f64;
-        println!(
-            "  {label}: {:>8.0} tok/s | compactions {:>4} | live {:>7.0} B/slot \
-             ({:.0}% of exact)",
-            stats.tokens_per_s,
-            stats.kv_compactions,
-            live_per_slot,
-            100.0 * live_per_slot / exact_slot_bytes as f64
-        );
-        sec.insert(format!("tokens_per_s_{label}"), Json::Num(stats.tokens_per_s));
-        sec.insert(format!("live_bytes_{label}"), Json::Num(live_per_slot));
-        sec.insert(format!("compactions_{label}"), Json::Num(stats.kv_compactions as f64));
-    }
-    // Quality harness at keep 0.5: greedy agreement + decode-ppl delta
-    // vs the exact cache, on prompts decoding past the window.
-    let mut corpus = Corpus::new(CorpusKind::SynthC4, 4242);
-    let prompts: Vec<Vec<i32>> =
-        (0..4).map(|_| corpus.sequence(&ctx.vocab, prompt_len)).collect();
-    let exact = pipe.generate_greedy(&store, &plan, &prompts, n_new)?;
-    let cur = pipe.generate_greedy_with_policy(
-        &store,
-        &plan,
-        &prompts,
-        n_new,
-        KvPolicy::Cur { keep: 0.5, sinks: 4, recent: 8 },
-    )?;
-    let total = (exact.len() * n_new) as f64;
-    let matches: usize = exact
-        .iter()
-        .zip(&cur)
-        .map(|(a, b)| a.iter().zip(b).filter(|(x, y)| x == y).count())
-        .sum();
-    let agreement = matches as f64 / total;
-    let seqs: Vec<Vec<i32>> =
-        (0..2).map(|_| corpus.sequence(&ctx.vocab, 2 * cfg.seq)).collect();
-    let ppl_exact = eval::decode_perplexity(&pipe, &store, &plan, KvPolicy::Exact, &seqs)?;
-    let ppl_cur = eval::decode_perplexity(
-        &pipe,
-        &store,
-        &plan,
-        KvPolicy::Cur { keep: 0.5, sinks: 4, recent: 8 },
-        &seqs,
-    )?;
-    println!(
-        "  quality keep50: greedy agreement {:.3} | decode ppl exact {:.2} vs cur {:.2}",
-        agreement, ppl_exact, ppl_cur
-    );
-    sec.insert("token_agreement_keep50", Json::Num(agreement));
-    sec.insert("ppl_exact", Json::Num(ppl_exact));
-    sec.insert("ppl_keep50", Json::Num(ppl_cur));
-    merge_bench_json(vec![("kv_cur".to_string(), Json::Obj(sec))])
-}
-
-// ------------------------------------------------------------------- t1
-
-/// Table 1: compression time (s) and size reduction vs #compressed layers.
-fn t1(_ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let cfg = &pipe.cfg;
-    let max_k = cfg.middle_layers().len();
-    let ks: Vec<usize> = (1..=max_k).collect();
-    println!("Table 1 analog — tiny model, r_max=16, combo=all (paper: linear scaling)");
-    println!("{:<4} {:>10} {:>12} {:>10}", "k", "time (s)", "saved (MiB)", "saved (%)");
-    let mut rng = Rng::new(0, 0);
-    for &k in &ks {
-        let layers =
-            curing::compress::select_layers(cfg, calib, k, LayerStrategy::Angular, &mut rng)?;
-        let mut student = dense.clone();
-        let rep = curing::compress::cure_layers(
-            &mut student,
-            cfg,
-            calib,
-            &layers,
-            &CompressOptions::default(),
-        )?;
-        println!(
-            "{:<4} {:>10.3} {:>12.2} {:>10.2}",
-            k,
-            rep.seconds_total,
-            mib(rep.bytes_saved() as f64),
-            100.0 * rep.bytes_saved() as f64 / dense.total_bytes() as f64
-        );
-    }
-    // Analytic size accounting for the base (~90M) config at its ranks
-    // (paper reports GiB; shape = linear in k, ~2x params at 2x rank).
-    if let Ok(base) = ModelConfig::from_manifest(pipe.rt.manifest(), "base") {
-        println!(
-            "\nbase (~{}M params) analytic saved-bytes per layer:",
-            base.total_params / 1_000_000
-        );
-        for r in &base.ranks {
-            println!(
-                "  r_max={:<4} {:>10.2} MiB/layer",
-                r,
-                mib(base.bytes_saved_per_layer("all", *r)? as f64)
-            );
-        }
-    }
-    Ok(())
-}
-
-// ------------------------------------------------------------------- t2
-
-/// Table 2 + Figure 8: weight-combination ablation.
-fn t2(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let k = 3;
-    let sizes = eval_sizes();
-    println!("Table 2 / Fig 8 analog — combos at k={k}, r_max=16");
-    println!(
-        "{:<6} {:>10} {:>12} {:>9} {:>9} {:>7} {:>7}",
-        "combo", "time (s)", "saved (MiB)", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
-    );
-    for combo in ["all", "gate", "qk", "qg", "kg"] {
-        let opts = CompressOptions { combo: combo.into(), ..Default::default() };
-        let (student, plan, rep) =
-            ctx.compress_k(pipe, dense, calib, k, LayerStrategy::Angular, &opts)?;
-        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
-        println!(
-            "{:<6} {:>10.3} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
-            combo,
-            rep.seconds_total,
-            mib(rep.bytes_saved() as f64),
-            suite.c4_ppl,
-            suite.wiki_ppl,
-            suite.boolq_acc,
-            suite.mmlu_acc
-        );
-    }
-    println!("expected shape: 'all' saves most; 'qk' smallest saving, best metrics");
-    Ok(())
-}
-
-// ------------------------------------------------------------------- t3
-
-/// Table 3 + Figure 9: r_max ablation (paper {128,256,512} ↔ ours {8,16,32}).
-fn t3(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let k = 3;
-    let sizes = eval_sizes();
-    println!("Table 3 / Fig 9 analog — rank sweep at k={k}");
-    println!(
-        "{:<6} {:>10} {:>12} {:>9} {:>9} {:>7} {:>7}",
-        "r_max", "time (s)", "saved (MiB)", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
-    );
-    for r in pipe.cfg.ranks.clone() {
-        let opts = CompressOptions { r_max: r, ..Default::default() };
-        let (student, plan, rep) =
-            ctx.compress_k(pipe, dense, calib, k, LayerStrategy::Angular, &opts)?;
-        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
-        println!(
-            "{:<6} {:>10.3} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
-            r,
-            rep.seconds_total,
-            mib(rep.bytes_saved() as f64),
-            suite.c4_ppl,
-            suite.wiki_ppl,
-            suite.boolq_acc,
-            suite.mmlu_acc
-        );
-    }
-    println!("expected shape: larger rank → slower + less saving + better metrics");
-    Ok(())
-}
-
-// ------------------------------------------------------------------- f4
-
-/// Figure 4: metrics vs #compressed layers, with healing at one point.
-fn f4(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let sizes = eval_sizes();
-    let max_k = if fast() { 2 } else { pipe.cfg.middle_layers().len() };
-    let heal_k = 3.min(max_k);
-    let heal_steps = if fast() { 10 } else { 80 };
-    println!("Fig 4 analog — metric degradation vs k, + healing at k={heal_k}");
-    println!("{:<10} {:>9} {:>9} {:>7} {:>7}", "model", "c4_ppl", "wiki_ppl", "boolq", "mmlu");
-    let base = ctx.eval_suite(pipe, dense, &LayerPlan::all_dense(&pipe.cfg), &sizes)?;
-    println!(
-        "{:<10} {:>9.2} {:>9.2} {:>7.3} {:>7.3} (random: boolq 0.5, mmlu 0.25)",
-        "dense", base.c4_ppl, base.wiki_ppl, base.boolq_acc, base.mmlu_acc
-    );
-    for k in 1..=max_k {
-        let (student, plan, _) = ctx.compress_k(
-            pipe,
-            dense,
-            calib,
-            k,
-            LayerStrategy::Angular,
-            &CompressOptions::default(),
-        )?;
-        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
-        println!(
-            "{:<10} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
-            format!("cured k={k}"),
-            suite.c4_ppl,
-            suite.wiki_ppl,
-            suite.boolq_acc,
-            suite.mmlu_acc
-        );
-    }
-    // Healing point.
-    let (mut student, plan, _) = ctx.compress_k(
-        pipe,
-        dense,
-        calib,
-        heal_k,
-        LayerStrategy::Angular,
-        &CompressOptions::default(),
-    )?;
-    let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_HEAL);
-    let mut opt = TensorStore::new();
-    heal_layers(
-        pipe,
-        dense,
-        &mut student,
-        &mut opt,
-        &ctx.vocab,
-        &mut corpus,
-        &HealOptions { steps: heal_steps, ..Default::default() },
-        0,
-    )?;
-    let healed = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
-    println!(
-        "{:<10} {:>9.2} {:>9.2} {:>7.3} {:>7.3}  <- healing recovers",
-        format!("healed k={heal_k}"),
-        healed.c4_ppl,
-        healed.wiki_ppl,
-        healed.boolq_acc,
-        healed.mmlu_acc
-    );
-    Ok(())
-}
-
-// ------------------------------------------------------------------- f5
-
-/// Figure 5: healing curves — ΔU vs LoRA vs MoRA at equal budgets.
-/// Runs natively (no artifacts); writes the `peft_heal` section of
-/// `BENCH_native.json` (final loss + steps/s per adapter, plus the full
-/// Du loss series — CI asserts it trends down).
-fn f5(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    // Du always runs >= 20 steps: the acceptance gate is a
-    // monotonically-trending-down KD loss series over >= 20 steps.
-    let du_steps = if fast() { 20 } else { 30 };
-    let other_steps = if fast() { 6 } else { 30 };
-    let eval_every = if fast() { 5 } else { 10 };
-    let k = 3;
-    println!("Fig 5 analog — full-model healing (0.9·KD(T=10) + 0.1·CE), k={k}");
-    let mut sec = JsonObj::new();
-    sec.insert("config", Json::Str("tiny".to_string()));
-    for adapter in [Adapter::Du, Adapter::Lora, Adapter::Mora] {
-        let steps = if adapter == Adapter::Du { du_steps } else { other_steps };
-        let (mut student, _plan, _) = ctx.compress_k(
-            pipe,
-            dense,
-            calib,
-            k,
-            LayerStrategy::Angular,
-            &CompressOptions::default(),
-        )?;
-        let mut rng = Rng::new(11, 0);
-        let mut adapters = init_adapters(adapter, &pipe.cfg, dense, calib, &mut rng)?;
-        let mut opt = TensorStore::new();
-        let runner = SwitchedRunner::new(adapter, StepMode::Heal);
-        let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_HEAL);
-        println!(
-            "  {} (trainable ≈ {} params, {steps} steps):",
-            adapter.label(),
-            trainable_params(adapter, &pipe.cfg)?
-        );
-        let mut series = Vec::with_capacity(steps);
-        let t0 = std::time::Instant::now();
-        for step in 0..steps {
-            // Paper App. B uses 3e-4 at r=256; the tiny config's ΔU is
-            // orders of magnitude smaller and needs a proportionally
-            // hotter lr to move in few steps (same reasoning as
-            // HealOptions::default — see EXPERIMENTS.md).
-            let lr = curing::heal::cosine_lr(step, steps, 1e-2, steps / 5);
-            let (toks, tgts) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
-            let tokens = Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
-            let targets = Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], tgts);
-            let loss = runner.step(
-                pipe,
-                dense,
-                &mut student,
-                &mut adapters,
-                &mut opt,
-                &tokens,
-                &targets,
-                None,
-                lr,
-                step + 1,
-            )?;
-            series.push(loss);
-            if step % eval_every == 0 || step + 1 == steps {
-                let mut wiki = Corpus::new(CorpusKind::SynthWiki, data::SEED_EVAL);
-                let ppl = eval::perplexity_switched(
-                    pipe,
-                    dense,
-                    &student,
-                    &adapters,
-                    adapter,
-                    &ctx.vocab,
-                    &mut wiki,
-                    2,
-                )?;
-                println!("    step {step:>3}: loss {loss:.4}  wiki_ppl {ppl:.2}");
-            }
-        }
-        let secs = t0.elapsed().as_secs_f64();
-        let tag = adapter.tag();
-        sec.insert(format!("final_loss_{tag}"), Json::Num(*series.last().unwrap()));
-        sec.insert(format!("steps_per_s_{tag}"), Json::Num(steps as f64 / secs.max(1e-9)));
-        if adapter == Adapter::Du {
-            sec.insert(
-                "du_loss_series",
-                Json::Arr(series.iter().map(|&x| Json::Num(x)).collect()),
-            );
-        }
-    }
-    println!("expected shape: all recover; ΔU between LoRA and MoRA on wiki ppl (paper §5.2)");
-    merge_bench_json(vec![("peft_heal".to_string(), Json::Obj(sec))])
-}
-
-// ------------------------------------------------------------------- f6
-
-/// Figure 6: MRPC fine-tuning vs WikiText forgetting (4 methods).
-/// Native; contributes per-adapter rows to the `peft_task` section of
-/// `BENCH_native.json`.
-fn f6(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let steps = if fast() { 6 } else { 30 };
-    let eval_every = if fast() { 3 } else { 10 };
-    let k = 3;
-    let cfg = &pipe.cfg;
-    // Fixed MRPC train/eval splits.
-    let mut rng = Rng::new(77, 0);
-    let train: Vec<TrainItem> =
-        (0..64).map(|_| data::mrpc_item(&ctx.vocab, &mut rng, cfg.seq).1).collect();
-    let eval_items: Vec<_> =
-        (0..32).map(|_| data::mrpc_item(&ctx.vocab, &mut rng, cfg.seq).0).collect();
-    println!("Fig 6 analog — fine-tune on synth-mrpc, watch synth-wiki ppl (forgetting)");
-    let mut sec = JsonObj::new();
-    sec.insert("config", Json::Str("tiny".to_string()));
-    for adapter in Adapter::ALL {
-        let (mut student, _plan, _) = ctx.compress_k(
-            pipe,
-            dense,
-            calib,
-            k,
-            LayerStrategy::Angular,
-            &CompressOptions::default(),
-        )?;
-        let mut arng = Rng::new(12, 0);
-        let mut adapters = init_adapters(adapter, cfg, dense, calib, &mut arng)?;
-        let mut opt = TensorStore::new();
-        let runner = SwitchedRunner::new(adapter, StepMode::Task);
-        println!("  {}:", adapter.label());
-        let mut last_loss = f64::NAN;
-        let mut last_acc = f64::NAN;
-        let t0 = std::time::Instant::now();
-        for step in 0..steps {
-            let lr = curing::heal::cosine_lr(step, steps, 3e-4, steps / 5);
-            let (tokens, targets, mask) =
-                eval::pack_train(&train, step * cfg.batch, cfg.batch, cfg.seq);
-            let loss = runner.step(
-                pipe,
-                dense,
-                &mut student,
-                &mut adapters,
-                &mut opt,
-                &tokens,
-                &targets,
-                Some(&mask),
-                lr,
-                step + 1,
-            )?;
-            last_loss = loss;
-            if step % eval_every == 0 || step + 1 == steps {
-                let acc = eval::choice_accuracy_switched(
-                    pipe,
-                    dense,
-                    &student,
-                    &adapters,
-                    adapter,
-                    &eval_items,
-                )?;
-                last_acc = acc;
-                let mut wiki = Corpus::new(CorpusKind::SynthWiki, data::SEED_EVAL);
-                let ppl = eval::perplexity_switched(
-                    pipe,
-                    dense,
-                    &student,
-                    &adapters,
-                    adapter,
-                    &ctx.vocab,
-                    &mut wiki,
-                    2,
-                )?;
-                println!(
-                    "    step {step:>3}: task-loss {loss:.4}  mrpc-acc {acc:.3}  wiki_ppl {ppl:.2}"
-                );
-            }
-        }
-        let secs = t0.elapsed().as_secs_f64();
-        let tag = adapter.tag();
-        sec.insert(format!("final_loss_{tag}"), Json::Num(last_loss));
-        sec.insert(format!("steps_per_s_{tag}"), Json::Num(steps as f64 / secs.max(1e-9)));
-        sec.insert(format!("mrpc_acc_{tag}"), Json::Num(last_acc));
-    }
-    println!("expected shape: lora/mora adapt fastest but drift most on wiki;");
-    println!("curlora barely learns but barely forgets; ΔU sits between (paper Fig 6)");
-    merge_bench_json(vec![("peft_task".to_string(), Json::Obj(sec))])
-}
-
-// ------------------------------------------------------------------- f7
-
-/// Figure 7: UUID→UUID memorization (loss + char accuracy).
-fn f7(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let steps = if fast() { 6 } else { 30 };
-    let eval_every = if fast() { 3 } else { 10 };
-    let cfg = &pipe.cfg;
-    let n_pairs = if fast() { 32 } else { 128 };
-    let pairs = data::uuid_pairs(n_pairs, 2024);
-    let items: Vec<TrainItem> =
-        pairs.iter().map(|(a, b)| data::uuid_item(&ctx.vocab, a, b, cfg.seq)).collect();
-    println!("Fig 7 analog — UUID→UUID mapping ({n_pairs} pairs, paper App. B format)");
-    let mut uuid_acc = JsonObj::new();
-    uuid_acc.insert("config", Json::Str("tiny".to_string()));
-    for adapter in [Adapter::Du, Adapter::Lora, Adapter::Mora] {
-        let (mut student, _plan, _) = ctx.compress_k(
-            pipe,
-            dense,
-            calib,
-            3,
-            LayerStrategy::Angular,
-            &CompressOptions::default(),
-        )?;
-        let mut arng = Rng::new(13, 0);
-        let mut adapters = init_adapters(adapter, cfg, dense, calib, &mut arng)?;
-        let mut opt = TensorStore::new();
-        let runner = SwitchedRunner::new(adapter, StepMode::Task);
-        println!("  {}:", adapter.label());
-        let mut last_acc = f64::NAN;
-        for step in 0..steps {
-            let lr = curing::heal::cosine_lr(step, steps, 1e-3, steps / 5);
-            let (tokens, targets, mask) =
-                eval::pack_train(&items, step * cfg.batch, cfg.batch, cfg.seq);
-            let loss = runner.step(
-                pipe,
-                dense,
-                &mut student,
-                &mut adapters,
-                &mut opt,
-                &tokens,
-                &targets,
-                Some(&mask),
-                lr,
-                step + 1,
-            )?;
-            if step % eval_every == 0 || step + 1 == steps {
-                // Char accuracy on a fixed batch of training pairs
-                // (memorization task: train accuracy is the metric).
-                let (tokens_e, targets_e, mask_e) =
-                    eval::pack_train(&items, 0, cfg.batch, cfg.seq);
-                let logits = eval::switched_logits(
-                    pipe,
-                    dense,
-                    &student,
-                    &adapters,
-                    adapter,
-                    &tokens_e,
-                )?;
-                let acc =
-                    eval::char_accuracy_host(&logits, targets_e.i32s()?, mask_e.f32s()?)?;
-                last_acc = acc;
-                println!("    step {step:>3}: loss {loss:.4}  char-acc {acc:.3}");
-            }
-        }
-        uuid_acc.insert(format!("uuid_char_acc_{}", adapter.tag()), Json::Num(last_acc));
-    }
-    println!("expected shape: MoRA > LoRA ≥ ΔU in convergence speed (paper Fig 7)");
-    merge_bench_json(vec![("peft_uuid".to_string(), Json::Obj(uuid_acc))])
-}
-
-// ------------------------------------------------------------------ f10
-
-/// Figure 10: calibration-set size ablation.
-fn f10(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore) -> Result<()> {
-    let sizes_cfg = eval_sizes();
-    let calib_sizes: &[usize] = if fast() { &[16, 32] } else { &[32, 128, 512] };
-    println!("Fig 10 analog — calibration size ablation (paper: 128 ≈ 1024)");
-    println!(
-        "{:<8} {:>12} {:>9} {:>9} {:>7} {:>7}",
-        "examples", "calib (s)", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
-    );
-    for &n in calib_sizes {
-        let t0 = std::time::Instant::now();
-        let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_CALIB);
-        let calib = curing::calib::calibrate(pipe, dense, &ctx.vocab, &mut corpus, n)?;
-        let secs = t0.elapsed().as_secs_f64();
-        let (student, plan, _) = ctx.compress_k(
-            pipe,
-            dense,
-            &calib,
-            3,
-            LayerStrategy::Angular,
-            &CompressOptions::default(),
-        )?;
-        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes_cfg)?;
-        println!(
-            "{:<8} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
-            n, secs, suite.c4_ppl, suite.wiki_ppl, suite.boolq_acc, suite.mmlu_acc
-        );
-    }
-    println!("expected shape: metrics ~flat with size; calibration time linear");
-    Ok(())
-}
-
-// ------------------------------------------------------------------- t4
-
-/// Table 4 + Figure 11: angular distances + layer-selection strategies.
-fn t4(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let sizes = eval_sizes();
-    println!("Table 4 analog — per-layer angular distances (ascending):");
-    let mut order = pipe.cfg.middle_layers();
-    order.sort_by(|&a, &b| calib.angular[a].total_cmp(&calib.angular[b]));
-    for &l in &order {
-        print!("  L{l}:{:.4}", calib.angular[l]);
-    }
-    println!("\n\nFig 11 analog — selection strategy vs metrics at k=3:");
-    println!("{:<9} {:>9} {:>9} {:>7} {:>7}", "strategy", "c4_ppl", "wiki_ppl", "boolq", "mmlu");
-    for strat in [LayerStrategy::Angular, LayerStrategy::LastN, LayerStrategy::Random] {
-        let (student, plan, rep) =
-            ctx.compress_k(pipe, dense, calib, 3, strat, &CompressOptions::default())?;
-        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
-        println!(
-            "{:<9} {:>9.2} {:>9.2} {:>7.3} {:>7.3}   layers {:?}",
-            strat.label(),
-            suite.c4_ppl,
-            suite.wiki_ppl,
-            suite.boolq_acc,
-            suite.mmlu_acc,
-            rep.layers
-        );
-    }
-    println!("expected shape: angular ≥ last-n > random (paper App. D.1)");
-    Ok(())
-}
-
-// ------------------------------------------------------------------- t5
-
-/// Table 5 + Figure 12: row/column selector ablation.
-fn t5(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let sizes = eval_sizes();
-    let k = 3;
-    println!("Table 5 / Fig 12 analog — selector ablation at k={k}:");
-    println!(
-        "{:<8} {:>12} {:>12} {:>9} {:>9} {:>7} {:>7}",
-        "selector", "Σ‖CUR‖_F", "Σ‖W−CUR‖_F", "c4_ppl", "wiki_ppl", "boolq", "mmlu"
-    );
-    for sel in Selector::ALL {
-        let opts = CompressOptions { selector: sel, ..Default::default() };
-        let (student, plan, rep) =
-            ctx.compress_k(pipe, dense, calib, k, LayerStrategy::Angular, &opts)?;
-        let cur_fro: f64 = rep.weights.iter().map(|w| w.cur_fro).sum();
-        let diff: f64 = rep.weights.iter().map(|w| w.diff_fro).sum();
-        let suite = ctx.eval_suite(pipe, &student, &plan, &sizes)?;
-        println!(
-            "{:<8} {:>12.2} {:>12.2} {:>9.2} {:>9.2} {:>7.3} {:>7.3}",
-            sel.label(),
-            cur_fro,
-            diff,
-            suite.c4_ppl,
-            suite.wiki_ppl,
-            suite.boolq_acc,
-            suite.mmlu_acc
-        );
-    }
-    println!("expected shape: CURing smallest ‖W−CUR‖_F; Random worst metrics");
-    Ok(())
-}
-
-// ------------------------------------------------------------------- t6
-
-/// Table 6: per-weight activation norms, teacher vs student vs healed.
-fn t6(ctx: &Ctx, pipe: &Pipeline, dense: &TensorStore, calib: &Calibration) -> Result<()> {
-    let k = 3;
-    let (mut student, _plan, _) = ctx.compress_k(
-        pipe,
-        dense,
-        calib,
-        k,
-        LayerStrategy::Angular,
-        &CompressOptions::default(),
-    )?;
-    // One calibration batch provides the projection inputs X.
-    let mut corpus = Corpus::new(CorpusKind::SynthC4, data::SEED_EVAL);
-    let (toks, _) = corpus.batch(&ctx.vocab, pipe.cfg.batch, pipe.cfg.seq);
-    let tokens = Tensor::from_i32(&[pipe.cfg.batch, pipe.cfg.seq], toks);
-    let fwd = pipe.forward_calib(dense, &tokens)?;
-    let cured = curing::compress::cured_layers_of(&student);
-
-    let table = |label: &str, student: &TensorStore| -> Result<()> {
-        println!("  {label}:");
-        println!(
-            "    {:<6} {:>5} {:>12} {:>12} {:>12}",
-            "layer", "proj", "‖XW‖ teach", "‖XCUR‖ stud", "‖W−CUR‖_F"
-        );
-        for &l in &cured {
-            for row in eval::activation_rows(dense, student, l, &fwd.attn_in[l], &fwd.ffn_in[l])? {
-                println!(
-                    "    {:<6} {:>5} {:>12.2} {:>12.2} {:>12.2}",
-                    row.layer, row.proj, row.teacher_norm, row.student_norm, row.weight_diff
-                );
-            }
-        }
-        Ok(())
-    };
-    println!("Table 6 analog — activation Frobenius norms (teacher vs student):");
-    table("cured (no healing)", &student)?;
-    // Heal and re-measure: differences must shrink (paper's claim).
-    let heal_steps = if fast() { 10 } else { 60 };
-    let mut hcorpus = Corpus::new(CorpusKind::SynthC4, data::SEED_HEAL);
-    let mut opt = TensorStore::new();
-    heal_layers(
-        pipe,
-        dense,
-        &mut student,
-        &mut opt,
-        &ctx.vocab,
-        &mut hcorpus,
-        &HealOptions { steps: heal_steps, ..Default::default() },
-        0,
-    )?;
-    table(&format!("healed ({heal_steps} steps)"), &student)?;
-    println!("expected shape: healed ‖W−CUR‖_F shrinks; student norms approach teacher");
-    Ok(())
-}
-
-fn eval_sizes() -> EvalSizes {
-    if fast() {
-        EvalSizes { ppl_batches: 1, boolq_items: 8, mmlu_items: 8 }
-    } else {
-        EvalSizes::default()
-    }
 }

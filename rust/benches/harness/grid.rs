@@ -1,0 +1,89 @@
+//! First-class sensitivity grids (rebar / dag-crr style): a named set
+//! of axes whose cartesian product defines the parameter points a
+//! workload sweeps. Axes are recorded into the workload's params (so
+//! the recorded run carries the mesh, not just the points) and every
+//! point's measurements are keyed `metric[axis=v,axis=v]` so
+//! `cargo xtask bench-diff` can match points across runs.
+
+use curing::util::record::WorkloadRecord;
+use curing::util::Json;
+
+pub struct Axis {
+    pub name: &'static str,
+    pub values: Vec<f64>,
+}
+
+impl Axis {
+    pub fn new(name: &'static str, values: &[f64]) -> Axis {
+        Axis { name, values: values.to_vec() }
+    }
+}
+
+pub struct Grid {
+    pub axes: Vec<Axis>,
+}
+
+impl Grid {
+    pub fn new(axes: Vec<Axis>) -> Grid {
+        Grid { axes }
+    }
+
+    /// Cartesian product in row-major order (first axis slowest), each
+    /// point a `(axis-name, value)` list in axis order.
+    pub fn points(&self) -> Vec<Vec<(&'static str, f64)>> {
+        let mut out: Vec<Vec<(&'static str, f64)>> = vec![Vec::new()];
+        for axis in &self.axes {
+            let mut next = Vec::with_capacity(out.len() * axis.values.len());
+            for prefix in &out {
+                for &v in &axis.values {
+                    let mut p = prefix.clone();
+                    p.push((axis.name, v));
+                    next.push(p);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    /// Record the mesh into the workload params as `grid_<axis>` arrays.
+    pub fn record_axes(&self, rec: &mut WorkloadRecord) {
+        for axis in &self.axes {
+            rec.param_json(
+                &format!("grid_{}", axis.name),
+                Json::Arr(axis.values.iter().map(|&v| Json::Num(v)).collect()),
+            );
+        }
+    }
+}
+
+/// Canonical measurement key for one metric at one grid point:
+/// `tokens_per_s[keep=0.5,slots=4]`.
+pub fn point_key(metric: &str, point: &[(&'static str, f64)]) -> String {
+    let coords: Vec<String> = point.iter().map(|(k, v)| format!("{k}={}", fmt_val(*v))).collect();
+    format!("{metric}[{}]", coords.join(","))
+}
+
+/// Axis-value formatting: integers without a trailing `.0`.
+pub fn fmt_val(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cartesian_order_and_keys() {
+        let g = Grid::new(vec![Axis::new("keep", &[1.0, 0.5]), Axis::new("slots", &[2.0, 4.0])]);
+        let pts = g.points();
+        assert_eq!(pts.len(), 4);
+        assert_eq!(point_key("tps", &pts[0]), "tps[keep=1,slots=2]");
+        assert_eq!(point_key("tps", &pts[1]), "tps[keep=1,slots=4]");
+        assert_eq!(point_key("tps", &pts[3]), "tps[keep=0.5,slots=4]");
+    }
+}

@@ -1,0 +1,194 @@
+//! The perf-barometer harness behind `cargo bench` (rebar-style).
+//!
+//! Structure (see rust/README.md § Benchmarks):
+//!   - **Named workload models** ([`workloads`]): each declares what it
+//!     measures and in which units, runs at an explicit parameter
+//!     point, and returns a [`WorkloadRecord`] that lands in the v2
+//!     recorded-run file `BENCH_native.json`.
+//!   - **Sensitivity grids** ([`grid`]): first-class axis meshes
+//!     (kv-keep × slots × prompt-len, …) rather than hardcoded triples.
+//!   - **Tables** ([`tables`]): the paper's table/figure reproductions;
+//!     print-only, not recorded.
+//!
+//! `bench_main.rs` is a thin driver over this module; the determinism
+//! suite (`tests/bench_determinism.rs`) includes it via `#[path]` and
+//! runs every workload twice, asserting the non-timing fingerprints
+//! match bit-for-bit.
+
+pub mod grid;
+pub mod tables;
+pub mod workloads;
+
+use anyhow::Result;
+use curing::calib::Calibration;
+use curing::coordinator::Ctx;
+use curing::pipeline::Pipeline;
+use curing::tensor::TensorStore;
+use curing::util::bench::{BenchResult, Bencher};
+use curing::util::record::{Measurement, RecordedRun, Unit, WorkloadRecord};
+
+/// Shared state every workload runs against: the experiment context,
+/// quick-vs-full mode, and the cached tiny teacher + calibration that
+/// the compression/PEFT workloads start from.
+pub struct BenchCtx<'a> {
+    pub ctx: &'a Ctx,
+    pub quick: bool,
+    pub tiny: Pipeline<'a>,
+    pub dense: TensorStore,
+    pub calib: Calibration,
+}
+
+impl<'a> BenchCtx<'a> {
+    pub fn new(ctx: &'a Ctx, quick: bool, dense: TensorStore, calib: Calibration) -> Result<Self> {
+        let tiny = ctx.pipeline("tiny")?;
+        Ok(BenchCtx { ctx, quick, tiny, dense, calib })
+    }
+
+    /// The iteration policy for timed closures in this mode (warmup +
+    /// min-iters floor + CV-based stop; see `util::bench::IterPolicy`).
+    pub fn bencher(&self) -> Bencher {
+        if self.quick {
+            Bencher::quick()
+        } else {
+            Bencher::default()
+        }
+    }
+}
+
+/// One named workload model.
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub run: fn(&BenchCtx) -> Result<WorkloadRecord>,
+}
+
+/// The registry of recorded workload models, in report order.
+pub fn workload_specs() -> Vec<WorkloadSpec> {
+    vec![
+        WorkloadSpec {
+            name: "compress_time",
+            about: "wall-clock CUR compression (the paper's headline metric) over k × r_max",
+            run: workloads::compress_time,
+        },
+        WorkloadSpec {
+            name: "prefill_heavy",
+            about: "prompt-ingestion latency/throughput over a prompt-length sweep",
+            run: workloads::prefill_heavy,
+        },
+        WorkloadSpec {
+            name: "decode_heavy",
+            about: "KV-cached greedy decode vs the cache-free replay reference",
+            run: workloads::decode_heavy,
+        },
+        WorkloadSpec {
+            name: "serve_mixed",
+            about: "continuous-batching server under mixed traffic, slots + worker scaling",
+            run: workloads::serve_mixed,
+        },
+        WorkloadSpec {
+            name: "long_context",
+            about: "streaming decode far past the window; quality + throughput vs length",
+            run: workloads::long_context,
+        },
+        WorkloadSpec {
+            name: "kv_cur",
+            about: "CUR-compressed KV cache: keep × slots × prompt-len sensitivity mesh",
+            run: workloads::kv_cur,
+        },
+        WorkloadSpec {
+            name: "micro",
+            about: "hot-path kernel micro-benchmarks (decomposition, matmuls, layer calls)",
+            run: workloads::micro,
+        },
+        WorkloadSpec {
+            name: "peft_heal",
+            about: "Fig 5: full-model healing, ΔU vs LoRA vs MoRA (KD loss series)",
+            run: workloads::peft_heal,
+        },
+        WorkloadSpec {
+            name: "peft_task",
+            about: "Fig 6: MRPC fine-tune vs wiki forgetting, four adapters",
+            run: workloads::peft_task,
+        },
+        WorkloadSpec {
+            name: "peft_uuid",
+            about: "Fig 7: UUID memorization char accuracy per adapter",
+            run: workloads::peft_uuid,
+        },
+    ]
+}
+
+/// Record a timed `BenchResult` as an `ms/iter` measurement (samples +
+/// CV travel with it) and echo the human row.
+pub fn put_timed(rec: &mut WorkloadRecord, r: &BenchResult) {
+    println!("{}", r.row());
+    rec.put(&r.name, Measurement::from_samples(r.samples.clone(), Unit::MsPerIter));
+}
+
+/// Derive a throughput measurement from a timed result: `units_per_iter`
+/// work items per iteration over the measured mean wall time.
+pub fn rate_of(r: &BenchResult, units_per_iter: f64, unit: Unit) -> Measurement {
+    let value = if r.mean_ms > 0.0 { units_per_iter / (r.mean_ms / 1e3) } else { 0.0 };
+    Measurement { value, unit, iters: r.iters, cv: r.cv, deterministic: false, samples: Vec::new() }
+}
+
+/// FNV-1a-64 over a set of token streams, truncated to 48 bits so the
+/// value is exactly representable as an f64 measurement. Streams are
+/// hashed in sorted order: multi-client workloads collect them in
+/// completion order, and the determinism suite pins stream *content*,
+/// not scheduling.
+pub fn tokens_fnv(streams: &[Vec<i32>]) -> f64 {
+    let mut ordered: Vec<&Vec<i32>> = streams.iter().collect();
+    ordered.sort();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for s in ordered {
+        for &t in s {
+            for b in t.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        // Stream separator so [1,2]+[3] != [1]+[2,3].
+        h ^= 0xff;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h & 0xffff_ffff_ffff) as f64
+}
+
+/// Pretty-print a workload's recorded measurements.
+pub fn print_record(rec: &WorkloadRecord) {
+    for (k, m) in &rec.measurements {
+        if m.unit == Unit::MsPerIter && m.iters > 1 {
+            continue; // already echoed as a bench row by put_timed
+        }
+        let noise = if m.iters > 1 {
+            format!("  (cv {:>4.1}%, {} it)", 100.0 * m.cv, m.iters)
+        } else {
+            String::new()
+        };
+        println!("  {:<52} {:>14.4} {}{}", k, m.value, m.unit.as_str(), noise);
+    }
+    for (k, vs) in &rec.series {
+        let first = vs.first().copied().unwrap_or(f64::NAN);
+        let last = vs.last().copied().unwrap_or(f64::NAN);
+        println!("  {:<52} series of {} ({first:.4} -> {last:.4})", k, vs.len());
+    }
+}
+
+/// Run the named workloads and assemble a recorded run.
+pub fn run_workloads(b: &BenchCtx, names: &[&str]) -> Result<RecordedRun> {
+    let mut run = RecordedRun::new(b.ctx.rt.backend_name(), b.quick);
+    for spec in workload_specs() {
+        if !names.contains(&spec.name) {
+            continue;
+        }
+        println!("\n════════ workload {} ════════", spec.name);
+        println!("{}", spec.about);
+        let t0 = std::time::Instant::now();
+        let rec = (spec.run)(b)?;
+        print_record(&rec);
+        println!("──── {} done in {:.1}s", spec.name, t0.elapsed().as_secs_f64());
+        run.put_workload(rec);
+    }
+    Ok(run)
+}

@@ -1,11 +1,44 @@
 //! Micro-benchmark harness (criterion is not in the offline vendor set).
 //!
-//! Runs a closure with warmup, then timed iterations until a wall-clock
-//! budget or iteration cap is hit, and reports mean/p50/p95. Used by
-//! `rust/benches/bench_main.rs` (cargo bench, `harness = false`).
+//! Runs a closure with warmup, then timed iterations under an explicit
+//! [`IterPolicy`]: at least `min_iters` samples, then keep sampling
+//! until the coefficient of variation drops under `cv_target` or the
+//! iteration/wall-clock budget runs out. Reports mean/p50/p95/min plus
+//! the raw samples and their CV, which the recorded-run format
+//! ([`crate::util::record`]) serializes so `cargo xtask bench-diff` can
+//! derive a per-measurement noise threshold. Used by
+//! `rust/benches/` (cargo bench, `harness = false`).
 
-use super::stats::percentile;
+use super::stats::{coeff_var, percentile};
 use std::time::Instant;
+
+/// Iteration policy for one timed measurement: warmup runs that are
+/// never recorded, a floor of recorded iterations, then a CV-based stop
+/// (keep sampling while the spread is above `cv_target`) bounded by an
+/// iteration cap and a wall-clock budget.
+#[derive(Debug, Clone, Copy)]
+pub struct IterPolicy {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget_s: f64,
+    /// Stop early once `coeff_var(samples) <= cv_target` (and the
+    /// `min_iters` floor is met). 0 disables the early stop.
+    pub cv_target: f64,
+}
+
+impl Default for IterPolicy {
+    fn default() -> Self {
+        IterPolicy { warmup_iters: 2, min_iters: 5, max_iters: 50, budget_s: 2.0, cv_target: 0.05 }
+    }
+}
+
+impl IterPolicy {
+    /// Smoke-size policy for CI and quick-mode runs.
+    pub fn quick() -> Self {
+        IterPolicy { warmup_iters: 1, min_iters: 3, max_iters: 10, budget_s: 0.5, cv_target: 0.10 }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -15,50 +48,17 @@ pub struct BenchResult {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub min_ms: f64,
+    /// Coefficient of variation of `samples` (std / mean).
+    pub cv: f64,
+    /// The raw per-iteration wall times, in milliseconds.
+    pub samples: Vec<f64>,
 }
 
 impl BenchResult {
-    pub fn row(&self) -> String {
-        format!(
-            "{:<44} {:>7} it  mean {:>10.4} ms  p50 {:>10.4} ms  p95 {:>10.4} ms  min {:>10.4} ms",
-            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms, self.min_ms
-        )
-    }
-}
-
-pub struct Bencher {
-    pub warmup_iters: usize,
-    pub max_iters: usize,
-    pub budget_s: f64,
-}
-
-impl Default for Bencher {
-    fn default() -> Self {
-        Bencher { warmup_iters: 2, max_iters: 50, budget_s: 2.0 }
-    }
-}
-
-impl Bencher {
-    pub fn quick() -> Self {
-        Bencher { warmup_iters: 1, max_iters: 10, budget_s: 0.5 }
-    }
-
-    /// Time `f` repeatedly. The closure result is returned through a
-    /// volatile sink so the optimizer cannot elide the work.
-    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
-        for _ in 0..self.warmup_iters {
-            black_box(f());
-        }
-        let mut samples = Vec::new();
-        let start = Instant::now();
-        while samples.len() < self.max_iters
-            && (samples.len() < 3 || start.elapsed().as_secs_f64() < self.budget_s)
-        {
-            let t0 = Instant::now();
-            black_box(f());
-            samples.push(t0.elapsed().as_secs_f64() * 1e3);
-        }
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    /// Summarize raw per-iteration samples (milliseconds).
+    pub fn from_samples(name: &str, samples: Vec<f64>) -> BenchResult {
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
         BenchResult {
             name: name.to_string(),
             iters: samples.len(),
@@ -66,7 +66,64 @@ impl Bencher {
             p50_ms: percentile(&samples, 50.0),
             p95_ms: percentile(&samples, 95.0),
             min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            cv: coeff_var(&samples),
+            samples,
         }
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>7} it  mean {:>10.4} ms  p50 {:>10.4} ms  p95 {:>10.4} ms  cv {:>5.1}%",
+            self.name,
+            self.iters,
+            self.mean_ms,
+            self.p50_ms,
+            self.p95_ms,
+            100.0 * self.cv
+        )
+    }
+}
+
+pub struct Bencher {
+    pub policy: IterPolicy,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { policy: IterPolicy::default() }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { policy: IterPolicy::quick() }
+    }
+
+    /// Time `f` repeatedly under the iteration policy. The closure
+    /// result is returned through a volatile sink so the optimizer
+    /// cannot elide the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        let p = &self.policy;
+        for _ in 0..p.warmup_iters {
+            black_box(f());
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+            if samples.len() < p.min_iters.max(1) {
+                continue;
+            }
+            if samples.len() >= p.max_iters || start.elapsed().as_secs_f64() >= p.budget_s {
+                break;
+            }
+            if p.cv_target > 0.0 && coeff_var(&samples) <= p.cv_target {
+                break;
+            }
+        }
+        BenchResult::from_samples(name, samples)
     }
 }
 
@@ -93,5 +150,43 @@ mod tests {
         assert!(r.iters >= 3);
         assert!(r.mean_ms >= 0.0);
         assert!(r.p95_ms >= r.p50_ms * 0.5);
+        assert_eq!(r.samples.len(), r.iters);
+        assert!(r.cv >= 0.0);
+    }
+
+    #[test]
+    fn respects_min_iters_floor() {
+        // A zero CV target disables the early stop; the budget is huge,
+        // so the run must hit the min floor and then stop exactly at
+        // whichever bound triggers first (max_iters here).
+        let b = Bencher {
+            policy: IterPolicy {
+                warmup_iters: 0,
+                min_iters: 4,
+                max_iters: 4,
+                budget_s: 60.0,
+                cv_target: 0.0,
+            },
+        };
+        let r = b.run("noop", || 1u8);
+        assert_eq!(r.iters, 4);
+    }
+
+    #[test]
+    fn cv_stop_halts_stable_workloads_early() {
+        // A no-op body has ~zero spread; the CV stop should finish well
+        // under the iteration cap once the floor is met.
+        let b = Bencher {
+            policy: IterPolicy {
+                warmup_iters: 1,
+                min_iters: 3,
+                max_iters: 1000,
+                budget_s: 60.0,
+                cv_target: 0.95,
+            },
+        };
+        let r = b.run("noop", || black_box(0u8));
+        assert!(r.iters < 1000, "CV stop never triggered: {} iters", r.iters);
+        assert!(r.iters >= 3);
     }
 }

@@ -15,6 +15,7 @@
 //! | `CURING_TIMING`         | [`timing_enabled`]          | `1` prints `[timing]` lines from `util::stats::Timer` |
 //! | `CURING_BENCH_FAST`     | [`bench_fast`]              | `1` shrinks every bench to CI smoke sizes |
 //! | `CURING_FAULTS`         | [`faults_spec`]             | Fault-injection plan wrapped around the backend (see below) |
+//! | `CURING_COMMIT`         | [`commit_sha`]              | Commit stamped into recorded bench runs (falls back to `GITHUB_SHA`) |
 //!
 //! `CURING_FAULTS` holds a [`crate::backend::fault::FaultPlan`] spec —
 //! `;`-separated clauses `seed=<u64>`, `<site>=<p>[:<kind>]` or
@@ -94,6 +95,13 @@ pub fn bench_fast() -> bool {
 /// for the grammar). `None` (or empty) means no injection.
 pub fn faults_spec() -> Option<String> {
     var("CURING_FAULTS").filter(|s| !s.trim().is_empty())
+}
+
+/// `CURING_COMMIT` (or CI's `GITHUB_SHA`): the commit hash stamped into
+/// recorded bench runs (`util::record`). `None` means the run is
+/// recorded without provenance — the harness never shells out to git.
+pub fn commit_sha() -> Option<String> {
+    var("CURING_COMMIT").or_else(|| var("GITHUB_SHA")).filter(|s| !s.trim().is_empty())
 }
 
 #[cfg(test)]

@@ -7,6 +7,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod json;
+pub mod record;
 pub mod rng;
 pub mod stats;
 

@@ -1,0 +1,682 @@
+//! The recorded-run format behind `BENCH_native.json` (schema v2).
+//!
+//! A *recorded run* is the machine-readable output of `cargo bench`:
+//! run-level provenance (engine, commit, date, quick-vs-full mode) plus
+//! one [`WorkloadRecord`] per named workload model. Every measurement
+//! carries an explicit [`Unit`] (so `cargo xtask bench-diff` knows
+//! which direction is an improvement), its iteration count, coefficient
+//! of variation and raw samples (so the diff can derive a per-row noise
+//! threshold instead of a global fudge factor), and a `deterministic`
+//! flag separating timing numbers from outputs the barometer asserts
+//! are bit-stable across runs (token-stream hashes, compaction counts,
+//! byte footprints, losses).
+//!
+//! The v1 format — the flat section grab-bag earlier PRs appended to —
+//! is still readable: [`RecordedRun::load`] migrates it losslessly (see
+//! [`RecordedRun::migrate_v1`]), and [`RecordedRun::merge_into`]
+//! preserves the old writer's contract that sections it does not own
+//! (unknown top-level keys, workloads that were not re-run) survive a
+//! partial bench run untouched.
+
+use crate::util::{Json, JsonObj};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+/// Whether a bigger number is better, worse, or neither — derived from
+/// the unit, used by the delta report to classify changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+    Neutral,
+}
+
+/// The closed set of measurement units a recorded run may use. An
+/// unknown unit string is a schema error on load — the diff tool cannot
+/// classify what it cannot orient.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    /// Generation throughput. Higher is better; timing-derived.
+    TokensPerS,
+    /// Optimizer-step throughput. Higher is better; timing-derived.
+    StepsPerS,
+    /// Mean wall time of one iteration of a timed closure.
+    MsPerIter,
+    /// Wall seconds of a one-shot phase (e.g. compression).
+    Seconds,
+    /// Memory footprint. Lower is better; deterministic.
+    Bytes,
+    /// A 0..1-ish quality score (accuracy, agreement, speedup factor).
+    Ratio,
+    /// A loss in nats. Lower is better; deterministic.
+    Nats,
+    /// Perplexity. Lower is better; deterministic.
+    Ppl,
+    /// A plain count (iterations, compactions, crashes). Neutral: the
+    /// diff reports changes but never calls them regressions.
+    Count,
+}
+
+impl Unit {
+    pub const ALL: [Unit; 9] = [
+        Unit::TokensPerS,
+        Unit::StepsPerS,
+        Unit::MsPerIter,
+        Unit::Seconds,
+        Unit::Bytes,
+        Unit::Ratio,
+        Unit::Nats,
+        Unit::Ppl,
+        Unit::Count,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Unit::TokensPerS => "tokens/s",
+            Unit::StepsPerS => "steps/s",
+            Unit::MsPerIter => "ms/iter",
+            Unit::Seconds => "s",
+            Unit::Bytes => "bytes",
+            Unit::Ratio => "ratio",
+            Unit::Nats => "nats",
+            Unit::Ppl => "ppl",
+            Unit::Count => "count",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Unit> {
+        Unit::ALL.into_iter().find(|u| u.as_str() == s)
+    }
+
+    pub fn direction(self) -> Direction {
+        match self {
+            Unit::TokensPerS | Unit::StepsPerS | Unit::Ratio => Direction::HigherIsBetter,
+            Unit::MsPerIter | Unit::Seconds | Unit::Bytes | Unit::Nats | Unit::Ppl => {
+                Direction::LowerIsBetter
+            }
+            Unit::Count => Direction::Neutral,
+        }
+    }
+
+    /// Timing-derived units vary run to run; everything else defaults
+    /// to deterministic (the determinism suite asserts it).
+    pub fn is_timing(self) -> bool {
+        matches!(self, Unit::TokensPerS | Unit::StepsPerS | Unit::MsPerIter | Unit::Seconds)
+    }
+}
+
+/// One recorded number: value, unit, and the sampling evidence behind
+/// it (iterations, CV, raw samples).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub value: f64,
+    pub unit: Unit,
+    /// Recorded iterations behind `value` (1 for one-shot numbers).
+    pub iters: usize,
+    /// Coefficient of variation across `samples` (0 when unsampled).
+    pub cv: f64,
+    /// Whether re-running the workload in the same build must reproduce
+    /// `value` bit-for-bit. Defaults by unit; counts that depend on
+    /// thread scheduling (crash tallies under fault injection) opt out
+    /// via [`Measurement::volatile`].
+    pub deterministic: bool,
+    /// Raw per-iteration samples in the measurement's own unit.
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    /// A single observed value (no sampling).
+    pub fn point(value: f64, unit: Unit) -> Measurement {
+        Measurement {
+            value,
+            unit,
+            iters: 1,
+            cv: 0.0,
+            deterministic: !unit.is_timing(),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Summarize raw samples: value = mean, CV from the spread.
+    pub fn from_samples(samples: Vec<f64>, unit: Unit) -> Measurement {
+        let n = samples.len().max(1);
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        Measurement {
+            value: mean,
+            unit,
+            iters: samples.len(),
+            cv: crate::util::stats::coeff_var(&samples),
+            deterministic: !unit.is_timing(),
+            samples,
+        }
+    }
+
+    /// Mark a by-default-deterministic measurement (e.g. a crash count
+    /// under fault injection) as scheduling-dependent.
+    pub fn volatile(mut self) -> Measurement {
+        self.deterministic = false;
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("value", Json::Num(self.value));
+        o.insert("unit", Json::Str(self.unit.as_str().to_string()));
+        o.insert("iters", Json::Num(self.iters as f64));
+        o.insert("cv", Json::Num(self.cv));
+        o.insert("deterministic", Json::Bool(self.deterministic));
+        if !self.samples.is_empty() {
+            o.insert("samples", Json::Arr(self.samples.iter().map(|&s| Json::Num(s)).collect()));
+        }
+        Json::Obj(o)
+    }
+
+    fn from_json(name: &str, j: &Json) -> Result<Measurement> {
+        let o = j.as_obj().ok_or_else(|| anyhow!("measurement `{name}` is not an object"))?;
+        let value = o
+            .get("value")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("measurement `{name}` has no numeric `value`"))?;
+        if !value.is_finite() {
+            bail!("measurement `{name}` has a non-finite value");
+        }
+        let unit_s = o
+            .get("unit")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("measurement `{name}` has no `unit`"))?;
+        let unit = Unit::parse(unit_s)
+            .ok_or_else(|| anyhow!("measurement `{name}` has unknown unit `{unit_s}`"))?;
+        let iters = o.get("iters").and_then(Json::as_usize).unwrap_or(1);
+        let cv = o.get("cv").and_then(Json::as_f64).unwrap_or(0.0);
+        let deterministic = match o.get("deterministic") {
+            Some(Json::Bool(b)) => *b,
+            _ => !unit.is_timing(),
+        };
+        let samples = match o.get("samples") {
+            Some(Json::Arr(a)) => a
+                .iter()
+                .map(|v| {
+                    v.as_f64()
+                        .ok_or_else(|| anyhow!("measurement `{name}` has non-numeric samples"))
+                })
+                .collect::<Result<Vec<f64>>>()?,
+            _ => Vec::new(),
+        };
+        Ok(Measurement { value, unit, iters, cv, deterministic, samples })
+    }
+}
+
+/// One named workload model's recorded output: its parameter point
+/// (model config, sizes, grid axes), its measurements, and any loss /
+/// metric series.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WorkloadRecord {
+    pub name: String,
+    /// The parameter point (and grid axes) the workload ran at. Scalar
+    /// values plus arrays for sweep axes.
+    pub params: JsonObj,
+    /// Ordered measurement map (insertion order is report order).
+    pub measurements: Vec<(String, Measurement)>,
+    /// Named numeric series (e.g. a heal-loss curve).
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl WorkloadRecord {
+    pub fn new(name: &str) -> WorkloadRecord {
+        WorkloadRecord { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn param_num(&mut self, key: &str, v: f64) {
+        self.params.insert(key, Json::Num(v));
+    }
+
+    pub fn param_str(&mut self, key: &str, v: &str) {
+        self.params.insert(key, Json::Str(v.to_string()));
+    }
+
+    pub fn param_json(&mut self, key: &str, v: Json) {
+        self.params.insert(key, v);
+    }
+
+    /// Insert or replace a measurement.
+    pub fn put(&mut self, key: &str, m: Measurement) {
+        if let Some(slot) = self.measurements.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = m;
+        } else {
+            self.measurements.push((key.to_string(), m));
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Measurement> {
+        self.measurements.iter().find(|(k, _)| k == key).map(|(_, m)| m)
+    }
+
+    pub fn put_series(&mut self, key: &str, values: Vec<f64>) {
+        if let Some(slot) = self.series.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = values;
+        } else {
+            self.series.push((key.to_string(), values));
+        }
+    }
+
+    /// A printable digest of everything that must not change between
+    /// two in-process runs of the same workload: the parameter point,
+    /// every deterministic measurement, and every series. Timing rows
+    /// and volatile counts are excluded. The determinism suite compares
+    /// these strings verbatim.
+    pub fn fingerprint(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("workload {}\n", self.name));
+        for (k, v) in self.params.iter() {
+            out.push_str(&format!("param {k} = {v}\n"));
+        }
+        for (k, m) in &self.measurements {
+            if m.deterministic {
+                out.push_str(&format!("{k} = {:.9e} {}\n", m.value, m.unit.as_str()));
+            }
+        }
+        for (k, vs) in &self.series {
+            out.push_str(&format!("series {k} ="));
+            for v in vs {
+                out.push_str(&format!(" {v:.9e}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        if !self.params.is_empty() {
+            o.insert("params", Json::Obj(self.params.clone()));
+        }
+        let mut ms = JsonObj::new();
+        for (k, m) in &self.measurements {
+            ms.insert(k.clone(), m.to_json());
+        }
+        o.insert("measurements", Json::Obj(ms));
+        if !self.series.is_empty() {
+            let mut se = JsonObj::new();
+            for (k, vs) in &self.series {
+                se.insert(k.clone(), Json::Arr(vs.iter().map(|&v| Json::Num(v)).collect()));
+            }
+            o.insert("series", Json::Obj(se));
+        }
+        Json::Obj(o)
+    }
+
+    fn from_json(name: &str, j: &Json) -> Result<WorkloadRecord> {
+        let o = j.as_obj().ok_or_else(|| anyhow!("workload `{name}` is not an object"))?;
+        let mut rec = WorkloadRecord::new(name);
+        if let Some(Json::Obj(p)) = o.get("params") {
+            rec.params = p.clone();
+        }
+        let ms = o
+            .get("measurements")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("workload `{name}` has no `measurements` object"))?;
+        for (k, v) in ms.iter() {
+            rec.measurements.push((k.to_string(), Measurement::from_json(k, v)?));
+        }
+        if let Some(Json::Obj(se)) = o.get("series") {
+            for (k, v) in se.iter() {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("workload `{name}` series `{k}` is not an array"))?;
+                let vals = arr
+                    .iter()
+                    .map(|x| {
+                        x.as_f64().ok_or_else(|| {
+                            anyhow!("workload `{name}` series `{k}` has non-numeric entries")
+                        })
+                    })
+                    .collect::<Result<Vec<f64>>>()?;
+                rec.series.push((k.to_string(), vals));
+            }
+        }
+        Ok(rec)
+    }
+}
+
+/// A full recorded run: provenance plus every workload that executed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordedRun {
+    pub engine: String,
+    pub commit: Option<String>,
+    /// UTC calendar date of the run, `YYYY-MM-DD`.
+    pub date: String,
+    /// `"quick"` (CI smoke sizes) or `"full"`.
+    pub mode: String,
+    pub workloads: Vec<WorkloadRecord>,
+    /// Unknown top-level sections preserved verbatim across merges.
+    pub extra: Vec<(String, Json)>,
+}
+
+impl RecordedRun {
+    pub const SCHEMA: f64 = 2.0;
+
+    /// A fresh run stamped with today's date and the commit from the
+    /// environment (CURING_COMMIT / GITHUB_SHA), if any.
+    pub fn new(engine: &str, quick: bool) -> RecordedRun {
+        RecordedRun {
+            engine: engine.to_string(),
+            commit: crate::util::config::commit_sha(),
+            date: today_utc(),
+            mode: if quick { "quick" } else { "full" }.to_string(),
+            workloads: Vec::new(),
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn workload(&self, name: &str) -> Option<&WorkloadRecord> {
+        self.workloads.iter().find(|w| w.name == name)
+    }
+
+    /// Insert or replace a workload record by name.
+    pub fn put_workload(&mut self, rec: WorkloadRecord) {
+        if let Some(slot) = self.workloads.iter_mut().find(|w| w.name == rec.name) {
+            *slot = rec;
+        } else {
+            self.workloads.push(rec);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("schema", Json::Num(Self::SCHEMA));
+        o.insert("engine", Json::Str(self.engine.clone()));
+        match &self.commit {
+            Some(c) => o.insert("commit", Json::Str(c.clone())),
+            None => o.insert("commit", Json::Null),
+        }
+        o.insert("date", Json::Str(self.date.clone()));
+        o.insert("mode", Json::Str(self.mode.clone()));
+        let mut ws = JsonObj::new();
+        for w in &self.workloads {
+            ws.insert(w.name.clone(), w.to_json());
+        }
+        o.insert("workloads", Json::Obj(ws));
+        for (k, v) in &self.extra {
+            o.insert(k.clone(), v.clone());
+        }
+        Json::Obj(o)
+    }
+
+    /// Strict v2 parse: measurements must carry known units and finite
+    /// values. Top-level keys outside the schema land in `extra`.
+    pub fn from_json(j: &Json) -> Result<RecordedRun> {
+        let o = j.as_obj().ok_or_else(|| anyhow!("recorded run is not a JSON object"))?;
+        let ws = o
+            .get("workloads")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| {
+                anyhow!("recorded run has no `workloads` object (v1 file? see `RecordedRun::load`)")
+            })?;
+        let mut run = RecordedRun {
+            engine: o.get("engine").and_then(Json::as_str).unwrap_or("unknown").to_string(),
+            commit: o.get("commit").and_then(Json::as_str).map(str::to_string),
+            date: o.get("date").and_then(Json::as_str).unwrap_or("").to_string(),
+            mode: o.get("mode").and_then(Json::as_str).unwrap_or("full").to_string(),
+            workloads: Vec::new(),
+            extra: Vec::new(),
+        };
+        for (k, v) in ws.iter() {
+            run.workloads.push(WorkloadRecord::from_json(k, v)?);
+        }
+        for (k, v) in o.iter() {
+            if !matches!(k, "schema" | "engine" | "commit" | "date" | "mode" | "workloads") {
+                run.extra.push((k.to_string(), v.clone()));
+            }
+        }
+        Ok(run)
+    }
+
+    /// Load a recorded run from disk, auto-migrating the v1 flat format
+    /// (detected by the absence of a `workloads` object).
+    pub fn load(path: &Path) -> Result<RecordedRun> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let o = j.as_obj().ok_or_else(|| anyhow!("{}: not a JSON object", path.display()))?;
+        if o.get("workloads").is_some() {
+            RecordedRun::from_json(&j)
+        } else {
+            Ok(RecordedRun::migrate_v1(o))
+        }
+    }
+
+    /// Migrate the v1 flat grab-bag into v2 without loss: every known
+    /// section becomes the corresponding workload (units inferred per
+    /// key), every numeric leaf becomes a measurement, strings/bools
+    /// become params, numeric arrays become series, and unrecognized
+    /// top-level sections are preserved verbatim in `extra`.
+    pub fn migrate_v1(o: &JsonObj) -> RecordedRun {
+        let quick = matches!(o.get("fast"), Some(Json::Bool(true)));
+        let mut run = RecordedRun {
+            engine: o.get("backend").and_then(Json::as_str).unwrap_or("native").to_string(),
+            commit: None,
+            date: String::new(),
+            mode: if quick { "quick" } else { "full" }.to_string(),
+            workloads: Vec::new(),
+            extra: Vec::new(),
+        };
+        // v1 `rows` (micro kernel timings) + `decode` + top-level
+        // `config` belong to the micro / decode_heavy workloads.
+        if let Some(Json::Arr(rows)) = o.get("rows") {
+            let mut micro = WorkloadRecord::new("micro");
+            if let Some(Json::Str(cfg)) = o.get("config") {
+                micro.param_str("config", cfg);
+            }
+            for row in rows {
+                let Some(ro) = row.as_obj() else { continue };
+                let Some(name) = ro.get("name").and_then(Json::as_str) else { continue };
+                let iters = ro.get("iters").and_then(Json::as_usize).unwrap_or(1);
+                for (stat, suffix) in [
+                    ("mean_ms", ""),
+                    ("p50_ms", " [p50]"),
+                    ("p95_ms", " [p95]"),
+                    ("min_ms", " [min]"),
+                ] {
+                    if let Some(v) = ro.get(stat).and_then(Json::as_f64) {
+                        let mut m = Measurement::point(v, Unit::MsPerIter);
+                        m.iters = iters;
+                        micro.put(&format!("{name}{suffix}"), m);
+                    }
+                }
+            }
+            run.workloads.push(micro);
+        }
+        for (section, workload) in [
+            ("decode", "decode_heavy"),
+            ("serve", "serve_mixed"),
+            ("kv_cur", "kv_cur"),
+            ("peft_heal", "peft_heal"),
+            ("peft_task", "peft_task"),
+            ("peft_uuid", "peft_uuid"),
+        ] {
+            if let Some(Json::Obj(sec)) = o.get(section) {
+                let mut rec = WorkloadRecord::new(workload);
+                if let Some(Json::Str(cfg)) = o.get("config") {
+                    if section == "decode" {
+                        rec.param_str("config", cfg);
+                    }
+                }
+                for (k, v) in sec.iter() {
+                    match v {
+                        Json::Num(n) => {
+                            let unit = infer_v1_unit(k);
+                            let mut m = Measurement::point(*n, unit);
+                            if unit == Unit::Count && v1_count_is_volatile(k) {
+                                m = m.volatile();
+                            }
+                            rec.put(k, m);
+                        }
+                        Json::Arr(a) if a.iter().all(|x| x.as_f64().is_some()) => {
+                            rec.put_series(
+                                k,
+                                a.iter().filter_map(Json::as_f64).collect::<Vec<f64>>(),
+                            );
+                        }
+                        other => rec.param_json(k, other.clone()),
+                    }
+                }
+                run.workloads.push(rec);
+            }
+        }
+        // Everything else (minus the v1 bookkeeping keys that the v2
+        // header replaces) is preserved verbatim.
+        for (k, v) in o.iter() {
+            let consumed = matches!(
+                k,
+                "schema"
+                    | "backend"
+                    | "config"
+                    | "fast"
+                    | "rows"
+                    | "decode"
+                    | "serve"
+                    | "kv_cur"
+                    | "peft_heal"
+                    | "peft_task"
+                    | "peft_uuid"
+            );
+            if !consumed {
+                run.extra.push((k.to_string(), v.clone()));
+            }
+        }
+        run
+    }
+
+    /// Merge this run into the recorded-run file at `path`, preserving
+    /// everything it does not own: workloads that were not re-run this
+    /// invocation, and unknown top-level sections (both v2 `extra` keys
+    /// and, via migration, any v1 sections already in the file). This
+    /// is the contract the old `merge_bench_json` kept for partial
+    /// bench runs — pinned by `tests/bench_record.rs`.
+    pub fn merge_into(&self, path: &Path) -> Result<()> {
+        let mut merged = if path.exists() {
+            RecordedRun::load(path)?
+        } else {
+            RecordedRun {
+                engine: String::new(),
+                commit: None,
+                date: String::new(),
+                mode: String::new(),
+                workloads: Vec::new(),
+                extra: Vec::new(),
+            }
+        };
+        merged.engine = self.engine.clone();
+        merged.commit = self.commit.clone();
+        merged.date = self.date.clone();
+        merged.mode = self.mode.clone();
+        for w in &self.workloads {
+            merged.put_workload(w.clone());
+        }
+        for (k, v) in &self.extra {
+            if let Some(slot) = merged.extra.iter_mut().find(|(ek, _)| ek == k) {
+                slot.1 = v.clone();
+            } else {
+                merged.extra.push((k.clone(), v.clone()));
+            }
+        }
+        std::fs::write(path, merged.to_json().to_string_pretty())
+            .map_err(|e| anyhow!("write {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+/// Unit inference for v1 keys (the old flat sections carried no units).
+fn infer_v1_unit(key: &str) -> Unit {
+    if key.contains("tokens_per_s") {
+        Unit::TokensPerS
+    } else if key.contains("steps_per_s") {
+        Unit::StepsPerS
+    } else if key.contains("_ms") {
+        Unit::MsPerIter
+    } else if key.contains("bytes") {
+        Unit::Bytes
+    } else if key.contains("loss") {
+        Unit::Nats
+    } else if key.starts_with("ppl") || key.contains("_ppl") {
+        Unit::Ppl
+    } else if key.contains("acc")
+        || key.contains("agreement")
+        || key.contains("speedup")
+        || key.contains("occupancy")
+    {
+        Unit::Ratio
+    } else {
+        Unit::Count
+    }
+}
+
+/// v1 counts that depend on thread scheduling under fault injection.
+fn v1_count_is_volatile(key: &str) -> bool {
+    key.contains("failures") || key.contains("crashes") || key.contains("retried")
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (civil-from-days; no chrono in the
+/// offline vendor set).
+pub fn today_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let days = (secs / 86_400) as i64;
+    let (y, m, d) = civil_from_days(days);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-epoch to (year, month, day), Howard Hinnant's algorithm.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = z - era * 146_097;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_table_is_closed_and_oriented() {
+        for u in Unit::ALL {
+            assert_eq!(Unit::parse(u.as_str()), Some(u));
+        }
+        assert_eq!(Unit::parse("furlongs/fortnight"), None);
+        assert_eq!(Unit::TokensPerS.direction(), Direction::HigherIsBetter);
+        assert_eq!(Unit::Bytes.direction(), Direction::LowerIsBetter);
+        assert_eq!(Unit::Count.direction(), Direction::Neutral);
+        assert!(Unit::MsPerIter.is_timing());
+        assert!(!Unit::Bytes.is_timing());
+    }
+
+    #[test]
+    fn civil_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // 2024-01-01
+        let today = today_utc();
+        assert_eq!(today.len(), 10);
+        assert_eq!(&today[4..5], "-");
+    }
+
+    #[test]
+    fn fingerprint_excludes_timing() {
+        let mut rec = WorkloadRecord::new("w");
+        rec.put("tps", Measurement::point(123.4, Unit::TokensPerS));
+        rec.put("bytes", Measurement::point(4096.0, Unit::Bytes));
+        rec.put("crashes", Measurement::point(2.0, Unit::Count).volatile());
+        let fp = rec.fingerprint();
+        assert!(fp.contains("bytes"));
+        assert!(!fp.contains("tps"), "timing rows must not pin determinism: {fp}");
+        assert!(!fp.contains("crashes"), "volatile counts must not pin determinism: {fp}");
+    }
+}

@@ -80,6 +80,23 @@ pub fn nan_last_asc(x: f64) -> f64 {
     }
 }
 
+/// Coefficient of variation (sample std / mean) of a timing sample.
+/// Returns 0 for fewer than two samples or a non-positive mean — the
+/// bench iteration policy treats that as "no spread measured yet".
+pub fn coeff_var(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mut a = Accum::new();
+    for &x in xs {
+        a.add(x);
+    }
+    if a.mean() <= 0.0 {
+        return 0.0;
+    }
+    a.std() / a.mean()
+}
+
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;

@@ -1,0 +1,47 @@
+//! Determinism suite over the perf-barometer workloads: every named
+//! workload model runs twice in-process at quick sizes, and the
+//! non-timing fingerprints (parameter point, deterministic measurements
+//! such as token-stream hashes / byte footprints / losses, and every
+//! series) must match bit-for-bit. Timing rows and measurements marked
+//! [`volatile`](curing::util::record::Measurement::volatile) are
+//! excluded by construction.
+
+#[path = "../benches/harness/mod.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use curing::coordinator::Ctx;
+use curing::runtime::Runtime;
+use harness::{workload_specs, BenchCtx};
+
+#[test]
+fn every_workload_fingerprint_is_stable_across_in_process_runs() -> anyhow::Result<()> {
+    let root = std::env::temp_dir().join(format!("curing_bench_det_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let ctx = Ctx::with_runtime(Runtime::native(), &root)?;
+    // Smoke-size setup mirroring CI's bench lane: a short cached
+    // pretrain and a small calibration set — the fingerprints only have
+    // to be *stable*, not representative.
+    let dense = ctx.load_or_pretrain("tiny", 5)?;
+    let pipe = ctx.pipeline("tiny")?;
+    let calib = ctx.calibrate_cached(&pipe, &dense, 16)?;
+    let b = BenchCtx::new(&ctx, true, dense, calib)?;
+
+    for spec in workload_specs() {
+        let first = (spec.run)(&b)?;
+        let second = (spec.run)(&b)?;
+        let (fa, fb) = (first.fingerprint(), second.fingerprint());
+        assert!(
+            !fa.is_empty(),
+            "workload {} recorded an empty fingerprint",
+            spec.name
+        );
+        assert_eq!(
+            fa, fb,
+            "workload {} is not deterministic across in-process runs",
+            spec.name
+        );
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(())
+}

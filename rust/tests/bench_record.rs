@@ -1,0 +1,252 @@
+//! The recorded-run format (`util::record`, schema v2): round-trip,
+//! schema/units validation, lossless v1 migration, and the
+//! preserve-unknown-sections contract of [`RecordedRun::merge_into`]
+//! that the old flat `merge_bench_json` writer kept for partial runs.
+
+use curing::util::record::{Measurement, RecordedRun, Unit, WorkloadRecord};
+use curing::util::Json;
+use std::path::PathBuf;
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("curing_bench_record_{tag}_{}.json", std::process::id()))
+}
+
+fn sample_run() -> RecordedRun {
+    let mut run = RecordedRun::new("native", true);
+    run.commit = Some("deadbeef".to_string());
+
+    let mut kv = WorkloadRecord::new("kv_cur");
+    kv.param_str("config", "mini");
+    kv.param_json("grid_keep", Json::Arr(vec![Json::Num(1.0), Json::Num(0.5)]));
+    kv.put("exact_slot_bytes", Measurement::point(4096.0, Unit::Bytes));
+    kv.put(
+        "tokens_per_s[keep=0.5,slots=2]",
+        Measurement::from_samples(vec![101.0, 99.0, 100.0], Unit::TokensPerS),
+    );
+    kv.put("live_bytes[keep=0.5,slots=2]", Measurement::point(2048.0, Unit::Bytes).volatile());
+    kv.put("compactions[keep=0.5,slots=2]", Measurement::point(7.0, Unit::Count));
+    run.put_workload(kv);
+
+    let mut heal = WorkloadRecord::new("peft_heal");
+    heal.param_num("du_steps", 20.0);
+    heal.put("final_loss_du", Measurement::point(1.25, Unit::Nats));
+    heal.put_series("du_loss", vec![3.0, 2.5, 2.0, 1.5, 1.25]);
+    run.put_workload(heal);
+
+    run.extra.push(("notes".to_string(), Json::Str("hand-kept".to_string())));
+    run
+}
+
+// --------------------------------------------------------------- round-trip
+
+#[test]
+fn round_trips_through_json_without_loss() {
+    let run = sample_run();
+    let back = RecordedRun::from_json(&run.to_json()).expect("reparse");
+    assert_eq!(run, back);
+}
+
+#[test]
+fn round_trips_through_disk_via_merge() {
+    let path = tmp_path("disk");
+    let _ = std::fs::remove_file(&path);
+    let run = sample_run();
+    run.merge_into(&path).expect("write");
+    let back = RecordedRun::load(&path).expect("load");
+    assert_eq!(run, back);
+    let _ = std::fs::remove_file(&path);
+}
+
+// --------------------------------------------------- schema / unit validation
+
+#[test]
+fn every_unit_survives_its_own_round_trip() {
+    for unit in Unit::ALL {
+        assert_eq!(Unit::parse(unit.as_str()), Some(unit), "{}", unit.as_str());
+    }
+    assert_eq!(Unit::parse("furlongs"), None);
+}
+
+#[test]
+fn rejects_unknown_units_on_load() {
+    let j = Json::parse(
+        r#"{"schema": 2, "workloads": {"w": {"measurements":
+            {"x": {"value": 1, "unit": "furlongs"}}}}}"#,
+    )
+    .expect("json");
+    let err = RecordedRun::from_json(&j).unwrap_err().to_string();
+    assert!(err.contains("unknown unit"), "{err}");
+}
+
+#[test]
+fn rejects_non_finite_values_on_load() {
+    // JSON cannot spell inf, but 1e999 overflows the f64 parse to it.
+    let j = Json::parse(
+        r#"{"schema": 2, "workloads": {"w": {"measurements":
+            {"x": {"value": 1e999, "unit": "s"}}}}}"#,
+    )
+    .expect("json");
+    let err = RecordedRun::from_json(&j).unwrap_err().to_string();
+    assert!(err.contains("non-finite"), "{err}");
+}
+
+#[test]
+fn deterministic_defaults_follow_the_unit() {
+    assert!(!Measurement::point(1.0, Unit::MsPerIter).deterministic);
+    assert!(!Measurement::from_samples(vec![1.0, 2.0], Unit::TokensPerS).deterministic);
+    assert!(Measurement::point(1.0, Unit::Bytes).deterministic);
+    assert!(Measurement::point(1.0, Unit::Nats).deterministic);
+    assert!(!Measurement::point(1.0, Unit::Count).volatile().deterministic);
+}
+
+#[test]
+fn fingerprint_excludes_timing_and_volatile_rows() {
+    let run = sample_run();
+    let fp = run.workload("kv_cur").expect("kv_cur").fingerprint();
+    assert!(fp.contains("exact_slot_bytes"), "{fp}");
+    assert!(fp.contains("compactions[keep=0.5,slots=2]"), "{fp}");
+    // Timing row and volatile live-bytes must not pin the fingerprint.
+    assert!(!fp.contains("tokens_per_s"), "{fp}");
+    assert!(!fp.contains("live_bytes"), "{fp}");
+    // Series do pin it.
+    let hp = run.workload("peft_heal").expect("peft_heal").fingerprint();
+    assert!(hp.contains("series du_loss"), "{hp}");
+}
+
+// ------------------------------------------------------------- v1 migration
+
+/// A v1 file in the shape earlier PRs appended to `BENCH_native.json`:
+/// flat sections, no units, `fast` flag, plus a section the migration
+/// has never heard of.
+const V1_TEXT: &str = r#"{
+  "schema": 2,
+  "backend": "native",
+  "config": "tiny d_model=256",
+  "fast": true,
+  "rows": [
+    {"name": "matmul_nn tiled", "iters": 9, "mean_ms": 1.5, "p50_ms": 1.4,
+     "p95_ms": 1.9, "min_ms": 1.2}
+  ],
+  "decode": {"speedup": 3.5, "per_token_kv_ms": 0.8},
+  "serve": {"tokens_per_s_slots4": 850.0, "slot_failures_faulted": 3,
+            "scored": 16},
+  "kv_cur": {"exact_slot_bytes": 4096, "live_bytes_keep50": 2000.5,
+             "ppl_exact": 12.5, "token_agreement_keep50": 0.97},
+  "peft_heal": {"final_loss_du": 1.25, "steps_per_s_du": 40.0,
+                "du_loss_series": [3.0, 2.0, 1.5, 1.25]},
+  "custom_section": {"anything": [1, 2, 3]}
+}"#;
+
+#[test]
+fn migrates_v1_losslessly() {
+    let j = Json::parse(V1_TEXT).expect("json");
+    let run = RecordedRun::migrate_v1(j.as_obj().expect("obj"));
+    assert_eq!(run.mode, "quick"); // fast: true
+    assert_eq!(run.engine, "native");
+
+    // rows -> micro, one measurement per recorded stat, units in ms.
+    let micro = run.workload("micro").expect("micro");
+    let mean = micro.get("matmul_nn tiled").expect("mean row");
+    assert_eq!(mean.unit, Unit::MsPerIter);
+    assert_eq!(mean.value, 1.5);
+    assert_eq!(mean.iters, 9);
+    assert_eq!(micro.get("matmul_nn tiled [p95]").expect("p95 row").value, 1.9);
+    assert_eq!(micro.params.get("config").and_then(Json::as_str), Some("tiny d_model=256"));
+
+    // Sections land under the workload names the new harness uses, with
+    // units inferred per key.
+    let decode = run.workload("decode_heavy").expect("decode_heavy");
+    assert_eq!(decode.get("speedup").expect("speedup").unit, Unit::Ratio);
+    assert_eq!(decode.get("per_token_kv_ms").expect("kv ms").unit, Unit::MsPerIter);
+
+    let serve = run.workload("serve_mixed").expect("serve_mixed");
+    assert_eq!(serve.get("tokens_per_s_slots4").expect("tps").unit, Unit::TokensPerS);
+    // Fault-injection tallies migrate as volatile counts; plain counts
+    // stay deterministic.
+    let failures = serve.get("slot_failures_faulted").expect("failures");
+    assert_eq!(failures.unit, Unit::Count);
+    assert!(!failures.deterministic);
+    assert!(serve.get("scored").expect("scored").deterministic);
+
+    let kv = run.workload("kv_cur").expect("kv_cur");
+    assert_eq!(kv.get("live_bytes_keep50").expect("live").unit, Unit::Bytes);
+    assert_eq!(kv.get("ppl_exact").expect("ppl").unit, Unit::Ppl);
+    assert_eq!(kv.get("token_agreement_keep50").expect("agreement").unit, Unit::Ratio);
+
+    let heal = run.workload("peft_heal").expect("peft_heal");
+    assert_eq!(heal.get("final_loss_du").expect("loss").unit, Unit::Nats);
+    assert_eq!(heal.get("steps_per_s_du").expect("rate").unit, Unit::StepsPerS);
+    let series = heal.series.iter().find(|(k, _)| k == "du_loss_series").expect("series");
+    assert_eq!(series.1, vec![3.0, 2.0, 1.5, 1.25]);
+
+    // The unknown section survives verbatim in `extra` and therefore in
+    // the serialized v2 output.
+    assert!(run.extra.iter().any(|(k, _)| k == "custom_section"));
+    let out = run.to_json().to_string_pretty();
+    assert!(out.contains("custom_section"), "{out}");
+
+    // Nothing v1 said is dropped: every numeric leaf of every known
+    // section is now a measurement or a series entry.
+    assert_eq!(run.workload("micro").expect("micro").measurements.len(), 4);
+    assert_eq!(decode.measurements.len(), 2);
+    assert_eq!(serve.measurements.len(), 3);
+    assert_eq!(kv.measurements.len(), 4);
+    assert_eq!(heal.measurements.len(), 2);
+    assert_eq!(heal.series.len(), 1);
+}
+
+#[test]
+fn load_auto_migrates_v1_files() {
+    let path = tmp_path("v1");
+    std::fs::write(&path, V1_TEXT).expect("write v1");
+    let run = RecordedRun::load(&path).expect("load");
+    assert!(run.workload("serve_mixed").is_some());
+    let _ = std::fs::remove_file(&path);
+}
+
+// ----------------------------------------------- merge preserves what it
+// does not own (pins the old merge_bench_json contract)
+
+#[test]
+fn merge_into_preserves_unmerged_workloads_and_unknown_sections() {
+    let path = tmp_path("merge");
+    std::fs::write(&path, V1_TEXT).expect("seed v1 file");
+
+    // A partial re-run: only kv_cur executed this invocation.
+    let mut partial = RecordedRun::new("native", false);
+    partial.commit = Some("cafe0001".to_string());
+    let mut kv = WorkloadRecord::new("kv_cur");
+    kv.put("exact_slot_bytes", Measurement::point(8192.0, Unit::Bytes));
+    partial.put_workload(kv);
+    partial.merge_into(&path).expect("merge");
+
+    let merged = RecordedRun::load(&path).expect("reload");
+    // Header reflects the new run...
+    assert_eq!(merged.mode, "full");
+    assert_eq!(merged.commit.as_deref(), Some("cafe0001"));
+    // ...the re-run workload was replaced wholesale...
+    let kv = merged.workload("kv_cur").expect("kv_cur");
+    assert_eq!(kv.get("exact_slot_bytes").expect("bytes").value, 8192.0);
+    assert!(kv.get("live_bytes_keep50").is_none());
+    // ...and everything the partial run did not own survived: the other
+    // migrated workloads and the unknown v1 section.
+    for name in ["micro", "decode_heavy", "serve_mixed", "peft_heal"] {
+        assert!(merged.workload(name).is_some(), "lost workload {name}");
+    }
+    assert!(merged.extra.iter().any(|(k, _)| k == "custom_section"));
+    // The file on disk is now v2: loading it strictly (no migration)
+    // succeeds.
+    let text = std::fs::read_to_string(&path).expect("read");
+    let j = Json::parse(&text).expect("json");
+    assert!(RecordedRun::from_json(&j).is_ok());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn merge_into_a_fresh_path_creates_the_file() {
+    let path = tmp_path("fresh");
+    let _ = std::fs::remove_file(&path);
+    sample_run().merge_into(&path).expect("merge into nothing");
+    assert!(RecordedRun::load(&path).is_ok());
+    let _ = std::fs::remove_file(&path);
+}

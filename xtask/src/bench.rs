@@ -1,0 +1,558 @@
+//! `cargo xtask bench-check` / `bench-diff` — the reader side of the
+//! recorded-run format (`BENCH_native.json`, schema v2, written by
+//! `rust/src/util/record.rs`).
+//!
+//! `bench-check` validates a recorded run: strict schema (every
+//! measurement has a finite value and a known, oriented unit) plus the
+//! semantic invariants CI used to check with inline scripts — the
+//! CUR-KV live-bytes orderings and the Du heal-loss trend.
+//!
+//! `bench-diff` compares two recorded runs per measurement: the unit
+//! decides which direction is an improvement, and the recorded CVs set
+//! a per-row noise threshold, so a change only counts as a regression
+//! when it exceeds what the samples say is noise. A unit mismatch
+//! between the runs is a hard error — a number that changed meaning
+//! cannot be classified.
+
+use crate::json::{parse, Value};
+use std::path::Path;
+
+/// Whether a bigger number is better, worse, or neither.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Higher,
+    Lower,
+    Neutral,
+}
+
+/// The closed unit table — must match `Unit::ALL` in
+/// `rust/src/util/record.rs` (CI runs bench-check on a freshly
+/// generated file, so drift between the two tables fails fast).
+pub const KNOWN_UNITS: &[(&str, Direction)] = &[
+    ("tokens/s", Direction::Higher),
+    ("steps/s", Direction::Higher),
+    ("ms/iter", Direction::Lower),
+    ("s", Direction::Lower),
+    ("bytes", Direction::Lower),
+    ("ratio", Direction::Higher),
+    ("nats", Direction::Lower),
+    ("ppl", Direction::Lower),
+    ("count", Direction::Neutral),
+];
+
+pub fn unit_direction(unit: &str) -> Option<Direction> {
+    KNOWN_UNITS.iter().find(|(u, _)| *u == unit).map(|(_, d)| *d)
+}
+
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub value: f64,
+    pub unit: String,
+    pub iters: usize,
+    pub cv: f64,
+    pub deterministic: bool,
+    pub n_samples: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub name: String,
+    pub params: Vec<(String, Value)>,
+    pub measurements: Vec<(String, Measurement)>,
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl Workload {
+    pub fn measurement(&self, key: &str) -> Option<&Measurement> {
+        self.measurements.iter().find(|(k, _)| k == key).map(|(_, m)| m)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Run {
+    pub engine: String,
+    pub commit: Option<String>,
+    pub date: String,
+    pub mode: String,
+    pub workloads: Vec<Workload>,
+}
+
+impl Run {
+    pub fn workload(&self, name: &str) -> Option<&Workload> {
+        self.workloads.iter().find(|w| w.name == name)
+    }
+
+    pub fn n_measurements(&self) -> usize {
+        self.workloads.iter().map(|w| w.measurements.len()).sum()
+    }
+}
+
+pub fn load_run(path: &Path) -> Result<Run, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let v = parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_run(&v).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Strict v2 parse. Every violation is an error, not a warning: an
+/// unreadable barometer is worse than none.
+pub fn parse_run(v: &Value) -> Result<Run, String> {
+    let schema = v.get("schema").and_then(Value::as_f64);
+    if schema != Some(2.0) {
+        return Err(format!(
+            "schema must be 2 (recorded-run v2), found {:?} — v1 files are only \
+             readable by the library's migration path, regenerate with `cargo bench`",
+            schema
+        ));
+    }
+    let ws = v
+        .get("workloads")
+        .and_then(Value::as_obj)
+        .ok_or_else(|| "no `workloads` object".to_string())?;
+    let mut run = Run {
+        engine: v.get("engine").and_then(Value::as_str).unwrap_or("unknown").to_string(),
+        commit: v.get("commit").and_then(Value::as_str).map(str::to_string),
+        date: v.get("date").and_then(Value::as_str).unwrap_or("").to_string(),
+        mode: v.get("mode").and_then(Value::as_str).unwrap_or("full").to_string(),
+        workloads: Vec::new(),
+    };
+    for (name, wv) in ws {
+        run.workloads.push(parse_workload(name, wv)?);
+    }
+    Ok(run)
+}
+
+fn parse_workload(name: &str, v: &Value) -> Result<Workload, String> {
+    let mut w = Workload { name: name.to_string(), ..Default::default() };
+    if let Some(params) = v.get("params").and_then(Value::as_obj) {
+        w.params = params.to_vec();
+    }
+    let ms = v
+        .get("measurements")
+        .and_then(Value::as_obj)
+        .ok_or_else(|| format!("workload `{name}` has no `measurements` object"))?;
+    for (key, mv) in ms {
+        let ctx = format!("{name}.{key}");
+        let value = mv
+            .get("value")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| format!("{ctx}: no numeric `value`"))?;
+        if !value.is_finite() {
+            return Err(format!("{ctx}: non-finite value"));
+        }
+        let unit = mv
+            .get("unit")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("{ctx}: no `unit`"))?
+            .to_string();
+        if unit_direction(&unit).is_none() {
+            return Err(format!("{ctx}: unknown unit `{unit}`"));
+        }
+        let iters = mv.get("iters").and_then(Value::as_f64).unwrap_or(1.0);
+        if iters < 1.0 {
+            return Err(format!("{ctx}: iters < 1"));
+        }
+        let cv = mv.get("cv").and_then(Value::as_f64).unwrap_or(0.0);
+        if !cv.is_finite() || cv < 0.0 {
+            return Err(format!("{ctx}: bad cv {cv}"));
+        }
+        let deterministic = match mv.get("deterministic") {
+            Some(Value::Bool(b)) => *b,
+            Some(_) => return Err(format!("{ctx}: `deterministic` is not a bool")),
+            None => return Err(format!("{ctx}: no `deterministic` flag")),
+        };
+        let n_samples = match mv.get("samples") {
+            Some(Value::Arr(a)) => {
+                if a.iter().any(|s| s.as_f64().map(|f| !f.is_finite()).unwrap_or(true)) {
+                    return Err(format!("{ctx}: non-numeric samples"));
+                }
+                a.len()
+            }
+            Some(_) => return Err(format!("{ctx}: `samples` is not an array")),
+            None => 0,
+        };
+        w.measurements.push((
+            key.to_string(),
+            Measurement { value, unit, iters: iters as usize, cv, deterministic, n_samples },
+        ));
+    }
+    if let Some(series) = v.get("series").and_then(Value::as_obj) {
+        for (key, sv) in series {
+            let arr =
+                sv.as_arr().ok_or_else(|| format!("{name}.series.{key}: not an array"))?;
+            let mut vals = Vec::with_capacity(arr.len());
+            for x in arr {
+                match x.as_f64() {
+                    Some(f) if f.is_finite() => vals.push(f),
+                    _ => return Err(format!("{name}.series.{key}: non-numeric entries")),
+                }
+            }
+            w.series.push((key.to_string(), vals));
+        }
+    }
+    Ok(w)
+}
+
+// ------------------------------------------------------------- invariants
+
+/// Split a grid-point key `metric[a=1,b=0.5]` into the metric name and
+/// its coordinates. A bare key returns no coordinates.
+pub fn split_key(key: &str) -> (&str, Vec<(&str, &str)>) {
+    let Some(open) = key.find('[') else { return (key, Vec::new()) };
+    if !key.ends_with(']') {
+        return (key, Vec::new());
+    }
+    let base = &key[..open];
+    let coords = key[open + 1..key.len() - 1]
+        .split(',')
+        .filter_map(|kv| kv.split_once('='))
+        .collect();
+    (base, coords)
+}
+
+/// Semantic invariants over a validated run — the checks CI previously
+/// ran as an inline script against the v1 file. Only workloads that are
+/// present are checked. Returns human-readable failures.
+pub fn check_invariants(run: &Run) -> Vec<String> {
+    let mut errs = Vec::new();
+    if let Some(kv) = run.workload("kv_cur") {
+        check_kv_cur(kv, &mut errs);
+    }
+    if let Some(heal) = run.workload("peft_heal") {
+        match heal.series.iter().find(|(k, _)| k == "du_loss") {
+            None => errs.push("peft_heal: no `du_loss` series".to_string()),
+            Some((_, s)) => {
+                if s.len() < 20 {
+                    errs.push(format!("peft_heal: du_loss series has {} steps (< 20)", s.len()));
+                } else {
+                    let q = s.len() / 4;
+                    let head: f64 = s[..q].iter().sum::<f64>() / q as f64;
+                    let tail: f64 = s[s.len() - q..].iter().sum::<f64>() / q as f64;
+                    if tail >= head {
+                        errs.push(format!(
+                            "peft_heal: du_loss does not trend down (first-quarter mean \
+                             {head:.4}, last-quarter mean {tail:.4})"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    errs
+}
+
+/// The CUR-KV cache must actually shrink: every live-bytes point sits
+/// under the exact-ring bound, and at fixed (slots, prompt) the
+/// footprint is monotone in the keep ratio (with slack — live bytes
+/// are a scheduling-dependent mean).
+fn check_kv_cur(kv: &Workload, errs: &mut Vec<String>) {
+    let Some(bound) = kv.measurement("exact_slot_bytes").map(|m| m.value) else {
+        errs.push("kv_cur: no `exact_slot_bytes` measurement".to_string());
+        return;
+    };
+    // (other-coords, keep, live-bytes) triples from live_bytes[...] keys.
+    let mut points: Vec<(String, f64, f64)> = Vec::new();
+    for (key, m) in &kv.measurements {
+        let (base, coords) = split_key(key);
+        if base != "live_bytes" {
+            continue;
+        }
+        if m.value > bound * 1.001 {
+            errs.push(format!("kv_cur: {key} = {:.0} exceeds exact bound {bound:.0}", m.value));
+        }
+        let mut keep = None;
+        let mut others = Vec::new();
+        for (ck, cv) in coords {
+            if ck == "keep" {
+                keep = cv.parse::<f64>().ok();
+            } else {
+                others.push(format!("{ck}={cv}"));
+            }
+        }
+        if let Some(keep) = keep {
+            points.push((others.join(","), keep, m.value));
+        }
+    }
+    // Monotone in keep per fixed other-coords: lower keep must not hold
+    // more bytes (10% slack for the scheduling-dependent mean).
+    points.sort_by(|a, b| {
+        let ka = (a.0.as_str(), a.1);
+        let kb = (b.0.as_str(), b.1);
+        ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for pair in points.windows(2) {
+        let (g0, k0, v0) = &pair[0];
+        let (g1, k1, v1) = &pair[1];
+        if g0 == g1 && k0 < k1 && *v0 > *v1 * 1.10 {
+            errs.push(format!(
+                "kv_cur[{g0}]: live bytes not monotone in keep \
+                 (keep={k0}: {v0:.0} B > keep={k1}: {v1:.0} B)"
+            ));
+        }
+    }
+}
+
+/// `--require-grid`: at least one workload swept a real sensitivity
+/// mesh (>= 2 grid axes whose cartesian product covers >= 4 points).
+pub fn has_sensitivity_grid(run: &Run) -> bool {
+    run.workloads.iter().any(|w| {
+        let axes: Vec<usize> = w
+            .params
+            .iter()
+            .filter(|(k, _)| k.starts_with("grid_"))
+            .filter_map(|(_, v)| v.as_arr().map(<[Value]>::len))
+            .collect();
+        axes.len() >= 2 && axes.iter().product::<usize>() >= 4
+    })
+}
+
+// ------------------------------------------------------------------ diff
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Class {
+    Improved,
+    Regressed,
+    Neutral,
+}
+
+/// One measurement present in both runs, classified.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub workload: String,
+    pub key: String,
+    pub unit: String,
+    pub old: f64,
+    pub new: f64,
+    /// Relative change (new-old)/|old|; +-inf when old == 0 != new.
+    pub rel: f64,
+    /// Noise threshold this row had to clear: max(3%, 2*cv_old, 2*cv_new).
+    pub threshold: f64,
+    pub class: Class,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DiffReport {
+    pub deltas: Vec<Delta>,
+    /// Measurements only in the new run, as (workload, key).
+    pub added: Vec<(String, String)>,
+    /// Measurements only in the old run, as (workload, key).
+    pub removed: Vec<(String, String)>,
+    pub added_workloads: Vec<String>,
+    pub removed_workloads: Vec<String>,
+    /// Set when the runs were recorded in different modes (quick vs
+    /// full) — the deltas are then apples to oranges.
+    pub mode_mismatch: Option<(String, String)>,
+}
+
+impl DiffReport {
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let improved = self.deltas.iter().filter(|d| d.class == Class::Improved).count();
+        let regressed = self.deltas.iter().filter(|d| d.class == Class::Regressed).count();
+        (improved, regressed, self.deltas.len() - improved - regressed)
+    }
+}
+
+/// Compare two recorded runs measurement by measurement. A shared key
+/// whose unit changed between the runs is a hard error.
+pub fn diff(old: &Run, new: &Run) -> Result<DiffReport, String> {
+    let mut report = DiffReport::default();
+    if old.mode != new.mode {
+        report.mode_mismatch = Some((old.mode.clone(), new.mode.clone()));
+    }
+    let mut unit_errors = Vec::new();
+    for nw in &new.workloads {
+        let Some(ow) = old.workload(&nw.name) else {
+            report.added_workloads.push(nw.name.clone());
+            continue;
+        };
+        for (key, nm) in &nw.measurements {
+            let Some(om) = ow.measurement(key) else {
+                report.added.push((nw.name.clone(), key.clone()));
+                continue;
+            };
+            if om.unit != nm.unit {
+                unit_errors.push(format!(
+                    "{}.{key}: unit changed {} -> {}",
+                    nw.name, om.unit, nm.unit
+                ));
+                continue;
+            }
+            report.deltas.push(classify(&nw.name, key, om, nm));
+        }
+        for (key, _) in &ow.measurements {
+            if nw.measurement(key).is_none() {
+                report.removed.push((nw.name.clone(), key.clone()));
+            }
+        }
+    }
+    for ow in &old.workloads {
+        if new.workload(&ow.name).is_none() {
+            report.removed_workloads.push(ow.name.clone());
+        }
+    }
+    if !unit_errors.is_empty() {
+        return Err(format!(
+            "unit mismatch between runs (a number that changed meaning cannot be \
+             classified):\n  {}",
+            unit_errors.join("\n  ")
+        ));
+    }
+    Ok(report)
+}
+
+fn classify(workload: &str, key: &str, om: &Measurement, nm: &Measurement) -> Delta {
+    let rel = if om.value == 0.0 {
+        if nm.value == 0.0 {
+            0.0
+        } else if nm.value > 0.0 {
+            f64::INFINITY
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        (nm.value - om.value) / om.value.abs()
+    };
+    let threshold = 0.03_f64.max(2.0 * om.cv).max(2.0 * nm.cv);
+    let dir = unit_direction(&om.unit).unwrap_or(Direction::Neutral);
+    let class = if rel.abs() <= threshold || dir == Direction::Neutral {
+        Class::Neutral
+    } else if (rel > 0.0) == (dir == Direction::Higher) {
+        Class::Improved
+    } else {
+        Class::Regressed
+    };
+    Delta {
+        workload: workload.to_string(),
+        key: key.to_string(),
+        unit: om.unit.clone(),
+        old: om.value,
+        new: nm.value,
+        rel,
+        threshold,
+        class,
+    }
+}
+
+// ------------------------------------------------------------- rendering
+
+fn fmt_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.5}")
+    }
+}
+
+fn fmt_rel(rel: f64) -> String {
+    if rel.is_infinite() {
+        if rel > 0.0 { "+inf%".to_string() } else { "-inf%".to_string() }
+    } else {
+        format!("{:+.1}%", 100.0 * rel)
+    }
+}
+
+/// Human delta report: per-workload tables of changed rows (neutral
+/// rows are summarized, not listed, unless `verbose`).
+pub fn render(report: &DiffReport, verbose: bool) -> String {
+    let mut out = String::new();
+    if let Some((om, nm)) = &report.mode_mismatch {
+        out.push_str(&format!(
+            "WARNING: comparing a `{om}` run against a `{nm}` run — \
+             iteration policies differ, deltas are indicative only\n\n"
+        ));
+    }
+    let mut by_workload: Vec<&str> = report.deltas.iter().map(|d| d.workload.as_str()).collect();
+    by_workload.dedup();
+    for w in by_workload {
+        let rows: Vec<&Delta> = report
+            .deltas
+            .iter()
+            .filter(|d| d.workload == w && (verbose || d.class != Class::Neutral))
+            .collect();
+        let n_all = report.deltas.iter().filter(|d| d.workload == w).count();
+        out.push_str(&format!("workload {w} ({n_all} shared measurement(s))\n"));
+        if rows.is_empty() {
+            out.push_str("  all within noise\n");
+        }
+        for d in rows {
+            let glyph = match d.class {
+                Class::Improved => "improved ",
+                Class::Regressed => "REGRESSED",
+                Class::Neutral => "neutral  ",
+            };
+            out.push_str(&format!(
+                "  {glyph} {:<52} {:>14} -> {:>14} {:<8} ({}, noise {:.1}%)\n",
+                d.key,
+                fmt_num(d.old),
+                fmt_num(d.new),
+                d.unit,
+                fmt_rel(d.rel),
+                100.0 * d.threshold
+            ));
+        }
+    }
+    for (w, k) in &report.added {
+        out.push_str(&format!("added   {w}.{k}\n"));
+    }
+    for (w, k) in &report.removed {
+        out.push_str(&format!("removed {w}.{k}\n"));
+    }
+    for w in &report.added_workloads {
+        out.push_str(&format!("added workload   {w}\n"));
+    }
+    for w in &report.removed_workloads {
+        out.push_str(&format!("removed workload {w}\n"));
+    }
+    let (improved, regressed, neutral) = report.counts();
+    out.push_str(&format!(
+        "\n{improved} improved, {regressed} regressed, {neutral} within noise\n"
+    ));
+    out
+}
+
+/// GitHub Actions annotations for regressions (non-blocking warnings).
+pub fn annotations(report: &DiffReport) -> Vec<String> {
+    report
+        .deltas
+        .iter()
+        .filter(|d| d.class == Class::Regressed)
+        .map(|d| {
+            format!(
+                "::warning title=bench regression::{}.{} {} -> {} {} ({}, noise {:.1}%)",
+                d.workload,
+                d.key,
+                fmt_num(d.old),
+                fmt_num(d.new),
+                d.unit,
+                fmt_rel(d.rel),
+                100.0 * d.threshold
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_grid_keys() {
+        let (base, coords) = split_key("live_bytes[keep=0.5,slots=4]");
+        assert_eq!(base, "live_bytes");
+        assert_eq!(coords, vec![("keep", "0.5"), ("slots", "4")]);
+        assert_eq!(split_key("plain").0, "plain");
+        assert!(split_key("plain").1.is_empty());
+    }
+
+    #[test]
+    fn unit_table_is_oriented() {
+        assert_eq!(unit_direction("tokens/s"), Some(Direction::Higher));
+        assert_eq!(unit_direction("ms/iter"), Some(Direction::Lower));
+        assert_eq!(unit_direction("count"), Some(Direction::Neutral));
+        assert_eq!(unit_direction("furlongs"), None);
+    }
+}

@@ -1,10 +1,22 @@
 //! `xtask` — repo tooling, invoked as `cargo xtask <command>` (the alias
-//! lives in `.cargo/config.toml`). The one command today is `lint`: the
-//! **curlint** dependency-free static-analysis pass over `rust/src/**`,
-//! with a `curlint.baseline` ratchet so grandfathered violations can
-//! only ever shrink. See `rust/README.md` § curlint for the rule list
-//! and the incident each rule encodes.
+//! lives in `.cargo/config.toml`). Commands:
+//!
+//! - `lint` — the **curlint** dependency-free static-analysis pass over
+//!   `rust/src/**`, with a `curlint.baseline` ratchet so grandfathered
+//!   violations can only ever shrink. See `rust/README.md` § curlint.
+//! - `bench-check` — validate a recorded benchmark run
+//!   (`BENCH_native.json`, schema v2): units, finiteness, and the
+//!   semantic invariants CI gates on.
+//! - `bench-diff` — compare two recorded runs and classify every shared
+//!   measurement as improved / regressed / within noise, using each
+//!   row's recorded CV as the noise floor.
+//!
+//! Everything here is dependency-free by design (no serde, no dependency
+//! on the `curing` crate): repo tooling must build even when the library
+//! does not.
 
 pub mod baseline;
+pub mod bench;
+pub mod json;
 pub mod lexer;
 pub mod rules;

@@ -1,21 +1,44 @@
-//! `cargo xtask lint` — run curlint over `rust/src/**` and enforce the
-//! `curlint.baseline` ratchet. Exit codes: 0 clean (or fully
-//! grandfathered), 1 new violations or a grown bucket, 2 usage/IO error.
+//! `cargo xtask <command>` — repo tooling.
+//!
+//! - `lint`: run curlint over `rust/src/**` and enforce the
+//!   `curlint.baseline` ratchet. Exit codes: 0 clean (or fully
+//!   grandfathered), 1 new violations or a grown bucket, 2 usage/IO.
+//! - `bench-check <run.json>`: validate a v2 recorded benchmark run.
+//!   Exit codes: 0 valid, 1 validation/invariant failures, 2 usage/IO.
+//! - `bench-diff <old.json> <new.json>`: per-measurement delta report.
+//!   Exit codes: 0 ok, 1 regressions under `--fail-on-regression`,
+//!   2 usage/IO/unit-mismatch.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use xtask::baseline::{self, Counts, Verdict};
+use xtask::bench;
 use xtask::rules::{check_source, Violation};
 
 const USAGE: &str = "\
-usage: cargo xtask lint [options]
+usage: cargo xtask <command> [options]
 
-options:
+commands:
+  lint                       curlint over rust/src/** with the baseline ratchet
+  bench-check <run.json>     validate a v2 recorded benchmark run
+  bench-diff <old> <new>     delta report between two recorded runs
+
+lint options:
   --update-baseline   rewrite curlint.baseline from the current violations
                       (review the diff: counts should only ever shrink)
   --list              print grandfathered violations too, not just new ones
   --root <dir>        repo root (default: auto-detected from cwd)
+
+bench-check options:
+  --require-workloads a,b,c  fail unless every named workload is present
+  --require-grid             fail unless some workload swept a sensitivity grid
+
+bench-diff options:
+  --fail-on-regression       exit 1 when any measurement regressed beyond noise
+  --annotate                 emit GitHub Actions ::warning lines for regressions
+  --verbose                  list within-noise rows too
+
   -h, --help          this message
 ";
 
@@ -23,8 +46,14 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut update = false;
     let mut list = false;
+    let mut require_grid = false;
+    let mut fail_on_regression = false;
+    let mut annotate = false;
+    let mut verbose = false;
+    let mut require_workloads: Vec<String> = Vec::new();
     let mut root: Option<PathBuf> = None;
     let mut cmd: Option<String> = None;
+    let mut operands: Vec<PathBuf> = Vec::new();
     let mut it = args.into_iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -34,6 +63,20 @@ fn main() -> ExitCode {
             }
             "--update-baseline" => update = true,
             "--list" => list = true,
+            "--require-grid" => require_grid = true,
+            "--fail-on-regression" => fail_on_regression = true,
+            "--annotate" => annotate = true,
+            "--verbose" => verbose = true,
+            "--require-workloads" => match it.next() {
+                Some(names) => {
+                    require_workloads
+                        .extend(names.split(',').map(str::trim).map(str::to_string));
+                }
+                None => {
+                    eprintln!("--require-workloads needs a comma-separated list\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
             "--root" => match it.next() {
                 Some(d) => root = Some(PathBuf::from(d)),
                 None => {
@@ -42,6 +85,9 @@ fn main() -> ExitCode {
                 }
             },
             other if cmd.is_none() && !other.starts_with('-') => cmd = Some(other.to_string()),
+            other if cmd.is_some() && !other.starts_with('-') => {
+                operands.push(PathBuf::from(other));
+            }
             other => {
                 eprintln!("unknown option `{other}`\n{USAGE}");
                 return ExitCode::from(2);
@@ -49,37 +95,135 @@ fn main() -> ExitCode {
         }
     }
     match cmd.as_deref() {
-        Some("lint") => {}
+        Some("lint") => {
+            let root = match root.or_else(find_repo_root) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "curlint: could not find the repo root (looked for rust/src upward)"
+                    );
+                    return ExitCode::from(2);
+                }
+            };
+            match run_lint(&root, update, list) {
+                Ok(true) => ExitCode::SUCCESS,
+                Ok(false) => ExitCode::from(1),
+                Err(e) => {
+                    eprintln!("curlint: {e}");
+                    ExitCode::from(2)
+                }
+            }
+        }
+        Some("bench-check") => {
+            let [run] = operands.as_slice() else {
+                eprintln!("bench-check needs exactly one run file\n{USAGE}");
+                return ExitCode::from(2);
+            };
+            run_bench_check(run, &require_workloads, require_grid)
+        }
+        Some("bench-diff") => {
+            let [old, new] = operands.as_slice() else {
+                eprintln!("bench-diff needs exactly two run files\n{USAGE}");
+                return ExitCode::from(2);
+            };
+            run_bench_diff(old, new, fail_on_regression, annotate, verbose)
+        }
         Some(other) => {
-            eprintln!("unknown command `{other}` (only `lint`)\n{USAGE}");
-            return ExitCode::from(2);
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            ExitCode::from(2)
         }
         None => {
             eprintln!("missing command\n{USAGE}");
-            return ExitCode::from(2);
-        }
-    }
-
-    let root = match root.or_else(find_repo_root) {
-        Some(r) => r,
-        None => {
-            eprintln!("curlint: could not find the repo root (looked for rust/src upward)");
-            return ExitCode::from(2);
-        }
-    };
-    match run_lint(&root, update, list) {
-        Ok(clean) => {
-            if clean {
-                ExitCode::SUCCESS
-            } else {
-                ExitCode::from(1)
-            }
-        }
-        Err(e) => {
-            eprintln!("curlint: {e}");
             ExitCode::from(2)
         }
     }
+}
+
+fn run_bench_check(path: &Path, require_workloads: &[String], require_grid: bool) -> ExitCode {
+    let run = match bench::load_run(path) {
+        Ok(run) => run,
+        Err(e) => {
+            eprintln!("bench-check: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut errs = bench::check_invariants(&run);
+    for name in require_workloads {
+        if !name.is_empty() && run.workload(name).is_none() {
+            errs.push(format!("required workload `{name}` is missing"));
+        }
+    }
+    if require_grid && !bench::has_sensitivity_grid(&run) {
+        errs.push(
+            "no sensitivity grid: expected some workload with >= 2 `grid_*` param \
+             axes covering >= 4 points"
+                .to_string(),
+        );
+    }
+    println!(
+        "bench-check: {} — engine {}, mode {}, date {}, {} workload(s), {} measurement(s)",
+        path.display(),
+        run.engine,
+        run.mode,
+        run.date,
+        run.workloads.len(),
+        run.n_measurements()
+    );
+    for w in &run.workloads {
+        println!("  {:<14} {} measurement(s)", w.name, w.measurements.len());
+    }
+    if errs.is_empty() {
+        println!("bench-check: ok");
+        ExitCode::SUCCESS
+    } else {
+        for e in &errs {
+            eprintln!("bench-check: {e}");
+        }
+        eprintln!("bench-check: FAILED — {} problem(s)", errs.len());
+        ExitCode::from(1)
+    }
+}
+
+fn run_bench_diff(
+    old_path: &Path,
+    new_path: &Path,
+    fail_on_regression: bool,
+    annotate: bool,
+    verbose: bool,
+) -> ExitCode {
+    let (old, new) = match (bench::load_run(old_path), bench::load_run(new_path)) {
+        (Ok(o), Ok(n)) => (o, n),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-diff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = match bench::diff(&old, &new) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-diff: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    println!(
+        "bench-diff: {} ({}) -> {} ({})",
+        old_path.display(),
+        old.commit.as_deref().unwrap_or("no commit"),
+        new_path.display(),
+        new.commit.as_deref().unwrap_or("no commit")
+    );
+    print!("{}", bench::render(&report, verbose));
+    if annotate {
+        for line in bench::annotations(&report) {
+            println!("{line}");
+        }
+    }
+    let (_, regressed, _) = report.counts();
+    if fail_on_regression && regressed > 0 {
+        eprintln!("bench-diff: FAILED — {regressed} regression(s) beyond noise");
+        return ExitCode::from(1);
+    }
+    ExitCode::SUCCESS
 }
 
 /// Walk upward from cwd to the first directory containing `rust/src`.

@@ -1,0 +1,321 @@
+//! Tests for the reader side of the recorded-run format: strict schema
+//! validation, semantic invariants, and the delta-report classifier
+//! (improved / regressed / neutral-within-noise / added / removed, with
+//! unit mismatch as a hard error).
+
+use xtask::bench::{check_invariants, diff, has_sensitivity_grid, parse_run, Class, Run};
+use xtask::json::parse;
+
+/// Build a one-workload v2 run with the given measurement rows
+/// (key, value, unit, cv) — enough shape for the classifier tests.
+fn run_with(workload: &str, mode: &str, rows: &[(&str, f64, &str, f64)]) -> Run {
+    let ms: Vec<String> = rows
+        .iter()
+        .map(|(k, v, u, cv)| {
+            format!(r#""{k}": {{"value": {v}, "unit": "{u}", "iters": 3, "cv": {cv}, "#)
+                + r#""deterministic": false}"#
+        })
+        .collect();
+    let text = format!(
+        r#"{{"schema": 2, "engine": "native", "commit": "abc1234", "date": "2026-08-08",
+            "mode": "{mode}",
+            "workloads": {{"{workload}": {{"measurements": {{{}}}}}}}}}"#,
+        ms.join(",")
+    );
+    parse_run(&parse(&text).expect("json")).expect("valid run")
+}
+
+fn parse_text(text: &str) -> Result<Run, String> {
+    parse_run(&parse(text).map_err(|e| e.to_string())?)
+}
+
+// ------------------------------------------------------- schema validation
+
+#[test]
+fn accepts_a_well_formed_run() {
+    let run = run_with("micro", "full", &[("matmul_ms", 1.25, "ms/iter", 0.02)]);
+    assert_eq!(run.workloads.len(), 1);
+    assert_eq!(run.n_measurements(), 1);
+    let m = run.workload("micro").unwrap().measurement("matmul_ms").unwrap();
+    assert_eq!(m.unit, "ms/iter");
+    assert_eq!(m.iters, 3);
+}
+
+#[test]
+fn rejects_unknown_unit() {
+    let err = parse_text(
+        r#"{"schema": 2, "workloads": {"w": {"measurements":
+            {"x": {"value": 1, "unit": "furlongs", "deterministic": true}}}}}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("unknown unit"), "{err}");
+}
+
+#[test]
+fn rejects_non_finite_value() {
+    // 1e999 overflows to +inf in the f64 parse — JSON itself cannot
+    // spell NaN/inf, so overflow is how a non-finite value sneaks in.
+    let err = parse_text(
+        r#"{"schema": 2, "workloads": {"w": {"measurements":
+            {"x": {"value": 1e999, "unit": "s", "deterministic": true}}}}}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("non-finite"), "{err}");
+}
+
+#[test]
+fn rejects_missing_deterministic_flag_and_bad_samples() {
+    let err = parse_text(
+        r#"{"schema": 2, "workloads": {"w": {"measurements":
+            {"x": {"value": 1, "unit": "s"}}}}}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("deterministic"), "{err}");
+
+    let err = parse_text(
+        r#"{"schema": 2, "workloads": {"w": {"measurements":
+            {"x": {"value": 1, "unit": "s", "deterministic": true,
+                   "samples": [1, "oops"]}}}}}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("samples"), "{err}");
+}
+
+#[test]
+fn rejects_v1_shape_with_a_pointer_to_migration() {
+    // v1 files also said "schema": 2 but kept flat sections instead of a
+    // `workloads` object — the strict reader must not half-read them.
+    let err = parse_text(
+        r#"{"schema": 2, "engine": "native",
+            "rows": [{"name": "matmul", "p50_ms": 1.0}]}"#,
+    )
+    .unwrap_err();
+    assert!(err.contains("workloads"), "{err}");
+}
+
+#[test]
+fn rejects_wrong_schema_number() {
+    let err = parse_text(r#"{"schema": 3, "workloads": {}}"#).unwrap_err();
+    assert!(err.contains("schema"), "{err}");
+}
+
+// ----------------------------------------------------------- delta report
+
+#[test]
+fn classifies_improvement_regression_and_noise() {
+    // tokens/s is higher-is-better; ms/iter is lower-is-better.
+    let old = run_with(
+        "serve_mixed",
+        "full",
+        &[
+            ("tokens_per_s[slots=4]", 100.0, "tokens/s", 0.01),
+            ("tok_p95_ms[slots=4]", 20.0, "ms/iter", 0.01),
+            ("prefills[slots=4]", 8.0, "count", 0.0),
+        ],
+    );
+    let new = run_with(
+        "serve_mixed",
+        "full",
+        &[
+            ("tokens_per_s[slots=4]", 120.0, "tokens/s", 0.01), // +20% -> improved
+            ("tok_p95_ms[slots=4]", 26.0, "ms/iter", 0.01),     // +30% -> regressed
+            ("prefills[slots=4]", 9.0, "count", 0.0),           // neutral unit
+        ],
+    );
+    let report = diff(&old, &new).expect("diff");
+    let class_of = |key: &str| {
+        report.deltas.iter().find(|d| d.key == key).map(|d| d.class).expect("delta")
+    };
+    assert_eq!(class_of("tokens_per_s[slots=4]"), Class::Improved);
+    assert_eq!(class_of("tok_p95_ms[slots=4]"), Class::Regressed);
+    // A count changed by +12.5% — beyond the 3% floor, but counts have
+    // no direction, so they can never "regress".
+    assert_eq!(class_of("prefills[slots=4]"), Class::Neutral);
+    assert_eq!(report.counts(), (1, 1, 1));
+}
+
+#[test]
+fn noise_threshold_comes_from_recorded_cv() {
+    // An 8% slowdown with 1% CVs is a regression...
+    let old = run_with("micro", "full", &[("m", 10.0, "ms/iter", 0.01)]);
+    let new = run_with("micro", "full", &[("m", 10.8, "ms/iter", 0.01)]);
+    let report = diff(&old, &new).expect("diff");
+    assert_eq!(report.deltas[0].class, Class::Regressed);
+
+    // ...but the same 8% with a 5% CV on either side is within noise
+    // (threshold = max(3%, 2*cv_old, 2*cv_new) = 10%).
+    let noisy_old = run_with("micro", "full", &[("m", 10.0, "ms/iter", 0.05)]);
+    let report = diff(&noisy_old, &new).expect("diff");
+    assert_eq!(report.deltas[0].class, Class::Neutral);
+    assert!((report.deltas[0].threshold - 0.10).abs() < 1e-12);
+
+    // The floor is 3% even when both runs recorded zero variance.
+    let exact_old = run_with("micro", "full", &[("m", 10.0, "ms/iter", 0.0)]);
+    let exact_new = run_with("micro", "full", &[("m", 10.2, "ms/iter", 0.0)]);
+    let report = diff(&exact_old, &exact_new).expect("diff");
+    assert_eq!(report.deltas[0].class, Class::Neutral);
+    assert!((report.deltas[0].threshold - 0.03).abs() < 1e-12);
+}
+
+#[test]
+fn lists_added_and_removed_workloads_and_measurements() {
+    let mut old = run_with("micro", "full", &[("kept", 1.0, "s", 0.0), ("gone", 2.0, "s", 0.0)]);
+    old.workloads.push(run_with("retired", "full", &[("x", 1.0, "s", 0.0)]).workloads.remove(0));
+    let mut new = run_with("micro", "full", &[("kept", 1.0, "s", 0.0), ("fresh", 3.0, "s", 0.0)]);
+    new.workloads.push(run_with("kv_cur", "full", &[("x", 1.0, "s", 0.0)]).workloads.remove(0));
+
+    let report = diff(&old, &new).expect("diff");
+    assert_eq!(report.deltas.len(), 1); // only `kept` is shared
+    assert_eq!(report.added, vec![("micro".to_string(), "fresh".to_string())]);
+    assert_eq!(report.removed, vec![("micro".to_string(), "gone".to_string())]);
+    assert_eq!(report.added_workloads, vec!["kv_cur".to_string()]);
+    assert_eq!(report.removed_workloads, vec!["retired".to_string()]);
+}
+
+#[test]
+fn unit_mismatch_is_a_hard_error() {
+    let old = run_with("micro", "full", &[("m", 10.0, "ms/iter", 0.0)]);
+    let new = run_with("micro", "full", &[("m", 10.0, "s", 0.0)]);
+    let err = diff(&old, &new).unwrap_err();
+    assert!(err.contains("unit mismatch"), "{err}");
+    assert!(err.contains("ms/iter -> s"), "{err}");
+}
+
+#[test]
+fn mode_mismatch_is_flagged_not_fatal() {
+    let old = run_with("micro", "quick", &[("m", 10.0, "ms/iter", 0.0)]);
+    let new = run_with("micro", "full", &[("m", 10.0, "ms/iter", 0.0)]);
+    let report = diff(&old, &new).expect("diff");
+    assert_eq!(report.mode_mismatch, Some(("quick".to_string(), "full".to_string())));
+    let rendered = xtask::bench::render(&report, false);
+    assert!(rendered.contains("WARNING"), "{rendered}");
+}
+
+#[test]
+fn zero_baseline_gets_an_infinite_delta_not_a_panic() {
+    let old = run_with("serve_mixed", "full", &[("slot_failures", 0.0, "count", 0.0)]);
+    let new = run_with("serve_mixed", "full", &[("slot_failures", 3.0, "count", 0.0)]);
+    let report = diff(&old, &new).expect("diff");
+    assert!(report.deltas[0].rel.is_infinite());
+    assert_eq!(report.deltas[0].class, Class::Neutral); // count: no direction
+}
+
+#[test]
+fn annotations_cover_exactly_the_regressions() {
+    let old = run_with(
+        "micro",
+        "full",
+        &[("a", 10.0, "ms/iter", 0.0), ("b", 10.0, "ms/iter", 0.0)],
+    );
+    let new = run_with(
+        "micro",
+        "full",
+        &[("a", 15.0, "ms/iter", 0.0), ("b", 10.1, "ms/iter", 0.0)],
+    );
+    let report = diff(&old, &new).expect("diff");
+    let notes = xtask::bench::annotations(&report);
+    assert_eq!(notes.len(), 1);
+    assert!(notes[0].starts_with("::warning"), "{}", notes[0]);
+    assert!(notes[0].contains("micro.a"), "{}", notes[0]);
+}
+
+// ------------------------------------------------------------- invariants
+
+#[test]
+fn kv_cur_live_bytes_must_sit_under_the_exact_bound() {
+    let run = run_with(
+        "kv_cur",
+        "full",
+        &[
+            ("exact_slot_bytes", 1000.0, "bytes", 0.0),
+            ("live_bytes[keep=0.5,slots=2,prompt=8]", 1500.0, "bytes", 0.0),
+        ],
+    );
+    let errs = check_invariants(&run);
+    assert!(errs.iter().any(|e| e.contains("exceeds exact bound")), "{errs:?}");
+}
+
+#[test]
+fn kv_cur_live_bytes_must_be_monotone_in_keep() {
+    let run = run_with(
+        "kv_cur",
+        "full",
+        &[
+            ("exact_slot_bytes", 10000.0, "bytes", 0.0),
+            ("live_bytes[keep=0.25,slots=2,prompt=8]", 900.0, "bytes", 0.0),
+            ("live_bytes[keep=0.5,slots=2,prompt=8]", 500.0, "bytes", 0.0),
+            ("live_bytes[keep=1,slots=2,prompt=8]", 1000.0, "bytes", 0.0),
+        ],
+    );
+    let errs = check_invariants(&run);
+    assert!(errs.iter().any(|e| e.contains("not monotone in keep")), "{errs:?}");
+
+    // A well-ordered mesh (within the 10% slack) passes.
+    let ok = run_with(
+        "kv_cur",
+        "full",
+        &[
+            ("exact_slot_bytes", 10000.0, "bytes", 0.0),
+            ("live_bytes[keep=0.25,slots=2,prompt=8]", 300.0, "bytes", 0.0),
+            ("live_bytes[keep=0.5,slots=2,prompt=8]", 520.0, "bytes", 0.0),
+            ("live_bytes[keep=1,slots=2,prompt=8]", 1000.0, "bytes", 0.0),
+            // A different slot count is its own group — not compared
+            // against the slots=2 points.
+            ("live_bytes[keep=0.25,slots=4,prompt=8]", 9000.0, "bytes", 0.0),
+        ],
+    );
+    assert!(check_invariants(&ok).is_empty(), "{:?}", check_invariants(&ok));
+}
+
+#[test]
+fn peft_heal_needs_a_downward_du_loss_series() {
+    let mk = |series: &[f64]| {
+        let text = format!(
+            r#"{{"schema": 2, "workloads": {{"peft_heal": {{
+                "measurements": {{}},
+                "series": {{"du_loss": [{}]}}}}}}}}"#,
+            series.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+        );
+        parse_text(&text).expect("run")
+    };
+    // 24 steps trending down: first-quarter mean > last-quarter mean.
+    let down: Vec<f64> = (0..24).map(|i| 3.0 - 0.1 * i as f64).collect();
+    assert!(check_invariants(&mk(&down)).is_empty());
+
+    // Too short.
+    let errs = check_invariants(&mk(&down[..10]));
+    assert!(errs.iter().any(|e| e.contains("< 20")), "{errs:?}");
+
+    // Long enough but flat-to-rising.
+    let up: Vec<f64> = (0..24).map(|i| 3.0 + 0.1 * i as f64).collect();
+    let errs = check_invariants(&mk(&up));
+    assert!(errs.iter().any(|e| e.contains("trend down")), "{errs:?}");
+
+    // Missing series entirely.
+    let none = parse_text(
+        r#"{"schema": 2, "workloads": {"peft_heal": {"measurements": {}}}}"#,
+    )
+    .expect("run");
+    let errs = check_invariants(&none);
+    assert!(errs.iter().any(|e| e.contains("du_loss")), "{errs:?}");
+}
+
+#[test]
+fn sensitivity_grid_detection() {
+    let gridded = parse_text(
+        r#"{"schema": 2, "workloads": {"kv_cur": {
+            "params": {"grid_keep": [1, 0.5, 0.25], "grid_slots": [2, 4]},
+            "measurements": {}}}}"#,
+    )
+    .expect("run");
+    assert!(has_sensitivity_grid(&gridded));
+
+    // One axis is a sweep, not a grid.
+    let line = parse_text(
+        r#"{"schema": 2, "workloads": {"prefill_heavy": {
+            "params": {"grid_prompt": [16, 32, 64]},
+            "measurements": {}}}}"#,
+    )
+    .expect("run");
+    assert!(!has_sensitivity_grid(&line));
+}
