@@ -33,7 +33,9 @@
 //! `Runtime::open_default`) or the serve CLI's `--faults` flag; the
 //! grammar lives at [`FaultPlan::parse`].
 
-use crate::backend::{Backend, CalibOut, HealOut, KvCache, LayerParams, PackedHead, StepMode};
+use crate::backend::{
+    Backend, CalibOut, HealOut, KvCache, LayerParams, PackedHead, SpecError, StepMode,
+};
 use crate::model::ModelConfig;
 use crate::runtime::{ArtifactSpec, Bindings};
 use crate::tensor::{Tensor, TensorStore};
@@ -168,21 +170,25 @@ impl FaultPlan {
         let mut plan = FaultPlan::default();
         for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
             let Some((key, val)) = clause.split_once('=') else {
-                bail!("fault clause '{clause}' is not key=value");
+                bail!(SpecError { what: format!("fault clause '{clause}' is not key=value") });
             };
             if key == "seed" {
-                plan.seed = val
-                    .parse()
-                    .map_err(|_| anyhow::anyhow!("bad fault seed '{val}' (want u64)"))?;
+                plan.seed = val.parse().map_err(|_| {
+                    anyhow::anyhow!(SpecError {
+                        what: format!("bad fault seed '{val}' (want u64)"),
+                    })
+                })?;
                 continue;
             }
             let (p_str, kind) = match val.split_once(':') {
                 Some((p, k)) => (p, FaultKind::parse(k)?),
                 None => (val, FaultKind::Error),
             };
-            let p: f64 = p_str
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad fault probability '{p_str}' in '{clause}'"))?;
+            let p: f64 = p_str.parse().map_err(|_| {
+                anyhow::anyhow!(SpecError {
+                    what: format!("bad fault probability '{p_str}' in '{clause}'"),
+                })
+            })?;
             ensure!((0.0..=1.0).contains(&p), "fault probability {p} must be in [0, 1]");
             if key == "all" {
                 plan.rules.extend(FaultSite::ALL.map(|site| FaultRule { site, p, kind }));

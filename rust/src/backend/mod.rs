@@ -153,6 +153,44 @@ pub struct HealOut {
     pub y_student: Tensor,
 }
 
+/// A capability the backend does not implement. The typed payload of
+/// every unsupported-operation default on [`Backend`], so callers can
+/// downcast and branch on "this backend can't do that" instead of
+/// matching message strings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Unsupported {
+    /// [`Backend::name`] of the refusing backend.
+    pub backend: String,
+    /// The refusal, e.g. `has no packed-head kernel`, including any
+    /// remedial hint.
+    pub op: String,
+}
+
+impl std::fmt::Display for Unsupported {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "backend '{}' {}", self.backend, self.op)
+    }
+}
+
+impl std::error::Error for Unsupported {}
+
+/// A malformed CLI/config spec string (kv policy, fault plan). Typed so
+/// the binary can tell usage errors (print the grammar, exit early)
+/// from engine failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError {
+    /// What was wrong, phrased for the terminal.
+    pub what: String,
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.what)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
 /// How a [`KvCache`] retires cached positions once a slot lane is full.
 ///
 /// * [`KvPolicy::Exact`] — the sliding-window ring: the newest write
@@ -202,23 +240,31 @@ impl KvPolicy {
             return Ok(KvPolicy::Exact);
         }
         let Some(rest) = s.strip_prefix("cur:") else {
-            bail!("unknown kv policy '{s}' (exact | cur:<keep>[:<sinks>:<recent>])");
+            bail!(SpecError {
+                what: format!("unknown kv policy '{s}' (exact | cur:<keep>[:<sinks>:<recent>])"),
+            });
         };
         let parts: Vec<&str> = rest.split(':').collect();
         ensure!(
             parts.len() == 1 || parts.len() == 3,
             "kv policy '{s}' must be cur:<keep> or cur:<keep>:<sinks>:<recent>"
         );
-        let keep: f32 = parts[0]
-            .parse()
-            .map_err(|_| anyhow::anyhow!("bad keep ratio '{}' in kv policy '{s}'", parts[0]))?;
+        let keep: f32 = parts[0].parse().map_err(|_| {
+            anyhow::anyhow!(SpecError {
+                what: format!("bad keep ratio '{}' in kv policy '{s}'", parts[0]),
+            })
+        })?;
         ensure!(keep > 0.0 && keep <= 1.0, "keep ratio {keep} must be in (0, 1]");
         let (sinks, recent) = if parts.len() == 3 {
-            let sinks: usize = parts[1]
-                .parse()
-                .map_err(|_| anyhow::anyhow!("bad sink count '{}' in kv policy '{s}'", parts[1]))?;
+            let sinks: usize = parts[1].parse().map_err(|_| {
+                anyhow::anyhow!(SpecError {
+                    what: format!("bad sink count '{}' in kv policy '{s}'", parts[1]),
+                })
+            })?;
             let recent: usize = parts[2].parse().map_err(|_| {
-                anyhow::anyhow!("bad recent count '{}' in kv policy '{s}'", parts[2])
+                anyhow::anyhow!(SpecError {
+                    what: format!("bad recent count '{}' in kv policy '{s}'", parts[2]),
+                })
             })?;
             (sinks, recent)
         } else {
@@ -589,10 +635,10 @@ pub trait Backend {
         slot: usize,
     ) -> Result<Tensor> {
         let _ = (cfg, p, x, kv, layer, slot);
-        bail!(
-            "backend '{}' has no KV-cache decode path (supports_kv_decode = false)",
-            self.name()
-        )
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: "has no KV-cache decode path (supports_kv_decode = false)".into(),
+        })
     }
 
     /// Fused one-position layer pass across N independent slots: `x` is
@@ -614,10 +660,10 @@ pub trait Backend {
         slots: &[usize],
     ) -> Result<Tensor> {
         let _ = (cfg, p, x, kv, layer, slots);
-        bail!(
-            "backend '{}' has no KV-cache decode path (supports_kv_decode = false)",
-            self.name()
-        )
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: "has no KV-cache decode path (supports_kv_decode = false)".into(),
+        })
     }
 
     /// Compact slot `slot`'s full K/V lane down to the cache's
@@ -646,10 +692,10 @@ pub trait Backend {
         slot: usize,
     ) -> Result<usize> {
         let _ = (cfg, kv, slot);
-        bail!(
-            "backend '{}' has no KV-cache compression path (supports_kv_decode = false)",
-            self.name()
-        )
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: "has no KV-cache compression path (supports_kv_decode = false)".into(),
+        })
     }
 
     /// Pre-pack the tied-embedding LM head for repeated decode-step
@@ -671,7 +717,10 @@ pub trait Backend {
         packed: &PackedHead,
     ) -> Result<Tensor> {
         let _ = (cfg, x, ln_f, packed);
-        bail!("backend '{}' has no packed-head kernel", self.name())
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: "has no packed-head kernel".into(),
+        })
     }
 
     /// Layer forward with calibration taps (dense layers only in practice).
@@ -764,10 +813,10 @@ pub trait Backend {
     ) -> Result<f64> {
         let _ = (cfg, teacher, student, adapters, opt, adapter, mode, tokens, targets,
                  loss_mask, lr, t);
-        bail!(
-            "backend '{}' has no switched full-model step implementation",
-            self.name()
-        )
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: "has no switched full-model step implementation".into(),
+        })
     }
 
     /// Logits of the adapter-blended student model, (b, s, vocab) — the
@@ -783,10 +832,10 @@ pub trait Backend {
         tokens: &Tensor,
     ) -> Result<Tensor> {
         let _ = (cfg, teacher, student, adapters, adapter, tokens);
-        bail!(
-            "backend '{}' has no switched full-model logits implementation",
-            self.name()
-        )
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: "has no switched full-model logits implementation".into(),
+        })
     }
 
     /// Whether this backend can execute arbitrary named AOT artifacts
@@ -801,11 +850,13 @@ pub trait Backend {
     }
 
     fn artifact_spec(&self, name: &str) -> Result<ArtifactSpec> {
-        bail!(
-            "backend '{}' cannot introspect AOT artifact '{name}' \
-             (build with --features pjrt and run `make artifacts`)",
-            self.name()
-        )
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: format!(
+                "cannot introspect AOT artifact '{name}' \
+                 (build with --features pjrt and run `make artifacts`)"
+            ),
+        })
     }
 
     fn execute_artifact(
@@ -814,11 +865,13 @@ pub trait Backend {
         bindings: &Bindings,
     ) -> Result<HashMap<String, Tensor>> {
         let _ = bindings;
-        bail!(
-            "backend '{}' cannot execute AOT artifact '{name}' \
-             (build with --features pjrt and run `make artifacts`)",
-            self.name()
-        )
+        bail!(Unsupported {
+            backend: self.name().into(),
+            op: format!(
+                "cannot execute AOT artifact '{name}' \
+                 (build with --features pjrt and run `make artifacts`)"
+            ),
+        })
     }
 }
 

@@ -726,6 +726,10 @@ pub(super) struct InferScratch {
     /// cache).
     rcos: Vec<f32>,
     rsin: Vec<f32>,
+    /// Decode-row coordinates validated by `layer_decode_batch` before
+    /// each step. Scratch-owned so steady-state decode performs no
+    /// per-step allocation for the batch metadata.
+    pub(super) rows: Vec<DecodeRow>,
 }
 
 impl InferScratch {
@@ -745,6 +749,7 @@ impl InferScratch {
             scores: Vec::new(),
             rcos: Vec::new(),
             rsin: Vec::new(),
+            rows: Vec::new(),
         }
     }
 }
@@ -819,6 +824,7 @@ pub(super) fn layer_infer_impl(
     for i in 0..bs * di {
         g[i] = silu(g[i]) * up[i];
     }
+    // curlint: allow(hot-path-purity) -- the layer's output buffer: its ownership moves into the returned Tensor; every intermediate reuses scratch
     let mut y = vec![0.0f32; bs * d];
     matmul_nn_into(g, wdown, bs, di, d, &mut y);
     add_inplace(&mut y, x2);
@@ -924,6 +930,7 @@ pub(super) fn layer_decode_impl(
     for i in 0..b * di {
         g[i] = silu(g[i]) * up[i];
     }
+    // curlint: allow(hot-path-purity) -- the step's output buffer: its ownership moves into the returned Tensor; every intermediate reuses scratch
     let mut y = vec![0.0f32; b * d];
     matmul_nn_into(g, wdown, b, di, d, &mut y);
     add_inplace(&mut y, x2);

@@ -92,7 +92,7 @@ pub(super) fn par_chunk_tasks<F>(
         for (ci, chunk) in buf.chunks_mut(per * stride).enumerate() {
             let f = &f;
             scope.spawn(move || {
-                let mut local = Vec::new(); // curlint: allow(kernel-purity) -- per-worker scratch, allocated once per spawned thread
+                let mut local = Vec::new(); // curlint: allow(hot-path-purity) -- per-worker scratch, allocated once per spawned thread
                 for (j, piece) in chunk.chunks_mut(stride).enumerate() {
                     f(ci * per + j, piece, &mut local);
                 }
@@ -253,7 +253,7 @@ pub fn matmul_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &
 
 /// C (m×n) = A (m×k) · B (k×n), all row-major.
 pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper; hot paths use matmul_nn_into
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(hot-path-purity) -- allocating convenience wrapper; hot paths use matmul_nn_into
     matmul_nn_into(a, b, m, k, n, &mut out);
     out
 }
@@ -261,7 +261,7 @@ pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
 /// C (m×n) = A (m×k) · Bᵀ where B is (n×k) row-major, into `out`: rows
 /// of C are dot products of A rows with B rows (never materializes the
 /// transpose).
-pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+pub(crate) fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), m * k, "matmul_nt: A size");
     assert_eq!(b.len(), n * k, "matmul_nt: B size");
     assert_eq!(out.len(), m * n, "matmul_nt: out size");
@@ -277,7 +277,7 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &
 
 /// C (m×n) = A (m×k) · Bᵀ where B is (n×k) row-major.
 pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper; hot paths use matmul_nt_into
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(hot-path-purity) -- allocating convenience wrapper; hot paths use matmul_nt_into
     matmul_nt_into(a, b, m, k, n, &mut out);
     out
 }
@@ -300,7 +300,7 @@ pub struct PackedB {
 pub fn pack_nt(b: &[f32], n: usize, k: usize) -> PackedB {
     assert_eq!(b.len(), n * k, "pack_nt: B size");
     let panels = n.div_ceil(NR);
-    let mut data = vec![0.0f32; panels * k * NR]; // curlint: allow(kernel-purity) -- one-time pack of B into panels, amortized across decode steps
+    let mut data = vec![0.0f32; panels * k * NR]; // curlint: allow(hot-path-purity) -- one-time pack of B into panels, amortized across decode steps
     for p in 0..panels {
         let width = (n - p * NR).min(NR);
         let base = p * k * NR;
@@ -380,7 +380,7 @@ pub fn matmul_nt_packed_into(a: &[f32], pb: &PackedB, m: usize, out: &mut [f32])
 
 /// Allocating convenience over [`matmul_nt_packed_into`].
 pub fn matmul_nt_packed(a: &[f32], pb: &PackedB, m: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * pb.n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper; hot paths use matmul_nt_packed_into
+    let mut out = vec![0.0f32; m * pb.n]; // curlint: allow(hot-path-purity) -- allocating convenience wrapper; hot paths use matmul_nt_packed_into
     matmul_nt_packed_into(a, pb, m, &mut out);
     out
 }
@@ -388,7 +388,7 @@ pub fn matmul_nt_packed(a: &[f32], pb: &PackedB, m: usize) -> Vec<f32> {
 /// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major (the
 /// gradient-accumulation shape: dW = Xᵀ·dY), into `out`. Unrolls k by 4
 /// so each output row is loaded/stored once per four k steps.
-pub fn matmul_tn_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+pub(crate) fn matmul_tn_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
     assert_eq!(a.len(), k * m, "matmul_tn: A size");
     assert_eq!(b.len(), k * n, "matmul_tn: B size");
     assert_eq!(out.len(), m * n, "matmul_tn: out size");
@@ -429,7 +429,7 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &
 
 /// C (m×n) = Aᵀ · B where A is (k×m) and B is (k×n) row-major.
 pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- allocating convenience wrapper over par_row_chunks
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(hot-path-purity) -- allocating convenience wrapper over par_row_chunks
     matmul_tn_into(a, b, k, m, n, &mut out);
     out
 }
@@ -438,7 +438,7 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32>
 pub fn matmul_nn_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_nn: A size");
     assert_eq!(b.len(), k * n, "matmul_nn: B size");
-    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- scalar reference kernel: bench baseline + test oracle
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(hot-path-purity) -- scalar reference kernel: bench baseline + test oracle
     par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
         for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
             let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
@@ -457,7 +457,7 @@ pub fn matmul_nn_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> V
 pub fn matmul_nt_scalar(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "matmul_nt: A size");
     assert_eq!(b.len(), n * k, "matmul_nt: B size");
-    let mut out = vec![0.0f32; m * n]; // curlint: allow(kernel-purity) -- scalar reference kernel: bench baseline + test oracle
+    let mut out = vec![0.0f32; m * n]; // curlint: allow(hot-path-purity) -- scalar reference kernel: bench baseline + test oracle
     par_row_chunks(&mut out, m, n, m * k * n, |lo, chunk| {
         for (ri, out_row) in chunk.chunks_mut(n).enumerate() {
             let a_row = &a[(lo + ri) * k..(lo + ri + 1) * k];
@@ -481,7 +481,7 @@ pub fn add_inplace(a: &mut [f32], b: &[f32]) {
     }
 }
 
-pub const RMS_EPS: f32 = 1e-5;
+pub(crate) const RMS_EPS: f32 = 1e-5;
 
 /// RMSNorm over the last dim: y = x / sqrt(mean(x²)+ε) ⊙ w. Returns the
 /// normalized output and the per-row inverse RMS (cached for backward),
@@ -489,8 +489,8 @@ pub const RMS_EPS: f32 = 1e-5;
 pub fn rmsnorm_fwd(x: &[f32], w: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
     debug_assert_eq!(x.len(), rows * d);
     debug_assert_eq!(w.len(), d);
-    let mut y = vec![0.0f32; rows * d]; // curlint: allow(kernel-purity) -- forward output buffer, owned by caller
-    let mut inv = vec![0.0f32; rows]; // curlint: allow(kernel-purity) -- saved rms statistics for the backward pass
+    let mut y = vec![0.0f32; rows * d]; // curlint: allow(hot-path-purity) -- forward output buffer, owned by caller
+    let mut inv = vec![0.0f32; rows]; // curlint: allow(hot-path-purity) -- saved rms statistics for the backward pass
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let ms = xr.iter().map(|&v| v * v).sum::<f32>() / d as f32;
@@ -531,8 +531,8 @@ pub fn rmsnorm_bwd(
     rows: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    let mut dx = vec![0.0f32; rows * d]; // curlint: allow(kernel-purity) -- gradient output buffer, owned by caller
-    let mut dw = vec![0.0f32; d]; // curlint: allow(kernel-purity) -- gradient output buffer, owned by caller
+    let mut dx = vec![0.0f32; rows * d]; // curlint: allow(hot-path-purity) -- gradient output buffer, owned by caller
+    let mut dw = vec![0.0f32; d]; // curlint: allow(hot-path-purity) -- gradient output buffer, owned by caller
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
@@ -553,7 +553,7 @@ pub fn rmsnorm_bwd(
 }
 
 /// One RoPE rotation table: cos/sin, each s×half, row-major by position.
-pub struct RopeTable {
+pub(crate) struct RopeTable {
     pub cos: Vec<f32>,
     pub sin: Vec<f32>,
 }
@@ -575,9 +575,9 @@ pub fn rope_row_into(pos: usize, half: usize, cos: &mut [f32], sin: &mut [f32]) 
 
 /// Precompute the RoPE rotation table for `s` positions × `half` pairs:
 /// returns (cos, sin), each s×half.
-pub fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut cos = vec![0.0f32; s * half]; // curlint: allow(kernel-purity) -- RoPE table built once at model setup, not per step
-    let mut sin = vec![0.0f32; s * half]; // curlint: allow(kernel-purity) -- RoPE table built once at model setup, not per step
+pub(crate) fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut cos = vec![0.0f32; s * half]; // curlint: allow(hot-path-purity) -- RoPE table built once at model setup, not per step
+    let mut sin = vec![0.0f32; s * half]; // curlint: allow(hot-path-purity) -- RoPE table built once at model setup, not per step
     for pos in 0..s {
         rope_row_into(
             pos,
@@ -592,9 +592,10 @@ pub fn rope_table(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
 /// Process-wide RoPE table cache keyed on (seq, half-dim). Every layer of
 /// every forward shares one table per shape instead of rebuilding it
 /// per layer call (ROADMAP: the rebuild dominated small-batch serving).
-pub fn rope_tables_cached(s: usize, half: usize) -> Arc<RopeTable> {
+pub(crate) fn rope_tables_cached(s: usize, half: usize) -> Arc<RopeTable> {
     static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<RopeTable>>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    // curlint: allow(hot-path-purity) -- one short lock per layer call guards the process-wide table cache and replaces a full per-layer table rebuild
     let mut map = cache.lock().unwrap_or_else(|e| e.into_inner());
     map.entry((s, half))
         .or_insert_with(|| {
@@ -637,6 +638,7 @@ pub fn rope_apply(
 
 /// Apply RoPE in place to a (rows × nh·dh) buffer where row `i` sits at
 /// sequence position `pos[i]` (the single-position KV-decode path).
+// curlint: allow(dead-pub) -- reference implementation that rope_apply_rows_local is checked against in tests; kept as the documented baseline
 pub fn rope_apply_rows(
     x: &mut [f32],
     pos: &[usize],
@@ -693,7 +695,7 @@ fn rope_rotate_row(xr: &mut [f32], nh: usize, dh: usize, cos: &[f32], sin: &[f32
     }
 }
 
-pub fn sigmoid(x: f32) -> f32 {
+pub(crate) fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 

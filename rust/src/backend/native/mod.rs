@@ -114,6 +114,7 @@ impl Backend for NativeBackend {
         Ok(Tensor::from_f32(&x.shape, cache.y))
     }
 
+    // curlint: hot-entry
     fn layer_forward_infer(
         &self,
         cfg: &ModelConfig,
@@ -136,6 +137,7 @@ impl Backend for NativeBackend {
         false
     }
 
+    // curlint: hot-entry
     fn layer_prefill(
         &self,
         cfg: &ModelConfig,
@@ -174,6 +176,7 @@ impl Backend for NativeBackend {
         Ok(Tensor::from_f32(&x.shape, y))
     }
 
+    // curlint: hot-entry
     fn layer_decode_batch(
         &self,
         cfg: &ModelConfig,
@@ -189,9 +192,14 @@ impl Backend for NativeBackend {
         ensure!(kv.d == d, "kv cache is d={}, decode input is d={d}", kv.d);
         ensure!(layer < kv.n_layers(), "layer {layer} beyond kv cache ({})", kv.n_layers());
         ensure!(slots.len() == n, "need one slot per input row");
+        let mut sc = self.scratch.borrow_mut();
         // Validate every row before touching any cache state, so a bad
-        // batch errors without leaving position maps half-updated.
-        let mut rows = Vec::with_capacity(n);
+        // batch errors without leaving position maps half-updated. The
+        // row buffer lives on the scratch so steady-state decode does
+        // not allocate for batch metadata (an early error forfeits the
+        // capacity for one step, nothing else).
+        let mut rows = std::mem::take(&mut sc.rows);
+        rows.clear();
         for (r, &slot) in slots.iter().enumerate() {
             ensure!(slot < kv.b, "slot {slot} out of cache lanes 0..{}", kv.b);
             ensure!(
@@ -221,7 +229,6 @@ impl Backend for NativeBackend {
             }
         }
         let dims = forward::layer_dims(cfg.n_heads, p, n, kv.cap, d)?;
-        let mut sc = self.scratch.borrow_mut();
         let (kc, vc) = (&mut kv.k[layer], &mut kv.v[layer]);
         let y = forward::layer_decode_impl(
             dims,
@@ -242,6 +249,7 @@ impl Backend for NativeBackend {
                 kv.positions[layer][slot].push(row.pos);
             }
         }
+        sc.rows = rows;
         Ok(Tensor::from_f32(&[n, 1, d], y))
     }
 

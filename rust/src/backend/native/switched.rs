@@ -39,11 +39,11 @@ use anyhow::{anyhow, ensure, Context, Result};
 use std::collections::HashMap;
 
 /// Distillation temperature of the heal loss (paper App. B).
-pub const KD_TEMPERATURE: f64 = 10.0;
+pub(crate) const KD_TEMPERATURE: f64 = 10.0;
 /// KD weight in the heal loss mix.
-pub const KD_WEIGHT: f64 = 0.9;
+pub(crate) const KD_WEIGHT: f64 = 0.9;
 /// CE weight in the heal loss mix.
-pub const CE_WEIGHT: f64 = 0.1;
+pub(crate) const CE_WEIGHT: f64 = 0.1;
 
 /// Resolve layer `l`'s blended adapter view. `Du` and non-middle layers
 /// get `None`; for the other families every middle layer must hold the

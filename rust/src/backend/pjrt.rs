@@ -54,6 +54,7 @@ impl PjrtBackend {
         let text = std::fs::read_to_string(&mpath)
             .with_context(|| format!("missing {} — run `make artifacts`", mpath.display()))?;
         let manifest = Json::parse(&text)?;
+        // curlint: allow(typed-error) -- wraps the foreign xla error's debug string; the feature-gated pjrt backend has no typed taxonomy yet
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(PjrtBackend {
             client,
@@ -635,6 +636,7 @@ pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
         Data::I32(v) => (xla::ElementType::S32, pod_bytes(v)),
     };
     xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)
+        // curlint: allow(typed-error) -- wraps the foreign xla error's debug string; the feature-gated pjrt backend has no typed taxonomy yet
         .map_err(|e| anyhow!("create literal: {e:?}"))
 }
 
@@ -667,5 +669,34 @@ fn pod_bytes<T: PodNum>(v: &[T]) -> &[u8] {
     // size, and the borrow ties the byte view's lifetime to `v`.
     unsafe {
         std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::pod_bytes;
+
+    // These run under Miri in CI (the `miri` lane): the raw-pointer
+    // reinterpretation above is the repo's only unsafe block, and Miri
+    // checks the provenance/alignment argument the SAFETY comment makes.
+    #[test]
+    fn pod_bytes_views_f32_in_host_order() {
+        let v = [1.0f32, -2.5, f32::NAN, 0.0];
+        let b = pod_bytes(&v);
+        assert_eq!(b.len(), std::mem::size_of_val(&v[..]));
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(&b[i * 4..(i + 1) * 4], x.to_ne_bytes());
+        }
+    }
+
+    #[test]
+    fn pod_bytes_views_i32_and_empty_slices() {
+        let v = [i32::MIN, -1, 0, i32::MAX];
+        let b = pod_bytes(&v);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(&b[i * 4..(i + 1) * 4], x.to_ne_bytes());
+        }
+        let empty: [f32; 0] = [];
+        assert!(pod_bytes(&empty).is_empty());
     }
 }

@@ -230,6 +230,7 @@ pub fn select_kv_positions(keys: &Mat, weights: &[f64], keep: usize) -> Result<V
 
 /// Theorem 3.1 error constants for DEIM selections:
 /// `η_p = ‖(P[p, :])^{-1}‖₂ = 1/σ_min(P[p, :])` and likewise for q.
+// curlint: allow(dead-pub) -- paper Theorem 3.1 error-bound API; exercised by the property tests, kept pub for error-analysis tooling
 pub fn deim_error_constants(p_vecs: &Mat, rows: &[usize], q_vecs: &Mat, cols: &[usize]) -> (f64, f64) {
     let pp = p_vecs.select_rows(rows);
     let qq = q_vecs.select_rows(cols); // Q[:, q] rows of V matrix = entries V[q, :]
@@ -247,6 +248,7 @@ pub fn deim_error_constants(p_vecs: &Mat, rows: &[usize], q_vecs: &Mat, cols: &[
 
 /// Approximation error report for one factorization.
 #[derive(Debug, Clone)]
+// curlint: allow(dead-pub) -- paper error-bound API; reached through approx_error, kept pub for error-analysis tooling
 pub struct CurError {
     pub fro: f64,
     pub spectral: f64,
@@ -254,6 +256,7 @@ pub struct CurError {
     pub cur_fro: f64,
 }
 
+// curlint: allow(dead-pub) -- paper error-bound API; exercised by the factorization tests, kept pub for error-analysis tooling
 pub fn approx_error(w: &Mat, f: &CurFactors, rng: &mut Rng) -> CurError {
     let rec = f.reconstruct();
     let diff = w.sub(&rec);

@@ -118,6 +118,21 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// A server-loop invariant that failed to hold — always an engine bug,
+/// never a client error. Carried as the typed payload of the error that
+/// aborts `run`, so supervisors can downcast and treat it as a crash
+/// rather than a request-level failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct EngineInvariant(pub String);
+
+impl std::fmt::Display for EngineInvariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine invariant violated: {}", self.0)
+    }
+}
+
+impl std::error::Error for EngineInvariant {}
+
 /// One scoring request: a full sequence (tokens + next-token targets).
 pub struct ScoreRequest {
     pub tokens: Vec<i32>,
@@ -261,13 +276,13 @@ struct GenSlot {
 /// a lane the backend keeps failing).
 pub const QUARANTINE_AFTER: usize = 3;
 /// Max degraded-mode steps; each halves the `cur` KV `keep` ratio.
-pub const DEGRADE_MAX_LEVEL: u32 = 3;
+pub(crate) const DEGRADE_MAX_LEVEL: u32 = 3;
 /// Live-KV fraction (of the allocation) above which — or a backlog at
 /// ≥3/4 of `queue_cap` — degraded mode steps `keep` down.
-pub const DEGRADE_HIGH_WATER: f64 = 0.85;
+pub(crate) const DEGRADE_HIGH_WATER: f64 = 0.85;
 /// Live-KV fraction below which (with a cooled backlog) degraded mode
 /// steps back toward the configured policy.
-pub const DEGRADE_LOW_WATER: f64 = 0.60;
+pub(crate) const DEGRADE_LOW_WATER: f64 = 0.60;
 
 /// The server. `slots` bounds concurrent generations (the KV-cache
 /// footprint: `n_layers × 2 × slots·seq·d_model × 4` bytes — see
@@ -305,10 +320,6 @@ pub struct GenerationServer<'p> {
     /// is a no-op for standalone servers.
     pub tick: Option<Box<dyn Fn()>>,
 }
-
-/// The scoring server is one mode of the generation server (send only
-/// [`Request::Score`]); the old name stays for that use.
-pub type BatchingServer<'p> = GenerationServer<'p>;
 
 impl<'p> GenerationServer<'p> {
     /// Serve until the request channel disconnects and all accepted
@@ -494,8 +505,14 @@ impl<'p> GenerationServer<'p> {
                     .iter()
                     .enumerate()
                     .position(|(i, s)| s.is_none() && !quarantined[i])
-                    .ok_or_else(|| anyhow!("no free generation slot despite n_active < usable"))?;
-                let kvm = kv.as_mut().ok_or_else(|| anyhow!("kv cache missing at admission"))?;
+                    .ok_or_else(|| {
+                        anyhow!(EngineInvariant(
+                            "no free generation slot despite n_active < usable".into()
+                        ))
+                    })?;
+                let kvm = kv
+                    .as_mut()
+                    .ok_or_else(|| anyhow!(EngineInvariant("kv cache missing at admission".into())))?;
                 let tp = Instant::now();
                 // A backend fault during prefill fails this request (and
                 // charges the lane's streak) — it never takes down the
@@ -605,8 +622,9 @@ impl<'p> GenerationServer<'p> {
             // ---- one fused decode step across all active slots, with
             // per-slot fault isolation.
             if n_active > 0 {
-                let kvm =
-                    kv.as_mut().ok_or_else(|| anyhow!("kv cache missing with active slots"))?;
+                let kvm = kv.as_mut().ok_or_else(|| {
+                    anyhow!(EngineInvariant("kv cache missing with active slots".into()))
+                })?;
                 let mut slot_ids = Vec::with_capacity(n_active);
                 let mut last = Vec::with_capacity(n_active);
                 for (i, s) in active.iter().enumerate() {
@@ -745,9 +763,11 @@ impl<'p> GenerationServer<'p> {
                 for (slot, tok) in emitted {
                     fail_streak[slot] = 0;
                     let done = {
-                        let gs = active[slot]
-                            .as_mut()
-                            .ok_or_else(|| anyhow!("decode step touched an empty slot {slot}"))?;
+                        let gs = active[slot].as_mut().ok_or_else(|| {
+                            anyhow!(EngineInvariant(format!(
+                                "decode step touched an empty slot {slot}"
+                            )))
+                        })?;
                         gs.generated.push(tok);
                         gs.last = tok;
                         // What the client sees between two tokens: the
@@ -760,9 +780,9 @@ impl<'p> GenerationServer<'p> {
                     };
                     stats.tokens_generated += 1;
                     if done {
-                        let gs = active[slot]
-                            .take()
-                            .ok_or_else(|| anyhow!("finished slot {slot} already empty"))?;
+                        let gs = active[slot].take().ok_or_else(|| {
+                            anyhow!(EngineInvariant(format!("finished slot {slot} already empty")))
+                        })?;
                         n_active -= 1;
                         // Release the lane immediately so live-KV stats
                         // count only in-flight requests (admission would
@@ -1128,7 +1148,8 @@ pub fn spawn_gen_clients(
 /// clients on it. The originating `Sender` is dropped before returning,
 /// so the receiver disconnects — and the server exits — exactly when
 /// the last client thread finishes.
-pub fn spawn_clients(
+#[cfg(test)]
+fn spawn_clients(
     vocab: &Vocab,
     kind: CorpusKind,
     seq: usize,
@@ -1147,6 +1168,7 @@ pub fn spawn_clients(
 /// [`spawn_gen_clients`] can count retries, timeouts and shed requests
 /// instead of only reading the successful payloads.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
+// curlint: allow(dead-pub) -- the result type of the pub client-fleet helpers here; harness code destructures it through them without naming it
 pub struct ClientTally {
     pub ok: usize,
     pub overloaded: usize,
@@ -1212,12 +1234,14 @@ impl std::fmt::Display for ClientTally {
 
 /// Drain every generation response from a client fleet (call after the
 /// server run returns, when all response senders have dropped) and
-/// tally the outcomes.
+/// tally the outcomes. Uses `try_iter`, which is equivalent to a
+/// blocking drain once the senders are gone — and degrades to a short
+/// read instead of a hang if a caller breaks that contract.
 pub fn drain_gen_responses(rxs: &[Receiver<GenResponse>]) -> (Vec<GenResponse>, ClientTally) {
     let mut out = Vec::new();
     let mut tally = ClientTally::default();
     for rx in rxs {
-        for resp in rx.iter() {
+        for resp in rx.try_iter() {
             tally.count(&resp.error);
             out.push(resp);
         }
@@ -1232,7 +1256,7 @@ pub fn drain_score_responses(
     let mut out = Vec::new();
     let mut tally = ClientTally::default();
     for rx in rxs {
-        for resp in rx.iter() {
+        for resp in rx.try_iter() {
             tally.count(&resp.error);
             out.push(resp);
         }

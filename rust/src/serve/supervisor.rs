@@ -361,6 +361,7 @@ impl Supervisor {
 
 /// What supervision saw over one cluster run.
 #[derive(Debug, Default)]
+// curlint: allow(dead-pub) -- the return type of Supervisor::shutdown; callers reach it through that method without naming the type
 pub struct SupervisorReport {
     /// Final stats of every cleanly drained incarnation.
     pub finished: Vec<ServeStats>,

@@ -55,6 +55,7 @@ impl Tensor {
 
     pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        // curlint: allow(hot-path-purity) -- copies the <=4-element shape slice; the data buffer itself is moved, not copied
         Tensor { shape: shape.to_vec(), data: Data::F32(data) }
     }
 

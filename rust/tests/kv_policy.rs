@@ -208,3 +208,30 @@ fn full_lane_errors_and_reset_clears_state() {
     let t = pipe.prefill_slot(&store, &plan, &mut kv, 0, &prompt, packed.as_ref()).unwrap();
     assert!((0..cfg.vocab as i32).contains(&t));
 }
+
+#[test]
+fn unsupported_capability_downcasts_to_typed_payload() {
+    use curing::backend::native::NativeBackend;
+    use curing::backend::Unsupported;
+    let be = NativeBackend::new();
+    let err = be.artifact_spec("step").unwrap_err();
+    let u = err
+        .downcast_ref::<Unsupported>()
+        .expect("capability refusals carry a typed Unsupported payload");
+    assert_eq!(u.backend, "native");
+    assert!(u.op.contains("artifact"), "op names the capability: {}", u.op);
+    // The rendered message keeps the old human-readable shape.
+    assert!(err.to_string().starts_with("backend 'native' "), "{err}");
+}
+
+#[test]
+fn kv_policy_parse_errors_downcast_to_spec_error() {
+    use curing::backend::SpecError;
+    for bad in ["lru", "cur:nope", "cur:0.5:x:4"] {
+        let err = KvPolicy::parse(bad).unwrap_err();
+        assert!(
+            err.downcast_ref::<SpecError>().is_some(),
+            "'{bad}' should be a typed usage error, got: {err}"
+        );
+    }
+}

@@ -275,11 +275,7 @@ fn check_kv_cur(kv: &Workload, errs: &mut Vec<String>) {
     }
     // Monotone in keep per fixed other-coords: lower keep must not hold
     // more bytes (10% slack for the scheduling-dependent mean).
-    points.sort_by(|a, b| {
-        let ka = (a.0.as_str(), a.1);
-        let kb = (b.0.as_str(), b.1);
-        ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
-    });
+    points.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
     for pair in points.windows(2) {
         let (g0, k0, v0) = &pair[0];
         let (g1, k1, v1) = &pair[1];
@@ -327,6 +323,11 @@ pub struct Delta {
     pub rel: f64,
     /// Noise threshold this row had to clear: max(3%, 2*cv_old, 2*cv_new).
     pub threshold: f64,
+    /// Both sides recorded this measurement as deterministic (a
+    /// non-timing quantity — bytes, counts, losses): a regression here
+    /// is a semantic change, never noise, so it can gate CI even when
+    /// timing rows cannot.
+    pub deterministic: bool,
     pub class: Class,
 }
 
@@ -349,6 +350,15 @@ impl DiffReport {
         let improved = self.deltas.iter().filter(|d| d.class == Class::Improved).count();
         let regressed = self.deltas.iter().filter(|d| d.class == Class::Regressed).count();
         (improved, regressed, self.deltas.len() - improved - regressed)
+    }
+
+    /// Regressions on rows both runs recorded as deterministic — the
+    /// subset `--fail-on-regression-deterministic` gates on.
+    pub fn n_deterministic_regressions(&self) -> usize {
+        self.deltas
+            .iter()
+            .filter(|d| d.class == Class::Regressed && d.deterministic)
+            .count()
     }
 }
 
@@ -429,6 +439,7 @@ fn classify(workload: &str, key: &str, om: &Measurement, nm: &Measurement) -> De
         new: nm.value,
         rel,
         threshold,
+        deterministic: om.deterministic && nm.deterministic,
         class,
     }
 }

@@ -1,0 +1,513 @@
+//! The approximate call graph for curlint v2's cross-file rules, built
+//! on [`crate::itemgraph`]. Resolution is *documented approximation*,
+//! tuned so that imprecision errs toward over-approximating
+//! reachability (purity stays strict) and under-approximating liveness
+//! evidence only where a miss would flag working code:
+//!
+//! * **Free calls** `f(…)` resolve through the caller's module, its
+//!   `use` imports (aliases included), then glob imports.
+//! * **Path calls** `a::b::f(…)` resolve `crate`/`self`/`super`/`Self`
+//!   prefixes, imported names, and child `mod`s; `Type::method(…)`
+//!   falls back to the `(self type, name)` method index.
+//! * **Method calls** `.m(…)` resolve *receiver-agnostically*: every
+//!   crate method named `m` becomes a callee — except names on
+//!   [`STD_METHODS`], which collide with std prelude methods on
+//!   slices/`Vec`/`Option`/iterators and would connect essentially all
+//!   code to all code. A crate method shadowing a std name is still
+//!   reachable via `Type::name(…)` paths and free calls.
+//! * Macro bodies are scanned as ordinary tokens; turbofish and
+//!   `<T as Trait>::` paths are skipped (unresolvable without types).
+//!
+//! The three rule passes on top:
+//!
+//! * [`CallGraph::hot_path_purity`] — BFS from `// curlint: hot-entry`
+//!   fns plus every fn in [`crate::rules::KERNEL_MODULES`] (the v1
+//!   `kernel-purity` floor, kept as a strict superset); each reachable
+//!   fn body must pass [`crate::rules::purity_scan`]. Kernel-module
+//!   files are skipped here only because `check_source` already scans
+//!   them wholesale under the same rule name.
+//! * [`CallGraph::typed_error`] — pub fns (including pub-trait default
+//!   methods) in `serve/` and `backend/` returning `Result` must not
+//!   construct `anyhow!("…")` / `bail!("…")` with a bare message.
+//! * [`CallGraph::dead_pub`] — plain-`pub` non-method items whose name
+//!   never appears in any *other* file (crate sources plus the
+//!   tests/benches/examples reference set) are flagged.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::itemgraph::{ItemGraph, ItemKind, Vis};
+use crate::lexer::TokKind;
+use crate::rules::{purity_scan, suffix_match, Violation, KERNEL_MODULES};
+
+/// Method names shared with std prelude types. Receiver-agnostic `.m(`
+/// edges on these are suppressed (see module docs).
+const STD_METHODS: &[&str] = &[
+    "abs", "and_then", "as_bytes", "as_mut", "as_ref", "as_slice", "as_str",
+    "ceil", "chunks", "clear", "clone", "cloned", "cmp", "collect",
+    "contains", "contains_key", "copied", "copy_from_slice", "count",
+    "default", "drain", "drop", "entry", "enumerate", "eq", "err", "extend",
+    "fill", "filter", "filter_map", "first", "flat_map", "flatten", "floor",
+    "flush", "fmt", "fold", "from", "get", "get_mut", "get_or_insert_with",
+    "hash", "insert", "into", "into_iter", "is_empty", "is_some", "is_none",
+    "iter", "iter_mut", "join", "last", "len", "lock", "map", "map_err",
+    "max", "min", "next", "ok", "or_else", "parse", "pop", "position",
+    "push", "read", "recv", "remove", "replace", "resize", "rev", "reverse",
+    "send", "skip", "sort", "spawn", "split_at", "sqrt", "sum", "swap",
+    "take", "to_owned", "to_string", "to_vec", "truncate", "try_into",
+    "unwrap_or", "unwrap_or_default", "unwrap_or_else", "windows", "write",
+    "zip",
+];
+
+/// Keywords and tuple-ctor lookalikes that sit before `(` without being
+/// fn calls.
+const NOT_CALLS: &[&str] = &[
+    "if", "else", "match", "while", "for", "loop", "return", "in", "as",
+    "let", "fn", "move", "mut", "ref", "box", "await", "where", "impl",
+    "dyn", "Some", "None", "Ok", "Err", "Box", "Vec", "String",
+];
+
+pub struct CallGraph<'a> {
+    g: &'a ItemGraph,
+    /// `calls[caller item idx] -> callee item idxs` (fn items only).
+    calls: BTreeMap<usize, Vec<usize>>,
+    /// Trait names declared `pub` (for effective-pub of default methods).
+    pub_traits: BTreeSet<String>,
+}
+
+impl<'a> CallGraph<'a> {
+    pub fn build(g: &'a ItemGraph) -> CallGraph<'a> {
+        // ---- indexes
+        let mut free: BTreeMap<(Vec<String>, String), Vec<usize>> = BTreeMap::new();
+        let mut methods: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut typed: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+        let mut child_mods: BTreeSet<(Vec<String>, String)> = BTreeSet::new();
+        let mut pub_traits: BTreeSet<String> = BTreeSet::new();
+        for (idx, it) in g.items.iter().enumerate() {
+            match it.kind {
+                ItemKind::Fn => {
+                    if it.is_method {
+                        methods.entry(it.name.clone()).or_default().push(idx);
+                        if let Some(ty) = &it.self_ty {
+                            typed.entry((ty.clone(), it.name.clone())).or_default().push(idx);
+                        }
+                    } else {
+                        free.entry((it.module.clone(), it.name.clone()))
+                            .or_default()
+                            .push(idx);
+                    }
+                }
+                ItemKind::Mod => {
+                    child_mods.insert((it.module.clone(), it.name.clone()));
+                }
+                ItemKind::Trait => {
+                    if it.vis == Vis::Pub {
+                        pub_traits.insert(it.name.clone());
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut named_imports: BTreeMap<(Vec<String>, String), Vec<Vec<String>>> =
+            BTreeMap::new();
+        let mut globs: BTreeMap<Vec<String>, Vec<Vec<String>>> = BTreeMap::new();
+        for im in &g.imports {
+            if im.glob {
+                globs.entry(im.module.clone()).or_default().push(im.target.clone());
+            } else {
+                named_imports
+                    .entry((im.module.clone(), im.name.clone()))
+                    .or_default()
+                    .push(im.target.clone());
+            }
+        }
+
+        // Resolve one absolute candidate path (`…::name`) to fn items.
+        let resolve_abs = |path: &[String]| -> Vec<usize> {
+            let Some((name, modpath)) = path.split_last() else { return Vec::new() };
+            let mut out = Vec::new();
+            if let Some(fns) = free.get(&(modpath.to_vec(), name.clone())) {
+                out.extend_from_slice(fns);
+            }
+            // `…::Type::method` — the second-to-last segment as a type.
+            if out.is_empty() {
+                if let Some(ty) = modpath.last() {
+                    if let Some(ms) = typed.get(&(ty.clone(), name.clone())) {
+                        out.extend_from_slice(ms);
+                    }
+                }
+            }
+            out
+        };
+
+        // ---- edge extraction
+        let mut calls: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for idx in g.fns() {
+            let it = &g.items[idx];
+            let Some((a, b)) = it.body else { continue };
+            let toks = &g.files[it.file].toks;
+            let mut out: Vec<usize> = Vec::new();
+            let text = |j: usize| toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+            for i in a..b.min(toks.len()) {
+                let t = &toks[i];
+                if t.kind != TokKind::Ident || text(i + 1) != "(" {
+                    continue;
+                }
+                let name = t.text.as_str();
+                let prev = if i > 0 { text(i - 1) } else { "" };
+                if prev == "." {
+                    // Receiver-agnostic method call.
+                    if !STD_METHODS.contains(&name) {
+                        if let Some(ms) = methods.get(name) {
+                            out.extend_from_slice(ms);
+                        }
+                    }
+                    continue;
+                }
+                if prev == "fn" || NOT_CALLS.contains(&name) || text(i + 1) == "!" {
+                    continue;
+                }
+                let prev2 = if i > 1 { text(i - 2) } else { "" };
+                if prev == ":" && prev2 == ":" {
+                    // Path call: walk `ident::`* segments backwards.
+                    let mut segs = vec![name.to_string()];
+                    let mut j = i;
+                    let mut bad = false;
+                    while j >= 2 && text(j - 1) == ":" && text(j - 2) == ":" {
+                        if j >= 3 && toks[j - 3].kind == TokKind::Ident {
+                            segs.push(toks[j - 3].text.clone());
+                            j -= 3;
+                        } else {
+                            // turbofish / `<T as Trait>::` — unresolvable.
+                            bad = true;
+                            break;
+                        }
+                    }
+                    if bad {
+                        continue;
+                    }
+                    segs.reverse();
+                    for cand in candidate_paths(
+                        &segs,
+                        &it.module,
+                        it.self_ty.as_deref(),
+                        &named_imports,
+                        &globs,
+                        &child_mods,
+                    ) {
+                        out.extend(resolve_abs(&cand));
+                    }
+                    // Unqualified `Type::method(` with a local/glob type.
+                    if segs.len() == 2 {
+                        if let Some(ms) = typed.get(&(segs[0].clone(), segs[1].clone())) {
+                            out.extend_from_slice(ms);
+                        }
+                    }
+                    continue;
+                }
+                // Bare call: same module, then imports, then globs.
+                let mut hit = false;
+                if let Some(fns) = free.get(&(it.module.clone(), name.to_string())) {
+                    out.extend_from_slice(fns);
+                    hit = true;
+                }
+                if !hit {
+                    if let Some(targets) =
+                        named_imports.get(&(it.module.clone(), name.to_string()))
+                    {
+                        for tgt in targets {
+                            out.extend(resolve_abs(tgt));
+                        }
+                    }
+                    if let Some(gs) = globs.get(&it.module) {
+                        for gmod in gs {
+                            let mut p = gmod.clone();
+                            p.push(name.to_string());
+                            out.extend(resolve_abs(&p));
+                        }
+                    }
+                }
+            }
+            out.sort_unstable();
+            out.dedup();
+            calls.insert(idx, out);
+        }
+        CallGraph { g, calls, pub_traits }
+    }
+
+    /// BFS from hot entries (annotated fns plus every fn defined in a
+    /// [`KERNEL_MODULES`] file). Returns `fn idx -> BFS parent`
+    /// (entries map to themselves). Test fns are never entered.
+    fn hot_reach(&self) -> BTreeMap<usize, usize> {
+        let mut parent: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        for idx in self.g.fns() {
+            let it = &self.g.items[idx];
+            if it.in_test {
+                continue;
+            }
+            let in_kernel_file =
+                KERNEL_MODULES.iter().any(|k| suffix_match(&self.g.files[it.file].path, k));
+            if it.hot_entry || in_kernel_file {
+                parent.insert(idx, idx);
+                queue.push_back(idx);
+            }
+        }
+        while let Some(cur) = queue.pop_front() {
+            if let Some(callees) = self.calls.get(&cur) {
+                for &next in callees {
+                    if self.g.items[next].in_test || parent.contains_key(&next) {
+                        continue;
+                    }
+                    parent.insert(next, cur);
+                    queue.push_back(next);
+                }
+            }
+        }
+        parent
+    }
+
+    /// Names of all hot-reachable fns (test hook).
+    pub fn hot_fn_names(&self) -> BTreeSet<String> {
+        self.hot_reach().keys().map(|&i| self.g.items[i].name.clone()).collect()
+    }
+
+    /// The `entry → … → fn` chain for one reachable fn, as names.
+    fn chain(&self, parent: &BTreeMap<usize, usize>, mut idx: usize) -> String {
+        let mut names = vec![self.g.items[idx].name.clone()];
+        while let Some(&p) = parent.get(&idx) {
+            if p == idx {
+                break;
+            }
+            names.push(self.g.items[p].name.clone());
+            idx = p;
+        }
+        names.reverse();
+        names.join(" → ")
+    }
+
+    /// `hot-path-purity`: every hot-reachable fn body passes
+    /// [`purity_scan`]. Returns `(file idx, violation)` pre-pragma.
+    pub fn hot_path_purity(&self) -> Vec<(usize, Violation)> {
+        let parent = self.hot_reach();
+        let mut out = Vec::new();
+        for (&idx, _) in &parent {
+            let it = &self.g.items[idx];
+            let Some(span) = it.body else { continue };
+            let file = &self.g.files[it.file];
+            // Kernel-module files are scanned wholesale by `check_source`
+            // under the same rule name; skipping avoids double reports.
+            if KERNEL_MODULES.iter().any(|k| suffix_match(&file.path, k)) {
+                continue;
+            }
+            for mut v in purity_scan(&file.toks, span, &[]) {
+                v.msg = format!("{} (hot path: {})", v.msg, self.chain(&parent, idx));
+                out.push((it.file, v));
+            }
+        }
+        out
+    }
+
+    /// Whether a fn is callable from outside the crate-internal module
+    /// tree: declared `pub`, or a default method of a `pub trait`.
+    fn effective_pub(&self, idx: usize) -> bool {
+        let it = &self.g.items[idx];
+        it.vis == Vis::Pub
+            || (it.is_method
+                && it.self_ty.as_deref().is_some_and(|ty| self.pub_traits.contains(ty)))
+    }
+
+    /// `typed-error`: pub fns in `serve/` and `backend/` returning
+    /// `Result` must not build bare-message `anyhow!` / `bail!` errors
+    /// (string or `format!` first argument — a typed payload like
+    /// `bail!(ServeError::Overloaded)` stays downcastable and passes).
+    pub fn typed_error(&self) -> Vec<(usize, Violation)> {
+        let mut out = Vec::new();
+        for idx in self.g.fns() {
+            let it = &self.g.items[idx];
+            let boundary = matches!(
+                it.module.first().map(String::as_str),
+                Some("serve") | Some("backend")
+            );
+            if !boundary || it.in_test || !it.returns_result || !self.effective_pub(idx) {
+                continue;
+            }
+            let Some((a, b)) = it.body else { continue };
+            let toks = &self.g.files[it.file].toks;
+            let text = |j: usize| toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+            for i in a..b.min(toks.len()) {
+                let t = &toks[i];
+                if t.kind != TokKind::Ident
+                    || !(t.text == "anyhow" || t.text == "bail")
+                    || text(i + 1) != "!"
+                    || text(i + 2) != "("
+                {
+                    continue;
+                }
+                let first_arg = toks.get(i + 3);
+                let bare = match first_arg {
+                    Some(arg) => arg.kind == TokKind::Str || arg.text == "format",
+                    None => false,
+                };
+                if bare {
+                    out.push((
+                        it.file,
+                        Violation {
+                            rule: "typed-error",
+                            line: t.line,
+                            col: t.col,
+                            msg: format!(
+                                "bare `{}!(\"…\")` in pub `{}` — callers can't downcast; \
+                                 wrap a typed error (`ServeError`, `BackendError`, …)",
+                                t.text, it.name
+                            ),
+                        },
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// `dead-pub`: plain-`pub`, non-method, non-test items defined at
+    /// file level whose name never occurs in any other source file
+    /// (including `refs_only` — tests/benches/examples scanned for
+    /// references without being linted). Name collisions make this
+    /// under-report, never over-report.
+    pub fn dead_pub(&self, refs_only: &[(String, String)]) -> Vec<(usize, Violation)> {
+        // name -> set of graph-file idxs where it occurs as an ident.
+        let mut occurs: BTreeMap<&str, BTreeSet<usize>> = BTreeMap::new();
+        for (fi, f) in self.g.files.iter().enumerate() {
+            for t in &f.toks {
+                if t.kind == TokKind::Ident {
+                    occurs.entry(t.text.as_str()).or_default().insert(fi);
+                }
+            }
+        }
+        let mut extern_names: BTreeSet<String> = BTreeSet::new();
+        for (_, src) in refs_only {
+            for t in crate::lexer::lex(src).0 {
+                if t.kind == TokKind::Ident {
+                    extern_names.insert(t.text);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for (idx, it) in self.g.items.iter().enumerate() {
+            let file = &self.g.files[it.file];
+            let file_is_lib = file.path.ends_with("lib.rs") || file.path.ends_with("main.rs");
+            if it.vis != Vis::Pub
+                || it.in_test
+                // Associated items (methods, associated consts/types) are
+                // reachable via their receiver; name-occurrence counting
+                // cannot see that, so they are out of scope.
+                || it.is_method
+                || it.module != self.g.files[it.file].module
+                || file.module.first().map(String::as_str).unwrap_or("").starts_with('%')
+            {
+                continue;
+            }
+            // `pub mod` declarations in lib.rs are the crate surface.
+            if file_is_lib && it.kind == ItemKind::Mod {
+                continue;
+            }
+            let referenced_elsewhere = occurs
+                .get(it.name.as_str())
+                .is_some_and(|fs| fs.iter().any(|&fi| fi != it.file))
+                || extern_names.contains(&it.name);
+            if !referenced_elsewhere {
+                out.push((
+                    it.file,
+                    Violation {
+                        rule: "dead-pub",
+                        line: it.line,
+                        col: it.col,
+                        msg: format!(
+                            "pub {} `{}` is never referenced outside {} — reduce \
+                             visibility or justify with a pragma",
+                            kind_word(it.kind),
+                            it.name,
+                            file.path
+                        ),
+                    },
+                ));
+            }
+        }
+        out
+    }
+}
+
+fn kind_word(k: ItemKind) -> &'static str {
+    match k {
+        ItemKind::Fn => "fn",
+        ItemKind::Struct => "struct",
+        ItemKind::Enum => "enum",
+        ItemKind::Union => "union",
+        ItemKind::Trait => "trait",
+        ItemKind::Const => "const",
+        ItemKind::Static => "static",
+        ItemKind::TypeAlias => "type",
+        ItemKind::Mod => "mod",
+    }
+}
+
+/// Absolute candidate paths for one `a::…::f` path call from `module`.
+fn candidate_paths(
+    segs: &[String],
+    module: &[String],
+    self_ty: Option<&str>,
+    named_imports: &BTreeMap<(Vec<String>, String), Vec<Vec<String>>>,
+    globs: &BTreeMap<Vec<String>, Vec<Vec<String>>>,
+    child_mods: &BTreeSet<(Vec<String>, String)>,
+) -> Vec<Vec<String>> {
+    let mut out: Vec<Vec<String>> = Vec::new();
+    let first = segs[0].as_str();
+    match first {
+        "crate" => out.push(segs[1..].to_vec()),
+        "self" => {
+            let mut p = module.to_vec();
+            p.extend_from_slice(&segs[1..]);
+            out.push(p);
+        }
+        "super" => {
+            let mut p = module.to_vec();
+            let mut rest = segs;
+            while rest.first().map(String::as_str) == Some("super") {
+                p.pop();
+                rest = &rest[1..];
+            }
+            p.extend_from_slice(rest);
+            out.push(p);
+        }
+        "Self" => {
+            if let Some(ty) = self_ty {
+                // `Self::helper(…)` — rewrite to `Type::helper`-shaped.
+                let mut p = module.to_vec();
+                p.push(ty.to_string());
+                p.extend_from_slice(&segs[1..]);
+                out.push(p);
+            }
+        }
+        _ => {
+            if let Some(targets) = named_imports.get(&(module.to_vec(), first.to_string())) {
+                for tgt in targets {
+                    let mut p = tgt.clone();
+                    p.extend_from_slice(&segs[1..]);
+                    out.push(p);
+                }
+            }
+            if child_mods.contains(&(module.to_vec(), first.to_string())) {
+                let mut p = module.to_vec();
+                p.extend_from_slice(segs);
+                out.push(p);
+            }
+            if let Some(gs) = globs.get(module) {
+                for gmod in gs {
+                    let mut p = gmod.clone();
+                    p.extend_from_slice(segs);
+                    out.push(p);
+                }
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,794 @@
+//! The item-graph layer of curlint v2: a lightweight, dependency-free
+//! parse of `rust/src/**` into modules, `fn`/`impl` items, visibility,
+//! and `use` edges, built on the token stream from [`crate::lexer`].
+//!
+//! This is *not* a Rust front end. It recovers exactly the structure the
+//! cross-file rules need and nothing more, with the imprecision
+//! documented per field:
+//!
+//! * **Modules** come from file paths (`rust/src/serve/cluster.rs` →
+//!   `serve::cluster`) plus inline `mod name { … }` blocks.
+//! * **Items** are recognized by keyword (`fn`, `struct`, `enum`,
+//!   `trait`, `const`, `static`, `type`, `mod`) at any brace depth; a
+//!   `fn` records its signature and body token spans, its innermost
+//!   `impl`/`trait` type (making it a *method*), whether its return
+//!   type mentions `Result`, and whether a `// curlint: hot-entry`
+//!   comment marks it as a hot-path root.
+//! * **`use` edges** resolve `crate`/`super`/`self` prefixes against the
+//!   importing module and expand `{…}` groups, `as` aliases, and `*`
+//!   globs. External paths (`std::…`, `anyhow::…`) are kept verbatim;
+//!   they simply never match a crate module during call resolution.
+//!
+//! Known, accepted imprecision: generic bounds can be mistaken for item
+//! names in pathological signatures, `macro_rules!` bodies are scanned
+//! as ordinary tokens (conservative for callers), and visibility is
+//! three-valued only (`pub`, restricted `pub(…)`, private).
+
+use crate::lexer::{lex, Comment, Tok, TokKind};
+
+/// Three-valued visibility: `dead-pub` only fires on plain `pub`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Vis {
+    Pub,
+    /// `pub(crate)`, `pub(super)`, `pub(in …)` — already ratcheted.
+    Restricted,
+    Private,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ItemKind {
+    Fn,
+    Struct,
+    Enum,
+    Union,
+    Trait,
+    Const,
+    Static,
+    TypeAlias,
+    Mod,
+}
+
+/// One recognized item. `sig` and `body` are token-index ranges into
+/// the owning [`SourceFile::toks`]; `body` is `None` for bodyless fns
+/// (trait method declarations).
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub kind: ItemKind,
+    pub name: String,
+    /// Crate-relative module path, e.g. `["serve", "cluster"]`.
+    pub module: Vec<String>,
+    pub file: usize,
+    pub line: usize,
+    pub col: usize,
+    pub vis: Vis,
+    /// Defined inside an `impl` or `trait` block (a *method* for the
+    /// receiver-agnostic call resolution).
+    pub is_method: bool,
+    /// The `impl`/`trait` type name, when `is_method`.
+    pub self_ty: Option<String>,
+    pub sig: (usize, usize),
+    pub body: Option<(usize, usize)>,
+    pub in_test: bool,
+    /// Marked by a `// curlint: hot-entry` comment within 3 lines above
+    /// the `fn` keyword.
+    pub hot_entry: bool,
+    /// The signature's return type mentions `Result`.
+    pub returns_result: bool,
+}
+
+/// One `use` binding after prefix resolution.
+#[derive(Debug, Clone)]
+pub struct Import {
+    /// The importing module.
+    pub module: Vec<String>,
+    /// The bound name (`c` for `use a::b as c`, last segment otherwise;
+    /// empty for globs).
+    pub name: String,
+    /// Crate-relative target path — external crates keep their leading
+    /// crate segment and simply never resolve to an item.
+    pub target: Vec<String>,
+    pub glob: bool,
+}
+
+/// A lexed file plus its derived structure.
+pub struct SourceFile {
+    /// Repo-root-relative path with `/` separators.
+    pub path: String,
+    pub module: Vec<String>,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    /// Token ranges covered by `#[cfg(test)]` / `#[test]` items.
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn in_test(&self, tok_idx: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= tok_idx && tok_idx <= b)
+    }
+}
+
+/// The whole-crate item graph.
+#[derive(Default)]
+pub struct ItemGraph {
+    pub files: Vec<SourceFile>,
+    pub items: Vec<Item>,
+    pub imports: Vec<Import>,
+}
+
+impl ItemGraph {
+    /// Parse a set of `(path, source)` files into one graph. Paths are
+    /// expected repo-root-relative (`rust/src/…`).
+    pub fn build(files: &[(String, String)]) -> ItemGraph {
+        let mut g = ItemGraph::default();
+        for (path, src) in files {
+            let file_idx = g.files.len();
+            let module = file_module(path);
+            let (toks, comments) = lex(src);
+            let test_regions = test_regions(&toks);
+            let file = SourceFile {
+                path: path.clone(),
+                module,
+                toks,
+                comments,
+                test_regions,
+            };
+            parse_items(&file, file_idx, &mut g.items, &mut g.imports);
+            g.files.push(file);
+        }
+        g
+    }
+
+    /// Iterator over item indices that are fns.
+    pub fn fns(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.items.len()).filter(|&i| self.items[i].kind == ItemKind::Fn)
+    }
+}
+
+/// Module path from a file path: `rust/src/serve/cluster.rs` →
+/// `["serve", "cluster"]`; `lib.rs`/`main.rs` → crate root; `x/mod.rs`
+/// → `["x"]`. Paths outside `rust/src` get a path-shaped pseudo-module
+/// so self-linted tooling files never collide with crate modules.
+pub fn file_module(path: &str) -> Vec<String> {
+    let p = path.replace('\\', "/");
+    let Some(rel) = p.strip_prefix("rust/src/") else {
+        return vec![format!("%{p}")];
+    };
+    if rel == "lib.rs" || rel == "main.rs" {
+        return Vec::new();
+    }
+    let rel = rel.strip_suffix(".rs").unwrap_or(rel);
+    let mut segs: Vec<String> = rel.split('/').map(str::to_string).collect();
+    if segs.last().map(String::as_str) == Some("mod") {
+        segs.pop();
+    }
+    segs
+}
+
+/// Token index spans covered by `#[cfg(test)]` / `#[test]` items.
+/// (Moved here from `rules` in v2 — both the token rules and the item
+/// graph need it.)
+pub fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let n = toks.len();
+    let mut i = 0;
+    while i < n {
+        if toks[i].text == "#" && i + 1 < n && toks[i + 1].text == "[" {
+            // Scan the attribute to its matching `]`, collecting idents.
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut names: Vec<&str> = Vec::new();
+            while j < n {
+                let t = &toks[j];
+                if t.text == "[" {
+                    depth += 1;
+                } else if t.text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Ident {
+                    names.push(&t.text);
+                }
+                j += 1;
+            }
+            let is_test = (names.contains(&"cfg") && names.contains(&"test"))
+                || names.first() == Some(&"test");
+            i = j + 1;
+            if !is_test {
+                continue;
+            }
+            // Skip further attributes stacked on the same item.
+            while i + 1 < n && toks[i].text == "#" && toks[i + 1].text == "[" {
+                let mut depth = 0usize;
+                while i < n {
+                    if toks[i].text == "[" {
+                        depth += 1;
+                    } else if toks[i].text == "]" {
+                        depth -= 1;
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    i += 1;
+                }
+            }
+            // The item body: to `;` at depth 0, or the matched brace block.
+            let start = i;
+            let mut depth = 0usize;
+            while i < n {
+                let t = &toks[i];
+                if t.text == "{" {
+                    depth += 1;
+                } else if t.text == "}" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.text == ";" && depth == 0 {
+                    break;
+                }
+                i += 1;
+            }
+            regions.push((start, i.min(n.saturating_sub(1))));
+        }
+        i += 1;
+    }
+    regions
+}
+
+/// The normalized text of a `curlint:` control comment: the comment
+/// body with comment sigils and leading whitespace stripped. Pragmas
+/// and `hot-entry` marks must *start* the comment — prose that merely
+/// mentions the syntax (docs, this file) is not a control comment.
+pub fn control_text(c: &Comment) -> &str {
+    c.text
+        .trim_start_matches(['/', '*', '!'])
+        .trim_start()
+}
+
+/// What a brace opens, for the scope stack.
+enum Open {
+    Mod(String),
+    /// `impl`/`trait` block with its (best-effort) type name.
+    Impl(Option<String>),
+    /// A fn body, holding the item index to patch with the body span.
+    Fn(usize),
+    Other,
+}
+
+/// Linear item scan over one file's token stream.
+fn parse_items(file: &SourceFile, file_idx: usize, items: &mut Vec<Item>, imports: &mut Vec<Import>) {
+    let toks = &file.toks;
+    let n = toks.len();
+    let mut stack: Vec<Open> = Vec::new();
+    let mut pending_open: Option<Open> = None;
+    let mut pending_vis = Vis::Private;
+    let mut i = 0usize;
+
+    // Current module path = file module + inline `mod` frames.
+    let cur_module = |stack: &[Open], file: &SourceFile| -> Vec<String> {
+        let mut m = file.module.clone();
+        for fr in stack {
+            if let Open::Mod(name) = fr {
+                m.push(name.clone());
+            }
+        }
+        m
+    };
+    let cur_impl = |stack: &[Open]| -> Option<String> {
+        stack.iter().rev().find_map(|fr| match fr {
+            Open::Impl(ty) => Some(ty.clone().unwrap_or_default()),
+            _ => None,
+        })
+    };
+
+    while i < n {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "{" => {
+                stack.push(pending_open.take().unwrap_or(Open::Other));
+                if let Some(Open::Fn(idx)) = stack.last() {
+                    items[*idx].body = Some((i, i));
+                }
+                pending_vis = Vis::Private;
+            }
+            "}" => {
+                if let Some(Open::Fn(idx)) = stack.pop() {
+                    if let Some((start, _)) = items[idx].body {
+                        items[idx].body = Some((start, i + 1));
+                    }
+                }
+                pending_vis = Vis::Private;
+            }
+            // `pub` always directly precedes its item keyword (modulo
+            // `unsafe`/`async`/`extern "C"`), so any separator between a
+            // `pub` and the next keyword means the `pub` belonged to
+            // something else — e.g. a struct field. Without this reset a
+            // trailing `pub` field leaks onto the next file-level item.
+            ";" | "," => {
+                pending_open = None;
+                pending_vis = Vis::Private;
+            }
+            "pub" if t.kind == TokKind::Ident => {
+                pending_vis = if toks.get(i + 1).map(|t| t.text.as_str()) == Some("(") {
+                    // Skip the restriction parens.
+                    let mut j = i + 1;
+                    let mut depth = 0usize;
+                    while j < n {
+                        if toks[j].text == "(" {
+                            depth += 1;
+                        } else if toks[j].text == ")" {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                    Vis::Restricted
+                } else {
+                    Vis::Pub
+                };
+            }
+            "mod" if t.kind == TokKind::Ident => {
+                if let Some(name) = ident_text(toks.get(i + 1)) {
+                    items.push(Item {
+                        kind: ItemKind::Mod,
+                        name: name.to_string(),
+                        module: cur_module(&stack, file),
+                        file: file_idx,
+                        line: t.line,
+                        col: t.col,
+                        vis: pending_vis,
+                        is_method: false,
+                        self_ty: None,
+                        sig: (i, i + 2),
+                        body: None,
+                        in_test: file.in_test(i),
+                        hot_entry: false,
+                        returns_result: false,
+                    });
+                    pending_open = Some(Open::Mod(name.to_string()));
+                    pending_vis = Vis::Private;
+                    i += 1;
+                }
+            }
+            "impl" if t.kind == TokKind::Ident => {
+                pending_open = Some(Open::Impl(impl_type_name(toks, i + 1)));
+                pending_vis = Vis::Private;
+            }
+            "trait" if t.kind == TokKind::Ident => {
+                if let Some(name) = ident_text(toks.get(i + 1)) {
+                    items.push(Item {
+                        kind: ItemKind::Trait,
+                        name: name.to_string(),
+                        module: cur_module(&stack, file),
+                        file: file_idx,
+                        line: t.line,
+                        col: t.col,
+                        vis: pending_vis,
+                        is_method: false,
+                        self_ty: None,
+                        sig: (i, i + 2),
+                        body: None,
+                        in_test: file.in_test(i),
+                        hot_entry: false,
+                        returns_result: false,
+                    });
+                    pending_open = Some(Open::Impl(Some(name.to_string())));
+                    pending_vis = Vis::Private;
+                    i += 1;
+                }
+            }
+            "fn" if t.kind == TokKind::Ident => {
+                if let Some(name) = ident_text(toks.get(i + 1)) {
+                    let sig_end = fn_sig_end(toks, i);
+                    let hot = file.comments.iter().any(|c| {
+                        control_text(c)
+                            .strip_prefix("curlint:")
+                            .is_some_and(|d| d.trim_start().starts_with("hot-entry"))
+                            && c.end_line + 3 >= t.line
+                            && c.end_line <= t.line
+                    });
+                    let idx = items.len();
+                    items.push(Item {
+                        kind: ItemKind::Fn,
+                        name: name.to_string(),
+                        module: cur_module(&stack, file),
+                        file: file_idx,
+                        line: t.line,
+                        col: t.col,
+                        vis: pending_vis,
+                        is_method: cur_impl(&stack).is_some(),
+                        self_ty: cur_impl(&stack).filter(|s| !s.is_empty()),
+                        sig: (i, sig_end),
+                        body: None,
+                        in_test: file.in_test(i),
+                        hot_entry: hot,
+                        returns_result: sig_returns_result(toks, i, sig_end),
+                    });
+                    pending_open = Some(Open::Fn(idx));
+                    pending_vis = Vis::Private;
+                    // Jump to the signature end so sig-internal keywords
+                    // (`impl Trait`, `fn` pointer types) don't re-trigger.
+                    i = sig_end.saturating_sub(1).max(i);
+                }
+            }
+            "struct" | "enum" | "union" if t.kind == TokKind::Ident => {
+                if let Some(name) = ident_text(toks.get(i + 1)) {
+                    let kind = match t.text.as_str() {
+                        "struct" => ItemKind::Struct,
+                        "enum" => ItemKind::Enum,
+                        _ => ItemKind::Union,
+                    };
+                    items.push(Item {
+                        kind,
+                        name: name.to_string(),
+                        module: cur_module(&stack, file),
+                        file: file_idx,
+                        line: t.line,
+                        col: t.col,
+                        vis: pending_vis,
+                        is_method: false,
+                        self_ty: None,
+                        sig: (i, i + 2),
+                        body: None,
+                        in_test: file.in_test(i),
+                        hot_entry: false,
+                        returns_result: false,
+                    });
+                    pending_vis = Vis::Private;
+                    i += 1;
+                }
+            }
+            "const" | "static" | "type" if t.kind == TokKind::Ident => {
+                // `const fn` / `static mut NAME` / associated `type` all
+                // reduce to "next non-keyword ident is the name"; a
+                // following `fn` is handled by its own branch.
+                let mut j = i + 1;
+                while matches!(ident_text(toks.get(j)), Some("mut")) {
+                    j += 1;
+                }
+                if let Some(name) = ident_text(toks.get(j)) {
+                    if name != "fn" {
+                        let kind = match t.text.as_str() {
+                            "const" => ItemKind::Const,
+                            "static" => ItemKind::Static,
+                            _ => ItemKind::TypeAlias,
+                        };
+                        let imp = cur_impl(&stack);
+                        items.push(Item {
+                            kind,
+                            name: name.to_string(),
+                            module: cur_module(&stack, file),
+                            file: file_idx,
+                            line: t.line,
+                            col: t.col,
+                            vis: pending_vis,
+                            is_method: imp.is_some(),
+                            self_ty: imp,
+                            sig: (i, j + 1),
+                            body: None,
+                            in_test: file.in_test(i),
+                            hot_entry: false,
+                            returns_result: false,
+                        });
+                        pending_vis = Vis::Private;
+                        i = j;
+                    }
+                }
+            }
+            "use" if t.kind == TokKind::Ident => {
+                let mut j = i + 1;
+                let start = j;
+                while j < n && toks[j].text != ";" {
+                    j += 1;
+                }
+                parse_use(&toks[start..j], &cur_module(&stack, file), imports);
+                pending_vis = Vis::Private;
+                i = j;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+fn ident_text(t: Option<&Tok>) -> Option<&str> {
+    t.filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str())
+}
+
+/// Best-effort type name of an `impl` header: idents at angle-depth 0
+/// between `impl` and `{`, taking the last path segment after `for` if
+/// present (`impl Backend for FaultyBackend<B>` → `FaultyBackend`),
+/// else the first path's last segment (`impl fmt::Display` → nothing —
+/// no `for` means the first path IS the self type, e.g. `impl Foo`).
+fn impl_type_name(toks: &[Tok], start: usize) -> Option<String> {
+    let mut angle = 0i32;
+    let mut saw_for = false;
+    let mut pre: Vec<&str> = Vec::new();
+    let mut post: Vec<&str> = Vec::new();
+    let mut j = start;
+    while j < toks.len() {
+        let t = &toks[j];
+        match t.text.as_str() {
+            "{" | ";" if angle <= 0 => break,
+            "<" => angle += 1,
+            ">" => {
+                // `->` in fn-pointer bounds: the '>' belongs to the arrow.
+                if j == 0 || toks[j - 1].text != "-" {
+                    angle -= 1;
+                }
+            }
+            "where" if angle <= 0 && t.kind == TokKind::Ident => break,
+            "for" if angle <= 0 && t.kind == TokKind::Ident => saw_for = true,
+            _ if angle <= 0 && t.kind == TokKind::Ident => {
+                if saw_for {
+                    post.push(&t.text);
+                } else {
+                    pre.push(&t.text);
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    let segs = if saw_for { post } else { pre };
+    segs.last().map(|s| s.to_string())
+}
+
+/// Token index one past a fn signature: the first `{` or `;` at
+/// paren/bracket depth 0 after the parameter list.
+fn fn_sig_end(toks: &[Tok], fn_idx: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = fn_idx + 1;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => depth -= 1,
+            "{" | ";" if depth <= 0 => return j,
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Whether the `->` return type inside `sig` mentions `Result`.
+fn sig_returns_result(toks: &[Tok], fn_idx: usize, sig_end: usize) -> bool {
+    let mut j = fn_idx;
+    while j + 1 < sig_end {
+        if toks[j].text == "-" && toks[j + 1].text == ">" {
+            return toks[j + 2..sig_end].iter().any(|t| t.text == "Result");
+        }
+        j += 1;
+    }
+    false
+}
+
+/// Parse the token slice of one `use …` statement (without the `;`)
+/// into [`Import`]s, expanding groups, aliases and globs.
+fn parse_use(toks: &[Tok], module: &[String], imports: &mut Vec<Import>) {
+    parse_use_tree(toks, &mut 0, module, &[], imports);
+}
+
+fn parse_use_tree(
+    toks: &[Tok],
+    i: &mut usize,
+    module: &[String],
+    prefix: &[String],
+    imports: &mut Vec<Import>,
+) {
+    let mut path: Vec<String> = prefix.to_vec();
+    loop {
+        let Some(t) = toks.get(*i) else { break };
+        match t.text.as_str() {
+            "*" => {
+                imports.push(Import {
+                    module: module.to_vec(),
+                    name: String::new(),
+                    target: path.clone(),
+                    glob: true,
+                });
+                *i += 1;
+                return;
+            }
+            "{" => {
+                *i += 1;
+                loop {
+                    match toks.get(*i).map(|t| t.text.as_str()) {
+                        Some("}") => {
+                            *i += 1;
+                            return;
+                        }
+                        Some(",") => {
+                            *i += 1;
+                        }
+                        Some(_) => parse_use_tree(toks, i, module, &path, imports),
+                        None => return,
+                    }
+                }
+            }
+            "as" if t.kind == TokKind::Ident => {
+                if let Some(alias) = ident_text(toks.get(*i + 1)) {
+                    imports.push(Import {
+                        module: module.to_vec(),
+                        name: alias.to_string(),
+                        target: path.clone(),
+                        glob: false,
+                    });
+                    *i += 2;
+                }
+                return;
+            }
+            ":" => {
+                *i += 1; // the path continues after `::`
+            }
+            "," | "}" => {
+                // End of this tree inside a group: bind the last segment.
+                bind_last(&path, module, imports);
+                return;
+            }
+            _ if t.kind == TokKind::Ident => {
+                resolve_seg(&mut path, &t.text, module);
+                *i += 1;
+                // Lookahead: end of statement binds the last segment.
+                match toks.get(*i).map(|t| t.text.as_str()) {
+                    None => {
+                        bind_last(&path, module, imports);
+                        return;
+                    }
+                    Some(":") | Some("{") | Some("as") | Some("*") => {}
+                    Some(_) => {
+                        bind_last(&path, module, imports);
+                        return;
+                    }
+                }
+            }
+            _ => {
+                *i += 1;
+            }
+        }
+    }
+    if !path.is_empty() {
+        bind_last(&path, module, imports);
+    }
+}
+
+/// Append one path segment, resolving `crate`/`super`/`self` relative
+/// to `module` when they lead the path.
+fn resolve_seg(path: &mut Vec<String>, seg: &str, module: &[String]) {
+    match seg {
+        "crate" if path.is_empty() => {}
+        "self" if path.is_empty() => path.extend_from_slice(module),
+        "super" => {
+            if path.is_empty() {
+                path.extend_from_slice(module);
+            }
+            path.pop();
+        }
+        "self" => {} // `{self, …}`: the group prefix is the target
+        _ => path.push(seg.to_string()),
+    }
+}
+
+fn bind_last(path: &[String], module: &[String], imports: &mut Vec<Import>) {
+    if let Some(name) = path.last() {
+        imports.push(Import {
+            module: module.to_vec(),
+            name: name.clone(),
+            target: path.to_vec(),
+            glob: false,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(src: &str) -> ItemGraph {
+        ItemGraph::build(&[("rust/src/serve/mod.rs".to_string(), src.to_string())])
+    }
+
+    fn find<'g>(g: &'g ItemGraph, name: &str) -> &'g Item {
+        g.items.iter().find(|it| it.name == name).unwrap()
+    }
+
+    #[test]
+    fn file_modules() {
+        assert_eq!(file_module("rust/src/lib.rs"), Vec::<String>::new());
+        assert_eq!(file_module("rust/src/serve/mod.rs"), vec!["serve"]);
+        assert_eq!(file_module("rust/src/serve/cluster.rs"), vec!["serve", "cluster"]);
+        assert_eq!(
+            file_module("rust/src/backend/native/math.rs"),
+            vec!["backend", "native", "math"]
+        );
+        assert!(file_module("xtask/src/main.rs")[0].starts_with('%'));
+    }
+
+    #[test]
+    fn fns_and_methods() {
+        let g = graph(
+            "pub fn free() -> Result<()> { helper() }\n\
+             fn helper() {}\n\
+             struct S;\n\
+             impl S { pub fn method(&self) -> anyhow::Result<u32> { Ok(1) } }\n\
+             impl std::fmt::Display for S {\n\
+                 fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result { write!(f, \"s\") }\n\
+             }",
+        );
+        let free = find(&g, "free");
+        assert_eq!((free.vis, free.is_method, free.returns_result), (Vis::Pub, false, true));
+        assert!(free.body.is_some());
+        let m = find(&g, "method");
+        assert_eq!(m.self_ty.as_deref(), Some("S"));
+        assert!(m.returns_result);
+        let f = find(&g, "fmt");
+        assert_eq!(f.self_ty.as_deref(), Some("S"));
+        assert_eq!(find(&g, "helper").vis, Vis::Private);
+    }
+
+    #[test]
+    fn inline_mods_and_tests() {
+        let g = graph(
+            "pub fn outer() {}\n\
+             mod inner { pub fn nested() {} }\n\
+             #[cfg(test)]\nmod tests { fn t() {} #[test] fn case() {} }",
+        );
+        assert_eq!(find(&g, "outer").module, vec!["serve"]);
+        assert_eq!(find(&g, "nested").module, vec!["serve", "inner"]);
+        assert!(find(&g, "case").in_test);
+        assert!(find(&g, "t").in_test);
+        assert!(!find(&g, "outer").in_test);
+    }
+
+    #[test]
+    fn use_resolution() {
+        let g = graph(
+            "use crate::backend::native::math;\n\
+             use super::{Request, ServeStats as Stats};\n\
+             use crate::util::stats::*;\n\
+             use std::sync::mpsc::channel;",
+        );
+        let find_import = |name: &str| g.imports.iter().find(|im| im.name == name).unwrap();
+        assert_eq!(find_import("math").target, vec!["backend", "native", "math"]);
+        // file module is ["serve"]; super:: of it is the crate root.
+        assert_eq!(find_import("Request").target, vec!["Request"]);
+        assert_eq!(find_import("Stats").target, vec!["ServeStats"]);
+        assert!(g.imports.iter().any(|im| im.glob && im.target == ["util", "stats"]));
+        assert_eq!(find_import("channel").target, vec!["std", "sync", "mpsc", "channel"]);
+    }
+
+    #[test]
+    fn hot_entry_and_restricted_vis() {
+        let g = graph(
+            "// curlint: hot-entry\n\
+             pub fn decode() {}\n\
+             pub(crate) fn internal() {}\n\
+             /// Mentions `// curlint: hot-entry` in prose only.\n\
+             pub fn cold() {}",
+        );
+        assert!(find(&g, "decode").hot_entry);
+        assert!(!find(&g, "cold").hot_entry);
+        assert_eq!(find(&g, "internal").vis, Vis::Restricted);
+    }
+
+    #[test]
+    fn raw_identifier_fn_names() {
+        let g = graph("pub fn r#type() {} fn caller() { r#type() }");
+        assert_eq!(find(&g, "type").kind, ItemKind::Fn);
+    }
+
+    #[test]
+    fn impl_type_names() {
+        let toks = lex("impl<B: Backend> Backend for FaultyBackend<B> { }").0;
+        assert_eq!(impl_type_name(&toks, 1).as_deref(), Some("FaultyBackend"));
+        let toks = lex("impl fmt::Display for KvPolicy { }").0;
+        assert_eq!(impl_type_name(&toks, 1).as_deref(), Some("KvPolicy"));
+        let toks = lex("impl NativeBackend { }").0;
+        assert_eq!(impl_type_name(&toks, 1).as_deref(), Some("NativeBackend"));
+    }
+}

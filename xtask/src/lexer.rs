@@ -73,6 +73,40 @@ fn is_id_cont(b: u8) -> bool {
     b.is_ascii_alphanumeric() || b == b'_'
 }
 
+/// Index just past one character's content starting at `i` inside a
+/// char/byte-char literal: an escape (`\n`, `\u{3bb}`, `\'`) or a single
+/// UTF-8 scalar. The caller checks whether a closing quote follows.
+fn one_char_end(src: &[u8], i: usize) -> usize {
+    let at = |j: usize| if j < src.len() { src[j] } else { 0 };
+    if at(i) == b'\\' {
+        if at(i + 1) == b'u' && at(i + 2) == b'{' {
+            let mut j = i + 3;
+            while j < src.len() && src[j] != b'}' {
+                j += 1;
+            }
+            j + 1
+        } else {
+            i + 2
+        }
+    } else {
+        i + utf8_len(at(i))
+    }
+}
+
+/// Byte length of one UTF-8 scalar from its lead byte (1 for ASCII and
+/// for malformed leads — the cursor then just moves byte-by-byte).
+fn utf8_len(b: u8) -> usize {
+    if b >> 5 == 0b110 {
+        2
+    } else if b >> 4 == 0b1110 {
+        3
+    } else if b >> 3 == 0b11110 {
+        4
+    } else {
+        1
+    }
+}
+
 /// Tokenize `src`, returning code tokens and the comment list separately
 /// (rules match tokens; the `// SAFETY:` and pragma checks read comments).
 pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
@@ -169,7 +203,25 @@ pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
                 c.advance(close);
                 continue;
             }
-            // `r#ident` raw identifier or stray hash: fall through.
+            // `r#ident` raw identifier: one Ident token carrying the
+            // unprefixed name (`r#type` names the same item as `type`,
+            // so the item graph must see a single `type` ident, not an
+            // `r` + `#` + `type` split that reads as an item named `r`).
+            if b == b'r' && c.at(c.i + 1) == b'#' && is_id_start(c.at(c.i + 2)) {
+                let mut j = c.i + 2;
+                while j < n && is_id_cont(c.src[j]) {
+                    j += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: String::from_utf8_lossy(&c.src[c.i + 2..j]).into_owned(),
+                    line,
+                    col,
+                });
+                c.advance(j);
+                continue;
+            }
+            // Stray hash after `r`/`br`: fall through.
         }
 
         // Byte string / byte char.
@@ -190,16 +242,8 @@ pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
             continue;
         }
         if b == b'b' && c.at(c.i + 1) == b'\'' {
-            let mut j = c.i + 2;
-            if c.at(j) == b'\\' {
-                j += 2;
-            } else {
-                j += 1;
-            }
-            while j < n && c.src[j] != b'\'' {
-                j += 1;
-            }
-            c.advance(j + 1);
+            let j = one_char_end(c.src, c.i + 2);
+            c.advance(if c.at(j) == b'\'' { j + 1 } else { c.i + 2 });
             continue;
         }
 
@@ -222,6 +266,11 @@ pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
         }
 
         // Char literal vs lifetime: `'a'` is a char, `'a ` is a lifetime.
+        // Non-ASCII is disambiguated by *bounded* lookahead — exactly one
+        // (possibly escaped, possibly multi-byte) scalar then a close
+        // quote makes a char literal (`'λ'`); anything else leaves the
+        // quote behind as a lifetime/stray mark instead of swallowing
+        // code up to the next apostrophe anywhere in the file.
         if b == b'\'' {
             if is_id_start(c.at(c.i + 1)) {
                 let mut j = c.i + 1;
@@ -235,16 +284,8 @@ pub fn lex(src: &str) -> (Vec<Tok>, Vec<Comment>) {
                 }
                 continue;
             }
-            let mut j = c.i + 1;
-            if c.at(j) == b'\\' {
-                j += 2;
-            } else {
-                j += 1;
-            }
-            while j < n && c.src[j] != b'\'' {
-                j += 1;
-            }
-            c.advance(j + 1);
+            let j = one_char_end(c.src, c.i + 1);
+            c.advance(if c.at(j) == b'\'' { j + 1 } else { c.i + 1 });
             continue;
         }
 
@@ -345,6 +386,45 @@ mod tests {
         let (toks, _) = lex("ab\n  cd");
         assert_eq!((toks[0].line, toks[0].col), (1, 1));
         assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn raw_identifiers_are_one_ident_not_a_raw_string_start() {
+        // `r#type` must not be read as `r#"…` (raw string) nor split
+        // into an ident `r` — the item graph would otherwise record a
+        // fn named `r`.
+        let src = "fn r#type(r#else: usize) { r#loop() }";
+        assert_eq!(idents(src), vec!["fn", "type", "else", "usize", "loop"]);
+        // And a real raw string right after a raw ident still lexes.
+        let (toks, _) = lex("let r#match = r#\"unwrap()\"#;");
+        assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+        assert!(toks.iter().all(|t| t.text != "unwrap"));
+    }
+
+    #[test]
+    fn multibyte_char_literals_and_lifetimes() {
+        // 'λ' is a two-byte scalar: a char literal, not a swallow-all.
+        let src = "let c = 'λ'; let u = '\\u{3bb}'; g(c, u)";
+        assert_eq!(idents(src), vec!["let", "c", "let", "u", "g", "c", "u"]);
+        // A non-ASCII lifetime-ish quote must not consume code up to
+        // the next apostrophe elsewhere in the file.
+        let src = "fn f(x: &'λ str) { h() } // it's fine";
+        assert!(idents(src).contains(&"h".to_string()));
+    }
+
+    #[test]
+    fn block_comment_closing_on_its_opening_line() {
+        let src = "/* one line */ after(); /* a */ /* b */ tail()";
+        assert_eq!(idents(src), vec!["after", "tail"]);
+        let (_, comments) = lex(src);
+        assert_eq!(comments.len(), 3);
+        for c in &comments {
+            assert_eq!(c.line, c.end_line);
+            assert_eq!(c.line, 1);
+        }
+        // Same-line close followed by a nested open on one line.
+        let src = "/* x /* y */ z */ code()";
+        assert_eq!(idents(src), vec!["code"]);
     }
 
     #[test]

@@ -17,6 +17,9 @@
 
 pub mod baseline;
 pub mod bench;
+pub mod callgraph;
+pub mod itemgraph;
 pub mod json;
 pub mod lexer;
 pub mod rules;
+pub mod sarif;

@@ -1,26 +1,32 @@
 //! `cargo xtask <command>` — repo tooling.
 //!
-//! - `lint`: run curlint over `rust/src/**` and enforce the
-//!   `curlint.baseline` ratchet. Exit codes: 0 clean (or fully
-//!   grandfathered), 1 new violations or a grown bucket, 2 usage/IO.
+//! - `lint`: run curlint (token rules + the cross-file item/call-graph
+//!   rules) over `rust/src/**`, the token rules over `xtask/src/**`
+//!   (self-lint), and enforce the `curlint.baseline` ratchet. Exit
+//!   codes: 0 clean (or fully grandfathered), 1 new violations or a
+//!   grown bucket, 2 usage/IO.
 //! - `bench-check <run.json>`: validate a v2 recorded benchmark run.
 //!   Exit codes: 0 valid, 1 validation/invariant failures, 2 usage/IO.
 //! - `bench-diff <old.json> <new.json>`: per-measurement delta report.
-//!   Exit codes: 0 ok, 1 regressions under `--fail-on-regression`,
-//!   2 usage/IO/unit-mismatch.
+//!   Exit codes: 0 ok, 1 regressions under the fail flags, 2
+//!   usage/IO/unit-mismatch.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use xtask::baseline::{self, Counts, Verdict};
 use xtask::bench;
-use xtask::rules::{check_source, Violation};
+use xtask::itemgraph::ItemGraph;
+use xtask::rules::{check_repo, check_source, explain, Violation, RULE_NAMES};
+use xtask::sarif;
 
 const USAGE: &str = "\
 usage: cargo xtask <command> [options]
 
 commands:
-  lint                       curlint over rust/src/** with the baseline ratchet
+  lint                       curlint over rust/src/** (+ xtask/src self-lint)
+                             with the baseline ratchet
   bench-check <run.json>     validate a v2 recorded benchmark run
   bench-diff <old> <new>     delta report between two recorded runs
 
@@ -28,6 +34,9 @@ lint options:
   --update-baseline   rewrite curlint.baseline from the current violations
                       (review the diff: counts should only ever shrink)
   --list              print grandfathered violations too, not just new ones
+  --emit sarif        write a SARIF 2.1.0 report to stdout (human output
+                      moves to stderr); exit codes are unchanged
+  --explain <rule>    print the incident + invariant behind a rule and exit
   --root <dir>        repo root (default: auto-detected from cwd)
 
 bench-check options:
@@ -36,6 +45,10 @@ bench-check options:
 
 bench-diff options:
   --fail-on-regression       exit 1 when any measurement regressed beyond noise
+  --fail-on-regression-deterministic
+                             exit 1 only for regressed *deterministic*
+                             (non-timing) measurements; skips itself with a
+                             notice when the two runs used different modes
   --annotate                 emit GitHub Actions ::warning lines for regressions
   --verbose                  list within-noise rows too
 
@@ -48,8 +61,11 @@ fn main() -> ExitCode {
     let mut list = false;
     let mut require_grid = false;
     let mut fail_on_regression = false;
+    let mut fail_on_det_regression = false;
     let mut annotate = false;
     let mut verbose = false;
+    let mut emit: Option<String> = None;
+    let mut explain_rule: Option<String> = None;
     let mut require_workloads: Vec<String> = Vec::new();
     let mut root: Option<PathBuf> = None;
     let mut cmd: Option<String> = None;
@@ -65,8 +81,23 @@ fn main() -> ExitCode {
             "--list" => list = true,
             "--require-grid" => require_grid = true,
             "--fail-on-regression" => fail_on_regression = true,
+            "--fail-on-regression-deterministic" => fail_on_det_regression = true,
             "--annotate" => annotate = true,
             "--verbose" => verbose = true,
+            "--emit" => match it.next() {
+                Some(fmt) => emit = Some(fmt),
+                None => {
+                    eprintln!("--emit needs a format (sarif)\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--explain" => match it.next() {
+                Some(rule) => explain_rule = Some(rule),
+                None => {
+                    eprintln!("--explain needs a rule name\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
             "--require-workloads" => match it.next() {
                 Some(names) => {
                     require_workloads
@@ -96,6 +127,29 @@ fn main() -> ExitCode {
     }
     match cmd.as_deref() {
         Some("lint") => {
+            if let Some(rule) = explain_rule {
+                return match explain(&rule) {
+                    Some(text) => {
+                        println!("{text}");
+                        ExitCode::SUCCESS
+                    }
+                    None => {
+                        eprintln!(
+                            "curlint: no rule named `{rule}` (rules: {})",
+                            RULE_NAMES.join(", ")
+                        );
+                        ExitCode::from(2)
+                    }
+                };
+            }
+            let sarif_mode = match emit.as_deref() {
+                None => false,
+                Some("sarif") => true,
+                Some(other) => {
+                    eprintln!("curlint: unknown --emit format `{other}` (only: sarif)");
+                    return ExitCode::from(2);
+                }
+            };
             let root = match root.or_else(find_repo_root) {
                 Some(r) => r,
                 None => {
@@ -105,7 +159,7 @@ fn main() -> ExitCode {
                     return ExitCode::from(2);
                 }
             };
-            match run_lint(&root, update, list) {
+            match run_lint(&root, update, list, sarif_mode) {
                 Ok(true) => ExitCode::SUCCESS,
                 Ok(false) => ExitCode::from(1),
                 Err(e) => {
@@ -126,7 +180,7 @@ fn main() -> ExitCode {
                 eprintln!("bench-diff needs exactly two run files\n{USAGE}");
                 return ExitCode::from(2);
             };
-            run_bench_diff(old, new, fail_on_regression, annotate, verbose)
+            run_bench_diff(old, new, fail_on_regression, fail_on_det_regression, annotate, verbose)
         }
         Some(other) => {
             eprintln!("unknown command `{other}`\n{USAGE}");
@@ -188,6 +242,7 @@ fn run_bench_diff(
     old_path: &Path,
     new_path: &Path,
     fail_on_regression: bool,
+    fail_on_det_regression: bool,
     annotate: bool,
     verbose: bool,
 ) -> ExitCode {
@@ -222,6 +277,23 @@ fn run_bench_diff(
     if fail_on_regression && regressed > 0 {
         eprintln!("bench-diff: FAILED — {regressed} regression(s) beyond noise");
         return ExitCode::from(1);
+    }
+    if fail_on_det_regression {
+        if let Some((om, nm)) = &report.mode_mismatch {
+            println!(
+                "bench-diff: NOTE — runs used different modes ({om} vs {nm}); the \
+                 deterministic gate does not apply across modes and was skipped"
+            );
+        } else {
+            let det_regressed = report.n_deterministic_regressions();
+            if det_regressed > 0 {
+                eprintln!(
+                    "bench-diff: FAILED — {det_regressed} deterministic (non-timing) \
+                     regression(s); these are bit-accuracy/size invariants, not noise"
+                );
+                return ExitCode::from(1);
+            }
+        }
     }
     ExitCode::SUCCESS
 }
@@ -260,16 +332,10 @@ fn rs_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
     Ok(out)
 }
 
-fn run_lint(root: &Path, update: bool, list: bool) -> Result<bool, String> {
-    let src_root = root.join("rust/src");
-    let baseline_path = root.join("curlint.baseline");
-
-    let files = rs_files(&src_root)?;
-    let n_files = files.len();
-    let mut actual = Counts::new();
-    let mut by_file: Vec<(String, Vec<Violation>)> = Vec::new();
-    let mut total = 0usize;
-    for file in files {
+/// Read every `.rs` under `dir` as `(repo-relative path, source)`.
+fn read_sources(root: &Path, dir: &Path) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    for file in rs_files(dir)? {
         let rel = file
             .strip_prefix(root)
             .unwrap_or(&file)
@@ -277,23 +343,65 @@ fn run_lint(root: &Path, update: bool, list: bool) -> Result<bool, String> {
             .replace('\\', "/");
         let src = std::fs::read_to_string(&file)
             .map_err(|e| format!("read {}: {e}", file.display()))?;
-        let violations = check_source(&rel, &src);
-        total += violations.len();
-        for v in &violations {
-            *actual.entry((rel.clone(), v.rule.to_string())).or_insert(0) += 1;
+        out.push((rel, src));
+    }
+    Ok(out)
+}
+
+fn run_lint(root: &Path, update: bool, list: bool, sarif_mode: bool) -> Result<bool, String> {
+    let baseline_path = root.join("curlint.baseline");
+
+    // Informational lines go to stdout normally, to stderr when stdout
+    // carries the SARIF document.
+    let say = |line: String| {
+        if sarif_mode {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
         }
+    };
+
+    // rust/src gets the full rule set (token + cross-file over the item
+    // graph); tests/benches/examples are reference-only for `dead-pub`.
+    let lib_sources = read_sources(root, &root.join("rust/src"))?;
+    let mut refs_only: Vec<(String, String)> = Vec::new();
+    for dir in ["rust/tests", "rust/benches", "rust/examples"] {
+        let d = root.join(dir);
+        if d.is_dir() {
+            refs_only.extend(read_sources(root, &d)?);
+        }
+    }
+    let graph = ItemGraph::build(&lib_sources);
+    let mut by_file: BTreeMap<String, Vec<Violation>> = check_repo(&graph, &refs_only);
+
+    // Self-lint: the token rules over xtask/src/** (the linter must hold
+    // itself to the invariants it enforces; zero violations, ratcheted
+    // through the same baseline).
+    let tool_sources = read_sources(root, &root.join("xtask/src"))?;
+    for (rel, src) in &tool_sources {
+        let violations = check_source(rel, src);
         if !violations.is_empty() {
-            by_file.push((rel, violations));
+            by_file.insert(rel.clone(), violations);
+        }
+    }
+
+    let n_files = lib_sources.len() + tool_sources.len();
+    let mut actual = Counts::new();
+    let mut total = 0usize;
+    for (rel, violations) in &by_file {
+        total += violations.len();
+        for v in violations {
+            *actual.entry((rel.clone(), v.rule.to_string())).or_insert(0) += 1;
         }
     }
 
     if update {
         std::fs::write(&baseline_path, baseline::serialize(&actual))
             .map_err(|e| format!("write {}: {e}", baseline_path.display()))?;
-        println!(
+        say(format!(
             "curlint: baseline rewritten with {total} violation(s) across {} bucket(s)",
             actual.len()
-        );
+        ));
         return Ok(true);
     }
 
@@ -318,45 +426,64 @@ fn run_lint(root: &Path, update: bool, list: bool) -> Result<bool, String> {
             }
             Verdict::Shrank { allowed, actual } => {
                 stale += 1;
-                println!(
+                say(format!(
                     "curlint: {path}: [{rule}] improved to {actual} (baseline {allowed}) \
                      — tighten with `cargo xtask lint --update-baseline`"
-                );
+                ));
             }
             Verdict::AtBaseline => {}
         }
     }
 
     // Print the offending sites: every violation in a grown bucket, or
-    // everything under --list.
+    // everything under --list. In SARIF mode every violation is emitted,
+    // grown buckets as `error`, grandfathered ones as `warning`.
+    let bucket_grew = |path: &str, rule: &str| {
+        comparisons.iter().any(|((p, r), verdict)| {
+            p == path && r == rule && matches!(verdict, Verdict::Grew { .. })
+        })
+    };
+    let mut rows: Vec<sarif::Row> = Vec::new();
     for (path, violations) in &by_file {
         for v in violations {
-            let bucket_grew = comparisons.iter().any(|((p, r), verdict)| {
-                p == path && r == v.rule && matches!(verdict, Verdict::Grew { .. })
-            });
-            if list || bucket_grew {
-                println!("{path}:{}:{}: [{}] {}", v.line, v.col, v.rule, v.msg);
+            let is_new = bucket_grew(path, v.rule);
+            if list || is_new {
+                say(format!("{path}:{}:{}: [{}] {}", v.line, v.col, v.rule, v.msg));
+            }
+            if sarif_mode {
+                rows.push(sarif::Row {
+                    rule: v.rule.to_string(),
+                    path: path.clone(),
+                    line: v.line,
+                    col: v.col,
+                    msg: v.msg.clone(),
+                    new: is_new,
+                });
             }
         }
     }
+    if sarif_mode {
+        print!("{}", sarif::emit(&rows)?);
+    }
 
-    let grandfathered = total - comparisons
-        .iter()
-        .map(|((p, r), _)| {
-            let allowed = base.get(&(p.clone(), r.clone())).copied().unwrap_or(0);
-            let n = actual.get(&(p.clone(), r.clone())).copied().unwrap_or(0);
-            n.saturating_sub(allowed)
-        })
-        .sum::<usize>();
-    println!(
+    let grandfathered = total
+        - comparisons
+            .iter()
+            .map(|((p, r), _)| {
+                let allowed = base.get(&(p.clone(), r.clone())).copied().unwrap_or(0);
+                let n = actual.get(&(p.clone(), r.clone())).copied().unwrap_or(0);
+                n.saturating_sub(allowed)
+            })
+            .sum::<usize>();
+    say(format!(
         "curlint: {total} violation(s) ({grandfathered} grandfathered, {n_files} file(s) \
          scanned){}",
         if stale > 0 { ", baseline is stale" } else { "" }
-    );
+    ));
     if grew > 0 {
         eprintln!("curlint: FAILED — {grew} bucket(s) above the baseline");
         return Ok(false);
     }
-    println!("curlint: ok");
+    say("curlint: ok".to_string());
     Ok(true)
 }

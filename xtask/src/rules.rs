@@ -1,6 +1,8 @@
 //! The curlint rule set. Each rule encodes an invariant this repo has
-//! already been burned by (see `rust/README.md` § curlint for the
-//! incident behind each one):
+//! already been burned by (see `rust/README.md` § curlint, or
+//! `cargo xtask lint --explain <rule>`, for the incident behind each):
+//!
+//! Token rules (per file, in [`check_source`]):
 //!
 //! * `panic` — no `unwrap()` / `expect("…")` / `panic!` / `todo!` /
 //!   `unimplemented!` in library code (the PR 1 panic→`Result` sweep,
@@ -19,35 +21,69 @@
 //!   comment ending no more than 3 lines above it.
 //! * `env-var` — `env::var` only inside `util::config`, so `CURING_*`
 //!   escape hatches stay centralized and documented.
-//! * `kernel-purity` — no `Instant` and no allocating calls
-//!   (`vec!`, `Vec::new`, `to_vec()`, `collect()`, …) in the kernel
-//!   modules listed in [`KERNEL_MODULES`]; deliberate allocations
-//!   (output buffers of convenience wrappers) carry a pragma.
+//! * `blocking-recv` — in `serve/` (the supervisor/cluster event
+//!   loops), no bare blocking `recv()` and no blocking iteration of a
+//!   channel receiver (`rx.iter()`, `for r in rx`): a hung worker must
+//!   never hang its supervisor. Use `recv_timeout` / `try_recv` /
+//!   `try_iter`.
 //!
-//! Any violation is suppressible in place with
-//! `// curlint: allow(<rule>) -- <reason>` on the same line or the line
-//! above; a pragma with an unknown rule name or a missing reason is
-//! itself reported (`pragma`).
+//! Cross-file rules (whole-repo, in [`check_repo`], built on the item
+//! graph + call graph):
+//!
+//! * `hot-path-purity` — every fn transitively callable from a
+//!   hot-entry fn (marked `curlint: hot-entry`, plus every fn in
+//!   [`KERNEL_MODULES`] — the retired v1 `kernel-purity` allowlist,
+//!   kept as the always-checked floor) must be free of allocation,
+//!   `Instant`, locking and I/O. The v1 rule name remains valid in
+//!   pragmas as an alias.
+//! * `typed-error` — pub `Result` fns in `serve/` and `backend/` must
+//!   not construct bare-message `anyhow!`/`bail!` errors.
+//! * `dead-pub` — plain-`pub` items never referenced outside their
+//!   defining file are flagged for a visibility ratchet.
+//!
+//! Any violation is suppressible in place with a pragma comment that
+//! *starts* (after `//`): `curlint: allow(<rule>) -- <reason>`, on the
+//! same line or the line above; a pragma with an unknown rule name or a
+//! missing reason is itself reported (`pragma`), as is any other
+//! unrecognized `curlint:` directive.
 
+use std::collections::BTreeMap;
+
+use crate::callgraph::CallGraph;
+use crate::itemgraph::{control_text, test_regions, ItemGraph};
 use crate::lexer::{lex, Comment, Tok, TokKind};
 
-/// Kernel modules (path suffixes, `/`-separated) held to `kernel-purity`.
+/// Kernel modules (path suffixes, `/`-separated): the v1 `kernel-purity`
+/// allowlist, kept as `hot-path-purity`'s always-checked floor so the
+/// new rule is a strict superset of the old one.
 pub const KERNEL_MODULES: &[&str] = &["rust/src/backend/native/math.rs"];
 
 /// The one module allowed to read `env::var` (path suffix).
 pub const CONFIG_MODULE: &str = "rust/src/util/config.rs";
 
 /// All rule names, the vocabulary `allow(...)` pragmas draw from.
-pub const RULE_NAMES: &[&str] =
-    &["panic", "float-sort", "safety-comment", "env-var", "kernel-purity", "pragma"];
+/// `kernel-purity` is retired as a rule but stays valid in pragmas as
+/// an alias for `hot-path-purity`.
+pub const RULE_NAMES: &[&str] = &[
+    "panic",
+    "float-sort",
+    "safety-comment",
+    "env-var",
+    "kernel-purity",
+    "hot-path-purity",
+    "typed-error",
+    "blocking-recv",
+    "dead-pub",
+    "pragma",
+];
 
 const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented"];
 const FLOAT_SORTS: &[&str] = &["sort_by", "sort_unstable_by", "max_by", "min_by"];
 const SAFE_CMPS: &[&str] = &["total_cmp", "nan_last_desc", "nan_last_asc", "cmp"];
-const KERNEL_BANNED_MACROS: &[&str] = &["vec", "format"];
-const KERNEL_BANNED_CALLS: &[&str] = &["to_vec", "collect", "to_string"];
-const KERNEL_BANNED_CTORS: &[&str] = &["Vec", "String", "Box"];
-const KERNEL_CTOR_FNS: &[&str] = &["new", "with_capacity", "from"];
+const HOT_BANNED_MACROS: &[&str] = &["vec", "format", "println", "eprintln", "print", "eprint"];
+const HOT_BANNED_CALLS: &[&str] = &["to_vec", "collect", "to_string", "lock"];
+const HOT_BANNED_CTORS: &[&str] = &["Vec", "String", "Box"];
+const HOT_CTOR_FNS: &[&str] = &["new", "with_capacity", "from"];
 
 #[derive(Debug, Clone)]
 pub struct Violation {
@@ -57,89 +93,65 @@ pub struct Violation {
     pub msg: String,
 }
 
-/// Token index spans covered by `#[cfg(test)]` / `#[test]` items.
-fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
-    let mut regions = Vec::new();
-    let n = toks.len();
-    let mut i = 0;
-    while i < n {
-        if toks[i].text == "#" && i + 1 < n && toks[i + 1].text == "[" {
-            // Scan the attribute to its matching `]`, collecting idents.
-            let mut depth = 0usize;
-            let mut j = i + 1;
-            let mut names: Vec<&str> = Vec::new();
-            while j < n {
-                let t = &toks[j];
-                if t.text == "[" {
-                    depth += 1;
-                } else if t.text == "]" {
-                    depth -= 1;
-                    if depth == 0 {
-                        break;
-                    }
-                } else if t.kind == TokKind::Ident {
-                    names.push(&t.text);
-                }
-                j += 1;
-            }
-            let is_test = (names.contains(&"cfg") && names.contains(&"test"))
-                || names.first() == Some(&"test");
-            i = j + 1;
-            if !is_test {
-                continue;
-            }
-            // Skip further attributes stacked on the same item.
-            while i + 1 < n && toks[i].text == "#" && toks[i + 1].text == "[" {
-                let mut depth = 0usize;
-                while i < n {
-                    if toks[i].text == "[" {
-                        depth += 1;
-                    } else if toks[i].text == "]" {
-                        depth -= 1;
-                        if depth == 0 {
-                            i += 1;
-                            break;
-                        }
-                    }
-                    i += 1;
-                }
-            }
-            // The item body: to `;` at depth 0, or the matched brace block.
-            let start = i;
-            let mut depth = 0usize;
-            while i < n {
-                let t = &toks[i];
-                if t.text == "{" {
-                    depth += 1;
-                } else if t.text == "}" {
-                    depth -= 1;
-                    if depth == 0 {
-                        break;
-                    }
-                } else if t.text == ";" && depth == 0 {
-                    break;
-                }
-                i += 1;
-            }
-            regions.push((start, i.min(n.saturating_sub(1))));
-        }
-        i += 1;
-    }
-    regions
-}
-
-fn suffix_match(path: &str, suffix: &str) -> bool {
+pub(crate) fn suffix_match(path: &str, suffix: &str) -> bool {
     let p = path.replace('\\', "/");
     p == suffix || p.ends_with(&format!("/{suffix}"))
 }
 
-/// Lint one source file. `path` is repo-root-relative with `/` separators
-/// (used for the kernel-module and config-module scoping).
-pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
-    let (toks, comments) = lex(src);
-    let regions = test_regions(&toks);
+/// Scan `span` (token indexes, end-exclusive) for allocation, `Instant`,
+/// locking and I/O — the `hot-path-purity` banned set, a strict
+/// superset of v1 `kernel-purity`'s. `skip` spans (test regions) are
+/// exempt. Shared by the kernel-module whole-file scan and the
+/// call-graph reachability pass.
+pub(crate) fn purity_scan(
+    toks: &[Tok],
+    span: (usize, usize),
+    skip: &[(usize, usize)],
+) -> Vec<Violation> {
+    let n = toks.len();
+    let mut out = Vec::new();
+    let text = |j: usize| toks.get(j).map(|t| t.text.as_str()).unwrap_or("");
+    for i in span.0..span.1.min(n) {
+        if skip.iter().any(|&(a, b)| a <= i && i <= b) {
+            continue;
+        }
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let msg = if t.text == "Instant" {
+            Some("`Instant` on a hot path".to_string())
+        } else if HOT_BANNED_MACROS.contains(&t.text.as_str()) && text(i + 1) == "!" {
+            Some(format!("`{}!` allocates/does I/O on a hot path", t.text))
+        } else if HOT_BANNED_CALLS.contains(&t.text.as_str()) && text(i + 1) == "(" {
+            Some(format!("`{}()` allocates/blocks on a hot path", t.text))
+        } else if HOT_BANNED_CTORS.contains(&t.text.as_str())
+            && text(i + 1) == ":"
+            && text(i + 2) == ":"
+            && HOT_CTOR_FNS.contains(&text(i + 3))
+        {
+            Some(format!("`{}::{}` allocates on a hot path", t.text, text(i + 3)))
+        } else {
+            None
+        };
+        if let Some(msg) = msg {
+            out.push(Violation { rule: "hot-path-purity", line: t.line, col: t.col, msg });
+        }
+    }
+    out
+}
+
+/// The per-file token rules, pre-pragma. `path` is repo-root-relative
+/// with `/` separators (used for the kernel/config/serve scoping).
+fn token_rules(
+    path: &str,
+    toks: &[Tok],
+    comments: &[Comment],
+    regions: &[(usize, usize)],
+) -> Vec<Violation> {
     let is_kernel = KERNEL_MODULES.iter().any(|k| suffix_match(path, k));
     let is_config = suffix_match(path, CONFIG_MODULE);
+    let is_serve = path.replace('\\', "/").contains("rust/src/serve/");
     let n = toks.len();
     let mut out: Vec<Violation> = Vec::new();
     let mut push = |rule: &'static str, line: usize, col: usize, msg: String| {
@@ -224,9 +236,7 @@ pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
         // ---- safety-comment
         if t.text == "unsafe" && text(nxt) == "{" {
             let covered = comments.iter().any(|c| {
-                c.text.contains("SAFETY:")
-                    && c.end_line + 3 >= t.line
-                    && c.end_line <= t.line
+                c.text.contains("SAFETY:") && c.end_line + 3 >= t.line && c.end_line <= t.line
             });
             if !covered {
                 push(
@@ -254,45 +264,139 @@ pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
             );
         }
 
-        // ---- kernel-purity
-        if is_kernel {
-            let bad = if t.text == "Instant" {
-                Some("`Instant` in a kernel module".to_string())
-            } else if KERNEL_BANNED_MACROS.contains(&t.text.as_str()) && text(nxt) == "!" {
-                Some(format!("`{}!` allocates in a kernel module", t.text))
-            } else if KERNEL_BANNED_CALLS.contains(&t.text.as_str()) && text(nxt) == "(" {
-                Some(format!("`{}()` allocates in a kernel module", t.text))
-            } else if KERNEL_BANNED_CTORS.contains(&t.text.as_str())
-                && text(nxt) == ":"
-                && text(nxt2) == ":"
-                && KERNEL_CTOR_FNS.contains(&text(toks.get(i + 3)))
+        // ---- blocking-recv (serve/ event loops only)
+        if is_serve {
+            if t.text == "recv" && text(nxt) == "(" && text(nxt2) == ")" {
+                push(
+                    "blocking-recv",
+                    t.line,
+                    t.col,
+                    "bare blocking `recv()` in serve/ — a hung peer hangs this loop; \
+                     use `recv_timeout` or `try_recv`"
+                        .into(),
+                );
+            }
+            // Blocking receiver iteration, by the repo's rx naming
+            // convention: `rx.iter()` / `rx.into_iter()` / `for r in rx`
+            // where the receiver ident is `rx` or `*_rx` (plural `rxs`
+            // is a container of receivers — slice iteration is fine).
+            let rx_like = |s: &str| s == "rx" || s.ends_with("_rx");
+            if rx_like(&t.text)
+                && text(nxt) == "."
+                && matches!(text(nxt2), "iter" | "into_iter")
+                && text(toks.get(i + 3)) == "("
             {
-                Some(format!(
-                    "`{}::{}` allocates in a kernel module",
-                    t.text,
-                    text(toks.get(i + 3))
-                ))
-            } else {
-                None
-            };
-            if let Some(msg) = bad {
-                push("kernel-purity", t.line, t.col, msg);
+                push(
+                    "blocking-recv",
+                    t.line,
+                    t.col,
+                    format!(
+                        "`{}.{}()` blocks until the channel closes — use `try_iter()` \
+                         or a `recv_timeout` loop",
+                        t.text,
+                        text(nxt2)
+                    ),
+                );
+            }
+            if t.text == "in" && text(nxt2) == "{" {
+                if let Some(v) = nxt.filter(|v| rx_like(&v.text)) {
+                    push(
+                        "blocking-recv",
+                        v.line,
+                        v.col,
+                        format!(
+                            "`for … in {}` blocks until the channel closes — use \
+                             `try_iter()` or a `recv_timeout` loop",
+                            v.text
+                        ),
+                    );
+                }
             }
         }
     }
 
-    apply_pragmas(out, &comments)
+    // ---- hot-path-purity floor: kernel modules are scanned wholesale.
+    if is_kernel {
+        out.extend(purity_scan(toks, (0, n), regions));
+    }
+    out
 }
 
-/// Parse `// curlint: allow(rule[, rule]) -- reason` pragmas and drop
-/// suppressed violations; malformed pragmas become violations themselves.
+/// Lint one source file with the token rules. `path` is
+/// repo-root-relative with `/` separators. Cross-file rules need the
+/// whole repo — see [`check_repo`].
+pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
+    let (toks, comments) = lex(src);
+    let regions = test_regions(&toks);
+    apply_pragmas(token_rules(path, &toks, &comments, &regions), &comments)
+}
+
+/// Lint the whole repo: token rules per file plus the cross-file rules
+/// (`hot-path-purity`, `typed-error`, `dead-pub`) over the item/call
+/// graph. `refs_only` holds `(path, source)` files scanned for
+/// `dead-pub` references without being linted (tests, benches,
+/// examples). Returns violations keyed by file path.
+pub fn check_repo(
+    g: &ItemGraph,
+    refs_only: &[(String, String)],
+) -> BTreeMap<String, Vec<Violation>> {
+    let mut per_file: Vec<Vec<Violation>> = g
+        .files
+        .iter()
+        .map(|f| token_rules(&f.path, &f.toks, &f.comments, &f.test_regions))
+        .collect();
+    let cg = CallGraph::build(g);
+    for (fi, v) in cg.hot_path_purity() {
+        per_file[fi].push(v);
+    }
+    for (fi, v) in cg.typed_error() {
+        per_file[fi].push(v);
+    }
+    for (fi, v) in cg.dead_pub(refs_only) {
+        per_file[fi].push(v);
+    }
+    let mut out = BTreeMap::new();
+    for (fi, f) in g.files.iter().enumerate() {
+        let mut vs = apply_pragmas(std::mem::take(&mut per_file[fi]), &f.comments);
+        vs.dedup_by(|a, b| a.rule == b.rule && a.line == b.line && a.col == b.col);
+        if !vs.is_empty() {
+            out.insert(f.path.clone(), vs);
+        }
+    }
+    out
+}
+
+/// Whether pragma rule name `allow` suppresses violations of `rule`
+/// (exact match, plus the retired-v1 `kernel-purity` alias).
+fn pragma_matches(allow: &str, rule: &str) -> bool {
+    allow == rule || (allow == "kernel-purity" && rule == "hot-path-purity")
+}
+
+/// Parse `curlint:` control comments, drop suppressed violations, and
+/// report malformed directives. A pragma must *start* the comment text
+/// (after `//`/`/*` sigils): prose that merely mentions the syntax is
+/// not a directive.
 fn apply_pragmas(found: Vec<Violation>, comments: &[Comment]) -> Vec<Violation> {
     // (rule, first suppressed line, last suppressed line)
     let mut allows: Vec<(String, usize, usize)> = Vec::new();
     let mut out: Vec<Violation> = Vec::new();
     for c in comments {
-        let Some(k) = c.text.find("curlint: allow(") else { continue };
-        let rest = &c.text[k + "curlint: allow(".len()..];
+        let Some(directive) = control_text(c).strip_prefix("curlint:") else { continue };
+        let directive = directive.trim_start();
+        if directive.starts_with("hot-entry") {
+            continue; // consumed by the item graph
+        }
+        let Some(rest) = directive.strip_prefix("allow(") else {
+            out.push(Violation {
+                rule: "pragma",
+                line: c.line,
+                col: 1,
+                msg: "unknown curlint directive (expected `allow(…) -- reason` or \
+                      `hot-entry`)"
+                    .into(),
+            });
+            continue;
+        };
         let Some(close) = rest.find(')') else {
             out.push(Violation {
                 rule: "pragma",
@@ -314,8 +418,7 @@ fn apply_pragmas(found: Vec<Violation>, comments: &[Comment]) -> Vec<Violation> 
                 rule: "pragma",
                 line: c.line,
                 col: 1,
-                msg: "malformed curlint pragma (need a known rule and `-- <reason>`)"
-                    .into(),
+                msg: "malformed curlint pragma (need a known rule and `-- <reason>`)".into(),
             });
             continue;
         }
@@ -326,11 +429,96 @@ fn apply_pragmas(found: Vec<Violation>, comments: &[Comment]) -> Vec<Violation> 
     for v in found {
         let suppressed = allows
             .iter()
-            .any(|(r, lo, hi)| r == v.rule && *lo <= v.line && v.line <= *hi);
+            .any(|(r, lo, hi)| pragma_matches(r, v.rule) && *lo <= v.line && v.line <= *hi);
         if !suppressed {
             out.push(v);
         }
     }
     out.sort_by(|a, b| (a.line, a.col).cmp(&(b.line, b.col)));
     out
+}
+
+/// The incident + invariant text behind a rule, for `--explain`.
+pub fn explain(rule: &str) -> Option<&'static str> {
+    let text = match rule {
+        "panic" => {
+            "panic — no unwrap()/expect(\"…\")/panic!/todo!/unimplemented! in library code.\n\
+             Incident: the seed crate panicked on malformed artifacts and empty calib sets;\n\
+             PR 1 swept every panic into Result and this rule keeps it swept. Test code is\n\
+             exempt; panic boundaries (panic_any/catch_unwind at the fault injector and the\n\
+             cluster supervisor) each carry a reasoned pragma naming the boundary.\n\
+             Invariant: a malformed input or a poisoned invariant surfaces as Err, never as\n\
+             a worker-killing unwind outside the supervisor's catch."
+        }
+        "float-sort" => {
+            "float-sort — sort_by/sort_unstable_by/max_by/min_by must order through\n\
+             total_cmp, Ord::cmp, or the util::stats::nan_last_* keys; partial_cmp in a\n\
+             comparator always fires.\n\
+             Incident: the wanda importance sort hit a NaN under an all-zero calibration\n\
+             batch and panicked deep in leverage scoring.\n\
+             Invariant: float orderings are total, NaNs land deterministically last."
+        }
+        "safety-comment" => {
+            "safety-comment — every unsafe block needs a `// SAFETY:` comment ending\n\
+             within 3 lines above it.\n\
+             Incident: the pod_bytes byte-cast in backend/pjrt.rs is the repo's only\n\
+             unsafe surface; its aliasing/alignment argument must travel with the code.\n\
+             Invariant: unsafe never outlives the argument for why it is sound."
+        }
+        "env-var" => {
+            "env-var — env::var only inside util::config.\n\
+             Incident: CURING_* escape hatches had started sprouting at call sites, each\n\
+             with its own default and parsing; one bench read a stale name.\n\
+             Invariant: every env knob is declared, parsed and documented in one module."
+        }
+        "kernel-purity" | "hot-path-purity" => {
+            "hot-path-purity (v1 name: kernel-purity, still valid in pragmas) — every fn\n\
+             transitively callable from a `// curlint: hot-entry` fn (layer_decode_batch,\n\
+             layer_prefill, layer_forward_infer, the matmul_* family), plus everything in\n\
+             backend/native/math.rs (the retired v1 allowlist, kept as the always-checked\n\
+             floor), must be free of allocation (vec!/format!/to_vec/collect/to_string/\n\
+             Vec::new/String::from/Box::new), Instant, lock(), and print I/O.\n\
+             Incident: a per-token Vec allocation snuck into a fn *called from* the decode\n\
+             loop — the v1 module allowlist was blind to it; tokens/s dropped double-digit\n\
+             percent before the bench caught it.\n\
+             Invariant: the decode/prefill hot paths run allocation-free at steady state;\n\
+             deliberate setup allocations carry a per-site pragma with a reason."
+        }
+        "typed-error" => {
+            "typed-error — pub fns in serve/ and backend/ that return Result must not\n\
+             construct bare anyhow!(\"…\")/bail!(\"…\") errors; wrap a typed payload\n\
+             (ServeError, BackendError, InjectedFault, StoreCorruption) so callers can\n\
+             downcast. bail!(ServeError::Overloaded) passes; bail!(\"overloaded\") fails.\n\
+             Incident: the cluster router once matched on error *strings* to tell\n\
+             retryable Overloaded from fatal Failed; a reworded message broke retry.\n\
+             Invariant: API-boundary errors are downcastable types, not prose."
+        }
+        "blocking-recv" => {
+            "blocking-recv — in serve/, no bare blocking recv() and no blocking receiver\n\
+             iteration (rx.iter(), for r in rx); use recv_timeout/try_recv/try_iter.\n\
+             Incident: the hung-worker bug class the supervisor's heartbeat machinery\n\
+             exists to catch at runtime — a worker that stops responding must never also\n\
+             hang the loop that is supposed to detect it.\n\
+             Invariant: every serve/ event loop bounds its waits and keeps polling health."
+        }
+        "dead-pub" => {
+            "dead-pub — plain-`pub` non-method items never referenced outside their\n\
+             defining file (crate sources, tests, benches and examples all count as\n\
+             references) are flagged to ratchet visibility down.\n\
+             Incident: the serve/ rework left behind pub types whose only callers had\n\
+             been deleted; the stale surface kept compiling and kept misleading readers.\n\
+             Invariant: `pub` tracks the real API surface. Name-collision matching means\n\
+             the rule under-reports, never over-reports; justified keeps take a pragma."
+        }
+        "pragma" => {
+            "pragma — a `curlint:` comment must be a well-formed directive:\n\
+             `curlint: allow(<rule>[, <rule>]) -- <reason>` (suppresses matching\n\
+             violations on its own and the next line) or `curlint: hot-entry` (marks the\n\
+             next fn as a hot-path root). Unknown rules, missing reasons, or unrecognized\n\
+             directives are violations themselves, so a typo'd suppression cannot\n\
+             silently do nothing."
+        }
+        _ => return None,
+    };
+    Some(text)
 }

@@ -1,0 +1,172 @@
+//! SARIF 2.1.0 output for `cargo xtask lint --emit sarif`, consumed by
+//! GitHub code-scanning upload. Dependency-free like the rest of the
+//! crate: the document is built by hand and then re-parsed with
+//! [`crate::json`] before being returned, so a malformed emit fails the
+//! lint run instead of failing silently at upload time.
+
+use crate::rules::{explain, RULE_NAMES};
+
+/// One result row: a violation with its ratchet status.
+pub struct Row {
+    pub rule: String,
+    pub path: String,
+    pub line: usize,
+    pub col: usize,
+    pub msg: String,
+    /// Grandfathered (at/under baseline) rows become `warning`; new
+    /// violations become `error`.
+    pub new: bool,
+}
+
+/// Render the SARIF document, or an error if the emitted text does not
+/// re-parse as JSON (an emitter bug, never a caller error).
+pub fn emit(rows: &[Row]) -> Result<String, String> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"$schema\": \"https://json.schemastore.org/sarif-2.1.0.json\",\n");
+    s.push_str("  \"version\": \"2.1.0\",\n");
+    s.push_str("  \"runs\": [\n    {\n");
+    s.push_str("      \"tool\": {\n        \"driver\": {\n");
+    s.push_str("          \"name\": \"curlint\",\n");
+    s.push_str("          \"rules\": [\n");
+    let rules: Vec<&str> = RULE_NAMES.iter().copied().filter(|r| *r != "kernel-purity").collect();
+    for (i, rule) in rules.iter().enumerate() {
+        let help = explain(rule).unwrap_or("");
+        let short = help.lines().next().unwrap_or(rule);
+        s.push_str("            {\n");
+        s.push_str(&format!("              \"id\": {},\n", quote(rule)));
+        s.push_str(&format!(
+            "              \"shortDescription\": {{ \"text\": {} }},\n",
+            quote(short)
+        ));
+        s.push_str(&format!(
+            "              \"fullDescription\": {{ \"text\": {} }}\n",
+            quote(help)
+        ));
+        s.push_str(if i + 1 == rules.len() { "            }\n" } else { "            },\n" });
+    }
+    s.push_str("          ]\n        }\n      },\n");
+    s.push_str("      \"results\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        s.push_str("        {\n");
+        s.push_str(&format!("          \"ruleId\": {},\n", quote(&row.rule)));
+        let idx = rules.iter().position(|r| *r == row.rule);
+        if let Some(idx) = idx {
+            s.push_str(&format!("          \"ruleIndex\": {idx},\n"));
+        }
+        s.push_str(&format!(
+            "          \"level\": {},\n",
+            quote(if row.new { "error" } else { "warning" })
+        ));
+        s.push_str(&format!("          \"message\": {{ \"text\": {} }},\n", quote(&row.msg)));
+        s.push_str("          \"locations\": [\n            {\n");
+        s.push_str("              \"physicalLocation\": {\n");
+        s.push_str(&format!(
+            "                \"artifactLocation\": {{ \"uri\": {} }},\n",
+            quote(&row.path)
+        ));
+        s.push_str(&format!(
+            "                \"region\": {{ \"startLine\": {}, \"startColumn\": {} }}\n",
+            row.line.max(1),
+            row.col.max(1)
+        ));
+        s.push_str("              }\n            }\n          ]\n");
+        s.push_str(if i + 1 == rows.len() { "        }\n" } else { "        },\n" });
+    }
+    s.push_str("      ]\n    }\n  ]\n}\n");
+    crate::json::parse(&s).map_err(|e| format!("sarif emitter produced invalid JSON: {e}"))?;
+    Ok(s)
+}
+
+/// JSON string literal with escaping.
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{parse, Value};
+
+    fn rows() -> Vec<Row> {
+        vec![
+            Row {
+                rule: "panic".into(),
+                path: "rust/src/serve/mod.rs".into(),
+                line: 12,
+                col: 7,
+                msg: "`unwrap()` can panic".into(),
+                new: true,
+            },
+            Row {
+                rule: "dead-pub".into(),
+                path: "rust/src/util/record.rs".into(),
+                line: 3,
+                col: 1,
+                msg: "pub fn `old_api` is never referenced — \"quote\" test".into(),
+                new: false,
+            },
+        ]
+    }
+
+    #[test]
+    fn emits_valid_sarif_with_levels_and_positions() {
+        let text = emit(&rows()).unwrap();
+        let doc = parse(&text).unwrap();
+        assert_eq!(doc.get("version").and_then(Value::as_str), Some("2.1.0"));
+        let runs = doc.get("runs").and_then(Value::as_arr).unwrap();
+        let results = runs[0].get("results").and_then(Value::as_arr).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("level").and_then(Value::as_str), Some("error"));
+        assert_eq!(results[1].get("level").and_then(Value::as_str), Some("warning"));
+        let loc = results[0].get("locations").and_then(Value::as_arr).unwrap()[0]
+            .get("physicalLocation")
+            .unwrap();
+        assert_eq!(
+            loc.get("artifactLocation").and_then(|a| a.get("uri")).and_then(Value::as_str),
+            Some("rust/src/serve/mod.rs")
+        );
+        assert_eq!(
+            loc.get("region").and_then(|r| r.get("startLine")).and_then(Value::as_f64),
+            Some(12.0)
+        );
+    }
+
+    #[test]
+    fn every_active_rule_has_driver_metadata() {
+        let text = emit(&[]).unwrap();
+        let doc = parse(&text).unwrap();
+        let runs = doc.get("runs").and_then(Value::as_arr).unwrap();
+        let rules = runs[0]
+            .get("tool")
+            .and_then(|t| t.get("driver"))
+            .and_then(|d| d.get("rules"))
+            .and_then(Value::as_arr)
+            .unwrap();
+        // kernel-purity is a pragma alias, not an active rule.
+        assert_eq!(rules.len(), RULE_NAMES.len() - 1);
+        for r in rules {
+            assert!(r.get("id").and_then(Value::as_str).is_some());
+            let full = r
+                .get("fullDescription")
+                .and_then(|f| f.get("text"))
+                .and_then(Value::as_str)
+                .unwrap();
+            assert!(full.contains("Invariant") || full.contains("directive"), "{full}");
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! Cross-file tests for curlint v2: call-graph reachability
+//! (hot-path-purity), typed-error boundaries, dead-pub liveness, and
+//! how the v1 baseline ratchet interacts with v2 rule names. Each
+//! fixture is a tiny multi-file crate fed through [`ItemGraph::build`].
+
+use xtask::baseline::{self, Counts, Verdict};
+use xtask::callgraph::CallGraph;
+use xtask::itemgraph::{ItemGraph, Vis};
+use xtask::rules::check_repo;
+
+fn graph(files: &[(&str, &str)]) -> ItemGraph {
+    let owned: Vec<(String, String)> =
+        files.iter().map(|&(p, s)| (p.to_string(), s.to_string())).collect();
+    ItemGraph::build(&owned)
+}
+
+fn rules_in(
+    g: &ItemGraph,
+    path: &str,
+) -> Vec<(String, usize)> {
+    check_repo(g, &[])
+        .remove(path)
+        .unwrap_or_default()
+        .into_iter()
+        .map(|v| (v.rule.to_string(), v.line))
+        .collect()
+}
+
+// ------------------------------------------------- hot-path reachability
+
+#[test]
+fn diamond_reachability_reaches_the_join() {
+    // entry → {left, right} → join: the join must be hot exactly once,
+    // through whichever parent the BFS saw first.
+    let g = graph(&[(
+        "rust/src/serve/mod.rs",
+        "// curlint: hot-entry\n\
+         fn entry() { left(); right(); }\n\
+         fn left() { join(); }\n\
+         fn right() { join(); }\n\
+         fn join(n: usize) { let v = vec![0u8; n]; drop(v); }\n",
+    )]);
+    let cg = CallGraph::build(&g);
+    let hot = cg.hot_fn_names();
+    for f in ["entry", "left", "right", "join"] {
+        assert!(hot.contains(f), "{f} should be hot: {hot:?}");
+    }
+    let got = rules_in(&g, "rust/src/serve/mod.rs");
+    assert_eq!(got.len(), 1, "one report for the one vec!: {got:?}");
+    assert_eq!(got[0], ("hot-path-purity".to_string(), 5));
+}
+
+#[test]
+fn purity_violation_names_the_call_chain() {
+    let g = graph(&[
+        (
+            "rust/src/serve/mod.rs",
+            "// curlint: hot-entry\n\
+             fn decode() { crate::pipeline::helper(); }\n",
+        ),
+        (
+            "rust/src/pipeline/mod.rs",
+            "pub fn helper() { let s = x.to_vec(); drop(s); }\n",
+        ),
+    ]);
+    let per_file = check_repo(&g, &[]);
+    let vs = &per_file["rust/src/pipeline/mod.rs"];
+    assert_eq!(vs.len(), 1, "{vs:?}");
+    assert_eq!(vs[0].rule, "hot-path-purity");
+    assert!(
+        vs[0].msg.contains("decode → helper"),
+        "chain in message: {}",
+        vs[0].msg
+    );
+}
+
+#[test]
+fn method_name_collision_is_conservatively_hot() {
+    // `.step()` resolves receiver-agnostically: both impls go hot, so
+    // the allocation in the *other* type's step still fires.
+    let g = graph(&[
+        (
+            "rust/src/serve/mod.rs",
+            "// curlint: hot-entry\n\
+             fn tick(w: &Worker) { w.step(); }\n\
+             struct Worker;\n\
+             impl Worker { fn step(&self) {} }\n",
+        ),
+        (
+            "rust/src/backend/other.rs",
+            "struct Sim;\n\
+             impl Sim { fn step(&self) { let v: Vec<u8> = Vec::new(); drop(v); } }\n",
+        ),
+    ]);
+    let got = rules_in(&g, "rust/src/backend/other.rs");
+    assert_eq!(got, vec![("hot-path-purity".to_string(), 2)], "{got:?}");
+}
+
+#[test]
+fn use_alias_calls_resolve_to_the_target() {
+    let g = graph(&[
+        (
+            "rust/src/serve/mod.rs",
+            "use crate::util::scratch::grow as ensure_cap;\n\
+             // curlint: hot-entry\n\
+             fn admit() { ensure_cap(); }\n",
+        ),
+        (
+            "rust/src/util/scratch.rs",
+            "pub fn grow() { let v = vec![0u8; 4]; drop(v); }\n",
+        ),
+    ]);
+    let cg = CallGraph::build(&g);
+    assert!(cg.hot_fn_names().contains("grow"), "{:?}", cg.hot_fn_names());
+    let got = rules_in(&g, "rust/src/util/scratch.rs");
+    assert_eq!(got, vec![("hot-path-purity".to_string(), 1)]);
+}
+
+#[test]
+fn test_fns_never_enter_the_hot_set() {
+    let g = graph(&[(
+        "rust/src/serve/mod.rs",
+        "// curlint: hot-entry\n\
+         fn entry() {}\n\
+         #[cfg(test)]\n\
+         mod tests {\n\
+             fn scratch() { let v = vec![0u8; 4]; drop(v); super::entry(); }\n\
+         }\n",
+    )]);
+    assert!(rules_in(&g, "rust/src/serve/mod.rs").is_empty());
+}
+
+#[test]
+fn kernel_module_fns_are_hot_without_annotation() {
+    // The v1 kernel-purity floor: everything in a kernel module is an
+    // entry, and callees in *other* files inherit hotness.
+    let g = graph(&[
+        (
+            "rust/src/backend/native/math.rs",
+            "pub fn matmul() { crate::util::scratch::grow(); }\n",
+        ),
+        (
+            "rust/src/util/scratch.rs",
+            "pub fn grow() { let v = vec![0u8; 4]; drop(v); }\n",
+        ),
+    ]);
+    let got = rules_in(&g, "rust/src/util/scratch.rs");
+    assert_eq!(got, vec![("hot-path-purity".to_string(), 1)]);
+}
+
+// ---------------------------------------------------------- typed-error
+
+/// A second file naming the fixture's pub items, so `dead-pub` stays
+/// out of a test that is about a different rule.
+const USERS: (&str, &str) = (
+    "rust/src/lib.rs",
+    "fn users() { let _ = (admit, parse, parse2, score); }\n",
+);
+
+#[test]
+fn bare_anyhow_in_pub_result_fn_fires() {
+    let g = graph(&[
+        (
+            "rust/src/serve/mod.rs",
+            "pub fn admit() -> Result<()> {\n\
+                 Err(anyhow!(\"no free slot\"))\n\
+             }\n",
+        ),
+        USERS,
+    ]);
+    let got = rules_in(&g, "rust/src/serve/mod.rs");
+    assert_eq!(got, vec![("typed-error".to_string(), 2)]);
+}
+
+#[test]
+fn format_bail_fires_and_typed_payload_passes() {
+    let g = graph(&[
+        (
+            "rust/src/backend/mod.rs",
+            "pub fn parse(s: &str) -> Result<Plan> {\n\
+                 bail!(format!(\"bad spec {s}\"));\n\
+             }\n\
+             pub fn parse2(s: &str) -> Result<Plan> {\n\
+                 bail!(SpecError { what: s.into() });\n\
+             }\n",
+        ),
+        USERS,
+    ]);
+    let got = rules_in(&g, "rust/src/backend/mod.rs");
+    assert_eq!(got, vec![("typed-error".to_string(), 2)], "{got:?}");
+}
+
+#[test]
+fn private_fns_and_other_modules_are_not_boundaries() {
+    let g = graph(&[
+        (
+            "rust/src/serve/mod.rs",
+            "fn internal() -> Result<()> { bail!(\"scratch\") }\n",
+        ),
+        (
+            "rust/src/eval/mod.rs",
+            "pub fn score() -> Result<f64> { bail!(\"eval tool, not a boundary\") }\n",
+        ),
+        USERS,
+    ]);
+    assert!(rules_in(&g, "rust/src/serve/mod.rs").is_empty());
+    assert!(rules_in(&g, "rust/src/eval/mod.rs").is_empty());
+}
+
+// ------------------------------------------------------------- dead-pub
+
+#[test]
+fn unreferenced_pub_item_fires() {
+    let g = graph(&[
+        ("rust/src/util/stats.rs", "pub fn orphan() -> u32 { 1 }\n"),
+        ("rust/src/serve/mod.rs", "fn unrelated() {}\n"),
+    ]);
+    let got = rules_in(&g, "rust/src/util/stats.rs");
+    assert_eq!(got, vec![("dead-pub".to_string(), 1)]);
+}
+
+#[test]
+fn cross_file_and_reference_only_uses_count_as_live() {
+    let g = graph(&[
+        ("rust/src/util/stats.rs", "pub fn mean() -> f64 { 0.0 }\npub fn gib() -> f64 { 0.0 }\n"),
+        ("rust/src/serve/mod.rs", "fn report() { let _ = crate::util::stats::mean(); }\n"),
+    ]);
+    // `mean` is used by serve; `gib` only by the bench harness, which is
+    // scanned for references without being linted.
+    let refs = vec![(
+        "rust/benches/harness/main.rs".to_string(),
+        "fn main() { let _ = curing::util::stats::gib(); }".to_string(),
+    )];
+    let vs = check_repo(&g, &refs);
+    assert!(vs.get("rust/src/util/stats.rs").is_none(), "{vs:?}");
+}
+
+#[test]
+fn restricted_test_and_associated_items_are_exempt() {
+    let g = graph(&[
+        (
+            "rust/src/util/stats.rs",
+            "pub(crate) fn internal() {}\n\
+             #[cfg(test)]\n\
+             pub fn test_helper() {}\n\
+             pub struct Accum;\n\
+             impl Accum { pub fn push(&mut self) {} pub const SEED: u64 = 7; }\n",
+        ),
+        // Accum itself is named elsewhere; its associated items are only
+        // ever reached through it and must not need their own refs.
+        ("rust/src/serve/mod.rs", "fn f(a: &mut crate::util::stats::Accum) { a.push(); }\n"),
+    ]);
+    assert!(check_repo(&g, &[]).get("rust/src/util/stats.rs").is_none());
+}
+
+#[test]
+fn pub_field_does_not_leak_visibility_to_next_item() {
+    // Regression: a trailing `pub` struct field used to leave pending
+    // visibility set, turning the *next* private item pub (and thus a
+    // dead-pub candidate).
+    let g = graph(&[(
+        "rust/src/serve/mod.rs",
+        "pub struct Stats {\n\
+             pub ok: usize,\n\
+             pub failed: usize,\n\
+         }\n\
+         fn tally() {}\n\
+         struct Slot;\n",
+    )]);
+    let find = |name: &str| {
+        g.items
+            .iter()
+            .find(|it| it.name == name)
+            .unwrap_or_else(|| panic!("{name} not parsed"))
+    };
+    assert_eq!(find("Stats").vis, Vis::Pub);
+    assert_eq!(find("tally").vis, Vis::Private);
+    assert_eq!(find("Slot").vis, Vis::Private);
+}
+
+// --------------------------------------------- baseline × v2 rule names
+
+#[test]
+fn v1_baseline_files_keep_ratcheting_under_v2() {
+    // A checked-in baseline predating v2 may still hold retired
+    // `kernel-purity` buckets: they parse, never match a v2 count, and
+    // surface as stale (shrank-to-zero) rather than as errors.
+    let text = "# header\n\
+                3 kernel-purity rust/src/backend/native/math.rs\n\
+                2 dead-pub rust/src/util/stats.rs\n";
+    let base = baseline::parse(text).expect("v1 rule names stay parseable");
+    let mut actual = Counts::new();
+    actual.insert(
+        ("rust/src/util/stats.rs".to_string(), "dead-pub".to_string()),
+        2,
+    );
+    let verdicts = baseline::compare(&base, &actual);
+    assert!(
+        verdicts.iter().all(|(_, v)| !matches!(v, Verdict::Grew { .. })),
+        "{verdicts:?}"
+    );
+    assert!(verdicts.iter().any(|((p, r), v)| {
+        p == "rust/src/backend/native/math.rs"
+            && r == "kernel-purity"
+            && matches!(v, Verdict::Shrank { allowed: 3, actual: 0 })
+    }));
+}
